@@ -1,0 +1,52 @@
+//! Sensitivity study: exhaustive Smith-Waterman vs the BLAST heuristic —
+//! the paper's *motivation* ("the maximal sensitivity of the SW
+//! algorithm..."). We plant homologs of a query motif into database
+//! sequences at increasing mutation rates and measure recall of both
+//! methods at a fixed score threshold, plus the heuristic's work savings.
+//!
+//! Run: `cargo run --release --example blast_vs_sw`
+
+use swaphi::align::scalar::sw_score;
+use swaphi::blast::{blast_search, BlastParams};
+use swaphi::db::synth::{plant_homolog, random_codes};
+use swaphi::matrices::Scoring;
+use swaphi::util::rng::Rng;
+
+fn main() {
+    let sc = Scoring::blast_default();
+    let mut rng = Rng::new(20140707);
+    let motif = random_codes(&mut rng, 60);
+    let threshold = 60i32; // report threshold (raw score)
+    let per_rate = 120; // planted subjects per mutation rate
+
+    println!("query motif: 60 residues | {per_rate} planted homologs per mutation rate");
+    println!("{:<10} {:>9} {:>10} {:>12} {:>14}", "mut_rate", "SW_recall", "BLAST_recall", "BLAST_misses", "cells_visited%");
+    for pct in [10u32, 25, 40, 50, 60, 70] {
+        let rate = pct as f64 / 100.0;
+        let mut subjects = Vec::with_capacity(per_rate);
+        for _ in 0..per_rate {
+            let mut host = random_codes(&mut rng, 300);
+            plant_homolog(&mut rng, &mut host, &motif, rate);
+            subjects.push(host);
+        }
+        let sw_hits =
+            subjects.iter().filter(|s| sw_score(&motif, s, &sc) >= threshold).count();
+        let (scores, stats) =
+            blast_search(&motif, &subjects, &sc, BlastParams::blastp_defaults());
+        let blast_hits = scores.iter().filter(|&&s| s >= threshold).count();
+        let total_cells: u64 =
+            subjects.iter().map(|s| (s.len() * motif.len()) as u64).sum();
+        println!(
+            "{:<10} {:>9} {:>10} {:>12} {:>13.2}%",
+            format!("{pct}%"),
+            format!("{sw_hits}/{per_rate}"),
+            format!("{blast_hits}/{per_rate}"),
+            sw_hits.saturating_sub(blast_hits),
+            100.0 * stats.cells_visited as f64 / total_cells as f64,
+        );
+        assert!(blast_hits <= sw_hits, "heuristic can never out-recall exhaustive SW");
+    }
+    println!("\nSW recall ≥ BLAST recall at every identity level — the sensitivity");
+    println!("gap that motivates accelerating exhaustive SW (paper §I), while the");
+    println!("heuristic touches a tiny fraction of the DP matrix (its speed story).");
+}

@@ -1,0 +1,128 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts for the Rust runtime.
+
+Python runs ONLY here (build time). The interchange format is **HLO
+text**, not serialized HloModuleProto: jax >= 0.5 emits protos with
+64-bit instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Each bucket of model.VARIANTS x model.default_buckets() becomes
+artifacts/<name>.hlo.txt, and artifacts/manifest.json records the shapes
+and the argument order so the Rust runtime can marshal literals without
+guessing. Lowering uses return_tuple=True; the Rust side unwraps with
+to_tuple1().
+
+Usage: (cd python && python -m compile.aot --out ../artifacts)
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.common import ROW
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-compatible path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bucket(bucket: model.Bucket) -> str:
+    fn = model.VARIANTS[bucket.variant]
+    qprof = jax.ShapeDtypeStruct((bucket.qpad, ROW), jnp.int32)
+    subjects = jax.ShapeDtypeStruct((bucket.ns, bucket.lpad), jnp.int32)
+    gaps = jax.ShapeDtypeStruct((2,), jnp.int32)
+    lowered = jax.jit(fn).lower(qprof, subjects, gaps)
+    return to_hlo_text(lowered)
+
+
+def source_fingerprint() -> str:
+    """Hash of the compile-path sources, so `make artifacts` can skip
+    regeneration when nothing changed."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for root, _, files in sorted(os.walk(here)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated bucket-name filter (substring match)"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    fingerprint = source_fingerprint()
+    manifest_path = os.path.join(args.out, "manifest.json")
+    if os.path.exists(manifest_path) and args.only is None:
+        try:
+            with open(manifest_path) as fh:
+                old = json.load(fh)
+            if old.get("fingerprint") == fingerprint and all(
+                os.path.exists(os.path.join(args.out, e["file"]))
+                for e in old.get("artifacts", [])
+            ):
+                print(f"artifacts up to date ({len(old['artifacts'])} entries), skipping")
+                return
+        except (json.JSONDecodeError, KeyError):
+            pass  # regenerate
+
+    buckets = model.default_buckets()
+    if args.only:
+        keys = args.only.split(",")
+        buckets = [b for b in buckets if any(k in b.name for k in keys)]
+
+    entries = []
+    for bucket in buckets:
+        text = lower_bucket(bucket)
+        fname = f"{bucket.name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as fh:
+            fh.write(text)
+        entries.append(
+            {
+                "name": bucket.name,
+                "file": fname,
+                "variant": bucket.variant,
+                "qpad": bucket.qpad,
+                "lpad": bucket.lpad,
+                "ns": bucket.ns,
+                "args": [
+                    {"name": "qprof", "shape": [bucket.qpad, ROW], "dtype": "i32"},
+                    {"name": "subjects", "shape": [bucket.ns, bucket.lpad], "dtype": "i32"},
+                    {"name": "gaps", "shape": [2], "dtype": "i32"},
+                ],
+                "returns": [{"name": "scores", "shape": [bucket.ns], "dtype": "i32"}],
+            }
+        )
+        print(f"lowered {bucket.name}: {len(text)} chars", file=sys.stderr)
+
+    with open(manifest_path, "w") as fh:
+        json.dump(
+            {"format": "hlo-text", "fingerprint": fingerprint, "artifacts": entries},
+            fh,
+            indent=2,
+        )
+    print(f"wrote {len(entries)} artifacts + manifest to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

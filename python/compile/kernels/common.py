@@ -1,0 +1,55 @@
+"""Shared constants and helpers for the SWAPHI Pallas kernels.
+
+These mirror the Rust side byte-for-byte (rust/src/alphabet.rs,
+rust/src/matrices.rs):
+
+* residue codes 0..23 in NCBI order, DUMMY = 24 pads everything and
+  scores zero against every residue, so padded DP regions can never raise
+  the optimal local score (DESIGN.md §4 "Padding design" — no masking of
+  *lengths* is needed anywhere, only wavefront-validity masking);
+* scoring matrices are padded to 32x32; the kernels take a *query
+  profile* qprof[i, r] = matrix[query[i], r] of shape [Qpad, 32];
+* gap parameters arrive as gaps = [alpha, beta] (extend, open+extend),
+  the paper's Eq. 1 convention.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: number of real residue codes (A..V, B, Z, X, *)
+ALPHA = 24
+
+#: dummy/padding residue code — substitution score 0 vs everything
+DUMMY = 24
+
+#: padded row stride of scoring matrices / query profiles
+ROW = 32
+
+#: "-inf" that survives a few subtractions without wrapping i32
+NEG = -(2 ** 29)
+
+
+def shift1(x: jnp.ndarray, fill) -> jnp.ndarray:
+    """Shift a [B, Q] array one step along axis 1 (query axis): out[:, i] =
+    x[:, i-1], out[:, 0] = fill. The wavefront's access to query index
+    i-1 on the previous diagonals."""
+    b = x.shape[0]
+    pad = jnp.full((b, 1), fill, dtype=x.dtype)
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def shift_lanes(v: jnp.ndarray, fill) -> jnp.ndarray:
+    """Shift a [V] lane vector one lane up: out[l] = v[l-1], out[0] =
+    fill. The striped kernel's cross-stripe carry (the paper's
+    _mm512_mask_permutevar_epi32 shift)."""
+    pad = jnp.full((1,), fill, dtype=v.dtype)
+    return jnp.concatenate([pad, v[:-1]], axis=0)
+
+
+def build_query_profile(query_codes, matrix) -> jnp.ndarray:
+    """qprof[i, r] = matrix[query[i], r]; query padded with DUMMY rows is
+    fine because matrix[DUMMY, :] == 0."""
+    query_codes = jnp.asarray(query_codes, dtype=jnp.int32)
+    matrix = jnp.asarray(matrix, dtype=jnp.int32).reshape(ROW, ROW)
+    return matrix[query_codes]

@@ -1,0 +1,146 @@
+"""Inter-sequence Smith-Waterman Pallas kernel — anti-diagonal wavefront.
+
+This is the TPU re-think of the paper's inter-sequence 512-bit SIMD model
+(DESIGN.md §4). On Xeon Phi, 16 lanes hold 16 subject sequences and a
+scalar loop walks the DP cells; on TPU-class hardware scalar loops are
+poison, so we exploit the affine-gap dependency structure instead: every
+cell on anti-diagonal d depends only on diagonals d-1 and d-2, hence a
+whole [B, Qpad] tile of lanes x query-positions advances per step as pure
+vector ops in VMEM:
+
+    E_d[i] = max(E_{d-1}[i-1] - alpha, H_{d-1}[i-1] - beta)
+    F_d[i] = max(F_{d-1}[i]   - alpha, H_{d-1}[i]   - beta)
+    H_d[i] = max(0, H_{d-2}[i-1] + sub(i, d-i), E_d[i], F_d[i])
+
+The subject residue needed at (i, d-i) is made a *contiguous* dynamic
+slice by the reversed-subject trick: with rs[b,k] = subj[b, Lpad-1-k]
+(padded by DUMMY on both flanks), the diagonal-d window is
+rs[b, Lpad-1-d+i] for i = 0..Qpad-1.
+
+Two substitution-lookup variants mirror the paper's InterQP/InterSP:
+
+* ``gather``  (~InterQP): sub[b,i] = qprof[i, res[b,i]] via a vectorized
+  gather — the `_mm512_permutevar` path of the paper's Fig 3;
+* ``onehot``  (~InterSP): sub = einsum(onehot(res), qprof) — replaces the
+  gather with MXU-shaped compute, the TPU analog of restructuring scores
+  into a score profile (paper Fig 4) so the inner loop is gather-free.
+
+Grid: one program per block of BLOCK_B subjects; the subjects tile is the
+only HBM->VMEM streamed operand (BlockSpec over axis 0), the query profile
+is broadcast to every block. VMEM footprint per block =
+5 x B x Qpad x 4 bytes of carry + the rs tile — sized to stay under 4 MiB
+for every shipped bucket (DESIGN.md §8).
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO that both pytest and the
+Rust runtime execute (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import DUMMY, NEG, ROW, shift1
+
+#: subjects per pallas program instance (VMEM tile of the batch dim)
+BLOCK_B = 16
+
+
+def _wavefront_body(d, carry, *, rsp, qprof, alpha, beta, qpad, lpad, onehot):
+    h1, h2, e1, f1, best = carry
+    b = h1.shape[0]
+    # residues on diagonal d: res[b, i] = subj[b, d - i]
+    start = lpad - 1 - d + (qpad - 1)
+    res = jax.lax.dynamic_slice(rsp, (0, start), (b, qpad))
+    if onehot:
+        # InterSP analog: one-hot x profile contraction (MXU-eligible)
+        oh = jax.nn.one_hot(res, ROW, dtype=jnp.int32)  # [B, Qpad, ROW]
+        sub = jnp.einsum("bir,ir->bi", oh, qprof)
+    else:
+        # InterQP analog: per-cell gather from the query profile
+        qb = jnp.broadcast_to(qprof[None, :, :], (b, qpad, ROW))
+        sub = jnp.take_along_axis(qb, res[:, :, None], axis=2)[:, :, 0]
+
+    h1s = shift1(h1, 0)
+    h2s = shift1(h2, 0)
+    e1s = shift1(e1, NEG)
+    e = jnp.maximum(e1s - alpha, h1s - beta)
+    f = jnp.maximum(f1 - alpha, h1 - beta)
+    h = jnp.maximum(jnp.maximum(0, h2s + sub), jnp.maximum(e, f))
+
+    # wavefront validity: cell (i, d-i) exists iff 0 <= d-i < Lpad
+    i_idx = jnp.arange(qpad, dtype=jnp.int32)[None, :]
+    valid = (i_idx <= d) & (i_idx > d - lpad)
+    h = jnp.where(valid, h, 0)
+    e = jnp.where(valid, e, NEG)
+    f = jnp.where(valid, f, NEG)
+
+    best = jnp.maximum(best, jnp.max(h, axis=1))
+    return (h, h1, e, f, best)
+
+
+def _inter_kernel(qprof_ref, subj_ref, gaps_ref, out_ref, *, qpad, lpad, onehot):
+    qprof = qprof_ref[...]
+    subj = subj_ref[...]
+    alpha = gaps_ref[0]
+    beta = gaps_ref[1]
+    b = subj.shape[0]
+
+    # reversed subjects, DUMMY-padded on both flanks so every diagonal
+    # window is an in-bounds contiguous slice
+    rs = jnp.flip(subj, axis=1)
+    rsp = jnp.pad(rs, ((0, 0), (qpad - 1, qpad)), constant_values=DUMMY)
+
+    zeros = jnp.zeros((b, qpad), dtype=jnp.int32)
+    negs = jnp.full((b, qpad), NEG, dtype=jnp.int32)
+    init = (zeros, zeros, negs, negs, jnp.zeros((b,), dtype=jnp.int32))
+
+    body = functools.partial(
+        _wavefront_body,
+        rsp=rsp,
+        qprof=qprof,
+        alpha=alpha,
+        beta=beta,
+        qpad=qpad,
+        lpad=lpad,
+        onehot=onehot,
+    )
+    ndiag = qpad + lpad - 1
+    *_, best = jax.lax.fori_loop(0, ndiag, body, init)
+    out_ref[...] = best
+
+
+def inter_sw(qprof, subjects, gaps, *, variant: str = "gather"):
+    """Batched SW scores: qprof [Qpad, 32] i32, subjects [NS, Lpad] i32
+    (DUMMY-padded), gaps = [alpha, beta] i32 -> scores [NS] i32.
+
+    NS must be a multiple of BLOCK_B. ``variant`` in {"gather", "onehot"}.
+    """
+    if variant not in ("gather", "onehot"):
+        raise ValueError(f"unknown inter variant {variant!r}")
+    qpad, row = qprof.shape
+    ns, lpad = subjects.shape
+    if row != ROW:
+        raise ValueError(f"qprof must be [Qpad, {ROW}], got {qprof.shape}")
+    if ns % BLOCK_B != 0:
+        raise ValueError(f"NS={ns} not a multiple of BLOCK_B={BLOCK_B}")
+    kernel = functools.partial(
+        _inter_kernel, qpad=qpad, lpad=lpad, onehot=(variant == "onehot")
+    )
+    grid = (ns // BLOCK_B,)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((ns,), jnp.int32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((qpad, ROW), lambda b: (0, 0)),
+            pl.BlockSpec((BLOCK_B, lpad), lambda b: (b, 0)),
+            pl.BlockSpec((2,), lambda b: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B,), lambda b: (b,)),
+        interpret=True,
+    )(qprof.astype(jnp.int32), subjects.astype(jnp.int32), gaps.astype(jnp.int32))

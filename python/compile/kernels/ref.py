@@ -1,0 +1,73 @@
+"""Pure-numpy/jnp Smith-Waterman oracle — the correctness reference every
+Pallas kernel is tested against (and the same recurrence the Rust scalar
+oracle implements, so all three layers agree on one golden definition).
+
+Paper Eq. 1 (affine gaps):
+
+    H[i,j] = max(0, H[i-1,j-1] + s(q_i, d_j), E[i,j], F[i,j])
+    E[i,j] = max(E[i-1,j] - alpha, H[i-1,j] - beta)
+    F[i,j] = max(F[i,j-1] - alpha, H[i,j-1] - beta)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import NEG, ROW
+
+
+def sw_score_ref(query, subject, matrix, alpha: int, beta: int) -> int:
+    """Optimal local alignment score (scalar DP, quadratic time)."""
+    q = np.asarray(query, dtype=np.int64)
+    d = np.asarray(subject, dtype=np.int64)
+    m = np.asarray(matrix, dtype=np.int64).reshape(ROW, ROW)
+    n, mm = len(q), len(d)
+    if n == 0 or mm == 0:
+        return 0
+    h_prev = np.zeros(n + 1, dtype=np.int64)  # H[:, j-1]
+    f_prev = np.full(n + 1, NEG, dtype=np.int64)  # F[:, j-1]
+    best = 0
+    for j in range(mm):
+        row = m[:, d[j]]
+        e = NEG
+        h_up = 0
+        h_diag = 0
+        for i in range(1, n + 1):
+            e = max(e - alpha, h_up - beta)
+            f = max(f_prev[i] - alpha, h_prev[i] - beta)
+            h = max(0, h_diag + int(row[q[i - 1]]), e, f)
+            h_diag = h_prev[i]
+            h_prev[i] = h
+            h_up = h
+            f_prev[i] = f
+            if h > best:
+                best = h
+    return int(best)
+
+
+def sw_scores_batch_ref(query, subjects, matrix, alpha: int, beta: int):
+    """Score a batch of subjects (list of arrays or a padded 2-D array;
+    DUMMY padding is harmless by construction)."""
+    return np.array(
+        [sw_score_ref(query, s, matrix, alpha, beta) for s in subjects],
+        dtype=np.int32,
+    )
+
+
+def random_case(rng: np.random.Generator, qmax: int = 48, lmax: int = 64,
+                batch: int = 4):
+    """Draw a random (query, subjects, matrix, alpha, beta) test case with
+    a symmetric random scoring matrix (zero dummy row/col)."""
+    qlen = int(rng.integers(1, qmax + 1))
+    query = rng.integers(0, 24, size=qlen).astype(np.int32)
+    subjects = [
+        rng.integers(0, 24, size=int(rng.integers(1, lmax + 1))).astype(np.int32)
+        for _ in range(batch)
+    ]
+    raw = rng.integers(-4, 12, size=(24, 24))
+    sym = np.tril(raw) + np.tril(raw, -1).T
+    mat = np.zeros((ROW, ROW), dtype=np.int32)
+    mat[:24, :24] = sym
+    alpha = int(rng.integers(1, 4))
+    beta = alpha + int(rng.integers(1, 12))
+    return query, subjects, mat, alpha, beta

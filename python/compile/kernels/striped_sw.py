@@ -1,0 +1,124 @@
+"""Intra-sequence striped Smith-Waterman Pallas kernel (Farrar + lazy-F).
+
+The TPU rendering of the paper's IntraQP variant (§III.C): the query is
+laid out striped across V = 128 vector lanes (the TPU lane dimension;
+the paper's Phi uses V = 16), S = Qpad / V stripes. One subject sequence
+per pallas program; the column loop is a `fori_loop`, the stripe pass a
+`scan`, and the lazy-F fix-up the bounded `while_loop` that replaces the
+paper's `_mm512_cmpgt_epi32_mask` predicated loop.
+
+Semantics are identical to rust/src/align/striped.rs (including the
+E re-tightening in the lazy pass); both are validated against the scalar
+oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import NEG, ROW, shift_lanes
+
+#: TPU lane dimension — stripe vector width
+V = 128
+
+
+def _column(j, carry, *, sprof, subj, alpha, beta, s_count):
+    hstore, e, best = carry  # [S, V], [S, V], scalar
+    r = subj[j]
+    prof = sprof[r]  # [S, V] striped substitution scores for this residue
+
+    hload = hstore
+    h_diag0 = shift_lanes(hload[s_count - 1], 0)
+
+    def stripe(carry_s, s):
+        f, h_diag = carry_s
+        h = jnp.maximum(
+            jnp.maximum(0, h_diag + prof[s]), jnp.maximum(e[s], f)
+        )
+        e_new = jnp.maximum(e[s] - alpha, h - beta)
+        f = jnp.maximum(f - alpha, h - beta)
+        return (f, hload[s]), (h, e_new)
+
+    (f, _), (h_rows, e_rows) = jax.lax.scan(
+        stripe, (jnp.full((V,), NEG, jnp.int32), h_diag0), jnp.arange(s_count)
+    )
+    hstore = h_rows
+    e = e_rows
+
+    # lazy-F: keep sweeping while the wrapped F could still raise any H
+    def lazy_cond(c):
+        _, _, f = c
+        return jnp.any(f > 0)
+
+    def lazy_body(c):
+        hstore, e, f = c
+
+        def stripe_fix(f, s):
+            h_new = jnp.maximum(hstore[s], f)
+            e_new = jnp.maximum(e[s], h_new - beta)
+            return f - alpha, (h_new, e_new)
+
+        f, (h_rows, e_rows) = jax.lax.scan(stripe_fix, f, jnp.arange(s_count))
+        return h_rows, e_rows, shift_lanes(f, NEG)
+
+    hstore, e, _ = jax.lax.while_loop(
+        lazy_cond, lazy_body, (hstore, e, shift_lanes(f, NEG))
+    )
+    best = jnp.maximum(best, jnp.max(hstore))
+    return (hstore, e, best)
+
+
+def _striped_kernel(sprof_ref, subj_ref, gaps_ref, out_ref, *, s_count, lpad):
+    sprof = sprof_ref[...]  # [ROW, S, V]
+    subj = subj_ref[...][0]  # block is one subject: [1, Lpad] -> [Lpad]
+    alpha = gaps_ref[0]
+    beta = gaps_ref[1]
+
+    init = (
+        jnp.zeros((s_count, V), jnp.int32),
+        jnp.full((s_count, V), NEG, jnp.int32),
+        jnp.zeros((), jnp.int32),
+    )
+    body = functools.partial(
+        _column, sprof=sprof, subj=subj, alpha=alpha, beta=beta, s_count=s_count
+    )
+    *_, best = jax.lax.fori_loop(0, lpad, body, init)
+    out_ref[...] = best[None]
+
+
+def striped_profile_from_qprof(qprof):
+    """Rearrange a [Qpad, ROW] query profile into the striped layout
+    [ROW, S, V]: sprof[r, s, v] = qprof[v*S + s, r]. Qpad must be a
+    multiple of V (pad the query with DUMMY rows first — they score 0)."""
+    qpad, row = qprof.shape
+    if qpad % V != 0:
+        raise ValueError(f"Qpad={qpad} not a multiple of V={V}")
+    s_count = qpad // V
+    # qprof[v*S + s, r] -> [V, S, ROW] -> [ROW, S, V]
+    return jnp.transpose(qprof.reshape(V, s_count, row), (2, 1, 0))
+
+
+def striped_sw(qprof, subjects, gaps):
+    """Striped SW scores: qprof [Qpad, 32] i32 (Qpad % 128 == 0),
+    subjects [NS, Lpad] i32, gaps [alpha, beta] -> scores [NS] i32."""
+    qpad, _ = qprof.shape
+    ns, lpad = subjects.shape
+    s_count = qpad // V
+    sprof = striped_profile_from_qprof(qprof.astype(jnp.int32))
+    kernel = functools.partial(_striped_kernel, s_count=s_count, lpad=lpad)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((ns,), jnp.int32),
+        grid=(ns,),
+        in_specs=[
+            pl.BlockSpec((ROW, s_count, V), lambda b: (0, 0, 0)),
+            pl.BlockSpec((1, lpad), lambda b: (b, 0)),
+            pl.BlockSpec((2,), lambda b: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda b: (b,)),
+        interpret=True,
+    )(sprof, subjects.astype(jnp.int32), gaps.astype(jnp.int32))

@@ -1,0 +1,92 @@
+"""L2 — the JAX chunk-alignment model.
+
+One function per SWAPHI variant, all with the same AOT interface so the
+Rust runtime drives them uniformly:
+
+    align_chunk_<variant>(qprof  i32[Qpad, 32],
+                          subjects i32[NS, Lpad],
+                          gaps   i32[2])          -> (scores i32[NS],)
+
+* ``qprof`` is the sequential query profile (matrix rows gathered per
+  query position, DUMMY-padded query rows are all-zero);
+* ``subjects`` are residue codes DUMMY-padded to the bucket's Lpad; the
+  dummy-scores-zero convention makes padding score-transparent, so no
+  length inputs are needed (DESIGN.md §4);
+* ``gaps`` = [alpha, beta] = [gap_extend, gap_open + gap_extend].
+
+Shapes are static per artifact; the shipped (Qpad, Lpad, NS) buckets are
+listed in BUCKETS and recorded in artifacts/manifest.json. The Rust
+runtime picks the smallest bucket that fits and pads.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .kernels import inter_sw, striped_sw
+from .kernels.inter_sw import BLOCK_B
+
+
+def align_chunk_inter_gather(qprof, subjects, gaps):
+    """Inter-sequence wavefront, gather lookup (~InterQP)."""
+    return (inter_sw.inter_sw(qprof, subjects, gaps, variant="gather"),)
+
+
+def align_chunk_inter_onehot(qprof, subjects, gaps):
+    """Inter-sequence wavefront, one-hot/MXU lookup (~InterSP)."""
+    return (inter_sw.inter_sw(qprof, subjects, gaps, variant="onehot"),)
+
+
+def align_chunk_striped(qprof, subjects, gaps):
+    """Intra-sequence striped + lazy-F (~IntraQP)."""
+    return (striped_sw.striped_sw(qprof, subjects, gaps),)
+
+
+VARIANTS = {
+    "inter_gather": align_chunk_inter_gather,
+    "inter_onehot": align_chunk_inter_onehot,
+    "striped": align_chunk_striped,
+}
+
+
+@dataclass(frozen=True)
+class Bucket:
+    """One AOT-compiled static-shape configuration."""
+
+    variant: str
+    qpad: int
+    lpad: int
+    ns: int  # subjects per call
+
+    @property
+    def name(self) -> str:
+        return f"{self.variant}_q{self.qpad}_l{self.lpad}_n{self.ns}"
+
+    def validate(self) -> None:
+        if self.variant not in VARIANTS:
+            raise ValueError(f"unknown variant {self.variant}")
+        if self.variant == "striped":
+            if self.qpad % striped_sw.V:
+                raise ValueError(f"striped qpad must be a multiple of {striped_sw.V}")
+        else:
+            if self.ns % BLOCK_B:
+                raise ValueError(f"inter NS must be a multiple of {BLOCK_B}")
+        if self.lpad % 8:
+            raise ValueError("lpad must be a multiple of 8")
+
+
+def default_buckets() -> list[Bucket]:
+    """The shipped artifact set: enough (Qpad, Lpad) coverage for the
+    paper's query panel (144..5478) against length-sorted chunk streams,
+    kept small because the CPU-PJRT interpret path is a correctness/
+    architecture proof, not the perf path (DESIGN.md §2)."""
+    buckets = []
+    for variant in ("inter_gather", "inter_onehot"):
+        for qpad, lpad in [(128, 256), (256, 512), (512, 512), (512, 2048)]:
+            buckets.append(Bucket(variant, qpad, lpad, ns=32))
+    # striped: one subject per grid step; keep NS modest
+    for qpad, lpad in [(128, 256), (256, 512)]:
+        buckets.append(Bucket("striped", qpad, lpad, ns=16))
+    for b in buckets:
+        b.validate()
+    return buckets

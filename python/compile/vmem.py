@@ -1,0 +1,103 @@
+"""L1 structural performance analysis: VMEM footprint and MXU-eligibility
+per shipped kernel bucket (DESIGN.md §8).
+
+interpret=True timings are CPU-numpy, NOT a TPU proxy — so the Pallas
+kernels are optimized *structurally*: every bucket must (a) fit its carry
++ operand tiles in a VMEM budget, (b) keep tile shapes (8,128)-friendly,
+and (c) in the onehot variant route the substitution lookup through an
+MXU-shaped contraction. This report checks all three and estimates the
+wavefront's vector-unit utilization.
+
+Usage: (cd python && python -m compile.vmem)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from . import model
+from .kernels.common import ROW
+from .kernels.inter_sw import BLOCK_B
+from .kernels.striped_sw import V
+
+#: per-core VMEM budget we design against (v4-class: 16 MiB/core; we keep
+#: a conservative 4 MiB ceiling per block so double-buffering fits)
+VMEM_BUDGET_BYTES = 4 << 20
+
+I32 = 4  # bytes
+
+
+@dataclass
+class BucketReport:
+    name: str
+    carry_bytes: int
+    operand_bytes: int
+    total_bytes: int
+    fits: bool
+    lane_aligned: bool
+    mxu_eligible: bool
+    wavefront_util: float
+
+    def row(self) -> str:
+        return (
+            f"{self.name:<32} {self.carry_bytes / 1024:>8.0f} {self.operand_bytes / 1024:>9.0f} "
+            f"{self.total_bytes / 1024 / 1024:>7.2f} {'yes' if self.fits else 'NO':>5} "
+            f"{'yes' if self.lane_aligned else 'NO':>8} "
+            f"{'mxu' if self.mxu_eligible else 'vpu':>4} {self.wavefront_util:>6.2f}"
+        )
+
+
+def analyze(bucket: model.Bucket) -> BucketReport:
+    q, l = bucket.qpad, bucket.lpad
+    if bucket.variant == "striped":
+        s = q // V
+        # per block (one subject): sprof [ROW,S,V] + subject [Lpad] + H/E [S,V] x2
+        carry = 2 * s * V * I32
+        operands = ROW * s * V * I32 + l * I32
+        lane_aligned = V == 128
+        mxu = False
+        util = 1.0  # striped has no wavefront waste; lazy-F is data-dependent
+    else:
+        b = BLOCK_B
+        # carry: H_{d-1}, H_{d-2}, E, F, best  = 4*[B,Qpad] + [B]
+        carry = (4 * b * q + b) * I32
+        # operands: qprof [Qpad,ROW] + rs padded [B, Lpad+2Qpad-1] (+ onehot tile)
+        operands = q * ROW * I32 + b * (l + 2 * q - 1) * I32
+        if bucket.variant == "inter_onehot":
+            operands += b * q * ROW * I32  # one-hot tile materialized per step
+        lane_aligned = q % 128 == 0 or q >= 128
+        mxu = bucket.variant == "inter_onehot"
+        # wavefront does (Q+L-1) steps of width Q over an LxQ useful region
+        util = (q * l) / (q * (q + l - 1))
+    total = carry + operands
+    return BucketReport(
+        name=bucket.name,
+        carry_bytes=carry,
+        operand_bytes=operands,
+        total_bytes=total,
+        fits=total <= VMEM_BUDGET_BYTES,
+        lane_aligned=lane_aligned,
+        mxu_eligible=mxu,
+        wavefront_util=util,
+    )
+
+
+def main() -> None:
+    print(f"VMEM budget per block: {VMEM_BUDGET_BYTES >> 20} MiB; lane width 128; i32 cells")
+    print(
+        f"{'bucket':<32} {'carry_KiB':>8} {'opnd_KiB':>9} {'tot_MiB':>7} {'fits':>5} "
+        f"{'aligned':>8} {'unit':>4} {'wf_util':>6}"
+    )
+    reports = [analyze(b) for b in model.default_buckets()]
+    for r in reports:
+        print(r.row())
+    assert all(r.fits for r in reports), "a bucket exceeds the VMEM budget"
+    worst = min(r.wavefront_util for r in reports)
+    print(
+        f"\nall buckets fit; worst wavefront utilization {worst:.2f} "
+        "(= L/(Q+L-1); the inter model trades it for full vector-unit occupancy per step)"
+    )
+
+
+if __name__ == "__main__":
+    main()

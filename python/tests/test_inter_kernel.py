@@ -1,0 +1,150 @@
+"""Inter-sequence wavefront kernel vs the pure-numpy oracle — the core L1
+correctness signal, swept with hypothesis over shapes, scoring schemes
+and padding configurations."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import inter_sw
+from compile.kernels.common import DUMMY, ROW, build_query_profile
+from compile.kernels.inter_sw import BLOCK_B
+from compile.kernels.ref import random_case, sw_scores_batch_ref
+
+import jax.numpy as jnp
+
+
+def blosum62_like():
+    """A fixed realistic matrix for the deterministic tests."""
+    rng = np.random.default_rng(62)
+    raw = rng.integers(-4, 10, size=(24, 24))
+    sym = np.tril(raw) + np.tril(raw, -1).T
+    np.fill_diagonal(sym, rng.integers(4, 12, size=24))
+    mat = np.zeros((ROW, ROW), dtype=np.int32)
+    mat[:24, :24] = sym
+    return mat
+
+
+def pad_subjects(subjects, lpad, ns):
+    out = np.full((ns, lpad), DUMMY, dtype=np.int32)
+    for i, s in enumerate(subjects):
+        out[i, : len(s)] = s
+    return out
+
+
+def run_kernel(query, subjects, mat, alpha, beta, variant, qpad=None, lpad=None, ns=None):
+    qpad = qpad or max(8, len(query))
+    lpad = lpad or max(8, max(len(s) for s in subjects))
+    ns = ns or BLOCK_B
+    q = np.full(qpad, DUMMY, dtype=np.int32)
+    q[: len(query)] = query
+    qprof = build_query_profile(q, mat)
+    subj = pad_subjects(subjects, lpad, ns)
+    gaps = jnp.array([alpha, beta], dtype=jnp.int32)
+    scores = inter_sw.inter_sw(qprof, subj, gaps, variant=variant)
+    return np.asarray(scores)[: len(subjects)]
+
+
+@pytest.mark.parametrize("variant", ["gather", "onehot"])
+def test_matches_ref_fixed_case(variant):
+    rng = np.random.default_rng(1)
+    mat = blosum62_like()
+    query = rng.integers(0, 24, size=33).astype(np.int32)
+    subjects = [rng.integers(0, 24, size=n).astype(np.int32) for n in (7, 20, 41, 64)]
+    got = run_kernel(query, subjects, mat, 2, 12, variant)
+    want = sw_scores_batch_ref(query, subjects, mat, 2, 12)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("variant", ["gather", "onehot"])
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_matches_ref_random_cases(variant, seed):
+    rng = np.random.default_rng(seed)
+    query, subjects, mat, alpha, beta = random_case(rng, qmax=40, lmax=56, batch=3)
+    got = run_kernel(query, subjects, mat, alpha, beta, variant)
+    want = sw_scores_batch_ref(query, subjects, mat, alpha, beta)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("variant", ["gather", "onehot"])
+def test_padding_invariance(variant):
+    """Growing Qpad/Lpad (DUMMY padding) must not change any score."""
+    rng = np.random.default_rng(7)
+    mat = blosum62_like()
+    query = rng.integers(0, 24, size=21).astype(np.int32)
+    subjects = [rng.integers(0, 24, size=n).astype(np.int32) for n in (11, 30)]
+    base = run_kernel(query, subjects, mat, 2, 12, variant, qpad=24, lpad=32)
+    grown = run_kernel(query, subjects, mat, 2, 12, variant, qpad=64, lpad=96)
+    np.testing.assert_array_equal(base, grown)
+
+
+@pytest.mark.parametrize("variant", ["gather", "onehot"])
+def test_multi_block_grid(variant):
+    """NS spanning several pallas grid blocks."""
+    rng = np.random.default_rng(9)
+    mat = blosum62_like()
+    query = rng.integers(0, 24, size=17).astype(np.int32)
+    subjects = [
+        rng.integers(0, 24, size=int(rng.integers(1, 40))).astype(np.int32)
+        for _ in range(2 * BLOCK_B)
+    ]
+    got = run_kernel(
+        query, subjects, mat, 2, 12, variant, qpad=24, lpad=40, ns=2 * BLOCK_B
+    )
+    want = sw_scores_batch_ref(query, subjects, mat, 2, 12)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_variants_agree():
+    rng = np.random.default_rng(11)
+    mat = blosum62_like()
+    query = rng.integers(0, 24, size=29).astype(np.int32)
+    subjects = [rng.integers(0, 24, size=n).astype(np.int32) for n in (5, 23, 48)]
+    a = run_kernel(query, subjects, mat, 2, 12, "gather")
+    b = run_kernel(query, subjects, mat, 2, 12, "onehot")
+    np.testing.assert_array_equal(a, b)
+
+
+def test_all_dummy_lane_scores_zero():
+    mat = blosum62_like()
+    query = np.array([0, 1, 2], dtype=np.int32)
+    subjects = [np.array([0, 1, 2], dtype=np.int32)]
+    # lanes 1.. are all-DUMMY padding
+    got = run_kernel(query, subjects, mat, 2, 12, "gather", qpad=8, lpad=8)
+    assert got[0] > 0
+    full = np.asarray(
+        inter_sw.inter_sw(
+            build_query_profile(np.array([0, 1, 2, DUMMY, DUMMY, DUMMY, DUMMY, DUMMY]), mat),
+            pad_subjects(subjects, 8, BLOCK_B),
+            jnp.array([2, 12], dtype=jnp.int32),
+        )
+    )
+    assert (full[1:] == 0).all()
+
+
+def test_rejects_bad_shapes():
+    mat = blosum62_like()
+    qprof = build_query_profile(np.zeros(16, dtype=np.int32), mat)
+    with pytest.raises(ValueError):
+        inter_sw.inter_sw(
+            qprof, np.zeros((BLOCK_B + 1, 8), dtype=np.int32), jnp.array([2, 12])
+        )
+    with pytest.raises(ValueError):
+        inter_sw.inter_sw(
+            qprof[:, :16], np.zeros((BLOCK_B, 8), dtype=np.int32), jnp.array([2, 12])
+        )
+    with pytest.raises(ValueError):
+        inter_sw.inter_sw(
+            qprof, np.zeros((BLOCK_B, 8), dtype=np.int32), jnp.array([2, 12]),
+            variant="bogus",
+        )
+
+
+def test_single_residue_edge():
+    mat = blosum62_like()
+    query = np.array([5], dtype=np.int32)
+    subjects = [np.array([5], dtype=np.int32)]
+    got = run_kernel(query, subjects, mat, 2, 12, "gather", qpad=8, lpad=8)
+    want = sw_scores_batch_ref(query, subjects, mat, 2, 12)
+    np.testing.assert_array_equal(got, want)

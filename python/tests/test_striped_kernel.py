@@ -1,0 +1,97 @@
+"""Striped (Farrar + lazy-F) Pallas kernel vs the numpy oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import striped_sw
+from compile.kernels.common import DUMMY, ROW, build_query_profile
+from compile.kernels.ref import random_case, sw_scores_batch_ref
+
+import jax.numpy as jnp
+
+QPAD = striped_sw.V  # one stripe
+
+
+def run_striped(query, subjects, mat, alpha, beta, qpad=QPAD, lpad=None, ns=None):
+    lpad = lpad or max(8, max(len(s) for s in subjects))
+    ns = ns or len(subjects)
+    q = np.full(qpad, DUMMY, dtype=np.int32)
+    q[: len(query)] = query
+    qprof = build_query_profile(q, mat)
+    subj = np.full((ns, lpad), DUMMY, dtype=np.int32)
+    for i, s in enumerate(subjects):
+        subj[i, : len(s)] = s
+    gaps = jnp.array([alpha, beta], dtype=jnp.int32)
+    return np.asarray(striped_sw.striped_sw(qprof, subj, gaps))[: len(subjects)]
+
+
+def fixed_matrix(seed=62):
+    rng = np.random.default_rng(seed)
+    raw = rng.integers(-4, 10, size=(24, 24))
+    sym = np.tril(raw) + np.tril(raw, -1).T
+    np.fill_diagonal(sym, rng.integers(4, 12, size=24))
+    mat = np.zeros((ROW, ROW), dtype=np.int32)
+    mat[:24, :24] = sym
+    return mat
+
+
+def test_matches_ref_fixed():
+    rng = np.random.default_rng(2)
+    mat = fixed_matrix()
+    query = rng.integers(0, 24, size=50).astype(np.int32)
+    subjects = [rng.integers(0, 24, size=n).astype(np.int32) for n in (9, 33, 64)]
+    got = run_striped(query, subjects, mat, 2, 12)
+    want = sw_scores_batch_ref(query, subjects, mat, 2, 12)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_matches_ref_random(seed):
+    rng = np.random.default_rng(seed)
+    query, subjects, mat, alpha, beta = random_case(rng, qmax=60, lmax=48, batch=2)
+    got = run_striped(query, subjects, mat, alpha, beta)
+    want = sw_scores_batch_ref(query, subjects, mat, alpha, beta)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_two_stripes():
+    """Query longer than one 128-lane stripe (S = 2)."""
+    rng = np.random.default_rng(3)
+    mat = fixed_matrix()
+    query = rng.integers(0, 24, size=200).astype(np.int32)
+    subjects = [rng.integers(0, 24, size=40).astype(np.int32)]
+    got = run_striped(query, subjects, mat, 2, 12, qpad=2 * striped_sw.V)
+    want = sw_scores_batch_ref(query, subjects, mat, 2, 12)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_cheap_gaps_stress_lazy_f():
+    """Small gap penalties force long F propagation across stripe wraps."""
+    rng = np.random.default_rng(4)
+    mat = fixed_matrix()
+    query = rng.integers(0, 24, size=90).astype(np.int32)
+    subjects = [rng.integers(0, 24, size=25).astype(np.int32)]
+    got = run_striped(query, subjects, mat, 1, 2)
+    want = sw_scores_batch_ref(query, subjects, mat, 1, 2)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_profile_layout_roundtrip():
+    mat = fixed_matrix()
+    q = np.arange(QPAD, dtype=np.int32) % 24
+    qprof = build_query_profile(q, mat)
+    sprof = np.asarray(striped_sw.striped_profile_from_qprof(jnp.asarray(qprof)))
+    s_count = QPAD // striped_sw.V
+    for r in range(ROW):
+        for s in range(s_count):
+            for v in range(striped_sw.V):
+                assert sprof[r, s, v] == qprof[v * s_count + s, r]
+
+
+def test_rejects_bad_qpad():
+    mat = fixed_matrix()
+    qprof = build_query_profile(np.zeros(100, dtype=np.int32), mat)
+    with pytest.raises(ValueError):
+        striped_sw.striped_profile_from_qprof(jnp.asarray(qprof))

@@ -1,0 +1,39 @@
+"""Structural perf invariants of the shipped kernel buckets (DESIGN §8)."""
+
+from compile import model, vmem
+
+
+def test_every_default_bucket_fits_vmem_budget():
+    for b in model.default_buckets():
+        r = vmem.analyze(b)
+        assert r.fits, f"{b.name}: {r.total_bytes} bytes over budget"
+
+
+def test_onehot_buckets_are_mxu_eligible():
+    for b in model.default_buckets():
+        r = vmem.analyze(b)
+        assert r.mxu_eligible == (b.variant == "inter_onehot"), b.name
+
+
+def test_wavefront_utilization_formula():
+    b = model.Bucket("inter_gather", 256, 512, 32)
+    r = vmem.analyze(b)
+    assert abs(r.wavefront_util - (256 * 512) / (256 * (256 + 512 - 1))) < 1e-12
+    # longer subjects amortize the wavefront ramp
+    b2 = model.Bucket("inter_gather", 256, 2048, 32)
+    assert vmem.analyze(b2).wavefront_util > r.wavefront_util
+
+
+def test_carry_scales_linearly_with_q():
+    from compile.kernels.inter_sw import BLOCK_B
+
+    small = vmem.analyze(model.Bucket("inter_gather", 128, 256, 32))
+    big = vmem.analyze(model.Bucket("inter_gather", 256, 256, 32))
+    # carry = 4*B*Q + B (the [B] best vector is q-independent)
+    assert big.carry_bytes - small.carry_bytes == 4 * BLOCK_B * 128 * 4
+
+
+def test_report_runs(capsys):
+    vmem.main()
+    out = capsys.readouterr().out
+    assert "all buckets fit" in out

@@ -1,0 +1,79 @@
+//! Ablation — paper §III.A loop-scheduling discussion (Table 1's context):
+//! "the *static* scheduling performs worst ... the *guided* scheduling
+//! outperforms the others more frequently, albeit by a slight margin."
+//!
+//! Reproduced at both scheduling levels of the simulator, plus scheduling
+//! interaction with chunk sizing, on the TrEMBL-scale workload.
+
+use swaphi::align::EngineKind;
+use swaphi::bench::workloads::Workload;
+use swaphi::bench::{f1, f3, Table};
+use swaphi::phi::sched::{simulate_schedule, Policy};
+use swaphi::phi::sim::{simulate_search, SimConfig};
+
+fn main() {
+    let w = Workload::trembl(6000);
+
+    // level 2 in isolation: one big alignment loop across 240 threads
+    let qlen = 464;
+    let rate = swaphi::phi::calibration::effective_thread_rate(EngineKind::InterSP, qlen);
+    let mut items: Vec<f64> = Vec::new();
+    for _ in 0..w.replication.min(400) {
+        for p in &w.index.profiles {
+            items.push((p.padded_len * 16) as f64 * qlen as f64 / rate);
+        }
+    }
+    let mut level2 = Table::new(
+        "Sched ablation (device level): one loop, 240 threads, q=464",
+        &["policy", "makespan_s", "utilization", "grants", "vs_guided"],
+    );
+    let guided_ms = simulate_schedule(&items, 240, Policy::Guided).makespan;
+    for policy in Policy::ALL {
+        let o = simulate_schedule(&items, 240, policy);
+        level2.row(&[
+            policy.name().into(),
+            f3(o.makespan),
+            f3(o.utilization()),
+            o.grants.to_string(),
+            format!("{:.4}x", o.makespan / guided_ms),
+        ]);
+    }
+    level2.emit("ablation_sched_level2");
+
+    // end-to-end: whole-search GCUPS per policy
+    let mut e2e = Table::new(
+        "Sched ablation (end to end): simulated GCUPS @1 device",
+        &["policy", "q=144", "q=464", "q=2005", "q=5478"],
+    );
+    for policy in Policy::ALL {
+        let mut row = vec![policy.name().to_string()];
+        for &q in &[144usize, 464, 2005, 5478] {
+            let cfg = SimConfig { policy, ..w.sim_config(1) };
+            let r = simulate_search(&w.index, &w.chunks, EngineKind::InterSP, q, cfg);
+            row.push(f1(r.gcups()));
+        }
+        e2e.row(&row);
+    }
+    e2e.emit("ablation_sched_e2e");
+
+    // chunk-size ablation: offload amortization vs memory pressure
+    let mut chunks_tbl = Table::new(
+        "Chunk-size ablation: GCUPS @4 devices, q=464 (InterSP)",
+        &["target_padded_residues", "n_chunks", "GCUPS", "offload_frac"],
+    );
+    for shift in [14u32, 16, 18, 20] {
+        let target = 1u128 << shift;
+        let wl = {
+            use swaphi::db::chunk::{plan_chunks, ChunkPlanConfig};
+            plan_chunks(&w.index, ChunkPlanConfig { target_padded_residues: target })
+        };
+        let r = simulate_search(&w.index, &wl, EngineKind::InterSP, 464, w.sim_config(4));
+        chunks_tbl.row(&[
+            format!("2^{shift}"),
+            wl.len().to_string(),
+            f1(r.gcups()),
+            f3(r.offload_fraction()),
+        ]);
+    }
+    chunks_tbl.emit("ablation_chunk_size");
+}

@@ -1,0 +1,92 @@
+//! Fig 5 — "Performance comparison between the three variants of SWAPHI":
+//! GCUPS vs query length for InterSP / InterQP / IntraQP on 1 and 4
+//! coprocessors, searching the paper's 20-query panel against a
+//! TrEMBL-scale workload (sampled + replicated; DESIGN.md §2, §6).
+//!
+//! Paper shape targets: InterSP avg/max 54.4/58.8 (1 dev) and 200.4/228.4
+//! (4 dev); InterQP 51.8/53.8 and 191.2/209.0; IntraQP 32.8/45.6 and
+//! 123.3/164.9; SP > QP for qlen ≥ ~375; intra fluctuates.
+
+use swaphi::align::EngineKind;
+use swaphi::bench::workloads::Workload;
+use swaphi::bench::{f1, Table};
+use swaphi::db::synth::PAPER_QUERY_LENS;
+use swaphi::phi::calibration::measured_variant_ratios;
+use swaphi::phi::sim::simulate_search;
+
+fn main() {
+    let w = Workload::trembl(6000);
+    println!(
+        "workload: {} sampled sequences, {} profiles, x{} replication = {:.2} G residues",
+        w.index.n_seqs(),
+        w.index.n_profiles(),
+        w.replication,
+        w.virtual_residues as f64 / 1e9
+    );
+
+    let mut table = Table::new(
+        "Fig 5: GCUPS by query length (simulated Xeon Phi fleet)",
+        &["qlen", "SP@1", "QP@1", "Intra@1", "SP@4", "QP@4", "Intra@4"],
+    );
+    let mut sums = [[0.0f64; 2]; 3];
+    let mut maxs = [[0.0f64; 2]; 3];
+    for &qlen in &PAPER_QUERY_LENS {
+        let mut cells = vec![qlen.to_string()];
+        for (di, devices) in [1usize, 4].iter().enumerate() {
+            for (vi, kind) in EngineKind::PAPER_VARIANTS.iter().enumerate() {
+                let r =
+                    simulate_search(&w.index, &w.chunks, *kind, qlen, w.sim_config(*devices));
+                let g = r.gcups();
+                sums[vi][di] += g;
+                maxs[vi][di] = maxs[vi][di].max(g);
+                cells.push(f1(g));
+            }
+        }
+        table.row(&cells);
+    }
+    table.emit("fig5_variants");
+
+    let n = PAPER_QUERY_LENS.len() as f64;
+    let mut summary = Table::new(
+        "Fig 5 summary: avg/max GCUPS (paper reference in brackets)",
+        &["variant", "avg@1", "max@1", "avg@4", "max@4"],
+    );
+    let paper = [
+        ("InterSP", [54.4, 58.8, 200.4, 228.4]),
+        ("InterQP", [51.8, 53.8, 191.2, 209.0]),
+        ("IntraQP", [32.8, 45.6, 123.3, 164.9]),
+    ];
+    for (vi, (name, p)) in paper.iter().enumerate() {
+        summary.row(&[
+            name.to_string(),
+            format!("{} [{}]", f1(sums[vi][0] / n), f1(p[0])),
+            format!("{} [{}]", f1(maxs[vi][0]), f1(p[1])),
+            format!("{} [{}]", f1(sums[vi][1] / n), f1(p[2])),
+            format!("{} [{}]", f1(maxs[vi][1]), f1(p[3])),
+        ]);
+    }
+    summary.emit("fig5_summary");
+
+    // emergent check: this container's native engines should order the
+    // variants the same way (InterSP fastest, IntraQP slowest)
+    let mut ratios = Table::new(
+        "Fig 5 cross-check: measured native-engine ratios on this host",
+        &["variant", "relative_rate_vs_InterSP"],
+    );
+    for (kind, ratio) in measured_variant_ratios() {
+        ratios.row(&[kind.name().to_string(), format!("{ratio:.3}")]);
+    }
+    ratios.emit("fig5_native_ratios");
+
+    // SP/QP crossover query length (paper: SP wins for qlen >= ~375)
+    let mut cross = 0usize;
+    for q in (64..2000).step_by(8) {
+        let sp = simulate_search(&w.index, &w.chunks, EngineKind::InterSP, q, w.sim_config(1));
+        let qp = simulate_search(&w.index, &w.chunks, EngineKind::InterQP, q, w.sim_config(1));
+        if sp.gcups() >= qp.gcups() {
+            cross = q;
+            break;
+        }
+    }
+    println!("\nSP/QP crossover: qlen ~ {cross} (paper: >= 375 favours SP)");
+}

@@ -1,0 +1,62 @@
+//! Fig 6 — "Scalability of different variants in terms of number of
+//! coprocessors": speedup over one coprocessor for 2 and 4 devices, per
+//! variant, on the TrEMBL-scale workload.
+//!
+//! Paper shape targets: avg speedups 1.95/1.95/1.97 on two coprocessors
+//! and 3.66/3.68/3.78 on four (max 2.00/1.97/2.03 and 3.90/3.89/4.04).
+
+use swaphi::align::EngineKind;
+use swaphi::bench::workloads::Workload;
+use swaphi::bench::{f2, Table};
+use swaphi::db::synth::PAPER_QUERY_LENS;
+use swaphi::phi::sim::simulate_search;
+
+fn main() {
+    let w = Workload::trembl(6000);
+    println!(
+        "workload: {} sequences x{} replication = {:.2} G residues",
+        w.index.n_seqs(),
+        w.replication,
+        w.virtual_residues as f64 / 1e9
+    );
+
+    let mut table = Table::new(
+        "Fig 6: speedup vs one coprocessor",
+        &["variant", "avg@2", "max@2", "avg@4", "max@4", "paper_avg@2", "paper_avg@4"],
+    );
+    let paper = [("InterSP", 1.95, 3.66), ("InterQP", 1.95, 3.68), ("IntraQP", 1.97, 3.78)];
+    let mut detail = Table::new(
+        "Fig 6 detail: per-query speedups (InterSP)",
+        &["qlen", "speedup@2", "speedup@4"],
+    );
+    for (vi, kind) in EngineKind::PAPER_VARIANTS.iter().enumerate() {
+        let mut sums = [0.0f64; 2];
+        let mut maxs = [0.0f64; 2];
+        for &qlen in &PAPER_QUERY_LENS {
+            let base = simulate_search(&w.index, &w.chunks, *kind, qlen, w.sim_config(1));
+            let mut row = vec![qlen.to_string()];
+            for (di, devices) in [2usize, 4].iter().enumerate() {
+                let r = simulate_search(&w.index, &w.chunks, *kind, qlen, w.sim_config(*devices));
+                let speedup = base.makespan / r.makespan;
+                sums[di] += speedup;
+                maxs[di] = maxs[di].max(speedup);
+                row.push(f2(speedup));
+            }
+            if *kind == EngineKind::InterSP {
+                detail.row(&row);
+            }
+        }
+        let n = PAPER_QUERY_LENS.len() as f64;
+        table.row(&[
+            kind.name().to_string(),
+            f2(sums[0] / n),
+            f2(maxs[0]),
+            f2(sums[1] / n),
+            f2(maxs[1]),
+            f2(paper[vi].1),
+            f2(paper[vi].2),
+        ]);
+    }
+    table.emit("fig6_scalability");
+    detail.emit("fig6_detail");
+}

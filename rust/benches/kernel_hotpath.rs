@@ -1,0 +1,114 @@
+//! Kernel hot-path bench — REAL wallclock on this container (no
+//! simulation). This is the measurement loop behind EXPERIMENTS.md §Perf:
+//!
+//! * native engine GCUPS per variant and query length (the Table 1
+//!   design-space made measurable: gather-based QP vs rebuild-based SP vs
+//!   striped);
+//! * the SP/QP profile-construction trade-off on real hardware;
+//! * PJRT artifact path: per-chunk execute latency and overhead vs the
+//!   in-process native engine;
+//! * BLAST heuristic effective GCUPS (real run).
+
+use swaphi::align::{search_index, EngineKind, NativeAligner, QueryContext};
+use swaphi::bench::{f1, f2, measure, Table};
+use swaphi::blast::{blast_search, BlastParams};
+use swaphi::db::index::Index;
+use swaphi::db::synth::{generate, generate_query, SynthSpec};
+use swaphi::matrices::Scoring;
+
+fn main() {
+    let sc = Scoring::swaphi_default();
+    let idx = Index::build(generate(&SynthSpec::tiny(800, 42)));
+    let real_residues = idx.total_residues;
+    println!("native bench DB: {} sequences, {} residues", idx.n_seqs(), real_residues);
+
+    // --- native engine GCUPS by variant and query length ---
+    let mut t = Table::new(
+        "Native engine GCUPS on this container (real wallclock)",
+        &["variant", "q=144", "q=375", "q=1000", "q=2005"],
+    );
+    for kind in [
+        EngineKind::InterSP,
+        EngineKind::InterQP,
+        EngineKind::IntraQP,
+        EngineKind::Scalar,
+    ] {
+        let mut row = vec![kind.name().to_string()];
+        for &qlen in &[144usize, 375, 1000, 2005] {
+            if kind == EngineKind::Scalar && qlen > 375 {
+                row.push("-".into());
+                continue;
+            }
+            let q = generate_query(qlen, qlen as u64);
+            let ctx = QueryContext::build("bench", q, &sc);
+            let mut eng = NativeAligner::new(kind);
+            let stats = measure(1, 3, || search_index(&mut eng, &ctx, &idx, &sc));
+            let cells = real_residues as f64 * qlen as f64;
+            row.push(f2(cells / stats.median / 1e9));
+        }
+        t.row(&row);
+    }
+    t.emit("hotpath_native");
+
+    // --- PJRT path latency vs native (three-layer overhead) ---
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if artifacts.join("manifest.json").exists() {
+        let rt = std::rc::Rc::new(swaphi::runtime::PjrtRuntime::open(&artifacts).unwrap());
+        let small = Index::build(generate(&SynthSpec::tiny(96, 7)));
+        let q = generate_query(96, 5);
+        let ctx = QueryContext::build("pjrt", q, &sc);
+        let mut table = Table::new(
+            "PJRT artifact path vs native (96-seq DB, q=96, real wallclock)",
+            &["backend", "variant", "median_s", "GCUPS"],
+        );
+        let cells = small.total_residues as f64 * 96.0;
+        for kind in [EngineKind::InterQP, EngineKind::InterSP] {
+            let mut pjrt = swaphi::runtime::PjrtAligner::new(std::rc::Rc::clone(&rt), kind);
+            // warm the compile cache before timing
+            let _ = search_index(&mut pjrt, &ctx, &small, &sc);
+            let s = measure(0, 3, || search_index(&mut pjrt, &ctx, &small, &sc));
+            table.row(&[
+                "pjrt".into(),
+                kind.name().into(),
+                format!("{:.4}", s.median),
+                f2(cells / s.median / 1e9),
+            ]);
+            let mut native = NativeAligner::new(kind);
+            let s = measure(1, 3, || search_index(&mut native, &ctx, &small, &sc));
+            table.row(&[
+                "native".into(),
+                kind.name().into(),
+                format!("{:.4}", s.median),
+                f2(cells / s.median / 1e9),
+            ]);
+        }
+        table.emit("hotpath_pjrt");
+    } else {
+        println!("(skipping PJRT rows: run `make artifacts` first)");
+    }
+
+    // --- BLAST effective GCUPS, real run ---
+    let subjects: Vec<Vec<u8>> = idx.seqs.iter().map(|s| s.codes.clone()).collect();
+    let bsc = Scoring::blast_default();
+    let mut bt = Table::new(
+        "BLAST heuristic (real run): effective vs visited GCUPS",
+        &["qlen", "visited_frac", "effective_GCUPS", "visited_GCUPS"],
+    );
+    for &qlen in &[144usize, 729, 2005] {
+        let q = generate_query(qlen, qlen as u64 ^ 7);
+        let total_cells = real_residues as f64 * qlen as f64;
+        let mut visited = 0u64;
+        let stats = measure(0, 2, || {
+            let (_s, st) = blast_search(&q, &subjects, &bsc, BlastParams::blastp_defaults());
+            visited = st.cells_visited;
+            st.cells_visited
+        });
+        bt.row(&[
+            qlen.to_string(),
+            format!("{:.4}", visited as f64 / total_cells),
+            f1(total_cells / stats.median / 1e9),
+            f2(visited as f64 / stats.median / 1e9),
+        ]);
+    }
+    bt.emit("hotpath_blast");
+}

@@ -1,0 +1,381 @@
+//! Inter-sequence vectorized Smith-Waterman (paper §III.B) — the
+//! performance-critical native engine.
+//!
+//! Sixteen database sequences are packed lane-wise in a
+//! [`SequenceProfile`]; every DP quantity is a 16-lane `i32` vector and
+//! one alignment advances per lane per inner-loop step — the exact lane
+//! semantics of the paper's `_mm512_*` 16×32-bit kernels (Table 1),
+//! expressed as fixed-width `[i32; LANES]` array arithmetic that LLVM
+//! autovectorizes (AVX2 on this host, AVX-512/VPU on Phi-class hardware).
+//!
+//! Two substitution-score paths, matching the paper's two variants:
+//!
+//! * **QP** (InterQP): per-cell *gather* from the sequential query profile
+//!   — `sub[lane] = QP[i][ residue[lane] ]`, the `_mm512_permutevar`
+//!   shuffle path of Fig 3;
+//! * **SP** (InterSP): a score profile rebuilt every
+//!   [`SCORE_PROFILE_N`] = 8 subject positions turns the inner loop into
+//!   pure contiguous vector loads (Fig 4) at the cost of the rebuild —
+//!   which only amortizes for long queries (the Fig 5 crossover at ~375).
+
+use super::scalar::NEG;
+use crate::db::profile::{SequenceProfile, LANES, SCORE_PROFILE_N};
+use crate::db::profile::QueryProfile;
+use crate::matrices::Scoring;
+
+/// Which substitution-score path to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InterVariant {
+    /// Sequential query profile, gather per cell (InterQP).
+    QueryProfile,
+    /// Score profile rebuilt per 8-position window (InterSP).
+    ScoreProfile,
+}
+
+/// Reusable per-thread DP workspace — the paper pre-allocates the
+/// intermediate H/E row buffers per device thread, 64-byte aligned, and
+/// reuses them for a whole query; we do the same (Vec<i32> of [i32;16]
+/// blocks; the repr(align) wrapper keeps each lane vector on its own
+/// cache line boundary).
+#[derive(Default)]
+pub struct Workspace {
+    /// H[i][lane] of the previous subject column, `(qlen+1) * LANES`.
+    h: Vec<Lanes>,
+    /// F[i][lane] of the previous subject column.
+    f: Vec<Lanes>,
+    /// Reusable score-profile window (InterSP): avoids a heap allocation
+    /// per 8-position window (§Perf iteration 1: +35% InterSP).
+    sp: Vec<i32>,
+}
+
+/// One 64-byte-aligned 16-lane vector.
+#[derive(Clone, Copy, Debug)]
+#[repr(C, align(64))]
+pub struct Lanes(pub [i32; LANES]);
+
+impl Lanes {
+    #[inline(always)]
+    fn splat(v: i32) -> Self {
+        Lanes([v; LANES])
+    }
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Workspace::default()
+    }
+
+    fn prepare(&mut self, qlen: usize) {
+        let need = qlen + 1;
+        if self.h.len() < need {
+            self.h.resize(need, Lanes::splat(0));
+            self.f.resize(need, Lanes::splat(NEG));
+        }
+        for v in &mut self.h[..need] {
+            *v = Lanes::splat(0);
+        }
+        for v in &mut self.f[..need] {
+            *v = Lanes::splat(NEG);
+        }
+    }
+}
+
+/// Align `query` against all 16 lanes of `profile`; returns the optimal
+/// local score per lane (unused lanes return 0 because they are all-dummy).
+pub fn align_profile(
+    variant: InterVariant,
+    query: &[u8],
+    qp: &QueryProfile,
+    profile: &SequenceProfile,
+    sc: &Scoring,
+    ws: &mut Workspace,
+) -> [i32; LANES] {
+    match variant {
+        InterVariant::QueryProfile => align_qp(query, qp, profile, sc, ws),
+        InterVariant::ScoreProfile => align_sp(query, profile, sc, ws),
+    }
+}
+
+/// InterQP: gather substitution scores from the query profile per cell.
+fn align_qp(
+    query: &[u8],
+    qp: &QueryProfile,
+    profile: &SequenceProfile,
+    sc: &Scoring,
+    ws: &mut Workspace,
+) -> [i32; LANES] {
+    debug_assert_eq!(qp.qlen, query.len());
+    let n = query.len();
+    if n == 0 {
+        return [0; LANES];
+    }
+    ws.prepare(n);
+    let alpha = sc.gap_extend;
+    let beta = sc.beta();
+    let mut best = Lanes::splat(0);
+    // per-column gather of the 16 lane substitution scores (the paper's
+    // `_mm512_permutevar` path): hoisted out of the i-loop is impossible
+    // (depends on i), so the gather sits on the critical path — exactly
+    // the InterQP trade-off the paper measures.
+    let hs = &mut ws.h[..n + 1];
+    let fs = &mut ws.f[..n + 1];
+    for j in 0..profile.padded_len {
+        let vec_db = profile.vector(j);
+        let mut e = Lanes::splat(NEG);
+        let mut h_up = Lanes::splat(0);
+        let mut h_diag = Lanes::splat(0);
+        for i in 1..=n {
+            let row = qp.row(i - 1);
+            // SAFETY: hs/fs have n+1 entries and 1 <= i <= n
+            let hp = unsafe { *hs.get_unchecked(i) };
+            let fp = unsafe { *fs.get_unchecked(i) };
+            let mut hv = Lanes::splat(0);
+            let mut fv = Lanes::splat(0);
+            let mut ev = Lanes::splat(0);
+            for l in 0..LANES {
+                // E[i,j] = max(E[i-1,j]-α, H[i-1,j]-β)
+                let ee = (e.0[l] - alpha).max(h_up.0[l] - beta);
+                // F[i,j] = max(F[i,j-1]-α, H[i,j-1]-β)
+                let ff = (fp.0[l] - alpha).max(hp.0[l] - beta);
+                // gather: score(query[i-1], residue in lane l)
+                let sub = unsafe { *row.get_unchecked(vec_db[l] as usize) };
+                let h = 0.max(h_diag.0[l] + sub).max(ee).max(ff);
+                ev.0[l] = ee;
+                fv.0[l] = ff;
+                hv.0[l] = h;
+                best.0[l] = best.0[l].max(h);
+            }
+            h_diag = hp;
+            unsafe {
+                *hs.get_unchecked_mut(i) = hv;
+                *fs.get_unchecked_mut(i) = fv;
+            }
+            h_up = hv;
+            e = ev;
+        }
+    }
+    best.0
+}
+
+/// InterSP: rebuild a score profile per window of 8 subject positions,
+/// inner loop is pure contiguous vector loads.
+fn align_sp(
+    query: &[u8],
+    profile: &SequenceProfile,
+    sc: &Scoring,
+    ws: &mut Workspace,
+) -> [i32; LANES] {
+    let n = query.len();
+    if n == 0 {
+        return [0; LANES];
+    }
+    ws.prepare(n);
+    let alpha = sc.gap_extend;
+    let beta = sc.beta();
+    let mut best = Lanes::splat(0);
+    let mut j0 = 0;
+    if ws.sp.len() < crate::alphabet::ROW * SCORE_PROFILE_N * LANES {
+        ws.sp.resize(crate::alphabet::ROW * SCORE_PROFILE_N * LANES, 0);
+    }
+    while j0 < profile.padded_len {
+        let width = SCORE_PROFILE_N.min(profile.padded_len - j0);
+        // the InterSP trade: this rebuild costs Σ×N×16 stores per window
+        // (into a reusable scratch — no allocation on the hot path)…
+        build_score_profile_into(profile, j0, width, sc, &mut ws.sp);
+        // …and buys a gather-free inner loop below
+        for w in 0..width {
+            let mut e = Lanes::splat(NEG);
+            let mut h_up = Lanes::splat(0);
+            let mut h_diag = Lanes::splat(0);
+            let hs = &mut ws.h[..n + 1];
+            let fs = &mut ws.f[..n + 1];
+            for i in 1..=n {
+                let base = (query[i - 1] as usize * SCORE_PROFILE_N + w) * LANES;
+                let subs = unsafe { ws.sp.get_unchecked(base..base + LANES) };
+                let hp = unsafe { *hs.get_unchecked(i) };
+                let fp = unsafe { *fs.get_unchecked(i) };
+                let mut hv = Lanes::splat(0);
+                let mut fv = Lanes::splat(0);
+                let mut ev = Lanes::splat(0);
+                for l in 0..LANES {
+                    let ee = (e.0[l] - alpha).max(h_up.0[l] - beta);
+                    let ff = (fp.0[l] - alpha).max(hp.0[l] - beta);
+                    let h = 0.max(h_diag.0[l] + subs[l]).max(ee).max(ff);
+                    ev.0[l] = ee;
+                    fv.0[l] = ff;
+                    hv.0[l] = h;
+                    best.0[l] = best.0[l].max(h);
+                }
+                h_diag = hp;
+                unsafe {
+                    *hs.get_unchecked_mut(i) = hv;
+                    *fs.get_unchecked_mut(i) = fv;
+                }
+                h_up = hv;
+                e = ev;
+            }
+        }
+        j0 += width;
+    }
+    best.0
+}
+
+/// Build a score-profile window into a reusable scratch buffer (layout
+/// identical to [`ScoreProfile`], rows limited to the 24 real residue
+/// codes — padded query codes never occur in native queries).
+fn build_score_profile_into(
+    profile: &SequenceProfile,
+    j0: usize,
+    width: usize,
+    sc: &Scoring,
+    out: &mut [i32],
+) {
+    debug_assert!(width <= SCORE_PROFILE_N);
+    for r in 0..crate::alphabet::ALPHA as u8 {
+        let row = sc.row(r);
+        for w in 0..width {
+            let vec = profile.vector(j0 + w);
+            let base = (r as usize * SCORE_PROFILE_N + w) * LANES;
+            for lane in 0..LANES {
+                out[base + lane] = unsafe { *row.get_unchecked(vec[lane] as usize) };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::align::scalar::sw_score;
+    use crate::db::synth::{rand_seq, random_codes};
+    use crate::util::check::{check, prop_eq};
+
+    fn sc() -> Scoring {
+        Scoring::swaphi_default()
+    }
+
+    fn run(variant: InterVariant, query: &[u8], seqs: &[Vec<u8>]) -> Vec<i32> {
+        let s = sc();
+        let refs: Vec<(usize, &[u8])> =
+            seqs.iter().enumerate().map(|(i, x)| (i, x.as_slice())).collect();
+        let profile = SequenceProfile::pack(&refs);
+        let qp = QueryProfile::build(query, &s);
+        let mut ws = Workspace::new();
+        let lanes = align_profile(variant, query, &qp, &profile, &s, &mut ws);
+        lanes[..seqs.len()].to_vec()
+    }
+
+    #[test]
+    fn qp_matches_scalar_on_random_profiles() {
+        check("inter-qp == scalar", 40, |rng| {
+            let q = rand_seq(rng, 1, 50);
+            let k = rng.range(1, 16);
+            let seqs: Vec<Vec<u8>> =
+                (0..k).map(|_| rand_seq(rng, 1, 70)).collect();
+            let got = run(InterVariant::QueryProfile, &q, &seqs);
+            let s = sc();
+            for (i, d) in seqs.iter().enumerate() {
+                prop_eq(got[i], sw_score(&q, d, &s), &format!("lane {i}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sp_matches_scalar_on_random_profiles() {
+        check("inter-sp == scalar", 40, |rng| {
+            let q = rand_seq(rng, 1, 50);
+            let k = rng.range(1, 16);
+            let seqs: Vec<Vec<u8>> =
+                (0..k).map(|_| rand_seq(rng, 1, 70)).collect();
+            let got = run(InterVariant::ScoreProfile, &q, &seqs);
+            let s = sc();
+            for (i, d) in seqs.iter().enumerate() {
+                prop_eq(got[i], sw_score(&q, d, &s), &format!("lane {i}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn variants_agree_with_each_other() {
+        check("inter-qp == inter-sp", 30, |rng| {
+            let q = rand_seq(rng, 1, 64);
+            let seqs: Vec<Vec<u8>> =
+                (0..16).map(|_| rand_seq(rng, 1, 90)).collect();
+            let a = run(InterVariant::QueryProfile, &q, &seqs);
+            let b = run(InterVariant::ScoreProfile, &q, &seqs);
+            prop_eq(a, b, "variant scores")
+        });
+    }
+
+    #[test]
+    fn full_16_lane_profile() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let q = random_codes(&mut rng, 33);
+        let seqs: Vec<Vec<u8>> =
+            (0..16).map(|i| random_codes(&mut rng, 10 + 5 * i)).collect();
+        let got = run(InterVariant::QueryProfile, &q, &seqs);
+        let s = sc();
+        for (i, d) in seqs.iter().enumerate() {
+            assert_eq!(got[i], sw_score(&q, d, &s), "lane {i}");
+        }
+    }
+
+    #[test]
+    fn unused_lanes_score_zero() {
+        let mut rng = crate::util::rng::Rng::new(6);
+        let q = random_codes(&mut rng, 20);
+        let d = random_codes(&mut rng, 30);
+        let s = sc();
+        let profile = SequenceProfile::pack(&[(0, d.as_slice())]);
+        let qp = QueryProfile::build(&q, &s);
+        let mut ws = Workspace::new();
+        let lanes =
+            align_profile(InterVariant::QueryProfile, &q, &qp, &profile, &s, &mut ws);
+        assert!(lanes[1..].iter().all(|&v| v == 0), "{lanes:?}");
+    }
+
+    #[test]
+    fn workspace_reuse_across_different_lengths() {
+        // growing then shrinking query lengths must not leak state
+        let mut rng = crate::util::rng::Rng::new(7);
+        let s = sc();
+        let mut ws = Workspace::new();
+        for qlen in [40usize, 10, 25, 3, 60, 1] {
+            let q = random_codes(&mut rng, qlen);
+            let d = random_codes(&mut rng, 37);
+            let profile = SequenceProfile::pack(&[(0, d.as_slice())]);
+            let qp = QueryProfile::build(&q, &s);
+            let lanes =
+                align_profile(InterVariant::ScoreProfile, &q, &qp, &profile, &s, &mut ws);
+            assert_eq!(lanes[0], sw_score(&q, &d, &s), "qlen {qlen}");
+        }
+    }
+
+    #[test]
+    fn empty_query_scores_zero() {
+        let d = vec![1u8, 2, 3];
+        let got = run(InterVariant::QueryProfile, &[], &[d]);
+        assert_eq!(got, vec![0]);
+    }
+
+    #[test]
+    fn works_with_other_matrices_and_gaps() {
+        check("inter engines across schemes", 20, |rng| {
+            let q = rand_seq(rng, 1, 40);
+            let d = rand_seq(rng, 1, 60);
+            let name = *rng.choose(&crate::matrices::MATRIX_NAMES);
+            let open = rng.range(5, 15) as i32;
+            let ext = rng.range(1, 3) as i32;
+            let s = Scoring::new(name, open, ext).unwrap();
+            let profile = SequenceProfile::pack(&[(0, d.as_slice())]);
+            let qp = QueryProfile::build(&q, &s);
+            let mut ws = Workspace::new();
+            let a = align_profile(InterVariant::QueryProfile, &q, &qp, &profile, &s, &mut ws);
+            let b = align_profile(InterVariant::ScoreProfile, &q, &qp, &profile, &s, &mut ws);
+            prop_eq(a[0], sw_score(&q, &d, &s), "qp vs scalar")?;
+            prop_eq(b[0], sw_score(&q, &d, &s), "sp vs scalar")
+        });
+    }
+}

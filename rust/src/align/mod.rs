@@ -1,0 +1,241 @@
+//! Alignment engines.
+//!
+//! Every engine consumes a [`QueryContext`] (pre-built per query — query
+//! profile, striped profile; paper Fig 2 stage i) and scores one
+//! [`SequenceProfile`] at a time through the [`ProfileAligner`] trait, so
+//! the coordinator can drive native Rust engines, the PJRT-artifact
+//! backend, and test oracles interchangeably.
+
+pub mod inter;
+pub mod scalar;
+pub mod striped;
+
+use crate::db::index::Index;
+use crate::db::profile::{QueryProfile, SequenceProfile, StripedProfile, LANES};
+use crate::matrices::Scoring;
+
+/// The paper's three SWAPHI variants plus the scalar oracle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EngineKind {
+    /// Inter-sequence model with score profile (InterSP) — paper default.
+    InterSP,
+    /// Inter-sequence model with query profile (InterQP).
+    InterQP,
+    /// Intra-sequence striped model with query profile (IntraQP).
+    IntraQP,
+    /// Scalar golden model (oracle; not a paper variant).
+    Scalar,
+}
+
+impl EngineKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::InterSP => "InterSP",
+            EngineKind::InterQP => "InterQP",
+            EngineKind::IntraQP => "IntraQP",
+            EngineKind::Scalar => "Scalar",
+        }
+    }
+
+    /// Parse from CLI spelling.
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "intersp" | "inter-sp" | "sp" => Some(EngineKind::InterSP),
+            "interqp" | "inter-qp" | "qp" => Some(EngineKind::InterQP),
+            "intraqp" | "intra-qp" | "striped" | "intra" => Some(EngineKind::IntraQP),
+            "scalar" => Some(EngineKind::Scalar),
+            _ => None,
+        }
+    }
+
+    /// All paper variants (the Fig 5 sweep).
+    pub const PAPER_VARIANTS: [EngineKind; 3] =
+        [EngineKind::InterSP, EngineKind::InterQP, EngineKind::IntraQP];
+}
+
+/// Pre-built per-query state shared by all engines.
+pub struct QueryContext {
+    pub id: String,
+    pub codes: Vec<u8>,
+    pub qp: QueryProfile,
+    pub striped: StripedProfile,
+}
+
+impl QueryContext {
+    pub fn build(id: impl Into<String>, codes: Vec<u8>, sc: &Scoring) -> Self {
+        assert!(!codes.is_empty(), "empty query");
+        let qp = QueryProfile::build(&codes, sc);
+        let striped = StripedProfile::build(&codes, sc);
+        QueryContext { id: id.into(), codes, qp, striped }
+    }
+
+    pub fn len(&self) -> usize {
+        self.codes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.codes.is_empty()
+    }
+}
+
+/// A (stateful, per-thread) profile aligner.
+///
+/// Deliberately NOT `Send`: the PJRT client types are single-threaded, so
+/// the coordinator gives every host thread its own aligner via
+/// [`crate::coordinator::AlignerFactory`] — exactly the paper's
+/// one-host-thread-per-coprocessor ownership model.
+pub trait ProfileAligner {
+    fn name(&self) -> &'static str;
+
+    /// Optimal local score of the query vs each lane of `profile`.
+    fn align(
+        &mut self,
+        ctx: &QueryContext,
+        profile: &SequenceProfile,
+        sc: &Scoring,
+    ) -> [i32; LANES];
+}
+
+/// Native (CPU) aligner over the Rust engines.
+pub struct NativeAligner {
+    kind: EngineKind,
+    ws: inter::Workspace,
+    sws: striped::StripedWorkspace,
+}
+
+impl NativeAligner {
+    pub fn new(kind: EngineKind) -> Self {
+        NativeAligner { kind, ws: inter::Workspace::new(), sws: striped::StripedWorkspace::new() }
+    }
+}
+
+impl ProfileAligner for NativeAligner {
+    fn name(&self) -> &'static str {
+        self.kind.name()
+    }
+
+    fn align(
+        &mut self,
+        ctx: &QueryContext,
+        profile: &SequenceProfile,
+        sc: &Scoring,
+    ) -> [i32; LANES] {
+        match self.kind {
+            EngineKind::InterSP => inter::align_profile(
+                inter::InterVariant::ScoreProfile,
+                &ctx.codes,
+                &ctx.qp,
+                profile,
+                sc,
+                &mut self.ws,
+            ),
+            EngineKind::InterQP => inter::align_profile(
+                inter::InterVariant::QueryProfile,
+                &ctx.codes,
+                &ctx.qp,
+                profile,
+                sc,
+                &mut self.ws,
+            ),
+            EngineKind::IntraQP => {
+                // intra-sequence model: one alignment per (lane) sequence
+                let mut out = [0i32; LANES];
+                for lane in 0..profile.used {
+                    let len = profile.lens[lane];
+                    let subject: Vec<u8> =
+                        (0..len).map(|j| profile.vector(j)[lane]).collect();
+                    out[lane] = striped::align_striped(&ctx.striped, &subject, sc, &mut self.sws);
+                }
+                out
+            }
+            EngineKind::Scalar => {
+                let mut out = [0i32; LANES];
+                for lane in 0..profile.used {
+                    let len = profile.lens[lane];
+                    let subject: Vec<u8> =
+                        (0..len).map(|j| profile.vector(j)[lane]).collect();
+                    out[lane] = scalar::sw_score(&ctx.codes, &subject, sc);
+                }
+                out
+            }
+        }
+    }
+}
+
+/// Convenience: score every sequence of an index with one aligner
+/// (single-threaded; the coordinator parallelizes across chunks).
+pub fn search_index(
+    aligner: &mut dyn ProfileAligner,
+    ctx: &QueryContext,
+    index: &Index,
+    sc: &Scoring,
+) -> Vec<i32> {
+    let mut scores = vec![0i32; index.n_seqs()];
+    for profile in &index.profiles {
+        let lanes = aligner.align(ctx, profile, sc);
+        for lane in 0..profile.used {
+            scores[profile.members[lane]] = lanes[lane];
+        }
+    }
+    scores
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::synth::{generate, SynthSpec};
+
+    fn setup() -> (Index, Scoring, QueryContext) {
+        let db = generate(&SynthSpec::tiny(60, 21));
+        let idx = Index::build(db);
+        let sc = Scoring::swaphi_default();
+        let q = crate::db::synth::generate_query(37, 4);
+        let ctx = QueryContext::build("q", q, &sc);
+        (idx, sc, ctx)
+    }
+
+    #[test]
+    fn all_engines_agree_on_index_search() {
+        let (idx, sc, ctx) = setup();
+        let mut oracle = NativeAligner::new(EngineKind::Scalar);
+        let expect = search_index(&mut oracle, &ctx, &idx, &sc);
+        for kind in EngineKind::PAPER_VARIANTS {
+            let mut eng = NativeAligner::new(kind);
+            let got = search_index(&mut eng, &ctx, &idx, &sc);
+            assert_eq!(got, expect, "{:?}", kind);
+        }
+    }
+
+    #[test]
+    fn engine_kind_parsing() {
+        assert_eq!(EngineKind::parse("intersp"), Some(EngineKind::InterSP));
+        assert_eq!(EngineKind::parse("SP"), Some(EngineKind::InterSP));
+        assert_eq!(EngineKind::parse("inter-qp"), Some(EngineKind::InterQP));
+        assert_eq!(EngineKind::parse("striped"), Some(EngineKind::IntraQP));
+        assert_eq!(EngineKind::parse("scalar"), Some(EngineKind::Scalar));
+        assert_eq!(EngineKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn scores_indexed_by_sorted_position() {
+        let (idx, sc, ctx) = setup();
+        let mut eng = NativeAligner::new(EngineKind::InterSP);
+        let scores = search_index(&mut eng, &ctx, &idx, &sc);
+        assert_eq!(scores.len(), idx.n_seqs());
+        // cross-check a few positions directly against scalar
+        for i in [0usize, 7, 23, idx.n_seqs() - 1] {
+            let expect = scalar::sw_score(&ctx.codes, &idx.seqs[i].codes, &sc);
+            assert_eq!(scores[i], expect, "seq {i}");
+        }
+    }
+
+    #[test]
+    fn query_context_builds_profiles() {
+        let sc = Scoring::swaphi_default();
+        let ctx = QueryContext::build("x", vec![0, 1, 2, 3, 4], &sc);
+        assert_eq!(ctx.len(), 5);
+        assert_eq!(ctx.qp.qlen, 5);
+        assert_eq!(ctx.striped.qlen, 5);
+        assert_eq!(ctx.striped.stripes, 1);
+    }
+}

@@ -1,0 +1,225 @@
+//! Scalar Smith-Waterman with affine gaps — the golden oracle.
+//!
+//! Direct implementation of the paper's recurrence (Eq. 1), linear space:
+//!
+//! ```text
+//! H[i,j] = max(0, H[i-1,j-1] + s(q_i, d_j), E[i,j], F[i,j])
+//! E[i,j] = max(E[i-1,j] − α, H[i-1,j] − β)      (gap in the subject)
+//! F[i,j] = max(F[i,j-1] − α, H[i,j-1] − β)      (gap in the query)
+//! ```
+//!
+//! with α = gap-extend, β = gap-open + gap-extend, borders
+//! `H[i,0] = H[0,j] = F[i,0] = 0` and E/F borders at −∞. Every vectorized
+//! engine (Rust and Pallas) is required to reproduce these scores exactly.
+
+use crate::matrices::Scoring;
+
+/// "−∞" that survives a few subtractions without wrapping.
+pub const NEG: i32 = i32::MIN / 4;
+
+/// Optimal local alignment score of `query` vs `subject` (encoded codes).
+pub fn sw_score(query: &[u8], subject: &[u8], sc: &Scoring) -> i32 {
+    let n = query.len();
+    if n == 0 || subject.is_empty() {
+        return 0;
+    }
+    let alpha = sc.gap_extend;
+    let beta = sc.beta();
+    // hprev[i] = H[i][j-1]; fprev[i] = F[i][j-1]
+    let mut hprev = vec![0i32; n + 1];
+    let mut fprev = vec![NEG; n + 1];
+    let mut best = 0i32;
+    for &dj in subject {
+        let row = sc.row(dj);
+        let mut e = NEG; // E[0][j]
+        let mut h_up = 0i32; // H[i-1][j], starts at H[0][j] = 0
+        let mut h_diag = 0i32; // H[i-1][j-1], starts at H[0][j-1] = 0
+        for i in 1..=n {
+            e = (e - alpha).max(h_up - beta);
+            let f = (fprev[i] - alpha).max(hprev[i] - beta);
+            let sub = row[query[i - 1] as usize];
+            let h = 0.max(h_diag + sub).max(e).max(f);
+            h_diag = hprev[i];
+            hprev[i] = h;
+            h_up = h;
+            fprev[i] = f;
+            if h > best {
+                best = h;
+            }
+        }
+    }
+    best
+}
+
+/// Full-matrix reference (quadratic memory) — used only by tests to
+/// cross-validate the linear-space implementation.
+pub fn sw_score_full_matrix(query: &[u8], subject: &[u8], sc: &Scoring) -> i32 {
+    let n = query.len();
+    let m = subject.len();
+    if n == 0 || m == 0 {
+        return 0;
+    }
+    let alpha = sc.gap_extend;
+    let beta = sc.beta();
+    let mut h = vec![vec![0i32; m + 1]; n + 1];
+    let mut e = vec![vec![NEG; m + 1]; n + 1];
+    let mut f = vec![vec![NEG; m + 1]; n + 1];
+    let mut best = 0;
+    for i in 1..=n {
+        for j in 1..=m {
+            e[i][j] = (e[i - 1][j] - alpha).max(h[i - 1][j] - beta);
+            f[i][j] = (f[i][j - 1] - alpha).max(h[i][j - 1] - beta);
+            let sub = sc.score(query[i - 1], subject[j - 1]);
+            h[i][j] = 0.max(h[i - 1][j - 1] + sub).max(e[i][j]).max(f[i][j]);
+            best = best.max(h[i][j]);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alphabet::{encode, DUMMY};
+    use crate::db::synth::{rand_seq, random_codes};
+    use crate::util::check::{check, prop_eq};
+    use crate::util::rng::Rng;
+
+    fn sc() -> Scoring {
+        Scoring::swaphi_default()
+    }
+
+    #[test]
+    fn identical_sequences_score_sum_of_diagonal() {
+        let q = encode(b"ARNDCQEGHILKMFPSTWYV");
+        let s = sc();
+        let expect: i32 = q.iter().map(|&c| s.score(c, c)).sum();
+        assert_eq!(sw_score(&q, &q, &s), expect);
+    }
+
+    #[test]
+    fn empty_inputs_zero() {
+        let q = encode(b"ARN");
+        assert_eq!(sw_score(&q, &[], &sc()), 0);
+        assert_eq!(sw_score(&[], &q, &sc()), 0);
+    }
+
+    #[test]
+    fn known_small_alignment() {
+        // q = "AW", s = "AW": 4 + 11
+        let s = sc();
+        assert_eq!(sw_score(&encode(b"AW"), &encode(b"AW"), &s), 15);
+        // mismatch only: best single residue match
+        assert_eq!(sw_score(&encode(b"A"), &encode(b"W"), &s), 0); // A vs W = -3 -> 0
+        assert_eq!(sw_score(&encode(b"W"), &encode(b"W"), &s), 11);
+    }
+
+    #[test]
+    fn gap_is_taken_when_cheaper() {
+        // query AWWA vs subject AWXWA-ish: deleting one residue should
+        // beat mismatching if the matrix says so. Use a crafted case:
+        // q=AAWW s=AAXWW ; with gap 10+2 the gap path scores
+        // 4+4-12+11+11 = 18; the no-gap path shifts alignment.
+        let s = sc();
+        let q = encode(b"AAWW");
+        let d = encode(b"AACWW");
+        let score = sw_score(&q, &d, &s);
+        assert!(score >= 18, "score {score}");
+    }
+
+    #[test]
+    fn local_alignment_ignores_bad_prefix() {
+        let s = sc();
+        let q = encode(b"WWWW");
+        let d = encode(b"CCCCCCWWWWCCCCC");
+        assert_eq!(sw_score(&q, &d, &s), 44);
+    }
+
+    #[test]
+    fn dummy_padding_never_changes_score() {
+        let s = sc();
+        let mut rng = Rng::new(123);
+        for _ in 0..20 {
+            let q = rand_seq(&mut rng, 1, 40);
+            let d = rand_seq(&mut rng, 1, 60);
+            let base = sw_score(&q, &d, &s);
+            let mut qp = q.clone();
+            qp.extend(std::iter::repeat(DUMMY).take(9));
+            let mut dp = d.clone();
+            dp.extend(std::iter::repeat(DUMMY).take(17));
+            assert_eq!(sw_score(&qp, &dp, &s), base);
+            assert_eq!(sw_score(&q, &dp, &s), base);
+            assert_eq!(sw_score(&qp, &d, &s), base);
+        }
+    }
+
+    #[test]
+    fn linear_space_matches_full_matrix() {
+        check("linear == full matrix", 150, |rng| {
+            let q = rand_seq(rng, 1, 48);
+            let d = rand_seq(rng, 1, 64);
+            let s = sc();
+            prop_eq(sw_score(&q, &d, &s), sw_score_full_matrix(&q, &d, &s), "score")
+        });
+    }
+
+    #[test]
+    fn score_symmetric_in_arguments() {
+        // SW score is symmetric when the matrix is symmetric
+        check("sw symmetric", 100, |rng| {
+            let q = rand_seq(rng, 1, 40);
+            let d = rand_seq(rng, 1, 40);
+            let s = sc();
+            prop_eq(sw_score(&q, &d, &s), sw_score(&d, &q, &s), "symmetry")
+        });
+    }
+
+    #[test]
+    fn score_bounded_by_perfect_self_match() {
+        check("sw bounded", 100, |rng| {
+            let q = rand_seq(rng, 1, 40);
+            let d = rand_seq(rng, 1, 60);
+            let s = sc();
+            let bound: i32 = q.iter().map(|&c| s.score(c, c)).sum();
+            let score = sw_score(&q, &d, &s);
+            if score < 0 {
+                return Err(format!("negative score {score}"));
+            }
+            if score > bound {
+                return Err(format!("score {score} exceeds self-match bound {bound}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn monotone_under_subject_extension() {
+        // appending residues to the subject can never lower the local score
+        check("sw monotone extension", 100, |rng| {
+            let q = rand_seq(rng, 1, 32);
+            let d = rand_seq(rng, 1, 48);
+            let extra = rand_seq(rng, 1, 16);
+            let s = sc();
+            let base = sw_score(&q, &d, &s);
+            let mut ext = d.clone();
+            ext.extend_from_slice(&extra);
+            let bigger = sw_score(&q, &ext, &s);
+            if bigger < base {
+                return Err(format!("{bigger} < {base} after extension"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn works_with_all_matrices() {
+        let mut rng = Rng::new(77);
+        let q = random_codes(&mut rng, 30);
+        let d = random_codes(&mut rng, 45);
+        for name in crate::matrices::MATRIX_NAMES {
+            let s = Scoring::new(name, 10, 2).unwrap();
+            let got = sw_score(&q, &d, &s);
+            assert_eq!(got, sw_score_full_matrix(&q, &d, &s), "{name}");
+        }
+    }
+}

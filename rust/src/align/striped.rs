@@ -1,0 +1,250 @@
+//! Intra-sequence striped Smith-Waterman (paper §III.C) — Farrar's
+//! striped layout with the lazy-F correction loop, one alignment per call,
+//! vectorized along the query.
+//!
+//! Query position `i = v·S + s` lives in stripe `s`, lane `v`
+//! (`S = ⌈Q/16⌉` stripes). Adjacent DP cells land in different vectors, so
+//! the vertical (query-direction) gap dependency F only crosses vector
+//! boundaries once per column wrap — handled by the speculative main pass
+//! plus the lazy-F fix-up loop, exactly as the paper implements with
+//! `_mm512_mask_permutevar_epi32` shifts and
+//! `_mm512_cmpgt_epi32_mask` predicates (Table 1).
+//!
+//! We use `i32` lanes (like the paper — "each SIMD vector lane occupies 32
+//! bits ... we merely need to ensure that all scores are always
+//! non-negative", their `_mm512_max_epi32` trick is our `max(0, ·)`), and
+//! additionally re-tighten E during lazy-F — a known rare-case fix to
+//! Farrar's original pseudo-code, validated against the scalar oracle.
+
+use super::scalar::NEG;
+use crate::db::profile::{StripedProfile, LANES};
+use crate::matrices::Scoring;
+
+/// Reusable striped DP state (per-thread, pre-allocated — paper §III.A).
+#[derive(Default)]
+pub struct StripedWorkspace {
+    h_store: Vec<[i32; LANES]>,
+    h_load: Vec<[i32; LANES]>,
+    e: Vec<[i32; LANES]>,
+}
+
+impl StripedWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn prepare(&mut self, stripes: usize) {
+        if self.h_store.len() < stripes {
+            self.h_store.resize(stripes, [0; LANES]);
+            self.h_load.resize(stripes, [0; LANES]);
+            self.e.resize(stripes, [NEG; LANES]);
+        }
+        for v in &mut self.h_store[..stripes] {
+            *v = [0; LANES];
+        }
+        for v in &mut self.h_load[..stripes] {
+            *v = [0; LANES];
+        }
+        for v in &mut self.e[..stripes] {
+            *v = [NEG; LANES];
+        }
+    }
+}
+
+/// Shift a vector "up" one lane (lane v takes lane v−1; lane 0 gets
+/// `fill`) — the cross-stripe carry of the striped layout.
+#[inline(always)]
+fn shift_in(v: &[i32; LANES], fill: i32) -> [i32; LANES] {
+    let mut out = [fill; LANES];
+    out[1..LANES].copy_from_slice(&v[..LANES - 1]);
+    out
+}
+
+/// Optimal local score of the striped-profile query vs `subject`.
+pub fn align_striped(
+    profile: &StripedProfile,
+    subject: &[u8],
+    sc: &Scoring,
+    ws: &mut StripedWorkspace,
+) -> i32 {
+    let stripes = profile.stripes;
+    if profile.qlen == 0 || subject.is_empty() {
+        return 0;
+    }
+    let alpha = sc.gap_extend;
+    let beta = sc.beta();
+    ws.prepare(stripes);
+    let mut best = [0i32; LANES];
+
+    for &r in subject {
+        // H[i-1][j-1] seed for stripe 0 comes from the last stripe of the
+        // previous column, shifted across lanes (border H[-1][j-1] = 0).
+        let mut h_diag = shift_in(&ws.h_store[stripes - 1], 0);
+        std::mem::swap(&mut ws.h_store, &mut ws.h_load);
+        let mut f = [NEG; LANES];
+
+        for s in 0..stripes {
+            let subs = profile.vector(r, s);
+            // SAFETY: prepare() sized all stripe arrays to `stripes`
+            let e = unsafe { ws.e.get_unchecked_mut(s) };
+            let mut h = [0i32; LANES];
+            for l in 0..LANES {
+                let hv = 0.max(h_diag[l] + subs[l]).max(e[l]).max(f[l]);
+                h[l] = hv;
+                best[l] = best[l].max(hv);
+                // next-column E and within-column (speculative) F
+                e[l] = (e[l] - alpha).max(hv - beta);
+                f[l] = (f[l] - alpha).max(hv - beta);
+            }
+            h_diag = unsafe { *ws.h_load.get_unchecked(s) };
+            unsafe {
+                *ws.h_store.get_unchecked_mut(s) = h;
+            }
+        }
+
+        // Lazy-F: propagate F across the stripe wrap until it can no
+        // longer raise any H. Terminates because f strictly decays by α
+        // per stripe step.
+        let mut f = shift_in(&f, NEG);
+        'lazy: loop {
+            for s in 0..stripes {
+                let h = &mut ws.h_store[s];
+                let e = &mut ws.e[s];
+                let mut any = false;
+                for l in 0..LANES {
+                    if f[l] > h[l] {
+                        h[l] = f[l];
+                        if f[l] > best[l] {
+                            best[l] = f[l];
+                        }
+                        // re-tighten E from the corrected H (rare-case fix)
+                        e[l] = e[l].max(f[l] - beta);
+                        any = true;
+                    }
+                    f[l] -= alpha;
+                }
+                if !any && f.iter().all(|&x| x <= 0) {
+                    break 'lazy;
+                }
+            }
+            f = shift_in(&f, NEG);
+            if f.iter().all(|&x| x <= 0) {
+                break;
+            }
+        }
+    }
+    *best.iter().max().expect("non-empty lanes")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::align::scalar::sw_score;
+    use crate::db::synth::{rand_seq, random_codes};
+    use crate::util::check::{check, prop_eq};
+    use crate::util::rng::Rng;
+
+    fn sc() -> Scoring {
+        Scoring::swaphi_default()
+    }
+
+    fn striped(query: &[u8], subject: &[u8], s: &Scoring) -> i32 {
+        let profile = StripedProfile::build(query, s);
+        let mut ws = StripedWorkspace::new();
+        align_striped(&profile, subject, s, &mut ws)
+    }
+
+    #[test]
+    fn matches_scalar_small() {
+        let s = sc();
+        let q = crate::alphabet::encode(b"ARNDCQEGHILKMFPSTWYV");
+        let d = crate::alphabet::encode(b"ARNDCQEGHILKMFPSTWYV");
+        assert_eq!(striped(&q, &d, &s), sw_score(&q, &d, &s));
+    }
+
+    #[test]
+    fn matches_scalar_on_random_pairs() {
+        check("striped == scalar", 120, |rng| {
+            let q = rand_seq(rng, 1, 80);
+            let d = rand_seq(rng, 1, 100);
+            let s = sc();
+            prop_eq(striped(&q, &d, &s), sw_score(&q, &d, &s), "score")
+        });
+    }
+
+    #[test]
+    fn matches_scalar_gap_heavy_schemes() {
+        // small gap penalties stress the lazy-F loop hardest
+        check("striped == scalar, cheap gaps", 80, |rng| {
+            let q = rand_seq(rng, 1, 60);
+            let d = rand_seq(rng, 1, 80);
+            let open = rng.range(1, 12) as i32;
+            let ext = rng.range(1, 3) as i32;
+            let s = Scoring::new("BLOSUM62", open, ext).unwrap();
+            prop_eq(striped(&q, &d, &s), sw_score(&q, &d, &s), "score")
+        });
+    }
+
+    #[test]
+    fn exact_multiple_of_lane_count() {
+        let mut rng = Rng::new(8);
+        let s = sc();
+        for qlen in [16usize, 32, 48, 64] {
+            let q = random_codes(&mut rng, qlen);
+            let d = random_codes(&mut rng, 50);
+            assert_eq!(striped(&q, &d, &s), sw_score(&q, &d, &s), "qlen {qlen}");
+        }
+    }
+
+    #[test]
+    fn single_residue_query() {
+        let mut rng = Rng::new(9);
+        let s = sc();
+        let q = random_codes(&mut rng, 1);
+        let d = random_codes(&mut rng, 40);
+        assert_eq!(striped(&q, &d, &s), sw_score(&q, &d, &s));
+    }
+
+    #[test]
+    fn long_gap_propagation_across_stripes() {
+        // construct a case where one high-scoring match must propagate a
+        // gap across many stripes: query has W at both ends, subject has
+        // the two Ws adjacent
+        let s = sc();
+        let mut q = vec![0u8; 70]; // alanines
+        q[0] = 17; // W
+        q[69] = 17; // W
+        let d = crate::alphabet::encode(b"WW");
+        assert_eq!(striped(&q, &d, &s), sw_score(&q, &d, &s));
+    }
+
+    #[test]
+    fn workspace_reuse_between_subjects() {
+        let mut rng = Rng::new(10);
+        let s = sc();
+        let q = random_codes(&mut rng, 45);
+        let profile = StripedProfile::build(&q, &s);
+        let mut ws = StripedWorkspace::new();
+        for _ in 0..10 {
+            let d = rand_seq(&mut rng, 1, 60);
+            assert_eq!(align_striped(&profile, &d, &s, &mut ws), sw_score(&q, &d, &s));
+        }
+    }
+
+    #[test]
+    fn empty_subject_zero() {
+        let s = sc();
+        let q = random_codes(&mut Rng::new(3), 20);
+        assert_eq!(striped(&q, &[], &s), 0);
+    }
+
+    #[test]
+    fn pam250_agrees() {
+        check("striped pam250", 40, |rng| {
+            let q = rand_seq(rng, 1, 50);
+            let d = rand_seq(rng, 1, 70);
+            let s = Scoring::new("PAM250", 12, 2).unwrap();
+            prop_eq(striped(&q, &d, &s), sw_score(&q, &d, &s), "score")
+        });
+    }
+}

@@ -1,0 +1,191 @@
+//! Amino-acid alphabet and sequence encoding.
+//!
+//! The canonical SWAPHI encoding maps the 20 standard residues plus the
+//! ambiguity codes B, Z, X and the stop `*` to the integer codes `0..=23`,
+//! matching the row/column order of the NCBI scoring matrices in
+//! [`crate::matrices`]. Code [`DUMMY`] (= 24) is the *dummy residue* used
+//! for padding sequence profiles and queries: its substitution score
+//! against every residue (including itself) is defined to be zero, so a
+//! padded Smith-Waterman matrix can never produce a higher score than the
+//! unpadded one (see DESIGN.md §4 "Padding design"). This mirrors the
+//! dummy-residue padding of the paper's §III.B.1 sequence profiles.
+
+/// Number of real residue codes (standard 20 + B, Z, X, `*`).
+pub const ALPHA: usize = 24;
+
+/// The dummy/padding residue code. Substitution score 0 vs everything.
+pub const DUMMY: u8 = 24;
+
+/// Matrix row stride used everywhere: rows are padded to 32 entries so a
+/// row occupies a power-of-two span (the paper pads rows to 32 elements
+/// "for faster data loading from memory to vector registers"; we keep the
+/// same layout so the Rust engines and the Pallas kernels agree byte-for-
+/// byte on profile layouts).
+pub const ROW: usize = 32;
+
+/// Canonical residue order — identical to NCBI/BLOSUM order:
+/// `A R N D C Q E G H I L K M F P S T W Y V B Z X *`.
+pub const RESIDUES: [u8; ALPHA] = *b"ARNDCQEGHILKMFPSTWYVBZX*";
+
+/// Encode one ASCII residue letter to its code.
+///
+/// Unknown letters (and the ambiguity codes J, O, U) map to X (code 22),
+/// the standard behaviour of database-search tools. Returns `DUMMY` only
+/// for explicit padding requests, never from this function.
+#[inline]
+pub fn encode_residue(c: u8) -> u8 {
+    ENCODE_TABLE[c as usize]
+}
+
+/// Decode a residue code back to its ASCII letter. Dummy decodes to `-`.
+#[inline]
+pub fn decode_residue(code: u8) -> u8 {
+    if (code as usize) < ALPHA {
+        RESIDUES[code as usize]
+    } else {
+        b'-'
+    }
+}
+
+/// Encode an ASCII residue string into codes.
+pub fn encode(seq: &[u8]) -> Vec<u8> {
+    seq.iter().map(|&c| encode_residue(c)).collect()
+}
+
+/// Decode a code slice back into an ASCII string.
+pub fn decode(codes: &[u8]) -> Vec<u8> {
+    codes.iter().map(|&c| decode_residue(c)).collect()
+}
+
+/// Encode, appending dummy padding up to `padded_len`.
+pub fn encode_padded(seq: &[u8], padded_len: usize) -> Vec<u8> {
+    assert!(seq.len() <= padded_len, "sequence longer than padded_len");
+    let mut v = Vec::with_capacity(padded_len);
+    v.extend(seq.iter().map(|&c| encode_residue(c)));
+    v.resize(padded_len, DUMMY);
+    v
+}
+
+/// True if `c` is a letter that encodes to a *standard* residue
+/// (one of the 20 amino acids), i.e. not an ambiguity code.
+#[inline]
+pub fn is_standard(c: u8) -> bool {
+    let code = encode_residue(c);
+    code < 20
+}
+
+/// Background residue frequencies (Robinson & Robinson 1991), the standard
+/// composition used by BLAST statistics; used by the synthetic database
+/// generator so synthetic sequences have realistic substitution-score
+/// statistics. Indexed by residue code `0..20`; sums to 1.
+pub const ROBINSON_FREQS: [f64; 20] = [
+    0.07805, // A
+    0.05129, // R
+    0.04487, // N
+    0.05364, // D
+    0.01925, // C
+    0.04264, // Q
+    0.06295, // E
+    0.07377, // G
+    0.02199, // H
+    0.05142, // I
+    0.09019, // L
+    0.05744, // K
+    0.02243, // M
+    0.03856, // F
+    0.05203, // P
+    0.07120, // S
+    0.05841, // T
+    0.01330, // W
+    0.03216, // Y
+    0.06441, // V
+];
+
+const fn build_encode_table() -> [u8; 256] {
+    let mut t = [22u8; 256]; // default: X
+    let mut i = 0;
+    while i < ALPHA {
+        let c = RESIDUES[i];
+        t[c as usize] = i as u8;
+        // lower-case letters too
+        if c >= b'A' && c <= b'Z' {
+            t[(c + 32) as usize] = i as u8;
+        }
+        i += 1;
+    }
+    // J (Leu/Ile ambiguity), O (pyrrolysine), U (selenocysteine) -> X
+    t[b'J' as usize] = 22;
+    t[b'j' as usize] = 22;
+    t[b'O' as usize] = 22;
+    t[b'o' as usize] = 22;
+    t[b'U' as usize] = 22;
+    t[b'u' as usize] = 22;
+    t
+}
+
+static ENCODE_TABLE: [u8; 256] = build_encode_table();
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_canonical() {
+        for (i, &c) in RESIDUES.iter().enumerate() {
+            assert_eq!(encode_residue(c) as usize, i);
+            assert_eq!(decode_residue(i as u8), c);
+        }
+    }
+
+    #[test]
+    fn lowercase_encodes_like_uppercase() {
+        assert_eq!(encode_residue(b'a'), encode_residue(b'A'));
+        assert_eq!(encode_residue(b'w'), encode_residue(b'W'));
+        assert_eq!(encode_residue(b'v'), encode_residue(b'V'));
+    }
+
+    #[test]
+    fn unknown_maps_to_x() {
+        let x = encode_residue(b'X');
+        assert_eq!(encode_residue(b'1'), x);
+        assert_eq!(encode_residue(b'J'), x);
+        assert_eq!(encode_residue(b'U'), x);
+        assert_eq!(encode_residue(b' '), x);
+    }
+
+    #[test]
+    fn padding_encodes_dummy() {
+        let v = encode_padded(b"ARND", 8);
+        assert_eq!(v.len(), 8);
+        assert_eq!(&v[..4], &[0, 1, 2, 3]);
+        assert!(v[4..].iter().all(|&c| c == DUMMY));
+    }
+
+    #[test]
+    fn dummy_decodes_to_dash() {
+        assert_eq!(decode_residue(DUMMY), b'-');
+        assert_eq!(decode_residue(200), b'-');
+    }
+
+    #[test]
+    fn robinson_freqs_sum_to_one() {
+        let s: f64 = ROBINSON_FREQS.iter().sum();
+        assert!((s - 1.0).abs() < 1e-3, "sum {s}");
+    }
+
+    #[test]
+    fn standard_residue_classification() {
+        assert!(is_standard(b'A'));
+        assert!(is_standard(b'V'));
+        assert!(!is_standard(b'B'));
+        assert!(!is_standard(b'X'));
+        assert!(!is_standard(b'*'));
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_sequence() {
+        let seq = b"MKTAYIAKQRQISFVKSHFSRQLEERLGLIEVQ";
+        let codes = encode(seq);
+        assert_eq!(decode(&codes), seq.to_vec());
+    }
+}

@@ -1,0 +1,176 @@
+//! Benchmark harness substrate (criterion is not in the offline vendor
+//! set): warmup + repeated timing with median/MAD statistics, plus the
+//! aligned table printer every figure harness uses, so `cargo bench`
+//! regenerates each paper table/figure as labelled rows on stdout and a
+//! TSV next to it for plotting.
+
+pub mod workloads;
+
+use std::time::Instant;
+
+/// One timing measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct Sample {
+    pub seconds: f64,
+}
+
+/// Timing statistics over repeated runs.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub median: f64,
+    /// Median absolute deviation (robust spread).
+    pub mad: f64,
+    pub min: f64,
+    pub iters: usize,
+}
+
+/// Time `f` with `warmup` throwaway runs and `iters` measured runs.
+pub fn measure<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Stats {
+    assert!(iters >= 1);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        times.push(t.elapsed().as_secs_f64());
+    }
+    stats_of(&mut times)
+}
+
+fn stats_of(times: &mut [f64]) -> Stats {
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    let min = times[0];
+    let mut devs: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = devs[devs.len() / 2];
+    Stats { median, mad, min, iters: times.len() }
+}
+
+/// A labelled results table that prints aligned to stdout and can be
+/// dumped as TSV (for EXPERIMENTS.md and plotting).
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, columns: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.columns, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout and append TSV to `bench_results/<slug>.tsv`.
+    pub fn emit(&self, slug: &str) {
+        print!("{}", self.render());
+        let dir = std::path::Path::new("bench_results");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let mut tsv = String::new();
+            tsv.push_str(&self.columns.join("\t"));
+            tsv.push('\n');
+            for row in &self.rows {
+                tsv.push_str(&row.join("\t"));
+                tsv.push('\n');
+            }
+            let _ = std::fs::write(dir.join(format!("{slug}.tsv")), tsv);
+        }
+    }
+}
+
+/// Format a float with fixed decimals (table helper).
+pub fn f1(v: f64) -> String {
+    format!("{v:.1}")
+}
+
+pub fn f2(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+pub fn f3(v: f64) -> String {
+    format!("{v:.3}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_reports_positive_times() {
+        let s = measure(1, 5, || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(s.median > 0.0);
+        assert!(s.min <= s.median);
+        assert_eq!(s.iters, 5);
+        assert!(s.mad >= 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["name", "gcups"]);
+        t.row(&["InterSP".into(), "58.8".into()]);
+        t.row(&["IntraQP".into(), "45.6".into()]);
+        let text = t.render();
+        assert!(text.contains("== demo =="));
+        assert!(text.contains("InterSP"));
+        assert_eq!(text.lines().count(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn float_formatting() {
+        assert_eq!(f1(58.84), "58.8");
+        assert_eq!(f2(1.005), "1.00"); // round-to-even is fine
+        assert_eq!(f3(0.12345), "0.123");
+    }
+}

@@ -1,0 +1,233 @@
+//! Simplified BLAST+ (blastp) baseline substrate — the paper's Fig 7
+//! heuristic comparator.
+//!
+//! Pipeline per subject: 3-mer neighborhood seeding (threshold T) →
+//! two-hit diagonal filter → ungapped X-drop extension → gapped X-drop
+//! extension. Scores are a lower bound on exhaustive SW (heuristics
+//! trade sensitivity for speed); per-search statistics expose the visited
+//! cell counts that make BLAST's *effective* GCUPS enormously larger and
+//! query-dependent — the variance Fig 7 shows.
+
+pub mod extend;
+pub mod seed;
+
+use crate::matrices::Scoring;
+use extend::{gapped_extend, ungapped_extend, ExtendParams, Hsp};
+use seed::{two_hit_scan, SeedParams, WordIndex};
+
+/// Full blastp-like parameter set.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BlastParams {
+    pub seed: SeedParams,
+    pub extend: ExtendParams,
+    /// Two-hit window A (blastp default 40).
+    pub window: usize,
+}
+
+impl BlastParams {
+    pub fn blastp_defaults() -> Self {
+        BlastParams { seed: SeedParams::default(), extend: ExtendParams::default(), window: 40 }
+    }
+}
+
+/// Per-search statistics (the heuristic's work accounting).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BlastStats {
+    /// Word-index entries for the query.
+    pub index_entries: usize,
+    /// Word hits streamed through the diagonal filter (the seeding
+    /// work real BLAST spends most of its scan time on).
+    pub word_hits: u64,
+    /// Two-hit triggers examined.
+    pub triggers: u64,
+    /// Ungapped extensions run.
+    pub ungapped: u64,
+    /// Gapped extensions run.
+    pub gapped: u64,
+    /// DP cells actually visited (ungapped + gapped).
+    pub cells_visited: u64,
+}
+
+/// A query compiled for BLAST search (index built once, reused across
+/// the whole database — paper Fig 2's "construct query profile" stage,
+/// heuristic edition).
+pub struct BlastQuery {
+    pub index: WordIndex,
+    pub codes: Vec<u8>,
+    pub params: BlastParams,
+}
+
+impl BlastQuery {
+    pub fn build(codes: Vec<u8>, sc: &Scoring, params: BlastParams) -> Self {
+        let index = WordIndex::build(&codes, sc, params.seed);
+        BlastQuery { index, codes, params }
+    }
+
+    /// Best heuristic score of the query vs `subject` (0 if nothing
+    /// triggers — BLAST reports no hit).
+    pub fn score(
+        &self,
+        subject: &[u8],
+        sc: &Scoring,
+        stats: &mut BlastStats,
+        scratch: &mut Vec<i64>,
+    ) -> i32 {
+        stats.index_entries = self.index.entries;
+        let triggers =
+            two_hit_scan(&self.index, subject, self.params.window, scratch, &mut stats.word_hits);
+        stats.triggers += triggers.len() as u64;
+        let mut best = 0i32;
+        let mut best_hsp: Option<Hsp> = None;
+        for t in &triggers {
+            let hsp = ungapped_extend(
+                &self.codes,
+                subject,
+                t.qpos,
+                t.spos,
+                sc,
+                self.params.extend.x_ungapped,
+            );
+            stats.ungapped += 1;
+            stats.cells_visited += hsp.cells;
+            if hsp.score > best_hsp.map_or(0, |h| h.score) {
+                best_hsp = Some(hsp);
+            }
+            if hsp.score > best {
+                best = hsp.score;
+            }
+        }
+        // gapped pass on the best HSP only (blastp extends few HSPs; one
+        // is enough for best-score reporting)
+        if let Some(hsp) = best_hsp {
+            if hsp.score >= self.params.extend.gap_trigger {
+                let (g, cells) =
+                    gapped_extend(&self.codes, subject, &hsp, sc, self.params.extend);
+                stats.gapped += 1;
+                stats.cells_visited += cells;
+                best = best.max(g);
+            }
+        }
+        best
+    }
+}
+
+/// Search a whole database (sequence list), returning per-sequence scores
+/// and aggregate stats.
+pub fn blast_search(
+    query_codes: &[u8],
+    subjects: &[Vec<u8>],
+    sc: &Scoring,
+    params: BlastParams,
+) -> (Vec<i32>, BlastStats) {
+    let q = BlastQuery::build(query_codes.to_vec(), sc, params);
+    let mut stats = BlastStats::default();
+    let mut scratch = Vec::new();
+    let scores = subjects
+        .iter()
+        .map(|s| q.score(s, sc, &mut stats, &mut scratch))
+        .collect();
+    (scores, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::align::scalar::sw_score;
+    use crate::db::synth::{plant_homolog, rand_seq, random_codes};
+    use crate::util::check::{check, prop_assert};
+    use crate::util::rng::Rng;
+
+    fn sc() -> Scoring {
+        Scoring::blast_default()
+    }
+
+    #[test]
+    fn finds_identical_sequence() {
+        let mut rng = Rng::new(1);
+        let q = random_codes(&mut rng, 60);
+        let mut stats = BlastStats::default();
+        let mut scratch = Vec::new();
+        let bq = BlastQuery::build(q.clone(), &sc(), BlastParams::blastp_defaults());
+        let score = bq.score(&q, &sc(), &mut stats, &mut scratch);
+        let full = sw_score(&q, &q, &sc());
+        assert!(score > 0, "self-hit must trigger");
+        // self alignment is ungapped; X-drop finds (nearly) the optimum
+        assert!(score >= full * 9 / 10, "blast {score} vs sw {full}");
+    }
+
+    #[test]
+    fn never_exceeds_full_sw() {
+        check("blast <= sw", 60, |rng| {
+            let q = rand_seq(rng, 10, 80);
+            let d = rand_seq(rng, 10, 80);
+            let s = sc();
+            let (scores, _) = blast_search(&q, &[d.clone()], &s, BlastParams::blastp_defaults());
+            let full = sw_score(&q, &d, &s);
+            prop_assert(scores[0] <= full, format!("blast {} > sw {full}", scores[0]))
+        });
+    }
+
+    #[test]
+    fn misses_weak_homology_that_sw_finds() {
+        // heavily mutated planted homolog: SW always scores it; BLAST
+        // sometimes misses (that's the sensitivity gap the paper's intro
+        // motivates). We assert the *recall ordering* over a panel.
+        let s = sc();
+        let mut rng = Rng::new(7);
+        let motif = random_codes(&mut rng, 30);
+        let mut sw_hits = 0;
+        let mut blast_hits = 0;
+        let n = 40;
+        let thresh = 45;
+        for i in 0..n {
+            let mut host = random_codes(&mut rng, 200);
+            plant_homolog(&mut rng, &mut host, &motif, 0.45 + 0.01 * (i % 5) as f64);
+            if sw_score(&motif, &host, &s) >= thresh {
+                sw_hits += 1;
+            }
+            let (scores, _) =
+                blast_search(&motif, &[host], &s, BlastParams::blastp_defaults());
+            if scores[0] >= thresh {
+                blast_hits += 1;
+            }
+        }
+        assert!(blast_hits <= sw_hits, "blast {blast_hits} vs sw {sw_hits}");
+        assert!(sw_hits > 0);
+    }
+
+    #[test]
+    fn visits_far_fewer_cells_than_exhaustive() {
+        let mut rng = Rng::new(9);
+        let q = random_codes(&mut rng, 120);
+        let subjects: Vec<Vec<u8>> = (0..50).map(|_| random_codes(&mut rng, 250)).collect();
+        let total: u64 = subjects.iter().map(|s| (s.len() * q.len()) as u64).sum();
+        let (_, stats) = blast_search(&q, &subjects, &sc(), BlastParams::blastp_defaults());
+        assert!(
+            stats.cells_visited < total / 10,
+            "visited {} of {} cells",
+            stats.cells_visited,
+            total
+        );
+    }
+
+    #[test]
+    fn no_trigger_scores_zero() {
+        // a subject with no residues in any neighborhood word can't hit
+        let q = vec![17u8; 9]; // WWWWWWWWW
+        let d = vec![0u8; 50]; // all alanine; W/A = -3, no word reaches T
+        let (scores, stats) = blast_search(&q, &[d], &sc(), BlastParams::blastp_defaults());
+        assert_eq!(scores[0], 0);
+        assert_eq!(stats.gapped, 0);
+    }
+
+    #[test]
+    fn stats_accumulate_across_subjects() {
+        let mut rng = Rng::new(11);
+        let q = random_codes(&mut rng, 50);
+        let subjects: Vec<Vec<u8>> = (0..10).map(|_| q.clone()).collect();
+        let (scores, stats) = blast_search(&q, &subjects, &sc(), BlastParams::blastp_defaults());
+        assert!(scores.iter().all(|&s| s > 0));
+        assert!(stats.ungapped >= 10);
+        assert!(stats.cells_visited > 0);
+    }
+}

@@ -1,0 +1,257 @@
+//! BLAST word seeding: query 3-mer neighborhood index + subject scan.
+//!
+//! blastp builds, for each query position, the set of 3-letter words
+//! scoring ≥ T against the query's own 3-mer under the scoring matrix
+//! (the "neighborhood"), indexes them, then streams subject words through
+//! the index. We implement the same with a DFS over the word space with
+//! branch-and-bound pruning (prefix score + best possible remainder < T).
+
+use crate::matrices::Scoring;
+
+/// Word length (blastp default).
+pub const K: usize = 3;
+
+/// Number of indexable residues (the 24 real codes).
+const SIGMA: usize = 24;
+
+/// Packed code of a 3-mer.
+#[inline]
+pub fn pack(word: &[u8]) -> usize {
+    debug_assert_eq!(word.len(), K);
+    (word[0] as usize * SIGMA + word[1] as usize) * SIGMA + word[2] as usize
+}
+
+/// Seeding parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SeedParams {
+    /// Neighborhood score threshold T (blastp default 11 for BLOSUM62).
+    pub threshold: i32,
+}
+
+impl Default for SeedParams {
+    fn default() -> Self {
+        SeedParams { threshold: 11 }
+    }
+}
+
+/// Query word index: packed 3-mer -> query positions whose neighborhood
+/// contains it.
+pub struct WordIndex {
+    /// `buckets[code]` = list of query positions (start of the 3-mer).
+    buckets: Vec<Vec<u32>>,
+    /// Number of (word, position) entries (index size metric).
+    pub entries: usize,
+    pub qlen: usize,
+}
+
+impl WordIndex {
+    /// Build the neighborhood index for `query`.
+    pub fn build(query: &[u8], sc: &Scoring, params: SeedParams) -> WordIndex {
+        let mut buckets = vec![Vec::new(); SIGMA * SIGMA * SIGMA];
+        let mut entries = 0;
+        if query.len() >= K {
+            // per-position max substitution score for the bound
+            let max_for: Vec<i32> = (0..SIGMA as u8)
+                .map(|q| (0..SIGMA as u8).map(|w| sc.score(q, w)).max().unwrap())
+                .collect();
+            let mut word = [0u8; K];
+            for i in 0..=query.len() - K {
+                let qmer = &query[i..i + K];
+                if qmer.iter().any(|&c| c as usize >= SIGMA) {
+                    continue; // skip words containing padding
+                }
+                let bound1 = max_for[qmer[1] as usize] + max_for[qmer[2] as usize];
+                let bound2 = max_for[qmer[2] as usize];
+                // DFS over the 3 positions with pruning
+                for w0 in 0..SIGMA as u8 {
+                    let s0 = sc.score(qmer[0], w0);
+                    if s0 + bound1 < params.threshold {
+                        continue;
+                    }
+                    word[0] = w0;
+                    for w1 in 0..SIGMA as u8 {
+                        let s1 = s0 + sc.score(qmer[1], w1);
+                        if s1 + bound2 < params.threshold {
+                            continue;
+                        }
+                        word[1] = w1;
+                        for w2 in 0..SIGMA as u8 {
+                            if s1 + sc.score(qmer[2], w2) >= params.threshold {
+                                word[2] = w2;
+                                buckets[pack(&word)].push(i as u32);
+                                entries += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        WordIndex { buckets, entries, qlen: query.len() }
+    }
+
+    /// Query positions seeded by the subject word starting at `sj`.
+    #[inline]
+    pub fn hits(&self, word: &[u8]) -> &[u32] {
+        if word.iter().any(|&c| c as usize >= SIGMA) {
+            return &[];
+        }
+        &self.buckets[pack(word)]
+    }
+}
+
+/// A two-hit trigger: two non-overlapping word hits on the same diagonal
+/// within `window` — the classic blastp heuristic gate before extension.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SeedHit {
+    /// Query position of the *second* (triggering) hit.
+    pub qpos: usize,
+    /// Subject position of the triggering hit.
+    pub spos: usize,
+}
+
+/// Scan a subject against the index, returning two-hit triggers.
+///
+/// `last_hit[diag]` tracks the end of the previous hit per diagonal
+/// (diag = spos − qpos + qlen so it is non-negative).
+pub fn two_hit_scan(
+    index: &WordIndex,
+    subject: &[u8],
+    window: usize,
+    scratch: &mut Vec<i64>,
+    word_hits: &mut u64,
+) -> Vec<SeedHit> {
+    let mut out = Vec::new();
+    if subject.len() < K || index.qlen < K {
+        return out;
+    }
+    let ndiag = index.qlen + subject.len();
+    scratch.clear();
+    scratch.resize(ndiag, i64::MIN / 2);
+    for j in 0..=subject.len() - K {
+        let hits = index.hits(&subject[j..j + K]);
+        *word_hits += hits.len() as u64;
+        for &i in hits {
+            let i = i as usize;
+            let diag = j + index.qlen - i;
+            let last_end = scratch[diag];
+            let start = j as i64;
+            if start <= last_end {
+                continue; // overlaps the previous hit on this diagonal: ignore
+            }
+            if last_end >= 0 && start - last_end <= window as i64 {
+                // second non-overlapping hit within the window: trigger
+                out.push(SeedHit { qpos: i, spos: j });
+                scratch[diag] = i64::MIN / 2; // re-arm after trigger
+            } else {
+                scratch[diag] = (j + K) as i64 - 1; // end of this first hit
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alphabet::encode;
+
+    fn sc() -> Scoring {
+        Scoring::blast_default()
+    }
+
+    #[test]
+    fn identity_word_always_in_neighborhood() {
+        // any 3-mer scoring >= T against itself must index itself;
+        // "WWW" self-scores 33 with BLOSUM62
+        let q = encode(b"WWW");
+        let idx = WordIndex::build(&q, &sc(), SeedParams::default());
+        assert_eq!(idx.hits(&q), &[0]);
+    }
+
+    #[test]
+    fn low_scoring_self_word_excluded_when_below_t() {
+        // "AAA" self-scores 12 >= 11, still included; with T=13 excluded
+        let q = encode(b"AAA");
+        let idx = WordIndex::build(&q, &sc(), SeedParams { threshold: 13 });
+        assert_eq!(idx.hits(&q), &[] as &[u32]);
+    }
+
+    #[test]
+    fn neighborhood_members_meet_threshold() {
+        let s = sc();
+        let q = encode(b"MKWVLAAR");
+        let params = SeedParams::default();
+        let idx = WordIndex::build(&q, &s, params);
+        // exhaustively verify: every indexed (word, pos) scores >= T, and
+        // every >= T pair is indexed
+        let mut found = 0;
+        for w0 in 0..24u8 {
+            for w1 in 0..24u8 {
+                for w2 in 0..24u8 {
+                    let word = [w0, w1, w2];
+                    let positions = idx.hits(&word);
+                    for i in 0..=q.len() - K {
+                        let score: i32 =
+                            (0..K).map(|t| s.score(q[i + t], word[t])).sum();
+                        let indexed = positions.contains(&(i as u32));
+                        assert_eq!(
+                            indexed,
+                            score >= params.threshold,
+                            "word {word:?} pos {i} score {score}"
+                        );
+                        if indexed {
+                            found += 1;
+                        }
+                    }
+                }
+            }
+        }
+        assert_eq!(found, idx.entries);
+        assert!(found > 0);
+    }
+
+    #[test]
+    fn short_query_empty_index() {
+        let q = encode(b"MK");
+        let idx = WordIndex::build(&q, &sc(), SeedParams::default());
+        assert_eq!(idx.entries, 0);
+    }
+
+    #[test]
+    fn two_hit_requires_same_diagonal_within_window() {
+        let s = sc();
+        // query with two W-rich words far apart on the same diagonal
+        let q = encode(b"WWWAAAAAAWCWC");
+        let d = encode(b"WWWAAAAAAWCWC"); // identical -> many same-diag hits
+        let idx = WordIndex::build(&q, &s, SeedParams::default());
+        let mut scratch = Vec::new();
+        let mut wh = 0u64;
+        let hits = two_hit_scan(&idx, &d, 40, &mut scratch, &mut wh);
+        assert!(!hits.is_empty());
+        // a subject with no repeated neighborhood words in-window yields none
+        let far = encode(b"WWW");
+        let hits2 = two_hit_scan(&idx, &far, 40, &mut scratch, &mut wh);
+        assert!(hits2.is_empty(), "single word cannot two-hit: {hits2:?}");
+    }
+
+    #[test]
+    fn two_hit_window_enforced() {
+        let s = sc();
+        // two identical words separated by more than the window on the
+        // same diagonal must NOT trigger with a small window
+        let spacer = vec![b'A'; 60];
+        let mut seq = b"WCW".to_vec();
+        seq.extend_from_slice(&spacer);
+        seq.extend_from_slice(b"WCW");
+        let q = encode(&seq);
+        let idx = WordIndex::build(&q, &s, SeedParams::default());
+        let mut scratch = Vec::new();
+        let mut wh = 0u64;
+        let near = two_hit_scan(&idx, &q, 100, &mut scratch, &mut wh);
+        assert!(!near.is_empty());
+        let strict = two_hit_scan(&idx, &q, 10, &mut scratch, &mut wh);
+        // the far pair no longer triggers on its diagonal; any remaining
+        // triggers must be within 10 of a previous hit
+        assert!(strict.len() <= near.len());
+    }
+}

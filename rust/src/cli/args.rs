@@ -1,0 +1,151 @@
+//! Tiny argument parser: positionals + `--flag value` + repeated
+//! `--set k=v` overrides. Strict: unknown consumption patterns error at
+//! the call site via [`Args::finish`].
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    positionals: std::collections::VecDeque<String>,
+    flags: BTreeMap<String, Vec<String>>,
+}
+
+impl Args {
+    /// Parse an argv (without the program name).
+    pub fn parse(argv: Vec<String>) -> anyhow::Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                anyhow::ensure!(!name.is_empty(), "bare -- is not a flag");
+                // --key=value or --key value or boolean --key
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.entry(k.to_string()).or_default().push(v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    let v = it.next().unwrap();
+                    out.flags.entry(name.to_string()).or_default().push(v);
+                } else {
+                    out.flags.entry(name.to_string()).or_default().push("true".into());
+                }
+            } else {
+                out.positionals.push_back(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Pop the next positional (subcommand, etc.).
+    pub fn take_positional(&mut self) -> Option<String> {
+        self.positionals.pop_front()
+    }
+
+    /// Take a single-valued flag.
+    pub fn take(&mut self, name: &str) -> Option<String> {
+        let vals = self.flags.remove(name)?;
+        vals.into_iter().next_back()
+    }
+
+    /// Take a flag or a default.
+    pub fn take_or(&mut self, name: &str, default: &str) -> String {
+        self.take(name).unwrap_or_else(|| default.to_string())
+    }
+
+    /// Take a required flag.
+    pub fn require(&mut self, name: &str) -> anyhow::Result<String> {
+        self.take(name).ok_or_else(|| anyhow::anyhow!("missing required flag --{name}"))
+    }
+
+    /// Take an integer flag.
+    pub fn take_usize(&mut self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.take(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{name} {v:?}: {e}")),
+        }
+    }
+
+    /// Take a u64 flag.
+    pub fn take_u64(&mut self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.take(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{name} {v:?}: {e}")),
+        }
+    }
+
+    /// Take a boolean flag (present = true).
+    pub fn take_bool(&mut self, name: &str) -> bool {
+        matches!(self.take(name).as_deref(), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Take all values of a repeated flag (e.g. --set k=v --set k2=v2).
+    pub fn take_all(&mut self, name: &str) -> Vec<String> {
+        self.flags.remove(name).unwrap_or_default()
+    }
+
+    /// Error if anything was left unconsumed (typo protection).
+    pub fn finish(self) -> anyhow::Result<()> {
+        if let Some(p) = self.positionals.front() {
+            anyhow::bail!("unexpected argument {p:?}");
+        }
+        if let Some(k) = self.flags.keys().next() {
+            anyhow::bail!("unknown flag --{k}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from).collect()).unwrap()
+    }
+
+    #[test]
+    fn positionals_and_flags() {
+        let mut a = parse("search --index db.idx --n 5 --verbose");
+        assert_eq!(a.take_positional().as_deref(), Some("search"));
+        assert_eq!(a.take("index").as_deref(), Some("db.idx"));
+        assert_eq!(a.take_usize("n", 0).unwrap(), 5);
+        assert!(a.take_bool("verbose"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let mut a = parse("x --set a.b=1 --set c.d=2 --k=v");
+        assert_eq!(a.take_positional().as_deref(), Some("x"));
+        assert_eq!(a.take_all("set"), vec!["a.b=1", "c.d=2"]);
+        assert_eq!(a.take("k").as_deref(), Some("v"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn required_flag_missing() {
+        let mut a = parse("cmd");
+        a.take_positional();
+        assert!(a.require("index").is_err());
+    }
+
+    #[test]
+    fn leftover_flag_is_error() {
+        let a = parse("cmd --oops 1");
+        let mut a = a;
+        a.take_positional();
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn last_value_wins_for_single_take() {
+        let mut a = parse("c --n 1 --n 2");
+        a.take_positional();
+        assert_eq!(a.take_usize("n", 0).unwrap(), 2);
+    }
+
+    #[test]
+    fn bad_integer_reported() {
+        let mut a = parse("c --n five");
+        a.take_positional();
+        assert!(a.take_usize("n", 0).is_err());
+    }
+}

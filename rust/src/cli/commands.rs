@@ -1,0 +1,304 @@
+//! Subcommand implementations.
+
+use super::args::Args;
+use crate::align::{search_index, EngineKind, NativeAligner, QueryContext};
+use crate::config::{RawConfig, SwaphiConfig};
+use crate::coordinator::{AlignerFactory, Coordinator, NativeFactory, PjrtFactory};
+use crate::db::format::{write_index, IndexView};
+use crate::db::index::Index;
+use crate::db::synth::{generate, SynthSpec};
+use crate::db::Database;
+use crate::fasta;
+use crate::phi::calibration;
+
+fn preset(name: &str, n: usize, seed: u64) -> anyhow::Result<SynthSpec> {
+    Ok(match name {
+        "trembl-mini" => SynthSpec::trembl_mini(n, seed),
+        "swissprot-mini" => SynthSpec::swissprot_mini(n, seed),
+        "swissprot-reduced" => SynthSpec::swissprot_reduced(n, seed),
+        "tiny" => SynthSpec::tiny(n, seed),
+        other => anyhow::bail!("unknown preset {other:?}"),
+    })
+}
+
+pub fn cmd_synth(mut args: Args) -> anyhow::Result<i32> {
+    let preset_name = args.take_or("preset", "trembl-mini");
+    let n = args.take_usize("n", 20_000)?;
+    let seed = args.take_u64("seed", 2014)?;
+    let out = args.require("out")?;
+    args.finish()?;
+
+    let spec = preset(&preset_name, n, seed)?;
+    let db = generate(&spec);
+    let records: Vec<fasta::Record> = db
+        .seqs
+        .iter()
+        .map(|s| fasta::Record::new(s.id.clone(), crate::alphabet::decode(&s.codes)))
+        .collect();
+    fasta::write_path(&out, &records)?;
+    println!(
+        "wrote {} sequences ({} residues, mean {:.1}, max {}) to {out}",
+        db.len(),
+        db.total_residues(),
+        db.mean_len(),
+        db.max_len()
+    );
+    Ok(0)
+}
+
+pub fn cmd_index(mut args: Args) -> anyhow::Result<i32> {
+    let input = args.require("in")?;
+    let out = args.require("out")?;
+    args.finish()?;
+
+    let db = Database::from_fasta_path(&input)?;
+    anyhow::ensure!(!db.is_empty(), "{input}: no sequences");
+    let index = Index::build(db);
+    write_index(&out, &index)?;
+    println!(
+        "indexed {} sequences / {} profiles ({} residues, utilization {:.1}%) -> {out}",
+        index.n_seqs(),
+        index.n_profiles(),
+        index.total_residues,
+        index.mean_utilization() * 100.0
+    );
+    Ok(0)
+}
+
+pub fn cmd_info(mut args: Args) -> anyhow::Result<i32> {
+    let path = args.require("index")?;
+    args.finish()?;
+
+    let view = IndexView::open(&path)?;
+    let index = view.to_index();
+    println!("index: {path}");
+    println!("  sequences:   {}", index.n_seqs());
+    println!("  residues:    {}", index.total_residues);
+    println!("  profiles:    {}", index.n_profiles());
+    println!("  mean length: {:.1}", index.total_residues as f64 / index.n_seqs().max(1) as f64);
+    println!("  max length:  {}", index.seqs.last().map_or(0, |s| s.len()));
+    println!("  utilization: {:.2}%", index.mean_utilization() * 100.0);
+    Ok(0)
+}
+
+/// Build the typed config from --config/--set/--backend flags.
+fn load_config(args: &mut Args) -> anyhow::Result<SwaphiConfig> {
+    let mut raw = match args.take("config") {
+        Some(path) => RawConfig::from_file(path)?,
+        None => RawConfig::default(),
+    };
+    for kv in args.take_all("set") {
+        let (k, v) = kv
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("--set expects section.key=value, got {kv:?}"))?;
+        raw.set(k.trim(), v.trim())?;
+    }
+    if let Some(b) = args.take("backend") {
+        raw.set("search.backend", &b)?;
+    }
+    if let Some(dir) = args.take("artifacts") {
+        raw.set("search.artifacts_dir", &dir)?;
+    }
+    SwaphiConfig::from_raw(&raw)
+}
+
+fn make_factory(cfg: &SwaphiConfig) -> anyhow::Result<Box<dyn AlignerFactory>> {
+    match cfg.backend.as_str() {
+        "native" => Ok(Box::new(NativeFactory(cfg.engine))),
+        "pjrt" => Ok(Box::new(PjrtFactory {
+            artifacts_dir: cfg.artifacts_dir.clone().into(),
+            kind: cfg.engine,
+        })),
+        other => anyhow::bail!("unknown backend {other:?} (native|pjrt)"),
+    }
+}
+
+pub fn cmd_search(mut args: Args) -> anyhow::Result<i32> {
+    let index_path = args.require("index")?;
+    let query_path = args.require("query")?;
+    let cfg = load_config(&mut args)?;
+    args.finish()?;
+
+    let view = IndexView::open(&index_path)?;
+    let index = view.to_index();
+    let factory = make_factory(&cfg)?;
+    let coord = Coordinator::new(&index, cfg.scoring.clone(), cfg.search_config());
+
+    let mut reader = fasta::Reader::from_path(&query_path)?;
+    let mut n = 0;
+    println!(
+        "# engine={} backend={} devices={} policy={} matrix={} gap={}+{}k chunks={}",
+        cfg.engine.name(),
+        factory.backend_name(),
+        cfg.devices,
+        cfg.policy.name(),
+        cfg.scoring.name,
+        cfg.scoring.gap_open,
+        cfg.scoring.gap_extend,
+        coord.n_chunks(),
+    );
+    while let Some(rec) = reader.next_record()? {
+        anyhow::ensure!(!rec.seq.is_empty(), "query {} is empty", rec.id);
+        let codes = crate::alphabet::encode(&rec.seq);
+        let result = coord.search(factory.as_ref(), &rec.id, &codes)?;
+        println!(
+            "\nquery {} (len {}): native {:.3} GCUPS{}",
+            result.query_id,
+            result.query_len,
+            result.native_gcups(),
+            match result.sim_gcups() {
+                Some(g) => format!(", simulated Phi x{}: {:.1} GCUPS", cfg.devices, g),
+                None => String::new(),
+            }
+        );
+        print!("{}", crate::coordinator::results::format_hits(&result.hits));
+        n += 1;
+    }
+    anyhow::ensure!(n > 0, "{query_path}: no queries");
+    Ok(0)
+}
+
+pub fn cmd_selftest(mut args: Args) -> anyhow::Result<i32> {
+    let backend = args.take_or("backend", "native");
+    let artifacts = args.take_or("artifacts", "artifacts");
+    args.finish()?;
+
+    let sc = crate::matrices::Scoring::swaphi_default();
+    let db = generate(&SynthSpec::tiny(64, 7));
+    let index = Index::build(db);
+    let query = crate::db::synth::generate_query(48, 5);
+    let ctx = QueryContext::build("selftest", query.clone(), &sc);
+    let mut oracle = NativeAligner::new(EngineKind::Scalar);
+    let expect = search_index(&mut oracle, &ctx, &index, &sc);
+
+    let mut failures = 0;
+    for kind in EngineKind::PAPER_VARIANTS {
+        let got = match backend.as_str() {
+            "native" => {
+                let mut eng = NativeAligner::new(kind);
+                search_index(&mut eng, &ctx, &index, &sc)
+            }
+            "pjrt" => {
+                let rt = std::rc::Rc::new(crate::runtime::PjrtRuntime::open(&artifacts)?);
+                let mut eng = crate::runtime::PjrtAligner::new(rt, kind);
+                search_index(&mut eng, &ctx, &index, &sc)
+            }
+            other => anyhow::bail!("unknown backend {other:?}"),
+        };
+        let ok = got == expect;
+        println!(
+            "{:<8} [{}] vs scalar oracle over {} sequences: {}",
+            kind.name(),
+            backend,
+            index.n_seqs(),
+            if ok { "OK" } else { "MISMATCH" }
+        );
+        if !ok {
+            failures += 1;
+        }
+    }
+    Ok(if failures == 0 { 0 } else { 1 })
+}
+
+pub fn cmd_devinfo(args: Args) -> anyhow::Result<i32> {
+    args.finish()?;
+    println!("simulated device fleet (DESIGN.md §2, §7):");
+    println!(
+        "  Xeon Phi 5110P-like: {} cores x {} threads @ {} GHz",
+        calibration::PHI_CORES,
+        calibration::PHI_THREADS_PER_CORE,
+        calibration::PHI_CLOCK_GHZ
+    );
+    for kind in EngineKind::PAPER_VARIANTS {
+        println!(
+            "    {:<8} plateau {:>5.1} GCUPS/device (overhead len {})",
+            kind.name(),
+            calibration::phi_thread_rate(kind) * calibration::PHI_THREADS as f64 / 1e9,
+            calibration::phi_overhead_len(kind),
+        );
+    }
+    println!(
+        "  offload: latency {:.0} us, bandwidth {:.1} GB/s, setup {:.1} ms",
+        calibration::OFFLOAD_LATENCY_S * 1e6,
+        calibration::OFFLOAD_BANDWIDTH_BPS / 1e9,
+        calibration::OFFLOAD_SETUP_S * 1e3
+    );
+    println!(
+        "  host CPU (E5-2670-like): SWIPE {:.1} GCUPS/core, 16-core eff {:.0}%",
+        calibration::SWIPE_CORE_RATE / 1e9,
+        calibration::HOST_16C_EFFICIENCY * 100.0
+    );
+    println!("  comparator: CUDASW++3.0/Titan curve, e.g. q=5478 -> {:.1} GCUPS", calibration::titan_gcups(5478));
+    println!("\nmeasured native-engine ratios on this container (InterSP = 1.0):");
+    for (kind, ratio) in calibration::measured_variant_ratios() {
+        println!("    {:<8} {:.3}", kind.name(), ratio);
+    }
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+
+    fn run(line: &str) -> anyhow::Result<i32> {
+        super::super::run(line.split_whitespace().map(String::from).collect())
+    }
+
+    fn tmp(name: &str) -> String {
+        let dir = std::env::temp_dir().join("swaphi-cli-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}-{}", std::process::id())).to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn synth_index_info_search_roundtrip() {
+        let fasta = tmp("db.fasta");
+        let idx = tmp("db.idx");
+        let qf = tmp("q.fasta");
+        assert_eq!(
+            run(&format!("synth --preset tiny --n 60 --seed 3 --out {fasta}")).unwrap(),
+            0
+        );
+        assert_eq!(run(&format!("index --in {fasta} --out {idx}")).unwrap(), 0);
+        assert_eq!(run(&format!("info --index {idx}")).unwrap(), 0);
+        // write a query
+        std::fs::write(&qf, ">q1\nMKTAYIAKQRQISFVKSHFSRQLEERLGLIEVQ\n").unwrap();
+        assert_eq!(
+            run(&format!(
+                "search --index {idx} --query {qf} --set search.top_k=3 --set sim.enabled=false"
+            ))
+            .unwrap(),
+            0
+        );
+        for f in [fasta, idx, qf] {
+            let _ = std::fs::remove_file(f);
+        }
+    }
+
+    #[test]
+    fn selftest_native_passes() {
+        assert_eq!(run("selftest").unwrap(), 0);
+    }
+
+    #[test]
+    fn devinfo_runs() {
+        assert_eq!(run("devinfo").unwrap(), 0);
+    }
+
+    #[test]
+    fn unknown_command_usage() {
+        assert_eq!(run("frobnicate").unwrap(), 2);
+        assert_eq!(run("help").unwrap(), 0);
+    }
+
+    #[test]
+    fn missing_required_flag_errors() {
+        assert!(run("index --in nope.fasta").is_err());
+        assert!(run("search --index x").is_err());
+    }
+
+    #[test]
+    fn bad_preset_errors() {
+        let out = tmp("bad.fasta");
+        assert!(run(&format!("synth --preset nope --out {out}")).is_err());
+    }
+}

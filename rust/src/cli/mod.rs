@@ -1,0 +1,69 @@
+//! Command-line interface: argument parser (no clap in the vendor set)
+//! and the `swaphi` subcommands.
+//!
+//! ```text
+//! swaphi synth   --preset trembl-mini --n 20000 --seed 2014 --out db.fasta
+//! swaphi index   --in db.fasta --out db.idx
+//! swaphi info    --index db.idx
+//! swaphi search  --index db.idx --query q.fasta [--config swaphi.toml]
+//!                [--set search.engine=interqp]... [--backend pjrt]
+//! swaphi selftest [--backend pjrt] [--artifacts artifacts]
+//! swaphi devinfo
+//! ```
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+
+/// Entry point used by `main.rs`.
+pub fn run(argv: Vec<String>) -> anyhow::Result<i32> {
+    let mut args = Args::parse(argv)?;
+    let cmd = match args.take_positional() {
+        Some(c) => c,
+        None => {
+            print!("{}", USAGE);
+            return Ok(2);
+        }
+    };
+    match cmd.as_str() {
+        "synth" => commands::cmd_synth(args),
+        "index" => commands::cmd_index(args),
+        "info" => commands::cmd_info(args),
+        "search" => commands::cmd_search(args),
+        "selftest" => commands::cmd_selftest(args),
+        "devinfo" => commands::cmd_devinfo(args),
+        "help" | "--help" | "-h" => {
+            print!("{}", USAGE);
+            Ok(0)
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n{USAGE}");
+            Ok(2)
+        }
+    }
+}
+
+pub const USAGE: &str = "\
+swaphi — Smith-Waterman protein database search on simulated Xeon Phi
+         (three-layer Rust + JAX + Pallas reproduction of Liu & Schmidt, ASAP'14)
+
+USAGE: swaphi <command> [flags]
+
+COMMANDS:
+  synth     generate a synthetic protein database (FASTA)
+              --preset trembl-mini|swissprot-mini|swissprot-reduced|tiny
+              --n <seqs>  --seed <u64>  --out <fasta>
+  index     build the length-sorted binary index
+              --in <fasta>  --out <idx>
+  info      print index statistics
+              --index <idx>
+  search    search queries against an index (the Fig 2 workflow)
+              --index <idx>  --query <fasta>
+              [--config <toml>]  [--set section.key=value]...
+              [--backend native|pjrt]  [--artifacts <dir>]
+  selftest  cross-validate all engines against the scalar oracle
+              [--backend pjrt]  [--artifacts <dir>]
+  devinfo   print the simulated device fleet and calibration
+  help      this text
+";

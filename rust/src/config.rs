@@ -1,0 +1,365 @@
+//! Configuration system — a strict TOML subset (sections, `key = value`
+//! with strings / integers / floats / booleans, `#` comments) parsed into
+//! a typed [`SwaphiConfig`], overridable from CLI flags. No external
+//! crates (nothing TOML-ish is vendored), so the parser lives here and is
+//! tested like any other substrate.
+//!
+//! Example `swaphi.toml`:
+//! ```toml
+//! [scoring]
+//! matrix = "BLOSUM62"
+//! gap_open = 10
+//! gap_extend = 2
+//!
+//! [search]
+//! engine = "intersp"      # intersp | interqp | intraqp | scalar
+//! backend = "native"      # native | pjrt
+//! devices = 4
+//! policy = "guided"       # static | dynamic | guided | auto
+//! top_k = 10
+//! chunk_residues = 524288
+//!
+//! [sim]
+//! enabled = true
+//! threads_per_device = 240
+//! replication = 400
+//! ```
+
+use crate::align::EngineKind;
+use crate::coordinator::SearchConfig;
+use crate::db::chunk::ChunkPlanConfig;
+use crate::matrices::Scoring;
+use crate::phi::sched::Policy;
+use crate::phi::sim::SimConfig;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A raw parsed value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    fn type_name(&self) -> &'static str {
+        match self {
+            Value::Str(_) => "string",
+            Value::Int(_) => "integer",
+            Value::Float(_) => "float",
+            Value::Bool(_) => "boolean",
+        }
+    }
+}
+
+/// Parsed `section.key -> value` table.
+#[derive(Clone, Debug, Default)]
+pub struct RawConfig {
+    entries: BTreeMap<String, Value>,
+}
+
+impl RawConfig {
+    /// Parse TOML-subset text.
+    pub fn parse(text: &str) -> anyhow::Result<RawConfig> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw_line) in text.lines().enumerate() {
+            let line = strip_comment(raw_line).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow::anyhow!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                anyhow::ensure!(!name.is_empty(), "line {}: empty section name", lineno + 1);
+                section = name.to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            anyhow::ensure!(!key.is_empty(), "line {}: empty key", lineno + 1);
+            let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            entries.insert(full, parse_value(value.trim(), lineno + 1)?);
+        }
+        Ok(RawConfig { entries })
+    }
+
+    pub fn from_file(path: impl AsRef<Path>) -> anyhow::Result<RawConfig> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    /// Override (or add) one dotted key, parsing the value like TOML.
+    pub fn set(&mut self, dotted: &str, value: &str) -> anyhow::Result<()> {
+        self.entries.insert(dotted.to_string(), parse_value(value, 0)?);
+        Ok(())
+    }
+
+    pub fn get(&self, dotted: &str) -> Option<&Value> {
+        self.entries.get(dotted)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> anyhow::Result<String> {
+        match self.entries.get(key) {
+            None => Ok(default.to_string()),
+            Some(Value::Str(s)) => Ok(s.clone()),
+            Some(v) => anyhow::bail!("{key}: expected string, got {}", v.type_name()),
+        }
+    }
+
+    pub fn int_or(&self, key: &str, default: i64) -> anyhow::Result<i64> {
+        match self.entries.get(key) {
+            None => Ok(default),
+            Some(Value::Int(i)) => Ok(*i),
+            Some(v) => anyhow::bail!("{key}: expected integer, got {}", v.type_name()),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> anyhow::Result<bool> {
+        match self.entries.get(key) {
+            None => Ok(default),
+            Some(Value::Bool(b)) => Ok(*b),
+            Some(v) => anyhow::bail!("{key}: expected boolean, got {}", v.type_name()),
+        }
+    }
+
+    /// Reject unknown keys (typo protection) given the known key set.
+    pub fn validate_keys(&self, known: &[&str]) -> anyhow::Result<()> {
+        for key in self.entries.keys() {
+            if !known.contains(&key.as_str()) {
+                anyhow::bail!(
+                    "unknown config key {key:?}; known keys: {}",
+                    known.join(", ")
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside quotes starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> anyhow::Result<Value> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow::anyhow!("line {lineno}: unterminated string"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    // bare identifiers are accepted as strings (ergonomic for CLI -s k=v)
+    if s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-') && !s.is_empty() {
+        return Ok(Value::Str(s.to_string()));
+    }
+    anyhow::bail!("line {lineno}: cannot parse value {s:?}")
+}
+
+/// All recognized keys.
+pub const KNOWN_KEYS: &[&str] = &[
+    "scoring.matrix",
+    "scoring.gap_open",
+    "scoring.gap_extend",
+    "search.engine",
+    "search.backend",
+    "search.devices",
+    "search.policy",
+    "search.top_k",
+    "search.chunk_residues",
+    "search.artifacts_dir",
+    "sim.enabled",
+    "sim.threads_per_device",
+    "sim.replication",
+    "db.preset",
+    "db.n_seqs",
+    "db.seed",
+];
+
+/// Fully-typed SWAPHI configuration.
+#[derive(Clone, Debug)]
+pub struct SwaphiConfig {
+    pub scoring: Scoring,
+    pub engine: EngineKind,
+    pub backend: String,
+    pub artifacts_dir: String,
+    pub devices: usize,
+    pub policy: Policy,
+    pub top_k: usize,
+    pub chunk_residues: u128,
+    pub sim_enabled: bool,
+    pub sim_threads: usize,
+    pub sim_replication: usize,
+    pub db_preset: String,
+    pub db_n_seqs: usize,
+    pub db_seed: u64,
+}
+
+impl SwaphiConfig {
+    /// Resolve a raw table into the typed config (paper defaults).
+    pub fn from_raw(raw: &RawConfig) -> anyhow::Result<SwaphiConfig> {
+        raw.validate_keys(KNOWN_KEYS)?;
+        let matrix = raw.str_or("scoring.matrix", "BLOSUM62")?;
+        let gap_open = raw.int_or("scoring.gap_open", 10)? as i32;
+        let gap_extend = raw.int_or("scoring.gap_extend", 2)? as i32;
+        let engine_s = raw.str_or("search.engine", "intersp")?;
+        let policy_s = raw.str_or("search.policy", "guided")?;
+        Ok(SwaphiConfig {
+            scoring: Scoring::new(&matrix, gap_open, gap_extend)?,
+            engine: EngineKind::parse(&engine_s)
+                .ok_or_else(|| anyhow::anyhow!("unknown engine {engine_s:?}"))?,
+            backend: raw.str_or("search.backend", "native")?,
+            artifacts_dir: raw.str_or("search.artifacts_dir", "artifacts")?,
+            devices: raw.int_or("search.devices", 1)?.max(1) as usize,
+            policy: Policy::parse(&policy_s)
+                .ok_or_else(|| anyhow::anyhow!("unknown policy {policy_s:?}"))?,
+            top_k: raw.int_or("search.top_k", 10)?.max(1) as usize,
+            chunk_residues: raw.int_or("search.chunk_residues", 1 << 19)?.max(1024) as u128,
+            sim_enabled: raw.bool_or("sim.enabled", true)?,
+            sim_threads: raw.int_or("sim.threads_per_device", 240)?.max(1) as usize,
+            sim_replication: raw.int_or("sim.replication", 1)?.max(1) as usize,
+            db_preset: raw.str_or("db.preset", "trembl-mini")?,
+            db_n_seqs: raw.int_or("db.n_seqs", 20_000)?.max(1) as usize,
+            db_seed: raw.int_or("db.seed", 2014)? as u64,
+        })
+    }
+
+    pub fn default_config() -> SwaphiConfig {
+        Self::from_raw(&RawConfig::default()).expect("defaults are valid")
+    }
+
+    /// Materialize the coordinator's [`SearchConfig`].
+    pub fn search_config(&self) -> SearchConfig {
+        SearchConfig {
+            devices: self.devices,
+            chunk: ChunkPlanConfig { target_padded_residues: self.chunk_residues },
+            top_k: self.top_k,
+            sim: self.sim_enabled.then(|| SimConfig {
+                devices: self.devices,
+                threads_per_device: self.sim_threads,
+                policy: self.policy,
+                replication: self.sim_replication,
+                ..Default::default()
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let raw = RawConfig::parse(
+            r#"
+            # comment
+            [scoring]
+            matrix = "BLOSUM50"   # inline comment
+            gap_open = 12
+            [sim]
+            enabled = false
+            "#,
+        )
+        .unwrap();
+        assert_eq!(raw.get("scoring.matrix"), Some(&Value::Str("BLOSUM50".into())));
+        assert_eq!(raw.get("scoring.gap_open"), Some(&Value::Int(12)));
+        assert_eq!(raw.get("sim.enabled"), Some(&Value::Bool(false)));
+    }
+
+    #[test]
+    fn typed_config_defaults_match_paper() {
+        let cfg = SwaphiConfig::default_config();
+        assert_eq!(cfg.scoring.name, "BLOSUM62");
+        assert_eq!(cfg.scoring.gap_open, 10);
+        assert_eq!(cfg.scoring.gap_extend, 2);
+        assert_eq!(cfg.engine, EngineKind::InterSP);
+        assert_eq!(cfg.policy, Policy::Guided);
+        assert_eq!(cfg.sim_threads, 240);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut raw = RawConfig::default();
+        raw.set("search.engine", "intraqp").unwrap();
+        raw.set("search.devices", "4").unwrap();
+        raw.set("scoring.matrix", "PAM250").unwrap();
+        let cfg = SwaphiConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.engine, EngineKind::IntraQP);
+        assert_eq!(cfg.devices, 4);
+        assert_eq!(cfg.scoring.name, "PAM250");
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let raw = RawConfig::parse("[search]\nenginee = \"sp\"\n").unwrap();
+        let err = SwaphiConfig::from_raw(&raw).unwrap_err().to_string();
+        assert!(err.contains("enginee"), "{err}");
+    }
+
+    #[test]
+    fn type_errors_reported() {
+        let raw = RawConfig::parse("[search]\ndevices = \"four\"\n").unwrap();
+        assert!(SwaphiConfig::from_raw(&raw).is_err());
+    }
+
+    #[test]
+    fn bad_syntax_rejected() {
+        assert!(RawConfig::parse("[unclosed\n").is_err());
+        assert!(RawConfig::parse("no_equals_here\n").is_err());
+        assert!(RawConfig::parse("k = \"unterminated\n").is_err());
+    }
+
+    #[test]
+    fn search_config_materializes() {
+        let mut raw = RawConfig::default();
+        raw.set("search.devices", "4").unwrap();
+        raw.set("sim.replication", "100").unwrap();
+        let cfg = SwaphiConfig::from_raw(&raw).unwrap();
+        let sc = cfg.search_config();
+        assert_eq!(sc.devices, 4);
+        let sim = sc.sim.unwrap();
+        assert_eq!(sim.devices, 4);
+        assert_eq!(sim.replication, 100);
+    }
+
+    #[test]
+    fn sim_can_be_disabled() {
+        let mut raw = RawConfig::default();
+        raw.set("sim.enabled", "false").unwrap();
+        let cfg = SwaphiConfig::from_raw(&raw).unwrap();
+        assert!(cfg.search_config().sim.is_none());
+    }
+
+    #[test]
+    fn bare_identifier_values_are_strings() {
+        let raw = RawConfig::parse("[search]\nengine = intersp\n").unwrap();
+        assert_eq!(raw.get("search.engine"), Some(&Value::Str("intersp".into())));
+    }
+}

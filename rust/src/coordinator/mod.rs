@@ -1,0 +1,361 @@
+//! The SWAPHI coordinator — the paper's Fig 2 program workflow.
+//!
+//! Stages: (i) per-query profile construction ([`QueryContext`]); (ii)
+//! one **host thread per coprocessor**, each pulling chunks from the
+//! shared pool of workloads and driving its own aligner (native engine or
+//! PJRT artifacts); (iii) barrier on completion; (iv) descending score
+//! sort and report ([`results`]).
+//!
+//! Because PJRT client types are single-threaded, aligners are minted
+//! *inside* each host thread by an [`AlignerFactory`] — the same
+//! ownership the paper has (each host thread owns its coprocessor's
+//! offload context).
+//!
+//! Timing is dual: real wallclock of this container (reported as
+//! `native_gcups`) and, when `sim` is set, the calibrated Xeon Phi
+//! discrete-event simulation (`sim_gcups`) — see DESIGN.md §2.
+
+pub mod results;
+
+use crate::align::{EngineKind, NativeAligner, ProfileAligner, QueryContext};
+use crate::db::chunk::{plan_chunks, Chunk, ChunkPlanConfig};
+use crate::db::index::Index;
+use crate::matrices::Scoring;
+use crate::metrics::{Cells, Timer};
+use crate::phi::sim::{simulate_search, SimConfig, SimReport};
+use results::Hit;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::channel;
+
+/// Mints per-host-thread aligners.
+pub trait AlignerFactory: Send + Sync {
+    fn make(&self) -> anyhow::Result<Box<dyn ProfileAligner>>;
+    fn kind(&self) -> EngineKind;
+    fn backend_name(&self) -> &'static str;
+}
+
+/// Native Rust engines.
+pub struct NativeFactory(pub EngineKind);
+
+impl AlignerFactory for NativeFactory {
+    fn make(&self) -> anyhow::Result<Box<dyn ProfileAligner>> {
+        Ok(Box::new(NativeAligner::new(self.0)))
+    }
+    fn kind(&self) -> EngineKind {
+        self.0
+    }
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// PJRT artifacts backend: each host thread opens its own runtime
+/// (its own PJRT client + compile cache), mirroring per-coprocessor
+/// offload-context ownership.
+pub struct PjrtFactory {
+    pub artifacts_dir: PathBuf,
+    pub kind: EngineKind,
+}
+
+impl AlignerFactory for PjrtFactory {
+    fn make(&self) -> anyhow::Result<Box<dyn ProfileAligner>> {
+        let rt = std::rc::Rc::new(crate::runtime::PjrtRuntime::open(&self.artifacts_dir)?);
+        Ok(Box::new(crate::runtime::PjrtAligner::new(rt, self.kind)))
+    }
+    fn kind(&self) -> EngineKind {
+        self.kind
+    }
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Search configuration.
+#[derive(Clone, Debug)]
+pub struct SearchConfig {
+    /// Simulated coprocessors = host threads.
+    pub devices: usize,
+    /// Chunking policy for the workload pool.
+    pub chunk: ChunkPlanConfig,
+    /// Hits to keep per query.
+    pub top_k: usize,
+    /// Xeon Phi timing simulation (None = native timing only).
+    pub sim: Option<SimConfig>,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            devices: 1,
+            chunk: ChunkPlanConfig::default(),
+            top_k: 10,
+            sim: Some(SimConfig::default()),
+        }
+    }
+}
+
+/// Per-query search outcome.
+#[derive(Debug)]
+pub struct QueryResult {
+    pub query_id: String,
+    pub query_len: usize,
+    pub hits: Vec<Hit>,
+    /// Scores for every database sequence (length-sorted order).
+    pub scores: Vec<i32>,
+    /// Real cells aligned.
+    pub cells: Cells,
+    /// Real wallclock on this container (s).
+    pub wall_seconds: f64,
+    /// Calibrated device simulation (when configured).
+    pub sim: Option<SimReport>,
+}
+
+impl QueryResult {
+    /// GCUPS actually achieved by this container's engines.
+    pub fn native_gcups(&self) -> f64 {
+        self.cells.gcups(self.wall_seconds)
+    }
+
+    /// Paper-comparable simulated GCUPS.
+    pub fn sim_gcups(&self) -> Option<f64> {
+        self.sim.as_ref().map(|s| s.gcups())
+    }
+}
+
+/// The coordinator: owns the index, scoring scheme and configuration.
+pub struct Coordinator<'a> {
+    pub index: &'a Index,
+    pub scoring: Scoring,
+    pub config: SearchConfig,
+    chunks: Vec<Chunk>,
+}
+
+impl<'a> Coordinator<'a> {
+    pub fn new(index: &'a Index, scoring: Scoring, config: SearchConfig) -> Self {
+        let chunks = plan_chunks(index, config.chunk);
+        Coordinator { index, scoring, config, chunks }
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// Search one query through the full workflow.
+    pub fn search(
+        &self,
+        factory: &dyn AlignerFactory,
+        query_id: &str,
+        query: &[u8],
+    ) -> anyhow::Result<QueryResult> {
+        // stage (i): query profiles
+        let ctx = QueryContext::build(query_id, query.to_vec(), &self.scoring);
+        let timer = Timer::start();
+
+        // stage (ii): host threads over the shared chunk pool
+        let scores = self.run_host_threads(factory, &ctx)?;
+
+        // stage (iii) barrier happened in run_host_threads; stage (iv):
+        let wall_seconds = timer.seconds();
+        let hits = results::top_k(
+            &scores,
+            self.config.top_k,
+            |i| self.index.seqs[i].id.clone(),
+            |i| self.index.seqs[i].len(),
+        );
+        let cells = Cells::for_search(ctx.len(), self.index.total_residues);
+        let sim = self.config.sim.map(|mut sim_cfg| {
+            sim_cfg.devices = self.config.devices.max(sim_cfg.devices);
+            simulate_search(self.index, &self.chunks, factory.kind(), ctx.len(), sim_cfg)
+        });
+        Ok(QueryResult {
+            query_id: query_id.to_string(),
+            query_len: query.len(),
+            hits,
+            scores,
+            cells,
+            wall_seconds,
+            sim,
+        })
+    }
+
+    /// Search many queries, reusing the chunk plan.
+    pub fn search_all(
+        &self,
+        factory: &dyn AlignerFactory,
+        queries: &[(String, Vec<u8>)],
+    ) -> anyhow::Result<Vec<QueryResult>> {
+        queries.iter().map(|(id, q)| self.search(factory, id, q)).collect()
+    }
+
+    fn run_host_threads(
+        &self,
+        factory: &dyn AlignerFactory,
+        ctx: &QueryContext,
+    ) -> anyhow::Result<Vec<i32>> {
+        let n_seqs = self.index.n_seqs();
+        if self.chunks.is_empty() {
+            return Ok(Vec::new());
+        }
+        let cursor = AtomicUsize::new(0); // the shared pool of workloads
+        let (tx, rx) = channel::<anyhow::Result<Vec<(usize, i32)>>>();
+        let devices = self.config.devices.max(1);
+
+        std::thread::scope(|scope| {
+            for _dev in 0..devices {
+                let tx = tx.clone();
+                let cursor = &cursor;
+                let chunks = &self.chunks;
+                let index = self.index;
+                let scoring = &self.scoring;
+                scope.spawn(move || {
+                    // per-host-thread aligner (stage ii ownership)
+                    let mut aligner = match factory.make() {
+                        Ok(a) => a,
+                        Err(e) => {
+                            let _ = tx.send(Err(e));
+                            return;
+                        }
+                    };
+                    loop {
+                        // dynamic pool: grab the next chunk
+                        let c = cursor.fetch_add(1, Ordering::Relaxed);
+                        if c >= chunks.len() {
+                            break;
+                        }
+                        let chunk = &chunks[c];
+                        let mut out =
+                            Vec::with_capacity(chunk.n_profiles() * crate::db::profile::LANES);
+                        for p in chunk.profile_start..chunk.profile_end {
+                            let profile = &index.profiles[p];
+                            let lanes = aligner.align(ctx, profile, scoring);
+                            for lane in 0..profile.used {
+                                out.push((profile.members[lane], lanes[lane]));
+                            }
+                        }
+                        if tx.send(Ok(out)).is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+            drop(tx);
+            // collector (the "wait for completion of all host threads")
+            let mut scores = vec![0i32; n_seqs];
+            let mut seen = 0usize;
+            for msg in rx {
+                for (idx, score) in msg? {
+                    scores[idx] = score;
+                    seen += 1;
+                }
+            }
+            anyhow::ensure!(seen == n_seqs, "lost scores: {seen}/{n_seqs}");
+            Ok(scores)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::align::search_index;
+    use crate::db::synth::{generate, generate_query, SynthSpec};
+
+    fn setup(n: usize) -> (Index, Scoring) {
+        (Index::build(generate(&SynthSpec::tiny(n, 51))), Scoring::swaphi_default())
+    }
+
+    #[test]
+    fn coordinator_matches_direct_search() {
+        let (idx, sc) = setup(120);
+        let q = generate_query(60, 3);
+        let ctx = QueryContext::build("q", q.clone(), &sc);
+        let mut direct = NativeAligner::new(EngineKind::InterSP);
+        let expect = search_index(&mut direct, &ctx, &idx, &sc);
+
+        for devices in [1usize, 2, 4] {
+            let cfg = SearchConfig {
+                devices,
+                chunk: ChunkPlanConfig { target_padded_residues: 4096 },
+                ..Default::default()
+            };
+            let coord = Coordinator::new(&idx, sc.clone(), cfg);
+            assert!(coord.n_chunks() > 1);
+            let res = coord.search(&NativeFactory(EngineKind::InterSP), "q", &q).unwrap();
+            assert_eq!(res.scores, expect, "{devices} devices");
+        }
+    }
+
+    #[test]
+    fn hits_are_sorted_and_topk() {
+        let (idx, sc) = setup(80);
+        let q = generate_query(40, 9);
+        let coord = Coordinator::new(
+            &idx,
+            sc,
+            SearchConfig { top_k: 5, ..Default::default() },
+        );
+        let res = coord.search(&NativeFactory(EngineKind::InterQP), "q", &q).unwrap();
+        assert_eq!(res.hits.len(), 5);
+        assert!(res.hits.windows(2).all(|w| w[0].score >= w[1].score));
+        // the top hit really is the max score
+        assert_eq!(res.hits[0].score, *res.scores.iter().max().unwrap());
+    }
+
+    #[test]
+    fn sim_report_attached_and_scaled_by_devices() {
+        let (idx, sc) = setup(400);
+        let q = generate_query(100, 2);
+        let mk = |devices| {
+            let cfg = SearchConfig {
+                devices,
+                sim: Some(SimConfig { replication: 200, ..Default::default() }),
+                chunk: ChunkPlanConfig { target_padded_residues: 2048 },
+                ..Default::default()
+            };
+            let coord = Coordinator::new(&idx, sc.clone(), cfg);
+            coord.search(&NativeFactory(EngineKind::InterSP), "q", &q).unwrap()
+        };
+        let r1 = mk(1);
+        let r4 = mk(4);
+        let (g1, g4) = (r1.sim_gcups().unwrap(), r4.sim_gcups().unwrap());
+        assert!(g4 > 2.5 * g1, "sim scaling {g1} -> {g4}");
+        assert!(r1.native_gcups() > 0.0);
+        assert_eq!(r1.cells, Cells::for_search(100, idx.total_residues));
+    }
+
+    #[test]
+    fn all_variants_agree_through_coordinator() {
+        let (idx, sc) = setup(64);
+        let q = generate_query(33, 8);
+        let coord = Coordinator::new(&idx, sc, SearchConfig::default());
+        let base = coord.search(&NativeFactory(EngineKind::Scalar), "q", &q).unwrap();
+        for kind in EngineKind::PAPER_VARIANTS {
+            let r = coord.search(&NativeFactory(kind), "q", &q).unwrap();
+            assert_eq!(r.scores, base.scores, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn search_all_reuses_plan() {
+        let (idx, sc) = setup(50);
+        let coord = Coordinator::new(&idx, sc, SearchConfig::default());
+        let queries: Vec<(String, Vec<u8>)> =
+            (0..3).map(|i| (format!("q{i}"), generate_query(20 + i, i as u64))).collect();
+        let out = coord.search_all(&NativeFactory(EngineKind::InterSP), &queries).unwrap();
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().all(|r| r.hits.len() <= 10));
+    }
+
+    #[test]
+    fn empty_index_yields_empty_scores() {
+        let idx = Index::build(crate::db::Database::default());
+        let sc = Scoring::swaphi_default();
+        let coord = Coordinator::new(&idx, sc, SearchConfig::default());
+        let res = coord
+            .search(&NativeFactory(EngineKind::InterSP), "q", &[0, 1, 2])
+            .unwrap();
+        assert!(res.scores.is_empty());
+        assert!(res.hits.is_empty());
+    }
+}

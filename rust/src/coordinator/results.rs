@@ -1,0 +1,78 @@
+//! Result aggregation: per-sequence scores → ranked hit list (the paper's
+//! stage iv: "sort all alignment scores in descending order and output the
+//! alignment results").
+
+/// One database hit.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Hit {
+    /// Index into the length-sorted database order.
+    pub seq_index: usize,
+    pub id: String,
+    pub len: usize,
+    pub score: i32,
+}
+
+/// Select the top-k hits by score (descending; ties by ascending sequence
+/// index for determinism). `ids`/`lens` are indexed like `scores`.
+pub fn top_k(
+    scores: &[i32],
+    k: usize,
+    id_of: impl Fn(usize) -> String,
+    len_of: impl Fn(usize) -> usize,
+) -> Vec<Hit> {
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    let k = k.min(scores.len());
+    order.sort_by(|&a, &b| scores[b].cmp(&scores[a]).then(a.cmp(&b)));
+    order
+        .into_iter()
+        .take(k)
+        .map(|i| Hit { seq_index: i, id: id_of(i), len: len_of(i), score: scores[i] })
+        .collect()
+}
+
+/// Render hits as the report table body.
+pub fn format_hits(hits: &[Hit]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("{:<6} {:<28} {:>8} {:>8}\n", "rank", "subject", "length", "score"));
+    for (rank, h) in hits.iter().enumerate() {
+        out.push_str(&format!("{:<6} {:<28} {:>8} {:>8}\n", rank + 1, h.id, h.len, h.score));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_k_orders_descending_with_stable_ties() {
+        let scores = vec![5, 9, 9, 1, 7];
+        let hits = top_k(&scores, 3, |i| format!("s{i}"), |i| i * 10);
+        assert_eq!(hits.len(), 3);
+        assert_eq!(hits[0].seq_index, 1); // first 9
+        assert_eq!(hits[1].seq_index, 2); // second 9
+        assert_eq!(hits[2].seq_index, 4); // 7
+        assert_eq!(hits[0].id, "s1");
+        assert_eq!(hits[2].len, 40);
+    }
+
+    #[test]
+    fn k_larger_than_n() {
+        let hits = top_k(&[3, 1], 10, |i| i.to_string(), |_| 0);
+        assert_eq!(hits.len(), 2);
+        assert_eq!(hits[0].score, 3);
+    }
+
+    #[test]
+    fn empty_scores() {
+        assert!(top_k(&[], 5, |i| i.to_string(), |_| 0).is_empty());
+    }
+
+    #[test]
+    fn format_is_tabular() {
+        let hits = top_k(&[4, 2], 2, |i| format!("id{i}"), |_| 7);
+        let text = format_hits(&hits);
+        assert!(text.contains("rank"));
+        assert!(text.lines().count() == 3);
+    }
+}

@@ -1,0 +1,169 @@
+//! Workload chunking — the unit the coordinator streams to coprocessors.
+//!
+//! The paper: "each host thread loads the database sequences onto the
+//! coprocessor chunk-by-chunk at runtime" to bound device memory. A chunk
+//! is a contiguous range of sequence profiles (inter-sequence model) —
+//! equivalently of sorted subject sequences — annotated with the exact
+//! real/padded cell counts the scheduler and the offload cost model need.
+
+use super::index::Index;
+use super::profile::LANES;
+
+/// One workload chunk: profiles `profile_range` of the index.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Chunk {
+    pub id: usize,
+    /// Range of profile indices `[start, end)`.
+    pub profile_start: usize,
+    pub profile_end: usize,
+    /// Real residues in the chunk (excludes padding).
+    pub real_residues: u128,
+    /// Padded residues (what the engine actually computes over).
+    pub padded_residues: u128,
+    /// Bytes transferred when offloading this chunk (residue codes).
+    pub transfer_bytes: u64,
+}
+
+impl Chunk {
+    pub fn n_profiles(&self) -> usize {
+        self.profile_end - self.profile_start
+    }
+
+    /// Real DP cells for a query of length `qlen`.
+    pub fn real_cells(&self, qlen: usize) -> u128 {
+        self.real_residues * qlen as u128
+    }
+
+    /// Padded DP cells (work actually executed).
+    pub fn padded_cells(&self, qlen: usize) -> u128 {
+        self.padded_residues * qlen as u128
+    }
+}
+
+/// Chunking policy: bound each chunk by padded residues so chunks have
+/// roughly equal compute cost despite the skewed length distribution.
+#[derive(Clone, Copy, Debug)]
+pub struct ChunkPlanConfig {
+    /// Target padded residues per chunk. The paper streams chunks sized to
+    /// alleviate coprocessor memory pressure; a few hundred thousand
+    /// residues per chunk keeps per-offload latency overhead < 1% while
+    /// bounding device memory.
+    pub target_padded_residues: u128,
+}
+
+impl Default for ChunkPlanConfig {
+    fn default() -> Self {
+        ChunkPlanConfig { target_padded_residues: 1 << 19 } // 512 Ki residues
+    }
+}
+
+/// Split the index into chunks.
+pub fn plan_chunks(index: &Index, cfg: ChunkPlanConfig) -> Vec<Chunk> {
+    let mut chunks = Vec::new();
+    let mut start = 0usize;
+    let mut real = 0u128;
+    let mut padded = 0u128;
+    for (p, prof) in index.profiles.iter().enumerate() {
+        let prof_padded = (prof.padded_len * LANES) as u128;
+        // close the chunk before adding if it would overshoot (but never
+        // emit an empty chunk — a single huge profile becomes its own)
+        if p > start && padded + prof_padded > cfg.target_padded_residues {
+            chunks.push(make_chunk(chunks.len(), start, p, real, padded));
+            start = p;
+            real = 0;
+            padded = 0;
+        }
+        real += prof.real_residues();
+        padded += prof_padded;
+    }
+    if start < index.profiles.len() {
+        chunks.push(make_chunk(chunks.len(), start, index.profiles.len(), real, padded));
+    }
+    chunks
+}
+
+fn make_chunk(id: usize, start: usize, end: usize, real: u128, padded: u128) -> Chunk {
+    Chunk {
+        id,
+        profile_start: start,
+        profile_end: end,
+        real_residues: real,
+        padded_residues: padded,
+        // one byte per padded residue (residue codes are u8 on the wire)
+        transfer_bytes: padded as u64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::synth::{generate, SynthSpec};
+    use crate::db::Database;
+
+    fn index(n: usize, seed: u64) -> Index {
+        Index::build(generate(&SynthSpec::tiny(n, seed)))
+    }
+
+    #[test]
+    fn chunks_cover_all_profiles_once() {
+        let idx = index(500, 3);
+        let chunks = plan_chunks(&idx, ChunkPlanConfig { target_padded_residues: 4096 });
+        assert!(!chunks.is_empty());
+        assert_eq!(chunks[0].profile_start, 0);
+        assert_eq!(chunks.last().unwrap().profile_end, idx.n_profiles());
+        for w in chunks.windows(2) {
+            assert_eq!(w[0].profile_end, w[1].profile_start);
+        }
+        // ids are sequential
+        for (i, c) in chunks.iter().enumerate() {
+            assert_eq!(c.id, i);
+            assert!(c.n_profiles() >= 1);
+        }
+    }
+
+    #[test]
+    fn residue_totals_conserved() {
+        let idx = index(300, 8);
+        let chunks = plan_chunks(&idx, ChunkPlanConfig { target_padded_residues: 2048 });
+        let real: u128 = chunks.iter().map(|c| c.real_residues).sum();
+        assert_eq!(real, idx.total_residues);
+        let padded: u128 = chunks.iter().map(|c| c.padded_residues).sum();
+        assert_eq!(padded * 10, idx.padded_cells(10));
+    }
+
+    #[test]
+    fn chunks_respect_target_except_single_profile() {
+        let idx = index(400, 1);
+        let target = 8192u128;
+        let chunks = plan_chunks(&idx, ChunkPlanConfig { target_padded_residues: target });
+        for c in &chunks {
+            if c.n_profiles() > 1 {
+                assert!(c.padded_residues <= target, "{c:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn one_giant_chunk_when_target_huge() {
+        let idx = index(100, 2);
+        let chunks = plan_chunks(&idx, ChunkPlanConfig::default());
+        assert_eq!(chunks.len(), 1);
+        assert_eq!(chunks[0].n_profiles(), idx.n_profiles());
+    }
+
+    #[test]
+    fn empty_index_no_chunks() {
+        let idx = Index::build(Database::default());
+        assert!(plan_chunks(&idx, ChunkPlanConfig::default()).is_empty());
+    }
+
+    #[test]
+    fn cells_scale_with_query_length() {
+        let idx = index(50, 4);
+        let chunks = plan_chunks(&idx, ChunkPlanConfig::default());
+        let c = &chunks[0];
+        assert_eq!(c.real_cells(100), c.real_residues * 100);
+        assert_eq!(c.padded_cells(7), c.padded_residues * 7);
+        assert!(c.padded_cells(7) >= c.real_cells(7));
+    }
+}

@@ -1,0 +1,286 @@
+//! On-disk index format with memory-mapped access.
+//!
+//! The paper: "the index files have been carefully organized so that they
+//! can be mapped into virtual memory and directly accessed as normal
+//! physical memory." We do the same: a single little-endian flat file, all
+//! sections 8-byte aligned, loaded with `mmap(2)` and read in place.
+//!
+//! Layout (all integers little-endian):
+//! ```text
+//! 0   magic  b"SWPHIDX1"
+//! 8   u64    n_seqs
+//! 16  u64    total_residues
+//! 24  u64    ids_bytes          (length of the id blob)
+//! 32  u64    codes_bytes        (length of the codes blob)
+//! 40  [u64; n_seqs]   id_offsets    (into id blob; end delimited by next)
+//! ..  [u64; n_seqs]   seq_offsets   (into codes blob)
+//! ..  [u64; n_seqs]   seq_lens
+//! ..  id blob (utf-8, concatenated)          then pad to 8
+//! ..  codes blob (encoded residues)          then pad to 8
+//! ```
+//! Sequences are stored in index (length-sorted) order, so a reader can
+//! rebuild profiles with no extra sort.
+
+use super::index::Index;
+use super::{Database, DbSeq};
+use std::io::Write;
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"SWPHIDX1";
+
+/// Serialize an index to its on-disk format.
+pub fn write_index(path: impl AsRef<Path>, index: &Index) -> anyhow::Result<()> {
+    let n = index.seqs.len();
+    let mut id_offsets = Vec::with_capacity(n);
+    let mut seq_offsets = Vec::with_capacity(n);
+    let mut seq_lens = Vec::with_capacity(n);
+    let mut ids = Vec::new();
+    let mut codes = Vec::new();
+    for s in &index.seqs {
+        id_offsets.push(ids.len() as u64);
+        ids.extend_from_slice(s.id.as_bytes());
+        seq_offsets.push(codes.len() as u64);
+        seq_lens.push(s.codes.len() as u64);
+        codes.extend_from_slice(&s.codes);
+    }
+
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(n as u64).to_le_bytes())?;
+    f.write_all(&(index.total_residues as u64).to_le_bytes())?;
+    f.write_all(&(ids.len() as u64).to_le_bytes())?;
+    f.write_all(&(codes.len() as u64).to_le_bytes())?;
+    for v in id_offsets.iter().chain(&seq_offsets).chain(&seq_lens) {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    f.write_all(&ids)?;
+    f.write_all(&vec![0u8; pad8(ids.len())])?;
+    f.write_all(&codes)?;
+    f.write_all(&vec![0u8; pad8(codes.len())])?;
+    f.flush()?;
+    Ok(())
+}
+
+fn pad8(n: usize) -> usize {
+    (8 - n % 8) % 8
+}
+
+/// A memory-mapped region (unmapped on drop).
+pub struct Mmap {
+    ptr: *mut libc::c_void,
+    len: usize,
+}
+
+// The mapping is read-only and never mutated after creation.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map a whole file read-only.
+    pub fn open(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let f = std::fs::File::open(path.as_ref())?;
+        let len = f.metadata()?.len() as usize;
+        if len == 0 {
+            anyhow::bail!("cannot mmap empty file {}", path.as_ref().display());
+        }
+        use std::os::unix::io::AsRawFd;
+        let ptr = unsafe {
+            libc::mmap(
+                std::ptr::null_mut(),
+                len,
+                libc::PROT_READ,
+                libc::MAP_PRIVATE,
+                f.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == libc::MAP_FAILED {
+            anyhow::bail!("mmap failed: {}", std::io::Error::last_os_error());
+        }
+        Ok(Mmap { ptr, len })
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        unsafe {
+            libc::munmap(self.ptr, self.len);
+        }
+    }
+}
+
+/// Zero-copy view over a mapped index file.
+pub struct IndexView {
+    mmap: Mmap,
+    n_seqs: usize,
+    total_residues: u64,
+    id_off_at: usize,
+    seq_off_at: usize,
+    seq_len_at: usize,
+    ids_at: usize,
+    ids_bytes: usize,
+    codes_at: usize,
+    codes_bytes: usize,
+}
+
+impl IndexView {
+    /// Map and validate an index file.
+    pub fn open(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let mmap = Mmap::open(path.as_ref())?;
+        let b = mmap.bytes();
+        if b.len() < 40 || &b[0..8] != MAGIC {
+            anyhow::bail!("{}: not a SWPHIDX1 index file", path.as_ref().display());
+        }
+        let n_seqs = u64_at(b, 8)? as usize;
+        let total_residues = u64_at(b, 16)?;
+        let ids_bytes = u64_at(b, 24)? as usize;
+        let codes_bytes = u64_at(b, 32)? as usize;
+        let id_off_at = 40;
+        let seq_off_at = id_off_at + 8 * n_seqs;
+        let seq_len_at = seq_off_at + 8 * n_seqs;
+        let ids_at = seq_len_at + 8 * n_seqs;
+        let codes_at = ids_at + ids_bytes + pad8(ids_bytes);
+        let need = codes_at + codes_bytes;
+        if b.len() < need {
+            anyhow::bail!("index file truncated: have {} bytes, need {need}", b.len());
+        }
+        Ok(IndexView {
+            mmap,
+            n_seqs,
+            total_residues,
+            id_off_at,
+            seq_off_at,
+            seq_len_at,
+            ids_at,
+            ids_bytes,
+            codes_at,
+            codes_bytes,
+        })
+    }
+
+    pub fn n_seqs(&self) -> usize {
+        self.n_seqs
+    }
+
+    pub fn total_residues(&self) -> u128 {
+        self.total_residues as u128
+    }
+
+    fn table_u64(&self, base: usize, i: usize) -> u64 {
+        let b = self.mmap.bytes();
+        u64_at(b, base + 8 * i).expect("validated at open")
+    }
+
+    /// Sequence id (zero-copy).
+    pub fn id(&self, i: usize) -> &str {
+        assert!(i < self.n_seqs);
+        let start = self.table_u64(self.id_off_at, i) as usize;
+        let end = if i + 1 < self.n_seqs {
+            self.table_u64(self.id_off_at, i + 1) as usize
+        } else {
+            self.ids_bytes
+        };
+        std::str::from_utf8(&self.mmap.bytes()[self.ids_at + start..self.ids_at + end])
+            .expect("ids are utf-8 by construction")
+    }
+
+    /// Encoded residue codes of sequence `i` (zero-copy).
+    pub fn codes(&self, i: usize) -> &[u8] {
+        assert!(i < self.n_seqs);
+        let off = self.table_u64(self.seq_off_at, i) as usize;
+        let len = self.table_u64(self.seq_len_at, i) as usize;
+        debug_assert!(off + len <= self.codes_bytes);
+        &self.mmap.bytes()[self.codes_at + off..self.codes_at + off + len]
+    }
+
+    /// Materialize back into an owned [`Index`] (re-packs profiles).
+    pub fn to_index(&self) -> Index {
+        let seqs: Vec<DbSeq> = (0..self.n_seqs)
+            .map(|i| DbSeq { id: self.id(i).to_string(), codes: self.codes(i).to_vec() })
+            .collect();
+        // already sorted on disk; Index::build's stable sort is a no-op
+        Index::build(Database::new(seqs))
+    }
+}
+
+fn u64_at(b: &[u8], at: usize) -> anyhow::Result<u64> {
+    let slice: [u8; 8] = b
+        .get(at..at + 8)
+        .ok_or_else(|| anyhow::anyhow!("short read at {at}"))?
+        .try_into()
+        .unwrap();
+    Ok(u64::from_le_bytes(slice))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::synth::{generate, SynthSpec};
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("swaphi-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_index_file() {
+        let db = generate(&SynthSpec::tiny(77, 4));
+        let idx = Index::build(db);
+        let path = tmpfile("roundtrip.idx");
+        write_index(&path, &idx).unwrap();
+
+        let view = IndexView::open(&path).unwrap();
+        assert_eq!(view.n_seqs(), idx.seqs.len());
+        assert_eq!(view.total_residues(), idx.total_residues);
+        for i in 0..idx.seqs.len() {
+            assert_eq!(view.id(i), idx.seqs[i].id);
+            assert_eq!(view.codes(i), idx.seqs[i].codes.as_slice());
+        }
+        let back = view.to_index();
+        assert_eq!(back.seqs, idx.seqs);
+        assert_eq!(back.n_profiles(), idx.n_profiles());
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmpfile("bad.idx");
+        std::fs::write(&path, b"NOTANIDXFILE....0000000000000000000000000000").unwrap();
+        assert!(IndexView::open(&path).is_err());
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let db = generate(&SynthSpec::tiny(30, 4));
+        let idx = Index::build(db);
+        let path = tmpfile("trunc.idx");
+        write_index(&path, &idx).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(IndexView::open(&path).is_err());
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn empty_file_rejected() {
+        let path = tmpfile("empty.idx");
+        std::fs::write(&path, b"").unwrap();
+        assert!(IndexView::open(&path).is_err());
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn mmap_reads_whole_file() {
+        let path = tmpfile("mmap.bin");
+        std::fs::write(&path, b"hello mmap world").unwrap();
+        let m = Mmap::open(&path).unwrap();
+        assert_eq!(m.bytes(), b"hello mmap world");
+        std::fs::remove_file(path).unwrap();
+    }
+}

@@ -1,0 +1,113 @@
+//! Protein sequence database: in-memory model, synthetic generation,
+//! offline indexing (length-sorted, profile-grouped), binary on-disk
+//! format with memory-mapped access, and chunking for the coordinator.
+//!
+//! Mirrors the paper's §III infrastructure: "we build indices for the
+//! input database offline prior to alignment ... all subject sequences are
+//! sorted in ascending order of sequence length ... the index files have
+//! been carefully organized so that they can be mapped into virtual memory
+//! and directly accessed as normal physical memory."
+
+pub mod chunk;
+pub mod format;
+pub mod index;
+pub mod profile;
+pub mod synth;
+
+use crate::alphabet;
+
+/// One database sequence, residues already encoded to codes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DbSeq {
+    pub id: String,
+    pub codes: Vec<u8>,
+}
+
+impl DbSeq {
+    pub fn from_ascii(id: impl Into<String>, seq: &[u8]) -> Self {
+        DbSeq { id: id.into(), codes: alphabet::encode(seq) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.codes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.codes.is_empty()
+    }
+}
+
+/// An in-memory database (possibly unsorted — see [`index::Index`] for the
+/// search-ready, length-sorted form).
+#[derive(Clone, Debug, Default)]
+pub struct Database {
+    pub seqs: Vec<DbSeq>,
+}
+
+impl Database {
+    pub fn new(seqs: Vec<DbSeq>) -> Self {
+        Database { seqs }
+    }
+
+    /// Load from a FASTA file.
+    pub fn from_fasta_path(path: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+        let mut reader = crate::fasta::Reader::from_path(path)?;
+        let mut seqs = Vec::new();
+        while let Some(rec) = reader.next_record()? {
+            if !rec.seq.is_empty() {
+                seqs.push(DbSeq::from_ascii(rec.id, &rec.seq));
+            }
+        }
+        Ok(Database { seqs })
+    }
+
+    pub fn len(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seqs.is_empty()
+    }
+
+    /// Total residue count across all sequences.
+    pub fn total_residues(&self) -> u128 {
+        self.seqs.iter().map(|s| s.len() as u128).sum()
+    }
+
+    /// Longest sequence length (0 if empty).
+    pub fn max_len(&self) -> usize {
+        self.seqs.iter().map(|s| s.len()).max().unwrap_or(0)
+    }
+
+    /// Mean sequence length (0 if empty).
+    pub fn mean_len(&self) -> f64 {
+        if self.seqs.is_empty() {
+            0.0
+        } else {
+            self.total_residues() as f64 / self.seqs.len() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn database_stats() {
+        let db = Database::new(vec![
+            DbSeq::from_ascii("a", b"ARND"),
+            DbSeq::from_ascii("b", b"ARNDCQEG"),
+        ]);
+        assert_eq!(db.len(), 2);
+        assert_eq!(db.total_residues(), 12);
+        assert_eq!(db.max_len(), 8);
+        assert!((db.mean_len() - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn from_ascii_encodes() {
+        let s = DbSeq::from_ascii("x", b"AR");
+        assert_eq!(s.codes, vec![0, 1]);
+    }
+}

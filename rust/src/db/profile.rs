@@ -1,0 +1,318 @@
+//! Sequence / query / score / striped profiles — the paper's §III.B–C
+//! data layouts, kept bit-compatible between the Rust engines and the
+//! Pallas kernels.
+//!
+//! * **Sequence profile** (§III.B.1): 16 consecutive (length-sorted)
+//!   subject sequences packed position-major, so each position is one
+//!   16-lane residue vector; padded with dummy residues to a common
+//!   length that is a multiple of 8.
+//! * **Query profile** (§III.B.2, sequential layout): `|Q| × 32` table of
+//!   substitution scores, row r of the scoring matrix gathered per query
+//!   position; rows padded to 32 entries for power-of-two addressing.
+//! * **Score profile** (§III.B.3): per window of N=8 residue vectors, a
+//!   `|Σ| × N × 16` table rebuilt on the fly — trades reconstruction cost
+//!   for gather-free inner loops (the InterSP variant).
+//! * **Striped query profile** (§III.C, Farrar): lanes stride through the
+//!   query at `S = ⌈Q/V⌉` so adjacent DP cells land in different vectors.
+
+use crate::alphabet::{DUMMY, ROW};
+use crate::matrices::Scoring;
+use crate::util::round_up;
+
+/// SIMD lane count of the paper's 512-bit / 32-bit-lane vectors.
+pub const LANES: usize = 16;
+
+/// Window width of the score profile (the paper sets N = 8 on Phi).
+pub const SCORE_PROFILE_N: usize = 8;
+
+/// A sequence profile: up to 16 subjects packed lane-wise.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SequenceProfile {
+    /// Indices of the member sequences in the (sorted) database order;
+    /// `usize::MAX` marks an unused lane.
+    pub members: [usize; LANES],
+    /// Number of used lanes (1..=16).
+    pub used: usize,
+    /// Real length of the sequence in each lane (0 for unused lanes).
+    pub lens: [usize; LANES],
+    /// Common padded length — max member length rounded up to 8.
+    pub padded_len: usize,
+    /// Residue codes, position-major: `residues[j * LANES + lane]`.
+    pub residues: Vec<u8>,
+}
+
+impl SequenceProfile {
+    /// Pack up to 16 sequences (given as `(db_index, codes)`) into a
+    /// profile. Panics if `seqs` is empty or longer than 16.
+    pub fn pack(seqs: &[(usize, &[u8])]) -> Self {
+        assert!(!seqs.is_empty() && seqs.len() <= LANES, "1..=16 sequences per profile");
+        let max_len = seqs.iter().map(|(_, s)| s.len()).max().unwrap();
+        let padded_len = round_up(max_len.max(1), 8);
+        let mut members = [usize::MAX; LANES];
+        let mut lens = [0usize; LANES];
+        let mut residues = vec![DUMMY; padded_len * LANES];
+        for (lane, (idx, codes)) in seqs.iter().enumerate() {
+            members[lane] = *idx;
+            lens[lane] = codes.len();
+            for (j, &c) in codes.iter().enumerate() {
+                residues[j * LANES + lane] = c;
+            }
+        }
+        SequenceProfile { members, used: seqs.len(), lens, padded_len, residues }
+    }
+
+    /// The 16-lane residue vector at subject position `j`.
+    #[inline]
+    pub fn vector(&self, j: usize) -> &[u8] {
+        &self.residues[j * LANES..(j + 1) * LANES]
+    }
+
+    /// Total *real* residues in the profile (excludes padding).
+    pub fn real_residues(&self) -> u128 {
+        self.lens.iter().map(|&l| l as u128).sum()
+    }
+
+    /// Total padded cells the engine will actually compute for a query of
+    /// length `qlen` (utilization accounting).
+    pub fn padded_cells(&self, qlen: usize) -> u128 {
+        (self.padded_len * LANES) as u128 * qlen as u128
+    }
+
+    /// Lane utilization: real residues / padded residues.
+    pub fn utilization(&self) -> f64 {
+        self.real_residues() as f64 / (self.padded_len * LANES) as f64
+    }
+}
+
+/// Sequential-layout query profile: `qp[i * ROW + r]` = score(query[i], r).
+#[derive(Clone, Debug)]
+pub struct QueryProfile {
+    pub qlen: usize,
+    pub scores: Vec<i32>,
+}
+
+impl QueryProfile {
+    pub fn build(query: &[u8], scoring: &Scoring) -> Self {
+        let mut scores = vec![0i32; query.len() * ROW];
+        for (i, &q) in query.iter().enumerate() {
+            scores[i * ROW..(i + 1) * ROW].copy_from_slice(scoring.row(q));
+        }
+        QueryProfile { qlen: query.len(), scores }
+    }
+
+    /// Substitution-score row for query position `i` (ROW entries,
+    /// indexed by subject residue code).
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> &[i32] {
+        &self.scores[i * ROW..(i + 1) * ROW]
+    }
+}
+
+/// Score profile over one window of `SCORE_PROFILE_N` positions of a
+/// sequence profile: `sp[r][n][lane]` = score(r, subject residue).
+///
+/// Rebuilt per window (the InterSP trade-off the paper measures: cheaper
+/// inner loops, extra construction cost that only amortizes for queries
+/// long enough — crossover ≈ 375 in Fig 5).
+#[derive(Clone, Debug)]
+pub struct ScoreProfile {
+    /// Number of valid positions in this window (≤ N; last window of a
+    /// profile may be short).
+    pub width: usize,
+    /// `scores[(r * SCORE_PROFILE_N + n) * LANES + lane]`.
+    pub scores: Vec<i32>,
+}
+
+impl ScoreProfile {
+    /// Construct for positions `j0 .. j0+width` of `profile`.
+    pub fn build(profile: &SequenceProfile, j0: usize, width: usize, scoring: &Scoring) -> Self {
+        debug_assert!(width <= SCORE_PROFILE_N);
+        debug_assert!(j0 + width <= profile.padded_len);
+        let mut scores = vec![0i32; ROW * SCORE_PROFILE_N * LANES];
+        for r in 0..ROW as u8 {
+            let row = scoring.row(r);
+            for n in 0..width {
+                let vec = profile.vector(j0 + n);
+                let base = (r as usize * SCORE_PROFILE_N + n) * LANES;
+                for lane in 0..LANES {
+                    scores[base + lane] = row[vec[lane] as usize];
+                }
+            }
+        }
+        ScoreProfile { width, scores }
+    }
+
+    /// The 16-lane score vector for query residue `r` at window slot `n`.
+    #[inline(always)]
+    pub fn vector(&self, r: u8, n: usize) -> &[i32] {
+        let base = (r as usize * SCORE_PROFILE_N + n) * LANES;
+        &self.scores[base..base + LANES]
+    }
+}
+
+/// Farrar striped query profile.
+///
+/// `V = LANES` vector lanes; `stripes = ⌈Q/V⌉`; DP cell for query position
+/// `i = v * stripes + s` lives in vector `s`, lane `v`. Profile entry:
+/// `sp[r][s * V + v] = score(query[v * stripes + s], r)` (0 past the end).
+#[derive(Clone, Debug)]
+pub struct StripedProfile {
+    pub qlen: usize,
+    pub stripes: usize,
+    /// `scores[r * stripes * LANES + s * LANES + v]`.
+    pub scores: Vec<i32>,
+}
+
+impl StripedProfile {
+    pub fn build(query: &[u8], scoring: &Scoring) -> Self {
+        let qlen = query.len();
+        assert!(qlen > 0, "empty query");
+        let stripes = qlen.div_ceil(LANES);
+        let mut scores = vec![0i32; ROW * stripes * LANES];
+        for r in 0..ROW as u8 {
+            let row = scoring.row(r);
+            for s in 0..stripes {
+                for v in 0..LANES {
+                    let i = v * stripes + s;
+                    let val = if i < qlen { row[query[i] as usize] } else { 0 };
+                    scores[(r as usize * stripes + s) * LANES + v] = val;
+                }
+            }
+        }
+        StripedProfile { qlen, stripes, scores }
+    }
+
+    /// Score vector (LANES entries) for subject residue `r`, stripe `s`.
+    #[inline(always)]
+    pub fn vector(&self, r: u8, s: usize) -> &[i32] {
+        let base = (r as usize * self.stripes + s) * LANES;
+        &self.scores[base..base + LANES]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alphabet::encode;
+
+    fn scoring() -> Scoring {
+        Scoring::swaphi_default()
+    }
+
+    #[test]
+    fn pack_pads_to_multiple_of_8() {
+        let a = encode(b"ARNDC");
+        let b = encode(b"AR");
+        let p = SequenceProfile::pack(&[(0, &a), (1, &b)]);
+        assert_eq!(p.padded_len, 8);
+        assert_eq!(p.used, 2);
+        assert_eq!(p.lens[0], 5);
+        assert_eq!(p.lens[1], 2);
+        // lane 0 position 0 is 'A', lane 1 position 2 is dummy
+        assert_eq!(p.vector(0)[0], 0);
+        assert_eq!(p.vector(2)[1], DUMMY);
+        assert_eq!(p.vector(7)[0], DUMMY);
+        // unused lanes are all dummy
+        assert!(p.vector(0)[2..].iter().all(|&c| c == DUMMY));
+    }
+
+    #[test]
+    fn pack_full_group() {
+        let seqs: Vec<Vec<u8>> = (0..16).map(|i| encode(b"ARND")[..].repeat(i + 1)).collect();
+        let refs: Vec<(usize, &[u8])> =
+            seqs.iter().enumerate().map(|(i, s)| (i, s.as_slice())).collect();
+        let p = SequenceProfile::pack(&refs);
+        assert_eq!(p.used, 16);
+        assert_eq!(p.padded_len, round_up(64, 8));
+        assert_eq!(p.real_residues(), (1..=16).map(|i| 4 * i as u128).sum::<u128>());
+        assert!(p.utilization() > 0.0 && p.utilization() <= 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "1..=16")]
+    fn pack_rejects_oversize() {
+        let s = encode(b"AR");
+        let refs: Vec<(usize, &[u8])> = (0..17).map(|i| (i, &s[..])).collect();
+        SequenceProfile::pack(&refs);
+    }
+
+    #[test]
+    fn query_profile_matches_matrix() {
+        let sc = scoring();
+        let q = encode(b"WARD");
+        let qp = QueryProfile::build(&q, &sc);
+        for (i, &qc) in q.iter().enumerate() {
+            for r in 0..ROW as u8 {
+                assert_eq!(qp.row(i)[r as usize], sc.score(qc, r));
+            }
+        }
+    }
+
+    #[test]
+    fn score_profile_matches_matrix() {
+        let sc = scoring();
+        let a = encode(b"ARNDCQEGHILK");
+        let b = encode(b"WWYVA");
+        let p = SequenceProfile::pack(&[(0, &a), (1, &b)]);
+        let sp = ScoreProfile::build(&p, 0, 8, &sc);
+        for r in 0..24u8 {
+            for n in 0..8 {
+                let vec = p.vector(n);
+                let got = sp.vector(r, n);
+                for lane in 0..LANES {
+                    assert_eq!(got[lane], sc.score(r, vec[lane]), "r={r} n={n} lane={lane}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn score_profile_window_offset() {
+        let sc = scoring();
+        let a = encode(b"ARNDCQEGHILKMFPS"); // 16 residues
+        let p = SequenceProfile::pack(&[(0, &a)]);
+        let sp = ScoreProfile::build(&p, 8, 8, &sc);
+        let vec = p.vector(10);
+        let got = sp.vector(3, 2); // r='D', window slot 2 => position 10
+        for lane in 0..LANES {
+            assert_eq!(got[lane], sc.score(3, vec[lane]));
+        }
+    }
+
+    #[test]
+    fn striped_profile_layout() {
+        let sc = scoring();
+        let q = encode(b"ARNDCQEGHILKMFPSTWYVARNDCQEGHILKM"); // 33 residues
+        let sp = StripedProfile::build(&q, &sc);
+        assert_eq!(sp.stripes, 3); // ceil(33/16)
+        for r in 0..24u8 {
+            for s in 0..sp.stripes {
+                let v = sp.vector(r, s);
+                for lane in 0..LANES {
+                    let i = lane * sp.stripes + s;
+                    let expect = if i < q.len() { sc.score(q[i], r) } else { 0 };
+                    assert_eq!(v[lane], expect, "r={r} s={s} lane={lane} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn striped_padding_is_zero_scored() {
+        let sc = scoring();
+        let q = encode(b"AR"); // stripes = 1, lanes 2..16 pad
+        let sp = StripedProfile::build(&q, &sc);
+        assert_eq!(sp.stripes, 1);
+        for r in 0..24u8 {
+            let v = sp.vector(r, 0);
+            assert!(v[2..].iter().all(|&x| x == 0));
+        }
+    }
+
+    #[test]
+    fn padded_cells_accounting() {
+        let a = encode(b"ARNDC");
+        let p = SequenceProfile::pack(&[(0, &a)]);
+        assert_eq!(p.padded_cells(10), (8 * 16 * 10) as u128);
+    }
+}

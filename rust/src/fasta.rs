@@ -1,0 +1,249 @@
+//! FASTA reading and writing.
+//!
+//! A streaming, allocation-conscious FASTA parser sufficient for protein
+//! database ingestion: handles `>` headers (id = first whitespace-delimited
+//! token), multi-line sequences, CRLF, lower-case residues, `*`/ambiguity
+//! codes, blank lines, and missing trailing newline. Writer wraps at 60
+//! columns like the classic tools.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::path::Path;
+
+/// One FASTA record (raw ASCII residues, un-encoded).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Record {
+    /// First whitespace-delimited token of the header line.
+    pub id: String,
+    /// Remainder of the header line (may be empty).
+    pub description: String,
+    /// Sequence letters with whitespace stripped.
+    pub seq: Vec<u8>,
+}
+
+impl Record {
+    pub fn new(id: impl Into<String>, seq: impl Into<Vec<u8>>) -> Self {
+        Record { id: id.into(), description: String::new(), seq: seq.into() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.seq.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seq.is_empty()
+    }
+}
+
+/// Streaming FASTA reader over any `BufRead`.
+pub struct Reader<R: BufRead> {
+    inner: R,
+    pending_header: Option<String>,
+    line_no: usize,
+}
+
+impl Reader<BufReader<std::fs::File>> {
+    /// Open a FASTA file from disk.
+    pub fn from_path(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let f = std::fs::File::open(path.as_ref()).map_err(|e| {
+            anyhow::anyhow!("open FASTA {}: {e}", path.as_ref().display())
+        })?;
+        Ok(Reader::new(BufReader::new(f)))
+    }
+}
+
+impl<R: Read> Reader<BufReader<R>> {
+    /// Wrap any reader.
+    pub fn from_reader(r: R) -> Self {
+        Reader::new(BufReader::new(r))
+    }
+}
+
+impl<R: BufRead> Reader<R> {
+    pub fn new(inner: R) -> Self {
+        Reader { inner, pending_header: None, line_no: 0 }
+    }
+
+    fn read_line(&mut self, buf: &mut String) -> anyhow::Result<usize> {
+        buf.clear();
+        let n = self.inner.read_line(buf)?;
+        if n > 0 {
+            self.line_no += 1;
+        }
+        // strip newline / CR
+        while buf.ends_with('\n') || buf.ends_with('\r') {
+            buf.pop();
+        }
+        Ok(n)
+    }
+
+    /// Read the next record, or `None` at end of input.
+    pub fn next_record(&mut self) -> anyhow::Result<Option<Record>> {
+        let mut line = String::new();
+        // find the header
+        let header = loop {
+            if let Some(h) = self.pending_header.take() {
+                break h;
+            }
+            let n = self.read_line(&mut line)?;
+            if n == 0 {
+                return Ok(None);
+            }
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            if let Some(rest) = trimmed.strip_prefix('>') {
+                break rest.to_string();
+            }
+            anyhow::bail!("line {}: expected '>' header, got {trimmed:?}", self.line_no);
+        };
+        let (id, description) = match header.split_once(char::is_whitespace) {
+            Some((id, rest)) => (id.to_string(), rest.trim().to_string()),
+            None => (header.clone(), String::new()),
+        };
+        // accumulate sequence lines until next header / EOF
+        let mut seq = Vec::new();
+        loop {
+            let n = self.read_line(&mut line)?;
+            if n == 0 {
+                break;
+            }
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            if let Some(rest) = trimmed.strip_prefix('>') {
+                self.pending_header = Some(rest.to_string());
+                break;
+            }
+            seq.extend(trimmed.bytes().filter(|b| !b.is_ascii_whitespace()));
+        }
+        Ok(Some(Record { id, description, seq }))
+    }
+
+    /// Read all remaining records.
+    pub fn read_all(&mut self) -> anyhow::Result<Vec<Record>> {
+        let mut out = Vec::new();
+        while let Some(rec) = self.next_record()? {
+            out.push(rec);
+        }
+        Ok(out)
+    }
+}
+
+impl<R: BufRead> Iterator for Reader<R> {
+    type Item = anyhow::Result<Record>;
+    fn next(&mut self) -> Option<Self::Item> {
+        self.next_record().transpose()
+    }
+}
+
+/// Parse a full FASTA byte buffer.
+pub fn parse(bytes: &[u8]) -> anyhow::Result<Vec<Record>> {
+    Reader::from_reader(bytes).read_all()
+}
+
+/// Write records in 60-column FASTA format.
+pub fn write<W: Write>(w: &mut W, records: &[Record]) -> anyhow::Result<()> {
+    for rec in records {
+        if rec.description.is_empty() {
+            writeln!(w, ">{}", rec.id)?;
+        } else {
+            writeln!(w, ">{} {}", rec.id, rec.description)?;
+        }
+        for chunk in rec.seq.chunks(60) {
+            w.write_all(chunk)?;
+            writeln!(w)?;
+        }
+    }
+    Ok(())
+}
+
+/// Write records to a file path.
+pub fn write_path(path: impl AsRef<Path>, records: &[Record]) -> anyhow::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write(&mut f, records)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_simple_records() {
+        let data = b">sp|P1|TEST first protein\nMKTAYIA\nKQRQIS\n>P2\nARNDC\n";
+        let recs = parse(data).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].id, "sp|P1|TEST");
+        assert_eq!(recs[0].description, "first protein");
+        assert_eq!(recs[0].seq, b"MKTAYIAKQRQIS".to_vec());
+        assert_eq!(recs[1].id, "P2");
+        assert_eq!(recs[1].description, "");
+        assert_eq!(recs[1].seq, b"ARNDC".to_vec());
+    }
+
+    #[test]
+    fn handles_crlf_and_blank_lines() {
+        let data = b">a\r\nMK\r\n\r\nTA\r\n\n>b\r\nRR\r\n";
+        let recs = parse(data).unwrap();
+        assert_eq!(recs[0].seq, b"MKTA".to_vec());
+        assert_eq!(recs[1].seq, b"RR".to_vec());
+    }
+
+    #[test]
+    fn missing_trailing_newline() {
+        let recs = parse(b">x\nMKV").unwrap();
+        assert_eq!(recs[0].seq, b"MKV".to_vec());
+    }
+
+    #[test]
+    fn empty_input_yields_nothing() {
+        assert!(parse(b"").unwrap().is_empty());
+        assert!(parse(b"\n\n").unwrap().is_empty());
+    }
+
+    #[test]
+    fn garbage_before_header_is_an_error() {
+        assert!(parse(b"MKV\n>x\nA\n").is_err());
+    }
+
+    #[test]
+    fn empty_sequence_record_allowed() {
+        let recs = parse(b">empty\n>full\nMK\n").unwrap();
+        assert_eq!(recs.len(), 2);
+        assert!(recs[0].is_empty());
+        assert_eq!(recs[1].seq, b"MK".to_vec());
+    }
+
+    #[test]
+    fn roundtrip_write_parse() {
+        let recs = vec![
+            Record { id: "a".into(), description: "desc here".into(), seq: vec![b'M'; 130] },
+            Record::new("b", b"ARNDCQEGH".to_vec()),
+        ];
+        let mut buf = Vec::new();
+        write(&mut buf, &recs).unwrap();
+        let back = parse(&buf).unwrap();
+        assert_eq!(back, recs);
+    }
+
+    #[test]
+    fn wraps_at_60_columns() {
+        let recs = vec![Record::new("long", vec![b'A'; 125])];
+        let mut buf = Vec::new();
+        write(&mut buf, &recs).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4); // header + 60 + 60 + 5
+        assert_eq!(lines[1].len(), 60);
+        assert_eq!(lines[3].len(), 5);
+    }
+
+    #[test]
+    fn iterator_interface() {
+        let data = b">a\nMK\n>b\nAR\n>c\nND\n";
+        let ids: Vec<String> =
+            Reader::from_reader(&data[..]).map(|r| r.unwrap().id).collect();
+        assert_eq!(ids, vec!["a", "b", "c"]);
+    }
+}

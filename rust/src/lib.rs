@@ -1,0 +1,32 @@
+//! # SWAPHI — Smith-Waterman protein database search (reproduction)
+//!
+//! A faithful, hardware-substituted reproduction of *SWAPHI: Smith-
+//! Waterman Protein Database Search on Xeon Phi Coprocessors* (Liu &
+//! Schmidt, IEEE ASAP 2014) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: database indexing, chunk
+//!   streaming, host-thread-per-device offload, loop scheduling, score
+//!   aggregation; plus native vectorized engines, the BLAST+ baseline
+//!   substrate and the Xeon Phi discrete-event device model.
+//! * **L2 (python/compile/model.py)** — the JAX chunk-alignment graph,
+//!   AOT-lowered to HLO text artifacts.
+//! * **L1 (python/compile/kernels/)** — Pallas Smith-Waterman kernels
+//!   (anti-diagonal wavefront inter-sequence; striped intra-sequence).
+//!
+//! See DESIGN.md for the system inventory and the hardware-substitution
+//! rationale, and EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod align;
+pub mod alphabet;
+pub mod bench;
+pub mod blast;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod db;
+pub mod fasta;
+pub mod matrices;
+pub mod phi;
+pub mod runtime;
+pub mod metrics;
+pub mod util;

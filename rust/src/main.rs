@@ -1,0 +1,15 @@
+//! swaphi — CLI entrypoint (L3 leader process).
+//!
+//! All logic lives in the library (`swaphi::cli`); this binary only
+//! forwards argv and maps errors to exit codes.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match swaphi::cli::run(argv) {
+        Ok(code) => std::process::exit(code),
+        Err(err) => {
+            eprintln!("swaphi: error: {err:#}");
+            std::process::exit(1);
+        }
+    }
+}

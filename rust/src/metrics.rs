@@ -1,0 +1,212 @@
+//! Performance metrics: GCUPS accounting, wall timers, simple histograms.
+//!
+//! GCUPS (billion cell updates per second) is the paper's headline metric:
+//! `cells = query_length × Σ subject_lengths` (real lengths, not padded —
+//! padding work is overhead, not useful cells, exactly as the paper counts
+//! it), divided by elapsed seconds.
+
+use std::time::Instant;
+
+/// Cell-update accounting for one search run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Cells(pub u128);
+
+impl Cells {
+    /// Cells for aligning one query of length `qlen` against subjects
+    /// totalling `db_residues`.
+    pub fn for_search(qlen: usize, db_residues: u128) -> Cells {
+        Cells(qlen as u128 * db_residues)
+    }
+
+    pub fn add(&mut self, other: Cells) {
+        self.0 += other.0;
+    }
+
+    /// GCUPS given elapsed seconds.
+    pub fn gcups(&self, seconds: f64) -> f64 {
+        crate::util::gcups(self.0, seconds)
+    }
+}
+
+/// Wall-clock timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn seconds(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Fixed-bucket histogram for latency/length distributions.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// Bucket upper bounds (exclusive), ascending; a final overflow bucket
+    /// catches the rest.
+    bounds: Vec<u64>,
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    max: u64,
+}
+
+impl Histogram {
+    /// Build with the given ascending bucket upper bounds.
+    pub fn new(bounds: Vec<u64>) -> Self {
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must ascend");
+        let n = bounds.len() + 1;
+        Histogram { bounds, counts: vec![0; n], total: 0, sum: 0, max: 0 }
+    }
+
+    /// Exponential bounds 2^k covering [1, limit].
+    pub fn exponential(limit: u64) -> Self {
+        let mut bounds = Vec::new();
+        let mut b = 1u64;
+        while b <= limit {
+            bounds.push(b);
+            b = b.saturating_mul(2);
+        }
+        Histogram::new(bounds)
+    }
+
+    pub fn record(&mut self, v: u64) {
+        let idx = self.bounds.partition_point(|&b| b <= v);
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += v as u128;
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound of the
+    /// bucket holding the q-th sample).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target.max(1) {
+                return if i < self.bounds.len() { self.bounds[i] } else { self.max };
+            }
+        }
+        self.max
+    }
+}
+
+/// Per-query result row of a benchmark run — what the figure harnesses
+/// print and EXPERIMENTS.md records.
+#[derive(Clone, Debug)]
+pub struct QueryPerf {
+    pub query_id: String,
+    pub query_len: usize,
+    pub cells: Cells,
+    pub seconds: f64,
+    pub best_score: i32,
+}
+
+impl QueryPerf {
+    pub fn gcups(&self) -> f64 {
+        self.cells.gcups(self.seconds)
+    }
+}
+
+/// Mean and max GCUPS over a set of per-query rows (how the paper reports
+/// "average and maximum performance").
+pub fn summarize(rows: &[QueryPerf]) -> (f64, f64) {
+    if rows.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mean = rows.iter().map(|r| r.gcups()).sum::<f64>() / rows.len() as f64;
+    let max = rows.iter().map(|r| r.gcups()).fold(0.0, f64::max);
+    (mean, max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cells_for_search() {
+        let c = Cells::for_search(100, 1_000_000);
+        assert_eq!(c.0, 100_000_000);
+        assert!((c.gcups(0.1) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_buckets() {
+        let mut h = Histogram::new(vec![10, 100, 1000]);
+        for v in [1, 5, 50, 500, 5000, 9] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.max(), 5000);
+        assert!((h.mean() - (1.0 + 5.0 + 50.0 + 500.0 + 5000.0 + 9.0) / 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_exponential_covers() {
+        let h = Histogram::exponential(1024);
+        assert_eq!(h.bounds.len(), 11); // 1,2,4,...,1024
+    }
+
+    #[test]
+    fn histogram_quantiles_monotone() {
+        let mut h = Histogram::exponential(1 << 20);
+        for v in 0..1000u64 {
+            h.record(v * 7);
+        }
+        assert!(h.quantile(0.5) <= h.quantile(0.9));
+        assert!(h.quantile(0.9) <= h.quantile(1.0));
+    }
+
+    #[test]
+    fn summarize_mean_max() {
+        let rows = vec![
+            QueryPerf {
+                query_id: "a".into(),
+                query_len: 10,
+                cells: Cells(1_000_000_000),
+                seconds: 1.0,
+                best_score: 1,
+            },
+            QueryPerf {
+                query_id: "b".into(),
+                query_len: 10,
+                cells: Cells(3_000_000_000),
+                seconds: 1.0,
+                best_score: 2,
+            },
+        ];
+        let (mean, max) = summarize(&rows);
+        assert!((mean - 2.0).abs() < 1e-9);
+        assert!((max - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_summary_is_zero() {
+        assert_eq!(summarize(&[]), (0.0, 0.0));
+    }
+}

@@ -1,0 +1,231 @@
+//! Calibration constants and per-variant cost models for the simulated
+//! devices (DESIGN.md §2, §7).
+//!
+//! The container has one CPU core and no Xeon Phi, so *reported* GCUPS
+//! for the figure harnesses comes from a discrete-event simulation whose
+//! per-thread throughput model is calibrated here. Anchors:
+//!
+//! * Xeon Phi 5110P (paper §IV.A): 60 cores × 4 threads at 1.05 GHz; the
+//!   paper's single-coprocessor InterSP plateau ≈ 58.8 GCUPS over 240
+//!   device threads.
+//! * Xeon E5-2670 (paper's host): SWIPE reaches 80.1 GCUPS avg on 8
+//!   cores at 2.6 GHz → ≈ 10 GCUPS/core.
+//! * GeForce GTX Titan (Fig 8 comparator): CUDASW++ 3.0 GPU-only avg
+//!   108.9, max 115.4 GCUPS — used as an external comparator *curve*,
+//!   not a system we model internally.
+//!
+//! The per-variant models keep the *mechanisms*, not just the numbers:
+//!
+//! * InterSP pays a score-profile rebuild per 8-position window whose
+//!   cost amortizes over query length (the Fig 5 SP/QP crossover at
+//!   ≈ 375);
+//! * InterQP pays a per-cell gather premium but almost no per-column
+//!   overhead;
+//! * IntraQP pays striped padding (`⌈q/16⌉·16` lane quantization — the
+//!   Fig 5 fluctuation) plus a memory-hierarchy penalty once the striped
+//!   working set outgrows the 512 KB L2 (the paper's "device memory
+//!   accesses are still heavy" observation).
+//!
+//! `measured_ratio_*` lets harnesses re-derive the InterSP : InterQP :
+//! IntraQP ratios from *this container's* native engines instead of the
+//! paper anchors, so the variant ordering in our Fig 5 is an emergent
+//! measurement (EXPERIMENTS.md reports both).
+
+use crate::align::EngineKind;
+
+/// Cells/second one Phi device thread sustains at infinite query length,
+/// per variant. 240 threads × 0.2479e9 ≈ 59.5 GCUPS (InterSP plateau
+/// slightly above the paper's observed 58.8 max, which includes offload
+/// overheads the simulator charges separately).
+pub fn phi_thread_rate(kind: EngineKind) -> f64 {
+    match kind {
+        EngineKind::InterSP => 59.5e9 / PHI_THREADS as f64,
+        EngineKind::InterQP => 54.5e9 / PHI_THREADS as f64,
+        // intra plateau before utilization/memory penalties
+        EngineKind::IntraQP => 50.0e9 / PHI_THREADS as f64,
+        EngineKind::Scalar => 2.0e9 / PHI_THREADS as f64,
+    }
+}
+
+/// Per-variant "overhead length" C: effective rate at query length q is
+/// `rate / (1 + C/q)`. For InterSP, C models the score-profile rebuild
+/// amortization; the SP/QP pair is tuned so the crossover falls at
+/// q ≈ 366 (paper: ≥ 375 favours SP).
+pub fn phi_overhead_len(kind: EngineKind) -> f64 {
+    match kind {
+        EngineKind::InterSP => 50.0,
+        EngineKind::InterQP => 15.0,
+        EngineKind::IntraQP => 25.0,
+        EngineKind::Scalar => 5.0,
+    }
+}
+
+/// Device-thread counts of the paper's coprocessor.
+pub const PHI_CORES: usize = 60;
+pub const PHI_THREADS_PER_CORE: usize = 4;
+pub const PHI_THREADS: usize = PHI_CORES * PHI_THREADS_PER_CORE;
+pub const PHI_CLOCK_GHZ: f64 = 1.05;
+
+/// Offload model (LEO): fixed invocation latency per offload region plus
+/// PCIe gen2 x16 effective bandwidth for chunk transfer.
+pub const OFFLOAD_LATENCY_S: f64 = 250e-6;
+pub const OFFLOAD_BANDWIDTH_BPS: f64 = 6.0e9;
+/// One-time per-(query, device) setup: query/profile upload + region init.
+pub const OFFLOAD_SETUP_S: f64 = 3.0e-3;
+
+/// Host CPU (2 × E5-2670) per-core rates for the Fig 7 baselines.
+/// SWIPE ≈ 10 GCUPS/core (paper: 80.1 avg / 8 cores); its inter-sequence
+/// kernel has tiny per-query overhead.
+pub const SWIPE_CORE_RATE: f64 = 10.3e9;
+pub const SWIPE_OVERHEAD_LEN: f64 = 8.0;
+/// Dual-socket scaling efficiency at 16 cores (paper: 149.1/80.1 = 1.86×
+/// for 2×, i.e. ~93%).
+pub const HOST_16C_EFFICIENCY: f64 = 0.93;
+
+/// BLAST visited-cell processing rate per core (scalar-ish DP + seeding).
+pub const BLAST_VISIT_RATE: f64 = 1.6e9;
+/// Per-subject seeding scan cost (s) per subject residue per core.
+pub const BLAST_SCAN_COST_PER_RESIDUE: f64 = 1.0 / 2.4e9;
+/// Per word-hit processing cost (diagonal-array update, two-hit check).
+/// Calibrated so BLAST+ on 8 cores lands at the paper's measured
+/// ~175 GCUPS average over the query panel given our measured seeding
+/// statistics (the *variance* across queries stays a measurement).
+pub const BLAST_HIT_COST: f64 = 20e-9;
+
+/// CUDASW++ 3.0 on a GTX Titan (Fig 8 comparator curve): plateau and
+/// overhead length fitted to the paper's avg 108.9 / max 115.4.
+pub fn titan_gcups(qlen: usize) -> f64 {
+    116.0e9 * qlen as f64 / (qlen as f64 + 35.0) / 1e9
+}
+
+/// Striped-lane utilization of a query under 16-lane striping — the
+/// IntraQP sawtooth (real striped engines compute ⌈q/16⌉·16 lanes).
+pub fn striped_utilization(qlen: usize) -> f64 {
+    if qlen == 0 {
+        return 1.0;
+    }
+    let lanes = 16.0;
+    let padded = (qlen as f64 / lanes).ceil() * lanes;
+    qlen as f64 / padded
+}
+
+/// IntraQP memory-hierarchy derating: striped H/E/F working set is
+/// ~ 3 vectors × ⌈q/16⌉ × 64 B; past the 512 KB per-core L2 the paper
+/// observed heavy memory traffic. Smooth penalty with knee ≈ q = 2700.
+pub fn intra_memory_factor(qlen: usize) -> f64 {
+    let knee = 2700.0;
+    1.0 / (1.0 + (qlen as f64 / knee).powf(1.2) * 0.35)
+}
+
+/// Effective per-thread rate (cells/s) for a variant at a query length —
+/// the quantity the discrete-event simulator charges per padded cell.
+pub fn effective_thread_rate(kind: EngineKind, qlen: usize) -> f64 {
+    let base = phi_thread_rate(kind) / (1.0 + phi_overhead_len(kind) / qlen.max(1) as f64);
+    match kind {
+        EngineKind::IntraQP => base * striped_utilization(qlen) * intra_memory_factor(qlen),
+        _ => base,
+    }
+}
+
+/// Measure this container's native-engine per-cell ratios (InterSP = 1.0
+/// baseline) on a small workload — used by harnesses to report emergent
+/// variant ordering alongside the anchored model.
+pub fn measured_variant_ratios() -> [(EngineKind, f64); 3] {
+    use crate::align::{search_index, NativeAligner, QueryContext};
+    use crate::db::index::Index;
+    use crate::db::synth::{generate, generate_query, SynthSpec};
+    use std::time::Instant;
+
+    let idx = Index::build(generate(&SynthSpec::tiny(240, 1234)));
+    let sc = crate::matrices::Scoring::swaphi_default();
+    let q = generate_query(256, 99);
+    let ctx = QueryContext::build("calib", q, &sc);
+    let mut out = [(EngineKind::InterSP, 1.0), (EngineKind::InterQP, 1.0), (EngineKind::IntraQP, 1.0)];
+    let mut base = 0.0;
+    for (slot, kind) in EngineKind::PAPER_VARIANTS.iter().enumerate() {
+        let mut eng = NativeAligner::new(*kind);
+        // warmup
+        let _ = search_index(&mut eng, &ctx, &idx, &sc);
+        let t = Instant::now();
+        let _ = search_index(&mut eng, &ctx, &idx, &sc);
+        let dt = t.elapsed().as_secs_f64();
+        let rate = 1.0 / dt;
+        if slot == 0 {
+            base = rate;
+        }
+        out[slot] = (*kind, rate / base);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sp_beats_qp_only_above_crossover() {
+        let sp_short = effective_thread_rate(EngineKind::InterSP, 144);
+        let qp_short = effective_thread_rate(EngineKind::InterQP, 144);
+        assert!(qp_short > sp_short, "QP should win short queries");
+        let sp_long = effective_thread_rate(EngineKind::InterSP, 1000);
+        let qp_long = effective_thread_rate(EngineKind::InterQP, 1000);
+        assert!(sp_long > qp_long, "SP should win long queries");
+        // crossover in the paper's observed band (between 222 and 464)
+        let mut cross = 0;
+        for q in 144..2000 {
+            let sp = effective_thread_rate(EngineKind::InterSP, q);
+            let qp = effective_thread_rate(EngineKind::InterQP, q);
+            if sp >= qp {
+                cross = q;
+                break;
+            }
+        }
+        assert!((222..=464).contains(&cross), "crossover at {cross}");
+    }
+
+    #[test]
+    fn intra_is_slowest_variant_and_fluctuates() {
+        for q in [144usize, 464, 1000, 5478] {
+            let intra = effective_thread_rate(EngineKind::IntraQP, q);
+            let sp = effective_thread_rate(EngineKind::InterSP, q);
+            assert!(intra < sp, "q={q}");
+        }
+        // sawtooth: utilization dips just past multiples of 16
+        assert!(striped_utilization(64) > striped_utilization(65));
+        assert!((striped_utilization(64) - 1.0).abs() < 1e-12);
+        assert!((striped_utilization(65) - 65.0 / 80.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn intra_declines_for_very_long_queries() {
+        let peak = effective_thread_rate(EngineKind::IntraQP, 464);
+        let long = effective_thread_rate(EngineKind::IntraQP, 5472);
+        assert!(long < peak, "L2 derating should bite at 5.5k");
+    }
+
+    #[test]
+    fn single_device_plateau_near_paper() {
+        // 240 threads at q=5478 should land in the paper's ballpark
+        let g = effective_thread_rate(EngineKind::InterSP, 5478) * PHI_THREADS as f64 / 1e9;
+        assert!((55.0..62.0).contains(&g), "plateau {g}");
+    }
+
+    #[test]
+    fn titan_curve_matches_anchors() {
+        assert!((titan_gcups(5478) - 115.3).abs() < 1.5);
+        // average over the paper's panel lands near 108.9
+        let lens = crate::db::synth::PAPER_QUERY_LENS;
+        let avg: f64 = lens.iter().map(|&q| titan_gcups(q)).sum::<f64>() / lens.len() as f64;
+        assert!((104.0..113.0).contains(&avg), "avg {avg}");
+    }
+
+    #[test]
+    fn rates_positive_and_finite() {
+        for kind in EngineKind::PAPER_VARIANTS {
+            for q in [1usize, 144, 5478, 100_000] {
+                let r = effective_thread_rate(kind, q);
+                assert!(r.is_finite() && r > 0.0, "{kind:?} q={q}");
+            }
+        }
+    }
+}

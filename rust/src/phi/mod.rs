@@ -1,0 +1,9 @@
+//! Xeon Phi coprocessor substitution layer: device model, offload cost
+//! model, OpenMP-style schedulers and the discrete-event simulator that
+//! turns real chunk workloads into paper-comparable GCUPS numbers
+//! (DESIGN.md §2 — the hardware substitution).
+
+pub mod calibration;
+pub mod offload;
+pub mod sched;
+pub mod sim;

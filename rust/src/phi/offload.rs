@@ -1,0 +1,72 @@
+//! Offload (LEO) cost model — paper §II.B.
+//!
+//! The offload model "sends input data and code to the coprocessor at
+//! startup time of an offload region, and then transfers back the output
+//! data"; each chunk offload pays a fixed invocation latency plus PCIe
+//! transfer time, and each (query, device) pair pays a one-time setup.
+//! Fig 8's droop on the small database is exactly these costs failing to
+//! amortize — the simulator reproduces it from the same mechanism.
+
+use super::calibration;
+
+/// Offload cost parameters (seconds / bytes-per-second).
+#[derive(Clone, Copy, Debug)]
+pub struct OffloadModel {
+    /// Fixed latency per offload region invocation.
+    pub latency_s: f64,
+    /// Effective host↔device bandwidth.
+    pub bandwidth_bps: f64,
+    /// One-time per-(query, device) setup (query profile upload, region
+    /// initialization).
+    pub setup_s: f64,
+}
+
+impl Default for OffloadModel {
+    fn default() -> Self {
+        OffloadModel {
+            latency_s: calibration::OFFLOAD_LATENCY_S,
+            bandwidth_bps: calibration::OFFLOAD_BANDWIDTH_BPS,
+            setup_s: calibration::OFFLOAD_SETUP_S,
+        }
+    }
+}
+
+impl OffloadModel {
+    /// A hypothetical zero-cost offload (native-model ablation).
+    pub fn free() -> Self {
+        OffloadModel { latency_s: 0.0, bandwidth_bps: f64::INFINITY, setup_s: 0.0 }
+    }
+
+    /// Cost of offloading one chunk of `bytes` (input transfer; the
+    /// returned scores are negligible next to the input).
+    pub fn chunk_cost(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_cost_components() {
+        let m = OffloadModel { latency_s: 1e-3, bandwidth_bps: 1e9, setup_s: 0.0 };
+        assert!((m.chunk_cost(1_000_000) - (1e-3 + 1e-3)).abs() < 1e-12);
+        assert!((m.chunk_cost(0) - 1e-3).abs() < 1e-15);
+    }
+
+    #[test]
+    fn free_model_costs_nothing() {
+        let m = OffloadModel::free();
+        assert_eq!(m.chunk_cost(u64::MAX), 0.0);
+        assert_eq!(m.setup_s, 0.0);
+    }
+
+    #[test]
+    fn default_matches_calibration() {
+        let m = OffloadModel::default();
+        assert_eq!(m.latency_s, calibration::OFFLOAD_LATENCY_S);
+        // a 4 MiB chunk should cost well under 2 ms on PCIe gen2 x16
+        assert!(m.chunk_cost(4 << 20) < 2e-3);
+    }
+}

@@ -1,0 +1,234 @@
+//! OpenMP-style loop schedulers (paper §III.A).
+//!
+//! The paper parallelizes the per-chunk alignment loop over 240 device
+//! threads and evaluates the four OpenMP policies, finding `static` worst
+//! (irregular iteration costs from varying subject lengths) and `guided`
+//! best by a slight margin — which we reproduce as the `ablation_sched`
+//! bench. The same policies drive the discrete-event simulator and the
+//! real host-thread chunk pool.
+
+/// OpenMP loop scheduling policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// Pre-split into equal contiguous blocks, one per thread.
+    Static,
+    /// Threads grab one iteration at a time from a shared counter.
+    Dynamic,
+    /// Threads grab `⌈remaining / 2T⌉` iterations (shrinking grants).
+    Guided,
+    /// Implementation-defined; like OpenMP runtimes we map it to guided.
+    Auto,
+}
+
+impl Policy {
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s.to_ascii_lowercase().as_str() {
+            "static" => Some(Policy::Static),
+            "dynamic" => Some(Policy::Dynamic),
+            "guided" => Some(Policy::Guided),
+            "auto" => Some(Policy::Auto),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Static => "static",
+            Policy::Dynamic => "dynamic",
+            Policy::Guided => "guided",
+            Policy::Auto => "auto",
+        }
+    }
+
+    pub const ALL: [Policy; 4] = [Policy::Static, Policy::Dynamic, Policy::Guided, Policy::Auto];
+}
+
+/// Serialization cost of one scheduling grant: the shared loop counter /
+/// work queue is a central atomic that 240 device threads contend on.
+/// Dynamic scheduling pays it per iteration; guided amortizes it over
+/// shrinking blocks — which is exactly why the paper finds guided ahead
+/// of dynamic "albeit by a slight margin" (§III.A).
+pub const GRANT_OVERHEAD_S: f64 = 2.5e-6;
+
+/// Deterministic list-scheduling simulation: given per-item costs and `t`
+/// threads, return the makespan under the policy (plus per-thread busy
+/// time for utilization accounting).
+///
+/// This is the core of the Xeon Phi discrete-event model: within a chunk
+/// the 240 device threads execute the alignment loop under the chosen
+/// OpenMP schedule; the simulated chunk latency is the policy's makespan.
+pub fn simulate_schedule(costs: &[f64], t: usize, policy: Policy) -> ScheduleOutcome {
+    assert!(t >= 1);
+    match policy {
+        Policy::Static => simulate_static(costs, t),
+        Policy::Dynamic => simulate_chunked(costs, t, |_remaining, _t| 1),
+        Policy::Guided | Policy::Auto => simulate_chunked(costs, t, |remaining, t| {
+            (remaining.div_ceil(2 * t)).max(1)
+        }),
+    }
+}
+
+/// Outcome of one scheduled loop.
+#[derive(Clone, Debug)]
+pub struct ScheduleOutcome {
+    pub makespan: f64,
+    pub busy: Vec<f64>,
+    /// Number of scheduling grants (work-queue interactions).
+    pub grants: usize,
+}
+
+impl ScheduleOutcome {
+    /// Mean utilization = Σbusy / (T × makespan).
+    pub fn utilization(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            return 1.0;
+        }
+        self.busy.iter().sum::<f64>() / (self.busy.len() as f64 * self.makespan)
+    }
+}
+
+fn simulate_static(costs: &[f64], t: usize) -> ScheduleOutcome {
+    // OpenMP static: contiguous blocks of ⌈n/t⌉
+    let n = costs.len();
+    let block = n.div_ceil(t.max(1)).max(1);
+    let mut busy = vec![0.0; t];
+    for (b, chunk) in costs.chunks(block).enumerate() {
+        busy[b % t] += chunk.iter().sum::<f64>();
+    }
+    let makespan = busy.iter().cloned().fold(0.0, f64::max);
+    ScheduleOutcome { makespan, busy, grants: n.div_ceil(block) }
+}
+
+fn simulate_chunked(
+    costs: &[f64],
+    t: usize,
+    grant: impl Fn(usize, usize) -> usize,
+) -> ScheduleOutcome {
+    // event-driven: threads pull shrinking grants when they go idle; the
+    // grant itself serializes through the shared counter (central lock)
+    let n = costs.len();
+    let mut busy = vec![0.0; t];
+    let mut clock = vec![0.0f64; t]; // next-free time per thread
+    let mut lock_free_at = 0.0f64;
+    let mut next = 0usize;
+    let mut grants = 0usize;
+    while next < n {
+        // earliest-free thread takes the next grant
+        let (ti, _) = clock
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        let take = grant(n - next, t).min(n - next);
+        let cost: f64 = costs[next..next + take].iter().sum();
+        let start = clock[ti].max(lock_free_at);
+        lock_free_at = start + GRANT_OVERHEAD_S;
+        clock[ti] = start + GRANT_OVERHEAD_S + cost;
+        busy[ti] += cost;
+        next += take;
+        grants += 1;
+    }
+    let makespan = clock.iter().cloned().fold(0.0, f64::max);
+    ScheduleOutcome { makespan, busy, grants }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn skewed_costs(n: usize, seed: u64) -> Vec<f64> {
+        // length-sorted ascending like the index: late items much bigger
+        let mut rng = Rng::new(seed);
+        let mut v: Vec<f64> = (0..n).map(|i| (i as f64 + 1.0) * (0.8 + 0.4 * rng.f64())).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v
+    }
+
+    #[test]
+    fn makespan_bounds_hold() {
+        let costs = skewed_costs(500, 3);
+        let total: f64 = costs.iter().sum();
+        let maxc = costs.iter().cloned().fold(0.0, f64::max);
+        for policy in Policy::ALL {
+            let o = simulate_schedule(&costs, 8, policy);
+            let lower = (total / 8.0).max(maxc);
+            assert!(o.makespan >= lower - 1e-9, "{policy:?}: {} < {lower}", o.makespan);
+            assert!(o.makespan <= total + 1e-9, "{policy:?}");
+            let busy_sum: f64 = o.busy.iter().sum();
+            assert!((busy_sum - total).abs() < 1e-6, "{policy:?} conservation");
+        }
+    }
+
+    #[test]
+    fn static_worst_on_sorted_irregular_loop() {
+        // the paper's observation: static scheduling suffers on the
+        // ascending-length loop because the last block holds all the
+        // long alignments
+        let costs = skewed_costs(960, 5);
+        let st = simulate_schedule(&costs, 16, Policy::Static).makespan;
+        let dy = simulate_schedule(&costs, 16, Policy::Dynamic).makespan;
+        let gu = simulate_schedule(&costs, 16, Policy::Guided).makespan;
+        assert!(st > dy, "static {st} should beat... be worse than dynamic {dy}");
+        assert!(st > gu, "static {st} vs guided {gu}");
+    }
+
+    #[test]
+    fn guided_fewer_grants_than_dynamic() {
+        let costs = skewed_costs(1000, 7);
+        let dy = simulate_schedule(&costs, 16, Policy::Dynamic);
+        let gu = simulate_schedule(&costs, 16, Policy::Guided);
+        assert!(gu.grants < dy.grants, "guided {} vs dynamic {}", gu.grants, dy.grants);
+        assert_eq!(dy.grants, 1000);
+    }
+
+    #[test]
+    fn auto_is_guided() {
+        let costs = skewed_costs(300, 9);
+        let a = simulate_schedule(&costs, 8, Policy::Auto);
+        let g = simulate_schedule(&costs, 8, Policy::Guided);
+        assert_eq!(a.makespan, g.makespan);
+        assert_eq!(a.grants, g.grants);
+    }
+
+    #[test]
+    fn single_thread_makespan_is_total() {
+        let costs = skewed_costs(50, 11);
+        let total: f64 = costs.iter().sum();
+        for policy in Policy::ALL {
+            let o = simulate_schedule(&costs, 1, policy);
+            let ovh = if policy == Policy::Static {
+                0.0
+            } else {
+                o.grants as f64 * GRANT_OVERHEAD_S
+            };
+            assert!((o.makespan - total - ovh).abs() < 1e-9, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn empty_loop() {
+        for policy in Policy::ALL {
+            let o = simulate_schedule(&[], 4, policy);
+            assert_eq!(o.makespan, 0.0);
+            assert_eq!(o.grants, 0);
+        }
+    }
+
+    #[test]
+    fn utilization_in_unit_range() {
+        let costs = skewed_costs(200, 13);
+        for policy in Policy::ALL {
+            let o = simulate_schedule(&costs, 32, policy);
+            let u = o.utilization();
+            assert!((0.0..=1.0 + 1e-9).contains(&u), "{policy:?} {u}");
+        }
+    }
+
+    #[test]
+    fn policy_parsing() {
+        assert_eq!(Policy::parse("guided"), Some(Policy::Guided));
+        assert_eq!(Policy::parse("STATIC"), Some(Policy::Static));
+        assert_eq!(Policy::parse("nope"), None);
+    }
+}

@@ -1,0 +1,169 @@
+//! artifacts/manifest.json — the AOT contract between L2 and L3.
+//!
+//! aot.py records, for every lowered bucket, the static shapes and the
+//! positional argument order; the runtime refuses to guess. Bucket
+//! selection picks the smallest artifact that fits a (query length,
+//! subject length) pair for a given variant.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// One AOT artifact (static-shape executable).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub variant: String,
+    pub qpad: usize,
+    pub lpad: usize,
+    pub ns: usize,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e} (run `make artifacts`)", path.display()))?;
+        let json = Json::parse(&text)?;
+        if json.str_field("format")? != "hlo-text" {
+            anyhow::bail!("unsupported artifact format {:?}", json.str_field("format")?);
+        }
+        let mut artifacts = Vec::new();
+        for entry in json
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing artifacts[]"))?
+        {
+            let spec = ArtifactSpec {
+                name: entry.str_field("name")?.to_string(),
+                file: dir.join(entry.str_field("file")?),
+                variant: entry.str_field("variant")?.to_string(),
+                qpad: entry.usize_field("qpad")?,
+                lpad: entry.usize_field("lpad")?,
+                ns: entry.usize_field("ns")?,
+            };
+            if !spec.file.exists() {
+                anyhow::bail!("manifest references missing artifact {}", spec.file.display());
+            }
+            artifacts.push(spec);
+        }
+        if artifacts.is_empty() {
+            anyhow::bail!("manifest has no artifacts");
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    /// Variants present in the manifest, deduped.
+    pub fn variants(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.artifacts.iter().map(|a| a.variant.as_str()).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    /// Smallest bucket of `variant` fitting a query of `qlen` and subject
+    /// (padded profile) length `slen`. Minimizes wasted padded cells.
+    pub fn pick(&self, variant: &str, qlen: usize, slen: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.variant == variant && a.qpad >= qlen && a.lpad >= slen)
+            .min_by_key(|a| a.qpad * a.lpad)
+    }
+
+    /// Largest subject length any bucket of `variant` can take for `qlen`.
+    pub fn max_lpad(&self, variant: &str, qlen: usize) -> Option<usize> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.variant == variant && a.qpad >= qlen)
+            .map(|a| a.lpad)
+            .max()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, entries: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            format!(r#"{{"format": "hlo-text", "artifacts": [{entries}]}}"#),
+        )
+        .unwrap();
+    }
+
+    fn entry(name: &str, variant: &str, q: usize, l: usize, n: usize) -> String {
+        format!(
+            r#"{{"name":"{name}","file":"{name}.hlo.txt","variant":"{variant}","qpad":{q},"lpad":{l},"ns":{n}}}"#
+        )
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("swaphi-manifest-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn loads_and_picks_smallest_fit() {
+        let dir = tmp("pick");
+        let entries = [
+            entry("a", "inter_gather", 128, 256, 32),
+            entry("b", "inter_gather", 512, 512, 32),
+            entry("c", "inter_gather", 512, 2048, 32),
+            entry("d", "striped", 128, 256, 16),
+        ]
+        .join(",");
+        write_manifest(&dir, &entries);
+        for n in ["a", "b", "c", "d"] {
+            std::fs::write(dir.join(format!("{n}.hlo.txt")), "HloModule x").unwrap();
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 4);
+        assert_eq!(m.variants(), vec!["inter_gather", "striped"]);
+        assert_eq!(m.pick("inter_gather", 100, 200).unwrap().name, "a");
+        assert_eq!(m.pick("inter_gather", 300, 400).unwrap().name, "b");
+        assert_eq!(m.pick("inter_gather", 300, 1000).unwrap().name, "c");
+        assert!(m.pick("inter_gather", 600, 100).is_none());
+        assert!(m.pick("nope", 10, 10).is_none());
+        assert_eq!(m.max_lpad("inter_gather", 400), Some(2048));
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn missing_artifact_file_rejected() {
+        let dir = tmp("missing");
+        write_manifest(&dir, &entry("gone", "x", 8, 8, 8));
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn missing_manifest_hints_make() {
+        let dir = tmp("nomanifest");
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn real_generated_manifest_loads() {
+        // integration with the actual `make artifacts` output when present
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.artifacts.len() >= 3);
+            assert!(m.variants().contains(&"inter_gather"));
+        }
+    }
+}

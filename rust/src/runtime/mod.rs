@@ -1,0 +1,267 @@
+//! PJRT runtime — loads the AOT HLO-text artifacts and executes them on
+//! the request path (L3 ↔ L2 bridge).
+//!
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`, with a lazy per-artifact compile cache
+//! (each bucket compiles once per process, like the paper's one-time
+//! offload-region initialization per coprocessor). Python is never
+//! touched at runtime: the artifacts directory is the entire contract.
+
+pub mod manifest;
+
+use crate::align::{ProfileAligner, QueryContext};
+use crate::alphabet::{DUMMY, ROW};
+use crate::db::profile::{SequenceProfile, LANES};
+use crate::matrices::Scoring;
+use manifest::{ArtifactSpec, Manifest};
+use std::collections::HashMap;
+use std::path::Path;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// A compiled-executable cache over the artifact manifest.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client over an artifacts directory.
+    pub fn open(artifacts_dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(PjrtRuntime { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Platform string of the PJRT backend (e.g. "cpu" / "Host").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) the executable for an artifact.
+    pub fn executable(&self, spec: &ArtifactSpec) -> anyhow::Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(&spec.name) {
+            return Ok(Rc::clone(exe));
+        }
+        let proto = xla::HloModuleProto::from_text_file(&spec.file)
+            .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", spec.name))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(spec.name.clone(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Number of executables compiled so far (observability / tests).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Execute one chunk alignment: query profile (qpad×32, row-major),
+    /// subjects (ns×lpad codes), returns `ns` scores.
+    ///
+    /// Inputs must already match the artifact's static shapes; use
+    /// [`PjrtAligner`] for the padding/marshalling logic.
+    pub fn run_chunk(
+        &self,
+        spec: &ArtifactSpec,
+        qprof: &[i32],
+        subjects: &[i32],
+        alpha: i32,
+        beta: i32,
+    ) -> anyhow::Result<Vec<i32>> {
+        anyhow::ensure!(qprof.len() == spec.qpad * ROW, "qprof shape mismatch");
+        anyhow::ensure!(subjects.len() == spec.ns * spec.lpad, "subjects shape mismatch");
+        let exe = self.executable(spec)?;
+        let qprof_lit = xla::Literal::vec1(qprof)
+            .reshape(&[spec.qpad as i64, ROW as i64])
+            .map_err(|e| anyhow::anyhow!("qprof literal: {e:?}"))?;
+        let subj_lit = xla::Literal::vec1(subjects)
+            .reshape(&[spec.ns as i64, spec.lpad as i64])
+            .map_err(|e| anyhow::anyhow!("subjects literal: {e:?}"))?;
+        let gaps_lit = xla::Literal::vec1(&[alpha, beta]);
+        let result = exe
+            .execute::<xla::Literal>(&[qprof_lit, subj_lit, gaps_lit])
+            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", spec.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → 1-tuple
+        let scores = lit
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?
+            .to_vec::<i32>()
+            .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+        anyhow::ensure!(scores.len() == spec.ns, "expected {} scores, got {}", spec.ns, scores.len());
+        Ok(scores)
+    }
+}
+
+/// Map an [`crate::align::EngineKind`]-style variant name to the artifact
+/// variant naming of aot.py.
+pub fn artifact_variant(kind: crate::align::EngineKind) -> &'static str {
+    match kind {
+        crate::align::EngineKind::InterSP => "inter_onehot",
+        crate::align::EngineKind::InterQP => "inter_gather",
+        crate::align::EngineKind::IntraQP => "striped",
+        crate::align::EngineKind::Scalar => "inter_gather",
+    }
+}
+
+/// A [`ProfileAligner`] that executes sequence profiles through the AOT
+/// artifacts — the full three-layer request path.
+pub struct PjrtAligner {
+    runtime: Rc<PjrtRuntime>,
+    variant: &'static str,
+    /// scratch to avoid re-allocating the subjects tile per profile
+    subjects_buf: Vec<i32>,
+    qprof_buf: Vec<i32>,
+    qprof_qpad: usize,
+}
+
+impl PjrtAligner {
+    pub fn new(runtime: Rc<PjrtRuntime>, kind: crate::align::EngineKind) -> Self {
+        PjrtAligner {
+            runtime,
+            variant: artifact_variant(kind),
+            subjects_buf: Vec::new(),
+            qprof_buf: Vec::new(),
+            qprof_qpad: 0,
+        }
+    }
+
+    /// Pick the bucket for this (qlen, profile length) or explain why not.
+    fn pick(&self, qlen: usize, slen: usize) -> anyhow::Result<ArtifactSpec> {
+        self.runtime.manifest.pick(self.variant, qlen, slen).cloned().ok_or_else(|| {
+            anyhow::anyhow!(
+                "no {} artifact fits qlen={qlen} slen={slen}; available: {:?}",
+                self.variant,
+                self.runtime
+                    .manifest
+                    .artifacts
+                    .iter()
+                    .filter(|a| a.variant == self.variant)
+                    .map(|a| (a.qpad, a.lpad))
+                    .collect::<Vec<_>>()
+            )
+        })
+    }
+
+    fn build_qprof(&mut self, ctx: &QueryContext, sc: &Scoring, qpad: usize) {
+        if self.qprof_qpad == qpad && !self.qprof_buf.is_empty() {
+            return; // cached for this query/bucket
+        }
+        // rows for real query positions, all-zero rows for DUMMY padding
+        self.qprof_buf.clear();
+        self.qprof_buf.resize(qpad * ROW, 0);
+        for (i, &q) in ctx.codes.iter().enumerate() {
+            let row = sc.row(q);
+            self.qprof_buf[i * ROW..(i + 1) * ROW].copy_from_slice(row);
+        }
+        self.qprof_qpad = qpad;
+    }
+}
+
+impl ProfileAligner for PjrtAligner {
+    fn name(&self) -> &'static str {
+        self.variant
+    }
+
+    fn align(
+        &mut self,
+        ctx: &QueryContext,
+        profile: &SequenceProfile,
+        sc: &Scoring,
+    ) -> [i32; LANES] {
+        let spec = self
+            .pick(ctx.len(), profile.padded_len)
+            .expect("no artifact bucket fits; regenerate artifacts with bigger buckets");
+        self.build_qprof(ctx, sc, spec.qpad);
+        // marshal the profile's lanes into the subjects tile, DUMMY-padded
+        self.subjects_buf.clear();
+        self.subjects_buf.resize(spec.ns * spec.lpad, DUMMY as i32);
+        for lane in 0..profile.used {
+            let len = profile.lens[lane];
+            for j in 0..len {
+                self.subjects_buf[lane * spec.lpad + j] = profile.vector(j)[lane] as i32;
+            }
+        }
+        let scores = self
+            .runtime
+            .run_chunk(&spec, &self.qprof_buf, &self.subjects_buf, sc.gap_extend, sc.beta())
+            .expect("PJRT execution failed");
+        let mut out = [0i32; LANES];
+        out.copy_from_slice(&scores[..LANES.min(scores.len())]);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::align::{search_index, EngineKind, NativeAligner};
+    use crate::db::index::Index;
+    use crate::db::synth::{generate, SynthSpec};
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn runtime() -> Option<Rc<PjrtRuntime>> {
+        if !artifacts_dir().join("manifest.json").exists() {
+            eprintln!("skipping PJRT test: run `make artifacts` first");
+            return None;
+        }
+        Some(Rc::new(PjrtRuntime::open(artifacts_dir()).unwrap()))
+    }
+
+    #[test]
+    fn pjrt_matches_native_engines_small_db() {
+        let Some(rt) = runtime() else { return };
+        let db = generate(&SynthSpec::tiny(48, 33));
+        let idx = Index::build(db);
+        let sc = Scoring::swaphi_default();
+        let q = crate::db::synth::generate_query(48, 12);
+        let ctx = crate::align::QueryContext::build("q", q, &sc);
+
+        let mut native = NativeAligner::new(EngineKind::Scalar);
+        let expect = search_index(&mut native, &ctx, &idx, &sc);
+
+        for kind in [EngineKind::InterQP, EngineKind::InterSP, EngineKind::IntraQP] {
+            let mut pjrt = PjrtAligner::new(Rc::clone(&rt), kind);
+            let got = search_index(&mut pjrt, &ctx, &idx, &sc);
+            assert_eq!(got, expect, "pjrt {:?} vs scalar", kind);
+        }
+    }
+
+    #[test]
+    fn executable_cache_compiles_once() {
+        let Some(rt) = runtime() else { return };
+        let spec = rt.manifest.pick("inter_gather", 64, 128).unwrap().clone();
+        assert_eq!(rt.compiled_count(), 0);
+        rt.executable(&spec).unwrap();
+        assert_eq!(rt.compiled_count(), 1);
+        rt.executable(&spec).unwrap();
+        assert_eq!(rt.compiled_count(), 1);
+    }
+
+    #[test]
+    fn run_chunk_validates_shapes() {
+        let Some(rt) = runtime() else { return };
+        let spec = rt.manifest.pick("inter_gather", 64, 128).unwrap().clone();
+        let err = rt.run_chunk(&spec, &[0i32; 3], &[0i32; 3], 2, 12);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn variant_mapping() {
+        assert_eq!(artifact_variant(EngineKind::InterSP), "inter_onehot");
+        assert_eq!(artifact_variant(EngineKind::InterQP), "inter_gather");
+        assert_eq!(artifact_variant(EngineKind::IntraQP), "striped");
+    }
+}

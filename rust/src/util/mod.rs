@@ -1,0 +1,63 @@
+//! In-tree substrates replacing crates unavailable in the offline vendor
+//! set: PRNG (`rand`), property testing (`proptest`), thread pool
+//! (`tokio`/`rayon`), and tiny helpers.
+
+pub mod check;
+pub mod pool;
+pub mod json;
+pub mod rng;
+
+/// Round `n` up to the next multiple of `m` (m > 0).
+#[inline]
+pub fn round_up(n: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    n.div_ceil(m) * m
+}
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+/// Format a cell-updates-per-second rate as GCUPS with 1 decimal.
+pub fn fmt_gcups(cells: u128, seconds: f64) -> String {
+    format!("{:.1}", gcups(cells, seconds))
+}
+
+/// Billion cell updates per second.
+#[inline]
+pub fn gcups(cells: u128, seconds: f64) -> f64 {
+    if seconds <= 0.0 {
+        return 0.0;
+    }
+    cells as f64 / seconds / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_multiples() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+        assert_eq!(round_up(15, 16), 16);
+        assert_eq!(round_up(17, 16), 32);
+    }
+
+    #[test]
+    fn gcups_math() {
+        assert_eq!(gcups(1_000_000_000, 1.0), 1.0);
+        assert_eq!(gcups(2_000_000_000, 0.5), 4.0);
+        assert_eq!(gcups(0, 1.0), 0.0);
+        assert_eq!(gcups(100, 0.0), 0.0);
+    }
+
+    #[test]
+    fn fmt_gcups_one_decimal() {
+        assert_eq!(fmt_gcups(58_800_000_000, 1.0), "58.8");
+    }
+}

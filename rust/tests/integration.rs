@@ -1,0 +1,235 @@
+//! Cross-module integration tests: full pipeline (synth → FASTA → index
+//! file → coordinator → report), backend equivalence including the PJRT
+//! artifacts, chunking/device invariances, and end-to-end determinism.
+
+use swaphi::align::EngineKind;
+use swaphi::coordinator::{Coordinator, NativeFactory, PjrtFactory, SearchConfig};
+use swaphi::db::chunk::ChunkPlanConfig;
+use swaphi::db::format::{write_index, IndexView};
+use swaphi::db::index::Index;
+use swaphi::db::synth::{generate, generate_query, SynthSpec};
+use swaphi::db::Database;
+use swaphi::fasta;
+use swaphi::matrices::Scoring;
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("swaphi-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn full_pipeline_fasta_roundtrip() {
+    let dir = tmpdir("pipeline");
+    // synth -> FASTA on disk
+    let db = generate(&SynthSpec::tiny(150, 77));
+    let records: Vec<fasta::Record> = db
+        .seqs
+        .iter()
+        .map(|s| fasta::Record::new(s.id.clone(), swaphi::alphabet::decode(&s.codes)))
+        .collect();
+    let fasta_path = dir.join("db.fasta");
+    fasta::write_path(&fasta_path, &records).unwrap();
+
+    // FASTA -> Database -> Index -> binary file -> mmap view
+    let db2 = Database::from_fasta_path(&fasta_path).unwrap();
+    assert_eq!(db2.len(), db.len());
+    assert_eq!(db2.total_residues(), db.total_residues());
+    let index = Index::build(db2);
+    let idx_path = dir.join("db.idx");
+    write_index(&idx_path, &index).unwrap();
+    let loaded = IndexView::open(&idx_path).unwrap().to_index();
+    assert_eq!(loaded.seqs, index.seqs);
+
+    // search through the coordinator
+    let sc = Scoring::swaphi_default();
+    let coord = Coordinator::new(&loaded, sc, SearchConfig::default());
+    let q = generate_query(80, 3);
+    let r = coord.search(&NativeFactory(EngineKind::InterSP), "q", &q).unwrap();
+    assert_eq!(r.scores.len(), index.n_seqs());
+    assert!(r.hits[0].score >= r.hits[1].score);
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+#[test]
+fn chunking_invariance() {
+    // the same search must produce identical scores regardless of chunk
+    // size or device count
+    let index = Index::build(generate(&SynthSpec::tiny(200, 5)));
+    let sc = Scoring::swaphi_default();
+    let q = generate_query(64, 9);
+    let mut reference = None;
+    for target in [2048u128, 8192, 1 << 19] {
+        for devices in [1usize, 3] {
+            let coord = Coordinator::new(
+                &index,
+                sc.clone(),
+                SearchConfig {
+                    devices,
+                    chunk: ChunkPlanConfig { target_padded_residues: target },
+                    sim: None,
+                    ..Default::default()
+                },
+            );
+            let r = coord.search(&NativeFactory(EngineKind::InterQP), "q", &q).unwrap();
+            match &reference {
+                None => reference = Some(r.scores),
+                Some(expect) => {
+                    assert_eq!(&r.scores, expect, "target={target} devices={devices}")
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn deterministic_end_to_end() {
+    let run = || {
+        let index = Index::build(generate(&SynthSpec::trembl_mini(300, 123)));
+        let sc = Scoring::swaphi_default();
+        let coord = Coordinator::new(&index, sc, SearchConfig { devices: 2, ..Default::default() });
+        let q = generate_query(120, 44);
+        let r = coord.search(&NativeFactory(EngineKind::InterSP), "q", &q).unwrap();
+        (r.scores, r.hits.iter().map(|h| (h.seq_index, h.score)).collect::<Vec<_>>())
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn pjrt_backend_through_coordinator_matches_native() {
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let index = Index::build(generate(&SynthSpec::tiny(64, 31)));
+    let sc = Scoring::swaphi_default();
+    let coord = Coordinator::new(&index, sc, SearchConfig { sim: None, ..Default::default() });
+    let q = generate_query(100, 8);
+    let native = coord.search(&NativeFactory(EngineKind::InterQP), "q", &q).unwrap();
+    for kind in EngineKind::PAPER_VARIANTS {
+        let pjrt = coord
+            .search(&PjrtFactory { artifacts_dir: artifacts_dir(), kind }, "q", &q)
+            .unwrap();
+        assert_eq!(pjrt.scores, native.scores, "{kind:?}");
+    }
+}
+
+#[test]
+fn pjrt_multi_device_host_threads() {
+    // each host thread opens its own PJRT runtime — the paper's
+    // one-offload-context-per-coprocessor ownership under real threads
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let index = Index::build(generate(&SynthSpec::tiny(96, 13)));
+    let sc = Scoring::swaphi_default();
+    let coord = Coordinator::new(
+        &index,
+        sc,
+        SearchConfig {
+            devices: 2,
+            chunk: ChunkPlanConfig { target_padded_residues: 4096 },
+            sim: None,
+            ..Default::default()
+        },
+    );
+    let q = generate_query(64, 21);
+    let native = coord.search(&NativeFactory(EngineKind::InterSP), "q", &q).unwrap();
+    let pjrt = coord
+        .search(
+            &PjrtFactory { artifacts_dir: artifacts_dir(), kind: EngineKind::InterSP },
+            "q",
+            &q,
+        )
+        .unwrap();
+    assert_eq!(pjrt.scores, native.scores);
+}
+
+#[test]
+fn different_scoring_schemes_end_to_end() {
+    let index = Index::build(generate(&SynthSpec::tiny(80, 17)));
+    let q = generate_query(50, 6);
+    let mut distinct = std::collections::HashSet::new();
+    for (matrix, open, ext) in [("BLOSUM62", 10, 2), ("BLOSUM50", 13, 2), ("PAM250", 12, 2)] {
+        let sc = Scoring::new(matrix, open, ext).unwrap();
+        let coord = Coordinator::new(&index, sc, SearchConfig { sim: None, ..Default::default() });
+        let r = coord.search(&NativeFactory(EngineKind::InterSP), "q", &q).unwrap();
+        // cross-check against the scalar oracle under the same scheme
+        let oracle = coord.search(&NativeFactory(EngineKind::Scalar), "q", &q).unwrap();
+        assert_eq!(r.scores, oracle.scores, "{matrix}");
+        distinct.insert(r.scores.clone());
+    }
+    assert!(distinct.len() > 1, "schemes should differ on some sequence");
+}
+
+#[test]
+fn index_utilization_reported_sane() {
+    let index = Index::build(generate(&SynthSpec::trembl_mini(1500, 99)));
+    let u = index.mean_utilization();
+    assert!((0.5..=1.0).contains(&u), "utilization {u}");
+    let cells_padded = index.padded_cells(100);
+    let cells_real = index.total_residues * 100;
+    assert!(cells_padded >= cells_real);
+}
+
+#[test]
+fn factory_failure_propagates_as_error() {
+    // a backend that cannot initialize must fail the search cleanly (not
+    // hang or lose scores) — e.g. PJRT pointed at a missing artifact dir
+    let index = Index::build(generate(&SynthSpec::tiny(32, 3)));
+    let sc = Scoring::swaphi_default();
+    let coord = Coordinator::new(&index, sc, SearchConfig { devices: 2, ..Default::default() });
+    let q = generate_query(20, 1);
+    let err = coord
+        .search(
+            &PjrtFactory {
+                artifacts_dir: std::path::PathBuf::from("/nonexistent/artifacts"),
+                kind: EngineKind::InterSP,
+            },
+            "q",
+            &q,
+        )
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("manifest") || err.contains("artifacts"), "{err}");
+}
+
+#[test]
+fn fasta_header_only_record_at_eof() {
+    let recs = fasta::parse(b">only-header").unwrap();
+    assert_eq!(recs.len(), 1);
+    assert!(recs[0].seq.is_empty());
+}
+
+#[test]
+fn search_queries_longer_than_any_subject() {
+    // query longer than every database sequence still aligns locally
+    let index = Index::build(generate(&SynthSpec::tiny(40, 19)));
+    let sc = Scoring::swaphi_default();
+    let coord = Coordinator::new(&index, sc, SearchConfig { sim: None, ..Default::default() });
+    let q = generate_query(2_000, 77);
+    let r = coord.search(&NativeFactory(EngineKind::InterSP), "long", &q).unwrap();
+    let oracle = coord.search(&NativeFactory(EngineKind::Scalar), "long", &q).unwrap();
+    assert_eq!(r.scores, oracle.scores);
+    assert!(r.hits[0].score > 0);
+}
+
+#[test]
+fn single_sequence_database() {
+    let db = Database::new(vec![swaphi::db::DbSeq::from_ascii("solo", b"MKWVTFISLLLLFSSAYS")]);
+    let index = Index::build(db);
+    let sc = Scoring::swaphi_default();
+    let coord = Coordinator::new(&index, sc, SearchConfig::default());
+    let q = swaphi::alphabet::encode(b"MKWVTFISLLLLFSSAYS");
+    let r = coord.search(&NativeFactory(EngineKind::IntraQP), "self", &q).unwrap();
+    assert_eq!(r.hits.len(), 1);
+    // perfect self-match score equals sum of diagonal substitution scores
+    let expect: i32 = q.iter().map(|&c| Scoring::swaphi_default().score(c, c)).sum();
+    assert_eq!(r.hits[0].score, expect);
+}

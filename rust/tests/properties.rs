@@ -1,0 +1,184 @@
+//! System-level property tests (in-tree `util::check` kit): invariants
+//! that must hold across the whole stack, not just inside one module.
+
+use swaphi::align::scalar::sw_score;
+use swaphi::align::{search_index, EngineKind, NativeAligner, QueryContext};
+use swaphi::alphabet::DUMMY;
+use swaphi::blast::{blast_search, BlastParams};
+use swaphi::db::index::Index;
+use swaphi::db::synth::{generate, rand_seq, SynthSpec};
+use swaphi::db::Database;
+use swaphi::db::DbSeq;
+use swaphi::matrices::Scoring;
+use swaphi::util::check::{check, prop_assert, prop_eq};
+
+fn random_db(rng: &mut swaphi::util::rng::Rng, n: usize, maxlen: usize) -> Database {
+    let mut seqs = Vec::with_capacity(n);
+    for i in 0..n {
+        let codes = rand_seq(rng, 1, maxlen);
+        seqs.push(DbSeq { id: format!("s{i}"), codes });
+    }
+    Database::new(seqs)
+}
+
+#[test]
+fn prop_every_engine_equals_oracle_on_random_databases() {
+    check("engines == oracle (system level)", 25, |rng| {
+        let n = rng.range(1, 40);
+        let db = random_db(rng, n, 60);
+        let expected: Vec<(String, i32)> = {
+            let sc = Scoring::swaphi_default();
+            let q = rand_seq(rng, 1, 50);
+            let idx = Index::build(db.clone());
+            let ctx = QueryContext::build("q", q.clone(), &sc);
+            let mut oracle = NativeAligner::new(EngineKind::Scalar);
+            let base = search_index(&mut oracle, &ctx, &idx, &sc);
+            for kind in EngineKind::PAPER_VARIANTS {
+                let mut eng = NativeAligner::new(kind);
+                let got = search_index(&mut eng, &ctx, &idx, &sc);
+                prop_eq(got.clone(), base.clone(), kind.name())?;
+            }
+            idx.seqs.iter().zip(base).map(|(s, v)| (s.id.clone(), v)).collect()
+        };
+        // scores must be independent of database input ORDER (the index
+        // sorts): shuffle and re-search
+        let mut shuffled = db;
+        rng.shuffle(&mut shuffled.seqs);
+        let q_idx = Index::build(shuffled);
+        prop_assert(q_idx.n_seqs() == expected.len(), "seq count")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_padding_and_sorting_invariance() {
+    check("index padding preserves scores", 20, |rng| {
+        let sc = Scoring::swaphi_default();
+        let q = rand_seq(rng, 1, 40);
+        let n = rng.range(1, 30);
+        let db = random_db(rng, n, 50);
+        let direct: Vec<i32> =
+            db.seqs.iter().map(|s| sw_score(&q, &s.codes, &sc)).collect();
+        let idx = Index::build(db.clone());
+        let ctx = QueryContext::build("q", q, &sc);
+        let mut eng = NativeAligner::new(EngineKind::InterSP);
+        let via_index = search_index(&mut eng, &ctx, &idx, &sc);
+        // map back: index is sorted, match by id
+        for (orig_pos, s) in db.seqs.iter().enumerate() {
+            let sorted_pos = idx.seqs.iter().position(|t| t.id == s.id).unwrap();
+            prop_eq(via_index[sorted_pos], direct[orig_pos], &s.id)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_blast_is_sound_never_above_sw() {
+    check("blast soundness system level", 25, |rng| {
+        let sc = Scoring::blast_default();
+        let q = rand_seq(rng, 5, 60);
+        let ns = rng.range(1, 10);
+        let mut subjects: Vec<Vec<u8>> = Vec::with_capacity(ns);
+        for _ in 0..ns {
+            subjects.push(rand_seq(rng, 5, 80));
+        }
+        let (scores, stats) = blast_search(&q, &subjects, &sc, BlastParams::blastp_defaults());
+        for (i, s) in subjects.iter().enumerate() {
+            let full = sw_score(&q, s, &sc);
+            prop_assert(scores[i] <= full, format!("subject {i}: {} > {full}", scores[i]))?;
+            prop_assert(scores[i] >= 0, "negative blast score")?;
+        }
+        let total: u64 = subjects.iter().map(|s| (s.len() * q.len()) as u64).sum();
+        prop_assert(stats.cells_visited <= total, "visited more cells than exist")
+    });
+}
+
+#[test]
+fn prop_query_with_ambiguity_codes_and_dummy_padding() {
+    check("ambiguity + dummy tails", 20, |rng| {
+        let sc = Scoring::swaphi_default();
+        // queries containing B, Z, X, * codes (20..24)
+        let mut q = rand_seq(rng, 2, 30);
+        for _ in 0..rng.range(1, 4) {
+            let pos = rng.range(0, q.len() - 1);
+            q[pos] = 20 + rng.below(4) as u8;
+        }
+        let d = rand_seq(rng, 2, 40);
+        let base = sw_score(&q, &d, &sc);
+        let mut q_padded = q.clone();
+        q_padded.extend(std::iter::repeat(DUMMY).take(rng.range(1, 20)));
+        prop_eq(sw_score(&q_padded, &d, &sc), base, "dummy tail changed score")?;
+        prop_assert(base >= 0, "negative")
+    });
+}
+
+#[test]
+fn prop_simulator_conservation_and_monotonicity() {
+    check("sim conservation", 15, |rng| {
+        use swaphi::db::chunk::{plan_chunks, ChunkPlanConfig};
+        use swaphi::phi::sim::{simulate_search, SimConfig};
+        let n = rng.range(30, 120);
+        let seed = rng.next_u64();
+        let idx = Index::build(generate(&SynthSpec::tiny(n, seed)));
+        let chunks =
+            plan_chunks(&idx, ChunkPlanConfig { target_padded_residues: 4096 });
+        let qlen = rng.range(16, 600);
+        let r1 = simulate_search(&idx, &chunks, EngineKind::InterSP, qlen, SimConfig::default());
+        // conservation: cells match the index exactly
+        prop_eq(r1.real_cells, idx.total_residues * qlen as u128, "real cells")?;
+        prop_eq(r1.padded_cells, idx.padded_cells(qlen), "padded cells")?;
+        // monotonicity: more devices never increases makespan
+        let mut prev = r1.makespan;
+        for devices in [2usize, 4, 8] {
+            let r = simulate_search(
+                &idx,
+                &chunks,
+                EngineKind::InterSP,
+                qlen,
+                SimConfig { devices, ..Default::default() },
+            );
+            prop_assert(
+                r.makespan <= prev * 1.0001,
+                format!("{devices} devices regressed: {} > {prev}", r.makespan),
+            )?;
+            prev = r.makespan;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_topk_consistency() {
+    check("topk is consistent with scores", 20, |rng| {
+        use swaphi::coordinator::{Coordinator, NativeFactory, SearchConfig};
+        let n = rng.range(3, 40);
+        let idx = Index::build(random_db(rng, n, 60));
+        let sc = Scoring::swaphi_default();
+        let k = rng.range(1, 8);
+        let coord = Coordinator::new(
+            &idx,
+            sc,
+            SearchConfig { top_k: k, sim: None, ..Default::default() },
+        );
+        let q = rand_seq(rng, 1, 40);
+        let r = coord.search(&NativeFactory(EngineKind::InterQP), "q", &q).unwrap();
+        prop_assert(r.hits.len() == k.min(idx.n_seqs()), "hit count")?;
+        // every hit score matches the scores array; list is sorted
+        for w in r.hits.windows(2) {
+            prop_assert(w[0].score >= w[1].score, "unsorted hits")?;
+        }
+        for h in &r.hits {
+            prop_eq(r.scores[h.seq_index], h.score, "hit/score mismatch")?;
+        }
+        // nothing outside the top-k beats the k-th hit
+        let kth = r.hits.last().unwrap().score;
+        let in_topk: std::collections::HashSet<usize> =
+            r.hits.iter().map(|h| h.seq_index).collect();
+        for (i, &s) in r.scores.iter().enumerate() {
+            if !in_topk.contains(&i) {
+                prop_assert(s <= kth, format!("seq {i} score {s} beats kth {kth}"))?;
+            }
+        }
+        Ok(())
+    });
+}
