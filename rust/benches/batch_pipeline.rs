@@ -1,0 +1,102 @@
+//! batch_pipeline — the two-tier precision × engine sweep over the
+//! batched multi-query session (a fig5-style table for the narrow tier).
+//!
+//! A fixed 8-query FASTA-batch panel searches a real (non-simulated)
+//! synthetic database through [`SearchSession::search_batch`] at i32 and
+//! i16 lane precision for both inter-sequence engines, reporting
+//! aggregate native GCUPS, the narrow-tier rescore rate, and the i16/i32
+//! speedup. Acceptance target: i16 ≥ 1.3× i32 on this workload. Emits
+//! `BENCH_batch.json` next to the usual `bench_results/*.tsv`.
+
+use swaphi::align::{EngineKind, Precision};
+use swaphi::bench::workloads::Workload;
+use swaphi::bench::{f1, f3, measure, Table};
+use swaphi::coordinator::{NativeFactory, SearchConfig, SearchSession};
+use swaphi::db::chunk::ChunkPlanConfig;
+use swaphi::db::index::Index;
+use swaphi::db::synth::{generate, SynthSpec};
+use swaphi::matrices::Scoring;
+use swaphi::metrics::RescoreStats;
+
+fn main() {
+    let idx = Index::build(generate(&SynthSpec::swissprot_mini(3000, 2014)));
+    let sc = Scoring::swaphi_default();
+    let queries = Workload::query_batch(8, &[96, 192, 384, 576], 7);
+    let total_qlen: usize = queries.iter().map(|(_, q)| q.len()).sum();
+    let cells = total_qlen as u128 * idx.total_residues;
+    println!(
+        "workload: {} sequences ({} residues), {} queries ({} residues), {:.2} G cells/batch",
+        idx.n_seqs(),
+        idx.total_residues,
+        queries.len(),
+        total_qlen,
+        cells as f64 / 1e9
+    );
+
+    let mut table = Table::new(
+        "batch_pipeline: batched multi-query session, precision x engine",
+        &["engine", "precision", "median_s", "GCUPS", "rescore_rate", "speedup_vs_i32"],
+    );
+    let mut json = String::from("{\n  \"bench\": \"batch_pipeline\",\n");
+    json.push_str(&format!(
+        "  \"queries\": {},\n  \"cells\": {},\n  \"engines\": {{\n",
+        queries.len(),
+        cells
+    ));
+    for (ki, kind) in [EngineKind::InterSP, EngineKind::InterQP].iter().enumerate() {
+        let mut i32_time = 0.0;
+        let mut entries = Vec::new();
+        for precision in [Precision::I32, Precision::I16] {
+            let cfg = SearchConfig {
+                precision,
+                sim: None,
+                chunk: ChunkPlanConfig { target_padded_residues: 1 << 16 },
+                ..Default::default()
+            };
+            let session = SearchSession::new(&idx, sc.clone(), cfg);
+            let factory = NativeFactory(*kind);
+            let mut rescore = RescoreStats::default();
+            let stats = measure(1, 3, || {
+                let out = session.search_batch(&factory, &queries).unwrap();
+                rescore = out.iter().fold(RescoreStats::default(), |mut acc, r| {
+                    acc.add(r.rescore);
+                    acc
+                });
+                out.len()
+            });
+            let gcups = swaphi::util::gcups(cells, stats.median);
+            let speedup = if precision == Precision::I32 {
+                i32_time = stats.median;
+                1.0
+            } else {
+                i32_time / stats.median
+            };
+            table.row(&[
+                kind.name().to_string(),
+                precision.name().to_string(),
+                f3(stats.median),
+                f1(gcups),
+                f3(rescore.rescore_fraction()),
+                format!("{speedup:.2}"),
+            ]);
+            entries.push(format!(
+                "      \"{}\": {{\"gcups\": {gcups:.3}, \"median_s\": {:.6}, \
+                 \"rescore_rate\": {:.6}, \"speedup_vs_i32\": {speedup:.3}}}",
+                precision.name(),
+                stats.median,
+                rescore.rescore_fraction()
+            ));
+        }
+        json.push_str(&format!(
+            "    \"{}\": {{\n{}\n    }}{}\n",
+            kind.name(),
+            entries.join(",\n"),
+            if ki == 0 { "," } else { "" }
+        ));
+    }
+    json.push_str("  }\n}\n");
+    table.emit("batch_pipeline");
+    if std::fs::write("BENCH_batch.json", &json).is_ok() {
+        println!("\nwrote BENCH_batch.json");
+    }
+}

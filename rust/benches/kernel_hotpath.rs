@@ -16,6 +16,50 @@ use swaphi::db::index::Index;
 use swaphi::db::synth::{generate, generate_query, SynthSpec};
 use swaphi::matrices::Scoring;
 
+#[cfg(feature = "pjrt")]
+fn pjrt_section(sc: &Scoring) {
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        println!("(skipping PJRT rows: run `make artifacts` first)");
+        return;
+    }
+    let rt = std::rc::Rc::new(swaphi::runtime::PjrtRuntime::open(&artifacts).unwrap());
+    let small = Index::build(generate(&SynthSpec::tiny(96, 7)));
+    let q = generate_query(96, 5);
+    let ctx = QueryContext::build("pjrt", q, sc);
+    let mut table = Table::new(
+        "PJRT artifact path vs native (96-seq DB, q=96, real wallclock)",
+        &["backend", "variant", "median_s", "GCUPS"],
+    );
+    let cells = small.total_residues as f64 * 96.0;
+    for kind in [EngineKind::InterQP, EngineKind::InterSP] {
+        let mut pjrt = swaphi::runtime::PjrtAligner::new(std::rc::Rc::clone(&rt), kind);
+        // warm the compile cache before timing
+        let _ = search_index(&mut pjrt, &ctx, &small, sc);
+        let s = measure(0, 3, || search_index(&mut pjrt, &ctx, &small, sc));
+        table.row(&[
+            "pjrt".into(),
+            kind.name().into(),
+            format!("{:.4}", s.median),
+            f2(cells / s.median / 1e9),
+        ]);
+        let mut native = NativeAligner::new(kind);
+        let s = measure(1, 3, || search_index(&mut native, &ctx, &small, sc));
+        table.row(&[
+            "native".into(),
+            kind.name().into(),
+            format!("{:.4}", s.median),
+            f2(cells / s.median / 1e9),
+        ]);
+    }
+    table.emit("hotpath_pjrt");
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_section(_sc: &Scoring) {
+    println!("(skipping PJRT rows: built without the `pjrt` feature)");
+}
+
 fn main() {
     let sc = Scoring::swaphi_default();
     let idx = Index::build(generate(&SynthSpec::tiny(800, 42)));
@@ -51,41 +95,7 @@ fn main() {
     t.emit("hotpath_native");
 
     // --- PJRT path latency vs native (three-layer overhead) ---
-    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if artifacts.join("manifest.json").exists() {
-        let rt = std::rc::Rc::new(swaphi::runtime::PjrtRuntime::open(&artifacts).unwrap());
-        let small = Index::build(generate(&SynthSpec::tiny(96, 7)));
-        let q = generate_query(96, 5);
-        let ctx = QueryContext::build("pjrt", q, &sc);
-        let mut table = Table::new(
-            "PJRT artifact path vs native (96-seq DB, q=96, real wallclock)",
-            &["backend", "variant", "median_s", "GCUPS"],
-        );
-        let cells = small.total_residues as f64 * 96.0;
-        for kind in [EngineKind::InterQP, EngineKind::InterSP] {
-            let mut pjrt = swaphi::runtime::PjrtAligner::new(std::rc::Rc::clone(&rt), kind);
-            // warm the compile cache before timing
-            let _ = search_index(&mut pjrt, &ctx, &small, &sc);
-            let s = measure(0, 3, || search_index(&mut pjrt, &ctx, &small, &sc));
-            table.row(&[
-                "pjrt".into(),
-                kind.name().into(),
-                format!("{:.4}", s.median),
-                f2(cells / s.median / 1e9),
-            ]);
-            let mut native = NativeAligner::new(kind);
-            let s = measure(1, 3, || search_index(&mut native, &ctx, &small, &sc));
-            table.row(&[
-                "native".into(),
-                kind.name().into(),
-                format!("{:.4}", s.median),
-                f2(cells / s.median / 1e9),
-            ]);
-        }
-        table.emit("hotpath_pjrt");
-    } else {
-        println!("(skipping PJRT rows: run `make artifacts` first)");
-    }
+    pjrt_section(&sc);
 
     // --- BLAST effective GCUPS, real run ---
     let subjects: Vec<Vec<u8>> = idx.seqs.iter().map(|s| s.codes.clone()).collect();

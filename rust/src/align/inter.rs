@@ -18,9 +18,19 @@
 //!   pure contiguous vector loads (Fig 4) at the cost of the rebuild —
 //!   which only amortizes for long queries (the Fig 5 crossover at ~375).
 
+//! A third path implements the **narrow precision tier** of the two-tier
+//! (i16 → i32) pipeline: the same 512-bit vector budget holds 32
+//! saturating 16-bit lanes ([`align_wide_profile_i16`] over a
+//! [`WideProfile`]), doubling alignments per vector op. Saturation is
+//! detected per lane (a lane's running best hitting `i16::MAX` proves an
+//! intermediate H may have been clipped — H is folded into `best` every
+//! cell, and the only score-increasing operation is the diagonal add, so
+//! clipping anywhere forces `best` to the ceiling) and the coordinator
+//! rescores exactly those lanes at full i32 precision.
+
 use super::scalar::NEG;
-use crate::db::profile::{SequenceProfile, LANES, SCORE_PROFILE_N};
-use crate::db::profile::QueryProfile;
+use crate::db::profile::{QueryProfile, QueryProfile16, SequenceProfile, WideProfile};
+use crate::db::profile::{LANES, LANES16, SCORE_PROFILE_N};
 use crate::matrices::Scoring;
 
 /// Which substitution-score path to use.
@@ -46,6 +56,12 @@ pub struct Workspace {
     /// Reusable score-profile window (InterSP): avoids a heap allocation
     /// per 8-position window (§Perf iteration 1: +35% InterSP).
     sp: Vec<i32>,
+    /// Narrow-tier H row (32 i16 lanes).
+    h16: Vec<Lanes16>,
+    /// Narrow-tier F row.
+    f16: Vec<Lanes16>,
+    /// Narrow-tier score-profile window scratch.
+    sp16: Vec<i16>,
 }
 
 /// One 64-byte-aligned 16-lane vector.
@@ -60,6 +76,23 @@ impl Lanes {
     }
 }
 
+/// One 64-byte-aligned 32-lane i16 vector (one full 512-bit register in
+/// the narrow tier).
+#[derive(Clone, Copy, Debug)]
+#[repr(C, align(64))]
+pub struct Lanes16(pub [i16; LANES16]);
+
+impl Lanes16 {
+    #[inline(always)]
+    fn splat(v: i16) -> Self {
+        Lanes16([v; LANES16])
+    }
+}
+
+/// "−∞" of the narrow tier. `i16::MIN` is safe because every narrow-tier
+/// subtraction is saturating, so it can never wrap.
+pub const NEG16: i16 = i16::MIN;
+
 impl Workspace {
     pub fn new() -> Self {
         Workspace::default()
@@ -68,8 +101,13 @@ impl Workspace {
     fn prepare(&mut self, qlen: usize) {
         let need = qlen + 1;
         if self.h.len() < need {
+            // growing: truncate first so the resize itself is the single
+            // initializing write per element (not resize + re-fill)
+            self.h.clear();
+            self.f.clear();
             self.h.resize(need, Lanes::splat(0));
             self.f.resize(need, Lanes::splat(NEG));
+            return;
         }
         for v in &mut self.h[..need] {
             *v = Lanes::splat(0);
@@ -78,6 +116,30 @@ impl Workspace {
             *v = Lanes::splat(NEG);
         }
     }
+
+    fn prepare16(&mut self, qlen: usize) {
+        let need = qlen + 1;
+        if self.h16.len() < need {
+            self.h16.clear();
+            self.f16.clear();
+            self.h16.resize(need, Lanes16::splat(0));
+            self.f16.resize(need, Lanes16::splat(NEG16));
+            return;
+        }
+        for v in &mut self.h16[..need] {
+            *v = Lanes16::splat(0);
+        }
+        for v in &mut self.f16[..need] {
+            *v = Lanes16::splat(NEG16);
+        }
+    }
+}
+
+/// Clamp an i32 matrix/gap value into i16 (no-op for every shipped
+/// matrix; guards pathological user schemes).
+#[inline(always)]
+fn clamp16(v: i32) -> i16 {
+    v.clamp(i16::MIN as i32, i16::MAX as i32) as i16
 }
 
 /// Align `query` against all 16 lanes of `profile`; returns the optimal
@@ -243,6 +305,177 @@ fn build_score_profile_into(
     }
 }
 
+/// Narrow precision tier: align `query` against all 32 lanes of `wide`
+/// with saturating i16 arithmetic. Returns the per-lane best scores
+/// (widened to i32) plus an overflow bitmask: bit `l` set means lane `l`
+/// saturated and its score is a lower bound that must be rescored at
+/// full precision. Lanes with a clear bit are bit-exact.
+pub fn align_wide_profile_i16(
+    variant: InterVariant,
+    query: &[u8],
+    qp16: &QueryProfile16,
+    wide: &WideProfile,
+    sc: &Scoring,
+    ws: &mut Workspace,
+) -> ([i32; LANES16], u32) {
+    match variant {
+        InterVariant::QueryProfile => align_wide_qp16(query, qp16, wide, sc, ws),
+        InterVariant::ScoreProfile => align_wide_sp16(query, wide, sc, ws),
+    }
+}
+
+/// Narrow-tier InterQP: per-cell gather from the i16 query profile.
+fn align_wide_qp16(
+    query: &[u8],
+    qp16: &QueryProfile16,
+    wide: &WideProfile,
+    sc: &Scoring,
+    ws: &mut Workspace,
+) -> ([i32; LANES16], u32) {
+    debug_assert_eq!(qp16.qlen, query.len());
+    let n = query.len();
+    if n == 0 {
+        return ([0; LANES16], 0);
+    }
+    ws.prepare16(n);
+    let alpha = clamp16(sc.gap_extend);
+    let beta = clamp16(sc.beta());
+    let mut best = Lanes16::splat(0);
+    let hs = &mut ws.h16[..n + 1];
+    let fs = &mut ws.f16[..n + 1];
+    for j in 0..wide.padded_len {
+        let vec_db = wide.vector(j);
+        let mut e = Lanes16::splat(NEG16);
+        let mut h_up = Lanes16::splat(0);
+        let mut h_diag = Lanes16::splat(0);
+        for i in 1..=n {
+            let row = qp16.row(i - 1);
+            // SAFETY: hs/fs have n+1 entries and 1 <= i <= n
+            let hp = unsafe { *hs.get_unchecked(i) };
+            let fp = unsafe { *fs.get_unchecked(i) };
+            let mut hv = Lanes16::splat(0);
+            let mut fv = Lanes16::splat(0);
+            let mut ev = Lanes16::splat(0);
+            for l in 0..LANES16 {
+                let ee = e.0[l].saturating_sub(alpha).max(h_up.0[l].saturating_sub(beta));
+                let ff = fp.0[l].saturating_sub(alpha).max(hp.0[l].saturating_sub(beta));
+                let sub = unsafe { *row.get_unchecked(vec_db[l] as usize) };
+                let h = h_diag.0[l].saturating_add(sub).max(ee).max(ff).max(0);
+                ev.0[l] = ee;
+                fv.0[l] = ff;
+                hv.0[l] = h;
+                best.0[l] = best.0[l].max(h);
+            }
+            h_diag = hp;
+            unsafe {
+                *hs.get_unchecked_mut(i) = hv;
+                *fs.get_unchecked_mut(i) = fv;
+            }
+            h_up = hv;
+            e = ev;
+        }
+    }
+    widen16(&best)
+}
+
+/// Narrow-tier InterSP: i16 score-profile windows, gather-free inner loop.
+fn align_wide_sp16(
+    query: &[u8],
+    wide: &WideProfile,
+    sc: &Scoring,
+    ws: &mut Workspace,
+) -> ([i32; LANES16], u32) {
+    let n = query.len();
+    if n == 0 {
+        return ([0; LANES16], 0);
+    }
+    ws.prepare16(n);
+    let alpha = clamp16(sc.gap_extend);
+    let beta = clamp16(sc.beta());
+    let mut best = Lanes16::splat(0);
+    let mut j0 = 0;
+    if ws.sp16.len() < crate::alphabet::ROW * SCORE_PROFILE_N * LANES16 {
+        ws.sp16.resize(crate::alphabet::ROW * SCORE_PROFILE_N * LANES16, 0);
+    }
+    while j0 < wide.padded_len {
+        let width = SCORE_PROFILE_N.min(wide.padded_len - j0);
+        build_score_profile16_into(wide, j0, width, sc, &mut ws.sp16);
+        for w in 0..width {
+            let mut e = Lanes16::splat(NEG16);
+            let mut h_up = Lanes16::splat(0);
+            let mut h_diag = Lanes16::splat(0);
+            let hs = &mut ws.h16[..n + 1];
+            let fs = &mut ws.f16[..n + 1];
+            for i in 1..=n {
+                let base = (query[i - 1] as usize * SCORE_PROFILE_N + w) * LANES16;
+                let subs = unsafe { ws.sp16.get_unchecked(base..base + LANES16) };
+                let hp = unsafe { *hs.get_unchecked(i) };
+                let fp = unsafe { *fs.get_unchecked(i) };
+                let mut hv = Lanes16::splat(0);
+                let mut fv = Lanes16::splat(0);
+                let mut ev = Lanes16::splat(0);
+                for l in 0..LANES16 {
+                    let ee = e.0[l].saturating_sub(alpha).max(h_up.0[l].saturating_sub(beta));
+                    let ff = fp.0[l].saturating_sub(alpha).max(hp.0[l].saturating_sub(beta));
+                    let h = h_diag.0[l].saturating_add(subs[l]).max(ee).max(ff).max(0);
+                    ev.0[l] = ee;
+                    fv.0[l] = ff;
+                    hv.0[l] = h;
+                    best.0[l] = best.0[l].max(h);
+                }
+                h_diag = hp;
+                unsafe {
+                    *hs.get_unchecked_mut(i) = hv;
+                    *fs.get_unchecked_mut(i) = fv;
+                }
+                h_up = hv;
+                e = ev;
+            }
+        }
+        j0 += width;
+    }
+    widen16(&best)
+}
+
+/// Build an i16 score-profile window over a wide profile into scratch
+/// (rows limited to the real residue codes, like the i32 builder).
+fn build_score_profile16_into(
+    wide: &WideProfile,
+    j0: usize,
+    width: usize,
+    sc: &Scoring,
+    out: &mut [i16],
+) {
+    debug_assert!(width <= SCORE_PROFILE_N);
+    for r in 0..crate::alphabet::ALPHA as u8 {
+        let row = sc.row(r);
+        for w in 0..width {
+            let vec = wide.vector(j0 + w);
+            let base = (r as usize * SCORE_PROFILE_N + w) * LANES16;
+            for lane in 0..LANES16 {
+                out[base + lane] = clamp16(unsafe { *row.get_unchecked(vec[lane] as usize) });
+            }
+        }
+    }
+}
+
+/// Widen narrow-tier bests to i32 and derive the overflow mask. A lane
+/// saturates iff its best ever reaches `i16::MAX`: H is folded into
+/// `best` at every cell and the only score-increasing operation
+/// (`h_diag + sub`) saturates exactly there, so any clipped H forces
+/// `best` to the ceiling. Scores strictly below the ceiling are exact.
+fn widen16(best: &Lanes16) -> ([i32; LANES16], u32) {
+    let mut out = [0i32; LANES16];
+    let mut mask = 0u32;
+    for l in 0..LANES16 {
+        out[l] = best.0[l] as i32;
+        if best.0[l] == i16::MAX {
+            mask |= 1 << l;
+        }
+    }
+    (out, mask)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -358,6 +591,135 @@ mod tests {
         let d = vec![1u8, 2, 3];
         let got = run(InterVariant::QueryProfile, &[], &[d]);
         assert_eq!(got, vec![0]);
+    }
+
+    fn run16(variant: InterVariant, query: &[u8], seqs: &[Vec<u8>]) -> (Vec<i32>, u32) {
+        let s = sc();
+        let refs: Vec<(usize, &[u8])> =
+            seqs.iter().enumerate().map(|(i, x)| (i, x.as_slice())).collect();
+        let wide = WideProfile::pack(&refs);
+        let qp16 = QueryProfile16::build(query, &s);
+        let mut ws = Workspace::new();
+        let (lanes, mask) = align_wide_profile_i16(variant, query, &qp16, &wide, &s, &mut ws);
+        (lanes[..seqs.len()].to_vec(), mask)
+    }
+
+    #[test]
+    fn i16_tier_matches_scalar_on_random_wide_profiles() {
+        for variant in [InterVariant::QueryProfile, InterVariant::ScoreProfile] {
+            check("inter-i16 == scalar", 30, |rng| {
+                let q = rand_seq(rng, 1, 50);
+                let k = rng.range(1, 32);
+                let seqs: Vec<Vec<u8>> = (0..k).map(|_| rand_seq(rng, 1, 70)).collect();
+                let (got, mask) = run16(variant, &q, &seqs);
+                prop_eq(mask, 0, "no overflow expected on small cases")?;
+                let s = sc();
+                for (i, d) in seqs.iter().enumerate() {
+                    prop_eq(got[i], sw_score(&q, d, &s), &format!("lane {i}"))?;
+                }
+                Ok(())
+            });
+        }
+    }
+
+    /// PAM250 scores W–W at 17, the highest self-match of any shipped
+    /// matrix, so saturation tests stay affordable in debug builds
+    /// (overflow from ~1930 residues instead of ~2980 under BLOSUM62).
+    fn sat_scoring() -> Scoring {
+        Scoring::new("PAM250", 10, 2).unwrap()
+    }
+
+    fn run16_with(
+        s: &Scoring,
+        variant: InterVariant,
+        query: &[u8],
+        seqs: &[Vec<u8>],
+    ) -> (Vec<i32>, u32) {
+        let refs: Vec<(usize, &[u8])> =
+            seqs.iter().enumerate().map(|(i, x)| (i, x.as_slice())).collect();
+        let wide = WideProfile::pack(&refs);
+        let qp16 = QueryProfile16::build(query, s);
+        let mut ws = Workspace::new();
+        let (lanes, mask) = align_wide_profile_i16(variant, query, &qp16, &wide, s, &mut ws);
+        (lanes[..seqs.len()].to_vec(), mask)
+    }
+
+    #[test]
+    fn i16_tier_flags_saturated_lanes_and_is_exact_elsewhere() {
+        // Lane 0: a W-homopolymer self-match scoring 17 * 1950 = 33150 >
+        // i16::MAX must saturate and be flagged. Lane 1: a small exact
+        // case in the same wide profile must stay bit-exact.
+        let s = sat_scoring();
+        let w_run: Vec<u8> = vec![17u8; 1950]; // residue W, code 17
+        let mut rng = crate::util::rng::Rng::new(42);
+        let small = random_codes(&mut rng, 40);
+        for variant in [InterVariant::QueryProfile, InterVariant::ScoreProfile] {
+            let (got, mask) = run16_with(&s, variant, &w_run, &[w_run.clone(), small.clone()]);
+            assert_eq!(mask & 1, 1, "{variant:?}: saturated lane must be flagged");
+            assert_eq!(got[0], i16::MAX as i32, "{variant:?}: clipped at ceiling");
+            assert_eq!(mask & 2, 0, "{variant:?}: small lane must not be flagged");
+            assert_eq!(got[1], sw_score(&w_run, &small, &s), "{variant:?}");
+        }
+    }
+
+    #[test]
+    fn i16_tier_exact_at_scores_near_the_ceiling() {
+        // drive best close to (but below) i16::MAX: 1900 * 17 = 32300
+        let s = sat_scoring();
+        let q: Vec<u8> = vec![17u8; 1900];
+        let expect = sw_score(&q, &q, &s);
+        assert!(expect > 32000 && expect < i16::MAX as i32, "bound check {expect}");
+        for variant in [InterVariant::QueryProfile, InterVariant::ScoreProfile] {
+            let (got, mask) = run16_with(&s, variant, &q, &[q.clone()]);
+            assert_eq!(mask, 0, "{variant:?}");
+            assert_eq!(got[0], expect, "{variant:?}");
+        }
+    }
+
+    #[test]
+    fn i16_unused_lanes_score_zero() {
+        let mut rng = crate::util::rng::Rng::new(6);
+        let q = random_codes(&mut rng, 20);
+        let d = random_codes(&mut rng, 30);
+        let s = sc();
+        let wide = WideProfile::pack(&[(0, d.as_slice())]);
+        let qp16 = QueryProfile16::build(&q, &s);
+        let mut ws = Workspace::new();
+        let (lanes, mask) =
+            align_wide_profile_i16(InterVariant::QueryProfile, &q, &qp16, &wide, &s, &mut ws);
+        assert_eq!(mask, 0);
+        assert_eq!(lanes[0], sw_score(&q, &d, &s));
+        assert!(lanes[1..].iter().all(|&v| v == 0), "{lanes:?}");
+    }
+
+    #[test]
+    fn i16_workspace_reuse_across_lengths_and_tiers() {
+        // interleave i32 and i16 calls with growing/shrinking queries:
+        // tier workspaces must not leak state into each other
+        let mut rng = crate::util::rng::Rng::new(7);
+        let s = sc();
+        let mut ws = Workspace::new();
+        for qlen in [40usize, 10, 25, 3, 60, 1] {
+            let q = random_codes(&mut rng, qlen);
+            let d = random_codes(&mut rng, 37);
+            let profile = SequenceProfile::pack(&[(0, d.as_slice())]);
+            let wide = WideProfile::pack(&[(0, d.as_slice())]);
+            let qp = QueryProfile::build(&q, &s);
+            let qp16 = QueryProfile16::build(&q, &s);
+            let narrow =
+                align_profile(InterVariant::ScoreProfile, &q, &qp, &profile, &s, &mut ws);
+            let (widev, mask) = align_wide_profile_i16(
+                InterVariant::ScoreProfile,
+                &q,
+                &qp16,
+                &wide,
+                &s,
+                &mut ws,
+            );
+            assert_eq!(mask, 0, "qlen {qlen}");
+            assert_eq!(narrow[0], sw_score(&q, &d, &s), "qlen {qlen}");
+            assert_eq!(widev[0], narrow[0], "qlen {qlen}");
+        }
     }
 
     #[test]

@@ -6,12 +6,21 @@
 //! the coordinator can drive native Rust engines, the PJRT-artifact
 //! backend, and test oracles interchangeably.
 
+//!
+//! Engines that implement the **narrow precision tier** additionally
+//! score 32-lane [`WideProfile`]s with saturating i16 arithmetic
+//! (`ProfileAligner::align_wide_i16`); the [`Precision`] policy on the
+//! [`QueryContext`] decides per (query, scoring) whether a search starts
+//! in that tier.
+
 pub mod inter;
 pub mod scalar;
 pub mod striped;
 
 use crate::db::index::Index;
-use crate::db::profile::{QueryProfile, SequenceProfile, StripedProfile, LANES};
+use crate::db::profile::{
+    QueryProfile, QueryProfile16, SequenceProfile, StripedProfile, WideProfile, LANES, LANES16,
+};
 use crate::matrices::Scoring;
 
 /// The paper's three SWAPHI variants plus the scalar oracle.
@@ -53,20 +62,98 @@ impl EngineKind {
         [EngineKind::InterSP, EngineKind::InterQP, EngineKind::IntraQP];
 }
 
+/// Score-lane precision policy, selected per (query, scoring) pair.
+///
+/// The decision rule: the query's row-max bound `Σᵢ max_r score(qᵢ, r)`
+/// is an upper bound on any local alignment score (each query residue
+/// pairs at most once; gaps only subtract). `auto` starts in the narrow
+/// 32-lane saturating i16 tier exactly when that bound fits in i16 —
+/// then saturation is provably impossible and the narrow tier is
+/// unconditionally exact with zero rescore risk; otherwise `auto` stays
+/// at full precision. `i16` forces the narrow tier regardless of the
+/// bound, accepting that saturated lanes (detected per lane) are
+/// rescored at i32 — the SSW-style narrow-first trade. `i32` is the
+/// measurement baseline and escape hatch.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// Narrow tier first, automatic i32 rescore of overflowed lanes.
+    #[default]
+    Auto,
+    /// Force the narrow tier (still rescores overflowed lanes).
+    I16,
+    /// Full-precision 16-lane i32 kernels only.
+    I32,
+}
+
+impl Precision {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::Auto => "auto",
+            Precision::I16 => "i16",
+            Precision::I32 => "i32",
+        }
+    }
+
+    /// Parse from CLI/config spelling.
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(Precision::Auto),
+            "i16" | "16" | "narrow" => Some(Precision::I16),
+            "i32" | "32" | "full" => Some(Precision::I32),
+            _ => None,
+        }
+    }
+}
+
 /// Pre-built per-query state shared by all engines.
 pub struct QueryContext {
     pub id: String,
     pub codes: Vec<u8>,
     pub qp: QueryProfile,
+    /// Narrow-tier (i16) query profile.
+    pub qp16: QueryProfile16,
     pub striped: StripedProfile,
+    /// Requested lane precision policy.
+    pub precision: Precision,
+    /// Upper bound on any local score of this query under this scoring
+    /// scheme: `Σᵢ max_r score(qᵢ, r)` (row max, not the diagonal —
+    /// ambiguity codes like B score higher off-diagonal in some
+    /// matrices). Drives the [`Precision::Auto`] decision rule.
+    pub score_bound: i32,
 }
 
 impl QueryContext {
     pub fn build(id: impl Into<String>, codes: Vec<u8>, sc: &Scoring) -> Self {
+        Self::build_with_precision(id, codes, sc, Precision::Auto)
+    }
+
+    pub fn build_with_precision(
+        id: impl Into<String>,
+        codes: Vec<u8>,
+        sc: &Scoring,
+        precision: Precision,
+    ) -> Self {
         assert!(!codes.is_empty(), "empty query");
         let qp = QueryProfile::build(&codes, sc);
         let striped = StripedProfile::build(&codes, sc);
-        QueryContext { id: id.into(), codes, qp, striped }
+        let bound: i64 = codes
+            .iter()
+            .map(|&c| sc.row(c).iter().copied().max().unwrap_or(0) as i64)
+            .sum();
+        let score_bound = bound.clamp(0, i32::MAX as i64) as i32;
+        // the narrow-tier profile is only materialized when this query
+        // can actually take the narrow tier (policy + bound)
+        let use_narrow = match precision {
+            Precision::I32 => false,
+            Precision::I16 => true,
+            Precision::Auto => score_bound < i16::MAX as i32,
+        };
+        let qp16 = if use_narrow {
+            QueryProfile16::build(&codes, sc)
+        } else {
+            QueryProfile16::empty(codes.len())
+        };
+        QueryContext { id: id.into(), codes, qp, qp16, striped, precision, score_bound }
     }
 
     pub fn len(&self) -> usize {
@@ -75,6 +162,25 @@ impl QueryContext {
 
     pub fn is_empty(&self) -> bool {
         self.codes.is_empty()
+    }
+
+    /// Whether this query should start in the narrow (i16) tier —
+    /// assuming the engine supports it (`ProfileAligner::supports_i16`).
+    /// `Auto` opts in only when saturation is provably impossible
+    /// ([`i16_exact`](QueryContext::i16_exact)); `I16` forces the tier
+    /// and relies on the overflow-rescore path.
+    pub fn wants_i16(&self) -> bool {
+        match self.precision {
+            Precision::I32 => false,
+            Precision::I16 => true,
+            Precision::Auto => self.i16_exact(),
+        }
+    }
+
+    /// True when the narrow tier cannot saturate for this query, i.e.
+    /// every i16 score is unconditionally exact and no rescore can occur.
+    pub fn i16_exact(&self) -> bool {
+        self.score_bound < i16::MAX as i32
     }
 }
 
@@ -94,6 +200,30 @@ pub trait ProfileAligner {
         profile: &SequenceProfile,
         sc: &Scoring,
     ) -> [i32; LANES];
+
+    /// Whether this engine implements the narrow (i16) tier. Engines
+    /// that return `false` are driven through 16-lane [`align`] calls
+    /// regardless of the query's [`Precision`] policy.
+    ///
+    /// [`align`]: ProfileAligner::align
+    fn supports_i16(&self) -> bool {
+        false
+    }
+
+    /// Narrow tier: score all 32 lanes of a [`WideProfile`] with
+    /// saturating i16 arithmetic. Returns per-lane scores plus the
+    /// overflow bitmask (set bits mark saturated lanes the caller must
+    /// rescore at full precision). Only called when
+    /// [`supports_i16`](ProfileAligner::supports_i16) is true.
+    fn align_wide_i16(
+        &mut self,
+        ctx: &QueryContext,
+        wide: &WideProfile,
+        sc: &Scoring,
+    ) -> ([i32; LANES16], u32) {
+        let _ = (ctx, wide, sc);
+        unimplemented!("{} has no narrow (i16) tier", self.name())
+    }
 }
 
 /// Native (CPU) aligner over the Rust engines.
@@ -159,6 +289,27 @@ impl ProfileAligner for NativeAligner {
                 out
             }
         }
+    }
+
+    /// The inter-sequence engines carry a 32-lane saturating tier; the
+    /// striped and scalar models stay i32 (their lane geometry doesn't
+    /// widen) and fall back to [`ProfileAligner::align`].
+    fn supports_i16(&self) -> bool {
+        matches!(self.kind, EngineKind::InterSP | EngineKind::InterQP)
+    }
+
+    fn align_wide_i16(
+        &mut self,
+        ctx: &QueryContext,
+        wide: &WideProfile,
+        sc: &Scoring,
+    ) -> ([i32; LANES16], u32) {
+        let variant = match self.kind {
+            EngineKind::InterSP => inter::InterVariant::ScoreProfile,
+            EngineKind::InterQP => inter::InterVariant::QueryProfile,
+            other => unimplemented!("{:?} has no narrow (i16) tier", other),
+        };
+        inter::align_wide_profile_i16(variant, &ctx.codes, &ctx.qp16, wide, sc, &mut self.ws)
     }
 }
 
@@ -235,7 +386,67 @@ mod tests {
         let ctx = QueryContext::build("x", vec![0, 1, 2, 3, 4], &sc);
         assert_eq!(ctx.len(), 5);
         assert_eq!(ctx.qp.qlen, 5);
+        assert_eq!(ctx.qp16.qlen, 5);
         assert_eq!(ctx.striped.qlen, 5);
         assert_eq!(ctx.striped.stripes, 1);
+        assert_eq!(ctx.precision, Precision::Auto);
+        let bound: i32 =
+            ctx.codes.iter().map(|&c| sc.row(c).iter().copied().max().unwrap()).sum();
+        assert_eq!(ctx.score_bound, bound);
+        assert!(ctx.wants_i16());
+        assert!(ctx.i16_exact());
+    }
+
+    #[test]
+    fn precision_policy_parsing_and_resolution() {
+        assert_eq!(Precision::parse("auto"), Some(Precision::Auto));
+        assert_eq!(Precision::parse("I16"), Some(Precision::I16));
+        assert_eq!(Precision::parse("narrow"), Some(Precision::I16));
+        assert_eq!(Precision::parse("i32"), Some(Precision::I32));
+        assert_eq!(Precision::parse("full"), Some(Precision::I32));
+        assert_eq!(Precision::parse("i64"), None);
+        let sc = Scoring::swaphi_default();
+        let forced =
+            QueryContext::build_with_precision("x", vec![0, 1, 2], &sc, Precision::I32);
+        assert!(!forced.wants_i16());
+        // a long W-homopolymer exceeds the i16 score bound: auto declines
+        // the narrow tier, forced i16 takes it (rescore path covers it)
+        let long = QueryContext::build("w", vec![17u8; 3000], &sc);
+        assert!(!long.i16_exact());
+        assert!(!long.wants_i16(), "auto must decline when saturation is possible");
+        let forced16 =
+            QueryContext::build_with_precision("w", vec![17u8; 3000], &sc, Precision::I16);
+        assert!(forced16.wants_i16());
+    }
+
+    #[test]
+    fn native_aligner_i16_support_matches_engine_geometry() {
+        for (kind, expect) in [
+            (EngineKind::InterSP, true),
+            (EngineKind::InterQP, true),
+            (EngineKind::IntraQP, false),
+            (EngineKind::Scalar, false),
+        ] {
+            assert_eq!(NativeAligner::new(kind).supports_i16(), expect, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn native_wide_tier_agrees_with_narrow_engines() {
+        let (idx, sc, ctx) = setup();
+        let mut eng = NativeAligner::new(EngineKind::InterSP);
+        let expect = search_index(&mut eng, &ctx, &idx, &sc);
+        for kind in [EngineKind::InterSP, EngineKind::InterQP] {
+            let mut eng = NativeAligner::new(kind);
+            let mut got = vec![0i32; idx.n_seqs()];
+            for wide in idx.wide() {
+                let (lanes, mask) = eng.align_wide_i16(&ctx, wide, &sc);
+                assert_eq!(mask, 0, "{kind:?}: tiny workload cannot saturate");
+                for lane in 0..wide.used {
+                    got[wide.members[lane]] = lanes[lane];
+                }
+            }
+            assert_eq!(got, expect, "{kind:?}");
+        }
     }
 }

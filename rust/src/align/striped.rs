@@ -35,9 +35,15 @@ impl StripedWorkspace {
 
     fn prepare(&mut self, stripes: usize) {
         if self.h_store.len() < stripes {
+            // growing: truncate first so the resize itself is the single
+            // initializing write per element (same fix as inter::Workspace)
+            self.h_store.clear();
+            self.h_load.clear();
+            self.e.clear();
             self.h_store.resize(stripes, [0; LANES]);
             self.h_load.resize(stripes, [0; LANES]);
             self.e.resize(stripes, [NEG; LANES]);
+            return;
         }
         for v in &mut self.h_store[..stripes] {
             *v = [0; LANES];

@@ -63,6 +63,20 @@ impl Workload {
         )
     }
 
+    /// Seeded multi-query batch for the batched-pipeline bench: `n`
+    /// queries whose lengths cycle over `lens` (a small panel spanning
+    /// the short/long regimes), ids `batch-q<i>`.
+    pub fn query_batch(n: usize, lens: &[usize], seed: u64) -> Vec<(String, Vec<u8>)> {
+        assert!(!lens.is_empty(), "empty length panel");
+        (0..n)
+            .map(|i| {
+                let len = lens[i % lens.len()];
+                let q = crate::db::synth::generate_query(len, seed ^ (i as u64).wrapping_mul(0x9E37_79B9));
+                (format!("batch-q{i}"), q)
+            })
+            .collect()
+    }
+
     /// Simulator config for `devices` coprocessors on this workload.
     pub fn sim_config(&self, devices: usize) -> SimConfig {
         SimConfig {
@@ -94,5 +108,20 @@ mod tests {
         let t = Workload::trembl(2000);
         let s = Workload::swissprot_reduced(2000);
         assert!(s.virtual_residues < t.virtual_residues / 10);
+    }
+
+    #[test]
+    fn query_batch_is_seeded_and_cycled() {
+        let a = Workload::query_batch(5, &[32, 64], 7);
+        let b = Workload::query_batch(5, &[32, 64], 7);
+        assert_eq!(a.len(), 5);
+        for ((id_a, q_a), (id_b, q_b)) in a.iter().zip(&b) {
+            assert_eq!(id_a, id_b);
+            assert_eq!(q_a, q_b, "deterministic for a fixed seed");
+        }
+        assert_eq!(a[0].1.len(), 32);
+        assert_eq!(a[1].1.len(), 64);
+        assert_eq!(a[2].1.len(), 32);
+        assert_ne!(a[0].1, a[2].1, "distinct queries at the same length");
     }
 }

@@ -3,7 +3,7 @@
 use super::args::Args;
 use crate::align::{search_index, EngineKind, NativeAligner, QueryContext};
 use crate::config::{RawConfig, SwaphiConfig};
-use crate::coordinator::{AlignerFactory, Coordinator, NativeFactory, PjrtFactory};
+use crate::coordinator::{AlignerFactory, NativeFactory, PjrtFactory, SearchSession};
 use crate::db::format::{write_index, IndexView};
 use crate::db::index::Index;
 use crate::db::synth::{generate, SynthSpec};
@@ -96,6 +96,9 @@ fn load_config(args: &mut Args) -> anyhow::Result<SwaphiConfig> {
     if let Some(b) = args.take("backend") {
         raw.set("search.backend", &b)?;
     }
+    if let Some(p) = args.take("precision") {
+        raw.set("search.precision", &p)?;
+    }
     if let Some(dir) = args.take("artifacts") {
         raw.set("search.artifacts_dir", &dir)?;
     }
@@ -122,39 +125,68 @@ pub fn cmd_search(mut args: Args) -> anyhow::Result<i32> {
     let view = IndexView::open(&index_path)?;
     let index = view.to_index();
     let factory = make_factory(&cfg)?;
-    let coord = Coordinator::new(&index, cfg.scoring.clone(), cfg.search_config());
+    let session = SearchSession::new(&index, cfg.scoring.clone(), cfg.search_config());
 
+    // multi-query FASTA batch: all queries share one session (one chunk
+    // plan, per-thread aligners/workspaces amortized across the batch)
     let mut reader = fasta::Reader::from_path(&query_path)?;
-    let mut n = 0;
+    let mut queries: Vec<(String, Vec<u8>)> = Vec::new();
+    while let Some(rec) = reader.next_record()? {
+        anyhow::ensure!(!rec.seq.is_empty(), "query {} is empty", rec.id);
+        queries.push((rec.id.clone(), crate::alphabet::encode(&rec.seq)));
+    }
+    anyhow::ensure!(!queries.is_empty(), "{query_path}: no queries");
+
     println!(
-        "# engine={} backend={} devices={} policy={} matrix={} gap={}+{}k chunks={}",
+        "# engine={} backend={} devices={} policy={} precision={} matrix={} gap={}+{}k chunks={} queries={}",
         cfg.engine.name(),
         factory.backend_name(),
         cfg.devices,
         cfg.policy.name(),
+        cfg.precision.name(),
         cfg.scoring.name,
         cfg.scoring.gap_open,
         cfg.scoring.gap_extend,
-        coord.n_chunks(),
+        session.n_chunks(),
+        queries.len(),
     );
-    while let Some(rec) = reader.next_record()? {
-        anyhow::ensure!(!rec.seq.is_empty(), "query {} is empty", rec.id);
-        let codes = crate::alphabet::encode(&rec.seq);
-        let result = coord.search(factory.as_ref(), &rec.id, &codes)?;
+    let results = session.search_batch(factory.as_ref(), &queries)?;
+    let mut batch = crate::metrics::RescoreStats::default();
+    let mut batch_cells = crate::metrics::Cells::default();
+    let mut batch_wall = 0.0;
+    for result in &results {
         println!(
-            "\nquery {} (len {}): native {:.3} GCUPS{}",
+            "\nquery {} (len {}): native {:.3} GCUPS{}{}",
             result.query_id,
             result.query_len,
             result.native_gcups(),
             match result.sim_gcups() {
                 Some(g) => format!(", simulated Phi x{}: {:.1} GCUPS", cfg.devices, g),
                 None => String::new(),
+            },
+            if result.rescore.overflowed > 0 {
+                format!(
+                    ", rescored {}/{} lanes",
+                    result.rescore.overflowed, result.rescore.i16_lanes
+                )
+            } else {
+                String::new()
             }
         );
         print!("{}", crate::coordinator::results::format_hits(&result.hits));
-        n += 1;
+        batch.add(result.rescore);
+        batch_cells.add(result.cells);
+        batch_wall += result.wall_seconds;
     }
-    anyhow::ensure!(n > 0, "{query_path}: no queries");
+    if results.len() > 1 {
+        println!(
+            "\nbatch: {} queries, native {:.3} GCUPS aggregate, narrow-tier share {:.1}%, rescore rate {:.3}%",
+            results.len(),
+            batch_cells.gcups(batch_wall),
+            batch.narrow_share() * 100.0,
+            batch.rescore_fraction() * 100.0,
+        );
+    }
     Ok(0)
 }
 
@@ -178,11 +210,16 @@ pub fn cmd_selftest(mut args: Args) -> anyhow::Result<i32> {
                 let mut eng = NativeAligner::new(kind);
                 search_index(&mut eng, &ctx, &index, &sc)
             }
+            #[cfg(feature = "pjrt")]
             "pjrt" => {
                 let rt = std::rc::Rc::new(crate::runtime::PjrtRuntime::open(&artifacts)?);
                 let mut eng = crate::runtime::PjrtAligner::new(rt, kind);
                 search_index(&mut eng, &ctx, &index, &sc)
             }
+            #[cfg(not(feature = "pjrt"))]
+            "pjrt" => anyhow::bail!(
+                "pjrt backend unavailable: built without the `pjrt` feature (artifacts {artifacts})"
+            ),
             other => anyhow::bail!("unknown backend {other:?}"),
         };
         let ok = got == expect;
@@ -277,6 +314,42 @@ mod tests {
     #[test]
     fn selftest_native_passes() {
         assert_eq!(run("selftest").unwrap(), 0);
+    }
+
+    #[test]
+    fn search_precision_flag_and_multi_query_batch() {
+        let fasta = tmp("db2.fasta");
+        let idx = tmp("db2.idx");
+        let qf = tmp("q2.fasta");
+        assert_eq!(
+            run(&format!("synth --preset tiny --n 48 --seed 9 --out {fasta}")).unwrap(),
+            0
+        );
+        assert_eq!(run(&format!("index --in {fasta} --out {idx}")).unwrap(), 0);
+        // two queries in one FASTA = one batched session
+        std::fs::write(
+            &qf,
+            ">q1\nMKTAYIAKQRQISFVKSHFSRQLEERLGLIEVQ\n>q2\nGQEVLIKAWW\n",
+        )
+        .unwrap();
+        for precision in ["auto", "i16", "i32"] {
+            assert_eq!(
+                run(&format!(
+                    "search --index {idx} --query {qf} --precision {precision} \
+                     --set sim.enabled=false"
+                ))
+                .unwrap(),
+                0,
+                "{precision}"
+            );
+        }
+        assert!(run(&format!(
+            "search --index {idx} --query {qf} --precision i128"
+        ))
+        .is_err());
+        for f in [fasta, idx, qf] {
+            let _ = std::fs::remove_file(f);
+        }
     }
 
     #[test]

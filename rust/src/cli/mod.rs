@@ -58,10 +58,14 @@ COMMANDS:
               --in <fasta>  --out <idx>
   info      print index statistics
               --index <idx>
-  search    search queries against an index (the Fig 2 workflow)
+  search    search queries against an index (the Fig 2 workflow); all
+            queries in the FASTA run as one batched session
               --index <idx>  --query <fasta>
               [--config <toml>]  [--set section.key=value]...
               [--backend native|pjrt]  [--artifacts <dir>]
+              [--precision auto|i16|i32]   score-lane tier (auto: narrow
+                32-lane i16 when provably exact; i16: force narrow,
+                saturated lanes rescored at i32; i32: full precision)
   selftest  cross-validate all engines against the scalar oracle
               [--backend pjrt]  [--artifacts <dir>]
   devinfo   print the simulated device fleet and calibration

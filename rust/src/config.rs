@@ -14,6 +14,7 @@
 //! [search]
 //! engine = "intersp"      # intersp | interqp | intraqp | scalar
 //! backend = "native"      # native | pjrt
+//! precision = "auto"      # auto | i16 | i32 (score-lane tier)
 //! devices = 4
 //! policy = "guided"       # static | dynamic | guided | auto
 //! top_k = 10
@@ -25,7 +26,7 @@
 //! replication = 400
 //! ```
 
-use crate::align::EngineKind;
+use crate::align::{EngineKind, Precision};
 use crate::coordinator::SearchConfig;
 use crate::db::chunk::ChunkPlanConfig;
 use crate::matrices::Scoring;
@@ -194,6 +195,7 @@ pub const KNOWN_KEYS: &[&str] = &[
     "search.top_k",
     "search.chunk_residues",
     "search.artifacts_dir",
+    "search.precision",
     "sim.enabled",
     "sim.threads_per_device",
     "sim.replication",
@@ -212,6 +214,7 @@ pub struct SwaphiConfig {
     pub devices: usize,
     pub policy: Policy,
     pub top_k: usize,
+    pub precision: Precision,
     pub chunk_residues: u128,
     pub sim_enabled: bool,
     pub sim_threads: usize,
@@ -230,6 +233,7 @@ impl SwaphiConfig {
         let gap_extend = raw.int_or("scoring.gap_extend", 2)? as i32;
         let engine_s = raw.str_or("search.engine", "intersp")?;
         let policy_s = raw.str_or("search.policy", "guided")?;
+        let precision_s = raw.str_or("search.precision", "auto")?;
         Ok(SwaphiConfig {
             scoring: Scoring::new(&matrix, gap_open, gap_extend)?,
             engine: EngineKind::parse(&engine_s)
@@ -240,6 +244,8 @@ impl SwaphiConfig {
             policy: Policy::parse(&policy_s)
                 .ok_or_else(|| anyhow::anyhow!("unknown policy {policy_s:?}"))?,
             top_k: raw.int_or("search.top_k", 10)?.max(1) as usize,
+            precision: Precision::parse(&precision_s)
+                .ok_or_else(|| anyhow::anyhow!("unknown precision {precision_s:?} (auto|i16|i32)"))?,
             chunk_residues: raw.int_or("search.chunk_residues", 1 << 19)?.max(1024) as u128,
             sim_enabled: raw.bool_or("sim.enabled", true)?,
             sim_threads: raw.int_or("sim.threads_per_device", 240)?.max(1) as usize,
@@ -260,6 +266,7 @@ impl SwaphiConfig {
             devices: self.devices,
             chunk: ChunkPlanConfig { target_padded_residues: self.chunk_residues },
             top_k: self.top_k,
+            precision: self.precision,
             sim: self.sim_enabled.then(|| SimConfig {
                 devices: self.devices,
                 threads_per_device: self.sim_threads,
@@ -301,7 +308,20 @@ mod tests {
         assert_eq!(cfg.scoring.gap_extend, 2);
         assert_eq!(cfg.engine, EngineKind::InterSP);
         assert_eq!(cfg.policy, Policy::Guided);
+        assert_eq!(cfg.precision, Precision::Auto);
         assert_eq!(cfg.sim_threads, 240);
+    }
+
+    #[test]
+    fn precision_key_parses_and_rejects() {
+        let mut raw = RawConfig::default();
+        raw.set("search.precision", "i16").unwrap();
+        let cfg = SwaphiConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.precision, Precision::I16);
+        assert_eq!(cfg.search_config().precision, Precision::I16);
+        raw.set("search.precision", "i128").unwrap();
+        let err = SwaphiConfig::from_raw(&raw).unwrap_err().to_string();
+        assert!(err.contains("precision"), "{err}");
     }
 
     #[test]

@@ -1,10 +1,29 @@
-//! The SWAPHI coordinator — the paper's Fig 2 program workflow.
+//! The SWAPHI coordinator — the paper's Fig 2 program workflow, grown
+//! into an engine-agnostic **batched search pipeline**.
 //!
-//! Stages: (i) per-query profile construction ([`QueryContext`]); (ii)
-//! one **host thread per coprocessor**, each pulling chunks from the
-//! shared pool of workloads and driving its own aligner (native engine or
-//! PJRT artifacts); (iii) barrier on completion; (iv) descending score
-//! sort and report ([`results`]).
+//! Stages: (i) per-query profile construction ([`QueryContext`], all
+//! queries of a batch up front); (ii) one **host thread per coprocessor**,
+//! each pulling `(query, chunk)` work items from the shared pool and
+//! driving its own aligner (native engine or PJRT artifacts); (iii)
+//! barrier on completion, where per-thread [`ScoreSink`] shards are
+//! merged exactly once; (iv) ranked report ([`results`]).
+//!
+//! The unit of amortization is a [`SearchSession`]: the chunk plan,
+//! per-thread aligners and their DP workspaces are built once and reused
+//! across a whole batch of queries, instead of once per query. Score
+//! aggregation is sharded — each host thread accumulates into a private
+//! sink (bounded top-k heap by default) and the dense per-database
+//! `Vec<i32>` is opt-in ([`SearchSession::search_batch_dense`]).
+//!
+//! Precision tiers: when the query's [`Precision`] policy and the engine
+//! allow it, chunks are scored in the narrow 32-lane saturating i16 tier
+//! over the index's [`wide`](crate::db::index::Index::wide) profiles
+//! (packed once per index, lazily on first narrow-tier use); lanes
+//! whose best saturates are rescored at full i32
+//! precision (exactly those — the overflow bitmask is per lane), and the
+//! rescore fraction is reported per query and fed to the device
+//! simulator. Chunk boundaries are pair-aligned
+//! ([`plan_chunks_paired`]) so no wide profile straddles two threads.
 //!
 //! Because PJRT client types are single-threaded, aligners are minted
 //! *inside* each host thread by an [`AlignerFactory`] — the same
@@ -12,21 +31,34 @@
 //! offload context).
 //!
 //! Timing is dual: real wallclock of this container (reported as
-//! `native_gcups`) and, when `sim` is set, the calibrated Xeon Phi
+//! `native_gcups`; for a batch, attributed to queries by their share of
+//! DP cells) and, when `sim` is set, the calibrated Xeon Phi
 //! discrete-event simulation (`sim_gcups`) — see DESIGN.md §2.
+//!
+//! ## Migration note
+//!
+//! [`Coordinator`] is kept as a thin wrapper over [`SearchSession`]:
+//! `Coordinator::search` / `search_all` behave as before (dense scores
+//! populated, one result per query); its former public fields are now
+//! accessor methods (`index()`, `scoring()`, `config()`). New callers
+//! that don't need the full score vector should hold a `SearchSession`
+//! and use [`SearchSession::search_batch`], which streams through
+//! bounded top-k shards and scales to databases whose dense score
+//! vector would not fit.
 
 pub mod results;
 
-use crate::align::{EngineKind, NativeAligner, ProfileAligner, QueryContext};
-use crate::db::chunk::{plan_chunks, Chunk, ChunkPlanConfig};
+use crate::align::{
+    scalar, EngineKind, NativeAligner, Precision, ProfileAligner, QueryContext,
+};
+use crate::db::chunk::{plan_chunks_paired, Chunk, ChunkPlanConfig};
 use crate::db::index::Index;
 use crate::matrices::Scoring;
-use crate::metrics::{Cells, Timer};
+use crate::metrics::{Cells, RescoreStats, Timer};
 use crate::phi::sim::{simulate_search, SimConfig, SimReport};
-use results::Hit;
+use results::{DenseSink, Hit, ScoreSink, TopKSink};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::channel;
 
 /// Mints per-host-thread aligners.
 pub trait AlignerFactory: Send + Sync {
@@ -52,16 +84,26 @@ impl AlignerFactory for NativeFactory {
 
 /// PJRT artifacts backend: each host thread opens its own runtime
 /// (its own PJRT client + compile cache), mirroring per-coprocessor
-/// offload-context ownership.
+/// offload-context ownership. Requires the `pjrt` cargo feature; without
+/// it, [`AlignerFactory::make`] fails cleanly at search time.
 pub struct PjrtFactory {
     pub artifacts_dir: PathBuf,
     pub kind: EngineKind,
 }
 
 impl AlignerFactory for PjrtFactory {
+    #[cfg(feature = "pjrt")]
     fn make(&self) -> anyhow::Result<Box<dyn ProfileAligner>> {
         let rt = std::rc::Rc::new(crate::runtime::PjrtRuntime::open(&self.artifacts_dir)?);
         Ok(Box::new(crate::runtime::PjrtAligner::new(rt, self.kind)))
+    }
+    #[cfg(not(feature = "pjrt"))]
+    fn make(&self) -> anyhow::Result<Box<dyn ProfileAligner>> {
+        anyhow::bail!(
+            "pjrt backend unavailable: this binary was built without the `pjrt` \
+             feature (artifacts dir {})",
+            self.artifacts_dir.display()
+        )
     }
     fn kind(&self) -> EngineKind {
         self.kind
@@ -80,6 +122,8 @@ pub struct SearchConfig {
     pub chunk: ChunkPlanConfig,
     /// Hits to keep per query.
     pub top_k: usize,
+    /// Score-lane precision policy applied to every query of a session.
+    pub precision: Precision,
     /// Xeon Phi timing simulation (None = native timing only).
     pub sim: Option<SimConfig>,
 }
@@ -90,6 +134,7 @@ impl Default for SearchConfig {
             devices: 1,
             chunk: ChunkPlanConfig::default(),
             top_k: 10,
+            precision: Precision::default(),
             sim: Some(SimConfig::default()),
         }
     }
@@ -102,11 +147,17 @@ pub struct QueryResult {
     pub query_len: usize,
     pub hits: Vec<Hit>,
     /// Scores for every database sequence (length-sorted order).
+    /// Populated only by the dense (opt-in) paths — `Coordinator::search`
+    /// / `search_all` and [`SearchSession::search_batch_dense`]; empty
+    /// for the streaming top-k path.
     pub scores: Vec<i32>,
     /// Real cells aligned.
     pub cells: Cells,
-    /// Real wallclock on this container (s).
+    /// Real wallclock on this container (s); for batched searches, the
+    /// batch wallclock attributed by this query's share of DP cells.
     pub wall_seconds: f64,
+    /// Precision-tier accounting (narrow-tier lanes, overflow rescores).
+    pub rescore: RescoreStats,
     /// Calibrated device simulation (when configured).
     pub sim: Option<SimReport>,
 }
@@ -123,135 +174,332 @@ impl QueryResult {
     }
 }
 
-/// The coordinator: owns the index, scoring scheme and configuration.
-pub struct Coordinator<'a> {
+/// A batched search pipeline over one index: owns the (pair-aligned)
+/// chunk plan and drives host threads whose aligners, DP workspaces and
+/// score shards persist across every query of a batch.
+pub struct SearchSession<'a> {
     pub index: &'a Index,
     pub scoring: Scoring,
     pub config: SearchConfig,
     chunks: Vec<Chunk>,
 }
 
-impl<'a> Coordinator<'a> {
+impl<'a> SearchSession<'a> {
     pub fn new(index: &'a Index, scoring: Scoring, config: SearchConfig) -> Self {
-        let chunks = plan_chunks(index, config.chunk);
-        Coordinator { index, scoring, config, chunks }
+        // pair-aligned so the narrow tier's wide profiles never straddle
+        // a chunk boundary (each would be scored twice otherwise)
+        let chunks = plan_chunks_paired(index, config.chunk);
+        SearchSession { index, scoring, config, chunks }
     }
 
     pub fn n_chunks(&self) -> usize {
         self.chunks.len()
     }
 
-    /// Search one query through the full workflow.
+    /// Search a batch of queries, streaming scores through bounded
+    /// per-thread top-k shards (`O(top_k)` aggregation memory per query;
+    /// `QueryResult::scores` stays empty).
+    pub fn search_batch(
+        &self,
+        factory: &dyn AlignerFactory,
+        queries: &[(String, Vec<u8>)],
+    ) -> anyhow::Result<Vec<QueryResult>> {
+        let ctxs = self.contexts(queries);
+        let timer = Timer::start();
+        let merged = self.run_sharded(factory, &ctxs, || TopKSink::new(self.config.top_k))?;
+        let wall = timer.seconds();
+        let total_qlen: usize = ctxs.iter().map(|c| c.len()).sum();
+        let mut out = Vec::with_capacity(ctxs.len());
+        for (ctx, (sink, stats)) in ctxs.iter().zip(merged) {
+            let hits = self.hits_from_pairs(&sink.finish());
+            out.push(self.assemble(factory, ctx, hits, Vec::new(), stats, wall, total_qlen));
+        }
+        Ok(out)
+    }
+
+    /// Search a batch of queries keeping the full dense score vector per
+    /// query (opt-in; `O(database)` memory per query).
+    pub fn search_batch_dense(
+        &self,
+        factory: &dyn AlignerFactory,
+        queries: &[(String, Vec<u8>)],
+    ) -> anyhow::Result<Vec<QueryResult>> {
+        let ctxs = self.contexts(queries);
+        let timer = Timer::start();
+        let n_seqs = self.index.n_seqs();
+        let merged = self.run_sharded(factory, &ctxs, || DenseSink::new(n_seqs))?;
+        let wall = timer.seconds();
+        let total_qlen: usize = ctxs.iter().map(|c| c.len()).sum();
+        let mut out = Vec::with_capacity(ctxs.len());
+        for (ctx, (sink, stats)) in ctxs.iter().zip(merged) {
+            let scores = sink.finish()?;
+            let hits = results::top_k(
+                &scores,
+                self.config.top_k,
+                |i| self.index.seqs[i].id.clone(),
+                |i| self.index.seqs[i].len(),
+            );
+            out.push(self.assemble(factory, ctx, hits, scores, stats, wall, total_qlen));
+        }
+        Ok(out)
+    }
+
+    fn contexts(&self, queries: &[(String, Vec<u8>)]) -> Vec<QueryContext> {
+        queries
+            .iter()
+            .map(|(id, q)| {
+                QueryContext::build_with_precision(
+                    id.clone(),
+                    q.clone(),
+                    &self.scoring,
+                    self.config.precision,
+                )
+            })
+            .collect()
+    }
+
+    fn hits_from_pairs(&self, pairs: &[(usize, i32)]) -> Vec<Hit> {
+        pairs
+            .iter()
+            .map(|&(i, score)| Hit {
+                seq_index: i,
+                id: self.index.seqs[i].id.clone(),
+                len: self.index.seqs[i].len(),
+                score,
+            })
+            .collect()
+    }
+
+    fn assemble(
+        &self,
+        factory: &dyn AlignerFactory,
+        ctx: &QueryContext,
+        hits: Vec<Hit>,
+        scores: Vec<i32>,
+        rescore: RescoreStats,
+        batch_wall: f64,
+        total_qlen: usize,
+    ) -> QueryResult {
+        // DP cells scale linearly in query length over a fixed database,
+        // so a query's share of the batch wallclock is its qlen share
+        let wall_seconds = if total_qlen == 0 {
+            batch_wall
+        } else {
+            batch_wall * ctx.len() as f64 / total_qlen as f64
+        };
+        let cells = Cells::for_search(ctx.len(), self.index.total_residues);
+        let sim = self.config.sim.map(|mut sim_cfg| {
+            sim_cfg.devices = self.config.devices.max(sim_cfg.devices);
+            // charge the tier the search actually ran in, including the
+            // measured overflow-rescore fraction
+            sim_cfg.precision =
+                if rescore.i16_lanes > 0 { Precision::I16 } else { Precision::I32 };
+            sim_cfg.rescore_fraction = rescore.rescore_fraction();
+            simulate_search(self.index, &self.chunks, factory.kind(), ctx.len(), sim_cfg)
+        });
+        QueryResult {
+            query_id: ctx.id.clone(),
+            query_len: ctx.len(),
+            hits,
+            scores,
+            cells,
+            wall_seconds,
+            rescore,
+            sim,
+        }
+    }
+
+    /// Stage (ii)+(iii): host threads pull `(query, chunk)` items from
+    /// the shared pool into per-thread sink shards; returns the per-query
+    /// merged sinks and rescore accounting.
+    fn run_sharded<S, F>(
+        &self,
+        factory: &dyn AlignerFactory,
+        ctxs: &[QueryContext],
+        mk: F,
+    ) -> anyhow::Result<Vec<(S, RescoreStats)>>
+    where
+        S: ScoreSink,
+        F: Fn() -> S + Sync,
+    {
+        let nq = ctxs.len();
+        let nc = self.chunks.len();
+        let mut merged: Vec<(S, RescoreStats)> =
+            (0..nq).map(|_| (mk(), RescoreStats::default())).collect();
+        if nq == 0 || nc == 0 {
+            return Ok(merged);
+        }
+        let cursor = AtomicUsize::new(0); // the shared pool of workloads
+        let devices = self.config.devices.max(1);
+
+        let shard_sets: Vec<anyhow::Result<Vec<(S, RescoreStats)>>> =
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..devices)
+                    .map(|_dev| {
+                        let cursor = &cursor;
+                        let mk = &mk;
+                        scope.spawn(move || self.worker(factory, ctxs, cursor, mk))
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().unwrap_or_else(|p| std::panic::resume_unwind(p)))
+                    .collect()
+            });
+        // stage (iii): the once-per-batch shard merge
+        for set in shard_sets {
+            for (q, (shard, stats)) in set?.into_iter().enumerate() {
+                merged[q].0.merge(shard);
+                merged[q].1.add(stats);
+            }
+        }
+        // completeness guard, sink-independent: every sequence must have
+        // been scored exactly once per query (catches any chunk-plan /
+        // wide-range mapping bug loudly instead of silently ranking a
+        // subset)
+        let n_seqs = self.index.n_seqs() as u64;
+        for (q, (_, stats)) in merged.iter().enumerate() {
+            let scored = stats.i16_lanes + stats.i32_lanes;
+            anyhow::ensure!(
+                scored == n_seqs,
+                "lost scores for query {q}: {scored}/{n_seqs}"
+            );
+        }
+        Ok(merged)
+    }
+
+    /// One host thread: mint the aligner once, then drain the pool.
+    fn worker<S: ScoreSink>(
+        &self,
+        factory: &dyn AlignerFactory,
+        ctxs: &[QueryContext],
+        cursor: &AtomicUsize,
+        mk: &(impl Fn() -> S + Sync),
+    ) -> anyhow::Result<Vec<(S, RescoreStats)>> {
+        // per-host-thread aligner, amortized over the whole batch
+        let mut aligner = factory.make()?;
+        let nc = self.chunks.len();
+        let total = ctxs.len() * nc;
+        let mut shards: Vec<(S, RescoreStats)> =
+            (0..ctxs.len()).map(|_| (mk(), RescoreStats::default())).collect();
+        loop {
+            // dynamic pool: grab the next (query, chunk) work item
+            let i = cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= total {
+                break;
+            }
+            let (q, c) = (i / nc, i % nc);
+            let (sink, stats) = &mut shards[q];
+            self.process_chunk(aligner.as_mut(), &ctxs[q], &self.chunks[c], sink, stats);
+        }
+        Ok(shards)
+    }
+
+    /// Score one chunk for one query into the thread-local shard, picking
+    /// the precision tier.
+    fn process_chunk<S: ScoreSink>(
+        &self,
+        aligner: &mut dyn ProfileAligner,
+        ctx: &QueryContext,
+        chunk: &Chunk,
+        sink: &mut S,
+        stats: &mut RescoreStats,
+    ) {
+        if ctx.wants_i16() && aligner.supports_i16() {
+            // narrow tier: walk the 32-lane wide profiles of this chunk
+            // (pair-aligned plan ⇒ profile_start is even)
+            debug_assert_eq!(chunk.profile_start % 2, 0);
+            let wides = self.index.wide();
+            let w0 = chunk.profile_start / 2;
+            let w1 = chunk.profile_end.div_ceil(2);
+            for wide in &wides[w0..w1] {
+                let (lanes, overflow) = aligner.align_wide_i16(ctx, wide, &self.scoring);
+                debug_assert!(overflow == 0 || !ctx.i16_exact());
+                for lane in 0..wide.used {
+                    let seq = wide.members[lane];
+                    let mut score = lanes[lane];
+                    if overflow & (1 << lane) != 0 {
+                        // exact full-precision rescore of just this lane,
+                        // against the index's contiguous copy of the subject
+                        score = scalar::sw_score(
+                            &ctx.codes,
+                            &self.index.seqs[seq].codes,
+                            &self.scoring,
+                        );
+                        stats.overflowed += 1;
+                    }
+                    stats.i16_lanes += 1;
+                    sink.push(seq, score);
+                }
+            }
+        } else {
+            for p in chunk.profile_start..chunk.profile_end {
+                let profile = &self.index.profiles[p];
+                let lanes = aligner.align(ctx, profile, &self.scoring);
+                for lane in 0..profile.used {
+                    stats.i32_lanes += 1;
+                    sink.push(profile.members[lane], lanes[lane]);
+                }
+            }
+        }
+    }
+}
+
+/// The coordinator: owns the scoring scheme and configuration for one
+/// index. Kept as a thin, API-compatible wrapper over [`SearchSession`]
+/// (see the module-level migration note) — `search` runs a
+/// single-query dense batch. All state lives in the session; accessors
+/// delegate so there is exactly one copy.
+pub struct Coordinator<'a> {
+    session: SearchSession<'a>,
+}
+
+impl<'a> Coordinator<'a> {
+    pub fn new(index: &'a Index, scoring: Scoring, config: SearchConfig) -> Self {
+        Coordinator { session: SearchSession::new(index, scoring, config) }
+    }
+
+    pub fn index(&self) -> &'a Index {
+        self.session.index
+    }
+
+    pub fn scoring(&self) -> &Scoring {
+        &self.session.scoring
+    }
+
+    pub fn config(&self) -> &SearchConfig {
+        &self.session.config
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.session.n_chunks()
+    }
+
+    /// Borrow the underlying batched session.
+    pub fn session(&self) -> &SearchSession<'a> {
+        &self.session
+    }
+
+    /// Search one query through the full workflow (dense scores kept).
     pub fn search(
         &self,
         factory: &dyn AlignerFactory,
         query_id: &str,
         query: &[u8],
     ) -> anyhow::Result<QueryResult> {
-        // stage (i): query profiles
-        let ctx = QueryContext::build(query_id, query.to_vec(), &self.scoring);
-        let timer = Timer::start();
-
-        // stage (ii): host threads over the shared chunk pool
-        let scores = self.run_host_threads(factory, &ctx)?;
-
-        // stage (iii) barrier happened in run_host_threads; stage (iv):
-        let wall_seconds = timer.seconds();
-        let hits = results::top_k(
-            &scores,
-            self.config.top_k,
-            |i| self.index.seqs[i].id.clone(),
-            |i| self.index.seqs[i].len(),
-        );
-        let cells = Cells::for_search(ctx.len(), self.index.total_residues);
-        let sim = self.config.sim.map(|mut sim_cfg| {
-            sim_cfg.devices = self.config.devices.max(sim_cfg.devices);
-            simulate_search(self.index, &self.chunks, factory.kind(), ctx.len(), sim_cfg)
-        });
-        Ok(QueryResult {
-            query_id: query_id.to_string(),
-            query_len: query.len(),
-            hits,
-            scores,
-            cells,
-            wall_seconds,
-            sim,
-        })
+        let batch = [(query_id.to_string(), query.to_vec())];
+        let mut results = self.session.search_batch_dense(factory, &batch)?;
+        Ok(results.remove(0))
     }
 
-    /// Search many queries, reusing the chunk plan.
+    /// Search many queries as one batch, reusing the chunk plan and the
+    /// per-thread aligners/workspaces (dense scores kept).
     pub fn search_all(
         &self,
         factory: &dyn AlignerFactory,
         queries: &[(String, Vec<u8>)],
     ) -> anyhow::Result<Vec<QueryResult>> {
-        queries.iter().map(|(id, q)| self.search(factory, id, q)).collect()
-    }
-
-    fn run_host_threads(
-        &self,
-        factory: &dyn AlignerFactory,
-        ctx: &QueryContext,
-    ) -> anyhow::Result<Vec<i32>> {
-        let n_seqs = self.index.n_seqs();
-        if self.chunks.is_empty() {
-            return Ok(Vec::new());
-        }
-        let cursor = AtomicUsize::new(0); // the shared pool of workloads
-        let (tx, rx) = channel::<anyhow::Result<Vec<(usize, i32)>>>();
-        let devices = self.config.devices.max(1);
-
-        std::thread::scope(|scope| {
-            for _dev in 0..devices {
-                let tx = tx.clone();
-                let cursor = &cursor;
-                let chunks = &self.chunks;
-                let index = self.index;
-                let scoring = &self.scoring;
-                scope.spawn(move || {
-                    // per-host-thread aligner (stage ii ownership)
-                    let mut aligner = match factory.make() {
-                        Ok(a) => a,
-                        Err(e) => {
-                            let _ = tx.send(Err(e));
-                            return;
-                        }
-                    };
-                    loop {
-                        // dynamic pool: grab the next chunk
-                        let c = cursor.fetch_add(1, Ordering::Relaxed);
-                        if c >= chunks.len() {
-                            break;
-                        }
-                        let chunk = &chunks[c];
-                        let mut out =
-                            Vec::with_capacity(chunk.n_profiles() * crate::db::profile::LANES);
-                        for p in chunk.profile_start..chunk.profile_end {
-                            let profile = &index.profiles[p];
-                            let lanes = aligner.align(ctx, profile, scoring);
-                            for lane in 0..profile.used {
-                                out.push((profile.members[lane], lanes[lane]));
-                            }
-                        }
-                        if tx.send(Ok(out)).is_err() {
-                            break;
-                        }
-                    }
-                });
-            }
-            drop(tx);
-            // collector (the "wait for completion of all host threads")
-            let mut scores = vec![0i32; n_seqs];
-            let mut seen = 0usize;
-            for msg in rx {
-                for (idx, score) in msg? {
-                    scores[idx] = score;
-                    seen += 1;
-                }
-            }
-            anyhow::ensure!(seen == n_seqs, "lost scores: {seen}/{n_seqs}");
-            Ok(scores)
-        })
+        self.session.search_batch_dense(factory, queries)
     }
 }
 
@@ -260,6 +508,7 @@ mod tests {
     use super::*;
     use crate::align::search_index;
     use crate::db::synth::{generate, generate_query, SynthSpec};
+    use crate::db::{Database, DbSeq};
 
     fn setup(n: usize) -> (Index, Scoring) {
         (Index::build(generate(&SynthSpec::tiny(n, 51))), Scoring::swaphi_default())
@@ -357,5 +606,109 @@ mod tests {
             .unwrap();
         assert!(res.scores.is_empty());
         assert!(res.hits.is_empty());
+    }
+
+    #[test]
+    fn batch_topk_matches_dense_batch() {
+        let (idx, sc) = setup(200);
+        let session = SearchSession::new(
+            &idx,
+            sc,
+            SearchConfig {
+                devices: 3,
+                top_k: 7,
+                sim: None,
+                chunk: ChunkPlanConfig { target_padded_residues: 4096 },
+                ..Default::default()
+            },
+        );
+        let queries: Vec<(String, Vec<u8>)> =
+            (0..4).map(|i| (format!("q{i}"), generate_query(30 + 11 * i, i as u64))).collect();
+        let factory = NativeFactory(EngineKind::InterSP);
+        let streamed = session.search_batch(&factory, &queries).unwrap();
+        let dense = session.search_batch_dense(&factory, &queries).unwrap();
+        assert_eq!(streamed.len(), dense.len());
+        for (s, d) in streamed.iter().zip(&dense) {
+            assert_eq!(s.query_id, d.query_id);
+            assert!(s.scores.is_empty(), "top-k path keeps no dense scores");
+            assert_eq!(d.scores.len(), idx.n_seqs());
+            let s_hits: Vec<(usize, i32)> =
+                s.hits.iter().map(|h| (h.seq_index, h.score)).collect();
+            let d_hits: Vec<(usize, i32)> =
+                d.hits.iter().map(|h| (h.seq_index, h.score)).collect();
+            assert_eq!(s_hits, d_hits, "{}", s.query_id);
+        }
+    }
+
+    #[test]
+    fn precision_tiers_agree_and_account() {
+        let (idx, sc) = setup(150);
+        let q = generate_query(70, 12);
+        let run = |precision| {
+            let coord = Coordinator::new(
+                &idx,
+                sc.clone(),
+                SearchConfig { precision, sim: None, ..Default::default() },
+            );
+            coord.search(&NativeFactory(EngineKind::InterSP), "q", &q).unwrap()
+        };
+        let auto = run(Precision::Auto);
+        let narrow = run(Precision::I16);
+        let full = run(Precision::I32);
+        assert_eq!(auto.scores, full.scores);
+        assert_eq!(narrow.scores, full.scores);
+        // tier accounting: auto/i16 ran narrow, i32 ran full
+        assert_eq!(auto.rescore.i16_lanes, idx.n_seqs() as u64);
+        assert_eq!(auto.rescore.i32_lanes, 0);
+        assert_eq!(auto.rescore.overflowed, 0, "tiny workload cannot saturate");
+        assert_eq!(full.rescore.i16_lanes, 0);
+        assert_eq!(full.rescore.i32_lanes, idx.n_seqs() as u64);
+    }
+
+    #[test]
+    fn narrow_tier_falls_back_for_engines_without_it() {
+        let (idx, sc) = setup(60);
+        let q = generate_query(25, 5);
+        let coord = Coordinator::new(
+            &idx,
+            sc,
+            SearchConfig { precision: Precision::I16, sim: None, ..Default::default() },
+        );
+        let r = coord.search(&NativeFactory(EngineKind::IntraQP), "q", &q).unwrap();
+        assert_eq!(r.rescore.i16_lanes, 0, "striped engine has no narrow tier");
+        assert_eq!(r.rescore.i32_lanes, idx.n_seqs() as u64);
+    }
+
+    #[test]
+    fn saturating_workload_rescores_exactly() {
+        // database of W-homopolymers under PAM250 (W–W = 17): a long W
+        // query saturates i16 against the long subject but not the short
+        // ones (1950 * 17 = 33150 > i16::MAX)
+        let seqs: Vec<DbSeq> = [1950usize, 60, 25, 5]
+            .iter()
+            .enumerate()
+            .map(|(i, &len)| DbSeq { id: format!("w{i}"), codes: vec![17u8; len] })
+            .collect();
+        let idx = Index::build(Database::new(seqs));
+        let sc = Scoring::new("PAM250", 10, 2).unwrap();
+        let q = vec![17u8; 1950];
+        // auto declines the narrow tier here (bound exceeds i16), so this
+        // exercises the forced-i16 overflow + rescore path
+        let coord = Coordinator::new(
+            &idx,
+            sc.clone(),
+            SearchConfig { precision: Precision::I16, sim: None, ..Default::default() },
+        );
+        let auto_coord =
+            Coordinator::new(&idx, sc.clone(), SearchConfig { sim: None, ..Default::default() });
+        let got = coord.search(&NativeFactory(EngineKind::InterSP), "w", &q).unwrap();
+        assert_eq!(got.rescore.overflowed, 1, "exactly the long subject saturates");
+        assert_eq!(got.rescore.i16_lanes, idx.n_seqs() as u64);
+        let oracle = coord.search(&NativeFactory(EngineKind::Scalar), "w", &q).unwrap();
+        assert_eq!(got.scores, oracle.scores, "rescore must restore exactness");
+        // auto: bound over i16 ⇒ full precision, no narrow lanes at all
+        let auto = auto_coord.search(&NativeFactory(EngineKind::InterSP), "w", &q).unwrap();
+        assert_eq!(auto.rescore.i16_lanes, 0, "auto must decline the narrow tier");
+        assert_eq!(auto.scores, oracle.scores);
     }
 }

@@ -1,6 +1,21 @@
 //! Result aggregation: per-sequence scores → ranked hit list (the paper's
 //! stage iv: "sort all alignment scores in descending order and output the
 //! alignment results").
+//!
+//! Aggregation is **sharded**: every host thread pushes the scores it
+//! produced into its own private [`ScoreSink`] shard (no channel, no
+//! contention), and the shards are merged exactly once at the
+//! end-of-search barrier. The sink decides what is retained:
+//!
+//! * [`TopKSink`] — a bounded worst-out heap; memory is `O(k)` instead of
+//!   `O(database)`, which is what lets a session stream TrEMBL-scale
+//!   searches. This is the default.
+//! * [`DenseSink`] — the classic full `Vec<i32>` score vector, now
+//!   opt-in (oracle comparisons, score-distribution analysis).
+//! * [`ThresholdSink`] — every hit at or above a score cutoff.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
 
 /// One database hit.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -28,6 +43,173 @@ pub fn top_k(
         .take(k)
         .map(|i| Hit { seq_index: i, id: id_of(i), len: len_of(i), score: scores[i] })
         .collect()
+}
+
+/// A per-thread score accumulator. Each host thread owns one shard;
+/// shards of the same type are merged once at the barrier, then
+/// [`finish`](ScoreSink::finish) produces the sink's output.
+///
+/// Implementations must be order-independent: pushing the same
+/// `(seq_index, score)` set in any interleaving, across any sharding,
+/// must finish to the same output (each sequence index is pushed exactly
+/// once per search).
+pub trait ScoreSink: Send + Sized {
+    type Output;
+
+    /// Record the score of one database sequence.
+    fn push(&mut self, seq_index: usize, score: i32);
+
+    /// Fold another shard into this one (the once-per-search merge).
+    fn merge(&mut self, other: Self);
+
+    /// Consume the merged sink into its output.
+    fn finish(self) -> Self::Output;
+}
+
+/// Entry ordering for the bounded top-k heap: the heap is a max-heap
+/// whose top is the *worst* retained hit (lowest score; ties broken so
+/// the higher sequence index is evicted first, matching [`top_k`]'s
+/// deterministic tie-break).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct WorstFirst {
+    score: i32,
+    idx: usize,
+}
+
+impl Ord for WorstFirst {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other.score.cmp(&self.score).then(self.idx.cmp(&other.idx))
+    }
+}
+
+impl PartialOrd for WorstFirst {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Bounded top-k sink: retains the best `k` `(seq_index, score)` pairs in
+/// a worst-out heap. `O(k)` memory regardless of database size.
+pub struct TopKSink {
+    k: usize,
+    heap: BinaryHeap<WorstFirst>,
+}
+
+impl TopKSink {
+    pub fn new(k: usize) -> Self {
+        TopKSink { k, heap: BinaryHeap::with_capacity(k + 1) }
+    }
+}
+
+impl ScoreSink for TopKSink {
+    /// Best-first `(seq_index, score)` pairs (score descending, index
+    /// ascending on ties) — the same order [`top_k`] produces.
+    type Output = Vec<(usize, i32)>;
+
+    fn push(&mut self, seq_index: usize, score: i32) {
+        if self.k == 0 {
+            return;
+        }
+        let entry = WorstFirst { score, idx: seq_index };
+        if self.heap.len() < self.k {
+            self.heap.push(entry);
+        } else if let Some(&worst) = self.heap.peek() {
+            // `entry < worst` under WorstFirst ordering means entry is
+            // strictly better than the worst retained hit
+            if entry < worst {
+                self.heap.pop();
+                self.heap.push(entry);
+            }
+        }
+    }
+
+    fn merge(&mut self, other: Self) {
+        for e in other.heap {
+            self.push(e.idx, e.score);
+        }
+    }
+
+    fn finish(self) -> Vec<(usize, i32)> {
+        let mut out: Vec<(usize, i32)> =
+            self.heap.into_iter().map(|e| (e.idx, e.score)).collect();
+        out.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        out
+    }
+}
+
+/// Dense sink: the full per-sequence score vector (opt-in; `O(database)`
+/// memory). Shards buffer `(seq_index, score)` pairs and scatter once at
+/// finish, which also verifies no score was lost.
+pub struct DenseSink {
+    n_seqs: usize,
+    entries: Vec<(usize, i32)>,
+}
+
+impl DenseSink {
+    pub fn new(n_seqs: usize) -> Self {
+        DenseSink { n_seqs, entries: Vec::new() }
+    }
+}
+
+impl ScoreSink for DenseSink {
+    /// Scores indexed by (length-sorted) sequence position, or an error
+    /// if any sequence went unscored.
+    type Output = anyhow::Result<Vec<i32>>;
+
+    fn push(&mut self, seq_index: usize, score: i32) {
+        self.entries.push((seq_index, score));
+    }
+
+    fn merge(&mut self, other: Self) {
+        self.entries.extend(other.entries);
+    }
+
+    fn finish(self) -> anyhow::Result<Vec<i32>> {
+        let mut scores = vec![0i32; self.n_seqs];
+        anyhow::ensure!(
+            self.entries.len() == self.n_seqs,
+            "lost scores: {}/{}",
+            self.entries.len(),
+            self.n_seqs
+        );
+        for (idx, score) in self.entries {
+            scores[idx] = score;
+        }
+        Ok(scores)
+    }
+}
+
+/// Threshold sink: every `(seq_index, score)` at or above a cutoff,
+/// index-ascending for determinism.
+pub struct ThresholdSink {
+    min_score: i32,
+    hits: Vec<(usize, i32)>,
+}
+
+impl ThresholdSink {
+    pub fn new(min_score: i32) -> Self {
+        ThresholdSink { min_score, hits: Vec::new() }
+    }
+}
+
+impl ScoreSink for ThresholdSink {
+    type Output = Vec<(usize, i32)>;
+
+    fn push(&mut self, seq_index: usize, score: i32) {
+        if score >= self.min_score {
+            self.hits.push((seq_index, score));
+        }
+    }
+
+    fn merge(&mut self, other: Self) {
+        self.hits.extend(other.hits);
+    }
+
+    fn finish(self) -> Vec<(usize, i32)> {
+        let mut out = self.hits;
+        out.sort_unstable_by_key(|&(idx, _)| idx);
+        out
+    }
 }
 
 /// Render hits as the report table body.
@@ -74,5 +256,77 @@ mod tests {
         let text = format_hits(&hits);
         assert!(text.contains("rank"));
         assert!(text.lines().count() == 3);
+    }
+
+    fn rng_scores(seed: u64, n: usize) -> Vec<i32> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        (0..n).map(|_| rng.below(50) as i32).collect()
+    }
+
+    #[test]
+    fn topk_sink_matches_dense_top_k_under_sharding() {
+        for (seed, n, k, shards) in [(1u64, 100usize, 7usize, 3usize), (2, 40, 40, 1), (3, 9, 20, 4)]
+        {
+            let scores = rng_scores(seed, n);
+            // shard round-robin like concurrent host threads would
+            let mut parts: Vec<TopKSink> = (0..shards).map(|_| TopKSink::new(k)).collect();
+            for (i, &s) in scores.iter().enumerate() {
+                parts[i % shards].push(i, s);
+            }
+            let mut merged = parts.remove(0);
+            for p in parts {
+                merged.merge(p);
+            }
+            let got = merged.finish();
+            let expect: Vec<(usize, i32)> = top_k(&scores, k, |i| i.to_string(), |_| 0)
+                .into_iter()
+                .map(|h| (h.seq_index, h.score))
+                .collect();
+            assert_eq!(got, expect, "seed={seed} n={n} k={k} shards={shards}");
+        }
+    }
+
+    #[test]
+    fn topk_sink_tie_break_is_order_independent() {
+        let mut fwd = TopKSink::new(1);
+        fwd.push(0, 5);
+        fwd.push(1, 5);
+        let mut rev = TopKSink::new(1);
+        rev.push(1, 5);
+        rev.push(0, 5);
+        assert_eq!(fwd.finish(), vec![(0, 5)]);
+        assert_eq!(rev.finish(), vec![(0, 5)]);
+        let mut zero = TopKSink::new(0);
+        zero.push(0, 5);
+        assert!(zero.finish().is_empty());
+    }
+
+    #[test]
+    fn dense_sink_scatters_and_detects_loss() {
+        let mut a = DenseSink::new(4);
+        let mut b = DenseSink::new(4);
+        a.push(2, 9);
+        a.push(0, 1);
+        b.push(3, 7);
+        b.push(1, 5);
+        a.merge(b);
+        assert_eq!(a.finish().unwrap(), vec![1, 5, 9, 7]);
+
+        let mut short = DenseSink::new(3);
+        short.push(0, 1);
+        let err = short.finish().unwrap_err().to_string();
+        assert!(err.contains("lost scores"), "{err}");
+    }
+
+    #[test]
+    fn threshold_sink_filters_and_sorts() {
+        let mut a = ThresholdSink::new(10);
+        let mut b = ThresholdSink::new(10);
+        a.push(5, 12);
+        a.push(1, 9);
+        b.push(0, 10);
+        b.push(3, 30);
+        a.merge(b);
+        assert_eq!(a.finish(), vec![(0, 10), (3, 30), (5, 12)]);
     }
 }

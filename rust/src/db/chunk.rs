@@ -59,15 +59,32 @@ impl Default for ChunkPlanConfig {
 
 /// Split the index into chunks.
 pub fn plan_chunks(index: &Index, cfg: ChunkPlanConfig) -> Vec<Chunk> {
+    plan_chunks_aligned(index, cfg, 1)
+}
+
+/// Split the index into chunks whose boundaries land on *even* profile
+/// indices, so every chunk covers whole [`crate::db::profile::WideProfile`]s
+/// (wide profile `w` = narrow profiles `2w, 2w+1`). This is the plan the
+/// batched [`crate::coordinator::SearchSession`] uses: the narrow (i16)
+/// tier walks wide profiles and must never split one across two host
+/// threads, or its scores would be produced twice. Chunks may overshoot
+/// the target by at most one profile compared to [`plan_chunks`].
+pub fn plan_chunks_paired(index: &Index, cfg: ChunkPlanConfig) -> Vec<Chunk> {
+    plan_chunks_aligned(index, cfg, 2)
+}
+
+/// Shared planner: close chunks only on profile indices divisible by
+/// `align` (and never emit an empty chunk — a single huge profile
+/// becomes its own).
+fn plan_chunks_aligned(index: &Index, cfg: ChunkPlanConfig, align: usize) -> Vec<Chunk> {
     let mut chunks = Vec::new();
     let mut start = 0usize;
     let mut real = 0u128;
     let mut padded = 0u128;
     for (p, prof) in index.profiles.iter().enumerate() {
         let prof_padded = (prof.padded_len * LANES) as u128;
-        // close the chunk before adding if it would overshoot (but never
-        // emit an empty chunk — a single huge profile becomes its own)
-        if p > start && padded + prof_padded > cfg.target_padded_residues {
+        // close the chunk before adding if it would overshoot
+        if p > start && p % align == 0 && padded + prof_padded > cfg.target_padded_residues {
             chunks.push(make_chunk(chunks.len(), start, p, real, padded));
             start = p;
             real = 0;
@@ -141,6 +158,34 @@ mod tests {
                 assert!(c.padded_residues <= target, "{c:?}");
             }
         }
+    }
+
+    #[test]
+    fn paired_plan_covers_once_with_even_starts() {
+        let idx = index(500, 3);
+        let chunks = plan_chunks_paired(&idx, ChunkPlanConfig { target_padded_residues: 4096 });
+        assert!(!chunks.is_empty());
+        assert_eq!(chunks[0].profile_start, 0);
+        assert_eq!(chunks.last().unwrap().profile_end, idx.n_profiles());
+        for w in chunks.windows(2) {
+            assert_eq!(w[0].profile_end, w[1].profile_start);
+        }
+        for c in &chunks {
+            assert_eq!(c.profile_start % 2, 0, "{c:?} must start on a wide boundary");
+        }
+        let real: u128 = chunks.iter().map(|c| c.real_residues).sum();
+        assert_eq!(real, idx.total_residues);
+    }
+
+    #[test]
+    fn paired_plan_is_close_to_unpaired() {
+        let idx = index(400, 1);
+        let cfg = ChunkPlanConfig { target_padded_residues: 8192 };
+        let plain = plan_chunks(&idx, cfg);
+        let paired = plan_chunks_paired(&idx, cfg);
+        // pairing can only merge at odd boundaries: chunk count within 1×
+        assert!(paired.len() <= plain.len());
+        assert!(paired.len() * 2 >= plain.len(), "{} vs {}", paired.len(), plain.len());
     }
 
     #[test]

@@ -7,8 +7,9 @@
 //! balance the tail). Profiles group each run of 16 consecutive sorted
 //! sequences, exactly as §III.B.1 prescribes.
 
-use super::profile::{SequenceProfile, LANES};
+use super::profile::{SequenceProfile, WideProfile, LANES, LANES16};
 use super::{Database, DbSeq};
+use std::sync::OnceLock;
 
 /// A search-ready index: length-sorted sequences + packed profiles.
 #[derive(Clone, Debug)]
@@ -18,6 +19,9 @@ pub struct Index {
     pub seqs: Vec<DbSeq>,
     /// Sequence profiles over consecutive groups of 16 sorted sequences.
     pub profiles: Vec<SequenceProfile>,
+    /// 32-lane interleaved profiles for the narrow (i16) tier, built
+    /// lazily on first use (see [`Index::wide`]).
+    wide: OnceLock<Vec<WideProfile>>,
     /// Total real residues.
     pub total_residues: u128,
 }
@@ -30,7 +34,16 @@ impl Index {
         db.seqs.sort_by_key(|s| s.len());
         let total_residues = db.total_residues();
         let profiles = pack_profiles(&db.seqs);
-        Index { seqs: db.seqs, profiles, total_residues }
+        Index { seqs: db.seqs, profiles, wide: OnceLock::new(), total_residues }
+    }
+
+    /// The 32-lane interleaved profiles of the narrow (i16) tier: wide
+    /// profile `w` covers narrow profiles `2w` and `2w + 1`. Packed once
+    /// per index on first access (so i32-only searches never pay the
+    /// second residue copy) and cached for the index lifetime — the
+    /// per-query request path never packs. Thread-safe.
+    pub fn wide(&self) -> &[WideProfile] {
+        self.wide.get_or_init(|| pack_wide_profiles(&self.seqs))
     }
 
     pub fn n_seqs(&self) -> usize {
@@ -72,6 +85,23 @@ fn pack_profiles(sorted: &[DbSeq]) -> Vec<SequenceProfile> {
                 .map(|(k, s)| (g * LANES + k, s.codes.as_slice()))
                 .collect();
             SequenceProfile::pack(&refs)
+        })
+        .collect()
+}
+
+/// Pack consecutive sorted sequences into 32-lane wide profiles (narrow
+/// precision tier). Same ascending-length grouping, double width.
+fn pack_wide_profiles(sorted: &[DbSeq]) -> Vec<WideProfile> {
+    sorted
+        .chunks(LANES16)
+        .enumerate()
+        .map(|(g, group)| {
+            let refs: Vec<(usize, &[u8])> = group
+                .iter()
+                .enumerate()
+                .map(|(k, s)| (g * LANES16 + k, s.codes.as_slice()))
+                .collect();
+            WideProfile::pack(&refs)
         })
         .collect()
 }
@@ -125,6 +155,29 @@ mod tests {
         let unsorted_util = real as f64 / padded as f64;
         let sorted_util = Index::build(db).mean_utilization();
         assert!(sorted_util > unsorted_util, "{sorted_util} <= {unsorted_util}");
+    }
+
+    #[test]
+    fn wide_profiles_cover_narrow_pairs() {
+        let db = generate(&SynthSpec::tiny(100, 6));
+        let idx = Index::build(db);
+        assert_eq!(idx.wide().len(), idx.n_seqs().div_ceil(LANES16));
+        let covered: usize = idx.wide().iter().map(|w| w.used).sum();
+        assert_eq!(covered, idx.n_seqs());
+        for (g, w) in idx.wide().iter().enumerate() {
+            for k in 0..w.used {
+                let seq = g * LANES16 + k;
+                assert_eq!(w.members[k], seq);
+                assert_eq!(w.lens[k], idx.seqs[seq].len());
+                assert_eq!(w.lane_codes(k), idx.seqs[seq].codes);
+            }
+            // wide profile g holds the same members as narrow 2g, 2g+1
+            let narrow: Vec<usize> = idx.profiles[2 * g..(2 * g + 2).min(idx.n_profiles())]
+                .iter()
+                .flat_map(|p| p.members[..p.used].to_vec())
+                .collect();
+            assert_eq!(&w.members[..w.used], &narrow[..]);
+        }
     }
 
     #[test]

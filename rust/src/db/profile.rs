@@ -14,6 +14,9 @@
 //!   for gather-free inner loops (the InterSP variant).
 //! * **Striped query profile** (§III.C, Farrar): lanes stride through the
 //!   query at `S = ⌈Q/V⌉` so adjacent DP cells land in different vectors.
+//! * **Wide / narrow-precision layouts** (two-tier pipeline): a 32-lane
+//!   interleaved [`WideProfile`] and the `i16` [`QueryProfile16`] feed
+//!   the saturating narrow tier; built once per index / per query.
 
 use crate::alphabet::{DUMMY, ROW};
 use crate::matrices::Scoring;
@@ -21,6 +24,12 @@ use crate::util::round_up;
 
 /// SIMD lane count of the paper's 512-bit / 32-bit-lane vectors.
 pub const LANES: usize = 16;
+
+/// Lane count of the narrow-precision tier: the same 512-bit vector
+/// budget holds 32 saturating 16-bit lanes (the SSW / lazy-F-striped
+/// trick), doubling alignments per vector op at the cost of a rare
+/// overflow-and-rescore path.
+pub const LANES16: usize = 2 * LANES;
 
 /// Window width of the score profile (the paper sets N = 8 on Phi).
 pub const SCORE_PROFILE_N: usize = 8;
@@ -84,6 +93,60 @@ impl SequenceProfile {
     }
 }
 
+/// A wide sequence profile for the narrow (i16) tier: up to 32
+/// consecutive length-sorted subjects packed lane-wise, interleaved
+/// position-major exactly like [`SequenceProfile`] but at double width.
+/// Packed **once per index** (lazily, on the first narrow-tier search)
+/// so the per-query request path never packs and i32-only indexes never
+/// pay the copy. Wide profile `w` covers narrow profiles `2w` and
+/// `2w + 1` of the same index.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WideProfile {
+    /// Indices of member sequences in (sorted) database order;
+    /// `usize::MAX` marks an unused lane.
+    pub members: [usize; LANES16],
+    /// Number of used lanes (1..=32).
+    pub used: usize,
+    /// Real length of the sequence in each lane (0 for unused lanes).
+    pub lens: [usize; LANES16],
+    /// Common padded length — max member length rounded up to 8.
+    pub padded_len: usize,
+    /// Residue codes, position-major: `residues[j * LANES16 + lane]`.
+    pub residues: Vec<u8>,
+}
+
+impl WideProfile {
+    /// Pack up to 32 sequences (given as `(db_index, codes)`). Panics if
+    /// `seqs` is empty or longer than 32.
+    pub fn pack(seqs: &[(usize, &[u8])]) -> Self {
+        assert!(!seqs.is_empty() && seqs.len() <= LANES16, "1..=32 sequences per wide profile");
+        let max_len = seqs.iter().map(|(_, s)| s.len()).max().unwrap();
+        let padded_len = round_up(max_len.max(1), 8);
+        let mut members = [usize::MAX; LANES16];
+        let mut lens = [0usize; LANES16];
+        let mut residues = vec![DUMMY; padded_len * LANES16];
+        for (lane, (idx, codes)) in seqs.iter().enumerate() {
+            members[lane] = *idx;
+            lens[lane] = codes.len();
+            for (j, &c) in codes.iter().enumerate() {
+                residues[j * LANES16 + lane] = c;
+            }
+        }
+        WideProfile { members, used: seqs.len(), lens, padded_len, residues }
+    }
+
+    /// The 32-lane residue vector at subject position `j`.
+    #[inline]
+    pub fn vector(&self, j: usize) -> &[u8] {
+        &self.residues[j * LANES16..(j + 1) * LANES16]
+    }
+
+    /// The subject sequence in one lane, re-materialized (rescore path).
+    pub fn lane_codes(&self, lane: usize) -> Vec<u8> {
+        (0..self.lens[lane]).map(|j| self.vector(j)[lane]).collect()
+    }
+}
+
 /// Sequential-layout query profile: `qp[i * ROW + r]` = score(query[i], r).
 #[derive(Clone, Debug)]
 pub struct QueryProfile {
@@ -104,6 +167,40 @@ impl QueryProfile {
     /// indexed by subject residue code).
     #[inline(always)]
     pub fn row(&self, i: usize) -> &[i32] {
+        &self.scores[i * ROW..(i + 1) * ROW]
+    }
+}
+
+/// Narrow-precision query profile: the same layout as [`QueryProfile`]
+/// with `i16` entries, feeding the 32-lane saturating kernels. Matrix
+/// entries always fit (|score| ≤ 17 across the shipped matrices); the
+/// clamp guards hypothetical user matrices.
+#[derive(Clone, Debug)]
+pub struct QueryProfile16 {
+    pub qlen: usize,
+    pub scores: Vec<i16>,
+}
+
+impl QueryProfile16 {
+    /// A placeholder for queries that will never take the narrow tier
+    /// (no score table; `row()` must not be called on it).
+    pub fn empty(qlen: usize) -> Self {
+        QueryProfile16 { qlen, scores: Vec::new() }
+    }
+
+    pub fn build(query: &[u8], scoring: &Scoring) -> Self {
+        let mut scores = vec![0i16; query.len() * ROW];
+        for (i, &q) in query.iter().enumerate() {
+            for (r, &v) in scoring.row(q).iter().enumerate() {
+                scores[i * ROW + r] = v.clamp(i16::MIN as i32, i16::MAX as i32) as i16;
+            }
+        }
+        QueryProfile16 { qlen: query.len(), scores }
+    }
+
+    /// Substitution-score row for query position `i` (ROW entries).
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> &[i16] {
         &self.scores[i * ROW..(i + 1) * ROW]
     }
 }
@@ -306,6 +403,57 @@ mod tests {
         for r in 0..24u8 {
             let v = sp.vector(r, 0);
             assert!(v[2..].iter().all(|&x| x == 0));
+        }
+    }
+
+    #[test]
+    fn wide_profile_interleaves_32_lanes() {
+        let seqs: Vec<Vec<u8>> = (0..32).map(|i| encode(b"ARND")[..].repeat(i % 5 + 1)).collect();
+        let refs: Vec<(usize, &[u8])> =
+            seqs.iter().enumerate().map(|(i, s)| (i, s.as_slice())).collect();
+        let w = WideProfile::pack(&refs);
+        assert_eq!(w.used, 32);
+        assert_eq!(w.padded_len, round_up(20, 8));
+        for (lane, s) in seqs.iter().enumerate() {
+            assert_eq!(w.lens[lane], s.len());
+            assert_eq!(w.members[lane], lane);
+            for (j, &c) in s.iter().enumerate() {
+                assert_eq!(w.vector(j)[lane], c, "lane {lane} pos {j}");
+            }
+            assert_eq!(w.vector(s.len())[lane], DUMMY);
+            assert_eq!(w.lane_codes(lane), *s);
+        }
+    }
+
+    #[test]
+    fn wide_profile_partial_lanes_are_dummy() {
+        let a = encode(b"ARNDC");
+        let w = WideProfile::pack(&[(7, &a)]);
+        assert_eq!(w.used, 1);
+        assert_eq!(w.members[0], 7);
+        assert!(w.members[1..].iter().all(|&m| m == usize::MAX));
+        assert!(w.vector(0)[1..].iter().all(|&c| c == DUMMY));
+    }
+
+    #[test]
+    #[should_panic(expected = "1..=32")]
+    fn wide_profile_rejects_oversize() {
+        let s = encode(b"AR");
+        let refs: Vec<(usize, &[u8])> = (0..33).map(|i| (i, &s[..])).collect();
+        WideProfile::pack(&refs);
+    }
+
+    #[test]
+    fn query_profile16_matches_wide_matrix() {
+        let sc = scoring();
+        let q = encode(b"WARDC");
+        let qp = QueryProfile::build(&q, &sc);
+        let qp16 = QueryProfile16::build(&q, &sc);
+        assert_eq!(qp16.qlen, q.len());
+        for i in 0..q.len() {
+            for r in 0..ROW {
+                assert_eq!(qp16.row(i)[r] as i32, qp.row(i)[r], "i={i} r={r}");
+            }
         }
     }
 

@@ -26,7 +26,8 @@ pub mod coordinator;
 pub mod db;
 pub mod fasta;
 pub mod matrices;
-pub mod phi;
-pub mod runtime;
 pub mod metrics;
+pub mod phi;
+#[cfg(feature = "pjrt")]
+pub mod runtime;
 pub mod util;

@@ -28,6 +28,49 @@ impl Cells {
     }
 }
 
+/// Precision-tier accounting for one search (or a batch): how many
+/// subject alignments ran in each tier and how many narrow-tier lanes
+/// saturated and were rescored at full precision. The rescore fraction
+/// is the quantity the Xeon Phi simulator charges for the narrow tier's
+/// second pass.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RescoreStats {
+    /// Subject alignments scored in the narrow (i16) tier.
+    pub i16_lanes: u64,
+    /// Narrow-tier alignments that saturated and were rescored at i32.
+    pub overflowed: u64,
+    /// Subject alignments scored directly at full (i32) precision.
+    pub i32_lanes: u64,
+}
+
+impl RescoreStats {
+    pub fn add(&mut self, other: RescoreStats) {
+        self.i16_lanes += other.i16_lanes;
+        self.overflowed += other.overflowed;
+        self.i32_lanes += other.i32_lanes;
+    }
+
+    /// Fraction of narrow-tier alignments that needed an i32 rescore
+    /// (0.0 when the narrow tier wasn't used).
+    pub fn rescore_fraction(&self) -> f64 {
+        if self.i16_lanes == 0 {
+            0.0
+        } else {
+            self.overflowed as f64 / self.i16_lanes as f64
+        }
+    }
+
+    /// Share of all alignments that ran in the narrow tier.
+    pub fn narrow_share(&self) -> f64 {
+        let total = self.i16_lanes + self.i32_lanes;
+        if total == 0 {
+            0.0
+        } else {
+            self.i16_lanes as f64 / total as f64
+        }
+    }
+}
+
 /// Wall-clock timer.
 pub struct Timer {
     start: Instant,
@@ -153,6 +196,19 @@ mod tests {
         let c = Cells::for_search(100, 1_000_000);
         assert_eq!(c.0, 100_000_000);
         assert!((c.gcups(0.1) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rescore_stats_fractions() {
+        let mut a = RescoreStats { i16_lanes: 90, overflowed: 9, i32_lanes: 10 };
+        assert!((a.rescore_fraction() - 0.1).abs() < 1e-12);
+        assert!((a.narrow_share() - 0.9).abs() < 1e-12);
+        a.add(RescoreStats { i16_lanes: 10, overflowed: 1, i32_lanes: 0 });
+        assert_eq!(a.i16_lanes, 100);
+        assert_eq!(a.overflowed, 10);
+        assert!((a.rescore_fraction() - 0.1).abs() < 1e-12);
+        assert_eq!(RescoreStats::default().rescore_fraction(), 0.0);
+        assert_eq!(RescoreStats::default().narrow_share(), 0.0);
     }
 
     #[test]

@@ -117,6 +117,22 @@ pub fn intra_memory_factor(qlen: usize) -> f64 {
     1.0 / (1.0 + (qlen as f64 / knee).powf(1.2) * 0.35)
 }
 
+/// Throughput multiple of the narrow (i16) tier over the i32 kernels for
+/// the inter-sequence engines: 32 saturating 16-bit lanes fill the same
+/// 512-bit vector that held 16 × i32, so the ideal is 2.0×; overflow
+/// bookkeeping and the unchanged per-column scalar overheads derate it
+/// (SSW and the lazy-F striped line report 1.6–1.8× in practice).
+pub const I16_RATE_FACTOR: f64 = 1.7;
+
+/// Narrow-tier speedup per variant: only the inter-sequence engines have
+/// a 32-lane tier; striped/scalar stay at 1.0.
+pub fn i16_rate_factor(kind: EngineKind) -> f64 {
+    match kind {
+        EngineKind::InterSP | EngineKind::InterQP => I16_RATE_FACTOR,
+        EngineKind::IntraQP | EngineKind::Scalar => 1.0,
+    }
+}
+
 /// Effective per-thread rate (cells/s) for a variant at a query length —
 /// the quantity the discrete-event simulator charges per padded cell.
 pub fn effective_thread_rate(kind: EngineKind, qlen: usize) -> f64 {

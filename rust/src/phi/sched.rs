@@ -169,7 +169,7 @@ mod tests {
         let st = simulate_schedule(&costs, 16, Policy::Static).makespan;
         let dy = simulate_schedule(&costs, 16, Policy::Dynamic).makespan;
         let gu = simulate_schedule(&costs, 16, Policy::Guided).makespan;
-        assert!(st > dy, "static {st} should beat... be worse than dynamic {dy}");
+        assert!(st > dy, "static {st} should be worse than dynamic {dy}");
         assert!(st > gu, "static {st} vs guided {gu}");
     }
 

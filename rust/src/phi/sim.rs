@@ -19,7 +19,7 @@
 use super::calibration::{self, PHI_THREADS};
 use super::offload::OffloadModel;
 use super::sched::{simulate_schedule, Policy};
-use crate::align::EngineKind;
+use crate::align::{EngineKind, Precision};
 use crate::db::chunk::Chunk;
 use crate::db::index::Index;
 use crate::db::profile::LANES;
@@ -38,6 +38,14 @@ pub struct SimConfig {
     /// bytes and cell totals all scale to realistic magnitudes while the
     /// length *distribution* stays the measured one. 1 = no scaling.
     pub replication: usize,
+    /// Score-lane tier being simulated. `I16`/`Auto` charges padded cells
+    /// at the narrow-tier rate (× [`calibration::i16_rate_factor`]) plus
+    /// a second full-precision pass over `rescore_fraction` of the work.
+    /// Default `I32` keeps the paper-anchored figures unchanged.
+    pub precision: Precision,
+    /// Fraction of narrow-tier alignments that overflow and rescore
+    /// (coordinator feeds back the measured value).
+    pub rescore_fraction: f64,
 }
 
 impl Default for SimConfig {
@@ -48,6 +56,8 @@ impl Default for SimConfig {
             policy: Policy::Guided,
             offload: OffloadModel::default(),
             replication: 1,
+            precision: Precision::I32,
+            rescore_fraction: 0.0,
         }
     }
 }
@@ -92,14 +102,17 @@ impl SimReport {
 ///
 /// Inter-sequence: one iteration = one 16-lane sequence profile.
 /// Intra-sequence: one iteration = one subject sequence.
-fn chunk_item_costs(
-    index: &Index,
-    chunk: &Chunk,
-    kind: EngineKind,
-    qlen: usize,
-    replication: usize,
-) -> Vec<f64> {
+fn chunk_item_costs(index: &Index, chunk: &Chunk, kind: EngineKind, qlen: usize, cfg: &SimConfig) -> Vec<f64> {
     let rate = calibration::effective_thread_rate(kind, qlen);
+    // Narrow (i16) tier: the same cells at i16_rate_factor × the i32
+    // rate, plus a second full-precision pass over the overflow fraction.
+    // time = cells/rate16 + f·cells/rate32 = (cells/rate32)·(1/factor + f)
+    let tier_scale = match cfg.precision {
+        Precision::I32 => 1.0,
+        Precision::I16 | Precision::Auto => {
+            1.0 / calibration::i16_rate_factor(kind) + cfg.rescore_fraction.clamp(0.0, 1.0)
+        }
+    };
     let profiles = &index.profiles[chunk.profile_start..chunk.profile_end];
     let one: Vec<f64> = match kind {
         EngineKind::IntraQP | EngineKind::Scalar => profiles
@@ -107,14 +120,15 @@ fn chunk_item_costs(
             .flat_map(|p| {
                 p.lens[..p.used]
                     .iter()
-                    .map(move |&l| (l as f64 * qlen as f64) / rate)
+                    .map(move |&l| tier_scale * (l as f64 * qlen as f64) / rate)
             })
             .collect(),
         _ => profiles
             .iter()
-            .map(|p| (p.padded_len * LANES) as f64 * qlen as f64 / rate)
+            .map(|p| tier_scale * (p.padded_len * LANES) as f64 * qlen as f64 / rate)
             .collect(),
     };
+    let replication = cfg.replication.max(1);
     if replication <= 1 {
         return one;
     }
@@ -152,7 +166,7 @@ pub fn simulate_search(
             .unwrap();
         let off = cfg.offload.chunk_cost(chunk.transfer_bytes * rep as u64);
         // device level: OpenMP loop schedule across device threads
-        let costs = chunk_item_costs(index, chunk, kind, qlen, cfg.replication.max(1));
+        let costs = chunk_item_costs(index, chunk, kind, qlen, &cfg);
         let outcome = simulate_schedule(&costs, cfg.threads_per_device, cfg.policy);
         device_clock[dev] += off + outcome.makespan;
         chunks_per_device[dev] += 1;
@@ -212,7 +226,7 @@ pub fn simulate_hybrid_search(
         let cells = chunk.padded_cells(qlen) * rep;
         if w < cfg.devices {
             let off = cfg.offload.chunk_cost(chunk.transfer_bytes * rep as u64);
-            let costs = chunk_item_costs(index, chunk, kind, qlen, cfg.replication.max(1));
+            let costs = chunk_item_costs(index, chunk, kind, qlen, &cfg);
             let outcome = simulate_schedule(&costs, cfg.threads_per_device, cfg.policy);
             clock[w] += off + outcome.makespan;
             offload_time += off;
@@ -344,6 +358,47 @@ mod tests {
         let paid = simulate_search(&idx, &chunks, EngineKind::InterSP, 300, cfg(1));
         assert!(free.makespan < paid.makespan);
         assert_eq!(free.offload_time, 0.0);
+    }
+
+    #[test]
+    fn narrow_tier_speeds_up_sim_and_rescore_costs() {
+        let (idx, chunks) = workload(800);
+        let full = simulate_search(&idx, &chunks, EngineKind::InterSP, 1000, cfg(1));
+        let narrow = simulate_search(
+            &idx,
+            &chunks,
+            EngineKind::InterSP,
+            1000,
+            SimConfig { precision: Precision::I16, ..cfg(1) },
+        );
+        assert!(
+            narrow.makespan < full.makespan,
+            "i16 tier must be faster: {} vs {}",
+            narrow.makespan,
+            full.makespan
+        );
+        // a high rescore fraction erodes the narrow-tier advantage
+        let rescored = simulate_search(
+            &idx,
+            &chunks,
+            EngineKind::InterSP,
+            1000,
+            SimConfig { precision: Precision::I16, rescore_fraction: 0.5, ..cfg(1) },
+        );
+        assert!(rescored.makespan > narrow.makespan);
+        // striped has no narrow tier: i16 with no rescore changes nothing
+        let intra_full = simulate_search(&idx, &chunks, EngineKind::IntraQP, 1000, cfg(1));
+        let intra_narrow = simulate_search(
+            &idx,
+            &chunks,
+            EngineKind::IntraQP,
+            1000,
+            SimConfig { precision: Precision::I16, ..cfg(1) },
+        );
+        assert!((intra_full.makespan - intra_narrow.makespan).abs() < 1e-12);
+        // cells accounting is tier-independent
+        assert_eq!(narrow.real_cells, full.real_cells);
+        assert_eq!(narrow.padded_cells, full.padded_cells);
     }
 
     #[test]

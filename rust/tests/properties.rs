@@ -148,6 +148,89 @@ fn prop_simulator_conservation_and_monotonicity() {
 }
 
 #[test]
+fn prop_i16_saturation_rescore_matches_oracle() {
+    // Drive the narrow tier to +i16 saturation (long high-identity
+    // homopolymers under PAM250, the extreme-match-score matrix: W–W =
+    // 17, so ~1928 aligned residues cross i16::MAX) and assert the
+    // i16-tier + rescore pipeline reproduces the scalar oracle exactly.
+    // The −i16 side (E/F decaying toward the saturating floor) is
+    // exercised by every case via the long gap-free stretches.
+    check("i16 tier + rescore == oracle at saturation", 3, |rng| {
+        use swaphi::align::Precision;
+        use swaphi::coordinator::{Coordinator, NativeFactory, SearchConfig};
+        let sc = Scoring::new("PAM250", 10, 2).unwrap();
+        let qlen = rng.range(1935, 2050);
+        let q = vec![17u8; qlen]; // W homopolymer
+        let mut seqs = vec![DbSeq {
+            id: "long".into(),
+            codes: vec![17u8; rng.range(1940, 2050)], // saturates
+        }];
+        for i in 0..rng.range(2, 6) {
+            // short random subjects — cannot saturate
+            seqs.push(DbSeq { id: format!("s{i}"), codes: rand_seq(rng, 1, 300) });
+        }
+        let idx = Index::build(Database::new(seqs));
+        let mk = |precision| {
+            Coordinator::new(
+                &idx,
+                sc.clone(),
+                SearchConfig { precision, sim: None, ..Default::default() },
+            )
+        };
+        let narrow = mk(Precision::I16)
+            .search(&NativeFactory(EngineKind::InterSP), "q", &q)
+            .unwrap();
+        let oracle = mk(Precision::I32)
+            .search(&NativeFactory(EngineKind::Scalar), "q", &q)
+            .unwrap();
+        prop_assert(narrow.rescore.overflowed >= 1, "expected at least one saturated lane")?;
+        prop_assert(
+            narrow.rescore.overflowed < narrow.rescore.i16_lanes,
+            "short subjects must stay in-tier",
+        )?;
+        prop_eq(narrow.scores, oracle.scores, "i16+rescore vs oracle")
+    });
+}
+
+#[test]
+fn prop_sink_equivalence_topk_vs_dense() {
+    // The streaming top-k sink and the opt-in dense sink must produce
+    // identical hit lists for any workload, sharding and batch shape.
+    check("TopK hits == Dense hits", 15, |rng| {
+        use swaphi::coordinator::{NativeFactory, SearchConfig, SearchSession};
+        let n = rng.range(3, 50);
+        let idx = Index::build(random_db(rng, n, 60));
+        let sc = Scoring::swaphi_default();
+        let session = SearchSession::new(
+            &idx,
+            sc,
+            SearchConfig {
+                top_k: rng.range(1, 9),
+                devices: rng.range(1, 4),
+                sim: None,
+                ..Default::default()
+            },
+        );
+        let nq = rng.range(1, 4);
+        let queries: Vec<(String, Vec<u8>)> =
+            (0..nq).map(|i| (format!("q{i}"), rand_seq(rng, 1, 40))).collect();
+        let factory = NativeFactory(EngineKind::InterSP);
+        let streamed = session.search_batch(&factory, &queries).unwrap();
+        let dense = session.search_batch_dense(&factory, &queries).unwrap();
+        for (s, d) in streamed.iter().zip(&dense) {
+            let s_hits: Vec<(usize, i32)> =
+                s.hits.iter().map(|h| (h.seq_index, h.score)).collect();
+            let d_hits: Vec<(usize, i32)> =
+                d.hits.iter().map(|h| (h.seq_index, h.score)).collect();
+            prop_eq(s_hits, d_hits, &s.query_id)?;
+            prop_assert(s.scores.is_empty(), "top-k path must not keep dense scores")?;
+            prop_assert(d.scores.len() == idx.n_seqs(), "dense path keeps all scores")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_topk_consistency() {
     check("topk is consistent with scores", 20, |rng| {
         use swaphi::coordinator::{Coordinator, NativeFactory, SearchConfig};

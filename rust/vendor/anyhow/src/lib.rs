@@ -1,0 +1,100 @@
+//! Vendored, API-compatible subset of the `anyhow` crate.
+//!
+//! The environments this repository builds in have no registry access,
+//! so the small slice of `anyhow` the codebase actually uses — `Result`,
+//! `Error`, and the `anyhow!` / `bail!` / `ensure!` macros — is
+//! implemented here and wired up as a path dependency named `anyhow`.
+//! Swapping back to the real crate is a one-line Cargo.toml change; no
+//! source edits are required.
+//!
+//! Differences from upstream (deliberate, to stay tiny): the error is a
+//! rendered message rather than a boxed cause chain, so `downcast` /
+//! `source` / `context` are not provided. Nothing in-tree uses them.
+
+use std::fmt;
+
+/// A rendered error. Constructed by [`anyhow!`] or converted from any
+/// `std::error::Error` via `?`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// `Error` itself intentionally does NOT implement `std::error::Error`;
+// that is what makes this blanket conversion coherent (same trick as the
+// real anyhow).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macros_and_conversions() {
+        fn fails() -> crate::Result<()> {
+            crate::ensure!(1 + 1 == 3, "math broke: {}", 42);
+            Ok(())
+        }
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "math broke: 42");
+        assert_eq!(format!("{e:?}"), "math broke: 42");
+        assert_eq!(format!("{e:#}"), "math broke: 42");
+
+        fn io() -> crate::Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/file")?)
+        }
+        assert!(io().is_err());
+
+        let e = crate::anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+    }
+}

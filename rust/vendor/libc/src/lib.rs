@@ -1,0 +1,31 @@
+//! Vendored minimal `libc` surface — exactly the items `db::format`'s
+//! read-only mmap needs on 64-bit Linux, declared directly against the
+//! system C library so the build needs no registry access. Swapping back
+//! to the real `libc` crate is a one-line Cargo.toml change.
+
+#![allow(non_camel_case_types)]
+
+pub use core::ffi::c_void;
+
+pub type c_int = i32;
+pub type size_t = usize;
+pub type off_t = i64;
+
+/// `PROT_READ` (Linux).
+pub const PROT_READ: c_int = 1;
+/// `MAP_PRIVATE` (Linux).
+pub const MAP_PRIVATE: c_int = 2;
+/// `MAP_FAILED` — `(void *) -1`.
+pub const MAP_FAILED: *mut c_void = -1isize as *mut c_void;
+
+extern "C" {
+    pub fn mmap(
+        addr: *mut c_void,
+        len: size_t,
+        prot: c_int,
+        flags: c_int,
+        fd: c_int,
+        offset: off_t,
+    ) -> *mut c_void;
+    pub fn munmap(addr: *mut c_void, len: size_t) -> c_int;
+}
