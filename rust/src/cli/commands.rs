@@ -137,7 +137,12 @@ pub fn cmd_search(mut args: Args) -> anyhow::Result<i32> {
     }
     anyhow::ensure!(!queries.is_empty(), "{query_path}: no queries");
 
-    println!(
+    // the whole report is buffered and written once at the end, so an
+    // interrupt mid-search leaves no partial (misleading) output behind
+    use std::fmt::Write as _;
+    let mut report = String::new();
+    writeln!(
+        report,
         "# engine={} backend={} devices={} policy={} precision={} matrix={} gap={}+{}k chunks={} queries={}",
         cfg.engine.name(),
         factory.backend_name(),
@@ -149,13 +154,14 @@ pub fn cmd_search(mut args: Args) -> anyhow::Result<i32> {
         cfg.scoring.gap_extend,
         session.n_chunks(),
         queries.len(),
-    );
+    )?;
     let results = session.search_batch(factory.as_ref(), &queries)?;
     let mut batch = crate::metrics::RescoreStats::default();
     let mut batch_cells = crate::metrics::Cells::default();
     let mut batch_wall = 0.0;
     for result in &results {
-        println!(
+        writeln!(
+            report,
             "\nquery {} (len {}): native {:.3} GCUPS{}{}",
             result.query_id,
             result.query_len,
@@ -172,22 +178,158 @@ pub fn cmd_search(mut args: Args) -> anyhow::Result<i32> {
             } else {
                 String::new()
             }
-        );
-        print!("{}", crate::coordinator::results::format_hits(&result.hits));
+        )?;
+        report.push_str(&crate::coordinator::results::format_hits(&result.hits));
         batch.add(result.rescore);
         batch_cells.add(result.cells);
         batch_wall += result.wall_seconds;
     }
     if results.len() > 1 {
-        println!(
+        writeln!(
+            report,
             "\nbatch: {} queries, native {:.3} GCUPS aggregate, narrow-tier share {:.1}%, rescore rate {:.3}%",
             results.len(),
             batch_cells.gcups(batch_wall),
             batch.narrow_share() * 100.0,
             batch.rescore_fraction() * 100.0,
-        );
+        )?;
     }
+    print!("{report}");
     Ok(0)
+}
+
+pub fn cmd_serve(mut args: Args) -> anyhow::Result<i32> {
+    use std::io::Write as _;
+
+    let index_path = args.require("index")?;
+    let listen = args.take("listen");
+    let cfg = load_config(&mut args)?;
+    args.finish()?;
+
+    let mut server_cfg = cfg.server_config();
+    if let Some(listen) = listen {
+        server_cfg.listen = listen;
+    }
+    server_cfg.handle_signals = true;
+
+    let view = IndexView::open(&index_path)?;
+    let index = std::sync::Arc::new(view.to_index());
+    let factory: std::sync::Arc<dyn AlignerFactory> = std::sync::Arc::from(make_factory(&cfg)?);
+
+    let mut handle = crate::server::Server {
+        index: std::sync::Arc::clone(&index),
+        scoring: cfg.scoring.clone(),
+        search: cfg.search_config(),
+        server: server_cfg.clone(),
+        factory,
+    }
+    .start()?;
+
+    println!(
+        "swaphi serve: listening on {} (index {} seqs / {} residues, engine={} precision={} \
+         top_k={}, queue={} max_batch={} window={}ms cache={})",
+        handle.addr(),
+        index.n_seqs(),
+        index.total_residues,
+        cfg.engine.name(),
+        cfg.precision.name(),
+        cfg.top_k,
+        server_cfg.queue_capacity,
+        server_cfg.max_batch,
+        server_cfg.batch_window_ms,
+        server_cfg.cache_entries,
+    );
+    println!("SIGINT/SIGTERM drains in-flight batches and exits");
+    std::io::stdout().flush()?; // daemons are usually piped; don't sit in the block buffer
+
+    handle.wait()?;
+    let m = handle.metrics();
+    use std::sync::atomic::Ordering::Relaxed;
+    println!(
+        "swaphi serve: drained — served {} requests ({} rejected, {} expired), {} batches \
+         (max size {}), cache {} hits / {} misses",
+        m.admitted.load(Relaxed),
+        m.rejected.load(Relaxed),
+        m.expired.load(Relaxed),
+        m.batches.load(Relaxed),
+        m.max_batch_size(),
+        m.cache_hits.load(Relaxed),
+        m.cache_misses.load(Relaxed),
+    );
+    Ok(0)
+}
+
+pub fn cmd_query(mut args: Args) -> anyhow::Result<i32> {
+    let connect = args.take_or("connect", "127.0.0.1:7878");
+    let ping = args.take_bool("ping");
+    let stats = args.take_bool("stats");
+    let top_k = match args.take("top-k") {
+        None => None,
+        Some(v) => Some(v.parse::<usize>().map_err(|e| anyhow::anyhow!("--top-k {v:?}: {e}"))?),
+    };
+    let timeout_ms = args.take_u64("timeout-ms", 0)?;
+    let query_path = if ping || stats { args.take("query") } else { Some(args.require("query")?) };
+    args.finish()?;
+
+    let mut client = crate::server::client::Client::connect(&connect)?;
+    if ping {
+        let resp = client.ping()?;
+        anyhow::ensure!(crate::server::client::is_ok(&resp), "ping failed: {resp}");
+        println!("pong from {connect}");
+        return Ok(0);
+    }
+    if stats {
+        let resp = client.stats()?;
+        anyhow::ensure!(crate::server::client::is_ok(&resp), "stats failed: {resp}");
+        println!("{}", resp.get("stats").unwrap_or(&resp));
+        return Ok(0);
+    }
+
+    let query_path = query_path.expect("required above");
+    let mut reader = fasta::Reader::from_path(&query_path)?;
+    let mut failures = 0;
+    let mut n = 0;
+    while let Some(rec) = reader.next_record()? {
+        anyhow::ensure!(!rec.seq.is_empty(), "query {} is empty", rec.id);
+        n += 1;
+        let seq = String::from_utf8_lossy(&rec.seq).to_string();
+        let resp = client.search(
+            &rec.id,
+            &seq,
+            top_k,
+            (timeout_ms > 0).then_some(timeout_ms),
+        )?;
+        if crate::server::client::is_ok(&resp) {
+            let hits = crate::server::client::hits_of(&resp)?;
+            let cached = resp
+                .get("cached")
+                .and_then(crate::util::json::Json::as_bool)
+                .unwrap_or(false);
+            println!(
+                "\nquery {} (len {}): {} hits{}",
+                rec.id,
+                rec.seq.len(),
+                hits.len(),
+                if cached { " [cached]" } else { "" }
+            );
+            let rows: Vec<crate::coordinator::results::Hit> = hits
+                .into_iter()
+                .map(|h| crate::coordinator::results::Hit {
+                    seq_index: 0,
+                    id: h.subject,
+                    len: h.len,
+                    score: h.score,
+                })
+                .collect();
+            print!("{}", crate::coordinator::results::format_hits(&rows));
+        } else {
+            let (code, message) = crate::server::client::error_of(&resp);
+            eprintln!("query {}: {code}: {message}", rec.id);
+            failures += 1;
+        }
+    }
+    anyhow::ensure!(n > 0, "{query_path}: no queries");
+    Ok(if failures == 0 { 0 } else { 1 })
 }
 
 pub fn cmd_selftest(mut args: Args) -> anyhow::Result<i32> {

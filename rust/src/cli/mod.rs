@@ -7,6 +7,8 @@
 //! swaphi info    --index db.idx
 //! swaphi search  --index db.idx --query q.fasta [--config swaphi.toml]
 //!                [--set search.engine=interqp]... [--backend pjrt]
+//! swaphi serve   --index db.idx [--listen 127.0.0.1:7878 | unix:/path]
+//! swaphi query   --connect 127.0.0.1:7878 --query q.fasta
 //! swaphi selftest [--backend pjrt] [--artifacts artifacts]
 //! swaphi devinfo
 //! ```
@@ -15,6 +17,10 @@ pub mod args;
 pub mod commands;
 
 pub use args::Args;
+
+/// Every valid subcommand, as listed by the unknown-command error.
+pub const COMMANDS: &[&str] =
+    &["synth", "index", "info", "search", "serve", "query", "selftest", "devinfo", "help"];
 
 /// Entry point used by `main.rs`.
 pub fn run(argv: Vec<String>) -> anyhow::Result<i32> {
@@ -31,6 +37,8 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<i32> {
         "index" => commands::cmd_index(args),
         "info" => commands::cmd_info(args),
         "search" => commands::cmd_search(args),
+        "serve" => commands::cmd_serve(args),
+        "query" => commands::cmd_query(args),
         "selftest" => commands::cmd_selftest(args),
         "devinfo" => commands::cmd_devinfo(args),
         "help" | "--help" | "-h" => {
@@ -38,7 +46,10 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<i32> {
             Ok(0)
         }
         other => {
-            eprintln!("unknown command {other:?}\n{USAGE}");
+            eprintln!(
+                "unknown command {other:?}; valid commands: {}\n\n{USAGE}",
+                COMMANDS.join(", ")
+            );
             Ok(2)
         }
     }
@@ -66,6 +77,19 @@ COMMANDS:
               [--precision auto|i16|i32]   score-lane tier (auto: narrow
                 32-lane i16 when provably exact; i16: force narrow,
                 saturated lanes rescored at i32; i32: full precision)
+  serve     run the resident search service: load the index once, keep a
+            warm session, coalesce concurrent client requests into
+            batches, cache repeat queries (line-delimited JSON protocol,
+            docs/protocol.md); SIGINT/SIGTERM drain gracefully
+              --index <idx>  [--listen 127.0.0.1:7878 | unix:/path]
+              [--config <toml>]  [--set server.max_batch=32]...
+              e.g.  swaphi serve --index db.idx --listen 127.0.0.1:7878
+  query     client for a running `serve` daemon; each FASTA record is one
+            request on one connection
+              --connect <host:port | unix:/path>  --query <fasta>
+              [--top-k <n>]  [--timeout-ms <n>]  [--ping]  [--stats]
+              e.g.  swaphi query --connect 127.0.0.1:7878 --query q.fasta
+              e.g.  swaphi query --connect 127.0.0.1:7878 --stats
   selftest  cross-validate all engines against the scalar oracle
               [--backend pjrt]  [--artifacts <dir>]
   devinfo   print the simulated device fleet and calibration

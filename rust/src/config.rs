@@ -24,6 +24,14 @@
 //! enabled = true
 //! threads_per_device = 240
 //! replication = 400
+//!
+//! [server]
+//! listen = "127.0.0.1:7878"   # or "unix:/run/swaphi.sock"
+//! queue_capacity = 256        # admission bound (backpressure)
+//! max_batch = 32              # largest coalesced batch
+//! batch_window_ms = 4         # how long a batch is held open
+//! cache_entries = 1024        # result cache (0 disables)
+//! default_deadline_ms = 30000
 //! ```
 
 use crate::align::{EngineKind, Precision};
@@ -202,6 +210,14 @@ pub const KNOWN_KEYS: &[&str] = &[
     "db.preset",
     "db.n_seqs",
     "db.seed",
+    "server.listen",
+    "server.queue_capacity",
+    "server.max_batch",
+    "server.batch_window_ms",
+    "server.cache_entries",
+    "server.default_deadline_ms",
+    "server.max_query_len",
+    "server.max_connections",
 ];
 
 /// Fully-typed SWAPHI configuration.
@@ -222,6 +238,14 @@ pub struct SwaphiConfig {
     pub db_preset: String,
     pub db_n_seqs: usize,
     pub db_seed: u64,
+    pub server_listen: String,
+    pub server_queue_capacity: usize,
+    pub server_max_batch: usize,
+    pub server_batch_window_ms: u64,
+    pub server_cache_entries: usize,
+    pub server_default_deadline_ms: u64,
+    pub server_max_query_len: usize,
+    pub server_max_connections: usize,
 }
 
 impl SwaphiConfig {
@@ -253,11 +277,35 @@ impl SwaphiConfig {
             db_preset: raw.str_or("db.preset", "trembl-mini")?,
             db_n_seqs: raw.int_or("db.n_seqs", 20_000)?.max(1) as usize,
             db_seed: raw.int_or("db.seed", 2014)? as u64,
+            server_listen: raw.str_or("server.listen", "127.0.0.1:7878")?,
+            server_queue_capacity: raw.int_or("server.queue_capacity", 256)?.max(1) as usize,
+            server_max_batch: raw.int_or("server.max_batch", 32)?.max(1) as usize,
+            server_batch_window_ms: raw.int_or("server.batch_window_ms", 4)?.max(0) as u64,
+            server_cache_entries: raw.int_or("server.cache_entries", 1024)?.max(0) as usize,
+            server_default_deadline_ms: raw.int_or("server.default_deadline_ms", 30_000)?.max(1)
+                as u64,
+            server_max_query_len: raw.int_or("server.max_query_len", 50_000)?.max(1) as usize,
+            server_max_connections: raw.int_or("server.max_connections", 512)?.max(1) as usize,
         })
     }
 
     pub fn default_config() -> SwaphiConfig {
         Self::from_raw(&RawConfig::default()).expect("defaults are valid")
+    }
+
+    /// Materialize the daemon's [`ServerConfig`](crate::server::ServerConfig).
+    pub fn server_config(&self) -> crate::server::ServerConfig {
+        crate::server::ServerConfig {
+            listen: self.server_listen.clone(),
+            queue_capacity: self.server_queue_capacity,
+            max_batch: self.server_max_batch,
+            batch_window_ms: self.server_batch_window_ms,
+            cache_entries: self.server_cache_entries,
+            default_deadline_ms: self.server_default_deadline_ms,
+            max_query_len: self.server_max_query_len,
+            max_connections: self.server_max_connections,
+            handle_signals: false,
+        }
     }
 
     /// Materialize the coordinator's [`SearchConfig`].
@@ -367,6 +415,29 @@ mod tests {
         let sim = sc.sim.unwrap();
         assert_eq!(sim.devices, 4);
         assert_eq!(sim.replication, 100);
+    }
+
+    #[test]
+    fn server_section_materializes() {
+        let mut raw = RawConfig::default();
+        raw.set("server.listen", "\"unix:/tmp/s.sock\"").unwrap();
+        raw.set("server.queue_capacity", "64").unwrap();
+        raw.set("server.max_batch", "8").unwrap();
+        raw.set("server.batch_window_ms", "20").unwrap();
+        raw.set("server.cache_entries", "0").unwrap();
+        let cfg = SwaphiConfig::from_raw(&raw).unwrap();
+        let sc = cfg.server_config();
+        assert_eq!(sc.listen, "unix:/tmp/s.sock");
+        assert_eq!(sc.queue_capacity, 64);
+        assert_eq!(sc.max_batch, 8);
+        assert_eq!(sc.batch_window_ms, 20);
+        assert_eq!(sc.cache_entries, 0);
+        assert!(!sc.handle_signals, "signals are the serve command's call");
+        // defaults
+        let d = SwaphiConfig::default_config().server_config();
+        assert_eq!(d.listen, "127.0.0.1:7878");
+        assert_eq!(d.cache_entries, 1024);
+        assert_eq!(d.max_connections, 512);
     }
 
     #[test]

@@ -30,4 +30,5 @@ pub mod metrics;
 pub mod phi;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod server;
 pub mod util;

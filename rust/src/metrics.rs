@@ -129,6 +129,11 @@ impl Histogram {
         self.total
     }
 
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Mean of all recorded values; 0.0 (not NaN) for an empty histogram.
     pub fn mean(&self) -> f64 {
         if self.total == 0 {
             0.0
@@ -142,12 +147,15 @@ impl Histogram {
     }
 
     /// Approximate quantile from bucket boundaries (upper bound of the
-    /// bucket holding the q-th sample).
+    /// bucket holding the q-th sample). Total on all inputs: an empty
+    /// histogram yields 0, `q` is clamped into [0, 1], and a NaN `q` is
+    /// treated as 0.
     pub fn quantile(&self, q: f64) -> u64 {
         if self.total == 0 {
             return 0;
         }
-        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
+        let q = if q.is_nan() { 0.0 } else { q.clamp(0.0, 1.0) };
+        let target = (q * self.total as f64).ceil() as u64;
         let mut acc = 0;
         for (i, &c) in self.counts.iter().enumerate() {
             acc += c;
@@ -157,6 +165,28 @@ impl Histogram {
         }
         self.max
     }
+
+    /// One-line summary row (count/mean/max/p50/p99) — what the server's
+    /// stats endpoint reports per histogram.
+    pub fn summary(&self) -> HistogramSummary {
+        HistogramSummary {
+            count: self.total,
+            mean: self.mean(),
+            max: self.max,
+            p50: self.quantile(0.5),
+            p99: self.quantile(0.99),
+        }
+    }
+}
+
+/// Snapshot of a [`Histogram`]'s headline statistics.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HistogramSummary {
+    pub count: u64,
+    pub mean: f64,
+    pub max: u64,
+    pub p50: u64,
+    pub p99: u64,
 }
 
 /// Per-query result row of a benchmark run — what the figure harnesses
@@ -226,6 +256,53 @@ mod tests {
     fn histogram_exponential_covers() {
         let h = Histogram::exponential(1024);
         assert_eq!(h.bounds.len(), 11); // 1,2,4,...,1024
+    }
+
+    #[test]
+    fn empty_histogram_is_total() {
+        // no division by zero, no bogus quantiles: every accessor is
+        // well-defined before the first record()
+        let h = Histogram::exponential(1024);
+        assert!(h.is_empty());
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert!(!h.mean().is_nan());
+        assert_eq!(h.max(), 0);
+        for q in [0.0, 0.5, 0.99, 1.0, -3.0, 7.0, f64::NAN] {
+            assert_eq!(h.quantile(q), 0, "q={q}");
+        }
+        let s = h.summary();
+        assert_eq!((s.count, s.max, s.p50, s.p99), (0, 0, 0, 0));
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn single_bucket_histogram() {
+        // Histogram::new(vec![]) is legal: everything lands in the one
+        // overflow bucket and quantiles degrade to the observed max
+        let mut h = Histogram::new(vec![]);
+        assert_eq!(h.quantile(0.5), 0, "still empty");
+        h.record(41);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.mean(), 41.0);
+        assert_eq!(h.max(), 41);
+        assert_eq!(h.quantile(0.0), 41);
+        assert_eq!(h.quantile(0.5), 41);
+        assert_eq!(h.quantile(1.0), 41);
+        h.record(7);
+        assert_eq!(h.quantile(0.5), 41, "one bucket cannot resolve finer");
+        assert_eq!(h.mean(), 24.0);
+    }
+
+    #[test]
+    fn quantile_clamps_and_rejects_nan() {
+        let mut h = Histogram::new(vec![10, 100]);
+        for v in [1, 2, 50] {
+            h.record(v);
+        }
+        assert_eq!(h.quantile(-1.0), h.quantile(0.0));
+        assert_eq!(h.quantile(2.0), h.quantile(1.0));
+        assert_eq!(h.quantile(f64::NAN), h.quantile(0.0));
     }
 
     #[test]

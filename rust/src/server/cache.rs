@@ -1,0 +1,193 @@
+//! Result cache: repeat queries short-circuit the kernels entirely.
+//!
+//! Keyed by (query digest, index generation, search-params fingerprint) —
+//! a hit is only valid for byte-identical query codes against the same
+//! index under the same scoring/precision/top-k regime, so a cache entry
+//! can never leak results across index reloads or config changes. Entries
+//! store the *session-level* top-k hit list; per-request `top_k` is a
+//! truncation applied at reply time, so requests that differ only in
+//! `top_k` share one entry.
+//!
+//! Eviction is LRU over a fixed entry budget. The scan-based eviction is
+//! O(capacity) but runs only when full, and hit lists are O(top_k) — at
+//! the default 1024 entries this is noise next to one chunk alignment.
+//!
+//! The key's query component is a 64-bit digest, but correctness never
+//! rests on it: every entry stores the exact query bytes it was computed
+//! for, and [`ResultCache::get`] verifies them — a digest collision
+//! (adversarial or otherwise) degrades to a cache miss, never to serving
+//! another query's hits.
+
+use super::protocol::HitPayload;
+use std::collections::HashMap;
+
+/// FNV-1a, the digest used for query bytes and fingerprints (fast,
+/// dependency-free; non-cryptographic, which is fine here because every
+/// lookup re-verifies the stored query bytes).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Extend a digest with a length-prefixed field (domain separation so
+/// `("ab","c")` and `("a","bc")` fingerprint differently).
+pub fn fnv1a_field(h: u64, bytes: &[u8]) -> u64 {
+    let mut h = h;
+    for &b in (bytes.len() as u64).to_le_bytes().iter().chain(bytes) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Cache identity of one search. `query_digest` hashes the encoded query
+/// codes; `index_generation` fingerprints the loaded index;
+/// `params_fingerprint` covers scoring matrix/gaps, precision, engine,
+/// backend and the session top-k.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub query_digest: u64,
+    pub index_generation: u64,
+    pub params_fingerprint: u64,
+}
+
+struct Entry {
+    /// The exact encoded query this entry was computed for — checked on
+    /// every hit so a digest collision can only miss, never lie.
+    codes: Vec<u8>,
+    hits: Vec<HitPayload>,
+    last_used: u64,
+}
+
+/// Bounded LRU map from [`CacheKey`] to the ranked hit list.
+pub struct ResultCache {
+    capacity: usize,
+    tick: u64,
+    map: HashMap<CacheKey, Entry>,
+}
+
+impl ResultCache {
+    /// `capacity == 0` disables the cache (every get misses, inserts are
+    /// dropped).
+    pub fn new(capacity: usize) -> ResultCache {
+        ResultCache { capacity, tick: 0, map: HashMap::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Look up a key, verifying the stored query bytes and refreshing
+    /// recency on hit. A digest collision returns `None` (miss).
+    pub fn get(&mut self, key: &CacheKey, codes: &[u8]) -> Option<Vec<HitPayload>> {
+        self.tick += 1;
+        let tick = self.tick;
+        let e = self.map.get_mut(key)?;
+        if e.codes != codes {
+            return None;
+        }
+        e.last_used = tick;
+        Some(e.hits.clone())
+    }
+
+    /// Insert (or refresh) an entry, evicting the least-recently-used
+    /// entry if at capacity.
+    pub fn insert(&mut self, key: CacheKey, codes: Vec<u8>, hits: Vec<HitPayload>) {
+        if self.capacity == 0 {
+            return;
+        }
+        self.tick += 1;
+        if self.map.len() >= self.capacity && !self.map.contains_key(&key) {
+            if let Some(oldest) =
+                self.map.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| *k)
+            {
+                self.map.remove(&oldest);
+            }
+        }
+        self.map.insert(key, Entry { codes, hits, last_used: self.tick });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(q: u64) -> CacheKey {
+        CacheKey { query_digest: q, index_generation: 7, params_fingerprint: 9 }
+    }
+
+    fn hits(n: usize) -> Vec<HitPayload> {
+        (0..n)
+            .map(|i| HitPayload { subject: format!("s{i}"), len: 10 * i, score: 100 - i as i32 })
+            .collect()
+    }
+
+    const Q: &[u8] = &[1, 2, 3];
+
+    #[test]
+    fn get_returns_inserted_payload() {
+        let mut c = ResultCache::new(4);
+        assert!(c.get(&key(1), Q).is_none());
+        c.insert(key(1), Q.to_vec(), hits(3));
+        assert_eq!(c.get(&key(1), Q).unwrap(), hits(3));
+        // different generation or params = different entry
+        let other = CacheKey { index_generation: 8, ..key(1) };
+        assert!(c.get(&other, Q).is_none());
+    }
+
+    #[test]
+    fn digest_collision_is_a_miss_not_a_lie() {
+        // same CacheKey, different query bytes (a forced FNV collision):
+        // the stored-codes check must refuse to serve the wrong hits
+        let mut c = ResultCache::new(4);
+        c.insert(key(1), Q.to_vec(), hits(3));
+        assert!(c.get(&key(1), &[9, 9, 9]).is_none());
+        assert_eq!(c.get(&key(1), Q).unwrap(), hits(3), "real query still hits");
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let mut c = ResultCache::new(2);
+        c.insert(key(1), Q.to_vec(), hits(1));
+        c.insert(key(2), Q.to_vec(), hits(2));
+        assert!(c.get(&key(1), Q).is_some()); // refresh 1, making 2 the LRU
+        c.insert(key(3), Q.to_vec(), hits(3));
+        assert_eq!(c.len(), 2);
+        assert!(c.get(&key(1), Q).is_some());
+        assert!(c.get(&key(2), Q).is_none(), "2 was least recently used");
+        assert!(c.get(&key(3), Q).is_some());
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let mut c = ResultCache::new(0);
+        c.insert(key(1), Q.to_vec(), hits(1));
+        assert!(c.is_empty());
+        assert!(c.get(&key(1), Q).is_none());
+    }
+
+    #[test]
+    fn reinsert_refreshes_not_grows() {
+        let mut c = ResultCache::new(2);
+        c.insert(key(1), Q.to_vec(), hits(1));
+        c.insert(key(1), Q.to_vec(), hits(2));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(&key(1), Q).unwrap(), hits(2));
+    }
+
+    #[test]
+    fn fnv_field_separates_domains() {
+        let a = fnv1a_field(fnv1a_field(fnv1a(b""), b"ab"), b"c");
+        let b = fnv1a_field(fnv1a_field(fnv1a(b""), b"a"), b"bc");
+        assert_ne!(a, b);
+        assert_ne!(fnv1a(b"x"), fnv1a(b"y"));
+    }
+}

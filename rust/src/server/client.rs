@@ -1,0 +1,112 @@
+//! Blocking client for the resident search service — the substrate of
+//! the `swaphi query` command and of the loopback protocol tests. One
+//! request at a time per connection; responses arrive in request order.
+
+use super::protocol::{self, HitPayload};
+use super::Conn;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::os::unix::net::UnixStream;
+use std::time::Duration;
+
+/// A connected protocol client.
+pub struct Client {
+    conn: Box<dyn Conn>,
+    acc: Vec<u8>,
+}
+
+impl Client {
+    /// Connect to `host:port`, or `unix:<path>` for a Unix socket.
+    pub fn connect(addr: &str) -> anyhow::Result<Client> {
+        let conn: Box<dyn Conn> = if let Some(path) = addr.strip_prefix("unix:") {
+            Box::new(
+                UnixStream::connect(path)
+                    .map_err(|e| anyhow::anyhow!("connect unix:{path}: {e}"))?,
+            )
+        } else {
+            let s = TcpStream::connect(addr).map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+            let _ = s.set_nodelay(true);
+            Box::new(s)
+        };
+        // generous caps so a dead or wedged server can't hang the client
+        conn.set_read_timeout(Some(Duration::from_secs(120)))?;
+        conn.set_write_timeout(Some(Duration::from_secs(30)))?;
+        Ok(Client { conn, acc: Vec::new() })
+    }
+
+    /// Send one raw request line and read one response line, parsed.
+    pub fn request_line(&mut self, line: &str) -> anyhow::Result<Json> {
+        self.conn.write_all(line.as_bytes())?;
+        self.conn.write_all(b"\n")?;
+        self.conn.flush()?;
+        let line = self.read_line()?;
+        Json::parse(&line).map_err(|e| anyhow::anyhow!("unparseable server response: {e}"))
+    }
+
+    fn read_line(&mut self) -> anyhow::Result<String> {
+        let mut chunk = [0u8; 4096];
+        loop {
+            if let Some(pos) = self.acc.iter().position(|&b| b == b'\n') {
+                let line: Vec<u8> = self.acc.drain(..=pos).collect();
+                return Ok(String::from_utf8_lossy(&line).trim().to_string());
+            }
+            match self.conn.read(&mut chunk) {
+                Ok(0) => anyhow::bail!("server closed the connection"),
+                Ok(n) => self.acc.extend_from_slice(&chunk[..n]),
+                Err(e) => anyhow::bail!("read: {e}"),
+            }
+        }
+    }
+
+    /// Issue a search. `seq` is residue letters; `top_k`/`deadline_ms`
+    /// are optional per-request overrides.
+    pub fn search(
+        &mut self,
+        query_id: &str,
+        seq: &str,
+        top_k: Option<usize>,
+        deadline_ms: Option<u64>,
+    ) -> anyhow::Result<Json> {
+        let mut m = BTreeMap::new();
+        m.insert("v".to_string(), Json::Num(protocol::VERSION as f64));
+        m.insert("op".to_string(), Json::Str("search".to_string()));
+        m.insert("query_id".to_string(), Json::Str(query_id.to_string()));
+        m.insert("query".to_string(), Json::Str(seq.to_string()));
+        if let Some(k) = top_k {
+            m.insert("top_k".to_string(), Json::Num(k as f64));
+        }
+        if let Some(d) = deadline_ms {
+            m.insert("deadline_ms".to_string(), Json::Num(d as f64));
+        }
+        self.request_line(&Json::Obj(m).to_string())
+    }
+
+    pub fn ping(&mut self) -> anyhow::Result<Json> {
+        self.request_line(&format!(r#"{{"v":{},"op":"ping"}}"#, protocol::VERSION))
+    }
+
+    pub fn stats(&mut self) -> anyhow::Result<Json> {
+        self.request_line(&format!(r#"{{"v":{},"op":"stats"}}"#, protocol::VERSION))
+    }
+}
+
+/// Did the server accept the request?
+pub fn is_ok(resp: &Json) -> bool {
+    resp.get("ok").and_then(Json::as_bool).unwrap_or(false)
+}
+
+/// The `error.code`/`error.message` of a failure response.
+pub fn error_of(resp: &Json) -> (String, String) {
+    let err = resp.get("error");
+    (
+        err.and_then(|e| e.get("code")).and_then(Json::as_str).unwrap_or("?").to_string(),
+        err.and_then(|e| e.get("message")).and_then(Json::as_str).unwrap_or("?").to_string(),
+    )
+}
+
+/// Hits of a success response.
+pub fn hits_of(resp: &Json) -> anyhow::Result<Vec<HitPayload>> {
+    protocol::hits_of_response(resp)
+}

@@ -1,0 +1,782 @@
+//! The resident search service (`swaphi serve`).
+//!
+//! SWAPHI's whole design amortizes fixed costs — the index, the lazily
+//! packed wide profiles, per-thread aligner workspaces — but a one-shot
+//! CLI pays them per invocation. This subsystem keeps them resident: the
+//! daemon loads the index once, holds a warm [`SearchSession`] in a
+//! single coalescer thread, and speaks a line-delimited JSON protocol
+//! ([`protocol`], spec in `docs/protocol.md`) over a Unix or TCP socket.
+//!
+//! Request flow:
+//!
+//! 1. a connection thread parses a request line and consults the
+//!    [`cache::ResultCache`] — repeats short-circuit without queueing;
+//! 2. misses are admitted into the bounded [`queue::AdmissionQueue`]
+//!    (full queue ⇒ `overloaded`, the backpressure signal; each request
+//!    carries a deadline);
+//! 3. the coalescer drains the queue into a multi-query batch — deduping
+//!    identical in-flight queries — and runs it through the session, so
+//!    *cross-request* batching feeds the i16/i32 tiered kernels exactly
+//!    like an offline multi-query `search`;
+//! 4. results are cached, truncated to each requester's `top_k`, and
+//!    replied per connection. Scores are bit-identical to a standalone
+//!    `search` of the same query: the session's sinks are
+//!    order-independent and the chunk plan is shared.
+//!
+//! Shutdown is graceful: SIGINT/SIGTERM (or [`ServerHandle::stop`]) stops
+//! the accept loop, lets every in-flight connection finish its current
+//! request, then closes the queue so the coalescer drains what is left
+//! before exiting — no admitted request is ever dropped unanswered.
+
+pub mod cache;
+pub mod client;
+pub mod protocol;
+pub mod queue;
+
+use crate::align::Precision;
+use crate::coordinator::{AlignerFactory, SearchConfig, SearchSession};
+use crate::db::index::Index;
+use crate::matrices::Scoring;
+use crate::metrics::Histogram;
+use crate::util::json::Json;
+use cache::{fnv1a, fnv1a_field, CacheKey, ResultCache};
+use protocol::{HitPayload, Request};
+use queue::{AdmissionQueue, Pending, PushError};
+use std::collections::{BTreeMap, HashMap};
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex, Once};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Server tuning knobs (the `[server]` config section).
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// `host:port` for TCP, or `unix:<path>` for a Unix domain socket.
+    /// Port 0 binds an ephemeral port (reported by [`ServerHandle::addr`]).
+    pub listen: String,
+    /// Admission bound: requests beyond this are refused (`overloaded`).
+    pub queue_capacity: usize,
+    /// Largest batch the coalescer hands the session at once.
+    pub max_batch: usize,
+    /// How long the coalescer holds a batch open for more requests.
+    pub batch_window_ms: u64,
+    /// Result-cache entries (0 disables the cache).
+    pub cache_entries: usize,
+    /// Deadline applied to requests that don't carry their own.
+    pub default_deadline_ms: u64,
+    /// Admission guard: longer queries are rejected as `bad_request`.
+    pub max_query_len: usize,
+    /// Concurrent-connection cap (each connection is one OS thread);
+    /// excess connections get `overloaded` and are closed immediately.
+    pub max_connections: usize,
+    /// Install SIGINT/SIGTERM handlers that trigger a graceful drain
+    /// (the `serve` command sets this; tests and embedded use don't).
+    pub handle_signals: bool,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            listen: "127.0.0.1:7878".to_string(),
+            queue_capacity: 256,
+            max_batch: 32,
+            batch_window_ms: 4,
+            cache_entries: 1024,
+            default_deadline_ms: 30_000,
+            max_query_len: 50_000,
+            max_connections: 512,
+            handle_signals: false,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Signal-driven shutdown. The handler only stores into an atomic —
+// async-signal-safe — and the accept loop polls it.
+
+static SIGNALLED: AtomicBool = AtomicBool::new(false);
+static INSTALL: Once = Once::new();
+
+extern "C" fn on_signal(_sig: libc::c_int) {
+    SIGNALLED.store(true, Ordering::SeqCst);
+}
+
+/// Route SIGINT/SIGTERM to a graceful-drain flag (idempotent).
+pub fn install_signal_handlers() {
+    INSTALL.call_once(|| unsafe {
+        libc::signal(libc::SIGINT, on_signal);
+        libc::signal(libc::SIGTERM, on_signal);
+    });
+}
+
+/// Has a drain been requested by signal?
+pub fn signalled() -> bool {
+    SIGNALLED.load(Ordering::SeqCst)
+}
+
+// ---------------------------------------------------------------------
+// Transport: one trait over TCP and Unix streams.
+
+/// A bidirectional client connection (TCP or Unix).
+pub(crate) trait Conn: Read + Write + Send {
+    fn set_read_timeout(&self, dur: Option<Duration>) -> io::Result<()>;
+    fn set_write_timeout(&self, dur: Option<Duration>) -> io::Result<()>;
+}
+
+impl Conn for TcpStream {
+    fn set_read_timeout(&self, dur: Option<Duration>) -> io::Result<()> {
+        TcpStream::set_read_timeout(self, dur)
+    }
+    fn set_write_timeout(&self, dur: Option<Duration>) -> io::Result<()> {
+        TcpStream::set_write_timeout(self, dur)
+    }
+}
+
+impl Conn for UnixStream {
+    fn set_read_timeout(&self, dur: Option<Duration>) -> io::Result<()> {
+        UnixStream::set_read_timeout(self, dur)
+    }
+    fn set_write_timeout(&self, dur: Option<Duration>) -> io::Result<()> {
+        UnixStream::set_write_timeout(self, dur)
+    }
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    Unix(UnixListener),
+}
+
+impl Listener {
+    fn accept(&self) -> io::Result<Box<dyn Conn>> {
+        // a write timeout on every accepted stream bounds how long a
+        // connection thread can be wedged by a peer that stops reading —
+        // without it, one such peer makes graceful shutdown hang forever
+        // in the conn-thread join
+        let conn: Box<dyn Conn> = match self {
+            Listener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                let _ = s.set_nodelay(true);
+                Box::new(s)
+            }
+            Listener::Unix(l) => {
+                let (s, _) = l.accept()?;
+                Box::new(s)
+            }
+        };
+        let _ = conn.set_write_timeout(Some(Duration::from_secs(30)));
+        Ok(conn)
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> io::Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(nb),
+            Listener::Unix(l) => l.set_nonblocking(nb),
+        }
+    }
+}
+
+/// Where the server actually listens (the ephemeral TCP port resolved).
+#[derive(Clone, Debug)]
+pub enum BoundAddr {
+    Tcp(SocketAddr),
+    Unix(PathBuf),
+}
+
+impl std::fmt::Display for BoundAddr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BoundAddr::Tcp(a) => write!(f, "{a}"),
+            BoundAddr::Unix(p) => write!(f, "unix:{}", p.display()),
+        }
+    }
+}
+
+fn bind(listen: &str) -> anyhow::Result<(Listener, BoundAddr)> {
+    if let Some(path) = listen.strip_prefix("unix:") {
+        anyhow::ensure!(!path.is_empty(), "unix: listen address needs a path");
+        // a stale socket file from a crashed daemon would fail the bind —
+        // but only remove it after proving nothing is listening there, so
+        // a second daemon can't silently hijack a live one's socket
+        if std::path::Path::new(path).exists() {
+            anyhow::ensure!(
+                UnixStream::connect(path).is_err(),
+                "unix:{path}: a live server is already listening there"
+            );
+            let _ = std::fs::remove_file(path);
+        }
+        let l = UnixListener::bind(path)
+            .map_err(|e| anyhow::anyhow!("bind unix:{path}: {e}"))?;
+        Ok((Listener::Unix(l), BoundAddr::Unix(PathBuf::from(path))))
+    } else {
+        let l = TcpListener::bind(listen)
+            .map_err(|e| anyhow::anyhow!("bind {listen}: {e}"))?;
+        let addr = l.local_addr()?;
+        Ok((Listener::Tcp(l), BoundAddr::Tcp(addr)))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Metrics.
+
+/// Service counters and histograms, snapshotted by the `stats` op.
+pub struct ServerMetrics {
+    pub admitted: AtomicU64,
+    pub rejected: AtomicU64,
+    pub expired: AtomicU64,
+    pub cache_hits: AtomicU64,
+    pub cache_misses: AtomicU64,
+    pub batches: AtomicU64,
+    batch_size: Mutex<Histogram>,
+    latency_us: Mutex<Histogram>,
+}
+
+impl ServerMetrics {
+    fn new() -> ServerMetrics {
+        ServerMetrics {
+            admitted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            expired: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batch_size: Mutex::new(Histogram::exponential(1 << 10)),
+            latency_us: Mutex::new(Histogram::exponential(60_000_000)),
+        }
+    }
+
+    fn record_batch(&self, n: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_size.lock().unwrap().record(n as u64);
+    }
+
+    fn record_latency(&self, us: u64) {
+        self.latency_us.lock().unwrap().record(us);
+    }
+
+    /// Largest coalesced batch so far (the acceptance-criteria probe).
+    pub fn max_batch_size(&self) -> u64 {
+        self.batch_size.lock().unwrap().max()
+    }
+
+    pub fn batch_size_summary(&self) -> crate::metrics::HistogramSummary {
+        self.batch_size.lock().unwrap().summary()
+    }
+
+    pub fn latency_summary(&self) -> crate::metrics::HistogramSummary {
+        self.latency_us.lock().unwrap().summary()
+    }
+}
+
+fn summary_json(s: crate::metrics::HistogramSummary) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("count".to_string(), Json::Num(s.count as f64));
+    m.insert("mean".to_string(), Json::Num(s.mean));
+    m.insert("max".to_string(), Json::Num(s.max as f64));
+    m.insert("p50".to_string(), Json::Num(s.p50 as f64));
+    m.insert("p99".to_string(), Json::Num(s.p99 as f64));
+    Json::Obj(m)
+}
+
+// ---------------------------------------------------------------------
+// Fingerprints for the cache key.
+
+/// Fingerprint the loaded index: sequence count, total residues, and
+/// every sequence's id *and residue content* — any change to what is
+/// searched yields a new generation, invalidating all cached results
+/// for the old one. One O(total residues) pass at startup.
+pub fn index_generation(index: &Index) -> u64 {
+    let mut h = fnv1a(b"swaphi-index");
+    h = fnv1a_field(h, &(index.n_seqs() as u64).to_le_bytes());
+    h = fnv1a_field(h, &index.total_residues.to_le_bytes());
+    for s in &index.seqs {
+        h = fnv1a_field(h, s.id.as_bytes());
+        h = fnv1a_field(h, &s.codes);
+    }
+    h
+}
+
+fn params_fingerprint(
+    scoring: &Scoring,
+    precision: Precision,
+    top_k: usize,
+    factory: &dyn AlignerFactory,
+) -> u64 {
+    let mut h = fnv1a(b"swaphi-params");
+    h = fnv1a_field(h, scoring.name.as_bytes());
+    h = fnv1a_field(h, &scoring.gap_open.to_le_bytes());
+    h = fnv1a_field(h, &scoring.gap_extend.to_le_bytes());
+    h = fnv1a_field(h, precision.name().as_bytes());
+    h = fnv1a_field(h, factory.kind().name().as_bytes());
+    h = fnv1a_field(h, factory.backend_name().as_bytes());
+    fnv1a_field(h, &(top_k as u64).to_le_bytes())
+}
+
+// ---------------------------------------------------------------------
+// The server.
+
+struct Shared {
+    cfg: ServerConfig,
+    queue: AdmissionQueue,
+    cache: Mutex<ResultCache>,
+    metrics: ServerMetrics,
+    stop: AtomicBool,
+    generation: u64,
+    params_fp: u64,
+    session_top_k: usize,
+}
+
+impl Shared {
+    fn draining(&self) -> bool {
+        self.stop.load(Ordering::SeqCst) || (self.cfg.handle_signals && signalled())
+    }
+}
+
+/// Everything a resident service needs; consumed by [`Server::start`].
+pub struct Server {
+    pub index: Arc<Index>,
+    pub scoring: Scoring,
+    pub search: SearchConfig,
+    pub server: ServerConfig,
+    pub factory: Arc<dyn AlignerFactory>,
+}
+
+/// A running server: its bound address, metrics, and shutdown control.
+pub struct ServerHandle {
+    addr: BoundAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind, warm the session state, and spawn the accept + coalescer
+    /// threads. Returns once the socket is listening.
+    pub fn start(self) -> anyhow::Result<ServerHandle> {
+        let Server { index, scoring, mut search, server: cfg, factory } = self;
+        // the daemon reports real hits/latency; per-request device
+        // simulation is offline-analysis machinery, not serving work
+        search.sim = None;
+        if search.precision != Precision::I32 {
+            // pack the 32-lane wide profiles now, not on the first
+            // request — that's the point of being resident
+            let _ = index.wide();
+        }
+        if cfg.handle_signals {
+            install_signal_handlers();
+        }
+
+        let generation = index_generation(&index);
+        let params_fp = params_fingerprint(&scoring, search.precision, search.top_k, factory.as_ref());
+        let (listener, addr) = bind(&cfg.listen)?;
+        listener.set_nonblocking(true)?;
+
+        let shared = Arc::new(Shared {
+            queue: AdmissionQueue::new(cfg.queue_capacity),
+            cache: Mutex::new(ResultCache::new(cfg.cache_entries)),
+            metrics: ServerMetrics::new(),
+            stop: AtomicBool::new(false),
+            generation,
+            params_fp,
+            session_top_k: search.top_k,
+            cfg,
+        });
+
+        let worker = {
+            let shared = Arc::clone(&shared);
+            let factory = Arc::clone(&factory);
+            std::thread::Builder::new()
+                .name("swaphi-coalescer".into())
+                .spawn(move || coalescer_loop(&shared, &index, scoring, search, factory.as_ref()))?
+        };
+
+        let accept = {
+            let shared = Arc::clone(&shared);
+            let addr = addr.clone();
+            std::thread::Builder::new()
+                .name("swaphi-accept".into())
+                .spawn(move || accept_loop(listener, addr, &shared))?
+        };
+
+        Ok(ServerHandle { addr, shared, accept: Some(accept), worker: Some(worker) })
+    }
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> &BoundAddr {
+        &self.addr
+    }
+
+    /// Address string accepted by [`client::Client::connect`].
+    pub fn connect_addr(&self) -> String {
+        self.addr.to_string()
+    }
+
+    pub fn metrics(&self) -> &ServerMetrics {
+        &self.shared.metrics
+    }
+
+    /// Request a graceful drain (non-blocking).
+    pub fn stop(&self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Block until the accept loop and the coalescer have drained.
+    /// Idempotent; metrics remain readable afterwards.
+    pub fn wait(&mut self) -> anyhow::Result<()> {
+        for h in [self.accept.take(), self.worker.take()].into_iter().flatten() {
+            h.join().map_err(|_| anyhow::anyhow!("server thread panicked"))?;
+        }
+        Ok(())
+    }
+
+    /// [`stop`](Self::stop) + [`wait`](Self::wait).
+    pub fn shutdown(mut self) -> anyhow::Result<()> {
+        self.stop();
+        self.wait()
+    }
+}
+
+fn accept_loop(listener: Listener, addr: BoundAddr, shared: &Arc<Shared>) {
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    while !shared.draining() {
+        match listener.accept() {
+            Ok(mut conn) => {
+                conns.retain(|h| !h.is_finished());
+                // each connection is one OS thread: cap them so idle or
+                // hostile connections can't exhaust the process (the
+                // queue bounds in-flight *searches*, this bounds peers)
+                if conns.len() >= shared.cfg.max_connections {
+                    let line = protocol::error_response(
+                        None,
+                        protocol::E_OVERLOADED,
+                        &format!("connection limit reached ({})", shared.cfg.max_connections),
+                    );
+                    let _ = conn.write_all(line.as_bytes());
+                    let _ = conn.write_all(b"\n");
+                    continue; // dropping the stream closes it
+                }
+                let shared = Arc::clone(shared);
+                if let Ok(h) = std::thread::Builder::new()
+                    .name("swaphi-conn".into())
+                    .spawn(move || handle_conn(conn, &shared))
+                {
+                    conns.push(h);
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+    // graceful drain: stop accepting, let every live connection finish
+    // its in-flight request (they observe `draining` via read timeouts),
+    // then close the queue so the coalescer drains the backlog and exits
+    drop(listener);
+    if let BoundAddr::Unix(path) = &addr {
+        let _ = std::fs::remove_file(path);
+    }
+    for h in conns {
+        let _ = h.join();
+    }
+    shared.queue.close();
+}
+
+/// Read `\n`-delimited request lines off one connection, replying in
+/// order. Read timeouts keep the thread responsive to shutdown without
+/// dropping half-received lines.
+fn handle_conn(mut conn: Box<dyn Conn>, shared: &Arc<Shared>) {
+    let _ = conn.set_read_timeout(Some(Duration::from_millis(200)));
+    // a well-formed request line is bounded by the query-length cap plus
+    // framing slack; anything longer without a newline is not our
+    // protocol and must not grow the buffer unboundedly
+    let max_line = shared.cfg.max_query_len + 4096;
+    let mut acc: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    loop {
+        while let Some(pos) = acc.iter().position(|&b| b == b'\n') {
+            let line: Vec<u8> = acc.drain(..=pos).collect();
+            let line = String::from_utf8_lossy(&line);
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let reply = handle_line(line, shared);
+            if conn.write_all(reply.as_bytes()).is_err() || conn.write_all(b"\n").is_err() {
+                return;
+            }
+            let _ = conn.flush();
+        }
+        if acc.len() > max_line {
+            let line = protocol::error_response(
+                None,
+                protocol::E_BAD_REQUEST,
+                &format!("request line exceeds {max_line} bytes"),
+            );
+            let _ = conn.write_all(line.as_bytes());
+            let _ = conn.write_all(b"\n");
+            return;
+        }
+        if shared.draining() {
+            return;
+        }
+        match conn.read(&mut chunk) {
+            Ok(0) => return, // client closed
+            Ok(n) => acc.extend_from_slice(&chunk[..n]),
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {}
+            Err(_) => return,
+        }
+    }
+}
+
+fn handle_line(line: &str, shared: &Shared) -> String {
+    let req = match protocol::parse_request(line) {
+        Ok(r) => r,
+        Err(e) => return protocol::error_response(None, e.code, &e.message),
+    };
+    match req {
+        Request::Ping { id } => protocol::pong_response(id.as_deref()),
+        Request::Stats { id } => protocol::stats_response(id.as_deref(), stats_json(shared)),
+        Request::Search(s) => handle_search(s, shared),
+    }
+}
+
+fn handle_search(req: protocol::SearchRequest, shared: &Shared) -> String {
+    let id = req.id.as_deref();
+    if shared.draining() {
+        return protocol::error_response(id, protocol::E_SHUTTING_DOWN, "server is draining");
+    }
+    if req.seq.len() > shared.cfg.max_query_len {
+        return protocol::error_response(
+            id,
+            protocol::E_BAD_REQUEST,
+            &format!("query length {} exceeds limit {}", req.seq.len(), shared.cfg.max_query_len),
+        );
+    }
+    let codes = crate::alphabet::encode(req.seq.as_bytes());
+    let top_k = req.top_k.unwrap_or(shared.session_top_k).min(shared.session_top_k);
+    let key = CacheKey {
+        query_digest: fnv1a(&codes),
+        index_generation: shared.generation,
+        params_fingerprint: shared.params_fp,
+    };
+
+    // bind the lookup so the cache guard drops before JSON serialization
+    let cached = shared.cache.lock().unwrap().get(&key, &codes);
+    if let Some(hits) = cached {
+        shared.metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
+        let n = top_k.min(hits.len());
+        return protocol::search_response(id, &req.query_id, true, &hits[..n]);
+    }
+    shared.metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
+
+    let deadline_ms = req.deadline_ms.unwrap_or(shared.cfg.default_deadline_ms).min(3_600_000);
+    let now = Instant::now();
+    let (tx, rx) = mpsc::channel();
+    let pending = Pending {
+        req_id: req.id.clone(),
+        query_id: req.query_id.clone(),
+        codes,
+        top_k,
+        cache_key: (shared.cfg.cache_entries > 0).then_some(key),
+        deadline: now + Duration::from_millis(deadline_ms),
+        enqueued: now,
+        reply: tx,
+    };
+    match shared.queue.push(pending) {
+        Ok(()) => {
+            shared.metrics.admitted.fetch_add(1, Ordering::Relaxed);
+        }
+        Err(PushError::Full(_)) => {
+            shared.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return protocol::error_response(
+                id,
+                protocol::E_OVERLOADED,
+                &format!("admission queue full ({} pending)", shared.cfg.queue_capacity),
+            );
+        }
+        Err(PushError::Closed(_)) => {
+            return protocol::error_response(id, protocol::E_SHUTTING_DOWN, "server is draining");
+        }
+    }
+    match rx.recv() {
+        Ok(line) => line,
+        Err(_) => protocol::error_response(id, protocol::E_INTERNAL, "worker dropped the request"),
+    }
+}
+
+/// The coalescer: the single owner of the warm [`SearchSession`]. Drains
+/// admitted requests into multi-query batches until the queue closes.
+fn coalescer_loop(
+    shared: &Shared,
+    index: &Index,
+    scoring: Scoring,
+    search: SearchConfig,
+    factory: &dyn AlignerFactory,
+) {
+    let session = SearchSession::new(index, scoring, search);
+    let window = Duration::from_millis(shared.cfg.batch_window_ms);
+    while let Some(batch) = shared.queue.drain_batch(shared.cfg.max_batch, window) {
+        run_batch(shared, &session, factory, batch);
+    }
+}
+
+fn run_batch(
+    shared: &Shared,
+    session: &SearchSession<'_>,
+    factory: &dyn AlignerFactory,
+    batch: Vec<Pending>,
+) {
+    // admission control, second gate: don't spend kernel time on
+    // requests whose deadline already passed while queued
+    let now = Instant::now();
+    let (live, dead): (Vec<Pending>, Vec<Pending>) =
+        batch.into_iter().partition(|p| p.deadline > now);
+    for p in dead {
+        shared.metrics.expired.fetch_add(1, Ordering::Relaxed);
+        let _ = p.reply.send(protocol::error_response(
+            p.req_id.as_deref(),
+            protocol::E_DEADLINE,
+            "deadline expired before the request was scheduled",
+        ));
+    }
+    if live.is_empty() {
+        return;
+    }
+    shared.metrics.record_batch(live.len());
+
+    // coalesce identical in-flight queries into one lane set
+    let mut uniq: Vec<(String, Vec<u8>)> = Vec::new();
+    let mut index_of: HashMap<&[u8], usize> = HashMap::new();
+    let mut slot: Vec<usize> = Vec::with_capacity(live.len());
+    for p in &live {
+        let i = *index_of.entry(p.codes.as_slice()).or_insert_with(|| {
+            uniq.push((p.query_id.clone(), p.codes.clone()));
+            uniq.len() - 1
+        });
+        slot.push(i);
+    }
+
+    match session.search_batch(factory, &uniq) {
+        Ok(results) => {
+            let payloads: Vec<Vec<HitPayload>> = results
+                .iter()
+                .map(|r| {
+                    r.hits
+                        .iter()
+                        .map(|h| HitPayload { subject: h.id.clone(), len: h.len, score: h.score })
+                        .collect()
+                })
+                .collect();
+            // one insert per *unique* query (duplicates share the key)
+            let mut inserted = vec![false; payloads.len()];
+            for (p, &i) in live.iter().zip(&slot) {
+                let full = &payloads[i];
+                if let Some(key) = p.cache_key {
+                    if !inserted[i] {
+                        shared.cache.lock().unwrap().insert(key, p.codes.clone(), full.clone());
+                        inserted[i] = true;
+                    }
+                }
+                let n = p.top_k.min(full.len());
+                let line =
+                    protocol::search_response(p.req_id.as_deref(), &p.query_id, false, &full[..n]);
+                shared
+                    .metrics
+                    .record_latency(p.enqueued.elapsed().as_micros().min(u64::MAX as u128) as u64);
+                let _ = p.reply.send(line);
+            }
+        }
+        Err(e) => {
+            for p in &live {
+                let _ = p.reply.send(protocol::error_response(
+                    p.req_id.as_deref(),
+                    protocol::E_INTERNAL,
+                    &format!("search failed: {e:#}"),
+                ));
+            }
+        }
+    }
+}
+
+fn stats_json(shared: &Shared) -> Json {
+    let m = &shared.metrics;
+    let mut s = BTreeMap::new();
+    s.insert("queue_depth".to_string(), Json::Num(shared.queue.depth() as f64));
+    for (k, v) in [
+        ("admitted", &m.admitted),
+        ("rejected", &m.rejected),
+        ("expired", &m.expired),
+        ("cache_hits", &m.cache_hits),
+        ("cache_misses", &m.cache_misses),
+        ("batches", &m.batches),
+    ] {
+        s.insert(k.to_string(), Json::Num(v.load(Ordering::Relaxed) as f64));
+    }
+    s.insert(
+        "cache_entries".to_string(),
+        Json::Num(shared.cache.lock().unwrap().len() as f64),
+    );
+    s.insert("batch_size".to_string(), summary_json(m.batch_size_summary()));
+    s.insert("latency_us".to_string(), summary_json(m.latency_summary()));
+    s.insert(
+        "index_generation".to_string(),
+        Json::Str(format!("{:016x}", shared.generation)),
+    );
+    Json::Obj(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::synth::{generate, SynthSpec};
+
+    #[test]
+    fn index_generation_tracks_content() {
+        let a = Index::build(generate(&SynthSpec::tiny(20, 1)));
+        let a2 = Index::build(generate(&SynthSpec::tiny(20, 1)));
+        let b = Index::build(generate(&SynthSpec::tiny(20, 2)));
+        let c = Index::build(generate(&SynthSpec::tiny(21, 1)));
+        assert_eq!(index_generation(&a), index_generation(&a2), "deterministic");
+        assert_ne!(index_generation(&a), index_generation(&b));
+        assert_ne!(index_generation(&a), index_generation(&c));
+    }
+
+    #[test]
+    fn params_fingerprint_tracks_every_knob() {
+        use crate::align::EngineKind;
+        use crate::coordinator::NativeFactory;
+        let sc = Scoring::swaphi_default();
+        let base = params_fingerprint(&sc, Precision::Auto, 10, &NativeFactory(EngineKind::InterSP));
+        assert_eq!(
+            base,
+            params_fingerprint(&sc, Precision::Auto, 10, &NativeFactory(EngineKind::InterSP))
+        );
+        assert_ne!(
+            base,
+            params_fingerprint(&sc, Precision::I32, 10, &NativeFactory(EngineKind::InterSP))
+        );
+        assert_ne!(
+            base,
+            params_fingerprint(&sc, Precision::Auto, 11, &NativeFactory(EngineKind::InterSP))
+        );
+        assert_ne!(
+            base,
+            params_fingerprint(&sc, Precision::Auto, 10, &NativeFactory(EngineKind::InterQP))
+        );
+        let pam = Scoring::new("PAM250", 10, 2).unwrap();
+        assert_ne!(
+            base,
+            params_fingerprint(&pam, Precision::Auto, 10, &NativeFactory(EngineKind::InterSP))
+        );
+    }
+
+    #[test]
+    fn bind_rejects_empty_unix_path() {
+        assert!(bind("unix:").is_err());
+    }
+}

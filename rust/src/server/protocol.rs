@@ -1,0 +1,325 @@
+//! The wire protocol of the resident search service: line-delimited JSON,
+//! version 1. Each request and each response is exactly one JSON object on
+//! one `\n`-terminated line; the full schema and versioning rules live in
+//! `docs/protocol.md`.
+//!
+//! Parsing is strict on what matters (version, op, required fields) and
+//! tolerant of unknown fields, so additive protocol evolution does not
+//! break older servers.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Current protocol version. Requests carrying any other `v` are rejected
+/// with [`E_UNSUPPORTED_VERSION`].
+pub const VERSION: u64 = 1;
+
+/// Error codes (the `error.code` field of a failure response).
+pub const E_BAD_REQUEST: &str = "bad_request";
+pub const E_UNSUPPORTED_VERSION: &str = "unsupported_version";
+pub const E_OVERLOADED: &str = "overloaded";
+pub const E_DEADLINE: &str = "deadline_exceeded";
+pub const E_SHUTTING_DOWN: &str = "shutting_down";
+pub const E_INTERNAL: &str = "internal";
+
+/// A structured protocol-level failure, rendered by [`error_response`].
+#[derive(Debug)]
+pub struct ProtoError {
+    pub code: &'static str,
+    pub message: String,
+}
+
+impl ProtoError {
+    pub fn bad(message: impl Into<String>) -> ProtoError {
+        ProtoError { code: E_BAD_REQUEST, message: message.into() }
+    }
+}
+
+/// A parsed client request.
+#[derive(Debug)]
+pub enum Request {
+    Search(SearchRequest),
+    Ping { id: Option<String> },
+    Stats { id: Option<String> },
+}
+
+/// `op = "search"`.
+#[derive(Debug)]
+pub struct SearchRequest {
+    /// Client correlation id, echoed back verbatim.
+    pub id: Option<String>,
+    /// Query label used in the response (defaults to `"query"`).
+    pub query_id: String,
+    /// Residue letters (ASCII; unknown letters encode to X like `search`).
+    pub seq: String,
+    /// Hits wanted; clamped to the server session's `top_k`.
+    pub top_k: Option<usize>,
+    /// Per-request deadline; expired requests are dropped by the
+    /// coalescer with [`E_DEADLINE`] instead of being searched.
+    pub deadline_ms: Option<u64>,
+}
+
+/// Parse one request line. The error carries the code the reply must use.
+pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
+    let j = Json::parse(line).map_err(|e| ProtoError::bad(format!("invalid JSON: {e}")))?;
+    if !matches!(j, Json::Obj(_)) {
+        return Err(ProtoError::bad("request must be a JSON object"));
+    }
+    let v = j
+        .get("v")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| ProtoError::bad("missing integer field \"v\""))?;
+    if v as u64 != VERSION {
+        return Err(ProtoError {
+            code: E_UNSUPPORTED_VERSION,
+            message: format!("protocol version {v} not supported (server speaks {VERSION})"),
+        });
+    }
+    let id = j.get("id").and_then(Json::as_str).map(str::to_string);
+    match j.str_field("op").map_err(|_| ProtoError::bad("missing string field \"op\""))? {
+        "ping" => Ok(Request::Ping { id }),
+        "stats" => Ok(Request::Stats { id }),
+        "search" => {
+            let seq = j
+                .get("query")
+                .and_then(Json::as_str)
+                .ok_or_else(|| ProtoError::bad("search needs a string field \"query\""))?;
+            if seq.is_empty() {
+                return Err(ProtoError::bad("empty query"));
+            }
+            let top_k = match j.get("top_k") {
+                None => None,
+                Some(t) => Some(
+                    t.as_usize()
+                        .filter(|&k| k > 0)
+                        .ok_or_else(|| ProtoError::bad("top_k must be a positive integer"))?,
+                ),
+            };
+            let deadline_ms = match j.get("deadline_ms") {
+                None => None,
+                Some(d) => Some(
+                    d.as_usize()
+                        .ok_or_else(|| ProtoError::bad("deadline_ms must be a non-negative integer"))?
+                        as u64,
+                ),
+            };
+            Ok(Request::Search(SearchRequest {
+                id,
+                query_id: j
+                    .get("query_id")
+                    .and_then(Json::as_str)
+                    .unwrap_or("query")
+                    .to_string(),
+                seq: seq.to_string(),
+                top_k,
+                deadline_ms,
+            }))
+        }
+        other => Err(ProtoError::bad(format!(
+            "unknown op {other:?} (search|ping|stats)"
+        ))),
+    }
+}
+
+/// One ranked hit as it crosses the wire (and as the cache stores it).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HitPayload {
+    pub subject: String,
+    pub len: usize,
+    pub score: i32,
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+fn base(id: Option<&str>, ok: bool) -> Vec<(&'static str, Json)> {
+    let mut pairs = vec![
+        ("v", Json::Num(VERSION as f64)),
+        ("ok", Json::Bool(ok)),
+    ];
+    if let Some(id) = id {
+        pairs.push(("id", Json::Str(id.to_string())));
+    }
+    pairs
+}
+
+/// Successful search response line (no trailing newline).
+pub fn search_response(
+    id: Option<&str>,
+    query_id: &str,
+    cached: bool,
+    hits: &[HitPayload],
+) -> String {
+    let mut pairs = base(id, true);
+    pairs.push(("query_id", Json::Str(query_id.to_string())));
+    pairs.push(("cached", Json::Bool(cached)));
+    pairs.push((
+        "hits",
+        Json::Arr(
+            hits.iter()
+                .enumerate()
+                .map(|(rank, h)| {
+                    obj(vec![
+                        ("rank", Json::Num((rank + 1) as f64)),
+                        ("subject", Json::Str(h.subject.clone())),
+                        ("len", Json::Num(h.len as f64)),
+                        ("score", Json::Num(h.score as f64)),
+                    ])
+                })
+                .collect(),
+        ),
+    ));
+    obj(pairs).to_string()
+}
+
+/// Failure response line.
+pub fn error_response(id: Option<&str>, code: &str, message: &str) -> String {
+    let mut pairs = base(id, false);
+    pairs.push((
+        "error",
+        obj(vec![
+            ("code", Json::Str(code.to_string())),
+            ("message", Json::Str(message.to_string())),
+        ]),
+    ));
+    obj(pairs).to_string()
+}
+
+/// Ping reply.
+pub fn pong_response(id: Option<&str>) -> String {
+    let mut pairs = base(id, true);
+    pairs.push(("op", Json::Str("pong".to_string())));
+    obj(pairs).to_string()
+}
+
+/// Stats reply wrapping a prebuilt `stats` object.
+pub fn stats_response(id: Option<&str>, stats: Json) -> String {
+    let mut pairs = base(id, true);
+    pairs.push(("stats", stats));
+    obj(pairs).to_string()
+}
+
+/// Extract the hits array of a parsed success response back into payload
+/// form (client side; also used by tests to compare payload identity).
+pub fn hits_of_response(resp: &Json) -> anyhow::Result<Vec<HitPayload>> {
+    let arr = resp
+        .get("hits")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("response has no hits array"))?;
+    arr.iter()
+        .map(|h| {
+            Ok(HitPayload {
+                subject: h.str_field("subject")?.to_string(),
+                len: h.usize_field("len")?,
+                // scores may be negative, so read through f64
+                score: h
+                    .get("score")
+                    .and_then(Json::as_f64)
+                    .map(|f| f as i32)
+                    .ok_or_else(|| anyhow::anyhow!("missing number field \"score\""))?,
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_search_request() {
+        let r = parse_request(
+            r#"{"v":1,"op":"search","id":"r1","query_id":"q7","query":"MKT","top_k":3,"deadline_ms":500}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Search(s) => {
+                assert_eq!(s.id.as_deref(), Some("r1"));
+                assert_eq!(s.query_id, "q7");
+                assert_eq!(s.seq, "MKT");
+                assert_eq!(s.top_k, Some(3));
+                assert_eq!(s.deadline_ms, Some(500));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn defaults_and_unknown_fields_tolerated() {
+        let r = parse_request(r#"{"v":1,"op":"search","query":"MW","future_field":42}"#).unwrap();
+        match r {
+            Request::Search(s) => {
+                assert_eq!(s.id, None);
+                assert_eq!(s.query_id, "query");
+                assert_eq!(s.top_k, None);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for (line, code) in [
+            ("not json", E_BAD_REQUEST),
+            ("[1,2]", E_BAD_REQUEST),
+            (r#"{"op":"search","query":"M"}"#, E_BAD_REQUEST), // no v
+            (r#"{"v":99,"op":"ping"}"#, E_UNSUPPORTED_VERSION),
+            (r#"{"v":1,"op":"frobnicate"}"#, E_BAD_REQUEST),
+            (r#"{"v":1,"op":"search"}"#, E_BAD_REQUEST), // no query
+            (r#"{"v":1,"op":"search","query":""}"#, E_BAD_REQUEST),
+            (r#"{"v":1,"op":"search","query":"M","top_k":0}"#, E_BAD_REQUEST),
+            (r#"{"v":1,"op":"search","query":"M","top_k":-2}"#, E_BAD_REQUEST),
+        ] {
+            let err = parse_request(line).unwrap_err();
+            assert_eq!(err.code, code, "{line}");
+        }
+    }
+
+    #[test]
+    fn responses_are_single_json_lines() {
+        let hits = vec![
+            HitPayload { subject: "s1".into(), len: 40, score: 55 },
+            HitPayload { subject: "s\"2".into(), len: 7, score: -3 },
+        ];
+        for line in [
+            search_response(Some("r1"), "q", true, &hits),
+            error_response(None, E_OVERLOADED, "queue full"),
+            pong_response(Some("p")),
+            stats_response(None, Json::Obj(Default::default())),
+        ] {
+            assert!(!line.contains('\n'), "{line}");
+            Json::parse(&line).unwrap();
+        }
+    }
+
+    #[test]
+    fn hits_round_trip_through_response() {
+        let hits = vec![
+            HitPayload { subject: "a".into(), len: 10, score: 12 },
+            HitPayload { subject: "b".into(), len: 20, score: -4 },
+        ];
+        let resp = Json::parse(&search_response(None, "q", false, &hits)).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(hits_of_response(&resp).unwrap(), hits);
+        let ranks: Vec<usize> = resp
+            .get("hits")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|h| h.usize_field("rank").unwrap())
+            .collect();
+        assert_eq!(ranks, vec![1, 2]);
+    }
+
+    #[test]
+    fn error_response_is_structured() {
+        let resp = Json::parse(&error_response(Some("x"), E_DEADLINE, "too slow")).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        let err = resp.get("error").unwrap();
+        assert_eq!(err.str_field("code").unwrap(), E_DEADLINE);
+        assert_eq!(err.str_field("message").unwrap(), "too slow");
+        assert_eq!(resp.str_field("id").unwrap(), "x");
+    }
+}

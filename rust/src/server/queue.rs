@@ -1,0 +1,226 @@
+//! Admission control and cross-request batch coalescing.
+//!
+//! Concurrent connection threads [`push`](AdmissionQueue::push) their
+//! requests into one bounded queue; a single coalescer thread
+//! [`drain_batch`](AdmissionQueue::drain_batch)es it into multi-query
+//! batches for the warm `SearchSession`. The bound is the backpressure
+//! mechanism: a full queue rejects immediately (`overloaded`) instead of
+//! buffering unbounded work, and every request carries a deadline the
+//! coalescer checks before spending kernel time on it.
+//!
+//! The coalescing window is the batching/latency trade: after the first
+//! request of a batch arrives, the coalescer waits up to `window` for
+//! more requests (or until `max_batch` are pending) so that independent
+//! clients' queries feed the i16/i32 tiered kernels as one batch — the
+//! same amortization the offline multi-query `search` gets from a FASTA
+//! file, but across connections.
+
+use super::cache::CacheKey;
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One admitted search request waiting for a batch slot.
+pub struct Pending {
+    /// Client correlation id (echoed in the response).
+    pub req_id: Option<String>,
+    /// Client-chosen query label.
+    pub query_id: String,
+    /// Encoded residue codes.
+    pub codes: Vec<u8>,
+    /// Effective hits wanted (already clamped to the session top_k).
+    pub top_k: usize,
+    /// Cache slot to fill after scoring (None when the cache is off).
+    pub cache_key: Option<CacheKey>,
+    /// Drop (with `deadline_exceeded`) if not scheduled by this instant.
+    pub deadline: Instant,
+    /// Admission time, for the end-to-end latency histogram.
+    pub enqueued: Instant,
+    /// Where the encoded response line goes.
+    pub reply: mpsc::Sender<String>,
+}
+
+/// Why a push was refused.
+pub enum PushError {
+    /// Queue at capacity — the backpressure signal (`overloaded`).
+    Full(Pending),
+    /// Server draining for shutdown (`shutting_down`).
+    Closed(Pending),
+}
+
+struct State {
+    q: VecDeque<Pending>,
+    closed: bool,
+}
+
+/// The bounded request queue shared by connection threads (producers)
+/// and the coalescer (single consumer).
+pub struct AdmissionQueue {
+    st: Mutex<State>,
+    cv: Condvar,
+    capacity: usize,
+}
+
+impl AdmissionQueue {
+    pub fn new(capacity: usize) -> AdmissionQueue {
+        AdmissionQueue {
+            st: Mutex::new(State { q: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Admit one request, or refuse with the reason.
+    pub fn push(&self, p: Pending) -> Result<(), PushError> {
+        let mut st = self.st.lock().unwrap();
+        if st.closed {
+            return Err(PushError::Closed(p));
+        }
+        if st.q.len() >= self.capacity {
+            return Err(PushError::Full(p));
+        }
+        st.q.push_back(p);
+        drop(st);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Block until at least one request is pending (or shutdown), then
+    /// coalesce: wait up to `window` — or until `max_batch` requests are
+    /// pending — and drain up to `max_batch` of them. Returns `None`
+    /// exactly once the queue is closed *and* fully drained.
+    pub fn drain_batch(&self, max_batch: usize, window: Duration) -> Option<Vec<Pending>> {
+        let max_batch = max_batch.max(1);
+        let mut st = self.st.lock().unwrap();
+        loop {
+            if !st.q.is_empty() {
+                break;
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cv.wait_timeout(st, Duration::from_millis(100)).unwrap().0;
+        }
+        // coalescing window: hold the batch open for stragglers
+        let opened = Instant::now();
+        while st.q.len() < max_batch && !st.closed {
+            match window.checked_sub(opened.elapsed()) {
+                None => break,
+                Some(left) if left.is_zero() => break,
+                Some(left) => st = self.cv.wait_timeout(st, left).unwrap().0,
+            }
+        }
+        let n = st.q.len().min(max_batch);
+        Some(st.q.drain(..n).collect())
+    }
+
+    /// Begin shutdown: refuse new pushes; `drain_batch` keeps returning
+    /// batches until the queue is empty, then returns `None`.
+    pub fn close(&self) {
+        self.st.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Requests currently waiting (the queue-depth gauge).
+    pub fn depth(&self) -> usize {
+        self.st.lock().unwrap().q.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn pending(tag: &str) -> (Pending, mpsc::Receiver<String>) {
+        let (tx, rx) = mpsc::channel();
+        let now = Instant::now();
+        (
+            Pending {
+                req_id: Some(tag.to_string()),
+                query_id: tag.to_string(),
+                codes: vec![1, 2, 3],
+                top_k: 5,
+                cache_key: None,
+                deadline: now + Duration::from_secs(60),
+                enqueued: now,
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn push_then_drain() {
+        let q = AdmissionQueue::new(8);
+        let (p, _rx) = pending("a");
+        q.push(p).map_err(|_| ()).unwrap();
+        assert_eq!(q.depth(), 1);
+        let batch = q.drain_batch(4, Duration::ZERO).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].req_id.as_deref(), Some("a"));
+        assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
+    fn capacity_is_backpressure() {
+        let q = AdmissionQueue::new(2);
+        for tag in ["a", "b"] {
+            let (p, _rx) = pending(tag);
+            assert!(q.push(p).is_ok());
+        }
+        let (p, _rx) = pending("c");
+        match q.push(p) {
+            Err(PushError::Full(p)) => assert_eq!(p.req_id.as_deref(), Some("c")),
+            _ => panic!("expected Full"),
+        }
+    }
+
+    #[test]
+    fn closed_queue_refuses_but_drains() {
+        let q = AdmissionQueue::new(8);
+        let (p, _rx) = pending("a");
+        q.push(p).map_err(|_| ()).unwrap();
+        q.close();
+        let (p, _rx2) = pending("late");
+        assert!(matches!(q.push(p), Err(PushError::Closed(_))));
+        // pre-close work still drains, then None terminates the worker
+        assert_eq!(q.drain_batch(4, Duration::ZERO).unwrap().len(), 1);
+        assert!(q.drain_batch(4, Duration::ZERO).is_none());
+    }
+
+    #[test]
+    fn window_coalesces_staggered_pushes() {
+        let q = Arc::new(AdmissionQueue::new(32));
+        let producer = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                for tag in ["a", "b", "c"] {
+                    let (p, rx) = pending(tag);
+                    std::mem::forget(rx); // keep channel alive for the test
+                    q.push(p).map_err(|_| ()).unwrap();
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            })
+        };
+        let batch = q.drain_batch(16, Duration::from_millis(500)).unwrap();
+        producer.join().unwrap();
+        assert_eq!(batch.len(), 3, "window must coalesce all three");
+    }
+
+    #[test]
+    fn full_batch_short_circuits_window() {
+        let q = AdmissionQueue::new(32);
+        for tag in ["a", "b", "c", "d"] {
+            let (p, rx) = pending(tag);
+            std::mem::forget(rx);
+            q.push(p).map_err(|_| ()).unwrap();
+        }
+        let t = Instant::now();
+        let batch = q.drain_batch(2, Duration::from_secs(5)).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert!(t.elapsed() < Duration::from_secs(2), "must not sit out the window");
+        assert_eq!(q.depth(), 2, "rest stays queued for the next batch");
+    }
+}

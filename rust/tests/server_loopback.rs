@@ -1,0 +1,234 @@
+//! Loopback integration tests for the resident search service: the
+//! daemon and the protocol client talk over real sockets in-process.
+//!
+//! The load-bearing assertions: every client's hits are bit-identical to
+//! a standalone offline search of its query, and under concurrent load
+//! the coalescer actually forms cross-request batches (size > 1, read
+//! off the batch-size histogram).
+
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::{Arc, Barrier};
+use std::thread;
+
+use swaphi::align::{EngineKind, Precision};
+use swaphi::coordinator::{NativeFactory, SearchConfig, SearchSession};
+use swaphi::db::chunk::ChunkPlanConfig;
+use swaphi::db::index::Index;
+use swaphi::db::synth::{generate, generate_query, SynthSpec};
+use swaphi::matrices::Scoring;
+use swaphi::server::client::{self, Client};
+use swaphi::server::{protocol, Server, ServerConfig, ServerHandle};
+use swaphi::util::json::Json;
+
+fn search_cfg() -> SearchConfig {
+    SearchConfig {
+        devices: 2,
+        chunk: ChunkPlanConfig { target_padded_residues: 4096 },
+        top_k: 5,
+        precision: Precision::default(),
+        sim: None,
+    }
+}
+
+fn tcp_cfg(window_ms: u64) -> ServerConfig {
+    ServerConfig {
+        listen: "127.0.0.1:0".to_string(), // ephemeral port per test
+        batch_window_ms: window_ms,
+        ..Default::default()
+    }
+}
+
+fn start_server(
+    n_seqs: usize,
+    seed: u64,
+    server_cfg: ServerConfig,
+) -> (ServerHandle, Arc<Index>, Scoring) {
+    let index = Arc::new(Index::build(generate(&SynthSpec::tiny(n_seqs, seed))));
+    let scoring = Scoring::swaphi_default();
+    let handle = Server {
+        index: Arc::clone(&index),
+        scoring: scoring.clone(),
+        search: search_cfg(),
+        server: server_cfg,
+        factory: Arc::new(NativeFactory(EngineKind::InterSP)),
+    }
+    .start()
+    .unwrap();
+    (handle, index, scoring)
+}
+
+/// Residue letters for a synthetic query (what a client would send).
+fn query_letters(len: usize, seed: u64) -> String {
+    String::from_utf8(swaphi::alphabet::decode(&generate_query(len, seed))).unwrap()
+}
+
+/// What a one-shot `search` of this query reports: the oracle the
+/// served results must match bit-for-bit.
+fn offline_hits(
+    index: &Index,
+    scoring: &Scoring,
+    id: &str,
+    letters: &str,
+) -> Vec<(String, usize, i32)> {
+    let codes = swaphi::alphabet::encode(letters.as_bytes());
+    let session = SearchSession::new(index, scoring.clone(), search_cfg());
+    let res = session
+        .search_batch(&NativeFactory(EngineKind::InterSP), &[(id.to_string(), codes)])
+        .unwrap();
+    res[0].hits.iter().map(|h| (h.id.clone(), h.len, h.score)).collect()
+}
+
+fn payload_tuples(hits: &[protocol::HitPayload]) -> Vec<(String, usize, i32)> {
+    hits.iter().map(|h| (h.subject.clone(), h.len, h.score)).collect()
+}
+
+#[test]
+fn single_client_matches_offline_search() {
+    let (handle, index, scoring) = start_server(120, 3, tcp_cfg(0));
+    let q = query_letters(48, 11);
+    let mut c = Client::connect(&handle.connect_addr()).unwrap();
+    let resp = c.search("q1", &q, None, None).unwrap();
+    assert!(client::is_ok(&resp), "{resp}");
+    assert_eq!(resp.get("cached"), Some(&Json::Bool(false)));
+    assert_eq!(resp.str_field("query_id").unwrap(), "q1");
+    let got = payload_tuples(&client::hits_of(&resp).unwrap());
+    assert_eq!(got, offline_hits(&index, &scoring, "q1", &q));
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn concurrent_clients_coalesce_and_stay_bit_identical() {
+    const N: usize = 10; // ≥ 8 concurrent clients per the acceptance bar
+    let cfg = ServerConfig {
+        batch_window_ms: 250,
+        max_batch: 16,
+        ..tcp_cfg(0)
+    };
+    let (handle, index, scoring) = start_server(150, 5, cfg);
+    let addr = handle.connect_addr();
+
+    let barrier = Arc::new(Barrier::new(N));
+    let joins: Vec<_> = (0..N)
+        .map(|i| {
+            let addr = addr.clone();
+            let barrier = Arc::clone(&barrier);
+            thread::spawn(move || {
+                // distinct query per client (distinct lengths ⇒ no dedup)
+                let q = query_letters(30 + 3 * i, 100 + i as u64);
+                let mut c = Client::connect(&addr).unwrap();
+                barrier.wait(); // fire all requests at once
+                let resp = c.search(&format!("q{i}"), &q, None, None).unwrap();
+                (q, resp)
+            })
+        })
+        .collect();
+    let outcomes: Vec<(String, Json)> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+
+    for (i, (q, resp)) in outcomes.iter().enumerate() {
+        assert!(client::is_ok(resp), "client {i}: {resp}");
+        let got = payload_tuples(&client::hits_of(resp).unwrap());
+        let expect = offline_hits(&index, &scoring, &format!("q{i}"), q);
+        assert_eq!(got, expect, "client {i}: served hits must equal a standalone search");
+    }
+
+    // the acceptance probe: cross-request batches really formed...
+    assert!(
+        handle.metrics().max_batch_size() > 1,
+        "coalescer only ever formed singleton batches"
+    );
+    // ...and the protocol's stats op reports the same histogram
+    let mut c = Client::connect(&addr).unwrap();
+    let stats = c.stats().unwrap();
+    assert!(client::is_ok(&stats), "{stats}");
+    let bs = stats.get("stats").unwrap().get("batch_size").unwrap();
+    assert!(bs.get("max").unwrap().as_f64().unwrap() > 1.0, "{stats}");
+    assert!(
+        stats.get("stats").unwrap().get("admitted").unwrap().as_f64().unwrap() >= N as f64,
+        "{stats}"
+    );
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn malformed_requests_get_structured_errors() {
+    let (handle, _index, _scoring) = start_server(40, 7, tcp_cfg(0));
+    let mut c = Client::connect(&handle.connect_addr()).unwrap();
+    for (line, code) in [
+        ("this is not json", "bad_request"),
+        (r#"{"op":"search","query":"MKT"}"#, "bad_request"), // missing v
+        (r#"{"v":2,"op":"ping"}"#, "unsupported_version"),
+        (r#"{"v":1,"op":"search"}"#, "bad_request"), // missing query
+        (r#"{"v":1,"op":"search","query":""}"#, "bad_request"),
+        (r#"{"v":1,"op":"nope"}"#, "bad_request"),
+    ] {
+        let resp = c.request_line(line).unwrap();
+        assert!(!client::is_ok(&resp), "{line} should fail");
+        let (got, msg) = client::error_of(&resp);
+        assert_eq!(got, code, "{line} -> {msg}");
+    }
+    // a malformed request must not poison the connection
+    assert!(client::is_ok(&c.ping().unwrap()));
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn cache_hit_returns_identical_payload() {
+    let (handle, _index, _scoring) = start_server(100, 9, tcp_cfg(0));
+    let q = query_letters(40, 21);
+    let mut c1 = Client::connect(&handle.connect_addr()).unwrap();
+    let first = c1.search("q", &q, None, None).unwrap();
+    assert!(client::is_ok(&first), "{first}");
+    assert_eq!(first.get("cached"), Some(&Json::Bool(false)));
+
+    // the cache is server-wide: hit from a different connection
+    let mut c2 = Client::connect(&handle.connect_addr()).unwrap();
+    let second = c2.search("q", &q, None, None).unwrap();
+    assert_eq!(second.get("cached"), Some(&Json::Bool(true)));
+    assert_eq!(first.get("hits"), second.get("hits"), "cached payload must be identical");
+    assert_eq!(handle.metrics().cache_hits.load(Relaxed), 1);
+
+    // per-request top_k truncates the same cached entry
+    let third = c2.search("q", &q, Some(2), None).unwrap();
+    assert_eq!(third.get("cached"), Some(&Json::Bool(true)));
+    let full = client::hits_of(&first).unwrap();
+    let short = client::hits_of(&third).unwrap();
+    assert_eq!(short.len(), full.len().min(2));
+    assert_eq!(short[..], full[..short.len()]);
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn unix_socket_roundtrip_and_cleanup() {
+    let path = std::env::temp_dir().join(format!("swaphi-loopback-{}.sock", std::process::id()));
+    let cfg = ServerConfig {
+        listen: format!("unix:{}", path.display()),
+        batch_window_ms: 0,
+        ..Default::default()
+    };
+    let (handle, index, scoring) = start_server(60, 13, cfg);
+    let q = query_letters(25, 2);
+    let mut c = Client::connect(&handle.connect_addr()).unwrap();
+    assert!(client::is_ok(&c.ping().unwrap()));
+    let resp = c.search("uq", &q, None, None).unwrap();
+    assert!(client::is_ok(&resp), "{resp}");
+    assert_eq!(
+        payload_tuples(&client::hits_of(&resp).unwrap()),
+        offline_hits(&index, &scoring, "uq", &q)
+    );
+    handle.shutdown().unwrap();
+    assert!(!path.exists(), "socket file must be removed on graceful shutdown");
+}
+
+#[test]
+fn expired_deadline_is_refused_not_searched() {
+    // the coalescing window (300 ms) guarantees the 1 ms deadline has
+    // passed by the time the batch is drained
+    let cfg = ServerConfig { batch_window_ms: 300, ..tcp_cfg(0) };
+    let (handle, _index, _scoring) = start_server(50, 17, cfg);
+    let mut c = Client::connect(&handle.connect_addr()).unwrap();
+    let resp = c.search("q", &query_letters(20, 1), None, Some(1)).unwrap();
+    assert!(!client::is_ok(&resp));
+    assert_eq!(client::error_of(&resp).0, "deadline_exceeded");
+    assert_eq!(handle.metrics().expired.load(Relaxed), 1);
+    handle.shutdown().unwrap();
+}

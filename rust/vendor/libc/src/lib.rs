@@ -1,7 +1,8 @@
 //! Vendored minimal `libc` surface — exactly the items `db::format`'s
-//! read-only mmap needs on 64-bit Linux, declared directly against the
-//! system C library so the build needs no registry access. Swapping back
-//! to the real `libc` crate is a one-line Cargo.toml change.
+//! read-only mmap and `server`'s signal-driven graceful shutdown need on
+//! 64-bit Linux, declared directly against the system C library so the
+//! build needs no registry access. Swapping back to the real `libc`
+//! crate is a one-line Cargo.toml change.
 
 #![allow(non_camel_case_types)]
 
@@ -18,6 +19,15 @@ pub const MAP_PRIVATE: c_int = 2;
 /// `MAP_FAILED` — `(void *) -1`.
 pub const MAP_FAILED: *mut c_void = -1isize as *mut c_void;
 
+/// `SIGINT` (Linux).
+pub const SIGINT: c_int = 2;
+/// `SIGTERM` (Linux).
+pub const SIGTERM: c_int = 15;
+
+/// Signal handler: an `extern "C"` function taking the signal number.
+/// (The `SIG_DFL`/`SIG_IGN` sentinel values are not needed here.)
+pub type sighandler_t = extern "C" fn(c_int);
+
 extern "C" {
     pub fn mmap(
         addr: *mut c_void,
@@ -28,4 +38,6 @@ extern "C" {
         offset: off_t,
     ) -> *mut c_void;
     pub fn munmap(addr: *mut c_void, len: size_t) -> c_int;
+    /// `signal(2)` — returns the previous disposition (opaque here).
+    pub fn signal(signum: c_int, handler: sighandler_t) -> size_t;
 }
