@@ -1,0 +1,145 @@
+#!/usr/bin/env python3
+"""Bench regression gate: compare BENCH_*.json against ci/bench-baseline.json.
+
+Usage:
+    python3 ci/check_bench.py [--baseline ci/bench-baseline.json] [--update] FILE...
+
+Each FILE is a bench-emitted JSON artifact (BENCH_batch.json,
+BENCH_scaling.json). The baseline maps, per artifact basename, dotted
+metric paths to an entry:
+
+    {"baseline": <number|null>, "min": <number|null>, "note": "..."}
+
+Rules (all metrics are higher-is-better):
+  * "min" is an absolute floor — current < min fails regardless of
+    baseline (e.g. the paper's >= 1.6x scaling at 4 devices).
+  * "baseline" non-null: current < (1 - tolerance) * baseline fails
+    (default tolerance 0.25, the >25%-regression gate).
+  * "baseline" null: recorded only — printed with a hint to seed it via
+    --update once a trusted runner has produced it. Wall-clock-derived
+    metrics (native GCUPS) start null because they are machine-specific;
+    simulator-derived metrics are deterministic and gate from day one.
+  * a "workload" entry pins preset/n_seqs/qlen: if the current artifact
+    was produced with a different workload the comparison is refused
+    (apples-to-apples guard), exit 2.
+
+--update rewrites the baseline's "baseline" values (and workload pins)
+from the current artifacts, keeping floors and notes. Commit the result
+to advance the trajectory.
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def dig(obj, dotted):
+    cur = obj
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="ci/bench-baseline.json")
+    ap.add_argument("--tolerance", type=float, default=None,
+                    help="override the baseline file's tolerance")
+    ap.add_argument("--update", action="store_true")
+    ap.add_argument("files", nargs="+")
+    args = ap.parse_args()
+
+    baseline_path = Path(args.baseline)
+    baseline = json.loads(baseline_path.read_text())
+    tolerance = args.tolerance if args.tolerance is not None else baseline.get("tolerance", 0.25)
+
+    failures = []
+    # subset of failures that must also block --update (missing metrics,
+    # absolute-floor violations) — regressions vs the old baseline don't,
+    # since reseeding after an accepted shift is what --update is for
+    update_blockers = []
+    unseeded = []
+    updated = False
+    for f in args.files:
+        name = Path(f).name
+        spec = baseline.get("benches", {}).get(name)
+        if spec is None:
+            print(f"{name}: no baseline entry — skipping")
+            continue
+        current = json.loads(Path(f).read_text())
+
+        pins = spec.get("workload", {})
+        for key, want in list(pins.items()):
+            got = dig(current, key)
+            if args.update:
+                pins[key] = got
+            elif got != want:
+                print(f"{name}: workload mismatch: {key} = {got!r}, baseline pins {want!r}")
+                print("  refusing to compare different workloads "
+                      "(set SWAPHI_BENCH_* to match, or --update the baseline)")
+                sys.exit(2)
+
+        for path, entry in spec.get("metrics", {}).items():
+            value = dig(current, path)
+            if value is None:
+                msg = f"{name}: metric {path} missing from artifact"
+                failures.append(msg)
+                update_blockers.append(msg)
+                continue
+            floor = entry.get("min")
+            base = entry.get("baseline")
+            failed = []
+            if floor is not None and value < floor:
+                failed.append("FAIL(floor)")
+                msg = f"{name}: {path} = {value:.3f} below absolute floor {floor}"
+                failures.append(msg)
+                update_blockers.append(msg)
+            if base is not None and value < (1.0 - tolerance) * base:
+                failed.append("FAIL(regression)")
+                failures.append(
+                    f"{name}: {path} = {value:.3f} regressed >"
+                    f"{tolerance * 100:.0f}% from baseline {base:.3f}")
+            if failed:
+                against = f"vs baseline {base:.3f}" if base is not None else "no baseline"
+                status = f"{'+'.join(failed)}  ({value:.3f} {against})"
+            elif base is None:
+                unseeded.append(f"{name}: {path} = {value:.3f}")
+                status = f"recorded (no baseline yet)  ({value:.3f})"
+            else:
+                ratio = value / base if base else float("inf")
+                status = f"ok  ({value:.3f} vs baseline {base:.3f}, {ratio:.2f}x)"
+            print(f"  {name}: {path}: {status}")
+            if args.update:
+                entry["baseline"] = value
+                updated = True
+
+    if args.update:
+        if update_blockers:
+            # a metric path missing from an artifact (or a floor
+            # violation): reseeding must not paper over it
+            print("\nupdate aborted — fix these before reseeding:")
+            for line in update_blockers:
+                print(f"  {line}")
+            sys.exit(1)
+        baseline_path.write_text(json.dumps(baseline, indent=2) + "\n")
+        print(f"\nupdated {baseline_path}" if updated else "\nnothing to update")
+        return
+
+    if unseeded:
+        print("\nunseeded metrics (machine-specific; run with --update on a "
+              "trusted runner and commit the baseline to start gating them):")
+        for line in unseeded:
+            print(f"  {line}")
+    if failures:
+        print("\nBENCH REGRESSION GATE FAILED:")
+        for line in failures:
+            print(f"  {line}")
+        sys.exit(1)
+    print("\nbench regression gate: green")
+
+
+if __name__ == "__main__":
+    main()

@@ -28,6 +28,7 @@ fn main() -> anyhow::Result<()> {
         chunk: ChunkPlanConfig { target_padded_residues: 1 << 16 },
         top_k: 5,
         sim: Some(SimConfig { devices: 4, replication: 400, ..Default::default() }),
+        ..Default::default()
     };
     let coord = Coordinator::new(&index, scoring, config);
     println!("chunk plan: {} chunks, 4 host threads\n", coord.n_chunks());

@@ -19,13 +19,25 @@ use swaphi::matrices::Scoring;
 use swaphi::metrics::RescoreStats;
 
 fn main() {
-    let idx = Index::build(generate(&SynthSpec::swissprot_mini(3000, 2014)));
+    // CI runs the same harness on a smaller preset (SWAPHI_BENCH_PRESET /
+    // SWAPHI_BENCH_N) so the regression gate stays fast; the JSON records
+    // the workload so baselines are only compared like-for-like.
+    let preset =
+        std::env::var("SWAPHI_BENCH_PRESET").unwrap_or_else(|_| "swissprot-mini".to_string());
+    let n_seqs: usize = std::env::var("SWAPHI_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3000);
+    let spec = SynthSpec::by_name(&preset, n_seqs, 2014)
+        .unwrap_or_else(|| panic!("unknown SWAPHI_BENCH_PRESET {preset:?}"));
+    let preset = spec.name; // canonical spelling: what actually ran
+    let idx = Index::build(generate(&spec));
     let sc = Scoring::swaphi_default();
     let queries = Workload::query_batch(8, &[96, 192, 384, 576], 7);
     let total_qlen: usize = queries.iter().map(|(_, q)| q.len()).sum();
     let cells = total_qlen as u128 * idx.total_residues;
     println!(
-        "workload: {} sequences ({} residues), {} queries ({} residues), {:.2} G cells/batch",
+        "workload: {preset} x {} sequences ({} residues), {} queries ({} residues), {:.2} G cells/batch",
         idx.n_seqs(),
         idx.total_residues,
         queries.len(),
@@ -39,7 +51,8 @@ fn main() {
     );
     let mut json = String::from("{\n  \"bench\": \"batch_pipeline\",\n");
     json.push_str(&format!(
-        "  \"queries\": {},\n  \"cells\": {},\n  \"engines\": {{\n",
+        "  \"preset\": \"{preset}\",\n  \"n_seqs\": {},\n  \"queries\": {},\n  \"cells\": {},\n  \"engines\": {{\n",
+        idx.n_seqs(),
         queries.len(),
         cells
     ));

@@ -1,0 +1,143 @@
+//! multi_device_scaling — the paper's scale-out story (Fig 6 mechanism,
+//! 58.8 GCUPS on one Xeon Phi → 228.4 on four) as a tracked artifact.
+//!
+//! For 1/2/4 simulated coprocessors the harness partitions the chunk plan
+//! into length-balanced per-device shards ([`partition_chunks`]), runs
+//! the **sharded + work-stealing** discrete-event simulation
+//! ([`simulate_sharded_search`] — the same queue discipline the real
+//! `DeviceSet` execution layer uses), and reports paper-comparable
+//! simulated GCUPS plus the speedup over one device. A real
+//! `SearchSession` then executes the same device counts natively on the
+//! sample index so the execution layer itself (queues, stealing,
+//! scatter–gather) is exercised end to end; native GCUPS is recorded for
+//! trajectory only (it depends on the host's core count).
+//!
+//! Emits `BENCH_scaling.json` (consumed by `ci/check_bench.py`, which
+//! gates the simulated GCUPS against `ci/bench-baseline.json` and
+//! enforces ≥ 1.6× at 4 devices). `SWAPHI_BENCH_PRESET` /
+//! `SWAPHI_BENCH_N` / `SWAPHI_BENCH_QLEN` shrink the workload for CI.
+
+use swaphi::align::EngineKind;
+use swaphi::bench::workloads::{Workload, TREMBL_RESIDUES};
+use swaphi::bench::{f1, f2, Table};
+use swaphi::coordinator::{NativeFactory, SearchConfig, SearchSession};
+use swaphi::db::chunk::{partition_chunks, ChunkPlanConfig};
+use swaphi::db::synth::SynthSpec;
+use swaphi::matrices::Scoring;
+use swaphi::phi::sim::simulate_sharded_search;
+use swaphi::util::gcups;
+
+const DEVICE_COUNTS: [usize; 3] = [1, 2, 4];
+
+fn main() {
+    let preset =
+        std::env::var("SWAPHI_BENCH_PRESET").unwrap_or_else(|_| "trembl-mini".to_string());
+    let n_seqs: usize = std::env::var("SWAPHI_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2000);
+    let qlen: usize = std::env::var("SWAPHI_BENCH_QLEN")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1000);
+    let spec = SynthSpec::by_name(&preset, n_seqs, 2014)
+        .unwrap_or_else(|| panic!("unknown SWAPHI_BENCH_PRESET {preset:?}"));
+    let preset = spec.name; // canonical spelling: what actually ran
+    // TrEMBL-scale virtual corpus over the sampled length distribution,
+    // exactly like the Fig 6 harness
+    let w = Workload::build(&spec, TREMBL_RESIDUES, 1 << 29);
+    println!(
+        "workload: {preset} x {} sequences ({} residues, x{} replication = {:.2} G virtual), \
+         {} chunks, query length {qlen}",
+        w.index.n_seqs(),
+        w.index.total_residues,
+        w.replication,
+        w.virtual_residues as f64 / 1e9,
+        w.chunks.len(),
+    );
+
+    let mut table = Table::new(
+        "multi_device_scaling: sharded devices + work stealing (InterSP)",
+        &["devices", "sim_GCUPS", "speedup", "stolen_chunks", "native_GCUPS"],
+    );
+    let sc = Scoring::swaphi_default();
+    let native_queries = Workload::query_batch(4, &[64, 128, 192, 256], 7);
+    let native_cells: u128 =
+        native_queries.iter().map(|(_, q)| q.len() as u128).sum::<u128>() * w.index.total_residues;
+
+    let mut base_makespan = 0.0f64;
+    let mut entries = Vec::new();
+    for (i, &devices) in DEVICE_COUNTS.iter().enumerate() {
+        let shards = partition_chunks(&w.chunks, devices);
+        let r = simulate_sharded_search(
+            &w.index,
+            &w.chunks,
+            &shards,
+            EngineKind::InterSP,
+            qlen,
+            w.sim_config(devices),
+            true,
+        );
+        if i == 0 {
+            base_makespan = r.makespan;
+        }
+        let speedup = base_makespan / r.makespan;
+        let stolen: usize = r.stolen_chunks.iter().sum();
+        let sim_gcups = r.gcups();
+
+        // real execution of the same fleet shape: the sharded session
+        // with its work queues and stealing, on the sample index
+        let session = SearchSession::new(
+            &w.index,
+            sc.clone(),
+            SearchConfig {
+                devices,
+                sim: None,
+                chunk: ChunkPlanConfig { target_padded_residues: 1 << 16 },
+                ..Default::default()
+            },
+        );
+        let t = std::time::Instant::now();
+        let out = session
+            .search_batch(&NativeFactory(EngineKind::InterSP), &native_queries)
+            .expect("native sharded batch");
+        let native_secs = t.elapsed().as_secs_f64();
+        assert_eq!(out.len(), native_queries.len());
+        let snaps = session.device_snapshots();
+        let native_executed: u64 = snaps.iter().map(|d| d.executed).sum();
+        assert_eq!(
+            native_executed,
+            (native_queries.len() * session.n_chunks()) as u64,
+            "fleet must execute every (query, chunk) item exactly once"
+        );
+        let native_gcups = gcups(native_cells, native_secs);
+
+        table.row(&[
+            devices.to_string(),
+            f1(sim_gcups),
+            f2(speedup),
+            stolen.to_string(),
+            f1(native_gcups),
+        ]);
+        entries.push(format!(
+            "    \"{devices}\": {{\"sim_gcups\": {sim_gcups:.3}, \"makespan_s\": {:.6}, \
+             \"speedup\": {speedup:.3}, \"stolen_chunks\": {stolen}, \
+             \"native_gcups\": {native_gcups:.3}}}",
+            r.makespan
+        ));
+    }
+
+    table.emit("multi_device_scaling");
+    let json = format!(
+        "{{\n  \"bench\": \"multi_device_scaling\",\n  \"preset\": \"{preset}\",\n  \
+         \"n_seqs\": {},\n  \"qlen\": {qlen},\n  \"chunks\": {},\n  \"replication\": {},\n  \
+         \"devices\": {{\n{}\n  }}\n}}\n",
+        w.index.n_seqs(),
+        w.chunks.len(),
+        w.replication,
+        entries.join(",\n")
+    );
+    if std::fs::write("BENCH_scaling.json", &json).is_ok() {
+        println!("\nwrote BENCH_scaling.json");
+    }
+}

@@ -12,13 +12,7 @@ use crate::fasta;
 use crate::phi::calibration;
 
 fn preset(name: &str, n: usize, seed: u64) -> anyhow::Result<SynthSpec> {
-    Ok(match name {
-        "trembl-mini" => SynthSpec::trembl_mini(n, seed),
-        "swissprot-mini" => SynthSpec::swissprot_mini(n, seed),
-        "swissprot-reduced" => SynthSpec::swissprot_reduced(n, seed),
-        "tiny" => SynthSpec::tiny(n, seed),
-        other => anyhow::bail!("unknown preset {other:?}"),
-    })
+    SynthSpec::by_name(name, n, seed).ok_or_else(|| anyhow::anyhow!("unknown preset {name:?}"))
 }
 
 pub fn cmd_synth(mut args: Args) -> anyhow::Result<i32> {
@@ -98,6 +92,9 @@ fn load_config(args: &mut Args) -> anyhow::Result<SwaphiConfig> {
     }
     if let Some(p) = args.take("precision") {
         raw.set("search.precision", &p)?;
+    }
+    if let Some(d) = args.take("devices") {
+        raw.set("devices.count", &d)?;
     }
     if let Some(dir) = args.take("artifacts") {
         raw.set("search.artifacts_dir", &dir)?;
@@ -194,6 +191,16 @@ pub fn cmd_search(mut args: Args) -> anyhow::Result<i32> {
             batch.rescore_fraction() * 100.0,
         )?;
     }
+    if cfg.devices > 1 {
+        writeln!(report, "\ndevice fleet (steal={}):", cfg.steal)?;
+        for d in session.device_snapshots() {
+            writeln!(
+                report,
+                "  device {}: shard {} chunks, executed {} items, stole {}, lost {}",
+                d.device, d.shard_chunks, d.executed, d.stolen, d.lost
+            )?;
+        }
+    }
     print!("{report}");
     Ok(0)
 }
@@ -226,12 +233,14 @@ pub fn cmd_serve(mut args: Args) -> anyhow::Result<i32> {
     .start()?;
 
     println!(
-        "swaphi serve: listening on {} (index {} seqs / {} residues, engine={} precision={} \
-         top_k={}, queue={} max_batch={} window={}ms cache={})",
+        "swaphi serve: listening on {} (index {} seqs / {} residues, engine={} devices={} \
+         steal={} precision={} top_k={}, queue={} max_batch={} window={}ms cache={})",
         handle.addr(),
         index.n_seqs(),
         index.total_residues,
         cfg.engine.name(),
+        cfg.devices,
+        cfg.steal,
         cfg.precision.name(),
         cfg.top_k,
         server_cfg.queue_capacity,
@@ -497,6 +506,39 @@ mod tests {
     #[test]
     fn devinfo_runs() {
         assert_eq!(run("devinfo").unwrap(), 0);
+    }
+
+    #[test]
+    fn search_devices_flag_runs_sharded() {
+        let fasta = tmp("db3.fasta");
+        let idx = tmp("db3.idx");
+        let qf = tmp("q3.fasta");
+        assert_eq!(
+            run(&format!("synth --preset tiny --n 40 --seed 4 --out {fasta}")).unwrap(),
+            0
+        );
+        assert_eq!(run(&format!("index --in {fasta} --out {idx}")).unwrap(), 0);
+        std::fs::write(&qf, ">q1\nMKTAYIAKQRQISFVKSHFSRQLEERLGLIEVQ\n").unwrap();
+        assert_eq!(
+            run(&format!(
+                "search --index {idx} --query {qf} --devices 2 --set sim.enabled=false"
+            ))
+            .unwrap(),
+            0
+        );
+        // stealing can be disabled via the [devices] section
+        assert_eq!(
+            run(&format!(
+                "search --index {idx} --query {qf} --devices 3 \
+                 --set devices.steal=false --set sim.enabled=false"
+            ))
+            .unwrap(),
+            0
+        );
+        assert!(run(&format!("search --index {idx} --query {qf} --devices nope")).is_err());
+        for f in [fasta, idx, qf] {
+            let _ = std::fs::remove_file(f);
+        }
     }
 
     #[test]

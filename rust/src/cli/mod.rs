@@ -74,6 +74,10 @@ COMMANDS:
               --index <idx>  --query <fasta>
               [--config <toml>]  [--set section.key=value]...
               [--backend native|pjrt]  [--artifacts <dir>]
+              [--devices <n>]   simulated coprocessors: the chunk plan is
+                length-balanced into per-device shards, each device drains
+                its own work queue and steals stragglers' tails
+                (--set devices.steal=false pins work to its shard)
               [--precision auto|i16|i32]   score-lane tier (auto: narrow
                 32-lane i16 when provably exact; i16: force narrow,
                 saturated lanes rescored at i32; i32: full precision)
@@ -82,7 +86,7 @@ COMMANDS:
             batches, cache repeat queries (line-delimited JSON protocol,
             docs/protocol.md); SIGINT/SIGTERM drain gracefully
               --index <idx>  [--listen 127.0.0.1:7878 | unix:/path]
-              [--config <toml>]  [--set server.max_batch=32]...
+              [--devices <n>]  [--config <toml>]  [--set server.max_batch=32]...
               e.g.  swaphi serve --index db.idx --listen 127.0.0.1:7878
   query     client for a running `serve` daemon; each FASTA record is one
             request on one connection

@@ -15,10 +15,14 @@
 //! engine = "intersp"      # intersp | interqp | intraqp | scalar
 //! backend = "native"      # native | pjrt
 //! precision = "auto"      # auto | i16 | i32 (score-lane tier)
-//! devices = 4
+//! devices = 4             # legacy spelling of devices.count
 //! policy = "guided"       # static | dynamic | guided | auto
 //! top_k = 10
 //! chunk_residues = 524288
+//!
+//! [devices]
+//! count = 4               # simulated coprocessors (wins over search.devices)
+//! steal = true            # work stealing between device queues
 //!
 //! [sim]
 //! enabled = true
@@ -204,6 +208,8 @@ pub const KNOWN_KEYS: &[&str] = &[
     "search.chunk_residues",
     "search.artifacts_dir",
     "search.precision",
+    "devices.count",
+    "devices.steal",
     "sim.enabled",
     "sim.threads_per_device",
     "sim.replication",
@@ -228,6 +234,7 @@ pub struct SwaphiConfig {
     pub backend: String,
     pub artifacts_dir: String,
     pub devices: usize,
+    pub steal: bool,
     pub policy: Policy,
     pub top_k: usize,
     pub precision: Precision,
@@ -264,7 +271,13 @@ impl SwaphiConfig {
                 .ok_or_else(|| anyhow::anyhow!("unknown engine {engine_s:?}"))?,
             backend: raw.str_or("search.backend", "native")?,
             artifacts_dir: raw.str_or("search.artifacts_dir", "artifacts")?,
-            devices: raw.int_or("search.devices", 1)?.max(1) as usize,
+            // devices.count is authoritative; search.devices is the
+            // legacy spelling kept as its default
+            devices: {
+                let legacy = raw.int_or("search.devices", 1)?;
+                raw.int_or("devices.count", legacy)?.max(1) as usize
+            },
+            steal: raw.bool_or("devices.steal", true)?,
             policy: Policy::parse(&policy_s)
                 .ok_or_else(|| anyhow::anyhow!("unknown policy {policy_s:?}"))?,
             top_k: raw.int_or("search.top_k", 10)?.max(1) as usize,
@@ -312,6 +325,7 @@ impl SwaphiConfig {
     pub fn search_config(&self) -> SearchConfig {
         SearchConfig {
             devices: self.devices,
+            steal: self.steal,
             chunk: ChunkPlanConfig { target_padded_residues: self.chunk_residues },
             top_k: self.top_k,
             precision: self.precision,
@@ -382,6 +396,32 @@ mod tests {
         assert_eq!(cfg.engine, EngineKind::IntraQP);
         assert_eq!(cfg.devices, 4);
         assert_eq!(cfg.scoring.name, "PAM250");
+    }
+
+    #[test]
+    fn devices_section_wins_over_legacy_and_steal_parses() {
+        let cfg = SwaphiConfig::default_config();
+        assert_eq!(cfg.devices, 1);
+        assert!(cfg.steal, "stealing defaults on");
+        assert!(cfg.search_config().steal);
+
+        let mut raw = RawConfig::default();
+        raw.set("search.devices", "2").unwrap();
+        let cfg = SwaphiConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.devices, 2, "legacy key still works alone");
+        raw.set("devices.count", "4").unwrap();
+        raw.set("devices.steal", "false").unwrap();
+        let cfg = SwaphiConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.devices, 4, "devices.count is authoritative");
+        assert!(!cfg.steal);
+        let sc = cfg.search_config();
+        assert_eq!(sc.devices, 4);
+        assert!(!sc.steal);
+
+        let parsed = RawConfig::parse("[devices]\ncount = 3\nsteal = true\n").unwrap();
+        let cfg = SwaphiConfig::from_raw(&parsed).unwrap();
+        assert_eq!(cfg.devices, 3);
+        assert!(cfg.steal);
     }
 
     #[test]

@@ -1,0 +1,416 @@
+//! The multi-device execution layer: per-device work queues over
+//! length-balanced chunk shards, with work stealing for the straggler
+//! tail.
+//!
+//! The paper scales from one Xeon Phi (58.8 GCUPS) to four (228.4) by
+//! giving every coprocessor its own host thread and its own pool of
+//! workloads. This module is that layer for the simulated fleet:
+//!
+//! * a [`DeviceSet`] statically partitions the session's chunk plan into
+//!   per-device shards ([`partition_chunks`], greedy LPT on padded
+//!   residues), so each device streams *its own* contiguous slice of the
+//!   database — the scatter half;
+//! * per batch, [`DeviceSet::queues`] materializes one work queue per
+//!   device holding that device's `(query, chunk)` items; a device drains
+//!   its own queue front-first and, when empty, **steals from the back of
+//!   the deepest other queue** — the dynamic tail balancing that keeps a
+//!   straggler device from serializing the batch;
+//! * the gather half stays in the coordinator: per-thread [`ScoreSink`]
+//!   shards merge once at the barrier, and because sinks are
+//!   order-independent the merged result is byte-identical to the
+//!   single-device path no matter how items were stolen.
+//!
+//! The set also owns the fleet's observability: cumulative per-device
+//! executed/stolen/lost counters plus queue-depth gauges (surfaced by
+//! `swaphi query --stats` and the CLI batch report), and per-batch
+//! items/steals histograms summarized through the one
+//! [`Histogram::summary`] path the server already uses.
+//!
+//! [`ScoreSink`]: crate::coordinator::results::ScoreSink
+
+use crate::db::chunk::{partition_chunks, Chunk};
+use crate::metrics::{Histogram, HistogramSummary};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// One unit of schedulable work: score `chunk` for `query` (both indices
+/// into the session's context / chunk-plan vectors).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkItem {
+    pub query: usize,
+    pub chunk: usize,
+}
+
+/// Cumulative per-device counters (survive across batches — the daemon
+/// reports them over its whole lifetime).
+#[derive(Default)]
+struct DeviceCounters {
+    /// Work items this device ran (own + stolen).
+    executed: AtomicU64,
+    /// Items this device stole from another device's queue.
+    stolen: AtomicU64,
+    /// Items other devices stole from this device's queue.
+    lost: AtomicU64,
+    /// Current queue depth (gauge; 0 between batches).
+    depth: AtomicUsize,
+}
+
+/// Point-in-time view of one device (for stats endpoints and reports).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DeviceSnapshot {
+    pub device: usize,
+    /// Chunks of the static shard this device owns.
+    pub shard_chunks: usize,
+    pub executed: u64,
+    pub stolen: u64,
+    pub lost: u64,
+    pub queue_depth: usize,
+}
+
+/// A fleet of simulated coprocessors bound to one chunk plan: the static
+/// shard assignment, the per-device counters, and the per-batch
+/// histograms. Shared between a `SearchSession` and anything that wants
+/// to observe it (the server's stats endpoint).
+pub struct DeviceSet {
+    shards: Vec<Vec<usize>>,
+    n_chunks: usize,
+    steal: bool,
+    counters: Vec<DeviceCounters>,
+    batches: AtomicU64,
+    /// Work items executed per device per batch.
+    items_per_batch: Mutex<Histogram>,
+    /// Steals per device per batch.
+    steals_per_batch: Mutex<Histogram>,
+}
+
+impl DeviceSet {
+    /// Partition `chunks` across `devices` shards (length-balanced).
+    /// `steal` enables run-time work stealing between device queues.
+    pub fn new(chunks: &[Chunk], devices: usize, steal: bool) -> DeviceSet {
+        let shards = partition_chunks(chunks, devices);
+        let counters = (0..shards.len()).map(|_| DeviceCounters::default()).collect();
+        DeviceSet {
+            shards,
+            n_chunks: chunks.len(),
+            steal,
+            counters,
+            batches: AtomicU64::new(0),
+            items_per_batch: Mutex::new(Histogram::exponential(1 << 20)),
+            steals_per_batch: Mutex::new(Histogram::exponential(1 << 20)),
+        }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total chunks of the plan this set was built for.
+    pub fn n_chunks(&self) -> usize {
+        self.n_chunks
+    }
+
+    pub fn steal_enabled(&self) -> bool {
+        self.steal
+    }
+
+    /// The static chunk shard of each device (ascending chunk ids).
+    pub fn shards(&self) -> &[Vec<usize>] {
+        &self.shards
+    }
+
+    /// Batches scheduled through this set so far.
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    /// Materialize the per-device work queues for a batch of `n_queries`
+    /// queries: device `d`'s queue holds `(q, c)` for every query crossed
+    /// with every chunk of `d`'s shard, query-major so a device finishes
+    /// one query's contexts before moving on.
+    pub fn queues(&self, n_queries: usize) -> WorkQueues<'_> {
+        let queues: Vec<Mutex<VecDeque<WorkItem>>> = self
+            .shards
+            .iter()
+            .map(|shard| {
+                let mut q = VecDeque::with_capacity(shard.len() * n_queries);
+                for query in 0..n_queries {
+                    for &chunk in shard {
+                        q.push_back(WorkItem { query, chunk });
+                    }
+                }
+                Mutex::new(q)
+            })
+            .collect();
+        let mut depths = Vec::with_capacity(queues.len());
+        for (d, q) in queues.iter().enumerate() {
+            let len = q.lock().unwrap().len();
+            self.counters[d].depth.store(len, Ordering::Relaxed);
+            depths.push(AtomicUsize::new(len));
+        }
+        WorkQueues {
+            set: self,
+            queues,
+            depths,
+            batch_executed: (0..self.shards.len()).map(|_| AtomicU64::new(0)).collect(),
+            batch_steals: (0..self.shards.len()).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Per-device cumulative counters + live queue depths.
+    pub fn snapshot(&self) -> Vec<DeviceSnapshot> {
+        self.counters
+            .iter()
+            .enumerate()
+            .map(|(d, c)| DeviceSnapshot {
+                device: d,
+                shard_chunks: self.shards[d].len(),
+                executed: c.executed.load(Ordering::Relaxed),
+                stolen: c.stolen.load(Ordering::Relaxed),
+                lost: c.lost.load(Ordering::Relaxed),
+                queue_depth: c.depth.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+
+    /// Summary of work items executed per device per batch (reuses the
+    /// one [`Histogram::summary`] implementation).
+    pub fn items_summary(&self) -> HistogramSummary {
+        self.items_per_batch.lock().unwrap().summary()
+    }
+
+    /// Summary of steals per device per batch.
+    pub fn steals_summary(&self) -> HistogramSummary {
+        self.steals_per_batch.lock().unwrap().summary()
+    }
+}
+
+/// The per-batch work queues of a [`DeviceSet`] — one bounded deque per
+/// device, shared by the device host threads for the duration of one
+/// batch. All methods are `&self`; safe to use from scoped threads.
+pub struct WorkQueues<'a> {
+    set: &'a DeviceSet,
+    queues: Vec<Mutex<VecDeque<WorkItem>>>,
+    /// Per-batch queue depths — victim selection reads these (not the
+    /// set-level gauges) so concurrent batches on one shared
+    /// [`DeviceSet`] can never steer each other's thieves; the set-level
+    /// gauge is observability only.
+    depths: Vec<AtomicUsize>,
+    batch_executed: Vec<AtomicU64>,
+    batch_steals: Vec<AtomicU64>,
+}
+
+impl WorkQueues<'_> {
+    /// Next work item for device `dev`: front of its own queue, else (if
+    /// stealing is enabled) the back of the deepest other queue. Returns
+    /// `None` only when every queue is empty — i.e. the batch is done.
+    pub fn next(&self, dev: usize) -> Option<WorkItem> {
+        if let Some(item) = self.pop(dev, dev) {
+            return Some(item);
+        }
+        if !self.set.steal {
+            return None;
+        }
+        loop {
+            // victim: the deepest non-empty queue of another device
+            // (first maximum, so the scan is deterministic)
+            let mut victim = None;
+            let mut best = 0usize;
+            for (d, depth) in self.depths.iter().enumerate() {
+                if d == dev {
+                    continue;
+                }
+                let depth = depth.load(Ordering::Relaxed);
+                if depth > best {
+                    best = depth;
+                    victim = Some(d);
+                }
+            }
+            let v = victim?;
+            if let Some(item) = self.pop(dev, v) {
+                return Some(item);
+            }
+            // raced with another thief draining the victim between the
+            // depth read and the lock; depths only shrink, so rescanning
+            // terminates
+        }
+    }
+
+    /// Pop for `dev` from `from`'s queue: the owner takes the front, a
+    /// thief takes the back (the classic deque discipline — owners keep
+    /// locality, thieves take the work farthest from the owner's cursor).
+    fn pop(&self, dev: usize, from: usize) -> Option<WorkItem> {
+        let item = {
+            let mut q = self.queues[from].lock().unwrap();
+            let item = if dev == from { q.pop_front() } else { q.pop_back() };
+            self.depths[from].store(q.len(), Ordering::Relaxed);
+            self.set.counters[from].depth.store(q.len(), Ordering::Relaxed);
+            item
+        };
+        let item = item?;
+        self.set.counters[dev].executed.fetch_add(1, Ordering::Relaxed);
+        self.batch_executed[dev].fetch_add(1, Ordering::Relaxed);
+        if dev != from {
+            self.set.counters[dev].stolen.fetch_add(1, Ordering::Relaxed);
+            self.set.counters[from].lost.fetch_add(1, Ordering::Relaxed);
+            self.batch_steals[dev].fetch_add(1, Ordering::Relaxed);
+        }
+        Some(item)
+    }
+
+    /// Live depth of one device queue (this batch).
+    pub fn depth(&self, dev: usize) -> usize {
+        self.depths[dev].load(Ordering::Relaxed)
+    }
+
+    /// Fold this batch into the set's histograms (call once, after the
+    /// barrier).
+    pub fn finish(self) {
+        let mut items = self.set.items_per_batch.lock().unwrap();
+        let mut steals = self.set.steals_per_batch.lock().unwrap();
+        for d in 0..self.queues.len() {
+            items.record(self.batch_executed[d].load(Ordering::Relaxed));
+            steals.record(self.batch_steals[d].load(Ordering::Relaxed));
+        }
+        self.set.batches.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::chunk::{plan_chunks_paired, ChunkPlanConfig};
+    use crate::db::index::Index;
+    use crate::db::synth::{generate, SynthSpec};
+    use std::collections::BTreeSet;
+    use std::time::Duration;
+
+    fn chunks(n_seqs: usize, target: u128) -> Vec<Chunk> {
+        let idx = Index::build(generate(&SynthSpec::tiny(n_seqs, 11)));
+        plan_chunks_paired(&idx, ChunkPlanConfig { target_padded_residues: target })
+    }
+
+    #[test]
+    fn queues_cover_query_chunk_cross_product_once() {
+        let chunks = chunks(300, 2048);
+        let set = DeviceSet::new(&chunks, 3, true);
+        assert_eq!(set.n_devices(), 3);
+        assert_eq!(set.n_chunks(), chunks.len());
+        let nq = 4;
+        let queues = set.queues(nq);
+        let mut seen = BTreeSet::new();
+        for d in 0..3 {
+            // drain own queues only (no stealing interleave needed)
+            loop {
+                let item = queues.queues[d].lock().unwrap().pop_front();
+                let Some(item) = item else { break };
+                assert!(seen.insert((item.query, item.chunk)), "{item:?} twice");
+            }
+        }
+        assert_eq!(seen.len(), nq * chunks.len());
+    }
+
+    #[test]
+    fn next_drains_everything_without_steal() {
+        let chunks = chunks(200, 2048);
+        let set = DeviceSet::new(&chunks, 2, false);
+        let queues = set.queues(3);
+        let mut count = 0;
+        for d in 0..2 {
+            while queues.next(d).is_some() {
+                count += 1;
+            }
+        }
+        assert_eq!(count, 3 * chunks.len());
+        let snap = set.snapshot();
+        assert_eq!(snap.iter().map(|s| s.executed).sum::<u64>(), count as u64);
+        assert!(snap.iter().all(|s| s.stolen == 0 && s.lost == 0));
+        assert!(snap.iter().all(|s| s.queue_depth == 0));
+    }
+
+    #[test]
+    fn idle_device_steals_the_tail() {
+        let chunks = chunks(200, 2048);
+        // device 1 gets work only by stealing: 2 devices but we never
+        // call next(0) until device 1 has drained everything
+        let set = DeviceSet::new(&chunks, 2, true);
+        let queues = set.queues(2);
+        let own = set.shards()[1].len() * 2;
+        let mut got = 0;
+        while queues.next(1).is_some() {
+            got += 1;
+        }
+        assert_eq!(got, 2 * chunks.len(), "device 1 must drain both queues");
+        let snap = set.snapshot();
+        assert_eq!(snap[1].stolen, (2 * chunks.len() - own) as u64);
+        assert_eq!(snap[0].lost, snap[1].stolen);
+        assert!(queues.next(0).is_none(), "nothing left for device 0");
+        queues.finish();
+        assert_eq!(set.batches(), 1);
+        assert!(set.items_summary().count >= 2, "one record per device");
+    }
+
+    #[test]
+    fn slow_device_is_rescued_by_stealing() {
+        // one artificially slow device: device 0 sleeps per item while
+        // devices 1..4 run flat out — they must finish their own shards
+        // and then strip-mine device 0's queue so every item still runs
+        // exactly once
+        let chunks = chunks(400, 1024);
+        assert!(chunks.len() >= 12, "want a real tail, got {}", chunks.len());
+        let set = DeviceSet::new(&chunks, 4, true);
+        let queues = set.queues(3);
+        let processed: Vec<Mutex<Vec<WorkItem>>> =
+            (0..4).map(|_| Mutex::new(Vec::new())).collect();
+        std::thread::scope(|scope| {
+            for dev in 0..4usize {
+                let queues = &queues;
+                let processed = &processed;
+                scope.spawn(move || {
+                    while let Some(item) = queues.next(dev) {
+                        if dev == 0 {
+                            std::thread::sleep(Duration::from_millis(8));
+                        }
+                        processed[dev].lock().unwrap().push(item);
+                    }
+                });
+            }
+        });
+        let total = 3 * chunks.len();
+        let mut seen = BTreeSet::new();
+        for p in &processed {
+            for item in p.lock().unwrap().iter() {
+                assert!(seen.insert((item.query, item.chunk)), "{item:?} ran twice");
+            }
+        }
+        assert_eq!(seen.len(), total, "every (query, chunk) ran exactly once");
+        let snap = set.snapshot();
+        assert_eq!(snap.iter().map(|s| s.executed).sum::<u64>(), total as u64);
+        assert_eq!(
+            snap.iter().map(|s| s.stolen).sum::<u64>(),
+            snap.iter().map(|s| s.lost).sum::<u64>()
+        );
+        // the fast devices must have raided the slow device's queue
+        assert!(snap[0].lost > 0, "no one stole from the slow device: {snap:?}");
+        let slow_ran = processed[0].lock().unwrap().len();
+        assert!(
+            slow_ran < set.shards()[0].len() * 3,
+            "slow device ran its whole shard ({slow_ran}) — stealing never kicked in"
+        );
+        queues.finish();
+        let steals = set.steals_summary();
+        assert!(steals.max > 0, "steal histogram must see the raid");
+    }
+
+    #[test]
+    fn empty_plan_and_zero_queries_are_safe() {
+        let set = DeviceSet::new(&[], 2, true);
+        let queues = set.queues(5);
+        assert!(queues.next(0).is_none());
+        assert!(queues.next(1).is_none());
+        let chunks = chunks(64, 2048);
+        let set = DeviceSet::new(&chunks, 2, true);
+        let queues = set.queues(0);
+        assert!(queues.next(0).is_none());
+    }
+}

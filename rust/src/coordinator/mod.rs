@@ -2,11 +2,13 @@
 //! into an engine-agnostic **batched search pipeline**.
 //!
 //! Stages: (i) per-query profile construction ([`QueryContext`], all
-//! queries of a batch up front); (ii) one **host thread per coprocessor**,
-//! each pulling `(query, chunk)` work items from the shared pool and
-//! driving its own aligner (native engine or PJRT artifacts); (iii)
-//! barrier on completion, where per-thread [`ScoreSink`] shards are
-//! merged exactly once; (iv) ranked report ([`results`]).
+//! queries of a batch up front); (ii) one **host thread per coprocessor**
+//! ([`DeviceSet`]), each draining its *own* work queue of `(query,
+//! chunk)` items over its length-balanced chunk shard — stealing the
+//! tail of deeper queues when it runs dry — and driving its own aligner
+//! (native engine or PJRT artifacts); (iii) barrier on completion, where
+//! per-thread [`ScoreSink`] shards are scatter–gathered exactly once;
+//! (iv) ranked report ([`results`]).
 //!
 //! The unit of amortization is a [`SearchSession`]: the chunk plan,
 //! per-thread aligners and their DP workspaces are built once and reused
@@ -46,6 +48,7 @@
 //! bounded top-k shards and scales to databases whose dense score
 //! vector would not fit.
 
+pub mod devices;
 pub mod results;
 
 use crate::align::{
@@ -56,9 +59,10 @@ use crate::db::index::Index;
 use crate::matrices::Scoring;
 use crate::metrics::{Cells, RescoreStats, Timer};
 use crate::phi::sim::{simulate_search, SimConfig, SimReport};
-use results::{DenseSink, Hit, ScoreSink, TopKSink};
+pub use devices::{DeviceSet, DeviceSnapshot, WorkItem};
+use results::{DenseSink, Hit, ScoreSink, ThresholdSink, TopKSink};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 /// Mints per-host-thread aligners.
 pub trait AlignerFactory: Send + Sync {
@@ -116,8 +120,13 @@ impl AlignerFactory for PjrtFactory {
 /// Search configuration.
 #[derive(Clone, Debug)]
 pub struct SearchConfig {
-    /// Simulated coprocessors = host threads.
+    /// Simulated coprocessors = host threads, each with its own chunk
+    /// shard and work queue (see [`DeviceSet`]).
     pub devices: usize,
+    /// Work stealing between device queues (the `[devices]` config
+    /// section's `steal` key). On by default; off pins every chunk to
+    /// its statically assigned device.
+    pub steal: bool,
     /// Chunking policy for the workload pool.
     pub chunk: ChunkPlanConfig,
     /// Hits to keep per query.
@@ -132,6 +141,7 @@ impl Default for SearchConfig {
     fn default() -> Self {
         SearchConfig {
             devices: 1,
+            steal: true,
             chunk: ChunkPlanConfig::default(),
             top_k: 10,
             precision: Precision::default(),
@@ -182,6 +192,10 @@ pub struct SearchSession<'a> {
     pub scoring: Scoring,
     pub config: SearchConfig,
     chunks: Vec<Chunk>,
+    /// The simulated coprocessor fleet: per-device chunk shards, work
+    /// queues and counters. `Arc` so observers (the server's stats
+    /// endpoint) can watch the fleet the session schedules onto.
+    devices: Arc<DeviceSet>,
 }
 
 impl<'a> SearchSession<'a> {
@@ -189,11 +203,56 @@ impl<'a> SearchSession<'a> {
         // pair-aligned so the narrow tier's wide profiles never straddle
         // a chunk boundary (each would be scored twice otherwise)
         let chunks = plan_chunks_paired(index, config.chunk);
-        SearchSession { index, scoring, config, chunks }
+        let devices = Arc::new(DeviceSet::new(&chunks, config.devices, config.steal));
+        SearchSession { index, scoring, config, chunks, devices }
+    }
+
+    /// Like [`new`](Self::new), but scheduling onto a caller-provided
+    /// [`DeviceSet`] (the daemon builds the set up front so its stats
+    /// endpoint can observe it). The set must have been built for the
+    /// same chunk plan this config produces.
+    pub fn with_device_set(
+        index: &'a Index,
+        scoring: Scoring,
+        config: SearchConfig,
+        devices: Arc<DeviceSet>,
+    ) -> Self {
+        let chunks = plan_chunks_paired(index, config.chunk);
+        Self::from_parts(index, scoring, config, chunks, devices)
+    }
+
+    /// Assemble a session from an already-computed (pair-aligned) chunk
+    /// plan and the [`DeviceSet`] built over that exact plan — the
+    /// correct-by-construction path when the caller plans once and
+    /// shares both (the daemon does this so chunks are planned a single
+    /// time and the stats endpoint observes the same fleet).
+    pub fn from_parts(
+        index: &'a Index,
+        scoring: Scoring,
+        config: SearchConfig,
+        chunks: Vec<Chunk>,
+        devices: Arc<DeviceSet>,
+    ) -> Self {
+        assert_eq!(
+            devices.n_chunks(),
+            chunks.len(),
+            "device set was built for a different chunk plan"
+        );
+        SearchSession { index, scoring, config, chunks, devices }
     }
 
     pub fn n_chunks(&self) -> usize {
         self.chunks.len()
+    }
+
+    /// The fleet this session schedules onto.
+    pub fn device_set(&self) -> Arc<DeviceSet> {
+        Arc::clone(&self.devices)
+    }
+
+    /// Per-device counters (executed/stolen/lost, queue depth).
+    pub fn device_snapshots(&self) -> Vec<DeviceSnapshot> {
+        self.devices.snapshot()
     }
 
     /// Search a batch of queries, streaming scores through bounded
@@ -242,6 +301,22 @@ impl<'a> SearchSession<'a> {
             out.push(self.assemble(factory, ctx, hits, scores, stats, wall, total_qlen));
         }
         Ok(out)
+    }
+
+    /// Search a batch keeping, per query, every `(seq_index, score)` at
+    /// or above `min_score` (index-ascending), streamed through
+    /// [`ThresholdSink`] shards. Returns one hit list per query, in
+    /// query order, without the timing/simulation wrapping of the other
+    /// paths — this is the bulk-screening primitive.
+    pub fn search_batch_threshold(
+        &self,
+        factory: &dyn AlignerFactory,
+        queries: &[(String, Vec<u8>)],
+        min_score: i32,
+    ) -> anyhow::Result<Vec<Vec<(usize, i32)>>> {
+        let ctxs = self.contexts(queries);
+        let merged = self.run_sharded(factory, &ctxs, || ThresholdSink::new(min_score))?;
+        Ok(merged.into_iter().map(|(sink, _)| sink.finish()).collect())
     }
 
     fn contexts(&self, queries: &[(String, Vec<u8>)]) -> Vec<QueryContext> {
@@ -309,9 +384,11 @@ impl<'a> SearchSession<'a> {
         }
     }
 
-    /// Stage (ii)+(iii): host threads pull `(query, chunk)` items from
-    /// the shared pool into per-thread sink shards; returns the per-query
-    /// merged sinks and rescore accounting.
+    /// Stage (ii)+(iii): scatter — each device host thread drains its own
+    /// `(query, chunk)` queue (stealing the tail of deeper queues when it
+    /// runs dry) into per-thread sink shards; gather — the shards merge
+    /// exactly once at the barrier. Returns the per-query merged sinks
+    /// and rescore accounting.
     fn run_sharded<S, F>(
         &self,
         factory: &dyn AlignerFactory,
@@ -329,16 +406,16 @@ impl<'a> SearchSession<'a> {
         if nq == 0 || nc == 0 {
             return Ok(merged);
         }
-        let cursor = AtomicUsize::new(0); // the shared pool of workloads
-        let devices = self.config.devices.max(1);
+        let queues = self.devices.queues(nq);
+        let n_devices = self.devices.n_devices();
 
         let shard_sets: Vec<anyhow::Result<Vec<(S, RescoreStats)>>> =
             std::thread::scope(|scope| {
-                let handles: Vec<_> = (0..devices)
-                    .map(|_dev| {
-                        let cursor = &cursor;
+                let handles: Vec<_> = (0..n_devices)
+                    .map(|dev| {
+                        let queues = &queues;
                         let mk = &mk;
-                        scope.spawn(move || self.worker(factory, ctxs, cursor, mk))
+                        scope.spawn(move || self.worker(factory, ctxs, queues, dev, mk))
                     })
                     .collect();
                 handles
@@ -346,6 +423,7 @@ impl<'a> SearchSession<'a> {
                     .map(|h| h.join().unwrap_or_else(|p| std::panic::resume_unwind(p)))
                     .collect()
             });
+        queues.finish();
         // stage (iii): the once-per-batch shard merge
         for set in shard_sets {
             for (q, (shard, stats)) in set?.into_iter().enumerate() {
@@ -355,8 +433,8 @@ impl<'a> SearchSession<'a> {
         }
         // completeness guard, sink-independent: every sequence must have
         // been scored exactly once per query (catches any chunk-plan /
-        // wide-range mapping bug loudly instead of silently ranking a
-        // subset)
+        // shard / steal bookkeeping bug loudly instead of silently
+        // ranking a subset)
         let n_seqs = self.index.n_seqs() as u64;
         for (q, (_, stats)) in merged.iter().enumerate() {
             let scored = stats.i16_lanes + stats.i32_lanes;
@@ -368,29 +446,29 @@ impl<'a> SearchSession<'a> {
         Ok(merged)
     }
 
-    /// One host thread: mint the aligner once, then drain the pool.
+    /// One device host thread: mint the aligner once, then drain its
+    /// queue (own work front-first, stolen tails when idle).
     fn worker<S: ScoreSink>(
         &self,
         factory: &dyn AlignerFactory,
         ctxs: &[QueryContext],
-        cursor: &AtomicUsize,
+        queues: &devices::WorkQueues<'_>,
+        dev: usize,
         mk: &(impl Fn() -> S + Sync),
     ) -> anyhow::Result<Vec<(S, RescoreStats)>> {
         // per-host-thread aligner, amortized over the whole batch
         let mut aligner = factory.make()?;
-        let nc = self.chunks.len();
-        let total = ctxs.len() * nc;
         let mut shards: Vec<(S, RescoreStats)> =
             (0..ctxs.len()).map(|_| (mk(), RescoreStats::default())).collect();
-        loop {
-            // dynamic pool: grab the next (query, chunk) work item
-            let i = cursor.fetch_add(1, Ordering::Relaxed);
-            if i >= total {
-                break;
-            }
-            let (q, c) = (i / nc, i % nc);
-            let (sink, stats) = &mut shards[q];
-            self.process_chunk(aligner.as_mut(), &ctxs[q], &self.chunks[c], sink, stats);
+        while let Some(item) = queues.next(dev) {
+            let (sink, stats) = &mut shards[item.query];
+            self.process_chunk(
+                aligner.as_mut(),
+                &ctxs[item.query],
+                &self.chunks[item.chunk],
+                sink,
+                stats,
+            );
         }
         Ok(shards)
     }
@@ -638,6 +716,118 @@ mod tests {
                 d.hits.iter().map(|h| (h.seq_index, h.score)).collect();
             assert_eq!(s_hits, d_hits, "{}", s.query_id);
         }
+    }
+
+    #[test]
+    fn sharded_devices_match_single_device_for_every_sink() {
+        // scatter–gather determinism: any device count × steal setting
+        // must reproduce the 1-device TopK, Dense and Threshold outputs
+        // exactly (ordering and ties included)
+        let (idx, sc) = setup(220);
+        let queries: Vec<(String, Vec<u8>)> =
+            (0..3).map(|i| (format!("q{i}"), generate_query(40 + 17 * i, i as u64))).collect();
+        let factory = NativeFactory(EngineKind::InterSP);
+        let mk = |devices, steal| {
+            SearchSession::new(
+                &idx,
+                sc.clone(),
+                SearchConfig {
+                    devices,
+                    steal,
+                    sim: None,
+                    top_k: 9,
+                    chunk: ChunkPlanConfig { target_padded_residues: 2048 },
+                    ..Default::default()
+                },
+            )
+        };
+        let base = mk(1, true);
+        assert!(base.n_chunks() > 4, "need several chunks to shard");
+        let base_topk = base.search_batch(&factory, &queries).unwrap();
+        let base_dense = base.search_batch_dense(&factory, &queries).unwrap();
+        let base_thresh = base.search_batch_threshold(&factory, &queries, 12).unwrap();
+        for devices in [2usize, 3, 4] {
+            for steal in [true, false] {
+                let s = mk(devices, steal);
+                let topk = s.search_batch(&factory, &queries).unwrap();
+                for (a, b) in topk.iter().zip(&base_topk) {
+                    let ah: Vec<_> = a.hits.iter().map(|h| (h.seq_index, h.score)).collect();
+                    let bh: Vec<_> = b.hits.iter().map(|h| (h.seq_index, h.score)).collect();
+                    assert_eq!(ah, bh, "topk devices={devices} steal={steal}");
+                }
+                let dense = s.search_batch_dense(&factory, &queries).unwrap();
+                for (a, b) in dense.iter().zip(&base_dense) {
+                    assert_eq!(a.scores, b.scores, "dense devices={devices} steal={steal}");
+                }
+                let thresh = s.search_batch_threshold(&factory, &queries, 12).unwrap();
+                assert_eq!(thresh, base_thresh, "threshold devices={devices} steal={steal}");
+                // fleet accounting: every (query, chunk) item ran once
+                let snaps = s.device_snapshots();
+                let total: u64 = snaps.iter().map(|d| d.executed).sum();
+                assert_eq!(total, (3 * queries.len() * s.n_chunks()) as u64);
+                assert_eq!(snaps.len(), devices);
+            }
+        }
+    }
+
+    #[test]
+    fn threshold_batch_matches_dense_filter() {
+        let (idx, sc) = setup(90);
+        let session = SearchSession::new(
+            &idx,
+            sc,
+            SearchConfig { devices: 2, sim: None, ..Default::default() },
+        );
+        let queries = vec![("q".to_string(), generate_query(35, 4))];
+        let factory = NativeFactory(EngineKind::InterSP);
+        let min_score = 10;
+        let got = session.search_batch_threshold(&factory, &queries, min_score).unwrap();
+        let dense = session.search_batch_dense(&factory, &queries).unwrap();
+        let expect: Vec<(usize, i32)> = dense[0]
+            .scores
+            .iter()
+            .enumerate()
+            .filter(|&(_, &s)| s >= min_score)
+            .map(|(i, &s)| (i, s))
+            .collect();
+        assert_eq!(got[0], expect);
+        assert!(!got[0].is_empty(), "pick a threshold the workload reaches");
+    }
+
+    #[test]
+    fn session_with_external_device_set() {
+        let (idx, sc) = setup(100);
+        let cfg = SearchConfig {
+            devices: 3,
+            sim: None,
+            chunk: ChunkPlanConfig { target_padded_residues: 2048 },
+            ..Default::default()
+        };
+        let chunks = plan_chunks_paired(&idx, cfg.chunk);
+        let set = std::sync::Arc::new(DeviceSet::new(&chunks, cfg.devices, cfg.steal));
+        let session =
+            SearchSession::with_device_set(&idx, sc, cfg, std::sync::Arc::clone(&set));
+        let factory = NativeFactory(EngineKind::InterSP);
+        let q = vec![("q".to_string(), generate_query(30, 1))];
+        session.search_batch(&factory, &q).unwrap();
+        // the observer handle sees the work the session scheduled
+        assert_eq!(
+            set.snapshot().iter().map(|d| d.executed).sum::<u64>(),
+            chunks.len() as u64
+        );
+        assert_eq!(set.batches(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "different chunk plan")]
+    fn mismatched_device_set_is_rejected() {
+        let (idx, sc) = setup(100);
+        let cfg = SearchConfig {
+            chunk: ChunkPlanConfig { target_padded_residues: 2048 },
+            ..Default::default()
+        };
+        let set = std::sync::Arc::new(DeviceSet::new(&[], 2, true));
+        let _ = SearchSession::with_device_set(&idx, sc, cfg, set);
     }
 
     #[test]

@@ -99,6 +99,32 @@ fn plan_chunks_aligned(index: &Index, cfg: ChunkPlanConfig, align: usize) -> Vec
     chunks
 }
 
+/// Length-balanced partition of a chunk plan across `devices` shards —
+/// the static half of the multi-device layer (the dynamic half is work
+/// stealing at run time). Greedy LPT: chunks are taken heaviest-first
+/// (by padded residues, the quantity that tracks compute cost) and each
+/// goes to the currently lightest shard, ties to the lower-numbered
+/// device. Every chunk lands in exactly one shard; shard chunk lists are
+/// returned ascending so per-device streaming stays sequential.
+pub fn partition_chunks(chunks: &[Chunk], devices: usize) -> Vec<Vec<usize>> {
+    let devices = devices.max(1);
+    let mut order: Vec<usize> = (0..chunks.len()).collect();
+    order.sort_by(|&a, &b| {
+        chunks[b].padded_residues.cmp(&chunks[a].padded_residues).then(a.cmp(&b))
+    });
+    let mut shards: Vec<Vec<usize>> = vec![Vec::new(); devices];
+    let mut load = vec![0u128; devices];
+    for c in order {
+        let d = (0..devices).min_by_key(|&d| (load[d], d)).unwrap();
+        load[d] += chunks[c].padded_residues;
+        shards[d].push(c);
+    }
+    for shard in &mut shards {
+        shard.sort_unstable();
+    }
+    shards
+}
+
 fn make_chunk(id: usize, start: usize, end: usize, real: u128, padded: u128) -> Chunk {
     Chunk {
         id,
@@ -200,6 +226,52 @@ mod tests {
     fn empty_index_no_chunks() {
         let idx = Index::build(Database::default());
         assert!(plan_chunks(&idx, ChunkPlanConfig::default()).is_empty());
+    }
+
+    #[test]
+    fn partition_covers_each_chunk_once_and_balances() {
+        let idx = index(500, 3);
+        let chunks = plan_chunks(&idx, ChunkPlanConfig { target_padded_residues: 2048 });
+        assert!(chunks.len() >= 8, "need a real plan, got {}", chunks.len());
+        for devices in [1usize, 2, 3, 4, 7] {
+            let shards = partition_chunks(&chunks, devices);
+            assert_eq!(shards.len(), devices);
+            let mut seen: Vec<usize> = shards.iter().flatten().copied().collect();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..chunks.len()).collect::<Vec<_>>(), "{devices} devices");
+            // shards are ascending chunk-id lists
+            for s in &shards {
+                assert!(s.windows(2).all(|w| w[0] < w[1]));
+            }
+            // LPT balance: no shard holds more than the max chunk above
+            // the even share
+            let total: u128 = chunks.iter().map(|c| c.padded_residues).sum();
+            let biggest = chunks.iter().map(|c| c.padded_residues).max().unwrap();
+            for s in &shards {
+                let l: u128 = s.iter().map(|&c| chunks[c].padded_residues).sum();
+                assert!(
+                    l <= total / devices as u128 + biggest,
+                    "{devices} devices: shard load {l} vs even {} + max {biggest}",
+                    total / devices as u128
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn partition_is_deterministic_and_handles_edges() {
+        let idx = index(200, 5);
+        let chunks = plan_chunks(&idx, ChunkPlanConfig { target_padded_residues: 4096 });
+        assert_eq!(partition_chunks(&chunks, 3), partition_chunks(&chunks, 3));
+        // more devices than chunks: trailing shards are empty, all chunks placed
+        let shards = partition_chunks(&chunks, chunks.len() + 5);
+        assert_eq!(shards.iter().map(|s| s.len()).sum::<usize>(), chunks.len());
+        // zero devices clamps to one
+        let one = partition_chunks(&chunks, 0);
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].len(), chunks.len());
+        // empty plan
+        assert_eq!(partition_chunks(&[], 4), vec![Vec::<usize>::new(); 4]);
     }
 
     #[test]

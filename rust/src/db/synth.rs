@@ -89,6 +89,19 @@ impl SynthSpec {
             seed,
         }
     }
+
+    /// Resolve a preset by its CLI/env spelling — the one resolver the
+    /// `synth` command and the bench harnesses share, so an unknown
+    /// name errors instead of silently falling back to a default.
+    pub fn by_name(name: &str, n_seqs: usize, seed: u64) -> Option<SynthSpec> {
+        Some(match name {
+            "trembl-mini" => Self::trembl_mini(n_seqs, seed),
+            "swissprot-mini" => Self::swissprot_mini(n_seqs, seed),
+            "swissprot-reduced" => Self::swissprot_reduced(n_seqs, seed),
+            "tiny" => Self::tiny(n_seqs, seed),
+            _ => return None,
+        })
+    }
 }
 
 /// Cumulative distribution over the 20 standard residues.
@@ -189,6 +202,16 @@ pub fn plant_homolog(rng: &mut Rng, host: &mut Vec<u8>, motif: &[u8], mut_rate: 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn by_name_resolves_every_preset_and_rejects_unknown() {
+        for name in ["trembl-mini", "swissprot-mini", "swissprot-reduced", "tiny"] {
+            let spec = SynthSpec::by_name(name, 10, 1).unwrap();
+            assert_eq!(spec.name, name, "canonical name survives resolution");
+            assert_eq!(spec.n_seqs, 10);
+        }
+        assert!(SynthSpec::by_name("swissprot_mini", 10, 1).is_none(), "typo must not fall back");
+    }
 
     #[test]
     fn deterministic_generation() {

@@ -79,6 +79,10 @@ pub struct SimReport {
     pub device_done: Vec<f64>,
     /// Chunks processed per device.
     pub chunks_per_device: Vec<usize>,
+    /// Chunks each device stole from another device's queue (all zero
+    /// for the pooled schedulers; populated by
+    /// [`simulate_sharded_search`]).
+    pub stolen_chunks: Vec<usize>,
 }
 
 impl SimReport {
@@ -182,6 +186,94 @@ pub fn simulate_search(
         padded_cells,
         offload_time,
         compute_time,
+        stolen_chunks: vec![0; device_clock.len()],
+        device_done: device_clock,
+        chunks_per_device,
+    }
+}
+
+/// Simulate one query search under the **sharded multi-device layer**:
+/// each device owns a static chunk shard (`shards[d]` = ascending chunk
+/// indices, e.g. from [`crate::db::chunk::partition_chunks`]) and drains
+/// it front-first; when its queue is empty and `steal` is set, it steals
+/// the *back* of the deepest remaining queue — exactly the discipline the
+/// real `DeviceSet` work queues implement, so the simulated makespan
+/// tracks the execution layer shipping in the coordinator.
+pub fn simulate_sharded_search(
+    index: &Index,
+    chunks: &[Chunk],
+    shards: &[Vec<usize>],
+    kind: EngineKind,
+    qlen: usize,
+    cfg: SimConfig,
+    steal: bool,
+) -> SimReport {
+    assert!(cfg.devices >= 1);
+    assert_eq!(shards.len(), cfg.devices, "one shard per device");
+    let rep = cfg.replication.max(1) as u128;
+    let mut queues: Vec<std::collections::VecDeque<usize>> =
+        shards.iter().map(|s| s.iter().copied().collect()).collect();
+    let mut device_clock = vec![cfg.offload.setup_s; cfg.devices];
+    let mut done = vec![false; cfg.devices];
+    let mut chunks_per_device = vec![0usize; cfg.devices];
+    let mut stolen_chunks = vec![0usize; cfg.devices];
+    let mut offload_time = cfg.offload.setup_s * cfg.devices as f64;
+    let mut compute_time = 0.0;
+    let mut padded_cells: u128 = 0;
+
+    loop {
+        // earliest-free device that hasn't retired (ties to lowest index)
+        let Some(dev) = (0..cfg.devices)
+            .filter(|&d| !done[d])
+            .min_by(|&a, &b| device_clock[a].partial_cmp(&device_clock[b]).unwrap())
+        else {
+            break;
+        };
+        // own queue front, else steal the back of the deepest other queue
+        let mut item = queues[dev].pop_front();
+        if item.is_none() && steal {
+            let mut victim = None;
+            let mut best = 0usize;
+            for (d, q) in queues.iter().enumerate() {
+                if d != dev && q.len() > best {
+                    best = q.len();
+                    victim = Some(d);
+                }
+            }
+            if let Some(v) = victim {
+                item = queues[v].pop_back();
+                if item.is_some() {
+                    stolen_chunks[dev] += 1;
+                }
+            }
+        }
+        let Some(c) = item else {
+            done[dev] = true;
+            continue;
+        };
+        let chunk = &chunks[c];
+        let off = cfg.offload.chunk_cost(chunk.transfer_bytes * rep as u64);
+        let costs = chunk_item_costs(index, chunk, kind, qlen, &cfg);
+        let outcome = simulate_schedule(&costs, cfg.threads_per_device, cfg.policy);
+        device_clock[dev] += off + outcome.makespan;
+        chunks_per_device[dev] += 1;
+        offload_time += off;
+        compute_time += outcome.makespan;
+        padded_cells += chunk.padded_cells(qlen) * rep;
+    }
+
+    let makespan = device_clock.iter().cloned().fold(0.0, f64::max);
+    SimReport {
+        makespan,
+        real_cells: shards
+            .iter()
+            .flatten()
+            .map(|&c| chunks[c].real_cells(qlen) * rep)
+            .sum(),
+        padded_cells,
+        offload_time,
+        compute_time,
+        stolen_chunks,
         device_done: device_clock,
         chunks_per_device,
     }
@@ -247,6 +339,7 @@ pub fn simulate_hybrid_search(
         padded_cells,
         offload_time,
         compute_time,
+        stolen_chunks: vec![0; clock.len()],
         device_done: clock,
         chunks_per_device: chunks_per,
     }
@@ -399,6 +492,70 @@ mod tests {
         // cells accounting is tier-independent
         assert_eq!(narrow.real_cells, full.real_cells);
         assert_eq!(narrow.padded_cells, full.padded_cells);
+    }
+
+    #[test]
+    fn sharded_sim_tracks_pooled_and_scales() {
+        use crate::db::chunk::partition_chunks;
+        let (idx, chunks) = workload(3000);
+        assert!(chunks.len() >= 8, "need several chunks, got {}", chunks.len());
+        let base =
+            simulate_sharded_search(&idx, &chunks, &partition_chunks(&chunks, 1), EngineKind::InterSP, 1000, cfg(1), true);
+        let pooled1 = simulate_search(&idx, &chunks, EngineKind::InterSP, 1000, cfg(1));
+        // one device: sharded == pooled (same chunks, one queue)
+        assert!((base.makespan - pooled1.makespan).abs() < 1e-9);
+        assert_eq!(base.real_cells, pooled1.real_cells);
+        for n in [2usize, 4] {
+            let shards = partition_chunks(&chunks, n);
+            let r = simulate_sharded_search(&idx, &chunks, &shards, EngineKind::InterSP, 1000, cfg(n), true);
+            assert_eq!(r.chunks_per_device.iter().sum::<usize>(), chunks.len());
+            assert_eq!(r.real_cells, pooled1.real_cells, "cells conserved");
+            let speedup = base.makespan / r.makespan;
+            assert!(speedup > 0.8 * n as f64, "{n} devices: sharded speedup {speedup}");
+            // LPT shards + stealing stay within a whisker of the pooled
+            // greedy schedule
+            let pooled = simulate_search(&idx, &chunks, EngineKind::InterSP, 1000, cfg(n));
+            assert!(
+                r.makespan <= pooled.makespan * 1.25,
+                "{n} devices: sharded {} vs pooled {}",
+                r.makespan,
+                pooled.makespan
+            );
+        }
+    }
+
+    #[test]
+    fn stealing_rescues_a_degenerate_shard_plan() {
+        // all chunks piled on device 0: without stealing the other
+        // devices retire idle and the makespan degrades to 1-device;
+        // with stealing they raid device 0's queue and the fleet
+        // rebalances — the straggler-tail mechanism, deterministically
+        let (idx, chunks) = workload(2000);
+        assert!(chunks.len() >= 8);
+        let devices = 4;
+        let mut shards: Vec<Vec<usize>> = vec![Vec::new(); devices];
+        shards[0] = (0..chunks.len()).collect();
+        let no_steal = simulate_sharded_search(
+            &idx, &chunks, &shards, EngineKind::InterSP, 1000, cfg(devices), false,
+        );
+        let stolen = simulate_sharded_search(
+            &idx, &chunks, &shards, EngineKind::InterSP, 1000, cfg(devices), true,
+        );
+        assert_eq!(no_steal.chunks_per_device, {
+            let mut v = vec![0; devices];
+            v[0] = chunks.len();
+            v
+        });
+        assert!(no_steal.stolen_chunks.iter().all(|&s| s == 0));
+        assert!(
+            no_steal.makespan > 2.0 * stolen.makespan,
+            "stealing must rebalance: {} vs {}",
+            no_steal.makespan,
+            stolen.makespan
+        );
+        assert!(stolen.stolen_chunks.iter().skip(1).any(|&s| s > 0), "{:?}", stolen.stolen_chunks);
+        assert_eq!(stolen.chunks_per_device.iter().sum::<usize>(), chunks.len());
+        assert_eq!(stolen.real_cells, no_steal.real_cells);
     }
 
     #[test]

@@ -34,7 +34,8 @@ pub mod protocol;
 pub mod queue;
 
 use crate::align::Precision;
-use crate::coordinator::{AlignerFactory, SearchConfig, SearchSession};
+use crate::coordinator::{AlignerFactory, DeviceSet, SearchConfig, SearchSession};
+use crate::db::chunk::plan_chunks_paired;
 use crate::db::index::Index;
 use crate::matrices::Scoring;
 use crate::metrics::Histogram;
@@ -327,6 +328,11 @@ struct Shared {
     generation: u64,
     params_fp: u64,
     session_top_k: usize,
+    /// The simulated coprocessor fleet the coalescer's session schedules
+    /// onto — held here so the `stats` op can report per-device
+    /// queue-depth/steal counters while the session lives in the
+    /// coalescer thread.
+    devices: Arc<DeviceSet>,
 }
 
 impl Shared {
@@ -371,6 +377,11 @@ impl Server {
 
         let generation = index_generation(&index);
         let params_fp = params_fingerprint(&scoring, search.precision, search.top_k, factory.as_ref());
+        // plan the chunks exactly once: the fleet is built over this
+        // plan here (so the stats endpoint can observe it) and the same
+        // Vec is handed to the coalescer's session
+        let chunks = plan_chunks_paired(&index, search.chunk);
+        let devices = Arc::new(DeviceSet::new(&chunks, search.devices, search.steal));
         let (listener, addr) = bind(&cfg.listen)?;
         listener.set_nonblocking(true)?;
 
@@ -382,6 +393,7 @@ impl Server {
             generation,
             params_fp,
             session_top_k: search.top_k,
+            devices,
             cfg,
         });
 
@@ -390,7 +402,9 @@ impl Server {
             let factory = Arc::clone(&factory);
             std::thread::Builder::new()
                 .name("swaphi-coalescer".into())
-                .spawn(move || coalescer_loop(&shared, &index, scoring, search, factory.as_ref()))?
+                .spawn(move || {
+                    coalescer_loop(&shared, &index, scoring, search, chunks, factory.as_ref())
+                })?
         };
 
         let accept = {
@@ -616,9 +630,13 @@ fn coalescer_loop(
     index: &Index,
     scoring: Scoring,
     search: SearchConfig,
+    chunks: Vec<crate::db::chunk::Chunk>,
     factory: &dyn AlignerFactory,
 ) {
-    let session = SearchSession::new(index, scoring, search);
+    // the chunk plan and the fleet were both built over it in
+    // Server::start — planned once, consistent by construction
+    let session =
+        SearchSession::from_parts(index, scoring, search, chunks, Arc::clone(&shared.devices));
     let window = Duration::from_millis(shared.cfg.batch_window_ms);
     while let Some(batch) = shared.queue.drain_batch(shared.cfg.max_batch, window) {
         run_batch(shared, &session, factory, batch);
@@ -723,6 +741,33 @@ fn stats_json(shared: &Shared) -> Json {
     );
     s.insert("batch_size".to_string(), summary_json(m.batch_size_summary()));
     s.insert("latency_us".to_string(), summary_json(m.latency_summary()));
+    // the device fleet: per-device cumulative counters + live queue
+    // depths, and the per-batch histograms through the same
+    // Histogram::summary path as every other histogram here
+    let fleet: Vec<Json> = shared
+        .devices
+        .snapshot()
+        .iter()
+        .map(|d| {
+            let mut m = BTreeMap::new();
+            m.insert("device".to_string(), Json::Num(d.device as f64));
+            m.insert("shard_chunks".to_string(), Json::Num(d.shard_chunks as f64));
+            m.insert("executed".to_string(), Json::Num(d.executed as f64));
+            m.insert("stolen".to_string(), Json::Num(d.stolen as f64));
+            m.insert("lost".to_string(), Json::Num(d.lost as f64));
+            m.insert("queue_depth".to_string(), Json::Num(d.queue_depth as f64));
+            Json::Obj(m)
+        })
+        .collect();
+    s.insert("devices".to_string(), Json::Arr(fleet));
+    s.insert(
+        "device_items_per_batch".to_string(),
+        summary_json(shared.devices.items_summary()),
+    );
+    s.insert(
+        "device_steals_per_batch".to_string(),
+        summary_json(shared.devices.steals_summary()),
+    );
     s.insert(
         "index_generation".to_string(),
         Json::Str(format!("{:016x}", shared.generation)),

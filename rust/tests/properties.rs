@@ -231,6 +231,77 @@ fn prop_sink_equivalence_topk_vs_dense() {
 }
 
 #[test]
+fn prop_scatter_gather_invariant_under_sharding() {
+    // The multi-device layer's contract: for ANY shard split of the
+    // database (device count), with or without work stealing, the merged
+    // TopK / Dense / Threshold outputs equal the unsharded (1-device)
+    // results exactly — ordering and ties included.
+    check("scatter-gather == unsharded for every sink", 12, |rng| {
+        use swaphi::coordinator::{NativeFactory, SearchConfig, SearchSession};
+        use swaphi::db::chunk::ChunkPlanConfig;
+        let n = rng.range(5, 60);
+        let idx = Index::build(random_db(rng, n, 70));
+        let sc = Scoring::swaphi_default();
+        let nq = rng.range(1, 4);
+        let queries: Vec<(String, Vec<u8>)> =
+            (0..nq).map(|i| (format!("q{i}"), rand_seq(rng, 1, 45))).collect();
+        let factory = NativeFactory(EngineKind::InterSP);
+        let top_k = rng.range(1, 9);
+        let min_score = rng.range(5, 20) as i32;
+        // small chunks so even small databases split into several
+        let mk = |devices, steal| {
+            SearchSession::new(
+                &idx,
+                sc.clone(),
+                SearchConfig {
+                    devices,
+                    steal,
+                    top_k,
+                    sim: None,
+                    chunk: ChunkPlanConfig { target_padded_residues: 1024 },
+                    ..Default::default()
+                },
+            )
+        };
+        let base = mk(1, true);
+        let base_topk = base.search_batch(&factory, &queries).unwrap();
+        let base_dense = base.search_batch_dense(&factory, &queries).unwrap();
+        let base_thresh =
+            base.search_batch_threshold(&factory, &queries, min_score).unwrap();
+        let devices = rng.range(2, 6);
+        let steal = rng.below(2) == 1;
+        let sharded = mk(devices, steal);
+        let topk = sharded.search_batch(&factory, &queries).unwrap();
+        for (a, b) in topk.iter().zip(&base_topk) {
+            let ah: Vec<(usize, i32)> =
+                a.hits.iter().map(|h| (h.seq_index, h.score)).collect();
+            let bh: Vec<(usize, i32)> =
+                b.hits.iter().map(|h| (h.seq_index, h.score)).collect();
+            prop_eq(ah, bh, &format!("topk d={devices} steal={steal} {}", a.query_id))?;
+        }
+        let dense = sharded.search_batch_dense(&factory, &queries).unwrap();
+        for (a, b) in dense.iter().zip(&base_dense) {
+            prop_eq(
+                a.scores.clone(),
+                b.scores.clone(),
+                &format!("dense d={devices} steal={steal} {}", a.query_id),
+            )?;
+        }
+        let thresh = sharded.search_batch_threshold(&factory, &queries, min_score).unwrap();
+        prop_eq(thresh, base_thresh, &format!("threshold d={devices} steal={steal}"))?;
+        // accounting: the fleet executed the full (query, chunk) cross
+        // product exactly once per batch (topk + dense + threshold = 3)
+        let executed: u64 = sharded.device_snapshots().iter().map(|d| d.executed).sum();
+        prop_eq(
+            executed,
+            (3 * queries.len() * sharded.n_chunks()) as u64,
+            "work items executed",
+        )?;
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_topk_consistency() {
     check("topk is consistent with scores", 20, |rng| {
         use swaphi::coordinator::{Coordinator, NativeFactory, SearchConfig};

@@ -23,6 +23,7 @@ use swaphi::util::json::Json;
 fn search_cfg() -> SearchConfig {
     SearchConfig {
         devices: 2,
+        steal: true,
         chunk: ChunkPlanConfig { target_padded_residues: 4096 },
         top_k: 5,
         precision: Precision::default(),
@@ -146,6 +147,23 @@ fn concurrent_clients_coalesce_and_stay_bit_identical() {
         stats.get("stats").unwrap().get("admitted").unwrap().as_f64().unwrap() >= N as f64,
         "{stats}"
     );
+    // the device fleet is visible through the same stats op: one entry
+    // per simulated coprocessor, and between them they executed every
+    // (query, chunk) work item the batches produced
+    let fleet = stats.get("stats").unwrap().get("devices").unwrap();
+    let Json::Arr(fleet) = fleet else { panic!("devices must be an array: {stats}") };
+    assert_eq!(fleet.len(), 2, "{stats}");
+    let executed: f64 = fleet
+        .iter()
+        .map(|d| d.get("executed").unwrap().as_f64().unwrap())
+        .sum();
+    assert!(executed > 0.0, "{stats}");
+    for d in fleet {
+        assert!(d.get("queue_depth").unwrap().as_f64().unwrap() == 0.0, "idle fleet: {stats}");
+        assert!(d.get("shard_chunks").is_some() && d.get("stolen").is_some());
+    }
+    let items = stats.get("stats").unwrap().get("device_items_per_batch").unwrap();
+    assert!(items.get("count").unwrap().as_f64().unwrap() > 0.0, "{stats}");
     handle.shutdown().unwrap();
 }
 
