@@ -1,0 +1,184 @@
+"""Unit tests for the bench regression gate (ci/check_bench.py).
+
+Run with:  python3 -m unittest discover -s ci -p 'test_*.py'
+
+The gate script is exercised the way CI does — as a subprocess over
+temp baseline/artifact files — so exit codes, --update rewrites and the
+workload pins are all covered, plus the dig() helper directly.
+"""
+
+import json
+import subprocess
+import sys
+import tempfile
+import unittest
+from pathlib import Path
+
+import check_bench
+
+SCRIPT = Path(__file__).resolve().parent / "check_bench.py"
+
+
+def make_baseline(metrics, workload=None, tolerance=0.25):
+    spec = {"metrics": metrics}
+    if workload is not None:
+        spec["workload"] = workload
+    return {"tolerance": tolerance, "benches": {"BENCH_test.json": spec}}
+
+
+class GateHarness(unittest.TestCase):
+    def setUp(self):
+        self.dir = tempfile.TemporaryDirectory()
+        self.addCleanup(self.dir.cleanup)
+        self.base_path = Path(self.dir.name) / "baseline.json"
+        self.art_path = Path(self.dir.name) / "BENCH_test.json"
+
+    def run_gate(self, baseline, artifact, *extra):
+        self.base_path.write_text(json.dumps(baseline))
+        self.art_path.write_text(json.dumps(artifact))
+        return subprocess.run(
+            [sys.executable, str(SCRIPT), "--baseline", str(self.base_path),
+             *extra, str(self.art_path)],
+            capture_output=True, text=True,
+        )
+
+
+class TestDig(unittest.TestCase):
+    def test_dig_walks_dotted_paths(self):
+        obj = {"a": {"b": {"c": 3.5}}, "x": 1}
+        self.assertEqual(check_bench.dig(obj, "a.b.c"), 3.5)
+        self.assertEqual(check_bench.dig(obj, "x"), 1)
+        self.assertIsNone(check_bench.dig(obj, "a.b.missing"))
+        self.assertIsNone(check_bench.dig(obj, "a.b.c.deeper"))
+        self.assertIsNone(check_bench.dig({}, "a"))
+
+
+class TestRegressionDetection(GateHarness):
+    def test_green_when_within_tolerance(self):
+        p = self.run_gate(
+            make_baseline({"m.gcups": {"baseline": 100.0, "min": None}}),
+            {"m": {"gcups": 80.0}},  # -20% is inside the 25% tolerance
+        )
+        self.assertEqual(p.returncode, 0, p.stdout + p.stderr)
+        self.assertIn("green", p.stdout)
+
+    def test_regression_beyond_tolerance_fails(self):
+        p = self.run_gate(
+            make_baseline({"m.gcups": {"baseline": 100.0, "min": None}}),
+            {"m": {"gcups": 70.0}},  # -30% breaks the 25% gate
+        )
+        self.assertEqual(p.returncode, 1, p.stdout + p.stderr)
+        self.assertIn("FAIL(regression)", p.stdout)
+
+    def test_absolute_floor_fails_even_above_baseline(self):
+        p = self.run_gate(
+            make_baseline({"m.speedup": {"baseline": 1.0, "min": 1.6}}),
+            {"m": {"speedup": 1.5}},
+        )
+        self.assertEqual(p.returncode, 1)
+        self.assertIn("FAIL(floor)", p.stdout)
+
+    def test_missing_metric_fails(self):
+        p = self.run_gate(
+            make_baseline({"m.gcups": {"baseline": 100.0, "min": None}}),
+            {"m": {}},
+        )
+        self.assertEqual(p.returncode, 1)
+        self.assertIn("missing from artifact", p.stdout)
+
+    def test_workload_mismatch_refuses_with_exit_2(self):
+        p = self.run_gate(
+            make_baseline({"m.gcups": {"baseline": 100.0, "min": None}},
+                          workload={"preset": "tiny"}),
+            {"preset": "trembl-mini", "m": {"gcups": 100.0}},
+        )
+        self.assertEqual(p.returncode, 2)
+        self.assertIn("workload mismatch", p.stdout)
+
+    def test_unknown_artifact_is_skipped(self):
+        baseline = {"tolerance": 0.25, "benches": {}}
+        p = self.run_gate(baseline, {"m": {"gcups": 1.0}})
+        self.assertEqual(p.returncode, 0)
+        self.assertIn("no baseline entry", p.stdout)
+
+
+class TestNullBaselineSkipping(GateHarness):
+    def test_null_baseline_records_without_gating(self):
+        p = self.run_gate(
+            make_baseline({"m.native_gcups": {"baseline": None, "min": None}}),
+            {"m": {"native_gcups": 0.001}},  # any value passes when unseeded
+        )
+        self.assertEqual(p.returncode, 0, p.stdout + p.stderr)
+        self.assertIn("recorded (no baseline yet)", p.stdout)
+        self.assertIn("unseeded metrics", p.stdout)
+
+    def test_null_baseline_still_enforces_floor(self):
+        p = self.run_gate(
+            make_baseline({"m.eff": {"baseline": None, "min": 0.87}}),
+            {"m": {"eff": 0.5}},
+        )
+        self.assertEqual(p.returncode, 1)
+        self.assertIn("FAIL(floor)", p.stdout)
+
+
+class TestUpdate(GateHarness):
+    def test_update_reseeds_baselines_and_pins_keeping_floors_and_notes(self):
+        baseline = make_baseline(
+            {"m.gcups": {"baseline": 50.0, "min": 1.6, "note": "keep me"}},
+            workload={"preset": "tiny"},
+        )
+        p = self.run_gate(baseline, {"preset": "huge", "m": {"gcups": 70.0}},
+                          "--update")
+        self.assertEqual(p.returncode, 0, p.stdout + p.stderr)
+        rewritten = json.loads(self.base_path.read_text())
+        entry = rewritten["benches"]["BENCH_test.json"]["metrics"]["m.gcups"]
+        self.assertEqual(entry["baseline"], 70.0)
+        self.assertEqual(entry["min"], 1.6, "floors survive --update")
+        self.assertEqual(entry["note"], "keep me", "notes survive --update")
+        pins = rewritten["benches"]["BENCH_test.json"]["workload"]
+        self.assertEqual(pins["preset"], "huge", "pins follow the artifact")
+
+    def test_update_accepts_an_accepted_regression(self):
+        # reseeding after a deliberate slowdown is exactly what --update
+        # is for: a >tolerance drop must not block it
+        p = self.run_gate(
+            make_baseline({"m.gcups": {"baseline": 100.0, "min": None}}),
+            {"m": {"gcups": 50.0}},
+            "--update",
+        )
+        self.assertEqual(p.returncode, 0, p.stdout + p.stderr)
+        rewritten = json.loads(self.base_path.read_text())
+        self.assertEqual(
+            rewritten["benches"]["BENCH_test.json"]["metrics"]["m.gcups"]["baseline"],
+            50.0,
+        )
+
+    def test_update_aborts_on_floor_violation(self):
+        baseline = make_baseline({"m.speedup": {"baseline": 3.0, "min": 1.6}})
+        p = self.run_gate(baseline, {"m": {"speedup": 1.0}}, "--update")
+        self.assertEqual(p.returncode, 1)
+        self.assertIn("update aborted", p.stdout)
+        rewritten = json.loads(self.base_path.read_text())
+        self.assertEqual(
+            rewritten["benches"]["BENCH_test.json"]["metrics"]["m.speedup"]["baseline"],
+            3.0, "aborted update must not rewrite the baseline",
+        )
+
+    def test_update_aborts_on_missing_metric(self):
+        baseline = make_baseline({"m.gcups": {"baseline": 1.0, "min": None}})
+        p = self.run_gate(baseline, {"other": 1}, "--update")
+        self.assertEqual(p.returncode, 1)
+        self.assertIn("update aborted", p.stdout)
+
+
+class TestToleranceOverride(GateHarness):
+    def test_cli_tolerance_overrides_file(self):
+        baseline = make_baseline({"m.gcups": {"baseline": 100.0, "min": None}})
+        ok = self.run_gate(baseline, {"m": {"gcups": 70.0}}, "--tolerance", "0.5")
+        self.assertEqual(ok.returncode, 0, ok.stdout + ok.stderr)
+        bad = self.run_gate(baseline, {"m": {"gcups": 70.0}}, "--tolerance", "0.1")
+        self.assertEqual(bad.returncode, 1)
+
+
+if __name__ == "__main__":
+    unittest.main()

@@ -12,22 +12,32 @@
 //! scatter–gather) is exercised end to end; native GCUPS is recorded for
 //! trajectory only (it depends on the host's core count).
 //!
+//! A skewed-fleet scenario (rates `[1.0, 1.0, 0.25]`) then brackets the
+//! heterogeneous mechanism: rate-blind vs rate-weighted shards, with
+//! and without rate-aware stealing, against the ideal `Σwork/Σrate`
+//! bound — plus a real heterogeneous `SearchSession` execution.
+//!
 //! Emits `BENCH_scaling.json` (consumed by `ci/check_bench.py`, which
-//! gates the simulated GCUPS against `ci/bench-baseline.json` and
-//! enforces ≥ 1.6× at 4 devices). `SWAPHI_BENCH_PRESET` /
+//! gates the simulated GCUPS against `ci/bench-baseline.json`,
+//! enforces ≥ 1.6× at 4 devices, and holds the skewed weighted+steal
+//! makespan within 1.15× of the ideal bound). `SWAPHI_BENCH_PRESET` /
 //! `SWAPHI_BENCH_N` / `SWAPHI_BENCH_QLEN` shrink the workload for CI.
 
 use swaphi::align::EngineKind;
 use swaphi::bench::workloads::{Workload, TREMBL_RESIDUES};
 use swaphi::bench::{f1, f2, Table};
 use swaphi::coordinator::{NativeFactory, SearchConfig, SearchSession};
-use swaphi::db::chunk::{partition_chunks, ChunkPlanConfig};
+use swaphi::db::chunk::{partition_chunks, partition_chunks_weighted, ChunkPlanConfig};
 use swaphi::db::synth::SynthSpec;
 use swaphi::matrices::Scoring;
-use swaphi::phi::sim::simulate_sharded_search;
+use swaphi::phi::sim::{simulate_sharded_rates, simulate_sharded_search};
 use swaphi::util::gcups;
 
 const DEVICE_COUNTS: [usize; 3] = [1, 2, 4];
+
+/// The heterogeneous scenario: two full-rate coprocessors plus one
+/// quarter-rate straggler (the paper's §V Phi + slower-worker mix).
+const SKEWED_RATES: [f64; 3] = [1.0, 1.0, 0.25];
 
 fn main() {
     let preset =
@@ -128,14 +138,130 @@ fn main() {
     }
 
     table.emit("multi_device_scaling");
+
+    // ------------------------------------------------------------------
+    // Skewed fleet: rate-weighted sharding + rate-aware stealing. Four
+    // simulated configurations bracket the mechanism: the rate-blind
+    // split (the straggler drowns), the weighted split without stealing
+    // (static fix), the weighted split with stealing (shipping config),
+    // and the ideal Σwork/Σrate bound every fleet is gated against.
+    let sum_rates: f64 = SKEWED_RATES.iter().sum();
+    let sim_cfg = w.sim_config(SKEWED_RATES.len());
+    let setup = sim_cfg.offload.setup_s;
+    // base_makespan is the 1-device run: setup + Σ(offload + compute),
+    // so the perfectly-divisible fleet bound is setup + the rest ÷ Σrate
+    let ideal = setup + (base_makespan - setup) / sum_rates;
+    let unweighted_shards = partition_chunks(&w.chunks, SKEWED_RATES.len());
+    let weighted_shards = partition_chunks_weighted(&w.chunks, &SKEWED_RATES);
+    let run_skewed = |shards: &[Vec<usize>], steal: bool| {
+        simulate_sharded_rates(
+            &w.index,
+            &w.chunks,
+            shards,
+            EngineKind::InterSP,
+            qlen,
+            sim_cfg,
+            steal,
+            &SKEWED_RATES,
+        )
+    };
+    let blind = run_skewed(&unweighted_shards, false);
+    let blind_steal = run_skewed(&unweighted_shards, true);
+    let weighted = run_skewed(&weighted_shards, false);
+    let stolen = run_skewed(&weighted_shards, true);
+    let weighted_gain = blind.makespan / weighted.makespan;
+    let steal_gain = weighted.makespan / stolen.makespan;
+    // how much of the rate-blind split's straggler tail stealing alone
+    // claws back (the dynamic half of the mechanism, without resharding)
+    let steal_rescue = blind.makespan / blind_steal.makespan;
+    let steal_efficiency = ideal / stolen.makespan;
+    let skewed_stolen: usize = stolen.stolen_chunks.iter().sum();
+
+    let mut skew_table = Table::new(
+        "skewed fleet: rates [1.0, 1.0, 0.25] (InterSP)",
+        &["config", "makespan_s", "sim_GCUPS", "vs_ideal"],
+    );
+    for (name, r) in [
+        ("unweighted,nosteal", &blind),
+        ("unweighted,steal", &blind_steal),
+        ("weighted,nosteal", &weighted),
+        ("weighted,steal", &stolen),
+    ] {
+        skew_table.row(&[
+            name.to_string(),
+            format!("{:.4}", r.makespan),
+            f1(r.gcups()),
+            f2(r.makespan / ideal),
+        ]);
+    }
+    skew_table.row(&[
+        "ideal (Σwork/Σrate)".to_string(),
+        format!("{ideal:.4}"),
+        f1(gcups(stolen.real_cells, ideal)),
+        f2(1.0),
+    ]);
+    skew_table.emit("multi_device_scaling_skewed");
+
+    // real execution of the same skewed fleet: the weighted shards and
+    // rate-aware steal policy run end to end through the session
+    let session = SearchSession::new(
+        &w.index,
+        sc.clone(),
+        SearchConfig {
+            devices: SKEWED_RATES.len(),
+            rates: SKEWED_RATES.to_vec(),
+            sim: None,
+            chunk: ChunkPlanConfig { target_padded_residues: 1 << 16 },
+            ..Default::default()
+        },
+    );
+    let t = std::time::Instant::now();
+    let out = session
+        .search_batch(&NativeFactory(EngineKind::InterSP), &native_queries)
+        .expect("native skewed batch");
+    let skew_native_secs = t.elapsed().as_secs_f64();
+    assert_eq!(out.len(), native_queries.len());
+    let snaps = session.device_snapshots();
+    assert_eq!(
+        snaps.iter().map(|d| d.executed).sum::<u64>(),
+        (native_queries.len() * session.n_chunks()) as u64,
+        "skewed fleet must execute every (query, chunk) item exactly once"
+    );
+    let skew_native_gcups = gcups(native_cells, skew_native_secs);
+    println!(
+        "skewed fleet native: {:.1} GCUPS, weighted_gain {:.2}x, steal_rescue {:.2}x, \
+         steal_gain {:.2}x, steal_efficiency {:.2} (>= {:.2} gates)",
+        skew_native_gcups,
+        weighted_gain,
+        steal_rescue,
+        steal_gain,
+        steal_efficiency,
+        1.0 / 1.15
+    );
+
     let json = format!(
         "{{\n  \"bench\": \"multi_device_scaling\",\n  \"preset\": \"{preset}\",\n  \
          \"n_seqs\": {},\n  \"qlen\": {qlen},\n  \"chunks\": {},\n  \"replication\": {},\n  \
-         \"devices\": {{\n{}\n  }}\n}}\n",
+         \"devices\": {{\n{}\n  }},\n  \"skewed\": {{\n    \"rates\": [{}],\n    \
+         \"ideal_makespan_s\": {ideal:.6},\n    \
+         \"unweighted_nosteal_makespan_s\": {:.6},\n    \
+         \"unweighted_steal_makespan_s\": {:.6},\n    \
+         \"weighted_nosteal_makespan_s\": {:.6},\n    \
+         \"weighted_steal_makespan_s\": {:.6},\n    \
+         \"weighted_gain\": {weighted_gain:.3},\n    \"steal_rescue\": {steal_rescue:.3},\n    \
+         \"steal_gain\": {steal_gain:.3},\n    \
+         \"steal_efficiency\": {steal_efficiency:.3},\n    \"stolen_chunks\": {skewed_stolen},\n    \
+         \"sim_gcups\": {:.3},\n    \"native_gcups\": {skew_native_gcups:.3}\n  }}\n}}\n",
         w.index.n_seqs(),
         w.chunks.len(),
         w.replication,
-        entries.join(",\n")
+        entries.join(",\n"),
+        SKEWED_RATES.map(|r| format!("{r}")).join(", "),
+        blind.makespan,
+        blind_steal.makespan,
+        weighted.makespan,
+        stolen.makespan,
+        stolen.gcups(),
     );
     if std::fs::write("BENCH_scaling.json", &json).is_ok() {
         println!("\nwrote BENCH_scaling.json");

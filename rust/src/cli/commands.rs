@@ -96,6 +96,20 @@ fn load_config(args: &mut Args) -> anyhow::Result<SwaphiConfig> {
     if let Some(d) = args.take("devices") {
         raw.set("devices.count", &d)?;
     }
+    if let Some(r) = args.take("device-rates") {
+        // accept both the bare CLI spelling (1.0,1.0,0.25) and the
+        // config-file list form ([1.0, 1.0, 0.25])
+        let r = r.trim().to_string();
+        let list = if r.starts_with('[') { r } else { format!("[{r}]") };
+        raw.set("devices.rates", &list)?;
+        // validate the *parsed* list: an explicitly passed flag must
+        // carry rates — an empty value (unset shell variable, "[]",
+        // "[ ]") must error, not silently degrade to a uniform fleet
+        anyhow::ensure!(
+            !raw.f64_list_or("devices.rates", &[])?.is_empty(),
+            "--device-rates requires a non-empty comma-separated rate list"
+        );
+    }
     if let Some(dir) = args.take("artifacts") {
         raw.set("search.artifacts_dir", &dir)?;
     }
@@ -196,8 +210,8 @@ pub fn cmd_search(mut args: Args) -> anyhow::Result<i32> {
         for d in session.device_snapshots() {
             writeln!(
                 report,
-                "  device {}: shard {} chunks, executed {} items, stole {}, lost {}",
-                d.device, d.shard_chunks, d.executed, d.stolen, d.lost
+                "  device {}: rate {:.2}, shard {} chunks, executed {} items, stole {}, lost {}",
+                d.device, d.rate, d.shard_chunks, d.executed, d.stolen, d.lost
             )?;
         }
     }
@@ -233,13 +247,14 @@ pub fn cmd_serve(mut args: Args) -> anyhow::Result<i32> {
     .start()?;
 
     println!(
-        "swaphi serve: listening on {} (index {} seqs / {} residues, engine={} devices={} \
+        "swaphi serve: listening on {} (index {} seqs / {} residues, engine={} devices={}{} \
          steal={} precision={} top_k={}, queue={} max_batch={} window={}ms cache={})",
         handle.addr(),
         index.n_seqs(),
         index.total_residues,
         cfg.engine.name(),
         cfg.devices,
+        if cfg.rates.is_empty() { String::new() } else { format!(" rates={:?}", cfg.rates) },
         cfg.steal,
         cfg.precision.name(),
         cfg.top_k,
@@ -536,6 +551,58 @@ mod tests {
             0
         );
         assert!(run(&format!("search --index {idx} --query {qf} --devices nope")).is_err());
+        for f in [fasta, idx, qf] {
+            let _ = std::fs::remove_file(f);
+        }
+    }
+
+    #[test]
+    fn search_device_rates_flag_runs_heterogeneous_fleet() {
+        let fasta = tmp("db4.fasta");
+        let idx = tmp("db4.idx");
+        let qf = tmp("q4.fasta");
+        assert_eq!(
+            run(&format!("synth --preset tiny --n 40 --seed 8 --out {fasta}")).unwrap(),
+            0
+        );
+        assert_eq!(run(&format!("index --in {fasta} --out {idx}")).unwrap(), 0);
+        std::fs::write(&qf, ">q1\nMKTAYIAKQRQISFVKSHFSRQLEERLGLIEVQ\n").unwrap();
+        // rates alone imply the device count
+        assert_eq!(
+            run(&format!(
+                "search --index {idx} --query {qf} --device-rates 1.0,0.25 \
+                 --set sim.enabled=false"
+            ))
+            .unwrap(),
+            0
+        );
+        // explicit matching count is fine; a mismatch errors
+        assert_eq!(
+            run(&format!(
+                "search --index {idx} --query {qf} --devices 2 --device-rates 1.0,0.25 \
+                 --set sim.enabled=false"
+            ))
+            .unwrap(),
+            0
+        );
+        assert!(run(&format!(
+            "search --index {idx} --query {qf} --devices 3 --device-rates 1.0,0.25"
+        ))
+        .is_err());
+        assert!(run(&format!(
+            "search --index {idx} --query {qf} --device-rates 1.0,nope"
+        ))
+        .is_err());
+        // an explicitly passed flag with no rates must error, not
+        // silently degrade to a uniform fleet
+        assert!(run(&format!(
+            "search --index {idx} --query {qf} --device-rates []"
+        ))
+        .is_err());
+        assert!(run(&format!(
+            "search --index {idx} --query {qf} --device-rates"
+        ))
+        .is_err());
         for f in [fasta, idx, qf] {
             let _ = std::fs::remove_file(f);
         }

@@ -78,6 +78,10 @@ COMMANDS:
                 length-balanced into per-device shards, each device drains
                 its own work queue and steals stragglers' tails
                 (--set devices.steal=false pins work to its shard)
+              [--device-rates <r1,r2,...>]   heterogeneous fleet: relative
+                per-device speeds (e.g. 1.0,1.0,0.25); shards are weighted
+                by rate and steal victims picked by estimated remaining
+                time, so fast devices strip-mine slow ones
               [--precision auto|i16|i32]   score-lane tier (auto: narrow
                 32-lane i16 when provably exact; i16: force narrow,
                 saturated lanes rescored at i32; i32: full precision)
@@ -86,7 +90,8 @@ COMMANDS:
             batches, cache repeat queries (line-delimited JSON protocol,
             docs/protocol.md); SIGINT/SIGTERM drain gracefully
               --index <idx>  [--listen 127.0.0.1:7878 | unix:/path]
-              [--devices <n>]  [--config <toml>]  [--set server.max_batch=32]...
+              [--devices <n>]  [--device-rates <r1,r2,...>]
+              [--config <toml>]  [--set server.max_batch=32]...
               e.g.  swaphi serve --index db.idx --listen 127.0.0.1:7878
   query     client for a running `serve` daemon; each FASTA record is one
             request on one connection

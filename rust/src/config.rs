@@ -23,6 +23,7 @@
 //! [devices]
 //! count = 4               # simulated coprocessors (wins over search.devices)
 //! steal = true            # work stealing between device queues
+//! rates = [1.0, 1.0, 1.0, 0.25]  # relative per-device speeds (heterogeneous fleet)
 //!
 //! [sim]
 //! enabled = true
@@ -54,6 +55,9 @@ pub enum Value {
     Int(i64),
     Float(f64),
     Bool(bool),
+    /// A single-line `[a, b, c]` list of scalars (no nesting; elements
+    /// must not contain commas).
+    List(Vec<Value>),
 }
 
 impl Value {
@@ -63,6 +67,7 @@ impl Value {
             Value::Int(_) => "integer",
             Value::Float(_) => "float",
             Value::Bool(_) => "boolean",
+            Value::List(_) => "list",
         }
     }
 }
@@ -143,6 +148,25 @@ impl RawConfig {
         }
     }
 
+    /// A list of numbers (integer elements widen to float).
+    pub fn f64_list_or(&self, key: &str, default: &[f64]) -> anyhow::Result<Vec<f64>> {
+        match self.entries.get(key) {
+            None => Ok(default.to_vec()),
+            Some(Value::List(xs)) => xs
+                .iter()
+                .map(|v| match v {
+                    Value::Float(f) => Ok(*f),
+                    Value::Int(i) => Ok(*i as f64),
+                    v => anyhow::bail!(
+                        "{key}: expected number in list, got {}",
+                        v.type_name()
+                    ),
+                })
+                .collect(),
+            Some(v) => anyhow::bail!("{key}: expected list, got {}", v.type_name()),
+        }
+    }
+
     /// Reject unknown keys (typo protection) given the known key set.
     pub fn validate_keys(&self, known: &[&str]) -> anyhow::Result<()> {
         for key in self.entries.keys() {
@@ -171,6 +195,20 @@ fn strip_comment(line: &str) -> &str {
 }
 
 fn parse_value(s: &str, lineno: usize) -> anyhow::Result<Value> {
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow::anyhow!("line {lineno}: unterminated list"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::List(Vec::new()));
+        }
+        let items = inner
+            .split(',')
+            .map(|e| parse_value(e.trim(), lineno))
+            .collect::<anyhow::Result<Vec<Value>>>()?;
+        return Ok(Value::List(items));
+    }
     if let Some(rest) = s.strip_prefix('"') {
         let inner = rest
             .strip_suffix('"')
@@ -210,6 +248,7 @@ pub const KNOWN_KEYS: &[&str] = &[
     "search.precision",
     "devices.count",
     "devices.steal",
+    "devices.rates",
     "sim.enabled",
     "sim.threads_per_device",
     "sim.replication",
@@ -235,6 +274,8 @@ pub struct SwaphiConfig {
     pub artifacts_dir: String,
     pub devices: usize,
     pub steal: bool,
+    /// Relative per-device speeds (`[devices] rates`); empty = uniform.
+    pub rates: Vec<f64>,
     pub policy: Policy,
     pub top_k: usize,
     pub precision: Precision,
@@ -265,6 +306,16 @@ impl SwaphiConfig {
         let engine_s = raw.str_or("search.engine", "intersp")?;
         let policy_s = raw.str_or("search.policy", "guided")?;
         let precision_s = raw.str_or("search.precision", "auto")?;
+        let rates = {
+            let rates = raw.f64_list_or("devices.rates", &[])?;
+            for &r in &rates {
+                anyhow::ensure!(
+                    r.is_finite() && r > 0.0,
+                    "devices.rates entries must be finite and positive, got {r}"
+                );
+            }
+            rates
+        };
         Ok(SwaphiConfig {
             scoring: Scoring::new(&matrix, gap_open, gap_extend)?,
             engine: EngineKind::parse(&engine_s)
@@ -272,12 +323,27 @@ impl SwaphiConfig {
             backend: raw.str_or("search.backend", "native")?,
             artifacts_dir: raw.str_or("search.artifacts_dir", "artifacts")?,
             // devices.count is authoritative; search.devices is the
-            // legacy spelling kept as its default
+            // legacy spelling kept as its default. A rate vector without
+            // an explicit count implies one device per rate; with one,
+            // the lengths must agree.
             devices: {
                 let legacy = raw.int_or("search.devices", 1)?;
-                raw.int_or("devices.count", legacy)?.max(1) as usize
+                let count = raw.int_or("devices.count", legacy)?.max(1) as usize;
+                let explicit =
+                    raw.get("devices.count").is_some() || raw.get("search.devices").is_some();
+                if rates.is_empty() || explicit {
+                    anyhow::ensure!(
+                        rates.is_empty() || rates.len() == count,
+                        "devices.rates has {} entries but the device count is {count}",
+                        rates.len()
+                    );
+                    count
+                } else {
+                    rates.len()
+                }
             },
             steal: raw.bool_or("devices.steal", true)?,
+            rates,
             policy: Policy::parse(&policy_s)
                 .ok_or_else(|| anyhow::anyhow!("unknown policy {policy_s:?}"))?,
             top_k: raw.int_or("search.top_k", 10)?.max(1) as usize,
@@ -326,6 +392,7 @@ impl SwaphiConfig {
         SearchConfig {
             devices: self.devices,
             steal: self.steal,
+            rates: self.rates.clone(),
             chunk: ChunkPlanConfig { target_padded_residues: self.chunk_residues },
             top_k: self.top_k,
             precision: self.precision,
@@ -422,6 +489,64 @@ mod tests {
         let cfg = SwaphiConfig::from_raw(&parsed).unwrap();
         assert_eq!(cfg.devices, 3);
         assert!(cfg.steal);
+    }
+
+    #[test]
+    fn rates_list_parses_and_infers_device_count() {
+        let raw = RawConfig::parse("[devices]\nrates = [1.0, 1.0, 0.25]\n").unwrap();
+        assert_eq!(
+            raw.get("devices.rates"),
+            Some(&Value::List(vec![
+                Value::Float(1.0),
+                Value::Float(1.0),
+                Value::Float(0.25)
+            ]))
+        );
+        let cfg = SwaphiConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.devices, 3, "rates imply the device count");
+        assert_eq!(cfg.rates, vec![1.0, 1.0, 0.25]);
+        let sc = cfg.search_config();
+        assert_eq!(sc.devices, 3);
+        assert_eq!(sc.rates, vec![1.0, 1.0, 0.25]);
+        assert_eq!(sc.device_rates(), vec![1.0, 1.0, 0.25]);
+        // integers widen; explicit matching count is accepted
+        let raw =
+            RawConfig::parse("[devices]\ncount = 2\nrates = [1, 0.5]\n").unwrap();
+        let cfg = SwaphiConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.devices, 2);
+        assert_eq!(cfg.rates, vec![1.0, 0.5]);
+        // no rates -> uniform fleet materialized on demand
+        let cfg = SwaphiConfig::default_config();
+        assert!(cfg.rates.is_empty());
+        assert_eq!(cfg.search_config().device_rates(), vec![1.0]);
+    }
+
+    #[test]
+    fn rates_mismatch_and_bad_entries_rejected() {
+        let raw = RawConfig::parse("[devices]\ncount = 3\nrates = [1.0, 0.5]\n").unwrap();
+        let err = SwaphiConfig::from_raw(&raw).unwrap_err().to_string();
+        assert!(err.contains("2 entries"), "{err}");
+        let raw = RawConfig::parse("[devices]\nrates = [1.0, 0.0]\n").unwrap();
+        let err = SwaphiConfig::from_raw(&raw).unwrap_err().to_string();
+        assert!(err.contains("positive"), "{err}");
+        let raw = RawConfig::parse("[devices]\nrates = [1.0, -2.0]\n").unwrap();
+        assert!(SwaphiConfig::from_raw(&raw).is_err());
+        let raw = RawConfig::parse("[devices]\nrates = [true]\n").unwrap();
+        let err = SwaphiConfig::from_raw(&raw).unwrap_err().to_string();
+        assert!(err.contains("expected number"), "{err}");
+        let raw = RawConfig::parse("[devices]\nrates = 4\n").unwrap();
+        let err = SwaphiConfig::from_raw(&raw).unwrap_err().to_string();
+        assert!(err.contains("expected list"), "{err}");
+        assert!(RawConfig::parse("[devices]\nrates = [1.0, 0.5\n").is_err());
+    }
+
+    #[test]
+    fn empty_list_value_parses() {
+        let raw = RawConfig::parse("[devices]\nrates = []\n").unwrap();
+        assert_eq!(raw.get("devices.rates"), Some(&Value::List(Vec::new())));
+        let cfg = SwaphiConfig::from_raw(&raw).unwrap();
+        assert!(cfg.rates.is_empty());
+        assert_eq!(cfg.devices, 1);
     }
 
     #[test]

@@ -7,14 +7,17 @@
 //! workloads. This module is that layer for the simulated fleet:
 //!
 //! * a [`DeviceSet`] statically partitions the session's chunk plan into
-//!   per-device shards ([`partition_chunks`], greedy LPT on padded
-//!   residues), so each device streams *its own* contiguous slice of the
-//!   database — the scatter half;
+//!   per-device shards ([`partition_chunks_weighted`], greedy LPT on
+//!   padded residues ÷ per-device rate — uniform fleets get the classic
+//!   length-balanced split), so each device streams *its own* contiguous
+//!   slice of the database — the scatter half;
 //! * per batch, [`DeviceSet::queues`] materializes one work queue per
 //!   device holding that device's `(query, chunk)` items; a device drains
 //!   its own queue front-first and, when empty, **steals from the back of
-//!   the deepest other queue** — the dynamic tail balancing that keeps a
-//!   straggler device from serializing the batch;
+//!   the queue with the largest estimated remaining time** (depth ÷
+//!   rate) — the dynamic tail balancing that keeps a straggler device
+//!   from serializing the batch, with fast devices strip-mining slow
+//!   ones first;
 //! * the gather half stays in the coordinator: per-thread [`ScoreSink`]
 //!   shards merge once at the barrier, and because sinks are
 //!   order-independent the merged result is byte-identical to the
@@ -28,7 +31,7 @@
 //!
 //! [`ScoreSink`]: crate::coordinator::results::ScoreSink
 
-use crate::db::chunk::{partition_chunks, Chunk};
+use crate::db::chunk::{partition_chunks_weighted, Chunk};
 use crate::metrics::{Histogram, HistogramSummary};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -40,6 +43,37 @@ use std::sync::Mutex;
 pub struct WorkItem {
     pub query: usize,
     pub chunk: usize,
+}
+
+/// The shared steal policy of the execution layer AND the simulator
+/// ([`crate::phi::sim::simulate_sharded_rates`] — one implementation so
+/// the model CI gates can never drift from the scheduler that runs):
+/// pick the victim with the largest *estimated remaining time*
+/// (queue depth ÷ rate, first maximum — deterministic; uniform rates
+/// degrade to deepest-queue), then apply the profitability guard — the
+/// steal moves one item onto the thief at a cost of `1/rate` item-units,
+/// so only raid a victim whose estimated remaining time is at least
+/// that (at uniform rates: "victim non-empty", the classic discipline).
+/// Returns `None` when no profitable victim exists.
+pub fn pick_steal_victim(
+    depths: impl IntoIterator<Item = usize>,
+    rates: &[f64],
+    thief: usize,
+) -> Option<usize> {
+    let mut victim = None;
+    let mut best = 0.0f64;
+    for (d, depth) in depths.into_iter().enumerate() {
+        if d == thief {
+            continue;
+        }
+        let est = depth as f64 / rates[d];
+        if est > best {
+            best = est;
+            victim = Some(d);
+        }
+    }
+    let v = victim?;
+    (best >= 1.0 / rates[thief]).then_some(v)
 }
 
 /// Cumulative per-device counters (survive across batches — the daemon
@@ -57,15 +91,25 @@ struct DeviceCounters {
 }
 
 /// Point-in-time view of one device (for stats endpoints and reports).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DeviceSnapshot {
     pub device: usize,
     /// Chunks of the static shard this device owns.
     pub shard_chunks: usize,
+    /// Relative device speed (1.0 = a full-rate coprocessor).
+    pub rate: f64,
     pub executed: u64,
     pub stolen: u64,
     pub lost: u64,
     pub queue_depth: usize,
+}
+
+impl DeviceSnapshot {
+    /// Estimated remaining time for this device's queue in rate-normalized
+    /// item units (`depth ÷ rate`) — the steal policy's victim metric.
+    pub fn est_remaining(&self) -> f64 {
+        self.queue_depth as f64 / self.rate
+    }
 }
 
 /// A fleet of simulated coprocessors bound to one chunk plan: the static
@@ -76,6 +120,9 @@ pub struct DeviceSet {
     shards: Vec<Vec<usize>>,
     n_chunks: usize,
     steal: bool,
+    /// Relative per-device speed (1.0 = full-rate); uniform unless the
+    /// fleet was built with [`DeviceSet::with_rates`].
+    rates: Vec<f64>,
     counters: Vec<DeviceCounters>,
     batches: AtomicU64,
     /// Work items executed per device per batch.
@@ -85,15 +132,28 @@ pub struct DeviceSet {
 }
 
 impl DeviceSet {
-    /// Partition `chunks` across `devices` shards (length-balanced).
-    /// `steal` enables run-time work stealing between device queues.
+    /// Partition `chunks` across `devices` equal-rate shards
+    /// (length-balanced). `steal` enables run-time work stealing between
+    /// device queues.
     pub fn new(chunks: &[Chunk], devices: usize, steal: bool) -> DeviceSet {
-        let shards = partition_chunks(chunks, devices);
+        Self::with_rates(chunks, &vec![1.0; devices.max(1)], steal)
+    }
+
+    /// Partition `chunks` across a heterogeneous fleet: one shard per
+    /// entry of `rates` (relative device speeds), weighted so each
+    /// device's share matches its throughput
+    /// ([`partition_chunks_weighted`] — a uniform rate vector reproduces
+    /// [`DeviceSet::new`] exactly). The steal policy also becomes
+    /// rate-aware: victims are picked by estimated remaining time
+    /// (`depth ÷ rate`), so fast devices strip-mine slow ones first.
+    pub fn with_rates(chunks: &[Chunk], rates: &[f64], steal: bool) -> DeviceSet {
+        let shards = partition_chunks_weighted(chunks, rates);
         let counters = (0..shards.len()).map(|_| DeviceCounters::default()).collect();
         DeviceSet {
             shards,
             n_chunks: chunks.len(),
             steal,
+            rates: rates.to_vec(),
             counters,
             batches: AtomicU64::new(0),
             items_per_batch: Mutex::new(Histogram::exponential(1 << 20)),
@@ -112,6 +172,11 @@ impl DeviceSet {
 
     pub fn steal_enabled(&self) -> bool {
         self.steal
+    }
+
+    /// Relative per-device speeds this fleet was built with.
+    pub fn rates(&self) -> &[f64] {
+        &self.rates
     }
 
     /// The static chunk shard of each device (ascending chunk ids).
@@ -165,6 +230,7 @@ impl DeviceSet {
             .map(|(d, c)| DeviceSnapshot {
                 device: d,
                 shard_chunks: self.shards[d].len(),
+                rate: self.rates[d],
                 executed: c.executed.load(Ordering::Relaxed),
                 stolen: c.stolen.load(Ordering::Relaxed),
                 lost: c.lost.load(Ordering::Relaxed),
@@ -202,8 +268,12 @@ pub struct WorkQueues<'a> {
 
 impl WorkQueues<'_> {
     /// Next work item for device `dev`: front of its own queue, else (if
-    /// stealing is enabled) the back of the deepest other queue. Returns
-    /// `None` only when every queue is empty — i.e. the batch is done.
+    /// stealing is enabled) the back of the queue with the largest
+    /// estimated remaining time. Returns `None` when this device is done
+    /// for the batch: every queue is empty, or the only remaining work
+    /// sits with owners that will finish it sooner than this device
+    /// could (the profitability guard) — either way its own queue is
+    /// empty, so no item is ever abandoned.
     pub fn next(&self, dev: usize) -> Option<WorkItem> {
         if let Some(item) = self.pop(dev, dev) {
             return Some(item);
@@ -212,21 +282,15 @@ impl WorkQueues<'_> {
             return None;
         }
         loop {
-            // victim: the deepest non-empty queue of another device
-            // (first maximum, so the scan is deterministic)
-            let mut victim = None;
-            let mut best = 0usize;
-            for (d, depth) in self.depths.iter().enumerate() {
-                if d == dev {
-                    continue;
-                }
-                let depth = depth.load(Ordering::Relaxed);
-                if depth > best {
-                    best = depth;
-                    victim = Some(d);
-                }
-            }
-            let v = victim?;
+            // the shared rate-aware policy: victim by estimated
+            // remaining time, guarded so a slow thief never grabs a
+            // tail the fleet would finish sooner (see
+            // [`pick_steal_victim`])
+            let v = pick_steal_victim(
+                self.depths.iter().map(|d| d.load(Ordering::Relaxed)),
+                &self.set.rates,
+                dev,
+            )?;
             if let Some(item) = self.pop(dev, v) {
                 return Some(item);
             }
@@ -400,6 +464,74 @@ mod tests {
         queues.finish();
         let steals = set.steals_summary();
         assert!(steals.max > 0, "steal histogram must see the raid");
+    }
+
+    #[test]
+    fn pick_steal_victim_policy() {
+        // uniform rates: deepest queue, first maximum, empty fleet = None
+        let uni = [1.0, 1.0, 1.0];
+        assert_eq!(pick_steal_victim([0, 5, 5], &uni, 0), Some(1));
+        assert_eq!(pick_steal_victim([0, 0, 1], &uni, 0), Some(2));
+        assert_eq!(pick_steal_victim([0, 0, 0], &uni, 0), None);
+        assert_eq!(pick_steal_victim([9, 0, 0], &uni, 0), None, "own queue is not a victim");
+        // rate-aware: 4 items at quarter rate outrank 10 at full rate
+        let skew = [1.0, 1.0, 0.25];
+        assert_eq!(pick_steal_victim([0, 10, 4], &skew, 0), Some(2));
+        assert_eq!(pick_steal_victim([0, 17, 4], &skew, 0), Some(1));
+        // profitability guard: the quarter-rate thief (cost 4 item-units)
+        // declines victims with less than 4 units of estimated remaining
+        // time, but raids deep ones
+        assert_eq!(pick_steal_victim([3, 3, 0], &skew, 2), None);
+        assert_eq!(pick_steal_victim([5, 3, 0], &skew, 2), Some(0));
+    }
+
+    #[test]
+    fn with_uniform_rates_matches_unrated_fleet() {
+        let chunks = chunks(300, 2048);
+        let plain = DeviceSet::new(&chunks, 3, true);
+        let rated = DeviceSet::with_rates(&chunks, &[1.0, 1.0, 1.0], true);
+        assert_eq!(plain.shards(), rated.shards());
+        assert_eq!(rated.rates(), &[1.0, 1.0, 1.0]);
+        assert!(plain.snapshot().iter().all(|d| d.rate == 1.0));
+    }
+
+    #[test]
+    fn skewed_rates_shrink_the_slow_shard() {
+        let chunks = chunks(400, 1024);
+        let set = DeviceSet::with_rates(&chunks, &[1.0, 1.0, 0.25], true);
+        let sizes: Vec<usize> = set.shards().iter().map(|s| s.len()).collect();
+        assert!(
+            sizes[2] < sizes[0] && sizes[2] < sizes[1],
+            "quarter-rate device must own the smallest shard: {sizes:?}"
+        );
+        let snap = set.snapshot();
+        assert_eq!(snap[2].rate, 0.25);
+        assert_eq!(snap[2].est_remaining(), 0.0, "idle fleet");
+    }
+
+    #[test]
+    fn steal_victim_is_estimated_time_not_raw_depth() {
+        // device 1 (rate 1.0) is left with a deeper queue than device 2
+        // (rate 0.25), but within 4x — so device 2's estimated remaining
+        // time is larger and the thief must raid it first (a raw-depth
+        // policy would pick device 1)
+        let chunks = chunks(400, 1024);
+        let set = DeviceSet::with_rates(&chunks, &[1.0, 1.0, 0.25], true);
+        let queues = set.queues(4);
+        assert!(queues.depth(2) > 0, "slow device needs a queue: {:?}", set.shards());
+        while queues.depth(0) > 0 {
+            queues.next(0).unwrap();
+        }
+        while queues.depth(1) > 3 * queues.depth(2) {
+            queues.next(1).unwrap();
+        }
+        let (d1, d2) = (queues.depth(1), queues.depth(2));
+        assert!(d1 > d2, "need the fast queue deeper: {d1} vs {d2}");
+        assert!((d1 as f64) < 4.0 * d2 as f64, "but within the rate ratio");
+        queues.next(0).expect("device 0 must steal");
+        let snap = set.snapshot();
+        assert_eq!(snap[2].lost, 1, "thief must raid the slow device: {snap:?}");
+        assert_eq!(snap[1].lost, 0, "{snap:?}");
     }
 
     #[test]

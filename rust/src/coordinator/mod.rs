@@ -127,6 +127,14 @@ pub struct SearchConfig {
     /// section's `steal` key). On by default; off pins every chunk to
     /// its statically assigned device.
     pub steal: bool,
+    /// Per-device speeds as multiples of the calibrated coprocessor
+    /// (1.0 = a full-rate device; the `[devices]` section's `rates` key
+    /// / `--device-rates` flag). Empty = uniform full-rate fleet. When
+    /// set it must have exactly `devices` entries; chunk shards are
+    /// weighted by it, the steal policy picks victims by estimated
+    /// remaining time instead of raw queue depth, and the attached
+    /// device simulation charges each device at its rate.
+    pub rates: Vec<f64>,
     /// Chunking policy for the workload pool.
     pub chunk: ChunkPlanConfig,
     /// Hits to keep per query.
@@ -137,11 +145,29 @@ pub struct SearchConfig {
     pub sim: Option<SimConfig>,
 }
 
+impl SearchConfig {
+    /// The effective per-device rate vector: the configured `rates`, or
+    /// a uniform fleet of `devices` full-rate workers when unset.
+    pub fn device_rates(&self) -> Vec<f64> {
+        if self.rates.is_empty() {
+            vec![1.0; self.devices.max(1)]
+        } else {
+            assert_eq!(
+                self.rates.len(),
+                self.devices.max(1),
+                "device rate vector must have one entry per device"
+            );
+            self.rates.clone()
+        }
+    }
+}
+
 impl Default for SearchConfig {
     fn default() -> Self {
         SearchConfig {
             devices: 1,
             steal: true,
+            rates: Vec::new(),
             chunk: ChunkPlanConfig::default(),
             top_k: 10,
             precision: Precision::default(),
@@ -203,7 +229,8 @@ impl<'a> SearchSession<'a> {
         // pair-aligned so the narrow tier's wide profiles never straddle
         // a chunk boundary (each would be scored twice otherwise)
         let chunks = plan_chunks_paired(index, config.chunk);
-        let devices = Arc::new(DeviceSet::new(&chunks, config.devices, config.steal));
+        let devices =
+            Arc::new(DeviceSet::with_rates(&chunks, &config.device_rates(), config.steal));
         SearchSession { index, scoring, config, chunks, devices }
     }
 
@@ -370,7 +397,28 @@ impl<'a> SearchSession<'a> {
             sim_cfg.precision =
                 if rescore.i16_lanes > 0 { Precision::I16 } else { Precision::I32 };
             sim_cfg.rescore_fraction = rescore.rescore_fraction();
-            simulate_search(self.index, &self.chunks, factory.kind(), ctx.len(), sim_cfg)
+            // rates are absolute multipliers of the calibrated device
+            // (1.0 = the 5110P), so only an all-full-rate fleet keeps
+            // the pooled simulation — a uniform 0.5 fleet really is
+            // simulated twice as slow, continuously in the rate vector
+            if self.devices.rates().iter().all(|&r| r == 1.0) {
+                simulate_search(self.index, &self.chunks, factory.kind(), ctx.len(), sim_cfg)
+            } else {
+                // heterogeneous fleet: simulate the exact shard plan and
+                // steal discipline the session schedules, with each
+                // device charged at its own rate
+                sim_cfg.devices = self.devices.n_devices();
+                crate::phi::sim::simulate_sharded_rates(
+                    self.index,
+                    &self.chunks,
+                    self.devices.shards(),
+                    factory.kind(),
+                    ctx.len(),
+                    sim_cfg,
+                    self.config.steal,
+                    self.devices.rates(),
+                )
+            }
         });
         QueryResult {
             query_id: ctx.id.clone(),
@@ -828,6 +876,100 @@ mod tests {
         };
         let set = std::sync::Arc::new(DeviceSet::new(&[], 2, true));
         let _ = SearchSession::with_device_set(&idx, sc, cfg, set);
+    }
+
+    #[test]
+    fn heterogeneous_rates_preserve_results_and_report_rates() {
+        // a skewed fleet reshards and resteals, but the gather contract
+        // holds: scores identical to the 1-device path
+        let (idx, sc) = setup(220);
+        let q = generate_query(50, 6);
+        let base = Coordinator::new(
+            &idx,
+            sc.clone(),
+            SearchConfig {
+                sim: None,
+                chunk: ChunkPlanConfig { target_padded_residues: 2048 },
+                ..Default::default()
+            },
+        )
+        .search(&NativeFactory(EngineKind::InterSP), "q", &q)
+        .unwrap();
+        let rated = Coordinator::new(
+            &idx,
+            sc,
+            SearchConfig {
+                devices: 3,
+                rates: vec![1.0, 1.0, 0.25],
+                sim: None,
+                chunk: ChunkPlanConfig { target_padded_residues: 2048 },
+                ..Default::default()
+            },
+        );
+        let r = rated.search(&NativeFactory(EngineKind::InterSP), "q", &q).unwrap();
+        assert_eq!(r.scores, base.scores);
+        let snaps = rated.session().device_snapshots();
+        assert_eq!(snaps.len(), 3);
+        assert_eq!(snaps[2].rate, 0.25);
+        assert!(
+            snaps[2].shard_chunks < snaps[0].shard_chunks,
+            "slow device owns the small shard: {snaps:?}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "one entry per device")]
+    fn rate_vector_must_match_device_count() {
+        let (idx, sc) = setup(40);
+        let cfg =
+            SearchConfig { devices: 3, rates: vec![1.0, 0.5], sim: None, ..Default::default() };
+        let _ = SearchSession::new(&idx, sc, cfg);
+    }
+
+    #[test]
+    fn skewed_fleet_attaches_rate_aware_sim() {
+        let (idx, sc) = setup(300);
+        let q = generate_query(80, 3);
+        let mk = |rates: Vec<f64>| {
+            let devices = rates.len();
+            let coord = Coordinator::new(
+                &idx,
+                sc.clone(),
+                SearchConfig {
+                    devices,
+                    rates,
+                    sim: Some(SimConfig { replication: 100, ..Default::default() }),
+                    chunk: ChunkPlanConfig { target_padded_residues: 2048 },
+                    ..Default::default()
+                },
+            );
+            coord.search(&NativeFactory(EngineKind::InterSP), "q", &q).unwrap()
+        };
+        let skewed = mk(vec![1.0, 1.0, 0.25]);
+        let sim = skewed.sim.as_ref().expect("sim attached");
+        assert_eq!(sim.device_done.len(), 3);
+        assert!(sim.gcups() > 0.0);
+        // 2.25 aggregate rate lands between 2 and 3 full-rate devices
+        let two = mk(vec![1.0, 1.0]);
+        let g = sim.gcups();
+        assert!(
+            g > two.sim_gcups().unwrap() * 0.9,
+            "2.25x fleet must roughly keep up with 2x: {g}"
+        );
+        // rates are absolute multiples of the calibrated device: a
+        // uniform half-rate pair must simulate materially slower than a
+        // full-rate pair (continuity in the rate vector, not a silent
+        // fall-back to the full-rate pooled model)
+        // (offload/grant overheads don't scale with rate, so the ratio
+        // sits near 0.65-0.7 rather than exactly 0.5; a silent
+        // full-rate fallback would put it at ~1.0)
+        let half = mk(vec![0.5, 0.5]);
+        assert!(
+            half.sim_gcups().unwrap() < two.sim_gcups().unwrap() * 0.8,
+            "half-rate fleet must not simulate at full rate: {} vs {}",
+            half.sim_gcups().unwrap(),
+            two.sim_gcups().unwrap()
+        );
     }
 
     #[test]

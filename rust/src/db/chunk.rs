@@ -125,6 +125,79 @@ pub fn partition_chunks(chunks: &[Chunk], devices: usize) -> Vec<Vec<usize>> {
     shards
 }
 
+/// Rate-weighted partition for heterogeneous fleets (the paper's §V
+/// hybrid model: Phi-class and SWIPE-class workers with very different
+/// throughputs share one database pass). `rates[d]` is device `d`'s
+/// relative speed; the split balances *estimated compute time*
+/// (`padded_residues / rate`) instead of raw residues, so a device at
+/// rate 0.25 owns a quarter of a full-rate device's share.
+///
+/// Greedy LPT on uniform machines (`Q||Cmax` earliest-completion-time):
+/// chunks heaviest-first, each to the device that would finish it
+/// soonest (ties to the exactly-lighter integer load, then the lower
+/// device index — fully deterministic). Two guarantees:
+///
+/// * **equal rates degrade exactly**: any uniform rate vector returns
+///   the same shards as [`partition_chunks`] with `rates.len()` devices;
+/// * **never worse than rate-blind**: if the greedy weighted split's
+///   modeled makespan ([`static_makespan`]) exceeds the unweighted
+///   split's under the same rates, the unweighted split is returned —
+///   weighting is a monotone improvement by construction.
+pub fn partition_chunks_weighted(chunks: &[Chunk], rates: &[f64]) -> Vec<Vec<usize>> {
+    assert!(!rates.is_empty(), "need at least one device rate");
+    assert!(
+        rates.iter().all(|r| r.is_finite() && *r > 0.0),
+        "device rates must be finite and positive: {rates:?}"
+    );
+    let devices = rates.len();
+    if rates.windows(2).all(|w| w[0] == w[1]) {
+        return partition_chunks(chunks, devices);
+    }
+    let mut order: Vec<usize> = (0..chunks.len()).collect();
+    order.sort_by(|&a, &b| {
+        chunks[b].padded_residues.cmp(&chunks[a].padded_residues).then(a.cmp(&b))
+    });
+    let mut shards: Vec<Vec<usize>> = vec![Vec::new(); devices];
+    let mut load = vec![0u128; devices];
+    for c in order {
+        let w = chunks[c].padded_residues;
+        let d = (0..devices)
+            .min_by(|&a, &b| {
+                let ta = (load[a] + w) as f64 / rates[a];
+                let tb = (load[b] + w) as f64 / rates[b];
+                ta.partial_cmp(&tb)
+                    .unwrap()
+                    .then(load[a].cmp(&load[b]))
+                    .then(a.cmp(&b))
+            })
+            .unwrap();
+        load[d] += w;
+        shards[d].push(c);
+    }
+    for shard in &mut shards {
+        shard.sort_unstable();
+    }
+    let unweighted = partition_chunks(chunks, devices);
+    if static_makespan(chunks, &unweighted, rates) < static_makespan(chunks, &shards, rates) {
+        return unweighted;
+    }
+    shards
+}
+
+/// Modeled makespan of a static split under a rate vector: the maximum
+/// over devices of shard padded residues ÷ rate — the quantity the
+/// weighted LPT balances (offload and steal dynamics live in the
+/// simulator, not here).
+pub fn static_makespan(chunks: &[Chunk], shards: &[Vec<usize>], rates: &[f64]) -> f64 {
+    shards
+        .iter()
+        .zip(rates)
+        .map(|(s, &r)| {
+            s.iter().map(|&c| chunks[c].padded_residues).sum::<u128>() as f64 / r
+        })
+        .fold(0.0, f64::max)
+}
+
 fn make_chunk(id: usize, start: usize, end: usize, real: u128, padded: u128) -> Chunk {
     Chunk {
         id,
@@ -272,6 +345,96 @@ mod tests {
         assert_eq!(one[0].len(), chunks.len());
         // empty plan
         assert_eq!(partition_chunks(&[], 4), vec![Vec::<usize>::new(); 4]);
+    }
+
+    #[test]
+    fn weighted_partition_with_uniform_rates_is_exactly_unweighted() {
+        let idx = index(400, 9);
+        let chunks = plan_chunks(&idx, ChunkPlanConfig { target_padded_residues: 2048 });
+        for devices in [1usize, 2, 3, 5] {
+            for rate in [1.0f64, 0.5, 3.25] {
+                let rates = vec![rate; devices];
+                assert_eq!(
+                    partition_chunks_weighted(&chunks, &rates),
+                    partition_chunks(&chunks, devices),
+                    "{devices} devices at uniform rate {rate}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_partition_covers_once_and_never_loses_to_unweighted() {
+        let idx = index(500, 3);
+        let chunks = plan_chunks(&idx, ChunkPlanConfig { target_padded_residues: 2048 });
+        for rates in [
+            vec![1.0, 0.25],
+            vec![1.0, 1.0, 0.25],
+            vec![2.0, 1.0, 0.5, 0.1],
+        ] {
+            let shards = partition_chunks_weighted(&chunks, &rates);
+            assert_eq!(shards.len(), rates.len());
+            let mut seen: Vec<usize> = shards.iter().flatten().copied().collect();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..chunks.len()).collect::<Vec<_>>(), "{rates:?}");
+            for s in &shards {
+                assert!(s.windows(2).all(|w| w[0] < w[1]), "shards stay ascending");
+            }
+            let weighted = static_makespan(&chunks, &shards, &rates);
+            let unweighted =
+                static_makespan(&chunks, &partition_chunks(&chunks, rates.len()), &rates);
+            assert!(
+                weighted <= unweighted,
+                "{rates:?}: weighted {weighted} vs unweighted {unweighted}"
+            );
+            // a genuinely skewed fleet must see a real gain over the
+            // rate-blind split (the slow device would otherwise be the
+            // straggler by its rate deficit)
+            assert!(
+                weighted < unweighted * 0.9,
+                "{rates:?}: expected a real improvement, got {weighted} vs {unweighted}"
+            );
+        }
+    }
+
+    #[test]
+    fn weighted_partition_slow_device_gets_less_work() {
+        let idx = index(500, 3);
+        let chunks = plan_chunks(&idx, ChunkPlanConfig { target_padded_residues: 2048 });
+        let rates = [1.0, 1.0, 0.25];
+        let shards = partition_chunks_weighted(&chunks, &rates);
+        let load = |s: &[usize]| s.iter().map(|&c| chunks[c].padded_residues).sum::<u128>();
+        let slow = load(&shards[2]);
+        assert!(
+            slow < load(&shards[0]) / 2 && slow < load(&shards[1]) / 2,
+            "slow device must own a fraction of a fast shard: {:?}",
+            shards.iter().map(|s| load(s)).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn weighted_partition_is_deterministic_and_handles_edges() {
+        let idx = index(200, 5);
+        let chunks = plan_chunks(&idx, ChunkPlanConfig { target_padded_residues: 4096 });
+        let rates = [1.0, 0.5, 0.25];
+        assert_eq!(
+            partition_chunks_weighted(&chunks, &rates),
+            partition_chunks_weighted(&chunks, &rates)
+        );
+        // one device takes everything regardless of its rate
+        let one = partition_chunks_weighted(&chunks, &[0.25]);
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].len(), chunks.len());
+        // empty plan
+        assert_eq!(partition_chunks_weighted(&[], &rates), vec![Vec::<usize>::new(); 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and positive")]
+    fn weighted_partition_rejects_bad_rates() {
+        let idx = index(50, 4);
+        let chunks = plan_chunks(&idx, ChunkPlanConfig::default());
+        let _ = partition_chunks_weighted(&chunks, &[1.0, 0.0]);
     }
 
     #[test]

@@ -20,6 +20,7 @@ use super::calibration::{self, PHI_THREADS};
 use super::offload::OffloadModel;
 use super::sched::{simulate_schedule, Policy};
 use crate::align::{EngineKind, Precision};
+use crate::coordinator::devices::pick_steal_victim;
 use crate::db::chunk::Chunk;
 use crate::db::index::Index;
 use crate::db::profile::LANES;
@@ -143,7 +144,90 @@ fn chunk_item_costs(index: &Index, chunk: &Chunk, kind: EngineKind, qlen: usize,
     out
 }
 
-/// Simulate one query search over pre-planned chunks.
+/// One worker of a heterogeneous simulated fleet — the general form of
+/// the paper's §V hybrid model (Phi-class and SWIPE-class workers with
+/// very different throughputs cooperating on one database pass).
+#[derive(Clone, Copy, Debug)]
+pub enum Worker {
+    /// Phi-class coprocessor: pays the offload model; chunk latency is
+    /// the 240-thread schedule makespan divided by `rate` (1.0 = the
+    /// calibrated 5110P).
+    Phi { rate: f64 },
+    /// Host-CPU (SWIPE-class) worker: no offload cost; `rate` is an
+    /// absolute aggregate throughput in cells/s.
+    Host { rate: f64 },
+}
+
+/// Shared-pool scheduling over an arbitrary worker fleet: the
+/// earliest-free worker takes the next chunk (paper: "obtains a chunk of
+/// database sequences from its pool of workloads"). [`simulate_search`]
+/// is the all-Phi uniform special case and [`simulate_hybrid_search`]
+/// the 2-rate Phi+host one.
+pub fn simulate_pooled(
+    index: &Index,
+    chunks: &[Chunk],
+    kind: EngineKind,
+    qlen: usize,
+    cfg: SimConfig,
+    workers: &[Worker],
+) -> SimReport {
+    assert!(!workers.is_empty(), "need at least one worker");
+    let rep = cfg.replication.max(1) as u128;
+    let mut clock: Vec<f64> = workers
+        .iter()
+        .map(|w| match w {
+            Worker::Phi { .. } => cfg.offload.setup_s,
+            Worker::Host { .. } => 0.0,
+        })
+        .collect();
+    let mut chunks_per = vec![0usize; workers.len()];
+    let n_phi = workers.iter().filter(|w| matches!(w, Worker::Phi { .. })).count();
+    let mut offload_time = cfg.offload.setup_s * n_phi as f64;
+    let mut compute_time = 0.0;
+    let mut padded_cells: u128 = 0;
+
+    for chunk in chunks {
+        let (w, _) = clock
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        let cells = chunk.padded_cells(qlen) * rep;
+        match workers[w] {
+            Worker::Phi { rate } => {
+                let off = cfg.offload.chunk_cost(chunk.transfer_bytes * rep as u64);
+                // device level: OpenMP loop schedule across device threads
+                let costs = chunk_item_costs(index, chunk, kind, qlen, &cfg);
+                let outcome = simulate_schedule(&costs, cfg.threads_per_device, cfg.policy);
+                clock[w] += off + outcome.makespan / rate;
+                offload_time += off;
+                compute_time += outcome.makespan / rate;
+            }
+            Worker::Host { rate } => {
+                let dt = cells as f64 / rate;
+                clock[w] += dt;
+                compute_time += dt;
+            }
+        }
+        chunks_per[w] += 1;
+        padded_cells += cells;
+    }
+
+    let makespan = clock.iter().cloned().fold(0.0, f64::max);
+    SimReport {
+        makespan,
+        real_cells: chunks.iter().map(|c| c.real_cells(qlen) * rep).sum(),
+        padded_cells,
+        offload_time,
+        compute_time,
+        stolen_chunks: vec![0; clock.len()],
+        device_done: clock,
+        chunks_per_device: chunks_per,
+    }
+}
+
+/// Simulate one query search over pre-planned chunks (a uniform fleet of
+/// `cfg.devices` full-rate coprocessors sharing the chunk pool).
 pub fn simulate_search(
     index: &Index,
     chunks: &[Chunk],
@@ -152,44 +236,8 @@ pub fn simulate_search(
     cfg: SimConfig,
 ) -> SimReport {
     assert!(cfg.devices >= 1);
-    let mut device_clock = vec![cfg.offload.setup_s; cfg.devices];
-    let mut chunks_per_device = vec![0usize; cfg.devices];
-    let mut offload_time = cfg.offload.setup_s * cfg.devices as f64;
-    let mut compute_time = 0.0;
-    let mut padded_cells: u128 = 0;
-
-    // host level: dynamic chunk pool — the earliest-free device takes the
-    // next chunk (paper: "obtains a chunk of database sequences from its
-    // pool of workloads")
-    let rep = cfg.replication.max(1) as u128;
-    for chunk in chunks {
-        let (dev, _) = device_clock
-            .iter()
-            .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap();
-        let off = cfg.offload.chunk_cost(chunk.transfer_bytes * rep as u64);
-        // device level: OpenMP loop schedule across device threads
-        let costs = chunk_item_costs(index, chunk, kind, qlen, &cfg);
-        let outcome = simulate_schedule(&costs, cfg.threads_per_device, cfg.policy);
-        device_clock[dev] += off + outcome.makespan;
-        chunks_per_device[dev] += 1;
-        offload_time += off;
-        compute_time += outcome.makespan;
-        padded_cells += chunk.padded_cells(qlen) * rep;
-    }
-
-    let makespan = device_clock.iter().cloned().fold(0.0, f64::max);
-    SimReport {
-        makespan,
-        real_cells: chunks.iter().map(|c| c.real_cells(qlen) * rep).sum(),
-        padded_cells,
-        offload_time,
-        compute_time,
-        stolen_chunks: vec![0; device_clock.len()],
-        device_done: device_clock,
-        chunks_per_device,
-    }
+    let workers = vec![Worker::Phi { rate: 1.0 }; cfg.devices];
+    simulate_pooled(index, chunks, kind, qlen, cfg, &workers)
 }
 
 /// Simulate one query search under the **sharded multi-device layer**:
@@ -208,8 +256,34 @@ pub fn simulate_sharded_search(
     cfg: SimConfig,
     steal: bool,
 ) -> SimReport {
+    let rates = vec![1.0; shards.len()];
+    simulate_sharded_rates(index, chunks, shards, kind, qlen, cfg, steal, &rates)
+}
+
+/// Rate-aware sharded simulation: device `d` runs at `rates[d]` × the
+/// calibrated coprocessor speed (compute scales; PCIe offload does not),
+/// and an idle device steals from the victim with the largest *estimated
+/// remaining time* — queue depth ÷ rate, the same policy as the real
+/// `DeviceSet` — so fast devices strip-mine slow ones first. A uniform
+/// rate vector is bit-identical to [`simulate_sharded_search`].
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_sharded_rates(
+    index: &Index,
+    chunks: &[Chunk],
+    shards: &[Vec<usize>],
+    kind: EngineKind,
+    qlen: usize,
+    cfg: SimConfig,
+    steal: bool,
+    rates: &[f64],
+) -> SimReport {
     assert!(cfg.devices >= 1);
     assert_eq!(shards.len(), cfg.devices, "one shard per device");
+    assert_eq!(rates.len(), cfg.devices, "one rate per device");
+    assert!(
+        rates.iter().all(|r| r.is_finite() && *r > 0.0),
+        "device rates must be finite and positive: {rates:?}"
+    );
     let rep = cfg.replication.max(1) as u128;
     let mut queues: Vec<std::collections::VecDeque<usize>> =
         shards.iter().map(|s| s.iter().copied().collect()).collect();
@@ -229,18 +303,15 @@ pub fn simulate_sharded_search(
         else {
             break;
         };
-        // own queue front, else steal the back of the deepest other queue
+        // own queue front, else the shared steal policy — the SAME
+        // implementation the real `DeviceSet` work queues run (victim
+        // by estimated remaining time, profitability-guarded), so the
+        // simulated fleet can never drift from the execution layer
         let mut item = queues[dev].pop_front();
         if item.is_none() && steal {
-            let mut victim = None;
-            let mut best = 0usize;
-            for (d, q) in queues.iter().enumerate() {
-                if d != dev && q.len() > best {
-                    best = q.len();
-                    victim = Some(d);
-                }
-            }
-            if let Some(v) = victim {
+            if let Some(v) =
+                pick_steal_victim(queues.iter().map(|q| q.len()), rates, dev)
+            {
                 item = queues[v].pop_back();
                 if item.is_some() {
                     stolen_chunks[dev] += 1;
@@ -255,10 +326,10 @@ pub fn simulate_sharded_search(
         let off = cfg.offload.chunk_cost(chunk.transfer_bytes * rep as u64);
         let costs = chunk_item_costs(index, chunk, kind, qlen, &cfg);
         let outcome = simulate_schedule(&costs, cfg.threads_per_device, cfg.policy);
-        device_clock[dev] += off + outcome.makespan;
+        device_clock[dev] += off + outcome.makespan / rates[dev];
         chunks_per_device[dev] += 1;
         offload_time += off;
-        compute_time += outcome.makespan;
+        compute_time += outcome.makespan / rates[dev];
         padded_cells += chunk.padded_cells(qlen) * rep;
     }
 
@@ -283,7 +354,8 @@ pub fn simulate_sharded_search(
 /// extension ("concurrent execution of alignments on both CPUs and
 /// coprocessors by means of a hybrid parallelism model", as CUDASW++ 3.0
 /// does on GPUs): host CPU cores join the chunk pool as one extra
-/// "device" with SWIPE-class throughput and zero offload cost.
+/// worker with SWIPE-class throughput and zero offload cost. A 2-rate
+/// special case of the general [`simulate_pooled`] worker-fleet model.
 pub fn simulate_hybrid_search(
     index: &Index,
     chunks: &[Chunk],
@@ -293,56 +365,16 @@ pub fn simulate_hybrid_search(
     host_cores: usize,
 ) -> SimReport {
     assert!(cfg.devices >= 1);
-    let rep = cfg.replication.max(1) as u128;
-    // device clocks: [0..devices) = coprocessors, [devices] = host CPU
-    let n_workers = cfg.devices + usize::from(host_cores > 0);
-    let mut clock = vec![0.0f64; n_workers];
-    for c in clock.iter_mut().take(cfg.devices) {
-        *c = cfg.offload.setup_s;
+    // workers: [0..devices) = coprocessors, [devices] = host CPU
+    let mut workers = vec![Worker::Phi { rate: 1.0 }; cfg.devices];
+    if host_cores > 0 {
+        let host_rate = calibration::SWIPE_CORE_RATE
+            * host_cores as f64
+            * if host_cores > 8 { calibration::HOST_16C_EFFICIENCY } else { 1.0 }
+            / (1.0 + calibration::SWIPE_OVERHEAD_LEN / qlen.max(1) as f64);
+        workers.push(Worker::Host { rate: host_rate });
     }
-    let mut chunks_per = vec![0usize; n_workers];
-    let mut offload_time = cfg.offload.setup_s * cfg.devices as f64;
-    let mut compute_time = 0.0;
-    let mut padded_cells: u128 = 0;
-    let host_rate = calibration::SWIPE_CORE_RATE
-        * host_cores as f64
-        * if host_cores > 8 { calibration::HOST_16C_EFFICIENCY } else { 1.0 }
-        / (1.0 + calibration::SWIPE_OVERHEAD_LEN / qlen.max(1) as f64);
-    for chunk in chunks {
-        // earliest-free worker — greedy, like the shared pool
-        let (w, _) = clock
-            .iter()
-            .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap();
-        let cells = chunk.padded_cells(qlen) * rep;
-        if w < cfg.devices {
-            let off = cfg.offload.chunk_cost(chunk.transfer_bytes * rep as u64);
-            let costs = chunk_item_costs(index, chunk, kind, qlen, &cfg);
-            let outcome = simulate_schedule(&costs, cfg.threads_per_device, cfg.policy);
-            clock[w] += off + outcome.makespan;
-            offload_time += off;
-            compute_time += outcome.makespan;
-        } else {
-            // host CPU: no offload, SWIPE-class aggregate rate
-            let dt = cells as f64 / host_rate;
-            clock[w] += dt;
-            compute_time += dt;
-        }
-        chunks_per[w] += 1;
-        padded_cells += cells;
-    }
-    let makespan = clock.iter().cloned().fold(0.0, f64::max);
-    SimReport {
-        makespan,
-        real_cells: chunks.iter().map(|c| c.real_cells(qlen) * rep).sum(),
-        padded_cells,
-        offload_time,
-        compute_time,
-        stolen_chunks: vec![0; clock.len()],
-        device_done: clock,
-        chunks_per_device: chunks_per,
-    }
+    simulate_pooled(index, chunks, kind, qlen, cfg, &workers)
 }
 
 /// Fig 7 CPU baselines — analytic host-side cost models over the same
@@ -556,6 +588,98 @@ mod tests {
         assert!(stolen.stolen_chunks.iter().skip(1).any(|&s| s > 0), "{:?}", stolen.stolen_chunks);
         assert_eq!(stolen.chunks_per_device.iter().sum::<usize>(), chunks.len());
         assert_eq!(stolen.real_cells, no_steal.real_cells);
+    }
+
+    #[test]
+    fn rated_sharded_with_uniform_rates_is_identical() {
+        use crate::db::chunk::partition_chunks;
+        let (idx, chunks) = workload(1500);
+        for n in [1usize, 3] {
+            let shards = partition_chunks(&chunks, n);
+            let plain = simulate_sharded_search(
+                &idx, &chunks, &shards, EngineKind::InterSP, 729, cfg(n), true,
+            );
+            let rated = simulate_sharded_rates(
+                &idx, &chunks, &shards, EngineKind::InterSP, 729, cfg(n), true,
+                &vec![1.0; n],
+            );
+            assert_eq!(plain.makespan, rated.makespan, "{n} devices");
+            assert_eq!(plain.device_done, rated.device_done);
+            assert_eq!(plain.chunks_per_device, rated.chunks_per_device);
+            assert_eq!(plain.stolen_chunks, rated.stolen_chunks);
+        }
+    }
+
+    #[test]
+    fn skewed_fleet_weighted_shards_and_stealing_rescue_the_straggler() {
+        use crate::db::chunk::{partition_chunks, partition_chunks_weighted};
+        let (idx, chunks) = workload(2000);
+        assert!(chunks.len() >= 8);
+        let rates = [1.0, 1.0, 0.25];
+        let run = |shards: &[Vec<usize>], steal| {
+            simulate_sharded_rates(
+                &idx, &chunks, shards, EngineKind::InterSP, 1000, cfg(3), steal, &rates,
+            )
+        };
+        let unweighted = partition_chunks(&chunks, 3);
+        let weighted = partition_chunks_weighted(&chunks, &rates);
+        let blind = run(&unweighted, false);
+        let balanced = run(&weighted, false);
+        let stolen = run(&weighted, true);
+        // rate-blind LPT makes the quarter-rate device the straggler;
+        // weighting the split by rate must cut the makespan outright
+        assert!(
+            balanced.makespan < blind.makespan * 0.75,
+            "weighted {} vs rate-blind {}",
+            balanced.makespan,
+            blind.makespan
+        );
+        // stealing can only help further
+        assert!(stolen.makespan <= balanced.makespan * (1.0 + 1e-9));
+        // the slow device processed fewer chunks than either fast one
+        assert!(
+            stolen.chunks_per_device[2] < stolen.chunks_per_device[0]
+                && stolen.chunks_per_device[2] < stolen.chunks_per_device[1],
+            "{:?}",
+            stolen.chunks_per_device
+        );
+        // conservation is rate-independent
+        assert_eq!(blind.real_cells, stolen.real_cells);
+        assert_eq!(blind.padded_cells, stolen.padded_cells);
+        assert_eq!(
+            stolen.chunks_per_device.iter().sum::<usize>(),
+            chunks.len()
+        );
+    }
+
+    #[test]
+    fn rate_aware_steal_targets_the_slow_victim() {
+        // pile everything on the slow device: with rate-aware stealing
+        // the fast devices must take most of the work off it
+        let (idx, chunks) = workload(1500);
+        assert!(chunks.len() >= 8);
+        let rates = [1.0, 1.0, 0.2];
+        let mut shards: Vec<Vec<usize>> = vec![Vec::new(); 3];
+        shards[2] = (0..chunks.len()).collect();
+        let stolen = simulate_sharded_rates(
+            &idx, &chunks, &shards, EngineKind::InterSP, 1000, cfg(3), true, &rates,
+        );
+        let pinned = simulate_sharded_rates(
+            &idx, &chunks, &shards, EngineKind::InterSP, 1000, cfg(3), false, &rates,
+        );
+        assert!(
+            pinned.makespan > 3.0 * stolen.makespan,
+            "stealing must rescue the loaded straggler: {} vs {}",
+            pinned.makespan,
+            stolen.makespan
+        );
+        let raided: usize = stolen.stolen_chunks.iter().take(2).sum();
+        assert!(raided > 0, "{:?}", stolen.stolen_chunks);
+        assert!(
+            stolen.chunks_per_device[2] < chunks.len() / 2,
+            "slow device must not keep the bulk: {:?}",
+            stolen.chunks_per_device
+        );
     }
 
     #[test]

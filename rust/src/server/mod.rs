@@ -381,7 +381,8 @@ impl Server {
         // plan here (so the stats endpoint can observe it) and the same
         // Vec is handed to the coalescer's session
         let chunks = plan_chunks_paired(&index, search.chunk);
-        let devices = Arc::new(DeviceSet::new(&chunks, search.devices, search.steal));
+        let devices =
+            Arc::new(DeviceSet::with_rates(&chunks, &search.device_rates(), search.steal));
         let (listener, addr) = bind(&cfg.listen)?;
         listener.set_nonblocking(true)?;
 
@@ -752,6 +753,10 @@ fn stats_json(shared: &Shared) -> Json {
             let mut m = BTreeMap::new();
             m.insert("device".to_string(), Json::Num(d.device as f64));
             m.insert("shard_chunks".to_string(), Json::Num(d.shard_chunks as f64));
+            m.insert("rate".to_string(), Json::Num(d.rate));
+            // live straggler gauge: queue depth ÷ rate, the steal
+            // policy's victim metric (0 between batches)
+            m.insert("est_remaining".to_string(), Json::Num(d.est_remaining()));
             m.insert("executed".to_string(), Json::Num(d.executed as f64));
             m.insert("stolen".to_string(), Json::Num(d.stolen as f64));
             m.insert("lost".to_string(), Json::Num(d.lost as f64));

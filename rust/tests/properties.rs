@@ -233,9 +233,9 @@ fn prop_sink_equivalence_topk_vs_dense() {
 #[test]
 fn prop_scatter_gather_invariant_under_sharding() {
     // The multi-device layer's contract: for ANY shard split of the
-    // database (device count), with or without work stealing, the merged
-    // TopK / Dense / Threshold outputs equal the unsharded (1-device)
-    // results exactly — ordering and ties included.
+    // database (device count × rate vector), with or without work
+    // stealing, the merged TopK / Dense / Threshold outputs equal the
+    // unsharded (1-device) results exactly — ordering and ties included.
     check("scatter-gather == unsharded for every sink", 12, |rng| {
         use swaphi::coordinator::{NativeFactory, SearchConfig, SearchSession};
         use swaphi::db::chunk::ChunkPlanConfig;
@@ -249,13 +249,14 @@ fn prop_scatter_gather_invariant_under_sharding() {
         let top_k = rng.range(1, 9);
         let min_score = rng.range(5, 20) as i32;
         // small chunks so even small databases split into several
-        let mk = |devices, steal| {
+        let mk = |devices, steal, rates: Vec<f64>| {
             SearchSession::new(
                 &idx,
                 sc.clone(),
                 SearchConfig {
                     devices,
                     steal,
+                    rates,
                     top_k,
                     sim: None,
                     chunk: ChunkPlanConfig { target_padded_residues: 1024 },
@@ -263,32 +264,48 @@ fn prop_scatter_gather_invariant_under_sharding() {
                 },
             )
         };
-        let base = mk(1, true);
+        let base = mk(1, true, Vec::new());
         let base_topk = base.search_batch(&factory, &queries).unwrap();
         let base_dense = base.search_batch_dense(&factory, &queries).unwrap();
         let base_thresh =
             base.search_batch_threshold(&factory, &queries, min_score).unwrap();
         let devices = rng.range(2, 6);
         let steal = rng.below(2) == 1;
-        let sharded = mk(devices, steal);
+        // half the cases run a heterogeneous fleet with an arbitrary
+        // skewed rate vector — results must stay byte-identical for any
+        // rates, not just uniform ones
+        let rates: Vec<f64> = if rng.below(2) == 1 {
+            (0..devices).map(|_| 0.2 + 1.8 * rng.f64()).collect()
+        } else {
+            Vec::new()
+        };
+        let sharded = mk(devices, steal, rates.clone());
         let topk = sharded.search_batch(&factory, &queries).unwrap();
         for (a, b) in topk.iter().zip(&base_topk) {
             let ah: Vec<(usize, i32)> =
                 a.hits.iter().map(|h| (h.seq_index, h.score)).collect();
             let bh: Vec<(usize, i32)> =
                 b.hits.iter().map(|h| (h.seq_index, h.score)).collect();
-            prop_eq(ah, bh, &format!("topk d={devices} steal={steal} {}", a.query_id))?;
+            prop_eq(
+                ah,
+                bh,
+                &format!("topk d={devices} steal={steal} rates={rates:?} {}", a.query_id),
+            )?;
         }
         let dense = sharded.search_batch_dense(&factory, &queries).unwrap();
         for (a, b) in dense.iter().zip(&base_dense) {
             prop_eq(
                 a.scores.clone(),
                 b.scores.clone(),
-                &format!("dense d={devices} steal={steal} {}", a.query_id),
+                &format!("dense d={devices} steal={steal} rates={rates:?} {}", a.query_id),
             )?;
         }
         let thresh = sharded.search_batch_threshold(&factory, &queries, min_score).unwrap();
-        prop_eq(thresh, base_thresh, &format!("threshold d={devices} steal={steal}"))?;
+        prop_eq(
+            thresh,
+            base_thresh,
+            &format!("threshold d={devices} steal={steal} rates={rates:?}"),
+        )?;
         // accounting: the fleet executed the full (query, chunk) cross
         // product exactly once per batch (topk + dense + threshold = 3)
         let executed: u64 = sharded.device_snapshots().iter().map(|d| d.executed).sum();
@@ -298,6 +315,90 @@ fn prop_scatter_gather_invariant_under_sharding() {
             "work items executed",
         )?;
         Ok(())
+    });
+}
+
+#[test]
+fn prop_weighted_partition_uniform_exact_and_skew_never_worse() {
+    // Rate-weighted LPT contract: (i) any uniform rate vector reproduces
+    // the unweighted partition exactly; (ii) for arbitrary skewed rate
+    // vectors the weighted split's modeled makespan never exceeds the
+    // rate-blind split's, and every chunk lands in exactly one shard.
+    check("rate-weighted LPT vs unweighted", 20, |rng| {
+        use swaphi::db::chunk::{
+            partition_chunks, partition_chunks_weighted, plan_chunks, static_makespan,
+            ChunkPlanConfig,
+        };
+        let n = rng.range(20, 150);
+        let seed = rng.next_u64();
+        let idx = Index::build(generate(&SynthSpec::tiny(n, seed)));
+        let target = 1 << rng.range(10, 13);
+        let chunks = plan_chunks(&idx, ChunkPlanConfig { target_padded_residues: target });
+        let devices = rng.range(1, 6);
+        // (i) uniform rates — any constant — are the unweighted split
+        let uniform_rate = 0.25 + 2.0 * rng.f64();
+        prop_eq(
+            partition_chunks_weighted(&chunks, &vec![uniform_rate; devices]),
+            partition_chunks(&chunks, devices),
+            &format!("uniform rate {uniform_rate} x{devices}"),
+        )?;
+        // (ii) random skewed rates
+        let rates: Vec<f64> = (0..devices).map(|_| 0.1 + 1.9 * rng.f64()).collect();
+        let weighted = partition_chunks_weighted(&chunks, &rates);
+        let unweighted = partition_chunks(&chunks, devices);
+        let mut seen: Vec<usize> = weighted.iter().flatten().copied().collect();
+        seen.sort_unstable();
+        prop_eq(seen, (0..chunks.len()).collect::<Vec<_>>(), "chunk coverage")?;
+        let wm = static_makespan(&chunks, &weighted, &rates);
+        let um = static_makespan(&chunks, &unweighted, &rates);
+        prop_assert(
+            wm <= um,
+            format!("rates {rates:?}: weighted makespan {wm} > unweighted {um}"),
+        )?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rated_sim_conservation_and_uniform_identity() {
+    // The rate-aware sharded simulator must conserve cells for any rate
+    // vector and reduce bit-for-bit to the unrated simulator at uniform
+    // rates.
+    check("rated sharded sim", 10, |rng| {
+        use swaphi::db::chunk::{partition_chunks_weighted, plan_chunks, ChunkPlanConfig};
+        use swaphi::phi::sim::{
+            simulate_sharded_rates, simulate_sharded_search, SimConfig,
+        };
+        let n = rng.range(40, 150);
+        let seed = rng.next_u64();
+        let idx = Index::build(generate(&SynthSpec::tiny(n, seed)));
+        let chunks = plan_chunks(&idx, ChunkPlanConfig { target_padded_residues: 4096 });
+        let qlen = rng.range(16, 400);
+        let devices = rng.range(1, 5);
+        let cfg = SimConfig { devices, ..Default::default() };
+        let uniform = vec![1.0; devices];
+        let shards = partition_chunks_weighted(&chunks, &uniform);
+        let plain =
+            simulate_sharded_search(&idx, &chunks, &shards, EngineKind::InterSP, qlen, cfg, true);
+        let rated = simulate_sharded_rates(
+            &idx, &chunks, &shards, EngineKind::InterSP, qlen, cfg, true, &uniform,
+        );
+        prop_eq(plain.makespan, rated.makespan, "uniform identity (makespan)")?;
+        prop_eq(plain.device_done.clone(), rated.device_done.clone(), "uniform identity")?;
+        // skewed rates: cells conserved, all chunks processed
+        let rates: Vec<f64> = (0..devices).map(|_| 0.2 + 1.8 * rng.f64()).collect();
+        let wshards = partition_chunks_weighted(&chunks, &rates);
+        let skew = simulate_sharded_rates(
+            &idx, &chunks, &wshards, EngineKind::InterSP, qlen, cfg, true, &rates,
+        );
+        prop_eq(skew.real_cells, idx.total_residues * qlen as u128, "real cells")?;
+        prop_eq(skew.padded_cells, idx.padded_cells(qlen), "padded cells")?;
+        prop_eq(
+            skew.chunks_per_device.iter().sum::<usize>(),
+            chunks.len(),
+            "every chunk ran once",
+        )?;
+        prop_assert(skew.makespan.is_finite() && skew.makespan > 0.0, "finite makespan")
     });
 }
 

@@ -24,6 +24,7 @@ fn search_cfg() -> SearchConfig {
     SearchConfig {
         devices: 2,
         steal: true,
+        rates: Vec::new(),
         chunk: ChunkPlanConfig { target_padded_residues: 4096 },
         top_k: 5,
         precision: Precision::default(),
@@ -98,6 +99,48 @@ fn single_client_matches_offline_search() {
 }
 
 #[test]
+fn heterogeneous_fleet_server_matches_offline_and_reports_rates() {
+    // a skewed-rate fleet reshards the index and resteals differently,
+    // but the served hits must stay bit-identical to a standalone search
+    let index = Arc::new(Index::build(generate(&SynthSpec::tiny(300, 9))));
+    let scoring = Scoring::swaphi_default();
+    let handle = Server {
+        index: Arc::clone(&index),
+        scoring: scoring.clone(),
+        search: SearchConfig {
+            devices: 3,
+            rates: vec![1.0, 1.0, 0.25],
+            // small chunks so the weighted split has real granularity
+            chunk: ChunkPlanConfig { target_padded_residues: 1024 },
+            ..search_cfg()
+        },
+        server: tcp_cfg(0),
+        factory: Arc::new(NativeFactory(EngineKind::InterSP)),
+    }
+    .start()
+    .unwrap();
+    let q = query_letters(52, 21);
+    let mut c = Client::connect(&handle.connect_addr()).unwrap();
+    let resp = c.search("q1", &q, None, None).unwrap();
+    assert!(client::is_ok(&resp), "{resp}");
+    let got = payload_tuples(&client::hits_of(&resp).unwrap());
+    assert_eq!(got, offline_hits(&index, &scoring, "q1", &q));
+
+    let stats = c.stats().unwrap();
+    let fleet = stats.get("stats").unwrap().get("devices").unwrap();
+    let Json::Arr(fleet) = fleet else { panic!("devices must be an array: {stats}") };
+    assert_eq!(fleet.len(), 3, "{stats}");
+    let rates: Vec<f64> =
+        fleet.iter().map(|d| d.get("rate").unwrap().as_f64().unwrap()).collect();
+    assert_eq!(rates, vec![1.0, 1.0, 0.25], "{stats}");
+    // the quarter-rate device owns the smallest shard
+    let shards: Vec<f64> =
+        fleet.iter().map(|d| d.get("shard_chunks").unwrap().as_f64().unwrap()).collect();
+    assert!(shards[2] < shards[0] && shards[2] < shards[1], "{stats}");
+    handle.shutdown().unwrap();
+}
+
+#[test]
 fn concurrent_clients_coalesce_and_stay_bit_identical() {
     const N: usize = 10; // ≥ 8 concurrent clients per the acceptance bar
     let cfg = ServerConfig {
@@ -161,6 +204,10 @@ fn concurrent_clients_coalesce_and_stay_bit_identical() {
     for d in fleet {
         assert!(d.get("queue_depth").unwrap().as_f64().unwrap() == 0.0, "idle fleet: {stats}");
         assert!(d.get("shard_chunks").is_some() && d.get("stolen").is_some());
+        // heterogeneity gauges: rate (uniform fleet = 1.0) and the
+        // steal policy's est_remaining metric (0 when idle)
+        assert_eq!(d.get("rate").unwrap().as_f64().unwrap(), 1.0, "{stats}");
+        assert_eq!(d.get("est_remaining").unwrap().as_f64().unwrap(), 0.0, "{stats}");
     }
     let items = stats.get("stats").unwrap().get("device_items_per_batch").unwrap();
     assert!(items.get("count").unwrap().as_f64().unwrap() > 0.0, "{stats}");
