@@ -30,7 +30,11 @@ use swaphi::coordinator::{NativeFactory, SearchConfig, SearchSession};
 use swaphi::db::chunk::{partition_chunks, partition_chunks_weighted, ChunkPlanConfig};
 use swaphi::db::synth::SynthSpec;
 use swaphi::matrices::Scoring;
-use swaphi::phi::sim::{simulate_sharded_rates, simulate_sharded_search};
+use swaphi::phi::sim::{
+    simulate_calibrated_search, simulate_sharded_mismodeled, simulate_sharded_rates,
+    simulate_sharded_search, CalibratedScenario,
+};
+use swaphi::tune::TuneConfig;
 use swaphi::util::gcups;
 
 const DEVICE_COUNTS: [usize; 3] = [1, 2, 4];
@@ -239,6 +243,136 @@ fn main() {
         1.0 / 1.15
     );
 
+    // ------------------------------------------------------------------
+    // Miscalibrated fleet: the operator configured [1,1,1] but the
+    // devices truly run at [1,1,0.25]. Three configurations bracket the
+    // online-calibration subsystem: calibrated OFF (blind shards *and* a
+    // blind steal policy, forever — what a wrong static config costs),
+    // the self-tuning loop (warmup -> adopt measured rates -> re-shard),
+    // and the per-batch ideal bound (perfect rate knowledge).
+    const MISCAL_BATCHES: usize = 8;
+    const MISCAL_WARMUP: u64 = 2;
+    let uniform = vec![1.0; SKEWED_RATES.len()];
+    let scenario = CalibratedScenario {
+        configured: uniform.clone(),
+        true_rates: vec![(0, SKEWED_RATES.to_vec())],
+        batches: MISCAL_BATCHES,
+        tune: TuneConfig {
+            enabled: true,
+            warmup_batches: MISCAL_WARMUP,
+            ewma_alpha: 0.5,
+            dead_band: 0.1,
+            min_batches_between_reshards: 2,
+        },
+    };
+    let cal = simulate_calibrated_search(
+        &w.index,
+        &w.chunks,
+        EngineKind::InterSP,
+        qlen,
+        sim_cfg,
+        &scenario,
+    );
+    // calibrated off: the same mis-belief, never corrected (one batch —
+    // without calibration every batch is this batch)
+    let off = simulate_sharded_mismodeled(
+        &w.index,
+        &w.chunks,
+        &unweighted_shards,
+        EngineKind::InterSP,
+        qlen,
+        sim_cfg,
+        true,
+        &SKEWED_RATES,
+        &uniform,
+    );
+    let converged = cal.batches.last().expect("batches > 0");
+    let calibrated_efficiency = converged.ideal / converged.makespan;
+    let calibrated_gain = off.makespan / converged.makespan;
+    let resharded = cal.resharded_total;
+    let first_reshard_batch = cal
+        .batches
+        .iter()
+        .position(|b| b.resharded_after)
+        .map_or(0, |i| i + 1);
+
+    let mut miscal_table = Table::new(
+        "miscalibrated fleet: configured [1,1,1], truly [1,1,0.25] (InterSP)",
+        &["config", "batch_makespan_s", "vs_ideal"],
+    );
+    miscal_table.row(&[
+        "calibrated off (forever blind)".to_string(),
+        format!("{:.4}", off.makespan),
+        f2(off.makespan / converged.ideal),
+    ]);
+    miscal_table.row(&[
+        "tuner warmup batch (still blind)".to_string(),
+        format!("{:.4}", cal.batches[0].makespan),
+        f2(cal.batches[0].makespan / converged.ideal),
+    ]);
+    miscal_table.row(&[
+        "tuner converged".to_string(),
+        format!("{:.4}", converged.makespan),
+        f2(converged.makespan / converged.ideal),
+    ]);
+    miscal_table.row(&[
+        "ideal (Σwork/Σrate)".to_string(),
+        format!("{:.4}", converged.ideal),
+        f2(1.0),
+    ]);
+    miscal_table.emit("multi_device_scaling_miscalibrated");
+    println!(
+        "miscalibrated fleet: calibrated_efficiency {calibrated_efficiency:.3} \
+         (>= {:.3} gates), calibrated_gain {calibrated_gain:.2}x (>= 1.3 gates), \
+         resharded {resharded}x (first at batch {first_reshard_batch} of warmup {MISCAL_WARMUP}), \
+         calibrated rates {:?}",
+        1.0 / 1.2,
+        cal.calibrated,
+    );
+
+    // real execution leg: a self-tuning session on a handicapped
+    // uniform fleet (device 2 reports 4x slower timings) must re-shard
+    // at a barrier and still run every work item exactly once
+    let session = SearchSession::new(
+        &w.index,
+        sc,
+        SearchConfig {
+            devices: 3,
+            sim: None,
+            chunk: ChunkPlanConfig { target_padded_residues: 1 << 16 },
+            tune: TuneConfig {
+                enabled: true,
+                warmup_batches: 1,
+                ewma_alpha: 0.5,
+                dead_band: 0.15,
+                min_batches_between_reshards: 1,
+            },
+            handicap: vec![1.0, 1.0, 4.0],
+            ..Default::default()
+        },
+    );
+    for _ in 0..2 {
+        let out = session
+            .search_batch(&NativeFactory(EngineKind::InterSP), &native_queries)
+            .expect("native tuned batch");
+        assert_eq!(out.len(), native_queries.len());
+    }
+    let tuned_reshards = session.device_set().reshards();
+    assert!(
+        tuned_reshards >= 1,
+        "handicapped fleet must re-shard at the warmup barrier"
+    );
+    let snaps = session.device_snapshots();
+    assert_eq!(
+        snaps.iter().map(|d| d.executed).sum::<u64>(),
+        (2 * native_queries.len() * session.n_chunks()) as u64,
+        "tuned fleet must execute every (query, chunk) item exactly once"
+    );
+    println!(
+        "tuned native fleet: resharded {tuned_reshards}x, live rates {:?}",
+        session.device_set().rates()
+    );
+
     let json = format!(
         "{{\n  \"bench\": \"multi_device_scaling\",\n  \"preset\": \"{preset}\",\n  \
          \"n_seqs\": {},\n  \"qlen\": {qlen},\n  \"chunks\": {},\n  \"replication\": {},\n  \
@@ -251,7 +385,19 @@ fn main() {
          \"weighted_gain\": {weighted_gain:.3},\n    \"steal_rescue\": {steal_rescue:.3},\n    \
          \"steal_gain\": {steal_gain:.3},\n    \
          \"steal_efficiency\": {steal_efficiency:.3},\n    \"stolen_chunks\": {skewed_stolen},\n    \
-         \"sim_gcups\": {:.3},\n    \"native_gcups\": {skew_native_gcups:.3}\n  }}\n}}\n",
+         \"sim_gcups\": {:.3},\n    \"native_gcups\": {skew_native_gcups:.3}\n  }},\n  \
+         \"miscalibrated\": {{\n    \"configured\": [1, 1, 1],\n    \"true_rates\": [{}],\n    \
+         \"batches\": {MISCAL_BATCHES},\n    \"warmup_batches\": {MISCAL_WARMUP},\n    \
+         \"off_batch_makespan_s\": {:.6},\n    \
+         \"converged_batch_makespan_s\": {:.6},\n    \
+         \"ideal_batch_makespan_s\": {:.6},\n    \
+         \"calibrated_efficiency\": {calibrated_efficiency:.3},\n    \
+         \"calibrated_gain\": {calibrated_gain:.3},\n    \
+         \"resharded\": {resharded},\n    \
+         \"first_reshard_batch\": {first_reshard_batch},\n    \
+         \"total_makespan_s\": {:.6},\n    \
+         \"sim_gcups\": {:.3},\n    \
+         \"native_resharded\": {tuned_reshards}\n  }}\n}}\n",
         w.index.n_seqs(),
         w.chunks.len(),
         w.replication,
@@ -262,6 +408,12 @@ fn main() {
         weighted.makespan,
         stolen.makespan,
         stolen.gcups(),
+        SKEWED_RATES.map(|r| format!("{r}")).join(", "),
+        off.makespan,
+        converged.makespan,
+        converged.ideal,
+        cal.total_makespan,
+        cal.gcups(),
     );
     if std::fs::write("BENCH_scaling.json", &json).is_ok() {
         println!("\nwrote BENCH_scaling.json");

@@ -130,8 +130,14 @@ fn make_factory(cfg: &SwaphiConfig) -> anyhow::Result<Box<dyn AlignerFactory>> {
 pub fn cmd_search(mut args: Args) -> anyhow::Result<i32> {
     let index_path = args.require("index")?;
     let query_path = args.require("query")?;
-    let cfg = load_config(&mut args)?;
+    let calibrate = args.take_bool("calibrate");
+    let mut cfg = load_config(&mut args)?;
     args.finish()?;
+    if calibrate {
+        // --calibrate forces the tuner on for this run and reports the
+        // measured rate vector with the search results
+        cfg.tune_enabled = true;
+    }
 
     let view = IndexView::open(&index_path)?;
     let index = view.to_index();
@@ -215,7 +221,78 @@ pub fn cmd_search(mut args: Args) -> anyhow::Result<i32> {
             )?;
         }
     }
+    if let Some(tuner) = session.device_set().tuner() {
+        let vector = tuner
+            .calibrated()
+            .iter()
+            .map(|r| format!("{r:.3}"))
+            .collect::<Vec<_>>()
+            .join(",");
+        writeln!(
+            report,
+            "\ncalibration: {} batches, resharded {}x, measured rates {vector} \
+             (pass via --device-rates {vector})",
+            tuner.batches(),
+            session.device_set().reshards(),
+        )?;
+    }
     print!("{report}");
+    Ok(0)
+}
+
+/// `swaphi calibrate` — measure the fleet's per-device throughput on
+/// synthetic probe batches and print a rate vector suitable for
+/// `--device-rates` / `[devices] rates`. This is offline calibration:
+/// the same estimator the self-tuning daemon runs, condensed into a
+/// one-shot measurement.
+pub fn cmd_calibrate(mut args: Args) -> anyhow::Result<i32> {
+    let index_path = args.require("index")?;
+    let batches = args.take_usize("batches", 0)?;
+    let qlen = args.take_usize("qlen", 256)?.max(16);
+    let mut cfg = load_config(&mut args)?;
+    args.finish()?;
+    cfg.tune_enabled = true;
+    cfg.sim_enabled = false;
+    let batches = if batches > 0 { batches } else { (cfg.tune_warmup_batches as usize).max(3) };
+
+    let view = IndexView::open(&index_path)?;
+    let index = view.to_index();
+    let factory = make_factory(&cfg)?;
+    let session = SearchSession::new(&index, cfg.scoring.clone(), cfg.search_config());
+    anyhow::ensure!(session.n_chunks() > 0, "{index_path}: empty index");
+    let probes = crate::tune::probe_batch(qlen, 4);
+    for _ in 0..batches {
+        session.search_batch(factory.as_ref(), &probes)?;
+    }
+
+    let set = session.device_set();
+    let tuner = set.tuner().expect("calibrate always enables the tuner");
+    println!(
+        "calibrated {} device(s) over {batches} probe batches of {} queries (qlen {qlen}):",
+        cfg.devices,
+        probes.len(),
+    );
+    for g in tuner.gauges() {
+        println!(
+            "  device {}: configured {:.3}, measured {:.3}{}",
+            g.device,
+            g.configured,
+            g.calibrated,
+            if (g.calibrated / g.configured - 1.0).abs() > cfg.tune_dead_band {
+                "  <- outside dead-band"
+            } else {
+                ""
+            }
+        );
+    }
+    let vector = tuner
+        .calibrated()
+        .iter()
+        .map(|r| format!("{r:.3}"))
+        .collect::<Vec<_>>()
+        .join(",");
+    println!("\nmeasured rate vector (for --device-rates / [devices] rates):");
+    println!("{vector}");
     Ok(0)
 }
 
@@ -593,6 +670,15 @@ mod tests {
             "search --index {idx} --query {qf} --device-rates 1.0,nope"
         ))
         .is_err());
+        // hardened parsing: trailing comma, NaN and zero entries all
+        // error with the offending entry named (not a silent fleet)
+        for bad in ["1.0,0.25,", "1.0,,0.25", "1.0,nan", "1.0,0.0", "1.0,-1.0"] {
+            assert!(
+                run(&format!("search --index {idx} --query {qf} --device-rates {bad}"))
+                    .is_err(),
+                "--device-rates {bad} must be rejected"
+            );
+        }
         // an explicitly passed flag with no rates must error, not
         // silently degrade to a uniform fleet
         assert!(run(&format!(
@@ -603,6 +689,43 @@ mod tests {
             "search --index {idx} --query {qf} --device-rates"
         ))
         .is_err());
+        for f in [fasta, idx, qf] {
+            let _ = std::fs::remove_file(f);
+        }
+    }
+
+    #[test]
+    fn calibrate_command_and_search_calibrate_flag() {
+        let fasta = tmp("db5.fasta");
+        let idx = tmp("db5.idx");
+        let qf = tmp("q5.fasta");
+        assert_eq!(
+            run(&format!("synth --preset tiny --n 60 --seed 12 --out {fasta}")).unwrap(),
+            0
+        );
+        assert_eq!(run(&format!("index --in {fasta} --out {idx}")).unwrap(), 0);
+        // offline calibration over a handicapped 2-device fleet: must
+        // run clean and exercise the measured-rate printout
+        assert_eq!(
+            run(&format!(
+                "calibrate --index {idx} --devices 2 --batches 2 --qlen 64 \
+                 --set devices.handicap=[1.0,4.0] \
+                 --set search.chunk_residues=1024"
+            ))
+            .unwrap(),
+            0
+        );
+        // search --calibrate forces the tuner on and reports rates
+        std::fs::write(&qf, ">q1\nMKTAYIAKQRQISFVKSHFSRQLEERLGLIEVQ\n").unwrap();
+        assert_eq!(
+            run(&format!(
+                "search --index {idx} --query {qf} --devices 2 --calibrate \
+                 --set sim.enabled=false --set search.chunk_residues=1024"
+            ))
+            .unwrap(),
+            0
+        );
+        assert!(run("calibrate --index missing.idx").is_err());
         for f in [fasta, idx, qf] {
             let _ = std::fs::remove_file(f);
         }

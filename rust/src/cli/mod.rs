@@ -19,8 +19,10 @@ pub mod commands;
 pub use args::Args;
 
 /// Every valid subcommand, as listed by the unknown-command error.
-pub const COMMANDS: &[&str] =
-    &["synth", "index", "info", "search", "serve", "query", "selftest", "devinfo", "help"];
+pub const COMMANDS: &[&str] = &[
+    "synth", "index", "info", "search", "serve", "query", "calibrate", "selftest", "devinfo",
+    "help",
+];
 
 /// Entry point used by `main.rs`.
 pub fn run(argv: Vec<String>) -> anyhow::Result<i32> {
@@ -39,6 +41,7 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<i32> {
         "search" => commands::cmd_search(args),
         "serve" => commands::cmd_serve(args),
         "query" => commands::cmd_query(args),
+        "calibrate" => commands::cmd_calibrate(args),
         "selftest" => commands::cmd_selftest(args),
         "devinfo" => commands::cmd_devinfo(args),
         "help" | "--help" | "-h" => {
@@ -85,6 +88,9 @@ COMMANDS:
               [--precision auto|i16|i32]   score-lane tier (auto: narrow
                 32-lane i16 when provably exact; i16: force narrow,
                 saturated lanes rescored at i32; i32: full precision)
+              [--calibrate]   time every work item, report the measured
+                per-device rate vector with the results, and re-shard to
+                it at batch barriers (forces [tune] enabled = true)
   serve     run the resident search service: load the index once, keep a
             warm session, coalesce concurrent client requests into
             batches, cache repeat queries (line-delimited JSON protocol,
@@ -92,6 +98,10 @@ COMMANDS:
               --index <idx>  [--listen 127.0.0.1:7878 | unix:/path]
               [--devices <n>]  [--device-rates <r1,r2,...>]
               [--config <toml>]  [--set server.max_batch=32]...
+              --set tune.enabled=true turns on online rate calibration:
+                warmup probe batches on index load, then drift detection
+                + live re-sharding between coalesced batches (`stats`
+                reports rate_configured/rate_calibrated/resharded_total)
               e.g.  swaphi serve --index db.idx --listen 127.0.0.1:7878
   query     client for a running `serve` daemon; each FASTA record is one
             request on one connection
@@ -99,6 +109,12 @@ COMMANDS:
               [--top-k <n>]  [--timeout-ms <n>]  [--ping]  [--stats]
               e.g.  swaphi query --connect 127.0.0.1:7878 --query q.fasta
               e.g.  swaphi query --connect 127.0.0.1:7878 --stats
+  calibrate measure per-device throughput on synthetic probe batches and
+            print a rate vector for --device-rates / [devices] rates —
+            the offline form of the daemon's self-tuning loop ([tune]
+            config section: warmup, EWMA, dead-band, re-shard hysteresis)
+              --index <idx>  [--batches <n>]  [--qlen <len>]
+              [--devices <n>]  [--config <toml>]  [--set k=v]...
   selftest  cross-validate all engines against the scalar oracle
               [--backend pjrt]  [--artifacts <dir>]
   devinfo   print the simulated device fleet and calibration

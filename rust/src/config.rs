@@ -24,6 +24,14 @@
 //! count = 4               # simulated coprocessors (wins over search.devices)
 //! steal = true            # work stealing between device queues
 //! rates = [1.0, 1.0, 1.0, 0.25]  # relative per-device speeds (heterogeneous fleet)
+//! # handicap = [1.0, 4.0]        # observed-time multipliers (test/demo skew injector)
+//!
+//! [tune]
+//! enabled = false          # online rate calibration (self-tuning fleet)
+//! warmup_batches = 3       # measure-only batches before the first adoption
+//! ewma_alpha = 0.3         # EWMA weight of the newest throughput observation
+//! dead_band = 0.15         # calibrated/adopted ratio band treated as "in tune"
+//! min_batches_between_reshards = 2
 //!
 //! [sim]
 //! enabled = true
@@ -45,6 +53,7 @@ use crate::db::chunk::ChunkPlanConfig;
 use crate::matrices::Scoring;
 use crate::phi::sched::Policy;
 use crate::phi::sim::SimConfig;
+use crate::tune::TuneConfig;
 use std::collections::BTreeMap;
 use std::path::Path;
 
@@ -148,6 +157,16 @@ impl RawConfig {
         }
     }
 
+    /// A floating-point value (integers widen).
+    pub fn f64_or(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.entries.get(key) {
+            None => Ok(default),
+            Some(Value::Float(f)) => Ok(*f),
+            Some(Value::Int(i)) => Ok(*i as f64),
+            Some(v) => anyhow::bail!("{key}: expected number, got {}", v.type_name()),
+        }
+    }
+
     /// A list of numbers (integer elements widen to float).
     pub fn f64_list_or(&self, key: &str, default: &[f64]) -> anyhow::Result<Vec<f64>> {
         match self.entries.get(key) {
@@ -203,9 +222,25 @@ fn parse_value(s: &str, lineno: usize) -> anyhow::Result<Value> {
         if inner.is_empty() {
             return Ok(Value::List(Vec::new()));
         }
+        // name the offending element and its 1-based position: a
+        // trailing comma or a doubled comma yields an empty element, the
+        // classic shell/CLI slip ("1.0,1.0," / "1.0,,0.25")
         let items = inner
             .split(',')
-            .map(|e| parse_value(e.trim(), lineno))
+            .enumerate()
+            .map(|(i, e)| {
+                let e = e.trim();
+                if e.is_empty() {
+                    anyhow::bail!(
+                        "line {lineno}: empty list element at position {} \
+                         (trailing or doubled comma?)",
+                        i + 1
+                    );
+                }
+                parse_value(e, lineno).map_err(|err| {
+                    anyhow::anyhow!("list element {} ({e:?}): {err}", i + 1)
+                })
+            })
             .collect::<anyhow::Result<Vec<Value>>>()?;
         return Ok(Value::List(items));
     }
@@ -249,6 +284,12 @@ pub const KNOWN_KEYS: &[&str] = &[
     "devices.count",
     "devices.steal",
     "devices.rates",
+    "devices.handicap",
+    "tune.enabled",
+    "tune.warmup_batches",
+    "tune.ewma_alpha",
+    "tune.dead_band",
+    "tune.min_batches_between_reshards",
     "sim.enabled",
     "sim.threads_per_device",
     "sim.replication",
@@ -276,6 +317,16 @@ pub struct SwaphiConfig {
     pub steal: bool,
     /// Relative per-device speeds (`[devices] rates`); empty = uniform.
     pub rates: Vec<f64>,
+    /// Observed-time multipliers (`[devices] handicap`) — the
+    /// deterministic skew injector for calibration tests/demos; empty =
+    /// none.
+    pub handicap: Vec<f64>,
+    /// Online rate calibration (`[tune]` section).
+    pub tune_enabled: bool,
+    pub tune_warmup_batches: u64,
+    pub tune_ewma_alpha: f64,
+    pub tune_dead_band: f64,
+    pub tune_min_batches_between_reshards: u64,
     pub policy: Policy,
     pub top_k: usize,
     pub precision: Precision,
@@ -308,42 +359,83 @@ impl SwaphiConfig {
         let precision_s = raw.str_or("search.precision", "auto")?;
         let rates = {
             let rates = raw.f64_list_or("devices.rates", &[])?;
-            for &r in &rates {
+            // name the offending entry AND its 1-based position — rate
+            // vectors come straight off CLI flags, where "which entry is
+            // wrong" is the whole diagnosis
+            for (i, &r) in rates.iter().enumerate() {
                 anyhow::ensure!(
                     r.is_finite() && r > 0.0,
-                    "devices.rates entries must be finite and positive, got {r}"
+                    "devices.rates[{}] = {r}: each device rate must be a finite, \
+                     positive number",
+                    i + 1
                 );
             }
             rates
         };
+        let handicap = {
+            let handicap = raw.f64_list_or("devices.handicap", &[])?;
+            for (i, &h) in handicap.iter().enumerate() {
+                anyhow::ensure!(
+                    h.is_finite() && h >= 1.0,
+                    "devices.handicap[{}] = {h}: each handicap is an observed-time \
+                     multiplier and must be a finite number >= 1.0",
+                    i + 1
+                );
+            }
+            handicap
+        };
+        // devices.count is authoritative; search.devices is the
+        // legacy spelling kept as its default. A rate vector without
+        // an explicit count implies one device per rate; with one,
+        // the lengths must agree.
+        let devices = {
+            let legacy = raw.int_or("search.devices", 1)?;
+            let count = raw.int_or("devices.count", legacy)?.max(1) as usize;
+            let explicit =
+                raw.get("devices.count").is_some() || raw.get("search.devices").is_some();
+            if rates.is_empty() || explicit {
+                anyhow::ensure!(
+                    rates.is_empty() || rates.len() == count,
+                    "devices.rates has {} entries but the device count is {count}",
+                    rates.len()
+                );
+                count
+            } else {
+                rates.len()
+            }
+        };
+        anyhow::ensure!(
+            handicap.is_empty() || handicap.len() == devices,
+            "devices.handicap has {} entries but the device count is {devices}",
+            handicap.len()
+        );
+        let tune_ewma_alpha = raw.f64_or("tune.ewma_alpha", 0.3)?;
+        anyhow::ensure!(
+            tune_ewma_alpha.is_finite() && tune_ewma_alpha > 0.0 && tune_ewma_alpha <= 1.0,
+            "tune.ewma_alpha must be in (0, 1], got {tune_ewma_alpha}"
+        );
+        let tune_dead_band = raw.f64_or("tune.dead_band", 0.15)?;
+        anyhow::ensure!(
+            tune_dead_band.is_finite() && tune_dead_band > 0.0,
+            "tune.dead_band must be a positive number, got {tune_dead_band}"
+        );
         Ok(SwaphiConfig {
             scoring: Scoring::new(&matrix, gap_open, gap_extend)?,
             engine: EngineKind::parse(&engine_s)
                 .ok_or_else(|| anyhow::anyhow!("unknown engine {engine_s:?}"))?,
             backend: raw.str_or("search.backend", "native")?,
             artifacts_dir: raw.str_or("search.artifacts_dir", "artifacts")?,
-            // devices.count is authoritative; search.devices is the
-            // legacy spelling kept as its default. A rate vector without
-            // an explicit count implies one device per rate; with one,
-            // the lengths must agree.
-            devices: {
-                let legacy = raw.int_or("search.devices", 1)?;
-                let count = raw.int_or("devices.count", legacy)?.max(1) as usize;
-                let explicit =
-                    raw.get("devices.count").is_some() || raw.get("search.devices").is_some();
-                if rates.is_empty() || explicit {
-                    anyhow::ensure!(
-                        rates.is_empty() || rates.len() == count,
-                        "devices.rates has {} entries but the device count is {count}",
-                        rates.len()
-                    );
-                    count
-                } else {
-                    rates.len()
-                }
-            },
+            devices,
             steal: raw.bool_or("devices.steal", true)?,
             rates,
+            handicap,
+            tune_enabled: raw.bool_or("tune.enabled", false)?,
+            tune_warmup_batches: raw.int_or("tune.warmup_batches", 3)?.max(0) as u64,
+            tune_ewma_alpha,
+            tune_dead_band,
+            tune_min_batches_between_reshards: raw
+                .int_or("tune.min_batches_between_reshards", 2)?
+                .max(0) as u64,
             policy: Policy::parse(&policy_s)
                 .ok_or_else(|| anyhow::anyhow!("unknown policy {policy_s:?}"))?,
             top_k: raw.int_or("search.top_k", 10)?.max(1) as usize,
@@ -403,6 +495,19 @@ impl SwaphiConfig {
                 replication: self.sim_replication,
                 ..Default::default()
             }),
+            tune: self.tune_config(),
+            handicap: self.handicap.clone(),
+        }
+    }
+
+    /// Materialize the calibration subsystem's [`TuneConfig`].
+    pub fn tune_config(&self) -> TuneConfig {
+        TuneConfig {
+            enabled: self.tune_enabled,
+            warmup_batches: self.tune_warmup_batches,
+            ewma_alpha: self.tune_ewma_alpha,
+            dead_band: self.tune_dead_band,
+            min_batches_between_reshards: self.tune_min_batches_between_reshards,
         }
     }
 }
@@ -547,6 +652,123 @@ mod tests {
         let cfg = SwaphiConfig::from_raw(&raw).unwrap();
         assert!(cfg.rates.is_empty());
         assert_eq!(cfg.devices, 1);
+        // whitespace-only interior is the empty list too
+        let raw = RawConfig::parse("[devices]\nrates = [   ]\n").unwrap();
+        assert_eq!(raw.get("devices.rates"), Some(&Value::List(Vec::new())));
+    }
+
+    #[test]
+    fn list_trailing_or_doubled_comma_names_the_position() {
+        let err = RawConfig::parse("[devices]\nrates = [1.0, 0.5,]\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(err.contains("position 3"), "{err}");
+        assert!(err.contains("trailing or doubled comma"), "{err}");
+        let err = RawConfig::parse("[devices]\nrates = [1.0,, 0.5]\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("position 2"), "{err}");
+        // a bad element inside the list names its position and spelling
+        let err = RawConfig::parse("[devices]\nrates = [1.0, 2..5]\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("element 2"), "{err}");
+        assert!(err.contains("2..5"), "{err}");
+    }
+
+    #[test]
+    fn list_whitespace_is_forgiven_and_comments_stripped() {
+        let raw = RawConfig::parse("[devices]\nrates = [  1.0 ,\t0.5  ]  # fleet\n").unwrap();
+        let cfg = SwaphiConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.rates, vec![1.0, 0.5]);
+        assert_eq!(cfg.devices, 2);
+    }
+
+    #[test]
+    fn list_mixed_int_float_coerces_and_unterminated_errors() {
+        let raw = RawConfig::parse("[devices]\nrates = [2, 0.5, 1]\n").unwrap();
+        assert_eq!(
+            raw.get("devices.rates"),
+            Some(&Value::List(vec![Value::Int(2), Value::Float(0.5), Value::Int(1)]))
+        );
+        assert_eq!(
+            raw.f64_list_or("devices.rates", &[]).unwrap(),
+            vec![2.0, 0.5, 1.0],
+            "integers widen to float in numeric lists"
+        );
+        let err = RawConfig::parse("[devices]\nrates = [1.0, 0.5\n").unwrap_err().to_string();
+        assert!(err.contains("unterminated list"), "{err}");
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn rates_nan_and_zero_entries_name_entry_and_position() {
+        // "nan" parses as an f64 — the semantic validator must name it
+        let raw = RawConfig::parse("[devices]\nrates = [1.0, nan]\n").unwrap();
+        let err = SwaphiConfig::from_raw(&raw).unwrap_err().to_string();
+        assert!(err.contains("devices.rates[2]"), "{err}");
+        assert!(err.contains("NaN"), "{err}");
+        assert!(err.contains("finite"), "{err}");
+        let raw = RawConfig::parse("[devices]\nrates = [0.0, 1.0]\n").unwrap();
+        let err = SwaphiConfig::from_raw(&raw).unwrap_err().to_string();
+        assert!(err.contains("devices.rates[1]"), "{err}");
+        assert!(err.contains("positive"), "{err}");
+        let raw = RawConfig::parse("[devices]\nrates = [1.0, inf]\n").unwrap();
+        let err = SwaphiConfig::from_raw(&raw).unwrap_err().to_string();
+        assert!(err.contains("devices.rates[2]"), "{err}");
+    }
+
+    #[test]
+    fn tune_section_parses_with_defaults_and_validates() {
+        let cfg = SwaphiConfig::default_config();
+        assert!(!cfg.tune_enabled, "calibration is opt-in");
+        assert_eq!(cfg.tune_warmup_batches, 3);
+        assert!((cfg.tune_ewma_alpha - 0.3).abs() < 1e-12);
+        assert!((cfg.tune_dead_band - 0.15).abs() < 1e-12);
+        assert_eq!(cfg.tune_min_batches_between_reshards, 2);
+        let tc = cfg.tune_config();
+        assert!(!tc.enabled);
+        assert!(!cfg.search_config().tune.enabled);
+
+        let raw = RawConfig::parse(
+            "[tune]\nenabled = true\nwarmup_batches = 5\newma_alpha = 0.5\n\
+             dead_band = 0.2\nmin_batches_between_reshards = 4\n",
+        )
+        .unwrap();
+        let cfg = SwaphiConfig::from_raw(&raw).unwrap();
+        let tc = cfg.tune_config();
+        assert!(tc.enabled);
+        assert_eq!(tc.warmup_batches, 5);
+        assert!((tc.ewma_alpha - 0.5).abs() < 1e-12);
+        assert!((tc.dead_band - 0.2).abs() < 1e-12);
+        assert_eq!(tc.min_batches_between_reshards, 4);
+        assert!(cfg.search_config().tune.enabled);
+
+        for bad in ["[tune]\newma_alpha = 0.0\n", "[tune]\newma_alpha = 1.5\n"] {
+            let raw = RawConfig::parse(bad).unwrap();
+            let err = SwaphiConfig::from_raw(&raw).unwrap_err().to_string();
+            assert!(err.contains("ewma_alpha"), "{err}");
+        }
+        let raw = RawConfig::parse("[tune]\ndead_band = -0.1\n").unwrap();
+        let err = SwaphiConfig::from_raw(&raw).unwrap_err().to_string();
+        assert!(err.contains("dead_band"), "{err}");
+    }
+
+    #[test]
+    fn handicap_parses_and_validates() {
+        let raw = RawConfig::parse("[devices]\ncount = 2\nhandicap = [1.0, 4.0]\n").unwrap();
+        let cfg = SwaphiConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.handicap, vec![1.0, 4.0]);
+        assert_eq!(cfg.search_config().handicap, vec![1.0, 4.0]);
+        // handicaps are slowdown multipliers: < 1.0 is rejected by name
+        let raw = RawConfig::parse("[devices]\ncount = 2\nhandicap = [1.0, 0.5]\n").unwrap();
+        let err = SwaphiConfig::from_raw(&raw).unwrap_err().to_string();
+        assert!(err.contains("devices.handicap[2]"), "{err}");
+        // length must match the fleet
+        let raw = RawConfig::parse("[devices]\ncount = 3\nhandicap = [1.0, 2.0]\n").unwrap();
+        let err = SwaphiConfig::from_raw(&raw).unwrap_err().to_string();
+        assert!(err.contains("2 entries"), "{err}");
     }
 
     #[test]

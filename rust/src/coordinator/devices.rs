@@ -29,13 +29,24 @@
 //! items/steals histograms summarized through the one
 //! [`Histogram::summary`] path the server already uses.
 //!
+//! Since the online-calibration subsystem ([`crate::tune`]) the fleet
+//! *shape* — shards and rates — is live state, not construction-time
+//! config: a [`Tuner`] can be attached, device host threads feed it
+//! per-item timings through [`WorkQueues::observe`], and
+//! [`DeviceSet::end_batch`] re-shards to the calibrated rate vector when
+//! the tuner asks. Re-sharding happens **only at batch barriers**
+//! (every [`WorkQueues`] snapshots the shape it was built from), so a
+//! running batch can never see the split change under it and result
+//! bit-identity is preserved by construction.
+//!
 //! [`ScoreSink`]: crate::coordinator::results::ScoreSink
 
 use crate::db::chunk::{partition_chunks_weighted, Chunk};
 use crate::metrics::{Histogram, HistogramSummary};
+use crate::tune::Tuner;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// One unit of schedulable work: score `chunk` for `query` (both indices
 /// into the session's context / chunk-plan vectors).
@@ -112,17 +123,36 @@ impl DeviceSnapshot {
     }
 }
 
-/// A fleet of simulated coprocessors bound to one chunk plan: the static
-/// shard assignment, the per-device counters, and the per-batch
-/// histograms. Shared between a `SearchSession` and anything that wants
-/// to observe it (the server's stats endpoint).
-pub struct DeviceSet {
+/// The live shard/rate assignment of the fleet — swapped as one unit,
+/// under the mutex, by [`DeviceSet::reshard`] at batch barriers.
+struct FleetShape {
     shards: Vec<Vec<usize>>,
+    rates: Vec<f64>,
+}
+
+/// A fleet of simulated coprocessors bound to one chunk plan: the shard
+/// assignment (static within a batch, re-weightable between batches),
+/// the per-device counters, and the per-batch histograms. Shared between
+/// a `SearchSession` and anything that wants to observe it (the server's
+/// stats endpoint).
+pub struct DeviceSet {
+    /// The chunk plan this fleet was built over — kept so a re-shard can
+    /// re-run the weighted partition without the caller's help.
+    chunks: Vec<Chunk>,
     n_chunks: usize,
     steal: bool,
-    /// Relative per-device speed (1.0 = full-rate); uniform unless the
-    /// fleet was built with [`DeviceSet::with_rates`].
-    rates: Vec<f64>,
+    /// Current shards + relative per-device speeds (1.0 = a full-rate
+    /// coprocessor). Initially the configured split; after calibration
+    /// adoptions, the measured one.
+    shape: Mutex<FleetShape>,
+    /// The rates this fleet was *configured* with (never mutated — the
+    /// calibration gauges report both surfaces).
+    configured_rates: Vec<f64>,
+    /// Optional online-calibration engine; when attached, work items are
+    /// timed into it and [`DeviceSet::end_batch`] consults it.
+    tuner: Mutex<Option<Arc<Tuner>>>,
+    /// Barrier re-shards performed so far (`stats: resharded_total`).
+    reshards: AtomicU64,
     counters: Vec<DeviceCounters>,
     batches: AtomicU64,
     /// Work items executed per device per batch.
@@ -150,10 +180,13 @@ impl DeviceSet {
         let shards = partition_chunks_weighted(chunks, rates);
         let counters = (0..shards.len()).map(|_| DeviceCounters::default()).collect();
         DeviceSet {
-            shards,
+            chunks: chunks.to_vec(),
             n_chunks: chunks.len(),
             steal,
-            rates: rates.to_vec(),
+            shape: Mutex::new(FleetShape { shards, rates: rates.to_vec() }),
+            configured_rates: rates.to_vec(),
+            tuner: Mutex::new(None),
+            reshards: AtomicU64::new(0),
             counters,
             batches: AtomicU64::new(0),
             items_per_batch: Mutex::new(Histogram::exponential(1 << 20)),
@@ -162,7 +195,7 @@ impl DeviceSet {
     }
 
     pub fn n_devices(&self) -> usize {
-        self.shards.len()
+        self.counters.len()
     }
 
     /// Total chunks of the plan this set was built for.
@@ -174,14 +207,74 @@ impl DeviceSet {
         self.steal
     }
 
-    /// Relative per-device speeds this fleet was built with.
-    pub fn rates(&self) -> &[f64] {
-        &self.rates
+    /// The rates the fleet currently runs on (configured until a
+    /// calibration adoption re-shards; then the measured vector).
+    pub fn rates(&self) -> Vec<f64> {
+        self.shape.lock().unwrap().rates.clone()
     }
 
-    /// The static chunk shard of each device (ascending chunk ids).
-    pub fn shards(&self) -> &[Vec<usize>] {
-        &self.shards
+    /// The rates this fleet was configured with (never changes).
+    pub fn configured_rates(&self) -> &[f64] {
+        &self.configured_rates
+    }
+
+    /// The current chunk shard of each device (ascending chunk ids).
+    pub fn shards(&self) -> Vec<Vec<usize>> {
+        self.shape.lock().unwrap().shards.clone()
+    }
+
+    /// Attach the online-calibration engine. Device host threads then
+    /// time their work items into it ([`WorkQueues::observe`]) and
+    /// [`DeviceSet::end_batch`] consults it at every barrier.
+    pub fn set_tuner(&self, tuner: Arc<Tuner>) {
+        assert_eq!(
+            tuner.n_devices(),
+            self.n_devices(),
+            "tuner was built for a different fleet size"
+        );
+        *self.tuner.lock().unwrap() = Some(tuner);
+    }
+
+    /// The attached calibration engine, if any.
+    pub fn tuner(&self) -> Option<Arc<Tuner>> {
+        self.tuner.lock().unwrap().clone()
+    }
+
+    /// Re-partition the chunk plan for a new rate vector — the live
+    /// re-shard. Call only between batches (a batch in flight is
+    /// unaffected: its [`WorkQueues`] snapshotted the old shape). The
+    /// device count is fixed; only the split and the steal policy's
+    /// rates move.
+    pub fn reshard(&self, rates: &[f64]) {
+        assert_eq!(
+            rates.len(),
+            self.n_devices(),
+            "re-shard must keep the device count"
+        );
+        let shards = partition_chunks_weighted(&self.chunks, rates);
+        let mut shape = self.shape.lock().unwrap();
+        shape.shards = shards;
+        shape.rates = rates.to_vec();
+        self.reshards.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Barrier re-shards performed so far.
+    pub fn reshards(&self) -> u64 {
+        self.reshards.load(Ordering::Relaxed)
+    }
+
+    /// Batch barrier: fold the batch into the tuner (if attached) and
+    /// re-shard to the calibrated rates when it detects mis-calibration
+    /// or drift. Returns whether a re-shard happened.
+    pub fn end_batch(&self) -> bool {
+        let Some(tuner) = self.tuner() else { return false };
+        match tuner.end_batch() {
+            Some(rates) => {
+                self.reshard(&rates);
+                true
+            }
+            None => false,
+        }
     }
 
     /// Batches scheduled through this set so far.
@@ -192,21 +285,27 @@ impl DeviceSet {
     /// Materialize the per-device work queues for a batch of `n_queries`
     /// queries: device `d`'s queue holds `(q, c)` for every query crossed
     /// with every chunk of `d`'s shard, query-major so a device finishes
-    /// one query's contexts before moving on.
+    /// one query's contexts before moving on. The queues snapshot the
+    /// current fleet shape — a concurrent re-shard cannot disturb a
+    /// batch already in flight.
     pub fn queues(&self, n_queries: usize) -> WorkQueues<'_> {
-        let queues: Vec<Mutex<VecDeque<WorkItem>>> = self
-            .shards
-            .iter()
-            .map(|shard| {
-                let mut q = VecDeque::with_capacity(shard.len() * n_queries);
-                for query in 0..n_queries {
-                    for &chunk in shard {
-                        q.push_back(WorkItem { query, chunk });
+        let (queues, rates) = {
+            let shape = self.shape.lock().unwrap();
+            let queues: Vec<Mutex<VecDeque<WorkItem>>> = shape
+                .shards
+                .iter()
+                .map(|shard| {
+                    let mut q = VecDeque::with_capacity(shard.len() * n_queries);
+                    for query in 0..n_queries {
+                        for &chunk in shard {
+                            q.push_back(WorkItem { query, chunk });
+                        }
                     }
-                }
-                Mutex::new(q)
-            })
-            .collect();
+                    Mutex::new(q)
+                })
+                .collect();
+            (queues, shape.rates.clone())
+        };
         let mut depths = Vec::with_capacity(queues.len());
         for (d, q) in queues.iter().enumerate() {
             let len = q.lock().unwrap().len();
@@ -215,22 +314,25 @@ impl DeviceSet {
         }
         WorkQueues {
             set: self,
+            rates,
+            tuner: self.tuner(),
             queues,
             depths,
-            batch_executed: (0..self.shards.len()).map(|_| AtomicU64::new(0)).collect(),
-            batch_steals: (0..self.shards.len()).map(|_| AtomicU64::new(0)).collect(),
+            batch_executed: (0..self.n_devices()).map(|_| AtomicU64::new(0)).collect(),
+            batch_steals: (0..self.n_devices()).map(|_| AtomicU64::new(0)).collect(),
         }
     }
 
     /// Per-device cumulative counters + live queue depths.
     pub fn snapshot(&self) -> Vec<DeviceSnapshot> {
+        let shape = self.shape.lock().unwrap();
         self.counters
             .iter()
             .enumerate()
             .map(|(d, c)| DeviceSnapshot {
                 device: d,
-                shard_chunks: self.shards[d].len(),
-                rate: self.rates[d],
+                shard_chunks: shape.shards[d].len(),
+                rate: shape.rates[d],
                 executed: c.executed.load(Ordering::Relaxed),
                 stolen: c.stolen.load(Ordering::Relaxed),
                 lost: c.lost.load(Ordering::Relaxed),
@@ -256,6 +358,12 @@ impl DeviceSet {
 /// batch. All methods are `&self`; safe to use from scoped threads.
 pub struct WorkQueues<'a> {
     set: &'a DeviceSet,
+    /// The rate vector this batch runs on — snapshotted at batch start so
+    /// a barrier re-shard can never steer an in-flight batch's thieves.
+    rates: Vec<f64>,
+    /// The calibration engine, snapshotted at batch start (no per-item
+    /// lock on the set-level slot).
+    tuner: Option<Arc<Tuner>>,
     queues: Vec<Mutex<VecDeque<WorkItem>>>,
     /// Per-batch queue depths — victim selection reads these (not the
     /// set-level gauges) so concurrent batches on one shared
@@ -288,7 +396,7 @@ impl WorkQueues<'_> {
             // [`pick_steal_victim`])
             let v = pick_steal_victim(
                 self.depths.iter().map(|d| d.load(Ordering::Relaxed)),
-                &self.set.rates,
+                &self.rates,
                 dev,
             )?;
             if let Some(item) = self.pop(dev, v) {
@@ -325,6 +433,25 @@ impl WorkQueues<'_> {
     /// Live depth of one device queue (this batch).
     pub fn depth(&self, dev: usize) -> usize {
         self.depths[dev].load(Ordering::Relaxed)
+    }
+
+    /// Is a tuner attached to this batch (should the workers time their
+    /// items at all)?
+    pub fn tuned(&self) -> bool {
+        self.tuner.is_some()
+    }
+
+    /// Timing hook: device `dev` spent `seconds` computing
+    /// `padded_cells` DP cells. Forwards to the attached [`Tuner`]
+    /// (no-op on untuned fleets) — this is how the real execution layer
+    /// feeds the calibration estimator. Workers call it **once per
+    /// batch** with their per-item sums (the same one-observation-per-
+    /// device-per-batch granularity the deterministic simulation uses),
+    /// so the hot scoring loop takes no calibration locks.
+    pub fn observe(&self, dev: usize, padded_cells: f64, seconds: f64) {
+        if let Some(t) = &self.tuner {
+            t.observe(dev, padded_cells, seconds);
+        }
     }
 
     /// Fold this batch into the set's histograms (call once, after the
@@ -532,6 +659,86 @@ mod tests {
         let snap = set.snapshot();
         assert_eq!(snap[2].lost, 1, "thief must raid the slow device: {snap:?}");
         assert_eq!(snap[1].lost, 0, "{snap:?}");
+    }
+
+    #[test]
+    fn reshard_moves_the_live_shape_and_gauges() {
+        let chunks = chunks(400, 1024);
+        let set = DeviceSet::new(&chunks, 3, true);
+        let before: Vec<usize> = set.shards().iter().map(|s| s.len()).collect();
+        assert_eq!(set.reshards(), 0);
+        set.reshard(&[1.0, 1.0, 0.25]);
+        assert_eq!(set.reshards(), 1);
+        let after: Vec<usize> = set.shards().iter().map(|s| s.len()).collect();
+        assert!(after[2] < before[2], "slow device's shard must shrink: {before:?} -> {after:?}");
+        // the whole plan is still covered exactly once
+        let mut seen: Vec<usize> = set.shards().iter().flatten().copied().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..chunks.len()).collect::<Vec<_>>());
+        // gauges follow the live shape: the est_remaining / rate surface
+        // now reports the calibrated (adopted) rate, not the configured
+        let snap = set.snapshot();
+        assert_eq!(snap[2].rate, 0.25);
+        assert_eq!(set.configured_rates(), &[1.0, 1.0, 1.0], "configured never changes");
+        // est_remaining divides by the *current* rate
+        let q = set.queues(2);
+        let d2 = q.depth(2);
+        assert!((set.snapshot()[2].est_remaining() - d2 as f64 / 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inflight_batch_is_isolated_from_reshard() {
+        let chunks = chunks(300, 1024);
+        let set = DeviceSet::new(&chunks, 2, true);
+        let queues = set.queues(2);
+        let d0 = queues.depth(0);
+        set.reshard(&[1.0, 0.2]);
+        // the in-flight batch still drains the old snapshot completely
+        assert_eq!(queues.depth(0), d0, "snapshot depth untouched by re-shard");
+        let mut count = 0;
+        for d in 0..2 {
+            while queues.next(d).is_some() {
+                count += 1;
+            }
+        }
+        assert_eq!(count, 2 * chunks.len(), "old split drains exactly once");
+        // the NEXT batch sees the new split
+        let queues = set.queues(1);
+        let sizes: Vec<usize> = (0..2).map(|d| queues.depth(d)).collect();
+        assert!(sizes[1] < sizes[0], "new batch uses the re-weighted shards: {sizes:?}");
+    }
+
+    #[test]
+    fn tuned_set_reshards_at_the_batch_barrier() {
+        use crate::tune::{TuneConfig, Tuner};
+        let chunks = chunks(400, 1024);
+        let set = DeviceSet::new(&chunks, 3, true);
+        assert!(!set.end_batch(), "no tuner attached = no re-shard");
+        let tuner = Arc::new(Tuner::new(
+            &[1.0, 1.0, 1.0],
+            TuneConfig {
+                enabled: true,
+                warmup_batches: 1,
+                ewma_alpha: 0.5,
+                dead_band: 0.1,
+                min_batches_between_reshards: 1,
+            },
+        ));
+        set.set_tuner(Arc::clone(&tuner));
+        assert!(set.tuner().is_some());
+        // feed a skewed batch through the timing hook: device 2 is 4x
+        // slower per cell
+        let queues = set.queues(1);
+        queues.observe(0, 1000.0, 1.0);
+        queues.observe(1, 1000.0, 1.0);
+        queues.observe(2, 1000.0, 4.0);
+        queues.finish();
+        assert!(set.end_batch(), "warmup boundary must adopt the measured rates");
+        assert_eq!(set.reshards(), 1);
+        let rates = set.rates();
+        assert!(rates[2] < rates[0] / 2.0, "{rates:?}");
+        let sizes: Vec<usize> = set.shards().iter().map(|s| s.len()).collect();
+        assert!(sizes[2] < sizes[0], "slow device owns the small shard now: {sizes:?}");
     }
 
     #[test]

@@ -59,10 +59,12 @@ use crate::db::index::Index;
 use crate::matrices::Scoring;
 use crate::metrics::{Cells, RescoreStats, Timer};
 use crate::phi::sim::{simulate_search, SimConfig, SimReport};
+use crate::tune::{TuneConfig, Tuner};
 pub use devices::{DeviceSet, DeviceSnapshot, WorkItem};
 use results::{DenseSink, Hit, ScoreSink, ThresholdSink, TopKSink};
 use std::path::PathBuf;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Mints per-host-thread aligners.
 pub trait AlignerFactory: Send + Sync {
@@ -143,6 +145,19 @@ pub struct SearchConfig {
     pub precision: Precision,
     /// Xeon Phi timing simulation (None = native timing only).
     pub sim: Option<SimConfig>,
+    /// Online rate calibration (the `[tune]` config section). When
+    /// enabled, the session times every work item into a [`Tuner`] and
+    /// re-shards to the measured rate vector at batch barriers — the
+    /// configured `rates` become a starting guess instead of ground
+    /// truth. Off by default (PR-4 behaviour).
+    pub tune: TuneConfig,
+    /// Per-device *observed-time* multipliers (`[devices] handicap`) —
+    /// a deterministic skew injector for tests, CI and demos: device `d`
+    /// reports its item timings multiplied by `handicap[d]` to the
+    /// tuner, so a uniform real machine presents as a skewed fleet to
+    /// the calibration loop. Alignment itself runs at native speed, so
+    /// results and wall time are untouched. Empty = no skew.
+    pub handicap: Vec<f64>,
 }
 
 impl SearchConfig {
@@ -172,6 +187,8 @@ impl Default for SearchConfig {
             top_k: 10,
             precision: Precision::default(),
             sim: Some(SimConfig::default()),
+            tune: TuneConfig::default(),
+            handicap: Vec::new(),
         }
     }
 }
@@ -231,7 +248,7 @@ impl<'a> SearchSession<'a> {
         let chunks = plan_chunks_paired(index, config.chunk);
         let devices =
             Arc::new(DeviceSet::with_rates(&chunks, &config.device_rates(), config.steal));
-        SearchSession { index, scoring, config, chunks, devices }
+        Self::from_parts(index, scoring, config, chunks, devices)
     }
 
     /// Like [`new`](Self::new), but scheduling onto a caller-provided
@@ -265,6 +282,15 @@ impl<'a> SearchSession<'a> {
             chunks.len(),
             "device set was built for a different chunk plan"
         );
+        // online calibration: give the fleet a tuner unless the caller
+        // already attached one (the daemon does, so its stats op can
+        // observe the same instance)
+        if config.tune.enabled && devices.tuner().is_none() {
+            devices.set_tuner(Arc::new(Tuner::new(
+                &config.device_rates(),
+                config.tune.clone(),
+            )));
+        }
         SearchSession { index, scoring, config, chunks, devices }
     }
 
@@ -401,22 +427,24 @@ impl<'a> SearchSession<'a> {
             // (1.0 = the 5110P), so only an all-full-rate fleet keeps
             // the pooled simulation — a uniform 0.5 fleet really is
             // simulated twice as slow, continuously in the rate vector
-            if self.devices.rates().iter().all(|&r| r == 1.0) {
+            let rates = self.devices.rates();
+            if rates.iter().all(|&r| r == 1.0) {
                 simulate_search(self.index, &self.chunks, factory.kind(), ctx.len(), sim_cfg)
             } else {
-                // heterogeneous fleet: simulate the exact shard plan and
-                // steal discipline the session schedules, with each
-                // device charged at its own rate
+                // heterogeneous fleet: simulate the exact (live) shard
+                // plan and steal discipline the session schedules, with
+                // each device charged at its current rate
                 sim_cfg.devices = self.devices.n_devices();
+                let shards = self.devices.shards();
                 crate::phi::sim::simulate_sharded_rates(
                     self.index,
                     &self.chunks,
-                    self.devices.shards(),
+                    &shards,
                     factory.kind(),
                     ctx.len(),
                     sim_cfg,
                     self.config.steal,
-                    self.devices.rates(),
+                    &rates,
                 )
             }
         });
@@ -472,10 +500,22 @@ impl<'a> SearchSession<'a> {
                     .collect()
             });
         queues.finish();
-        // stage (iii): the once-per-batch shard merge
-        for set in shard_sets {
-            for (q, (shard, stats)) in set?.into_iter().enumerate() {
-                merged[q].0.merge(shard);
+        // propagate worker failures BEFORE the calibration barrier: a
+        // batch the caller is told failed must not advance the tuner's
+        // batch counter / drift streak or trigger a re-shard
+        let shard_sets: Vec<Vec<(S, RescoreStats)>> =
+            shard_sets.into_iter().collect::<anyhow::Result<_>>()?;
+        // the calibration barrier: fold the batch's timings into the
+        // tuner and re-shard to the measured rates if it detected
+        // mis-calibration or drift — strictly between batches, so the
+        // merge below (and every future batch) is unaffected mid-flight
+        self.devices.end_batch();
+        // stage (iii): the once-per-batch shard merge. The producing
+        // device id rides along as merge metadata (sinks stay
+        // provenance-blind; see `ScoreSink::merge_labeled`).
+        for (dev, set) in shard_sets.into_iter().enumerate() {
+            for (q, (shard, stats)) in set.into_iter().enumerate() {
+                merged[q].0.merge_labeled(shard, dev);
                 merged[q].1.add(stats);
             }
         }
@@ -508,7 +548,17 @@ impl<'a> SearchSession<'a> {
         let mut aligner = factory.make()?;
         let mut shards: Vec<(S, RescoreStats)> =
             (0..ctxs.len()).map(|_| (mk(), RescoreStats::default())).collect();
+        // calibration: time each work item when a tuner is attached,
+        // accumulating locally and folding into the tuner ONCE at the
+        // end of the drain (no locks in the hot loop; same granularity
+        // as the deterministic sim's per-batch clocks). `handicap[dev]`
+        // scales the *observed* seconds only — a deterministic skew
+        // injector for tests/CI (results and real wall time untouched).
+        let timed = queues.tuned();
+        let handicap = self.config.handicap.get(dev).copied().unwrap_or(1.0);
+        let (mut obs_cells, mut obs_seconds) = (0.0f64, 0.0f64);
         while let Some(item) = queues.next(dev) {
+            let start = timed.then(Instant::now);
             let (sink, stats) = &mut shards[item.query];
             self.process_chunk(
                 aligner.as_mut(),
@@ -517,6 +567,13 @@ impl<'a> SearchSession<'a> {
                 sink,
                 stats,
             );
+            if let Some(start) = start {
+                obs_cells += self.chunks[item.chunk].padded_cells(ctxs[item.query].len()) as f64;
+                obs_seconds += start.elapsed().as_secs_f64() * handicap;
+            }
+        }
+        if timed {
+            queues.observe(dev, obs_cells, obs_seconds);
         }
         Ok(shards)
     }
@@ -970,6 +1027,70 @@ mod tests {
             half.sim_gcups().unwrap(),
             two.sim_gcups().unwrap()
         );
+    }
+
+    #[test]
+    fn tuned_session_reshards_and_preserves_results() {
+        // configured uniform, but device 2 *reports* 5x slower timings
+        // (the handicap skew injector): after the warmup batch the
+        // session must adopt measured rates and re-shard — and every
+        // batch before, during and after stays bit-identical to an
+        // untuned session
+        let (idx, sc) = setup(220);
+        let queries: Vec<(String, Vec<u8>)> =
+            (0..3).map(|i| (format!("q{i}"), generate_query(40 + 9 * i, i as u64))).collect();
+        let factory = NativeFactory(EngineKind::InterSP);
+        let base = SearchSession::new(
+            &idx,
+            sc.clone(),
+            SearchConfig {
+                sim: None,
+                chunk: ChunkPlanConfig { target_padded_residues: 2048 },
+                ..Default::default()
+            },
+        );
+        let base_out = base.search_batch_dense(&factory, &queries).unwrap();
+        let tuned = SearchSession::new(
+            &idx,
+            sc,
+            SearchConfig {
+                devices: 3,
+                sim: None,
+                chunk: ChunkPlanConfig { target_padded_residues: 2048 },
+                tune: crate::tune::TuneConfig {
+                    enabled: true,
+                    warmup_batches: 1,
+                    ewma_alpha: 0.5,
+                    dead_band: 0.15,
+                    min_batches_between_reshards: 1,
+                },
+                handicap: vec![1.0, 1.0, 5.0],
+                ..Default::default()
+            },
+        );
+        let set = tuned.device_set();
+        assert!(set.tuner().is_some(), "tune.enabled must attach a tuner");
+        let shard_before = set.shards()[2].len();
+        let first = tuned.search_batch_dense(&factory, &queries).unwrap();
+        // warmup_batches = 1: the first barrier adopts the measured rates
+        assert!(set.reshards() >= 1, "warmup boundary must re-shard");
+        let snap = set.snapshot();
+        assert!(
+            snap[2].rate < snap[0].rate,
+            "handicapped device must calibrate slower: {snap:?}"
+        );
+        assert!(
+            set.shards()[2].len() <= shard_before,
+            "slow device's shard must not grow"
+        );
+        let second = tuned.search_batch_dense(&factory, &queries).unwrap();
+        for (got, expect) in first.iter().chain(second.iter()).zip(base_out.iter().cycle()) {
+            assert_eq!(got.scores, expect.scores, "{}", got.query_id);
+        }
+        // accounting survives re-sharding: both batches ran the full
+        // cross product exactly once
+        let executed: u64 = set.snapshot().iter().map(|d| d.executed).sum();
+        assert_eq!(executed, (2 * queries.len() * tuned.n_chunks()) as u64);
     }
 
     #[test]

@@ -62,6 +62,19 @@ pub trait ScoreSink: Send + Sized {
     /// Fold another shard into this one (the once-per-search merge).
     fn merge(&mut self, other: Self);
 
+    /// Fold another shard produced by device/shard `device` into this
+    /// one. The device id is merge *metadata* — groundwork for
+    /// per-shard partial-score caching (a cache that reuses one
+    /// device's chunk scores needs to know which shard produced them) —
+    /// and must never influence the merged output: results are
+    /// fleet-invariant, which is the scatter–gather property test's
+    /// contract. The default implementation is the provenance-blind
+    /// [`merge`](ScoreSink::merge).
+    fn merge_labeled(&mut self, other: Self, device: usize) {
+        let _ = device;
+        self.merge(other);
+    }
+
     /// Consume the merged sink into its output.
     fn finish(self) -> Self::Output;
 }

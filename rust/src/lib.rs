@@ -31,4 +31,5 @@ pub mod phi;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod server;
+pub mod tune;
 pub mod util;

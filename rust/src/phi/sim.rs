@@ -84,6 +84,13 @@ pub struct SimReport {
     /// for the pooled schedulers; populated by
     /// [`simulate_sharded_search`]).
     pub stolen_chunks: Vec<usize>,
+    /// Compute-busy seconds per device (offload and setup excluded) —
+    /// with [`SimReport::device_padded_cells`], the deterministic
+    /// observation stream the online-calibration estimator consumes in
+    /// [`simulate_calibrated_search`].
+    pub device_compute_s: Vec<f64>,
+    /// Padded DP cells each device computed.
+    pub device_padded_cells: Vec<u128>,
 }
 
 impl SimReport {
@@ -185,6 +192,8 @@ pub fn simulate_pooled(
     let mut offload_time = cfg.offload.setup_s * n_phi as f64;
     let mut compute_time = 0.0;
     let mut padded_cells: u128 = 0;
+    let mut device_compute_s = vec![0.0f64; workers.len()];
+    let mut device_padded_cells = vec![0u128; workers.len()];
 
     for chunk in chunks {
         let (w, _) = clock
@@ -202,15 +211,18 @@ pub fn simulate_pooled(
                 clock[w] += off + outcome.makespan / rate;
                 offload_time += off;
                 compute_time += outcome.makespan / rate;
+                device_compute_s[w] += outcome.makespan / rate;
             }
             Worker::Host { rate } => {
                 let dt = cells as f64 / rate;
                 clock[w] += dt;
                 compute_time += dt;
+                device_compute_s[w] += dt;
             }
         }
         chunks_per[w] += 1;
         padded_cells += cells;
+        device_padded_cells[w] += cells;
     }
 
     let makespan = clock.iter().cloned().fold(0.0, f64::max);
@@ -223,6 +235,8 @@ pub fn simulate_pooled(
         stolen_chunks: vec![0; clock.len()],
         device_done: clock,
         chunks_per_device: chunks_per,
+        device_compute_s,
+        device_padded_cells,
     }
 }
 
@@ -277,13 +291,39 @@ pub fn simulate_sharded_rates(
     steal: bool,
     rates: &[f64],
 ) -> SimReport {
+    simulate_sharded_mismodeled(index, chunks, shards, kind, qlen, cfg, steal, rates, rates)
+}
+
+/// The mis-modeled general case of [`simulate_sharded_rates`]: devices
+/// *run* at `true_rates` but the steal policy *believes* `policy_rates`
+/// (victim selection and the profitability guard use beliefs — exactly
+/// what the real execution layer does when its configured rates are
+/// wrong). `policy_rates == true_rates` reproduces
+/// [`simulate_sharded_rates`] bit-for-bit; the calibration loop
+/// ([`simulate_calibrated_search`]) closes the gap between the two
+/// vectors online.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_sharded_mismodeled(
+    index: &Index,
+    chunks: &[Chunk],
+    shards: &[Vec<usize>],
+    kind: EngineKind,
+    qlen: usize,
+    cfg: SimConfig,
+    steal: bool,
+    true_rates: &[f64],
+    policy_rates: &[f64],
+) -> SimReport {
     assert!(cfg.devices >= 1);
     assert_eq!(shards.len(), cfg.devices, "one shard per device");
-    assert_eq!(rates.len(), cfg.devices, "one rate per device");
-    assert!(
-        rates.iter().all(|r| r.is_finite() && *r > 0.0),
-        "device rates must be finite and positive: {rates:?}"
-    );
+    assert_eq!(true_rates.len(), cfg.devices, "one rate per device");
+    assert_eq!(policy_rates.len(), cfg.devices, "one believed rate per device");
+    for rates in [true_rates, policy_rates] {
+        assert!(
+            rates.iter().all(|r| r.is_finite() && *r > 0.0),
+            "device rates must be finite and positive: {rates:?}"
+        );
+    }
     let rep = cfg.replication.max(1) as u128;
     let mut queues: Vec<std::collections::VecDeque<usize>> =
         shards.iter().map(|s| s.iter().copied().collect()).collect();
@@ -294,6 +334,8 @@ pub fn simulate_sharded_rates(
     let mut offload_time = cfg.offload.setup_s * cfg.devices as f64;
     let mut compute_time = 0.0;
     let mut padded_cells: u128 = 0;
+    let mut device_compute_s = vec![0.0f64; cfg.devices];
+    let mut device_padded_cells = vec![0u128; cfg.devices];
 
     loop {
         // earliest-free device that hasn't retired (ties to lowest index)
@@ -306,11 +348,13 @@ pub fn simulate_sharded_rates(
         // own queue front, else the shared steal policy — the SAME
         // implementation the real `DeviceSet` work queues run (victim
         // by estimated remaining time, profitability-guarded), so the
-        // simulated fleet can never drift from the execution layer
+        // simulated fleet can never drift from the execution layer.
+        // The policy consults the *believed* rates; time advances by the
+        // *true* ones.
         let mut item = queues[dev].pop_front();
         if item.is_none() && steal {
             if let Some(v) =
-                pick_steal_victim(queues.iter().map(|q| q.len()), rates, dev)
+                pick_steal_victim(queues.iter().map(|q| q.len()), policy_rates, dev)
             {
                 item = queues[v].pop_back();
                 if item.is_some() {
@@ -326,11 +370,13 @@ pub fn simulate_sharded_rates(
         let off = cfg.offload.chunk_cost(chunk.transfer_bytes * rep as u64);
         let costs = chunk_item_costs(index, chunk, kind, qlen, &cfg);
         let outcome = simulate_schedule(&costs, cfg.threads_per_device, cfg.policy);
-        device_clock[dev] += off + outcome.makespan / rates[dev];
+        device_clock[dev] += off + outcome.makespan / true_rates[dev];
         chunks_per_device[dev] += 1;
         offload_time += off;
-        compute_time += outcome.makespan / rates[dev];
+        compute_time += outcome.makespan / true_rates[dev];
+        device_compute_s[dev] += outcome.makespan / true_rates[dev];
         padded_cells += chunk.padded_cells(qlen) * rep;
+        device_padded_cells[dev] += chunk.padded_cells(qlen) * rep;
     }
 
     let makespan = device_clock.iter().cloned().fold(0.0, f64::max);
@@ -347,6 +393,155 @@ pub fn simulate_sharded_rates(
         stolen_chunks,
         device_done: device_clock,
         chunks_per_device,
+        device_compute_s,
+        device_padded_cells,
+    }
+}
+
+/// A drifting-rate calibration scenario for
+/// [`simulate_calibrated_search`]: the fleet is *configured* with one
+/// rate vector while the devices *truly* run at others, possibly
+/// changing mid-run — the deterministic test bench for the online
+/// calibration loop ([`crate::tune`]).
+#[derive(Clone, Debug)]
+pub struct CalibratedScenario {
+    /// The operator-supplied rate vector the run starts from.
+    pub configured: Vec<f64>,
+    /// `(from_batch, true_rates)` segments, ascending; the first entry
+    /// must start at batch 0. Each segment's vector applies from its
+    /// batch index until the next segment.
+    pub true_rates: Vec<(usize, Vec<f64>)>,
+    /// Batches to simulate.
+    pub batches: usize,
+    /// The calibration knobs under test.
+    pub tune: crate::tune::TuneConfig,
+}
+
+/// One batch of a calibrated run.
+#[derive(Clone, Debug)]
+pub struct CalibratedBatch {
+    /// The batch's simulated makespan (setup + offload + compute).
+    pub makespan: f64,
+    /// Rates the fleet *believed* (sharded and stole by) this batch.
+    pub believed: Vec<f64>,
+    /// Rates the devices truly ran at.
+    pub true_rates: Vec<f64>,
+    /// The perfectly-divisible bound for this batch under the true
+    /// rates: `setup + (single-device work) / Σtrue` — the same ideal
+    /// the `multi_device_scaling` bench and CI gate use.
+    pub ideal: f64,
+    /// Did the barrier after this batch adopt new rates (re-shard)?
+    pub resharded_after: bool,
+}
+
+/// Outcome of [`simulate_calibrated_search`].
+#[derive(Clone, Debug)]
+pub struct CalibratedSimReport {
+    pub batches: Vec<CalibratedBatch>,
+    /// The tuner's final calibrated estimate (normalized to the
+    /// configured sum).
+    pub calibrated: Vec<f64>,
+    /// Re-shards (rate adoptions) over the whole run.
+    pub resharded_total: u64,
+    /// Σ batch makespans.
+    pub total_makespan: f64,
+    /// Real cells per batch (every batch runs the full chunk plan).
+    pub batch_real_cells: u128,
+}
+
+impl CalibratedSimReport {
+    /// GCUPS over the whole run (all batches, warmup included).
+    pub fn gcups(&self) -> f64 {
+        crate::util::gcups(
+            self.batch_real_cells * self.batches.len() as u128,
+            self.total_makespan,
+        )
+    }
+}
+
+/// Deterministic closed-loop calibration simulation: each batch shards
+/// by the *believed* rates, executes under the *true* rates
+/// ([`simulate_sharded_mismodeled`]), feeds the per-device compute
+/// clocks into a [`Tuner`](crate::tune::Tuner) exactly as the real
+/// execution layer's timing hooks do, and re-shards at the barrier when
+/// the tuner says so. True rates may change mid-run — the tuner must
+/// detect the drift and converge again. This is the mechanism the
+/// `miscalibrated` bench scenario and the CI gates run.
+pub fn simulate_calibrated_search(
+    index: &Index,
+    chunks: &[Chunk],
+    kind: EngineKind,
+    qlen: usize,
+    cfg: SimConfig,
+    scenario: &CalibratedScenario,
+) -> CalibratedSimReport {
+    use crate::db::chunk::partition_chunks_weighted;
+    let n = scenario.configured.len();
+    assert!(n >= 1, "need at least one device");
+    assert!(
+        scenario.true_rates.first().is_some_and(|(b, _)| *b == 0),
+        "true_rates must start at batch 0"
+    );
+    for (from, rates) in &scenario.true_rates {
+        assert_eq!(rates.len(), n, "segment at batch {from}: one true rate per device");
+    }
+    let cfg = SimConfig { devices: n, ..cfg };
+    let tuner = crate::tune::Tuner::new(&scenario.configured, scenario.tune.clone());
+
+    // the per-batch ideal is rate-independent work over Σrate: measure
+    // the single-device batch once (setup + Σ(offload + compute))
+    let single = simulate_search(
+        index,
+        chunks,
+        kind,
+        qlen,
+        SimConfig { devices: 1, ..cfg },
+    );
+    let setup = cfg.offload.setup_s;
+
+    let mut believed = scenario.configured.clone();
+    let mut batches = Vec::with_capacity(scenario.batches);
+    let mut total_makespan = 0.0;
+    for b in 0..scenario.batches {
+        let truth = &scenario
+            .true_rates
+            .iter()
+            .rev()
+            .find(|(from, _)| *from <= b)
+            .expect("segment coverage checked above")
+            .1;
+        let believed_this_batch = believed.clone();
+        let shards = partition_chunks_weighted(chunks, &believed_this_batch);
+        let r = simulate_sharded_mismodeled(
+            index, chunks, &shards, kind, qlen, cfg, true, truth, &believed_this_batch,
+        );
+        // the deterministic clocks are the timing hooks: one observation
+        // per device per batch (cells computed, compute-busy seconds)
+        for d in 0..n {
+            tuner.observe(d, r.device_padded_cells[d] as f64, r.device_compute_s[d]);
+        }
+        let resharded_after = match tuner.end_batch() {
+            Some(rates) => {
+                believed = rates;
+                true
+            }
+            None => false,
+        };
+        total_makespan += r.makespan;
+        batches.push(CalibratedBatch {
+            makespan: r.makespan,
+            believed: believed_this_batch,
+            true_rates: truth.clone(),
+            ideal: setup + (single.makespan - setup) / truth.iter().sum::<f64>(),
+            resharded_after,
+        });
+    }
+    CalibratedSimReport {
+        batches,
+        calibrated: tuner.calibrated(),
+        resharded_total: tuner.adoptions(),
+        total_makespan,
+        batch_real_cells: single.real_cells,
     }
 }
 
@@ -680,6 +875,164 @@ mod tests {
             "slow device must not keep the bulk: {:?}",
             stolen.chunks_per_device
         );
+    }
+
+    fn tune_cfg(warmup: u64) -> crate::tune::TuneConfig {
+        crate::tune::TuneConfig {
+            enabled: true,
+            warmup_batches: warmup,
+            ewma_alpha: 0.5,
+            dead_band: 0.1,
+            min_batches_between_reshards: 2,
+        }
+    }
+
+    #[test]
+    fn calibrated_sim_converges_on_miscalibrated_fleet() {
+        // the acceptance scenario: configured [1,1,1], truly [1,1,0.25].
+        // Bounded-length workload (tiny preset, the CI bench regime):
+        // calibration's makespan win lives where chunks are coarse
+        // relative to the fleet and no single mega-chunk bounds the
+        // batch from below — on TrEMBL-shaped length tails the longest
+        // sequences' chunk dominates any split and stealing alone is
+        // already near-ideal (which the drift test below covers).
+        let idx = Index::build(generate(&SynthSpec::tiny(600, 2014)));
+        let chunks = plan_chunks(&idx, ChunkPlanConfig { target_padded_residues: 4096 });
+        assert!(chunks.len() >= 8, "need a real plan, got {}", chunks.len());
+        let scenario = CalibratedScenario {
+            configured: vec![1.0; 3],
+            true_rates: vec![(0, vec![1.0, 1.0, 0.25])],
+            batches: 8,
+            tune: tune_cfg(2),
+        };
+        let r = simulate_calibrated_search(
+            &idx, &chunks, EngineKind::InterSP, 1000, cfg(3), &scenario,
+        );
+        assert_eq!(r.batches.len(), 8);
+        // re-weights within warmup_batches: the warmup boundary adopts
+        assert!(
+            r.batches[1].resharded_after,
+            "warmup boundary must adopt the measured rates: {:?}",
+            r.batches.iter().map(|b| b.resharded_after).collect::<Vec<_>>()
+        );
+        assert!(r.resharded_total >= 1);
+        // converged: the steady-state batch is within 1.2x of the
+        // setup + Σwork/Σrate ideal (the acceptance bound)
+        let last = r.batches.last().unwrap();
+        assert!(
+            last.makespan <= 1.2 * last.ideal,
+            "converged batch {} vs ideal {}",
+            last.makespan,
+            last.ideal
+        );
+        // and the blind warmup batch was materially worse
+        let first = &r.batches[0];
+        assert!(
+            first.makespan > 1.25 * last.makespan,
+            "calibration gain: blind {} vs converged {}",
+            first.makespan,
+            last.makespan
+        );
+        // the estimate recovered the true ratio
+        let ratio = r.calibrated[2] / r.calibrated[0];
+        assert!((0.15..=0.35).contains(&ratio), "calibrated ratio {ratio}: {:?}", r.calibrated);
+        assert!(
+            last.believed[2] < last.believed[0] * 0.5,
+            "steady state runs on measured rates: {:?}",
+            last.believed
+        );
+        assert_eq!(first.believed, vec![1.0; 3], "first batch runs on the configured rates");
+        assert!(r.gcups() > 0.0);
+    }
+
+    #[test]
+    fn calibrated_sim_detects_mid_run_drift() {
+        // truth starts uniform (configured is right), then device 2
+        // degrades to quarter rate at batch 4 — the dead-band holds
+        // during the healthy phase and the streak detector re-shards
+        // within a few batches of the onset
+        let (idx, chunks) = workload(1500);
+        assert!(chunks.len() >= 8);
+        let scenario = CalibratedScenario {
+            configured: vec![1.0; 3],
+            true_rates: vec![(0, vec![1.0; 3]), (4, vec![1.0, 1.0, 0.25])],
+            batches: 12,
+            tune: tune_cfg(2),
+        };
+        let r = simulate_calibrated_search(
+            &idx, &chunks, EngineKind::InterSP, 1000, cfg(3), &scenario,
+        );
+        assert!(
+            r.batches[..4].iter().all(|b| !b.resharded_after),
+            "a correctly configured fleet must not re-shard: {:?}",
+            r.batches.iter().map(|b| b.resharded_after).collect::<Vec<_>>()
+        );
+        let when = r
+            .batches
+            .iter()
+            .position(|b| b.resharded_after)
+            .expect("sustained drift must trigger a re-shard");
+        assert!((4..=8).contains(&when), "re-sharded after batch {when}");
+        let last = r.batches.last().unwrap();
+        assert!(
+            last.makespan <= 1.2 * last.ideal,
+            "post-drift convergence: {} vs ideal {}",
+            last.makespan,
+            last.ideal
+        );
+        assert!(last.believed[2] < last.believed[0] * 0.5, "{:?}", last.believed);
+    }
+
+    #[test]
+    fn calibrated_sim_uniform_truth_holds_steady() {
+        // truth == configured: every batch is bit-identical and the
+        // tuner never re-shards (the dead-band absorbs scheduling noise)
+        let (idx, chunks) = workload(1200);
+        let scenario = CalibratedScenario {
+            configured: vec![1.0; 2],
+            true_rates: vec![(0, vec![1.0; 2])],
+            batches: 5,
+            tune: tune_cfg(2),
+        };
+        let r = simulate_calibrated_search(
+            &idx, &chunks, EngineKind::InterSP, 729, cfg(2), &scenario,
+        );
+        assert_eq!(r.resharded_total, 0, "healthy fleet must hold steady");
+        for b in &r.batches {
+            assert_eq!(b.makespan, r.batches[0].makespan, "steady batches are bit-identical");
+            assert_eq!(b.believed, vec![1.0; 2]);
+        }
+        // calibrated estimate sits inside the dead-band around 1.0
+        for &c in &r.calibrated {
+            assert!((c - 1.0).abs() < 0.1, "{:?}", r.calibrated);
+        }
+    }
+
+    #[test]
+    fn mismodeled_with_true_beliefs_is_the_rated_sim() {
+        use crate::db::chunk::partition_chunks_weighted;
+        let (idx, chunks) = workload(1000);
+        let rates = [1.0, 0.5, 0.25];
+        let shards = partition_chunks_weighted(&chunks, &rates);
+        let a = simulate_sharded_rates(
+            &idx, &chunks, &shards, EngineKind::InterSP, 500, cfg(3), true, &rates,
+        );
+        let b = simulate_sharded_mismodeled(
+            &idx, &chunks, &shards, EngineKind::InterSP, 500, cfg(3), true, &rates, &rates,
+        );
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.device_done, b.device_done);
+        assert_eq!(a.stolen_chunks, b.stolen_chunks);
+        // per-device gauges account for everything exactly once
+        assert_eq!(a.device_padded_cells.iter().sum::<u128>(), a.padded_cells);
+        assert!((a.device_compute_s.iter().sum::<f64>() - a.compute_time).abs() < 1e-9);
+        // believing uniform on a skewed fleet changes the schedule
+        let c = simulate_sharded_mismodeled(
+            &idx, &chunks, &shards, EngineKind::InterSP, 500, cfg(3), true, &rates,
+            &[1.0, 1.0, 1.0],
+        );
+        assert_eq!(c.real_cells, a.real_cells, "conservation is belief-independent");
+        assert_eq!(c.chunks_per_device.iter().sum::<usize>(), chunks.len());
     }
 
     #[test]

@@ -60,6 +60,13 @@ struct Entry {
     /// every hit so a digest collision can only miss, never lie.
     codes: Vec<u8>,
     hits: Vec<HitPayload>,
+    /// Fingerprint of the fleet shape (device count × configured rates ×
+    /// steal setting) that computed this entry. **Not part of the key
+    /// and never consulted by lookups** — results are fleet-invariant
+    /// (the scatter–gather property test's contract) — but per-shard
+    /// *partial-score* caching (ROADMAP) will key chunk-level entries on
+    /// it, so the key material is recorded from day one.
+    fleet_fingerprint: u64,
     last_used: u64,
 }
 
@@ -99,8 +106,16 @@ impl ResultCache {
     }
 
     /// Insert (or refresh) an entry, evicting the least-recently-used
-    /// entry if at capacity.
-    pub fn insert(&mut self, key: CacheKey, codes: Vec<u8>, hits: Vec<HitPayload>) {
+    /// entry if at capacity. `fleet_fingerprint` identifies the fleet
+    /// shape that computed the result (stored as groundwork for
+    /// per-shard partial-score caching; lookups ignore it).
+    pub fn insert(
+        &mut self,
+        key: CacheKey,
+        codes: Vec<u8>,
+        hits: Vec<HitPayload>,
+        fleet_fingerprint: u64,
+    ) {
         if self.capacity == 0 {
             return;
         }
@@ -112,8 +127,28 @@ impl ResultCache {
                 self.map.remove(&oldest);
             }
         }
-        self.map.insert(key, Entry { codes, hits, last_used: self.tick });
+        self.map.insert(key, Entry { codes, hits, fleet_fingerprint, last_used: self.tick });
     }
+
+    /// The fleet fingerprint recorded with an entry (observability /
+    /// tests; not a lookup input).
+    pub fn fleet_fingerprint_of(&self, key: &CacheKey) -> Option<u64> {
+        self.map.get(key).map(|e| e.fleet_fingerprint)
+    }
+}
+
+/// Fingerprint a fleet shape for cache-entry metadata: device count,
+/// configured rates (bitwise) and the steal setting. Deliberately built
+/// from the *configured* shape, not the live calibrated one — an entry
+/// records what fleet definition produced it, and online re-shards don't
+/// change results (that's the whole point of the gather contract).
+pub fn fleet_fingerprint(devices: usize, rates: &[f64], steal: bool) -> u64 {
+    let mut h = fnv1a(b"swaphi-fleet");
+    h = fnv1a_field(h, &(devices as u64).to_le_bytes());
+    for r in rates {
+        h = fnv1a_field(h, &r.to_bits().to_le_bytes());
+    }
+    fnv1a_field(h, &[steal as u8])
 }
 
 #[cfg(test)]
@@ -136,7 +171,7 @@ mod tests {
     fn get_returns_inserted_payload() {
         let mut c = ResultCache::new(4);
         assert!(c.get(&key(1), Q).is_none());
-        c.insert(key(1), Q.to_vec(), hits(3));
+        c.insert(key(1), Q.to_vec(), hits(3), 7);
         assert_eq!(c.get(&key(1), Q).unwrap(), hits(3));
         // different generation or params = different entry
         let other = CacheKey { index_generation: 8, ..key(1) };
@@ -148,7 +183,7 @@ mod tests {
         // same CacheKey, different query bytes (a forced FNV collision):
         // the stored-codes check must refuse to serve the wrong hits
         let mut c = ResultCache::new(4);
-        c.insert(key(1), Q.to_vec(), hits(3));
+        c.insert(key(1), Q.to_vec(), hits(3), 7);
         assert!(c.get(&key(1), &[9, 9, 9]).is_none());
         assert_eq!(c.get(&key(1), Q).unwrap(), hits(3), "real query still hits");
     }
@@ -156,10 +191,10 @@ mod tests {
     #[test]
     fn lru_evicts_least_recently_used() {
         let mut c = ResultCache::new(2);
-        c.insert(key(1), Q.to_vec(), hits(1));
-        c.insert(key(2), Q.to_vec(), hits(2));
+        c.insert(key(1), Q.to_vec(), hits(1), 7);
+        c.insert(key(2), Q.to_vec(), hits(2), 7);
         assert!(c.get(&key(1), Q).is_some()); // refresh 1, making 2 the LRU
-        c.insert(key(3), Q.to_vec(), hits(3));
+        c.insert(key(3), Q.to_vec(), hits(3), 7);
         assert_eq!(c.len(), 2);
         assert!(c.get(&key(1), Q).is_some());
         assert!(c.get(&key(2), Q).is_none(), "2 was least recently used");
@@ -169,7 +204,7 @@ mod tests {
     #[test]
     fn zero_capacity_disables() {
         let mut c = ResultCache::new(0);
-        c.insert(key(1), Q.to_vec(), hits(1));
+        c.insert(key(1), Q.to_vec(), hits(1), 7);
         assert!(c.is_empty());
         assert!(c.get(&key(1), Q).is_none());
     }
@@ -177,8 +212,8 @@ mod tests {
     #[test]
     fn reinsert_refreshes_not_grows() {
         let mut c = ResultCache::new(2);
-        c.insert(key(1), Q.to_vec(), hits(1));
-        c.insert(key(1), Q.to_vec(), hits(2));
+        c.insert(key(1), Q.to_vec(), hits(1), 7);
+        c.insert(key(1), Q.to_vec(), hits(2), 7);
         assert_eq!(c.len(), 1);
         assert_eq!(c.get(&key(1), Q).unwrap(), hits(2));
     }
@@ -189,5 +224,32 @@ mod tests {
         let b = fnv1a_field(fnv1a_field(fnv1a(b""), b"a"), b"bc");
         assert_ne!(a, b);
         assert_ne!(fnv1a(b"x"), fnv1a(b"y"));
+    }
+
+    #[test]
+    fn fleet_fingerprint_is_recorded_but_not_a_lookup_input() {
+        let fp1 = fleet_fingerprint(1, &[1.0], true);
+        let fp2 = fleet_fingerprint(2, &[1.0, 0.25], true);
+        assert_ne!(fp1, fp2);
+        let mut c = ResultCache::new(4);
+        c.insert(key(1), Q.to_vec(), hits(2), fp1);
+        assert_eq!(c.fleet_fingerprint_of(&key(1)), Some(fp1));
+        // lookups ignore the fingerprint: a different fleet shape still
+        // hits the same entry (results are fleet-invariant)
+        assert_eq!(c.get(&key(1), Q).unwrap(), hits(2));
+        // re-insert under a new fleet shape replaces the metadata
+        c.insert(key(1), Q.to_vec(), hits(2), fp2);
+        assert_eq!(c.fleet_fingerprint_of(&key(1)), Some(fp2));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn fleet_fingerprint_tracks_every_shape_knob() {
+        let base = fleet_fingerprint(2, &[1.0, 0.5], true);
+        assert_eq!(base, fleet_fingerprint(2, &[1.0, 0.5], true), "deterministic");
+        assert_ne!(base, fleet_fingerprint(2, &[1.0, 0.5], false), "steal");
+        assert_ne!(base, fleet_fingerprint(2, &[0.5, 1.0], true), "rate order");
+        assert_ne!(base, fleet_fingerprint(3, &[1.0, 0.5], true), "count");
+        assert_ne!(base, fleet_fingerprint(2, &[], true), "uniform-default vs explicit");
     }
 }

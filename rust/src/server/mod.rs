@@ -39,8 +39,9 @@ use crate::db::chunk::plan_chunks_paired;
 use crate::db::index::Index;
 use crate::matrices::Scoring;
 use crate::metrics::Histogram;
+use crate::tune::Tuner;
 use crate::util::json::Json;
-use cache::{fnv1a, fnv1a_field, CacheKey, ResultCache};
+use cache::{fleet_fingerprint, fnv1a, fnv1a_field, CacheKey, ResultCache};
 use protocol::{HitPayload, Request};
 use queue::{AdmissionQueue, Pending, PushError};
 use std::collections::{BTreeMap, HashMap};
@@ -327,6 +328,10 @@ struct Shared {
     stop: AtomicBool,
     generation: u64,
     params_fp: u64,
+    /// Fleet-shape fingerprint recorded with every cache entry
+    /// (groundwork for per-shard partial-score caching; lookups ignore
+    /// it).
+    fleet_fp: u64,
     session_top_k: usize,
     /// The simulated coprocessor fleet the coalescer's session schedules
     /// onto — held here so the `stats` op can report per-device
@@ -377,12 +382,21 @@ impl Server {
 
         let generation = index_generation(&index);
         let params_fp = params_fingerprint(&scoring, search.precision, search.top_k, factory.as_ref());
+        let fleet_fp = fleet_fingerprint(search.devices.max(1), &search.rates, search.steal);
         // plan the chunks exactly once: the fleet is built over this
         // plan here (so the stats endpoint can observe it) and the same
         // Vec is handed to the coalescer's session
         let chunks = plan_chunks_paired(&index, search.chunk);
         let devices =
             Arc::new(DeviceSet::with_rates(&chunks, &search.device_rates(), search.steal));
+        // online calibration: the daemon owns the tuner so its stats op
+        // observes the same instance the session feeds
+        if search.tune.enabled {
+            devices.set_tuner(Arc::new(Tuner::new(
+                &search.device_rates(),
+                search.tune.clone(),
+            )));
+        }
         let (listener, addr) = bind(&cfg.listen)?;
         listener.set_nonblocking(true)?;
 
@@ -393,6 +407,7 @@ impl Server {
             stop: AtomicBool::new(false),
             generation,
             params_fp,
+            fleet_fp,
             session_top_k: search.top_k,
             devices,
             cfg,
@@ -638,6 +653,27 @@ fn coalescer_loop(
     // Server::start — planned once, consistent by construction
     let session =
         SearchSession::from_parts(index, scoring, search, chunks, Arc::clone(&shared.devices));
+    // warmup-window calibration on index load: before serving traffic,
+    // run the tuner's warmup batches on synthetic probe queries so the
+    // fleet starts on *measured* rates instead of configured guesses
+    // (periodic recalibration then rides every coalesced batch — the
+    // session folds its timings at each barrier). Probe results are
+    // discarded; probes never touch the cache or the metrics.
+    if session.config.tune.enabled && session.n_chunks() > 0 {
+        let probes = crate::tune::probe_batch(256.min(shared.cfg.max_query_len), 4);
+        let warmup = session.config.tune.warmup_batches.max(1);
+        for _ in 0..warmup {
+            if session.search_batch(factory, &probes).is_err() {
+                break; // a backend that can't run probes will also fail requests
+            }
+        }
+        println!(
+            "swaphi serve: calibration warmup done ({warmup} probe batches, \
+             resharded {}x, rates {:?})",
+            shared.devices.reshards(),
+            shared.devices.rates()
+        );
+    }
     let window = Duration::from_millis(shared.cfg.batch_window_ms);
     while let Some(batch) = shared.queue.drain_batch(shared.cfg.max_batch, window) {
         run_batch(shared, &session, factory, batch);
@@ -697,7 +733,12 @@ fn run_batch(
                 let full = &payloads[i];
                 if let Some(key) = p.cache_key {
                     if !inserted[i] {
-                        shared.cache.lock().unwrap().insert(key, p.codes.clone(), full.clone());
+                        shared.cache.lock().unwrap().insert(
+                            key,
+                            p.codes.clone(),
+                            full.clone(),
+                            shared.fleet_fp,
+                        );
                         inserted[i] = true;
                     }
                 }
@@ -744,7 +785,12 @@ fn stats_json(shared: &Shared) -> Json {
     s.insert("latency_us".to_string(), summary_json(m.latency_summary()));
     // the device fleet: per-device cumulative counters + live queue
     // depths, and the per-batch histograms through the same
-    // Histogram::summary path as every other histogram here
+    // Histogram::summary path as every other histogram here. With the
+    // tuner live, every device also reports its three rate surfaces:
+    // configured (operator input), calibrated (current measurement) and
+    // rate (what the fleet actually runs on — the adopted vector).
+    let tuner = shared.devices.tuner();
+    let gauges = tuner.as_ref().map(|t| t.gauges());
     let fleet: Vec<Json> = shared
         .devices
         .snapshot()
@@ -754,9 +800,23 @@ fn stats_json(shared: &Shared) -> Json {
             m.insert("device".to_string(), Json::Num(d.device as f64));
             m.insert("shard_chunks".to_string(), Json::Num(d.shard_chunks as f64));
             m.insert("rate".to_string(), Json::Num(d.rate));
+            let (configured, calibrated) = match &gauges {
+                Some(g) => (g[d.device].configured, g[d.device].calibrated),
+                None => (d.rate, d.rate),
+            };
+            m.insert("rate_configured".to_string(), Json::Num(configured));
+            m.insert("rate_calibrated".to_string(), Json::Num(calibrated));
             // live straggler gauge: queue depth ÷ rate, the steal
-            // policy's victim metric (0 between batches)
-            m.insert("est_remaining".to_string(), Json::Num(d.est_remaining()));
+            // policy's victim metric (0 between batches). Once the tuner
+            // is live this divides by the *calibrated* rate — the best
+            // current estimate of how long the queue really is in time —
+            // not the configured one.
+            let est = if gauges.is_some() {
+                d.queue_depth as f64 / calibrated.max(f64::MIN_POSITIVE)
+            } else {
+                d.est_remaining()
+            };
+            m.insert("est_remaining".to_string(), Json::Num(est));
             m.insert("executed".to_string(), Json::Num(d.executed as f64));
             m.insert("stolen".to_string(), Json::Num(d.stolen as f64));
             m.insert("lost".to_string(), Json::Num(d.lost as f64));
@@ -765,6 +825,22 @@ fn stats_json(shared: &Shared) -> Json {
         })
         .collect();
     s.insert("devices".to_string(), Json::Arr(fleet));
+    s.insert(
+        "resharded_total".to_string(),
+        Json::Num(shared.devices.reshards() as f64),
+    );
+    if let Some(t) = &tuner {
+        let mut m = BTreeMap::new();
+        m.insert("enabled".to_string(), Json::Bool(true));
+        m.insert("batches".to_string(), Json::Num(t.batches() as f64));
+        m.insert("adoptions".to_string(), Json::Num(t.adoptions() as f64));
+        m.insert(
+            "warmup_batches".to_string(),
+            Json::Num(t.config().warmup_batches as f64),
+        );
+        m.insert("dead_band".to_string(), Json::Num(t.config().dead_band));
+        s.insert("tune".to_string(), Json::Obj(m));
+    }
     s.insert(
         "device_items_per_batch".to_string(),
         summary_json(shared.devices.items_summary()),

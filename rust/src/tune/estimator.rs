@@ -1,0 +1,213 @@
+//! Per-device throughput estimation — the *measurement* half of online
+//! rate calibration.
+//!
+//! Every timed work item (or, in simulation, every deterministic batch)
+//! contributes one observation per device: padded cells processed and
+//! the seconds it took. The estimator folds observations into an
+//! exponentially-weighted moving average of instantaneous throughput
+//! (padded cells per second), so recent behaviour dominates but a single
+//! noisy item cannot whip the estimate around. Rucci et al.'s KNL study
+//! (PAPERS.md) is the motivation: sustained SW throughput is a measured,
+//! drifting quantity — thread placement, memory mode and co-tenancy all
+//! move it — so treating the rate vector as static config mis-models
+//! real fleets.
+//!
+//! The estimator is deliberately unit-agnostic: it reports *relative*
+//! rates (normalized so the vector sums like the configured one), which
+//! is all the weighted partitioner and the steal policy consume — both
+//! are invariant under uniform rescaling of the rate vector.
+
+/// EWMA throughput state of one device.
+#[derive(Clone, Copy, Debug, Default)]
+struct DeviceEwma {
+    /// Smoothed throughput (padded cells / second); meaningful only when
+    /// `observations > 0`.
+    rate: f64,
+    observations: u64,
+}
+
+/// Per-device EWMA throughput estimator (padded cells per second).
+#[derive(Clone, Debug)]
+pub struct RateEstimator {
+    alpha: f64,
+    devices: Vec<DeviceEwma>,
+}
+
+impl RateEstimator {
+    /// `alpha` is the EWMA weight of the newest observation, in (0, 1].
+    pub fn new(n_devices: usize, alpha: f64) -> RateEstimator {
+        assert!(n_devices >= 1, "need at least one device");
+        assert!(
+            alpha.is_finite() && alpha > 0.0 && alpha <= 1.0,
+            "ewma alpha must be in (0, 1], got {alpha}"
+        );
+        RateEstimator { alpha, devices: vec![DeviceEwma::default(); n_devices] }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Fold one observation: device `dev` processed `padded_cells` in
+    /// `seconds`. Non-positive or non-finite inputs are ignored (a
+    /// zero-length timing window carries no rate information).
+    pub fn observe(&mut self, dev: usize, padded_cells: f64, seconds: f64) {
+        if !(padded_cells > 0.0) || !(seconds > 0.0) || !seconds.is_finite() {
+            return;
+        }
+        let inst = padded_cells / seconds;
+        if !inst.is_finite() {
+            return;
+        }
+        let d = &mut self.devices[dev];
+        d.rate = if d.observations == 0 {
+            inst
+        } else {
+            self.alpha * inst + (1.0 - self.alpha) * d.rate
+        };
+        d.observations += 1;
+    }
+
+    /// Observations folded into device `dev` so far.
+    pub fn observations(&self, dev: usize) -> u64 {
+        self.devices[dev].observations
+    }
+
+    /// True once every device has at least one observation — before that
+    /// there is no complete vector to calibrate from.
+    pub fn ready(&self) -> bool {
+        self.devices.iter().all(|d| d.observations > 0)
+    }
+
+    /// Raw EWMA throughput of one device (cells/s); `None` before its
+    /// first observation.
+    pub fn throughput(&self, dev: usize) -> Option<f64> {
+        let d = self.devices[dev];
+        (d.observations > 0).then_some(d.rate)
+    }
+
+    /// The calibrated relative-rate vector: measured throughputs scaled
+    /// so the vector sums to `target_sum` (callers pass the configured
+    /// vector's sum so calibrated and configured rates are directly
+    /// comparable per device). `None` until [`ready`](Self::ready).
+    pub fn calibrated(&self, target_sum: f64) -> Option<Vec<f64>> {
+        if !self.ready() {
+            return None;
+        }
+        let total: f64 = self.devices.iter().map(|d| d.rate).sum();
+        if !(total > 0.0) || !total.is_finite() {
+            return None;
+        }
+        Some(self.devices.iter().map(|d| d.rate * target_sum / total).collect())
+    }
+
+    /// Like [`calibrated`](Self::calibrated), but devices with no
+    /// observations hold their `prior` rate *relative to the observed
+    /// devices' priors* instead of blocking the whole vector — so a
+    /// device that never executes an item (empty shard, stealing off)
+    /// cannot starve calibration for the rest of the fleet. `None` only
+    /// when **no** device has been observed.
+    pub fn calibrated_with_prior(&self, prior: &[f64], target_sum: f64) -> Option<Vec<f64>> {
+        assert_eq!(prior.len(), self.devices.len(), "one prior rate per device");
+        if self.ready() {
+            return self.calibrated(target_sum);
+        }
+        let obs_rate: f64 =
+            self.devices.iter().filter(|d| d.observations > 0).map(|d| d.rate).sum();
+        let obs_prior: f64 = self
+            .devices
+            .iter()
+            .zip(prior)
+            .filter(|(d, _)| d.observations > 0)
+            .map(|(_, &p)| p)
+            .sum();
+        if !(obs_rate > 0.0) || !obs_rate.is_finite() || !(obs_prior > 0.0) {
+            return None;
+        }
+        // unobserved devices: no information, so keep the prior belief —
+        // scaled into the measured units via the observed devices
+        let scale = obs_rate / obs_prior;
+        let est: Vec<f64> = self
+            .devices
+            .iter()
+            .zip(prior)
+            .map(|(d, &p)| if d.observations > 0 { d.rate } else { p * scale })
+            .collect();
+        let total: f64 = est.iter().sum();
+        Some(est.iter().map(|&r| r * target_sum / total).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_observation_seeds_then_ewma_blends() {
+        let mut e = RateEstimator::new(2, 0.5);
+        assert!(!e.ready());
+        assert_eq!(e.throughput(0), None);
+        e.observe(0, 100.0, 1.0); // 100 cells/s
+        assert_eq!(e.throughput(0), Some(100.0));
+        e.observe(0, 300.0, 1.0); // inst 300 -> 0.5*300 + 0.5*100 = 200
+        assert_eq!(e.throughput(0), Some(200.0));
+        assert_eq!(e.observations(0), 2);
+        assert!(!e.ready(), "device 1 unobserved");
+        e.observe(1, 50.0, 1.0);
+        assert!(e.ready());
+    }
+
+    #[test]
+    fn calibrated_normalizes_to_target_sum() {
+        let mut e = RateEstimator::new(3, 1.0);
+        e.observe(0, 400.0, 1.0);
+        e.observe(1, 400.0, 1.0);
+        e.observe(2, 100.0, 1.0); // quarter-rate straggler
+        let cal = e.calibrated(3.0).unwrap();
+        assert!((cal.iter().sum::<f64>() - 3.0).abs() < 1e-12);
+        assert!((cal[0] - cal[1]).abs() < 1e-12);
+        assert!((cal[0] / cal[2] - 4.0).abs() < 1e-9, "{cal:?}");
+    }
+
+    #[test]
+    fn degenerate_observations_are_ignored() {
+        let mut e = RateEstimator::new(1, 0.3);
+        e.observe(0, 100.0, 0.0);
+        e.observe(0, 0.0, 1.0);
+        e.observe(0, 100.0, f64::NAN);
+        e.observe(0, 100.0, f64::INFINITY);
+        assert_eq!(e.observations(0), 0);
+        assert!(e.calibrated(1.0).is_none());
+        e.observe(0, 100.0, 2.0);
+        assert_eq!(e.throughput(0), Some(50.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "alpha")]
+    fn alpha_out_of_range_rejected() {
+        let _ = RateEstimator::new(2, 0.0);
+    }
+
+    #[test]
+    fn unobserved_devices_hold_their_prior_instead_of_starving() {
+        let mut e = RateEstimator::new(3, 1.0);
+        assert!(e.calibrated_with_prior(&[1.0, 1.0, 1.0], 3.0).is_none(), "nothing observed");
+        // devices 0 and 1 observed (device 1 half speed); device 2 never
+        // executes an item — it must keep its prior rate relative to the
+        // observed pair, not block the vector
+        e.observe(0, 400.0, 1.0);
+        e.observe(1, 200.0, 1.0);
+        let cal = e.calibrated_with_prior(&[1.0, 1.0, 1.0], 3.0).unwrap();
+        assert!((cal.iter().sum::<f64>() - 3.0).abs() < 1e-12);
+        assert!((cal[0] / cal[1] - 2.0).abs() < 1e-9, "{cal:?}");
+        // unobserved device sits at the observed devices' prior mean:
+        // est2 = 1.0 * (600/2) = 300, between the two measured rates
+        assert!((cal[2] / cal[1] - 1.5).abs() < 1e-9, "{cal:?}");
+        // once everyone is observed it is exactly `calibrated`
+        e.observe(2, 100.0, 1.0);
+        assert_eq!(
+            e.calibrated_with_prior(&[1.0, 1.0, 1.0], 3.0),
+            e.calibrated(3.0)
+        );
+    }
+}

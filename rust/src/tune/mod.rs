@@ -1,0 +1,282 @@
+//! Online rate calibration — the self-tuning fleet subsystem.
+//!
+//! PR 4 made the fleet rate-*aware*: shards are weighted by
+//! `padded_residues ÷ rate` and steal victims picked by estimated
+//! remaining time. But the rates themselves were still static operator
+//! config, which the paper itself concedes is fragile (its dynamic
+//! intra-task distribution exists precisely because static splits
+//! mis-model real devices), and Rucci et al. (PAPERS.md) measure
+//! sustained SW throughput shifting materially with thread placement and
+//! memory mode. This module converts the whole rate surface from input
+//! to output:
+//!
+//! * [`estimator::RateEstimator`] — per-device EWMA throughput (padded
+//!   cells per second), fed by the device layer's timing hooks
+//!   (`coordinator::devices` — items are timed individually and folded
+//!   once per device per batch, so the hot loop takes no calibration
+//!   locks) and, in simulation, by the deterministic clocks of
+//!   `phi::sim::simulate_calibrated_search`;
+//! * [`policy::DriftPolicy`] — warmup-window adoption plus dead-band
+//!   drift detection (calibrated ÷ adopted outside the band for
+//!   [`policy::DRIFT_BATCHES`] consecutive batches), rate-limited by
+//!   `min_batches_between_reshards`;
+//! * [`Tuner`] — the thread-safe facade both of them live behind: device
+//!   host threads call [`Tuner::observe`] concurrently, the session
+//!   calls [`Tuner::end_batch`] at the barrier, and a returned vector
+//!   means "re-shard to these rates **now**, at the barrier" — never
+//!   mid-batch, so scatter–gather completeness and result bit-identity
+//!   are untouched by construction.
+
+pub mod estimator;
+pub mod policy;
+
+pub use estimator::RateEstimator;
+pub use policy::{Decision, DriftPolicy, TuneConfig, DRIFT_BATCHES};
+
+use std::sync::Mutex;
+
+/// The canonical calibration probe batch: `n` seeded synthetic queries
+/// of length `qlen`, used by both the daemon's warmup window (index
+/// load) and the offline `swaphi calibrate` command — one probe shape,
+/// so the two calibration paths can never silently diverge. Probe
+/// results are always discarded; probes must never touch caches or
+/// request metrics.
+pub fn probe_batch(qlen: usize, n: usize) -> Vec<(String, Vec<u8>)> {
+    let qlen = qlen.max(16);
+    (0..n)
+        .map(|i| {
+            (
+                format!("calibration-probe-{i}"),
+                crate::db::synth::generate_query(qlen, 0xCA11_B8A7E ^ i as u64),
+            )
+        })
+        .collect()
+}
+
+/// Point-in-time calibration state of one device (for `stats` and the
+/// CLI's calibration report).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TuneGauge {
+    pub device: usize,
+    /// The operator-supplied rate this device started with.
+    pub configured: f64,
+    /// The estimator's current normalized rate (falls back to the
+    /// adopted rate until this device has been observed).
+    pub calibrated: f64,
+    /// The rate the fleet currently runs on (configured until the first
+    /// adoption).
+    pub adopted: f64,
+}
+
+struct TunerState {
+    estimator: RateEstimator,
+    policy: DriftPolicy,
+}
+
+/// Thread-safe calibration facade shared by the device host threads (who
+/// time work items), the session (who asks for a re-shard decision at
+/// each batch barrier) and observers (the server's `stats` op).
+pub struct Tuner {
+    cfg: TuneConfig,
+    configured: Vec<f64>,
+    state: Mutex<TunerState>,
+}
+
+impl Tuner {
+    pub fn new(configured_rates: &[f64], cfg: TuneConfig) -> Tuner {
+        cfg.validate();
+        assert!(!configured_rates.is_empty(), "need at least one device");
+        Tuner {
+            configured: configured_rates.to_vec(),
+            state: Mutex::new(TunerState {
+                estimator: RateEstimator::new(configured_rates.len(), cfg.ewma_alpha),
+                policy: DriftPolicy::new(configured_rates.to_vec(), cfg.clone()),
+            }),
+            cfg,
+        }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.configured.len()
+    }
+
+    pub fn config(&self) -> &TuneConfig {
+        &self.cfg
+    }
+
+    /// The operator-supplied rate vector.
+    pub fn configured(&self) -> &[f64] {
+        &self.configured
+    }
+
+    /// Fold one timed observation: device `dev` spent `seconds`
+    /// processing `padded_cells` DP cells. Called concurrently from the
+    /// device host threads.
+    pub fn observe(&self, dev: usize, padded_cells: f64, seconds: f64) {
+        self.state.lock().unwrap().estimator.observe(dev, padded_cells, seconds);
+    }
+
+    /// Batch barrier: feed the policy and return the rate vector to
+    /// re-shard to, if drift (or the warmup boundary) demands one.
+    /// Devices that have never been observed (empty shard, stealing
+    /// off) hold their adopted rate as a prior instead of starving the
+    /// whole loop — see [`RateEstimator::calibrated_with_prior`].
+    pub fn end_batch(&self) -> Option<Vec<f64>> {
+        let mut st = self.state.lock().unwrap();
+        let target_sum: f64 = self.configured.iter().sum();
+        let cal = st.estimator.calibrated_with_prior(st.policy.adopted(), target_sum);
+        match st.policy.end_batch(cal.as_deref()) {
+            Decision::Hold => None,
+            Decision::Adopt(rates) => Some(rates),
+        }
+    }
+
+    /// Batches folded so far.
+    pub fn batches(&self) -> u64 {
+        self.state.lock().unwrap().policy.batches()
+    }
+
+    /// Rate vectors adopted so far (== re-shards recommended).
+    pub fn adoptions(&self) -> u64 {
+        self.state.lock().unwrap().policy.adoptions()
+    }
+
+    /// The rates the fleet currently runs on.
+    pub fn adopted(&self) -> Vec<f64> {
+        self.state.lock().unwrap().policy.adopted().to_vec()
+    }
+
+    /// Current calibrated estimate (normalized to the configured sum);
+    /// unobserved devices hold their adopted rate as a prior, and the
+    /// whole vector falls back to the adopted one while nothing has
+    /// been observed at all.
+    pub fn calibrated(&self) -> Vec<f64> {
+        let st = self.state.lock().unwrap();
+        let target_sum: f64 = self.configured.iter().sum();
+        st.estimator
+            .calibrated_with_prior(st.policy.adopted(), target_sum)
+            .unwrap_or_else(|| st.policy.adopted().to_vec())
+    }
+
+    /// Per-device configured / calibrated / adopted gauges.
+    pub fn gauges(&self) -> Vec<TuneGauge> {
+        let st = self.state.lock().unwrap();
+        let target_sum: f64 = self.configured.iter().sum();
+        let cal = st.estimator.calibrated_with_prior(st.policy.adopted(), target_sum);
+        let adopted = st.policy.adopted();
+        (0..self.configured.len())
+            .map(|d| TuneGauge {
+                device: d,
+                configured: self.configured[d],
+                calibrated: cal.as_ref().map_or(adopted[d], |c| c[d]),
+                adopted: adopted[d],
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tuner(configured: &[f64], warmup: u64) -> Tuner {
+        Tuner::new(
+            configured,
+            TuneConfig {
+                enabled: true,
+                warmup_batches: warmup,
+                ewma_alpha: 0.5,
+                dead_band: 0.15,
+                min_batches_between_reshards: 2,
+            },
+        )
+    }
+
+    /// One simulated batch where device d's true speed is `speed[d]`
+    /// (cells per second), each processing the same cell count.
+    fn feed(t: &Tuner, speeds: &[f64]) {
+        for (d, &s) in speeds.iter().enumerate() {
+            t.observe(d, 1000.0, 1000.0 / s);
+        }
+    }
+
+    #[test]
+    fn miscalibrated_fleet_reweights_at_warmup() {
+        let t = tuner(&[1.0, 1.0, 1.0], 2);
+        let truth = [400.0, 400.0, 100.0];
+        feed(&t, &truth);
+        assert_eq!(t.end_batch(), None, "warmup batch 1 holds");
+        feed(&t, &truth);
+        let rates = t.end_batch().expect("warmup boundary must adopt");
+        assert_eq!(t.adoptions(), 1);
+        // normalized to the configured sum (3.0), ratios match the truth
+        assert!((rates.iter().sum::<f64>() - 3.0).abs() < 1e-9);
+        assert!((rates[0] / rates[2] - 4.0).abs() < 1e-6, "{rates:?}");
+        assert_eq!(t.adopted(), rates);
+        // steady state: same truth, no further re-shards
+        for _ in 0..5 {
+            feed(&t, &truth);
+            assert_eq!(t.end_batch(), None);
+        }
+        assert_eq!(t.adoptions(), 1);
+    }
+
+    #[test]
+    fn mid_run_drift_triggers_reshard_after_streak() {
+        let t = tuner(&[1.0, 1.0], 1);
+        let uniform = [500.0, 500.0];
+        let skewed = [500.0, 125.0];
+        for _ in 0..3 {
+            feed(&t, &uniform);
+            assert_eq!(t.end_batch(), None, "well-calibrated fleet holds");
+        }
+        // the device slows down mid-run: EWMA needs a couple of batches
+        // to move the estimate out of the dead-band, then the streak
+        // (DRIFT_BATCHES) must fill before adoption
+        let mut resharded_at = None;
+        for b in 0..6 {
+            feed(&t, &skewed);
+            if let Some(rates) = t.end_batch() {
+                resharded_at = Some(b);
+                assert!(rates[1] < rates[0] * 0.5, "{rates:?}");
+                break;
+            }
+        }
+        let b = resharded_at.expect("sustained drift must trigger a re-shard");
+        assert!(b >= 1, "a single out-of-band batch must not re-shard");
+        assert_eq!(t.adoptions(), 1);
+    }
+
+    #[test]
+    fn partially_observed_fleet_still_calibrates() {
+        // device 2 never executes an item (empty shard, stealing off):
+        // the observed pair's skew must still be adopted, with the
+        // unobserved device holding its prior relative rate
+        let t = tuner(&[1.0, 1.0, 1.0], 1);
+        t.observe(0, 1000.0, 1.0);
+        t.observe(1, 1000.0, 4.0);
+        let rates = t.end_batch().expect("observed skew must adopt despite a silent device");
+        assert!(rates[1] < rates[0] / 2.0, "{rates:?}");
+        // unobserved device kept the prior (== mean of observed priors
+        // in measured units): between the fast and slow measured rates
+        assert!(rates[1] < rates[2] && rates[2] < rates[0], "{rates:?}");
+        assert_eq!(t.adoptions(), 1);
+    }
+
+    #[test]
+    fn gauges_report_all_three_rate_surfaces() {
+        let t = tuner(&[1.0, 1.0], 1);
+        let g = t.gauges();
+        assert_eq!(g.len(), 2);
+        assert_eq!(g[0].configured, 1.0);
+        assert_eq!(g[0].calibrated, 1.0, "unobserved falls back to adopted");
+        feed(&t, &[600.0, 200.0]);
+        let rates = t.end_batch().expect("warmup 1 adopts immediately");
+        let g = t.gauges();
+        assert!((g[0].calibrated - 1.5).abs() < 1e-9, "{g:?}");
+        assert!((g[1].calibrated - 0.5).abs() < 1e-9, "{g:?}");
+        assert_eq!(g[0].adopted, rates[0]);
+        assert_eq!(g[1].configured, 1.0, "configured never changes");
+        assert_eq!(t.calibrated(), rates);
+    }
+}

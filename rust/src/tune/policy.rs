@@ -1,0 +1,272 @@
+//! The re-shard decision policy — the *control* half of online rate
+//! calibration.
+//!
+//! SWAPHI's scale step assumes the operator knows each coprocessor's
+//! speed; this policy closes the loop the paper leaves to static
+//! configuration. It runs at batch barriers only (never mid-batch, so
+//! the scatter–gather completeness guard and result bit-identity are
+//! untouched) and moves through two phases:
+//!
+//! 1. **warmup** — for the first `warmup_batches` batches the estimator
+//!    just accumulates; at the warmup boundary the measured vector is
+//!    adopted outright if it sits outside the dead-band of the
+//!    configured one (the "configured `[1,1,1]`, truly `[1,1,0.25]`"
+//!    case re-weights here);
+//! 2. **steady state** — drift is declared when any device's
+//!    calibrated ÷ adopted rate ratio leaves the dead-band for
+//!    [`DRIFT_BATCHES`] *consecutive* batches (one slow batch is noise;
+//!    a streak is a slow device), and a re-shard is recommended no more
+//!    often than every `min_batches_between_reshards` batches — the
+//!    hysteresis that keeps a fleet from thrashing between two nearly
+//!    equivalent splits.
+
+/// Consecutive out-of-band batches required to declare drift (K). One
+/// batch of noise must not trigger a re-shard; K ≥ 2 means a sustained
+/// shift does, within K batches of its onset.
+pub const DRIFT_BATCHES: u64 = 2;
+
+/// The `[tune]` config section: knobs of the self-calibration loop.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuneConfig {
+    /// Master switch; off = the fleet stays exactly as configured
+    /// (PR-4 behaviour).
+    pub enabled: bool,
+    /// Batches of pure measurement before the first adoption.
+    pub warmup_batches: u64,
+    /// EWMA weight of the newest throughput observation, in (0, 1].
+    pub ewma_alpha: f64,
+    /// Relative dead-band around 1.0 for the calibrated ÷ adopted ratio;
+    /// inside it the fleet is considered correctly weighted.
+    pub dead_band: f64,
+    /// Re-shard rate limit: at least this many batches between adoptions.
+    pub min_batches_between_reshards: u64,
+}
+
+impl Default for TuneConfig {
+    fn default() -> TuneConfig {
+        TuneConfig {
+            enabled: false,
+            warmup_batches: 3,
+            ewma_alpha: 0.3,
+            dead_band: 0.15,
+            min_batches_between_reshards: 2,
+        }
+    }
+}
+
+impl TuneConfig {
+    /// Panic on nonsensical knob values (the config layer validates with
+    /// errors; this is the library-level contract).
+    pub fn validate(&self) {
+        assert!(
+            self.ewma_alpha.is_finite() && self.ewma_alpha > 0.0 && self.ewma_alpha <= 1.0,
+            "tune.ewma_alpha must be in (0, 1], got {}",
+            self.ewma_alpha
+        );
+        assert!(
+            self.dead_band.is_finite() && self.dead_band > 0.0,
+            "tune.dead_band must be positive, got {}",
+            self.dead_band
+        );
+    }
+}
+
+/// What the policy decided at a batch barrier.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Decision {
+    /// Keep the current shards.
+    Hold,
+    /// Re-shard to this rate vector at the barrier.
+    Adopt(Vec<f64>),
+}
+
+/// Batch-barrier drift detector. Pure state machine: feed it the
+/// calibrated vector each batch, it answers hold/adopt.
+#[derive(Clone, Debug)]
+pub struct DriftPolicy {
+    cfg: TuneConfig,
+    /// The rate vector the fleet currently runs on (configured until the
+    /// first adoption).
+    adopted: Vec<f64>,
+    batches: u64,
+    warmed: bool,
+    drift_streak: u64,
+    last_adoption: u64,
+    adoptions: u64,
+}
+
+impl DriftPolicy {
+    pub fn new(configured: Vec<f64>, cfg: TuneConfig) -> DriftPolicy {
+        cfg.validate();
+        assert!(!configured.is_empty(), "need at least one configured rate");
+        DriftPolicy {
+            cfg,
+            adopted: configured,
+            batches: 0,
+            warmed: false,
+            drift_streak: 0,
+            last_adoption: 0,
+            adoptions: 0,
+        }
+    }
+
+    /// Rates the fleet currently runs on.
+    pub fn adopted(&self) -> &[f64] {
+        &self.adopted
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.batches
+    }
+
+    pub fn adoptions(&self) -> u64 {
+        self.adoptions
+    }
+
+    /// Is `calibrated` within the dead-band of the adopted vector on
+    /// every device?
+    fn in_band(&self, calibrated: &[f64]) -> bool {
+        calibrated.iter().zip(&self.adopted).all(|(&c, &a)| {
+            let ratio = c / a;
+            ratio >= 1.0 - self.cfg.dead_band && ratio <= 1.0 + self.cfg.dead_band
+        })
+    }
+
+    fn adopt(&mut self, calibrated: Vec<f64>) -> Decision {
+        self.adopted = calibrated.clone();
+        self.last_adoption = self.batches;
+        self.adoptions += 1;
+        self.drift_streak = 0;
+        Decision::Adopt(calibrated)
+    }
+
+    /// One batch finished; `calibrated` is the estimator's current
+    /// normalized vector (`None` while some device is still unobserved).
+    pub fn end_batch(&mut self, calibrated: Option<&[f64]>) -> Decision {
+        self.batches += 1;
+        let Some(cal) = calibrated else { return Decision::Hold };
+        debug_assert_eq!(cal.len(), self.adopted.len());
+        if self.batches < self.cfg.warmup_batches {
+            return Decision::Hold;
+        }
+        if !self.warmed {
+            // warmup boundary: adopt outright if the configured rates
+            // were materially wrong
+            self.warmed = true;
+            if self.in_band(cal) {
+                return Decision::Hold;
+            }
+            return self.adopt(cal.to_vec());
+        }
+        if self.in_band(cal) {
+            self.drift_streak = 0;
+            return Decision::Hold;
+        }
+        self.drift_streak += 1;
+        if self.drift_streak >= DRIFT_BATCHES
+            && self.batches - self.last_adoption >= self.cfg.min_batches_between_reshards
+        {
+            return self.adopt(cal.to_vec());
+        }
+        Decision::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> TuneConfig {
+        TuneConfig {
+            enabled: true,
+            warmup_batches: 2,
+            ewma_alpha: 0.5,
+            dead_band: 0.15,
+            min_batches_between_reshards: 2,
+        }
+    }
+
+    #[test]
+    fn warmup_adopts_miscalibrated_rates_exactly_at_boundary() {
+        let mut p = DriftPolicy::new(vec![1.0, 1.0, 1.0], cfg());
+        let skew = vec![4.0 / 3.0, 4.0 / 3.0, 1.0 / 3.0];
+        assert_eq!(p.end_batch(Some(&skew)), Decision::Hold, "batch 1 is warmup");
+        assert_eq!(p.end_batch(Some(&skew)), Decision::Adopt(skew.clone()), "batch 2 adopts");
+        assert_eq!(p.adopted(), &skew[..]);
+        assert_eq!(p.adoptions(), 1);
+        // steady state thereafter: the adopted vector is now in-band
+        assert_eq!(p.end_batch(Some(&skew)), Decision::Hold);
+    }
+
+    #[test]
+    fn warmup_holds_when_configured_rates_are_right() {
+        let mut p = DriftPolicy::new(vec![1.0, 1.0], cfg());
+        let near = vec![1.05, 0.95]; // inside the 15% band
+        assert_eq!(p.end_batch(Some(&near)), Decision::Hold);
+        assert_eq!(p.end_batch(Some(&near)), Decision::Hold, "in-band warmup never adopts");
+        assert_eq!(p.adoptions(), 0);
+        assert_eq!(p.adopted(), &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn drift_needs_a_streak_not_one_noisy_batch() {
+        let mut p = DriftPolicy::new(vec![1.0, 1.0], cfg());
+        let near = vec![1.0, 1.0];
+        let skew = vec![1.5, 0.5];
+        p.end_batch(Some(&near));
+        p.end_batch(Some(&near)); // warmed, no adoption
+        assert_eq!(p.end_batch(Some(&skew)), Decision::Hold, "streak 1 of 2");
+        assert_eq!(p.end_batch(Some(&near)), Decision::Hold, "noise resets the streak");
+        assert_eq!(p.end_batch(Some(&skew)), Decision::Hold);
+        assert_eq!(p.end_batch(Some(&skew)), Decision::Adopt(skew.clone()), "sustained drift");
+    }
+
+    #[test]
+    fn reshards_are_rate_limited() {
+        let mut p = DriftPolicy::new(
+            vec![1.0],
+            TuneConfig { min_batches_between_reshards: 4, ..cfg() },
+        );
+        let a = vec![1.0];
+        let b = vec![0.5];
+        let c = vec![2.0];
+        p.end_batch(Some(&a));
+        p.end_batch(Some(&a)); // warmed, in band
+        // sustained drift toward b: streak of 2 reached at batch 4, but
+        // last_adoption = 0 so 4 - 0 >= 4 allows it
+        assert_eq!(p.end_batch(Some(&b)), Decision::Hold);
+        assert_eq!(p.end_batch(Some(&b)), Decision::Adopt(b.clone()));
+        // immediately drift again toward c: streak reaches 2 at batch 6,
+        // but 6 - 4 < 4 — rate limit holds it until batch 8
+        assert_eq!(p.end_batch(Some(&c)), Decision::Hold);
+        assert_eq!(p.end_batch(Some(&c)), Decision::Hold, "streak met, rate limit blocks");
+        assert_eq!(p.end_batch(Some(&c)), Decision::Hold);
+        assert_eq!(p.end_batch(Some(&c)), Decision::Adopt(c.clone()));
+    }
+
+    #[test]
+    fn unready_estimator_always_holds() {
+        let mut p = DriftPolicy::new(vec![1.0, 1.0], cfg());
+        for _ in 0..10 {
+            assert_eq!(p.end_batch(None), Decision::Hold);
+        }
+        assert_eq!(p.adoptions(), 0);
+        // readiness arriving late hits the (long past) warmup boundary
+        // and adopts outright
+        let skew = vec![1.6, 0.4];
+        assert_eq!(p.end_batch(Some(&skew)), Decision::Adopt(skew));
+    }
+
+    #[test]
+    fn zero_warmup_adopts_on_first_batch() {
+        let mut p = DriftPolicy::new(vec![1.0, 1.0], TuneConfig { warmup_batches: 0, ..cfg() });
+        let skew = vec![1.5, 0.5];
+        assert_eq!(p.end_batch(Some(&skew)), Decision::Adopt(skew));
+    }
+
+    #[test]
+    #[should_panic(expected = "dead_band")]
+    fn bad_dead_band_rejected() {
+        DriftPolicy::new(vec![1.0], TuneConfig { dead_band: 0.0, ..cfg() });
+    }
+}

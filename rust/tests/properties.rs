@@ -292,20 +292,32 @@ fn prop_scatter_gather_invariant_under_sharding() {
                 &format!("topk d={devices} steal={steal} rates={rates:?} {}", a.query_id),
             )?;
         }
+        // LIVE RE-SHARD between batches (what the online calibrator does
+        // at every adoption): re-weight the fleet to an arbitrary new
+        // rate vector mid-session — the next batches must still be
+        // byte-identical to the unsharded baseline
+        let reshard_rates: Vec<f64> = (0..devices).map(|_| 0.2 + 1.8 * rng.f64()).collect();
+        sharded.device_set().reshard(&reshard_rates);
         let dense = sharded.search_batch_dense(&factory, &queries).unwrap();
         for (a, b) in dense.iter().zip(&base_dense) {
             prop_eq(
                 a.scores.clone(),
                 b.scores.clone(),
-                &format!("dense d={devices} steal={steal} rates={rates:?} {}", a.query_id),
+                &format!(
+                    "dense d={devices} steal={steal} resharded-to={reshard_rates:?} {}",
+                    a.query_id
+                ),
             )?;
         }
+        let reshard_rates2: Vec<f64> = (0..devices).map(|_| 0.2 + 1.8 * rng.f64()).collect();
+        sharded.device_set().reshard(&reshard_rates2);
         let thresh = sharded.search_batch_threshold(&factory, &queries, min_score).unwrap();
         prop_eq(
             thresh,
             base_thresh,
-            &format!("threshold d={devices} steal={steal} rates={rates:?}"),
+            &format!("threshold d={devices} steal={steal} resharded-to={reshard_rates2:?}"),
         )?;
+        prop_eq(sharded.device_set().reshards(), 2u64, "both live re-shards recorded")?;
         // accounting: the fleet executed the full (query, chunk) cross
         // product exactly once per batch (topk + dense + threshold = 3)
         let executed: u64 = sharded.device_snapshots().iter().map(|d| d.executed).sum();
@@ -399,6 +411,89 @@ fn prop_rated_sim_conservation_and_uniform_identity() {
             "every chunk ran once",
         )?;
         prop_assert(skew.makespan.is_finite() && skew.makespan > 0.0, "finite makespan")
+    });
+}
+
+#[test]
+fn prop_calibrated_sim_converges_over_random_true_rates() {
+    // The online-calibration loop's contract over arbitrary skews: a
+    // fleet configured uniform but truly running at random rates must
+    // (i) adopt measured rates (>= 1 re-shard — the initial skew is
+    // well outside the dead-band by construction), (ii) recover the
+    // true rate *ratios*, and (iii) finish its steady-state batch no
+    // slower than the blind first batch (calibration can only help,
+    // modulo re-shard granularity).
+    check("calibrated sim converges for random true rates", 8, |rng| {
+        use swaphi::db::chunk::{plan_chunks, ChunkPlanConfig};
+        use swaphi::phi::sim::{
+            simulate_calibrated_search, CalibratedScenario, SimConfig,
+        };
+        use swaphi::tune::TuneConfig;
+        let n = rng.range(120, 240);
+        let seed = rng.next_u64();
+        let idx = Index::build(generate(&SynthSpec::tiny(n, seed)));
+        // ~one profile per chunk: a coarse plan, where a mis-weighted
+        // static split actually costs makespan
+        let chunks = plan_chunks(&idx, ChunkPlanConfig { target_padded_residues: 1024 });
+        prop_assert(chunks.len() >= 6, format!("want several chunks, got {}", chunks.len()))?;
+        let devices = rng.range(2, 3);
+        // replication 2000 and qlen >= 128 keep per-chunk compute well
+        // above the guided scheduler's grant-serialization overhead —
+        // otherwise the overhead's varying share across chunk sizes
+        // distorts the per-device throughput estimate
+        let qlen = rng.range(128, 400);
+        // at least one materially slow device so the initial
+        // mis-calibration is guaranteed to sit outside the dead-band
+        let mut truth: Vec<f64> = (0..devices).map(|_| 0.7 + 0.8 * rng.f64()).collect();
+        truth[devices - 1] = 0.2 + 0.2 * rng.f64();
+        let scenario = CalibratedScenario {
+            configured: vec![1.0; devices],
+            true_rates: vec![(0, truth.clone())],
+            batches: 7,
+            tune: TuneConfig {
+                enabled: true,
+                warmup_batches: 2,
+                ewma_alpha: 0.5,
+                dead_band: 0.1,
+                min_batches_between_reshards: 2,
+            },
+        };
+        let r = simulate_calibrated_search(
+            &idx,
+            &chunks,
+            EngineKind::InterSP,
+            qlen,
+            SimConfig { devices, replication: 2000, ..SimConfig::default() },
+            &scenario,
+        );
+        prop_assert(r.resharded_total >= 1, "initial skew must trigger adoption")?;
+        // ratio recovery: calibrated[i]/calibrated[j] ~= truth[i]/truth[j]
+        for i in 0..devices {
+            let got = r.calibrated[i] / r.calibrated[0];
+            let want = truth[i] / truth[0];
+            prop_assert(
+                (got / want - 1.0).abs() < 0.25,
+                format!("device {i}: calibrated ratio {got} vs true {want} ({truth:?})"),
+            )?;
+        }
+        // makespans are sane
+        for b in &r.batches {
+            prop_assert(b.makespan.is_finite() && b.makespan > 0.0, "finite makespan")?;
+            prop_assert(b.ideal.is_finite() && b.ideal > 0.0, "finite ideal")?;
+        }
+        let first = &r.batches[0];
+        let last = r.batches.last().unwrap();
+        // calibration must never materially hurt: the steady state stays
+        // within re-shard granularity (~15%) of the blind+steal batch
+        // even when stealing alone was already near-ideal
+        prop_assert(
+            last.makespan <= first.makespan * 1.15,
+            format!(
+                "steady state {} must not be slower than the blind batch {} (truth {truth:?})",
+                last.makespan, first.makespan
+            ),
+        )?;
+        Ok(())
     });
 }
 

@@ -29,6 +29,7 @@ fn search_cfg() -> SearchConfig {
         top_k: 5,
         precision: Precision::default(),
         sim: None,
+        ..Default::default()
     }
 }
 
@@ -137,6 +138,101 @@ fn heterogeneous_fleet_server_matches_offline_and_reports_rates() {
     let shards: Vec<f64> =
         fleet.iter().map(|d| d.get("shard_chunks").unwrap().as_f64().unwrap()).collect();
     assert!(shards[2] < shards[0] && shards[2] < shards[1], "{stats}");
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn tuned_server_calibrates_reports_gauges_and_stays_bit_identical() {
+    // a self-tuning daemon: configured uniform, but device 1 reports 4x
+    // slower timings (the handicap skew injector). The warmup probes at
+    // index load must calibrate + re-shard, the stats op must expose
+    // all three rate surfaces, and the served hits must stay
+    // bit-identical to an untuned standalone search.
+    let index = Arc::new(Index::build(generate(&SynthSpec::tiny(250, 31))));
+    let scoring = Scoring::swaphi_default();
+    let handle = Server {
+        index: Arc::clone(&index),
+        scoring: scoring.clone(),
+        search: SearchConfig {
+            devices: 2,
+            // small chunks so both devices see plenty of timed items
+            chunk: ChunkPlanConfig { target_padded_residues: 1024 },
+            tune: swaphi::tune::TuneConfig {
+                enabled: true,
+                warmup_batches: 2,
+                ewma_alpha: 0.5,
+                dead_band: 0.15,
+                min_batches_between_reshards: 1,
+            },
+            handicap: vec![1.0, 4.0],
+            ..search_cfg()
+        },
+        server: tcp_cfg(0),
+        factory: Arc::new(NativeFactory(EngineKind::InterSP)),
+    }
+    .start()
+    .unwrap();
+    let q = query_letters(44, 17);
+    let mut c = Client::connect(&handle.connect_addr()).unwrap();
+    let resp = c.search("q1", &q, None, None).unwrap();
+    assert!(client::is_ok(&resp), "{resp}");
+    let got = payload_tuples(&client::hits_of(&resp).unwrap());
+    let offline = {
+        let session = SearchSession::new(
+            &index,
+            scoring.clone(),
+            SearchConfig {
+                chunk: ChunkPlanConfig { target_padded_residues: 1024 },
+                ..search_cfg()
+            },
+        );
+        let res = session
+            .search_batch(
+                &NativeFactory(EngineKind::InterSP),
+                &[("q1".to_string(), swaphi::alphabet::encode(q.as_bytes()))],
+            )
+            .unwrap();
+        res[0].hits.iter().map(|h| (h.id.clone(), h.len, h.score)).collect::<Vec<_>>()
+    };
+    assert_eq!(got, offline, "self-tuning must never change results");
+
+    let stats = c.stats().unwrap();
+    assert!(client::is_ok(&stats), "{stats}");
+    let s = stats.get("stats").unwrap();
+    // warmup calibration ran at index load: the fleet re-sharded and
+    // the tuner saw batches before our request
+    assert!(
+        s.get("resharded_total").unwrap().as_f64().unwrap() >= 1.0,
+        "warmup must adopt the handicapped rates: {stats}"
+    );
+    let tune = s.get("tune").unwrap();
+    assert_eq!(tune.get("enabled"), Some(&Json::Bool(true)), "{stats}");
+    assert!(tune.get("batches").unwrap().as_f64().unwrap() >= 2.0, "{stats}");
+    let Json::Arr(fleet) = s.get("devices").unwrap() else { panic!("{stats}") };
+    assert_eq!(fleet.len(), 2);
+    let rc: Vec<f64> = fleet
+        .iter()
+        .map(|d| d.get("rate_calibrated").unwrap().as_f64().unwrap())
+        .collect();
+    let rconf: Vec<f64> = fleet
+        .iter()
+        .map(|d| d.get("rate_configured").unwrap().as_f64().unwrap())
+        .collect();
+    assert_eq!(rconf, vec![1.0, 1.0], "configured surface never moves: {stats}");
+    assert!(
+        rc[1] < rc[0] / 2.0,
+        "handicapped device must calibrate materially slower: {stats}"
+    );
+    for d in fleet {
+        // est_remaining is computed from the calibrated rate once the
+        // tuner is live; the fleet idles between batches, so depth 0 ⇒ 0
+        assert_eq!(d.get("queue_depth").unwrap().as_f64().unwrap(), 0.0, "{stats}");
+        assert_eq!(d.get("est_remaining").unwrap().as_f64().unwrap(), 0.0, "{stats}");
+        // the live rate surface equals the adopted (calibrated) rates,
+        // not the configured ones, after the warmup re-shard
+        let rate = d.get("rate").unwrap().as_f64().unwrap();
+        assert!((rate - 1.0).abs() > 1e-6, "rate must have moved off configured: {stats}");
+    }
     handle.shutdown().unwrap();
 }
 
