@@ -171,6 +171,66 @@ class TestUpdate(GateHarness):
         self.assertIn("update aborted", p.stdout)
 
 
+class TestFunnelGateKeys(GateHarness):
+    """The shipped funnel gates (ci/bench-baseline.json) enforced over a
+    BENCH_funnel.json-shaped artifact: sensitivity >= 0.95, speedup >= 3.
+    """
+
+    FUNNEL_METRICS = {
+        "funnel.sensitivity": {"baseline": None, "min": 0.95},
+        "funnel.speedup": {"baseline": None, "min": 3.0},
+    }
+
+    def funnel_artifact(self, sensitivity, speedup):
+        return {
+            "preset": "tiny",
+            "n_seqs": 600,
+            "qlen": 128,
+            "funnel": {"sensitivity": sensitivity, "speedup": speedup},
+        }
+
+    def run_funnel(self, sensitivity, speedup):
+        baseline = make_baseline(
+            self.FUNNEL_METRICS,
+            workload={"preset": "tiny", "n_seqs": 600, "qlen": 128},
+        )
+        return self.run_gate(baseline, self.funnel_artifact(sensitivity, speedup))
+
+    def test_sensitivity_below_floor_fails(self):
+        p = self.run_funnel(0.94, 5.0)
+        self.assertEqual(p.returncode, 1, p.stdout + p.stderr)
+        self.assertIn("funnel.sensitivity", p.stdout)
+        self.assertIn("FAIL(floor)", p.stdout)
+
+    def test_sensitivity_above_floor_passes(self):
+        p = self.run_funnel(0.96, 5.0)
+        self.assertEqual(p.returncode, 0, p.stdout + p.stderr)
+        self.assertIn("green", p.stdout)
+
+    def test_speedup_below_floor_fails(self):
+        p = self.run_funnel(1.0, 2.9)
+        self.assertEqual(p.returncode, 1, p.stdout + p.stderr)
+        self.assertIn("funnel.speedup", p.stdout)
+        self.assertIn("FAIL(floor)", p.stdout)
+
+    def test_speedup_above_floor_passes(self):
+        p = self.run_funnel(1.0, 3.5)
+        self.assertEqual(p.returncode, 0, p.stdout + p.stderr)
+
+    def test_shipped_baseline_gates_the_funnel(self):
+        # the committed baseline must actually contain the funnel gates
+        # with the acceptance floors — a selftest against drift
+        shipped = json.loads(
+            (Path(__file__).resolve().parent / "bench-baseline.json").read_text()
+        )
+        spec = shipped["benches"]["BENCH_funnel.json"]
+        self.assertEqual(spec["metrics"]["funnel.sensitivity"]["min"], 0.95)
+        self.assertEqual(spec["metrics"]["funnel.speedup"]["min"], 3.0)
+        self.assertEqual(spec["workload"]["preset"], "tiny")
+        self.assertEqual(spec["workload"]["n_seqs"], 600)
+        self.assertEqual(spec["workload"]["qlen"], 128)
+
+
 class TestToleranceOverride(GateHarness):
     def test_cli_tolerance_overrides_file(self):
         baseline = make_baseline({"m.gcups": {"baseline": 100.0, "min": None}})

@@ -1,0 +1,167 @@
+//! prefilter_funnel — the two-stage heuristic funnel (`--mode fast`)
+//! against the exact pipeline it approximates.
+//!
+//! The workload is a seeded synthetic database with *planted homolog
+//! families*: each query is a motif that also lives, mutated at 2–24%
+//! per residue, inside `FAMILY` database sequences. The exact top-k for
+//! such a query is dominated by its family — the biologically meaningful
+//! hits a heuristic prefilter exists to find — so sensitivity (the
+//! fraction of the exact top-k the funnel recovers) is measured on true
+//! positives, the MMseqs2/BLAST framing, not on the random-noise tail.
+//!
+//! Two gated metrics land in `BENCH_funnel.json`:
+//!
+//! * `funnel.sensitivity` — mean per-query recall of the exact top-k in
+//!   the fast top-k (both paths rank by the same (score desc, index asc)
+//!   rule, so any loss is a prefilter miss). Gate: ≥ 0.95.
+//! * `funnel.speedup` — exact ÷ funnel simulated makespan on the
+//!   calibrated 5110P fleet model ([`simulate_funnel`] charges the
+//!   BLAST-model prefilter over the *measured* heuristic work, then the
+//!   exact device schedule scaled by the surviving fraction). The sim is
+//!   deterministic, so this gates from day one. Gate: > 3×.
+//!
+//! Host wall-clock for both paths is recorded (null baseline —
+//! machine-specific), as are the survivor fraction and the raw seeding
+//! statistics. `SWAPHI_BENCH_PRESET` / `SWAPHI_BENCH_N` /
+//! `SWAPHI_BENCH_QLEN` shrink or reshape the workload for CI;
+//! `ci/bench-baseline.json` pins them so comparisons stay
+//! apples-to-apples.
+
+use std::collections::HashSet;
+use swaphi::align::EngineKind;
+use swaphi::bench::{f2, Table};
+use swaphi::coordinator::{NativeFactory, SearchConfig, SearchSession};
+use swaphi::db::chunk::ChunkPlanConfig;
+use swaphi::db::index::Index;
+use swaphi::db::synth::{generate, plant_homolog, random_codes, SynthSpec};
+use swaphi::matrices::Scoring;
+use swaphi::phi::sim::SimConfig;
+use swaphi::util::rng::Rng;
+
+/// Queries (= planted families) and family size. With `top_k` = 10 every
+/// exact top-k slot can be a true family member.
+const QUERIES: usize = 6;
+const FAMILY: usize = 12;
+const TOP_K: usize = 10;
+const DEVICES: usize = 2;
+
+fn main() {
+    let preset = std::env::var("SWAPHI_BENCH_PRESET").unwrap_or_else(|_| "tiny".to_string());
+    let n_seqs: usize = std::env::var("SWAPHI_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(600);
+    let qlen: usize = std::env::var("SWAPHI_BENCH_QLEN")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(128);
+    let spec = SynthSpec::by_name(&preset, n_seqs, 2014)
+        .unwrap_or_else(|| panic!("unknown SWAPHI_BENCH_PRESET {preset:?}"));
+    let preset = spec.name;
+    assert!(n_seqs >= QUERIES * FAMILY, "database too small for the planted families");
+
+    // plant the homolog families: query q's motif is copied into hosts
+    // q*FAMILY..(q+1)*FAMILY with rising per-residue mutation rates
+    let mut db = generate(&spec);
+    let mut rng = Rng::new(0xF0_17_5E_ED);
+    let mut queries: Vec<(String, Vec<u8>)> = Vec::with_capacity(QUERIES);
+    for q in 0..QUERIES {
+        let motif = random_codes(&mut rng, qlen);
+        for j in 0..FAMILY {
+            let mut_rate = 0.02 * (j + 1) as f64; // 2% .. 24% divergence
+            plant_homolog(&mut rng, &mut db.seqs[q * FAMILY + j].codes, &motif, mut_rate);
+        }
+        queries.push((format!("funnel-q{q}"), motif));
+    }
+    let index = Index::build(db);
+
+    let sc = Scoring::swaphi_default();
+    let session = SearchSession::new(
+        &index,
+        sc,
+        SearchConfig {
+            devices: DEVICES,
+            top_k: TOP_K,
+            sim: Some(SimConfig { devices: DEVICES, ..Default::default() }),
+            chunk: ChunkPlanConfig { target_padded_residues: 1 << 14 },
+            ..Default::default()
+        },
+    );
+    println!(
+        "workload: {preset} x {} sequences ({} residues, {} chunks), \
+         {QUERIES} queries of length {qlen}, {FAMILY} planted homologs each, top_k {TOP_K}",
+        index.n_seqs(),
+        index.total_residues,
+        session.n_chunks(),
+    );
+
+    let factory = NativeFactory(EngineKind::InterSP);
+    let t = std::time::Instant::now();
+    let exact = session.search_batch_exact(&factory, &queries).expect("exact batch");
+    let exact_wall = t.elapsed().as_secs_f64();
+    let t = std::time::Instant::now();
+    let fast = session.search_batch_fast(&factory, &queries).expect("fast batch");
+    let fast_wall = t.elapsed().as_secs_f64();
+
+    let mut table = Table::new(
+        "prefilter_funnel: seeded prefilter -> exact rescore (InterSP)",
+        &["query", "sensitivity", "survivors", "word_hits", "triggers", "sim_speedup"],
+    );
+    let mut sens_sum = 0.0;
+    let mut frac_sum = 0.0;
+    let (mut exact_sim, mut fast_sim) = (0.0f64, 0.0f64);
+    let (mut word_hits, mut cells_visited) = (0u64, 0u64);
+    for (e, f) in exact.iter().zip(&fast) {
+        let p = f.prefilter.expect("fast results carry prefilter stats");
+        assert!(e.prefilter.is_none(), "exact results must not");
+        let exact_ids: HashSet<&str> = e.hits.iter().map(|h| h.id.as_str()).collect();
+        let recovered = f.hits.iter().filter(|h| exact_ids.contains(h.id.as_str())).count();
+        let sens = recovered as f64 / exact_ids.len().max(1) as f64;
+        let e_mk = e.sim.as_ref().expect("sim enabled").makespan;
+        let f_mk = f.sim.as_ref().expect("sim enabled").makespan;
+        table.row(&[
+            e.query_id.clone(),
+            f2(sens),
+            format!("{}/{}", p.survivors, p.candidates),
+            p.word_hits.to_string(),
+            p.triggers.to_string(),
+            f2(e_mk / f_mk),
+        ]);
+        sens_sum += sens;
+        frac_sum += p.survivor_fraction();
+        exact_sim += e_mk;
+        fast_sim += f_mk;
+        word_hits += p.word_hits;
+        cells_visited += p.cells_visited;
+    }
+    table.emit("prefilter_funnel");
+
+    let nq = queries.len() as f64;
+    let sensitivity = sens_sum / nq;
+    let survivor_fraction = frac_sum / nq;
+    let speedup = exact_sim / fast_sim;
+    let wall_speedup = exact_wall / fast_wall.max(f64::MIN_POSITIVE);
+    println!(
+        "funnel: sensitivity {sensitivity:.3} (>= 0.95 gates), sim speedup {speedup:.2}x \
+         (> 3 gates), survivor fraction {survivor_fraction:.3}, wall speedup {wall_speedup:.2}x"
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"prefilter_funnel\",\n  \"preset\": \"{preset}\",\n  \
+         \"n_seqs\": {},\n  \"qlen\": {qlen},\n  \"chunks\": {},\n  \"funnel\": {{\n    \
+         \"queries\": {QUERIES},\n    \"family\": {FAMILY},\n    \"top_k\": {TOP_K},\n    \
+         \"devices\": {DEVICES},\n    \"sensitivity\": {sensitivity:.4},\n    \
+         \"speedup\": {speedup:.3},\n    \"survivor_fraction\": {survivor_fraction:.4},\n    \
+         \"exact_sim_makespan_s\": {exact_sim:.6},\n    \
+         \"fast_sim_makespan_s\": {fast_sim:.6},\n    \
+         \"prefilter_word_hits\": {word_hits},\n    \
+         \"prefilter_cells_visited\": {cells_visited},\n    \
+         \"wall_speedup\": {wall_speedup:.3},\n    \
+         \"exact_wall_s\": {exact_wall:.6},\n    \"fast_wall_s\": {fast_wall:.6}\n  }}\n}}\n",
+        index.n_seqs(),
+        session.n_chunks(),
+    );
+    if std::fs::write("BENCH_funnel.json", &json).is_ok() {
+        println!("\nwrote BENCH_funnel.json");
+    }
+}

@@ -9,6 +9,7 @@
 //! query-dependent — the variance Fig 7 shows.
 
 pub mod extend;
+pub mod prefilter;
 pub mod seed;
 
 use crate::matrices::Scoring;

@@ -1,0 +1,167 @@
+//! The funnel's first stage: a batch-ready seeded prefilter over the
+//! chunk plan.
+//!
+//! Fast mode screens every subject with the heuristic pipeline
+//! ([`BlastQuery::score`]: 3-mer neighborhood seeding → two-hit diagonal
+//! filter → X-drop extension) and feeds only the **survivor set** to the
+//! exact SW rescore. Survivor selection is deliberately conservative:
+//!
+//! 1. every subject with any heuristic signal (`blast_score >= 1`)
+//!    survives — the seeded recall path;
+//! 2. the set is then topped up with the *longest* not-yet-surviving
+//!    subjects until [`survivor_floor`] is reached — a deterministic
+//!    safety net for subjects whose alignment the word seeder missed
+//!    (local SW score potential grows with subject length, so length is
+//!    the right seed-free prior).
+//!
+//! Both rules are pure functions of the scores and the (length-sorted)
+//! index, so the survivor set — and therefore fast-mode output — is
+//! identical for any fleet shape, mirroring the exact path's
+//! scatter–gather contract.
+
+use super::{BlastQuery, BlastStats};
+use crate::db::chunk::Chunk;
+use crate::db::index::Index;
+use crate::matrices::Scoring;
+use crate::metrics::PrefilterStats;
+
+/// Minimum survivor count per query: `max(4·top_k, 5% of the database)`,
+/// clamped to the database size. Keeps the exact stage's workload small
+/// while leaving the sensitivity gate comfortable margin.
+pub fn survivor_floor(top_k: usize, n_seqs: usize) -> usize {
+    top_k.saturating_mul(4).max(n_seqs / 20).min(n_seqs)
+}
+
+/// Heuristically score every subject of one chunk for one compiled query,
+/// appending `(seq_index, blast_score)` for each subject with signal
+/// (`score > 0`) to `out` and folding the work accounting into `stats`.
+/// This is the per-(query, chunk) work item the device fleet schedules —
+/// the same unit as exact SW chunks.
+pub fn score_chunk(
+    query: &BlastQuery,
+    index: &Index,
+    chunk: &Chunk,
+    sc: &Scoring,
+    stats: &mut PrefilterStats,
+    scratch: &mut Vec<i64>,
+    out: &mut Vec<(usize, i32)>,
+) {
+    let mut bs = BlastStats::default();
+    for p in chunk.profile_start..chunk.profile_end {
+        let profile = &index.profiles[p];
+        for lane in 0..profile.used {
+            let seq = profile.members[lane];
+            let score = query.score(&index.seqs[seq].codes, sc, &mut bs, scratch);
+            stats.candidates += 1;
+            if score > 0 {
+                out.push((seq, score));
+            }
+        }
+    }
+    stats.word_hits += bs.word_hits;
+    stats.triggers += bs.triggers;
+    stats.cells_visited += bs.cells_visited;
+}
+
+/// Reduce one query's seeded hits to the final survivor set (ascending
+/// sequence indices). `seeded` holds `(seq_index, blast_score)` pairs
+/// from [`score_chunk`]; anything with `score >= 1` survives, then the
+/// longest non-surviving subjects (highest indices — the index is
+/// length-sorted ascending) top the set up to `floor`.
+pub fn select_survivors(n_seqs: usize, seeded: &[(usize, i32)], floor: usize) -> Vec<usize> {
+    let floor = floor.min(n_seqs);
+    let mut member = vec![false; n_seqs];
+    let mut count = 0usize;
+    for &(seq, score) in seeded {
+        if score > 0 && !member[seq] {
+            member[seq] = true;
+            count += 1;
+        }
+    }
+    for seq in (0..n_seqs).rev() {
+        if count >= floor {
+            break;
+        }
+        if !member[seq] {
+            member[seq] = true;
+            count += 1;
+        }
+    }
+    member
+        .iter()
+        .enumerate()
+        .filter_map(|(i, &m)| m.then_some(i))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blast::{blast_search, BlastParams};
+    use crate::db::chunk::{plan_chunks_paired, ChunkPlanConfig};
+    use crate::db::synth::{generate, SynthSpec};
+
+    #[test]
+    fn floor_formula() {
+        assert_eq!(survivor_floor(10, 600), 40, "4*top_k dominates small DBs");
+        assert_eq!(survivor_floor(10, 10_000), 500, "5% dominates large DBs");
+        assert_eq!(survivor_floor(10, 8), 8, "clamped to the database");
+        assert_eq!(survivor_floor(0, 100), 5);
+    }
+
+    #[test]
+    fn survivors_keep_all_seeded_and_top_up_longest() {
+        // seeded hits below the floor: the longest (highest-index)
+        // non-seeded subjects fill the gap, deterministically
+        let got = select_survivors(10, &[(3, 5), (7, 1)], 5);
+        assert_eq!(got, vec![3, 6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn seeded_beyond_floor_all_survive() {
+        let seeded: Vec<(usize, i32)> = (0..8).map(|i| (i, 2)).collect();
+        let got = select_survivors(10, &seeded, 4);
+        assert_eq!(got, (0..8).collect::<Vec<_>>(), "floor is a floor, not a cap");
+    }
+
+    #[test]
+    fn zero_scores_and_duplicates_are_ignored() {
+        let got = select_survivors(6, &[(2, 0), (4, 3), (4, 9)], 3);
+        assert_eq!(got, vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn floor_clamps_to_database() {
+        assert_eq!(select_survivors(3, &[], 100), vec![0, 1, 2]);
+        assert_eq!(select_survivors(0, &[], 5), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn score_chunk_matches_whole_database_blast() {
+        let index = crate::db::index::Index::build(generate(&SynthSpec::tiny(60, 13)));
+        let sc = crate::matrices::Scoring::swaphi_default();
+        let chunks =
+            plan_chunks_paired(&index, ChunkPlanConfig { target_padded_residues: 2048 });
+        assert!(chunks.len() > 1, "need several chunks");
+        let query_codes = index.seqs[index.n_seqs() - 1].codes.clone();
+        let params = BlastParams::blastp_defaults();
+        let bq = BlastQuery::build(query_codes.clone(), &sc, params);
+        let mut stats = PrefilterStats::default();
+        let mut scratch = Vec::new();
+        let mut seeded = Vec::new();
+        for chunk in &chunks {
+            score_chunk(&bq, &index, chunk, &sc, &mut stats, &mut scratch, &mut seeded);
+        }
+        assert_eq!(stats.candidates, index.n_seqs() as u64, "every subject screened once");
+        let subjects: Vec<Vec<u8>> = index.seqs.iter().map(|s| s.codes.clone()).collect();
+        let (expect, bstats) = blast_search(&query_codes, &subjects, &sc, params);
+        let mut dense = vec![0i32; index.n_seqs()];
+        for &(seq, score) in &seeded {
+            dense[seq] = score;
+        }
+        assert_eq!(dense, expect, "chunked scan must match the flat scan");
+        assert_eq!(stats.cells_visited, bstats.cells_visited);
+        assert_eq!(stats.word_hits, bstats.word_hits);
+        assert!(stats.triggers > 0, "self-hit must trigger");
+    }
+}

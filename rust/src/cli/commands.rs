@@ -93,6 +93,9 @@ fn load_config(args: &mut Args) -> anyhow::Result<SwaphiConfig> {
     if let Some(p) = args.take("precision") {
         raw.set("search.precision", &p)?;
     }
+    if let Some(m) = args.take("mode") {
+        raw.set("search.mode", &m)?;
+    }
     if let Some(d) = args.take("devices") {
         raw.set("devices.count", &d)?;
     }
@@ -160,12 +163,14 @@ pub fn cmd_search(mut args: Args) -> anyhow::Result<i32> {
     let mut report = String::new();
     writeln!(
         report,
-        "# engine={} backend={} devices={} policy={} precision={} matrix={} gap={}+{}k chunks={} queries={}",
+        "# engine={} backend={} devices={} policy={} precision={} mode={} matrix={} gap={}+{}k chunks={} queries={}",
         cfg.engine.name(),
         factory.backend_name(),
         cfg.devices,
         cfg.policy.name(),
         cfg.precision.name(),
+        // report the resolved mode (auto picks by database size)
+        session.effective_mode().name(),
         cfg.scoring.name,
         cfg.scoring.gap_open,
         cfg.scoring.gap_extend,
@@ -196,6 +201,18 @@ pub fn cmd_search(mut args: Args) -> anyhow::Result<i32> {
                 String::new()
             }
         )?;
+        if let Some(p) = result.prefilter {
+            writeln!(
+                report,
+                "  prefilter: {}/{} survivors ({:.1}%), {} word hits, {} triggers, {} cells visited",
+                p.survivors,
+                p.candidates,
+                p.survivor_fraction() * 100.0,
+                p.word_hits,
+                p.triggers,
+                p.cells_visited,
+            )?;
+        }
         report.push_str(&crate::coordinator::results::format_hits(&result.hits));
         batch.add(result.rescore);
         batch_cells.add(result.cells);
@@ -325,7 +342,7 @@ pub fn cmd_serve(mut args: Args) -> anyhow::Result<i32> {
 
     println!(
         "swaphi serve: listening on {} (index {} seqs / {} residues, engine={} devices={}{} \
-         steal={} precision={} top_k={}, queue={} max_batch={} window={}ms cache={})",
+         steal={} precision={} mode={} top_k={}, queue={} max_batch={} window={}ms cache={})",
         handle.addr(),
         index.n_seqs(),
         index.total_residues,
@@ -334,6 +351,7 @@ pub fn cmd_serve(mut args: Args) -> anyhow::Result<i32> {
         if cfg.rates.is_empty() { String::new() } else { format!(" rates={:?}", cfg.rates) },
         cfg.steal,
         cfg.precision.name(),
+        cfg.mode.name(),
         cfg.top_k,
         server_cfg.queue_capacity,
         server_cfg.max_batch,
@@ -369,6 +387,13 @@ pub fn cmd_query(mut args: Args) -> anyhow::Result<i32> {
         Some(v) => Some(v.parse::<usize>().map_err(|e| anyhow::anyhow!("--top-k {v:?}: {e}"))?),
     };
     let timeout_ms = args.take_u64("timeout-ms", 0)?;
+    let mode = match args.take("mode") {
+        None => None,
+        Some(v) => Some(
+            crate::coordinator::SearchMode::parse(&v)
+                .ok_or_else(|| anyhow::anyhow!("unknown mode {v:?} (exact|fast|auto)"))?,
+        ),
+    };
     let query_path = if ping || stats { args.take("query") } else { Some(args.require("query")?) };
     args.finish()?;
 
@@ -394,11 +419,12 @@ pub fn cmd_query(mut args: Args) -> anyhow::Result<i32> {
         anyhow::ensure!(!rec.seq.is_empty(), "query {} is empty", rec.id);
         n += 1;
         let seq = String::from_utf8_lossy(&rec.seq).to_string();
-        let resp = client.search(
+        let resp = client.search_mode(
             &rec.id,
             &seq,
             top_k,
             (timeout_ms > 0).then_some(timeout_ms),
+            mode,
         )?;
         if crate::server::client::is_ok(&resp) {
             let hits = crate::server::client::hits_of(&resp)?;
@@ -598,6 +624,44 @@ mod tests {
     #[test]
     fn devinfo_runs() {
         assert_eq!(run("devinfo").unwrap(), 0);
+    }
+
+    #[test]
+    fn search_mode_flag_selects_funnel_and_rejects_unknown() {
+        let fasta = tmp("db6.fasta");
+        let idx = tmp("db6.idx");
+        let qf = tmp("q6.fasta");
+        assert_eq!(
+            run(&format!("synth --preset tiny --n 48 --seed 5 --out {fasta}")).unwrap(),
+            0
+        );
+        assert_eq!(run(&format!("index --in {fasta} --out {idx}")).unwrap(), 0);
+        std::fs::write(&qf, ">q1\nMKTAYIAKQRQISFVKSHFSRQLEERLGLIEVQ\n").unwrap();
+        for mode in ["exact", "fast", "auto"] {
+            assert_eq!(
+                run(&format!(
+                    "search --index {idx} --query {qf} --mode {mode} \
+                     --set sim.enabled=false"
+                ))
+                .unwrap(),
+                0,
+                "{mode}"
+            );
+        }
+        // fast mode runs on a multi-device fleet too
+        assert_eq!(
+            run(&format!(
+                "search --index {idx} --query {qf} --mode fast --devices 2 \
+                 --set sim.enabled=false"
+            ))
+            .unwrap(),
+            0
+        );
+        // strict validation names the valid set
+        assert!(run(&format!("search --index {idx} --query {qf} --mode nope")).is_err());
+        for f in [fasta, idx, qf] {
+            let _ = std::fs::remove_file(f);
+        }
     }
 
     #[test]

@@ -88,6 +88,10 @@ COMMANDS:
               [--precision auto|i16|i32]   score-lane tier (auto: narrow
                 32-lane i16 when provably exact; i16: force narrow,
                 saturated lanes rescored at i32; i32: full precision)
+              [--mode exact|fast|auto]   search mode (exact: full SW over
+                the whole database; fast: seeded prefilter → exact SW
+                rescore of the survivor set, reporting prefilter stats;
+                auto: fast above search.auto_fast_threshold sequences)
               [--calibrate]   time every work item, report the measured
                 per-device rate vector with the results, and re-shard to
                 it at batch barriers (forces [tune] enabled = true)
@@ -97,6 +101,8 @@ COMMANDS:
             docs/protocol.md); SIGINT/SIGTERM drain gracefully
               --index <idx>  [--listen 127.0.0.1:7878 | unix:/path]
               [--devices <n>]  [--device-rates <r1,r2,...>]
+              [--mode exact|fast|auto]   default search mode; clients can
+                override per request with the protocol's "mode" field
               [--config <toml>]  [--set server.max_batch=32]...
               --set tune.enabled=true turns on online rate calibration:
                 warmup probe batches on index load, then drift detection
@@ -106,7 +112,8 @@ COMMANDS:
   query     client for a running `serve` daemon; each FASTA record is one
             request on one connection
               --connect <host:port | unix:/path>  --query <fasta>
-              [--top-k <n>]  [--timeout-ms <n>]  [--ping]  [--stats]
+              [--top-k <n>]  [--timeout-ms <n>]  [--mode exact|fast|auto]
+              [--ping]  [--stats]
               e.g.  swaphi query --connect 127.0.0.1:7878 --query q.fasta
               e.g.  swaphi query --connect 127.0.0.1:7878 --stats
   calibrate measure per-device throughput on synthetic probe batches and

@@ -15,6 +15,8 @@
 //! engine = "intersp"      # intersp | interqp | intraqp | scalar
 //! backend = "native"      # native | pjrt
 //! precision = "auto"      # auto | i16 | i32 (score-lane tier)
+//! mode = "exact"          # exact | fast | auto (two-stage funnel)
+//! auto_fast_threshold = 50000  # db size at which auto flips to fast
 //! devices = 4             # legacy spelling of devices.count
 //! policy = "guided"       # static | dynamic | guided | auto
 //! top_k = 10
@@ -48,7 +50,7 @@
 //! ```
 
 use crate::align::{EngineKind, Precision};
-use crate::coordinator::SearchConfig;
+use crate::coordinator::{SearchConfig, SearchMode};
 use crate::db::chunk::ChunkPlanConfig;
 use crate::matrices::Scoring;
 use crate::phi::sched::Policy;
@@ -281,6 +283,8 @@ pub const KNOWN_KEYS: &[&str] = &[
     "search.chunk_residues",
     "search.artifacts_dir",
     "search.precision",
+    "search.mode",
+    "search.auto_fast_threshold",
     "devices.count",
     "devices.steal",
     "devices.rates",
@@ -330,6 +334,13 @@ pub struct SwaphiConfig {
     pub policy: Policy,
     pub top_k: usize,
     pub precision: Precision,
+    /// Two-stage funnel selection (`search.mode`): `exact` runs full SW
+    /// over the whole database, `fast` runs the seeded prefilter →
+    /// exact-rescore funnel, `auto` picks `fast` above
+    /// [`auto_fast_threshold`](Self::auto_fast_threshold) sequences.
+    pub mode: SearchMode,
+    /// Database size (sequences) above which `auto` resolves to `fast`.
+    pub auto_fast_threshold: usize,
     pub chunk_residues: u128,
     pub sim_enabled: bool,
     pub sim_threads: usize,
@@ -357,6 +368,7 @@ impl SwaphiConfig {
         let engine_s = raw.str_or("search.engine", "intersp")?;
         let policy_s = raw.str_or("search.policy", "guided")?;
         let precision_s = raw.str_or("search.precision", "auto")?;
+        let mode_s = raw.str_or("search.mode", "exact")?;
         let rates = {
             let rates = raw.f64_list_or("devices.rates", &[])?;
             // name the offending entry AND its 1-based position — rate
@@ -441,6 +453,9 @@ impl SwaphiConfig {
             top_k: raw.int_or("search.top_k", 10)?.max(1) as usize,
             precision: Precision::parse(&precision_s)
                 .ok_or_else(|| anyhow::anyhow!("unknown precision {precision_s:?} (auto|i16|i32)"))?,
+            mode: SearchMode::parse(&mode_s)
+                .ok_or_else(|| anyhow::anyhow!("unknown mode {mode_s:?} (exact|fast|auto)"))?,
+            auto_fast_threshold: raw.int_or("search.auto_fast_threshold", 50_000)?.max(1) as usize,
             chunk_residues: raw.int_or("search.chunk_residues", 1 << 19)?.max(1024) as u128,
             sim_enabled: raw.bool_or("sim.enabled", true)?,
             sim_threads: raw.int_or("sim.threads_per_device", 240)?.max(1) as usize,
@@ -488,6 +503,8 @@ impl SwaphiConfig {
             chunk: ChunkPlanConfig { target_padded_residues: self.chunk_residues },
             top_k: self.top_k,
             precision: self.precision,
+            mode: self.mode,
+            auto_fast_threshold: self.auto_fast_threshold,
             sim: self.sim_enabled.then(|| SimConfig {
                 devices: self.devices,
                 threads_per_device: self.sim_threads,
@@ -556,6 +573,28 @@ mod tests {
         raw.set("search.precision", "i128").unwrap();
         let err = SwaphiConfig::from_raw(&raw).unwrap_err().to_string();
         assert!(err.contains("precision"), "{err}");
+    }
+
+    #[test]
+    fn mode_key_parses_and_rejects() {
+        let cfg = SwaphiConfig::default_config();
+        assert_eq!(cfg.mode, SearchMode::Exact, "exact is the default");
+        assert_eq!(cfg.auto_fast_threshold, 50_000);
+        let mut raw = RawConfig::default();
+        raw.set("search.mode", "fast").unwrap();
+        raw.set("search.auto_fast_threshold", "1000").unwrap();
+        let cfg = SwaphiConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.mode, SearchMode::Fast);
+        let sc = cfg.search_config();
+        assert_eq!(sc.mode, SearchMode::Fast);
+        assert_eq!(sc.auto_fast_threshold, 1000);
+        raw.set("search.mode", "auto").unwrap();
+        assert_eq!(SwaphiConfig::from_raw(&raw).unwrap().mode, SearchMode::Auto);
+        // strict validation: the error names the key and the valid set
+        raw.set("search.mode", "nope").unwrap();
+        let err = SwaphiConfig::from_raw(&raw).unwrap_err().to_string();
+        assert!(err.contains("mode"), "{err}");
+        assert!(err.contains("exact|fast|auto"), "{err}");
     }
 
     #[test]

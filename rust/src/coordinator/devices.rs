@@ -11,13 +11,18 @@
 //!   padded residues ÷ per-device rate — uniform fleets get the classic
 //!   length-balanced split), so each device streams *its own* contiguous
 //!   slice of the database — the scatter half;
-//! * per batch, [`DeviceSet::queues`] materializes one work queue per
-//!   device holding that device's `(query, chunk)` items; a device drains
-//!   its own queue front-first and, when empty, **steals from the back of
-//!   the queue with the largest estimated remaining time** (depth ÷
-//!   rate) — the dynamic tail balancing that keeps a straggler device
-//!   from serializing the batch, with fast devices strip-mining slow
-//!   ones first;
+//! * per batch, [`DeviceSet::queues`] opens one *logical* work queue per
+//!   device: the query-major cross product of the batch's queries with
+//!   that device's shard, represented not as a materialized `O(nq·nc)`
+//!   item list but as a pair of head/tail cursors over the implicit
+//!   range (item `i` of device `d` is `(i / |shard_d|,
+//!   shard_d[i mod |shard_d|])`). A device drains its own range
+//!   front-first (advance head) and, when empty, **steals from the back
+//!   of the queue with the largest estimated remaining time** (depth ÷
+//!   rate) by decrementing the victim's tail — the dynamic tail
+//!   balancing that keeps a straggler device from serializing the
+//!   batch, with fast devices strip-mining slow ones first, at O(1)
+//!   memory per device regardless of batch size;
 //! * the gather half stays in the coordinator: per-thread [`ScoreSink`]
 //!   shards merge once at the barrier, and because sinks are
 //!   order-independent the merged result is byte-identical to the
@@ -44,7 +49,6 @@
 use crate::db::chunk::{partition_chunks_weighted, Chunk};
 use crate::metrics::{Histogram, HistogramSummary};
 use crate::tune::Tuner;
-use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -282,41 +286,33 @@ impl DeviceSet {
         self.batches.load(Ordering::Relaxed)
     }
 
-    /// Materialize the per-device work queues for a batch of `n_queries`
+    /// Open the per-device work queues for a batch of `n_queries`
     /// queries: device `d`'s queue holds `(q, c)` for every query crossed
     /// with every chunk of `d`'s shard, query-major so a device finishes
-    /// one query's contexts before moving on. The queues snapshot the
-    /// current fleet shape — a concurrent re-shard cannot disturb a
-    /// batch already in flight.
+    /// one query's contexts before moving on. The queue is *implicit* —
+    /// a head/tail cursor pair over the `|shard_d| · n_queries` range,
+    /// O(1) memory per device instead of a materialized `O(nq·nc)` item
+    /// list. The queues snapshot the current fleet shape — a concurrent
+    /// re-shard cannot disturb a batch already in flight.
     pub fn queues(&self, n_queries: usize) -> WorkQueues<'_> {
-        let (queues, rates) = {
+        let (shards, rates) = {
             let shape = self.shape.lock().unwrap();
-            let queues: Vec<Mutex<VecDeque<WorkItem>>> = shape
-                .shards
-                .iter()
-                .map(|shard| {
-                    let mut q = VecDeque::with_capacity(shard.len() * n_queries);
-                    for query in 0..n_queries {
-                        for &chunk in shard {
-                            q.push_back(WorkItem { query, chunk });
-                        }
-                    }
-                    Mutex::new(q)
-                })
-                .collect();
-            (queues, shape.rates.clone())
+            (shape.shards.clone(), shape.rates.clone())
         };
-        let mut depths = Vec::with_capacity(queues.len());
-        for (d, q) in queues.iter().enumerate() {
-            let len = q.lock().unwrap().len();
-            self.counters[d].depth.store(len, Ordering::Relaxed);
-            depths.push(AtomicUsize::new(len));
+        let mut cursors = Vec::with_capacity(shards.len());
+        let mut depths = Vec::with_capacity(shards.len());
+        for (d, shard) in shards.iter().enumerate() {
+            let total = shard.len() * n_queries;
+            self.counters[d].depth.store(total, Ordering::Relaxed);
+            cursors.push(Mutex::new((0usize, total)));
+            depths.push(AtomicUsize::new(total));
         }
         WorkQueues {
             set: self,
             rates,
             tuner: self.tuner(),
-            queues,
+            shards,
+            cursors,
             depths,
             batch_executed: (0..self.n_devices()).map(|_| AtomicU64::new(0)).collect(),
             batch_steals: (0..self.n_devices()).map(|_| AtomicU64::new(0)).collect(),
@@ -353,9 +349,11 @@ impl DeviceSet {
     }
 }
 
-/// The per-batch work queues of a [`DeviceSet`] — one bounded deque per
-/// device, shared by the device host threads for the duration of one
-/// batch. All methods are `&self`; safe to use from scoped threads.
+/// The per-batch work queues of a [`DeviceSet`] — one *implicit* deque
+/// per device (a head/tail cursor pair over the device's query-major
+/// `shard × queries` range), shared by the device host threads for the
+/// duration of one batch. All methods are `&self`; safe to use from
+/// scoped threads.
 pub struct WorkQueues<'a> {
     set: &'a DeviceSet,
     /// The rate vector this batch runs on — snapshotted at batch start so
@@ -364,7 +362,16 @@ pub struct WorkQueues<'a> {
     /// The calibration engine, snapshotted at batch start (no per-item
     /// lock on the set-level slot).
     tuner: Option<Arc<Tuner>>,
-    queues: Vec<Mutex<VecDeque<WorkItem>>>,
+    /// The shard snapshot this batch runs over — with `n_queries` it
+    /// fully determines every device's item sequence, so the cursors
+    /// below are the only per-batch queue state.
+    shards: Vec<Vec<usize>>,
+    /// `(head, tail)` cursors into each device's implicit item range
+    /// `0..|shard_d| · n_queries`: the owner pops by advancing `head`,
+    /// a thief pops by decrementing `tail`, the live depth is
+    /// `tail - head`. One Mutex per device keeps the pop + depth update
+    /// atomic, exactly like the old materialized deque's lock.
+    cursors: Vec<Mutex<(usize, usize)>>,
     /// Per-batch queue depths — victim selection reads these (not the
     /// set-level gauges) so concurrent batches on one shared
     /// [`DeviceSet`] can never steer each other's thieves; the set-level
@@ -408,16 +415,39 @@ impl WorkQueues<'_> {
         }
     }
 
-    /// Pop for `dev` from `from`'s queue: the owner takes the front, a
-    /// thief takes the back (the classic deque discipline — owners keep
-    /// locality, thieves take the work farthest from the owner's cursor).
+    /// The `i`-th item of device `dev`'s implicit query-major range:
+    /// queries advance in the outer position, the shard's chunks in the
+    /// inner — identical to the order the old materialized deque was
+    /// pushed in.
+    fn item(&self, dev: usize, i: usize) -> WorkItem {
+        let width = self.shards[dev].len();
+        WorkItem { query: i / width, chunk: self.shards[dev][i % width] }
+    }
+
+    /// Pop for `dev` from `from`'s queue: the owner takes the front
+    /// (advance head), a thief takes the back (decrement tail) — the
+    /// classic deque discipline (owners keep locality, thieves take the
+    /// work farthest from the owner's cursor), on cursors instead of a
+    /// materialized item list.
     fn pop(&self, dev: usize, from: usize) -> Option<WorkItem> {
         let item = {
-            let mut q = self.queues[from].lock().unwrap();
-            let item = if dev == from { q.pop_front() } else { q.pop_back() };
-            self.depths[from].store(q.len(), Ordering::Relaxed);
-            self.set.counters[from].depth.store(q.len(), Ordering::Relaxed);
-            item
+            let mut cur = self.cursors[from].lock().unwrap();
+            let (head, tail) = *cur;
+            if head == tail {
+                None
+            } else {
+                let i = if dev == from {
+                    cur.0 += 1;
+                    head
+                } else {
+                    cur.1 -= 1;
+                    tail - 1
+                };
+                let depth = cur.1 - cur.0;
+                self.depths[from].store(depth, Ordering::Relaxed);
+                self.set.counters[from].depth.store(depth, Ordering::Relaxed);
+                Some(self.item(from, i))
+            }
         };
         let item = item?;
         self.set.counters[dev].executed.fetch_add(1, Ordering::Relaxed);
@@ -459,7 +489,7 @@ impl WorkQueues<'_> {
     pub fn finish(self) {
         let mut items = self.set.items_per_batch.lock().unwrap();
         let mut steals = self.set.steals_per_batch.lock().unwrap();
-        for d in 0..self.queues.len() {
+        for d in 0..self.cursors.len() {
             items.record(self.batch_executed[d].load(Ordering::Relaxed));
             steals.record(self.batch_steals[d].load(Ordering::Relaxed));
         }
@@ -484,21 +514,64 @@ mod tests {
     #[test]
     fn queues_cover_query_chunk_cross_product_once() {
         let chunks = chunks(300, 2048);
-        let set = DeviceSet::new(&chunks, 3, true);
+        // steal off: each device drains exactly its own implicit range
+        let set = DeviceSet::new(&chunks, 3, false);
         assert_eq!(set.n_devices(), 3);
         assert_eq!(set.n_chunks(), chunks.len());
         let nq = 4;
         let queues = set.queues(nq);
         let mut seen = BTreeSet::new();
         for d in 0..3 {
-            // drain own queues only (no stealing interleave needed)
-            loop {
-                let item = queues.queues[d].lock().unwrap().pop_front();
-                let Some(item) = item else { break };
+            let mut last_query = 0usize;
+            while let Some(item) = queues.next(d) {
+                assert!(item.query >= last_query, "owner order must be query-major");
+                last_query = item.query;
                 assert!(seen.insert((item.query, item.chunk)), "{item:?} twice");
             }
         }
         assert_eq!(seen.len(), nq * chunks.len());
+    }
+
+    #[test]
+    fn cursor_pops_match_materialized_deque_reference() {
+        // property: for any interleaving of owner pops and steals, the
+        // cursor representation hands out exactly the item the old
+        // materialized VecDeque discipline would (owner = pop_front,
+        // thief = pop_back) — the steal discipline is bit-identical
+        use crate::util::rng::Rng;
+        use std::collections::VecDeque;
+        let chunks = chunks(120, 1024);
+        for seed in 0..12u64 {
+            let mut rng = Rng::new(seed + 1);
+            let ndev = 2 + (seed as usize % 3);
+            let nq = 1 + (seed as usize % 4);
+            let set = DeviceSet::new(&chunks, ndev, true);
+            let queues = set.queues(nq);
+            let mut reference: Vec<VecDeque<WorkItem>> = set
+                .shards()
+                .iter()
+                .map(|shard| {
+                    let mut q = VecDeque::new();
+                    for query in 0..nq {
+                        for &chunk in shard {
+                            q.push_back(WorkItem { query, chunk });
+                        }
+                    }
+                    q
+                })
+                .collect();
+            while reference.iter().any(|q| !q.is_empty()) {
+                let dev = rng.below(ndev as u64) as usize;
+                let from = rng.below(ndev as u64) as usize;
+                let expect =
+                    if dev == from { reference[from].pop_front() } else { reference[from].pop_back() };
+                assert_eq!(queues.pop(dev, from), expect, "seed {seed} dev {dev} from {from}");
+                assert_eq!(queues.depth(from), reference[from].len());
+            }
+            for d in 0..ndev {
+                assert_eq!(queues.pop(d, d), None, "both representations drained");
+            }
+        }
     }
 
     #[test]

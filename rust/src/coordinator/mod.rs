@@ -54,10 +54,11 @@ pub mod results;
 use crate::align::{
     scalar, EngineKind, NativeAligner, Precision, ProfileAligner, QueryContext,
 };
+use crate::blast::{prefilter, BlastParams, BlastQuery};
 use crate::db::chunk::{plan_chunks_paired, Chunk, ChunkPlanConfig};
 use crate::db::index::Index;
 use crate::matrices::Scoring;
-use crate::metrics::{Cells, RescoreStats, Timer};
+use crate::metrics::{Cells, PrefilterStats, RescoreStats, Timer};
 use crate::phi::sim::{simulate_search, SimConfig, SimReport};
 use crate::tune::{TuneConfig, Tuner};
 pub use devices::{DeviceSet, DeviceSnapshot, WorkItem};
@@ -119,6 +120,42 @@ impl AlignerFactory for PjrtFactory {
     }
 }
 
+/// The exact/heuristic switch of a search: run the exhaustive SW
+/// pipeline, or the two-stage funnel (seeded prefilter → exact SW
+/// rescore of the survivor set).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum SearchMode {
+    /// Exhaustive SW over every subject — the pre-funnel pipeline,
+    /// bit-for-bit (fast-mode code is bypassed entirely).
+    #[default]
+    Exact,
+    /// Two-stage funnel: the seeded prefilter screens the whole database
+    /// and only survivors are rescored with exact SW.
+    Fast,
+    /// Resolve to `Fast` when the database holds at least
+    /// [`SearchConfig::auto_fast_threshold`] sequences, `Exact` below.
+    Auto,
+}
+
+impl SearchMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SearchMode::Exact => "exact",
+            SearchMode::Fast => "fast",
+            SearchMode::Auto => "auto",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SearchMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "exact" | "full" => Some(SearchMode::Exact),
+            "fast" | "funnel" => Some(SearchMode::Fast),
+            "auto" => Some(SearchMode::Auto),
+            _ => None,
+        }
+    }
+}
+
 /// Search configuration.
 #[derive(Clone, Debug)]
 pub struct SearchConfig {
@@ -158,6 +195,12 @@ pub struct SearchConfig {
     /// the calibration loop. Alignment itself runs at native speed, so
     /// results and wall time are untouched. Empty = no skew.
     pub handicap: Vec<f64>,
+    /// Exact/fast/auto search mode (`search.mode` / `--mode`). `Exact`
+    /// by default, so every pre-funnel path is untouched.
+    pub mode: SearchMode,
+    /// [`SearchMode::Auto`] resolves to `Fast` when the database holds
+    /// at least this many sequences (`search.auto_fast_threshold`).
+    pub auto_fast_threshold: usize,
 }
 
 impl SearchConfig {
@@ -189,6 +232,8 @@ impl Default for SearchConfig {
             sim: Some(SimConfig::default()),
             tune: TuneConfig::default(),
             handicap: Vec::new(),
+            mode: SearchMode::default(),
+            auto_fast_threshold: 50_000,
         }
     }
 }
@@ -211,6 +256,9 @@ pub struct QueryResult {
     pub wall_seconds: f64,
     /// Precision-tier accounting (narrow-tier lanes, overflow rescores).
     pub rescore: RescoreStats,
+    /// Funnel accounting (survivor fraction, seed hits, visited cells)
+    /// when the search ran in fast mode; `None` on the exact path.
+    pub prefilter: Option<PrefilterStats>,
     /// Calibrated device simulation (when configured).
     pub sim: Option<SimReport>,
 }
@@ -308,10 +356,57 @@ impl<'a> SearchSession<'a> {
         self.devices.snapshot()
     }
 
-    /// Search a batch of queries, streaming scores through bounded
-    /// per-thread top-k shards (`O(top_k)` aggregation memory per query;
-    /// `QueryResult::scores` stays empty).
+    /// Resolve a requested mode against this session's database: `Auto`
+    /// picks `Fast` at or above the configured sequence-count threshold.
+    pub fn resolve_mode(&self, mode: SearchMode) -> SearchMode {
+        match mode {
+            SearchMode::Auto => {
+                if self.index.n_seqs() >= self.config.auto_fast_threshold {
+                    SearchMode::Fast
+                } else {
+                    SearchMode::Exact
+                }
+            }
+            m => m,
+        }
+    }
+
+    /// The mode this session's searches actually run in (the configured
+    /// mode with `Auto` resolved).
+    pub fn effective_mode(&self) -> SearchMode {
+        self.resolve_mode(self.config.mode)
+    }
+
+    /// Search a batch of queries in the session's configured mode,
+    /// streaming scores through bounded per-thread top-k shards
+    /// (`O(top_k)` aggregation memory per query; `QueryResult::scores`
+    /// stays empty).
     pub fn search_batch(
+        &self,
+        factory: &dyn AlignerFactory,
+        queries: &[(String, Vec<u8>)],
+    ) -> anyhow::Result<Vec<QueryResult>> {
+        self.search_batch_mode(factory, queries, self.config.mode)
+    }
+
+    /// Like [`search_batch`](Self::search_batch) with a per-batch mode
+    /// override (the daemon routes per-request modes through this).
+    pub fn search_batch_mode(
+        &self,
+        factory: &dyn AlignerFactory,
+        queries: &[(String, Vec<u8>)],
+        mode: SearchMode,
+    ) -> anyhow::Result<Vec<QueryResult>> {
+        match self.resolve_mode(mode) {
+            SearchMode::Fast => self.search_batch_fast(factory, queries),
+            _ => self.search_batch_exact(factory, queries),
+        }
+    }
+
+    /// The exact top-k pipeline — the pre-funnel `search_batch`,
+    /// unchanged (fast mode never routes through it, exact mode only
+    /// ever routes through it).
+    pub fn search_batch_exact(
         &self,
         factory: &dyn AlignerFactory,
         queries: &[(String, Vec<u8>)],
@@ -324,9 +419,173 @@ impl<'a> SearchSession<'a> {
         let mut out = Vec::with_capacity(ctxs.len());
         for (ctx, (sink, stats)) in ctxs.iter().zip(merged) {
             let hits = self.hits_from_pairs(&sink.finish());
-            out.push(self.assemble(factory, ctx, hits, Vec::new(), stats, wall, total_qlen));
+            out.push(self.assemble(factory, ctx, hits, Vec::new(), stats, None, wall, total_qlen));
         }
         Ok(out)
+    }
+
+    /// The two-stage funnel: (1) the seeded prefilter screens every
+    /// subject, scheduled over the *same* device fleet, queues and steal
+    /// discipline as exact SW chunks; (2) the survivor set (seeded hits
+    /// plus the deterministic longest-subject top-up, see
+    /// [`prefilter::select_survivors`]) is rescored with the exact
+    /// full-precision kernel, and ranked under the exact path's tie
+    /// rule (score desc, index asc). Output is fleet-invariant like the
+    /// exact path; sensitivity vs exact top-k is measured and gated by
+    /// the `prefilter_funnel` bench.
+    pub fn search_batch_fast(
+        &self,
+        factory: &dyn AlignerFactory,
+        queries: &[(String, Vec<u8>)],
+    ) -> anyhow::Result<Vec<QueryResult>> {
+        let ctxs = self.contexts(queries);
+        let timer = Timer::start();
+        let (seeded, mut stats) = self.run_prefilter(&ctxs)?;
+        let floor = prefilter::survivor_floor(self.config.top_k, self.index.n_seqs());
+        let mut ranked = Vec::with_capacity(ctxs.len());
+        let mut rescores = Vec::with_capacity(ctxs.len());
+        for (q, ctx) in ctxs.iter().enumerate() {
+            let survivors =
+                prefilter::select_survivors(self.index.n_seqs(), &seeded[q], floor);
+            stats[q].survivors = survivors.len() as u64;
+            let mut pairs = self.rescore_survivors(ctx, &survivors);
+            pairs.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+            pairs.truncate(self.config.top_k);
+            // survivors are rescored at full precision (the exact scalar
+            // kernel), so tier accounting lands entirely in i32
+            rescores.push(RescoreStats {
+                i32_lanes: survivors.len() as u64,
+                ..Default::default()
+            });
+            ranked.push(pairs);
+        }
+        let wall = timer.seconds();
+        let total_qlen: usize = ctxs.iter().map(|c| c.len()).sum();
+        let mut out = Vec::with_capacity(ctxs.len());
+        for (q, ctx) in ctxs.iter().enumerate() {
+            let hits = self.hits_from_pairs(&ranked[q]);
+            out.push(self.assemble(
+                factory,
+                ctx,
+                hits,
+                Vec::new(),
+                rescores[q],
+                Some(stats[q]),
+                wall,
+                total_qlen,
+            ));
+        }
+        Ok(out)
+    }
+
+    /// Funnel stage 1: compile each query's word index once, then drain
+    /// the same `(query, chunk)` work queues the exact path uses — one
+    /// host thread per device, stealing included — scoring every subject
+    /// heuristically. Returns per-query seeded `(seq, blast_score)` hits
+    /// and prefilter accounting. Prefilter items are not fed to the rate
+    /// tuner: its estimator calibrates DP cells/second, and heuristic
+    /// chunks visit almost none of their padded cells.
+    fn run_prefilter(
+        &self,
+        ctxs: &[QueryContext],
+    ) -> anyhow::Result<(Vec<Vec<(usize, i32)>>, Vec<PrefilterStats>)> {
+        let nq = ctxs.len();
+        let nc = self.chunks.len();
+        let mut seeded: Vec<Vec<(usize, i32)>> = (0..nq).map(|_| Vec::new()).collect();
+        let mut stats: Vec<PrefilterStats> = vec![PrefilterStats::default(); nq];
+        if nq == 0 || nc == 0 {
+            return Ok((seeded, stats));
+        }
+        let params = BlastParams::blastp_defaults();
+        let compiled: Vec<BlastQuery> = ctxs
+            .iter()
+            .map(|c| BlastQuery::build(c.codes.clone(), &self.scoring, params))
+            .collect();
+        let queues = self.devices.queues(nq);
+        let n_devices = self.devices.n_devices();
+        let shard_sets: Vec<Vec<(Vec<(usize, i32)>, PrefilterStats)>> =
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..n_devices)
+                    .map(|dev| {
+                        let queues = &queues;
+                        let compiled = &compiled;
+                        scope.spawn(move || {
+                            let mut shards: Vec<(Vec<(usize, i32)>, PrefilterStats)> =
+                                (0..nq)
+                                    .map(|_| (Vec::new(), PrefilterStats::default()))
+                                    .collect();
+                            let mut scratch = Vec::new();
+                            while let Some(item) = queues.next(dev) {
+                                let (out, st) = &mut shards[item.query];
+                                prefilter::score_chunk(
+                                    &compiled[item.query],
+                                    self.index,
+                                    &self.chunks[item.chunk],
+                                    &self.scoring,
+                                    st,
+                                    &mut scratch,
+                                    out,
+                                );
+                            }
+                            shards
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().unwrap_or_else(|p| std::panic::resume_unwind(p)))
+                    .collect()
+            });
+        queues.finish();
+        self.devices.end_batch();
+        for set in shard_sets {
+            for (q, (shard, st)) in set.into_iter().enumerate() {
+                seeded[q].extend(shard);
+                stats[q].add(st);
+            }
+        }
+        // completeness guard, mirroring the exact path: every subject
+        // must have been screened exactly once per query
+        let n_seqs = self.index.n_seqs() as u64;
+        for (q, st) in stats.iter().enumerate() {
+            anyhow::ensure!(
+                st.candidates == n_seqs,
+                "prefilter lost subjects for query {q}: {}/{n_seqs}",
+                st.candidates
+            );
+        }
+        Ok((seeded, stats))
+    }
+
+    /// Funnel stage 2: exact full-precision SW on the survivor set only,
+    /// striped across as many host threads as the fleet has devices.
+    fn rescore_survivors(
+        &self,
+        ctx: &QueryContext,
+        survivors: &[usize],
+    ) -> Vec<(usize, i32)> {
+        if survivors.is_empty() {
+            return Vec::new();
+        }
+        let n_workers = self.devices.n_devices().max(1).min(survivors.len());
+        let stripe = survivors.len().div_ceil(n_workers);
+        let mut scored = vec![0i32; survivors.len()];
+        std::thread::scope(|scope| {
+            for (w, slice) in scored.chunks_mut(stripe).enumerate() {
+                let base = w * stripe;
+                scope.spawn(move || {
+                    for (i, out) in slice.iter_mut().enumerate() {
+                        let seq = survivors[base + i];
+                        *out = scalar::sw_score(
+                            &ctx.codes,
+                            &self.index.seqs[seq].codes,
+                            &self.scoring,
+                        );
+                    }
+                });
+            }
+        });
+        survivors.iter().copied().zip(scored).collect()
     }
 
     /// Search a batch of queries keeping the full dense score vector per
@@ -351,7 +610,7 @@ impl<'a> SearchSession<'a> {
                 |i| self.index.seqs[i].id.clone(),
                 |i| self.index.seqs[i].len(),
             );
-            out.push(self.assemble(factory, ctx, hits, scores, stats, wall, total_qlen));
+            out.push(self.assemble(factory, ctx, hits, scores, stats, None, wall, total_qlen));
         }
         Ok(out)
     }
@@ -398,6 +657,7 @@ impl<'a> SearchSession<'a> {
             .collect()
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn assemble(
         &self,
         factory: &dyn AlignerFactory,
@@ -405,6 +665,7 @@ impl<'a> SearchSession<'a> {
         hits: Vec<Hit>,
         scores: Vec<i32>,
         rescore: RescoreStats,
+        prefilter: Option<PrefilterStats>,
         batch_wall: f64,
         total_qlen: usize,
     ) -> QueryResult {
@@ -423,6 +684,21 @@ impl<'a> SearchSession<'a> {
             sim_cfg.precision =
                 if rescore.i16_lanes > 0 { Precision::I16 } else { Precision::I32 };
             sim_cfg.rescore_fraction = rescore.rescore_fraction();
+            // funnel leg: BLAST-model prefilter over the measured
+            // heuristic work, then the exact device schedule scaled to
+            // the surviving fraction of the database
+            if let Some(p) = prefilter {
+                return crate::phi::sim::simulate_funnel(
+                    self.index,
+                    &self.chunks,
+                    factory.kind(),
+                    ctx.len(),
+                    sim_cfg,
+                    p.cells_visited as u128,
+                    p.word_hits as u128,
+                    p.survivor_fraction(),
+                );
+            }
             // rates are absolute multipliers of the calibrated device
             // (1.0 = the 5110P), so only an all-full-rate fleet keeps
             // the pooled simulation — a uniform 0.5 fleet really is
@@ -456,6 +732,7 @@ impl<'a> SearchSession<'a> {
             cells,
             wall_seconds,
             rescore,
+            prefilter,
             sim,
         }
     }
@@ -1091,6 +1368,168 @@ mod tests {
         // cross product exactly once
         let executed: u64 = set.snapshot().iter().map(|d| d.executed).sum();
         assert_eq!(executed, (2 * queries.len() * tuned.n_chunks()) as u64);
+    }
+
+    #[test]
+    fn search_mode_names_parse() {
+        for (s, m) in [
+            ("exact", SearchMode::Exact),
+            ("fast", SearchMode::Fast),
+            ("auto", SearchMode::Auto),
+        ] {
+            assert_eq!(SearchMode::parse(s), Some(m));
+            assert_eq!(m.name(), s);
+        }
+        assert_eq!(SearchMode::parse("FAST"), Some(SearchMode::Fast));
+        assert_eq!(SearchMode::parse("funnel"), Some(SearchMode::Fast));
+        assert_eq!(SearchMode::parse("full"), Some(SearchMode::Exact));
+        assert_eq!(SearchMode::parse("nope"), None);
+        assert_eq!(SearchMode::parse(""), None);
+        assert_eq!(SearchMode::default(), SearchMode::Exact);
+    }
+
+    #[test]
+    fn fast_mode_recovers_planted_homolog_and_accounts() {
+        let (idx, sc) = setup(150);
+        // query = an exact copy of a database sequence: the seeded stage
+        // must keep it, and the rescore must reproduce its exact SW score
+        let target = idx.n_seqs() - 3;
+        let q = idx.seqs[target].codes.clone();
+        let mk = |mode| {
+            SearchSession::new(
+                &idx,
+                sc.clone(),
+                SearchConfig {
+                    mode,
+                    sim: None,
+                    chunk: ChunkPlanConfig { target_padded_residues: 2048 },
+                    ..Default::default()
+                },
+            )
+        };
+        let factory = NativeFactory(EngineKind::InterSP);
+        let queries = vec![("q".to_string(), q.clone())];
+        let exact = mk(SearchMode::Exact).search_batch(&factory, &queries).unwrap();
+        let fast = mk(SearchMode::Fast).search_batch(&factory, &queries).unwrap();
+        assert!(exact[0].prefilter.is_none(), "exact path must not prefilter");
+        let p = fast[0].prefilter.expect("fast mode reports prefilter stats");
+        assert_eq!(p.candidates, idx.n_seqs() as u64, "every subject screened");
+        assert!(p.survivors > 0 && p.survivors < p.candidates, "{p:?}");
+        assert!(p.word_hits > 0 && p.cells_visited > 0, "{p:?}");
+        assert_eq!(fast[0].rescore.i32_lanes, p.survivors, "survivors rescored at i32");
+        assert_eq!(fast[0].rescore.i16_lanes, 0);
+        // the self-hit tops both rankings with the same exact score
+        assert_eq!(fast[0].hits[0].seq_index, exact[0].hits[0].seq_index);
+        assert_eq!(fast[0].hits[0].score, exact[0].hits[0].score);
+        assert_eq!(fast[0].hits[0].seq_index, target);
+    }
+
+    #[test]
+    fn fast_mode_is_fleet_invariant() {
+        let (idx, sc) = setup(200);
+        let queries = vec![
+            ("self".to_string(), idx.seqs[idx.n_seqs() / 2].codes.clone()),
+            ("rand".to_string(), generate_query(45, 6)),
+        ];
+        let factory = NativeFactory(EngineKind::InterSP);
+        let mk = |devices, steal| {
+            SearchSession::new(
+                &idx,
+                sc.clone(),
+                SearchConfig {
+                    mode: SearchMode::Fast,
+                    devices,
+                    steal,
+                    sim: None,
+                    chunk: ChunkPlanConfig { target_padded_residues: 2048 },
+                    ..Default::default()
+                },
+            )
+        };
+        let base = mk(1, true).search_batch(&factory, &queries).unwrap();
+        for devices in [2usize, 3] {
+            for steal in [true, false] {
+                let got = mk(devices, steal).search_batch(&factory, &queries).unwrap();
+                for (a, b) in got.iter().zip(&base) {
+                    let ah: Vec<_> = a.hits.iter().map(|h| (h.seq_index, h.score)).collect();
+                    let bh: Vec<_> = b.hits.iter().map(|h| (h.seq_index, h.score)).collect();
+                    assert_eq!(ah, bh, "devices={devices} steal={steal}");
+                    assert_eq!(a.prefilter, b.prefilter, "devices={devices} steal={steal}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn auto_mode_resolves_by_database_size() {
+        let (idx, sc) = setup(100);
+        let mk = |auto_fast_threshold| {
+            SearchSession::new(
+                &idx,
+                sc.clone(),
+                SearchConfig {
+                    mode: SearchMode::Auto,
+                    auto_fast_threshold,
+                    sim: None,
+                    ..Default::default()
+                },
+            )
+        };
+        assert_eq!(mk(10).effective_mode(), SearchMode::Fast);
+        assert_eq!(mk(1_000_000).effective_mode(), SearchMode::Exact);
+        let factory = NativeFactory(EngineKind::InterSP);
+        let queries = vec![("q".to_string(), generate_query(40, 2))];
+        assert!(mk(10).search_batch(&factory, &queries).unwrap()[0].prefilter.is_some());
+        assert!(mk(1_000_000).search_batch(&factory, &queries).unwrap()[0]
+            .prefilter
+            .is_none());
+    }
+
+    #[test]
+    fn fast_mode_empty_cases_are_safe() {
+        let idx = Index::build(Database::default());
+        let sc = Scoring::swaphi_default();
+        let session = SearchSession::new(
+            &idx,
+            sc,
+            SearchConfig { mode: SearchMode::Fast, sim: None, ..Default::default() },
+        );
+        let factory = NativeFactory(EngineKind::InterSP);
+        let out = session
+            .search_batch(&factory, &[("q".to_string(), vec![0, 1, 2])])
+            .unwrap();
+        assert!(out[0].hits.is_empty());
+        assert!(session.search_batch(&factory, &[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn fast_mode_funnel_sim_reports_speedup() {
+        let (idx, sc) = setup(300);
+        let q = idx.seqs[idx.n_seqs() - 1].codes.clone();
+        let mk = |mode| {
+            SearchSession::new(
+                &idx,
+                sc.clone(),
+                SearchConfig {
+                    mode,
+                    sim: Some(SimConfig { replication: 100, ..Default::default() }),
+                    chunk: ChunkPlanConfig { target_padded_residues: 2048 },
+                    ..Default::default()
+                },
+            )
+        };
+        let factory = NativeFactory(EngineKind::InterSP);
+        let queries = vec![("q".to_string(), q)];
+        let exact = mk(SearchMode::Exact).search_batch(&factory, &queries).unwrap();
+        let fast = mk(SearchMode::Fast).search_batch(&factory, &queries).unwrap();
+        let (es, fs) = (exact[0].sim.as_ref().unwrap(), fast[0].sim.as_ref().unwrap());
+        assert!(
+            fs.makespan < es.makespan,
+            "funnel sim must beat exact: {} vs {}",
+            fs.makespan,
+            es.makespan
+        );
+        assert!(fast[0].sim_gcups().unwrap() > exact[0].sim_gcups().unwrap());
     }
 
     #[test]

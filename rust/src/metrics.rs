@@ -71,6 +71,45 @@ impl RescoreStats {
     }
 }
 
+/// Prefilter-funnel accounting for one query (or a batch): how many
+/// subjects entered the seeded prefilter, how many survived to the exact
+/// SW rescore, and the heuristic work spent deciding. The survivor
+/// fraction is the quantity the funnel's cost model charges the exact
+/// stage for.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrefilterStats {
+    /// Subjects screened by the prefilter (the whole database, per query).
+    pub candidates: u64,
+    /// Subjects that survived to the exact SW rescore.
+    pub survivors: u64,
+    /// Seed word hits streamed through the two-hit diagonal filter.
+    pub word_hits: u64,
+    /// Two-hit triggers extended.
+    pub triggers: u64,
+    /// DP cells the heuristic actually visited (ungapped + gapped).
+    pub cells_visited: u64,
+}
+
+impl PrefilterStats {
+    pub fn add(&mut self, other: PrefilterStats) {
+        self.candidates += other.candidates;
+        self.survivors += other.survivors;
+        self.word_hits += other.word_hits;
+        self.triggers += other.triggers;
+        self.cells_visited += other.cells_visited;
+    }
+
+    /// Fraction of screened subjects fed to the exact stage (0.0 when
+    /// nothing was screened).
+    pub fn survivor_fraction(&self) -> f64 {
+        if self.candidates == 0 {
+            0.0
+        } else {
+            self.survivors as f64 / self.candidates as f64
+        }
+    }
+}
+
 /// Wall-clock timer.
 pub struct Timer {
     start: Instant,
@@ -239,6 +278,23 @@ mod tests {
         assert!((a.rescore_fraction() - 0.1).abs() < 1e-12);
         assert_eq!(RescoreStats::default().rescore_fraction(), 0.0);
         assert_eq!(RescoreStats::default().narrow_share(), 0.0);
+    }
+
+    #[test]
+    fn prefilter_stats_fractions() {
+        let mut p = PrefilterStats {
+            candidates: 200,
+            survivors: 20,
+            word_hits: 900,
+            triggers: 40,
+            cells_visited: 5_000,
+        };
+        assert!((p.survivor_fraction() - 0.1).abs() < 1e-12);
+        p.add(PrefilterStats { candidates: 200, survivors: 60, ..Default::default() });
+        assert_eq!(p.candidates, 400);
+        assert_eq!(p.survivors, 80);
+        assert!((p.survivor_fraction() - 0.2).abs() < 1e-12);
+        assert_eq!(PrefilterStats::default().survivor_fraction(), 0.0);
     }
 
     #[test]

@@ -69,6 +69,19 @@ impl Client {
         top_k: Option<usize>,
         deadline_ms: Option<u64>,
     ) -> anyhow::Result<Json> {
+        self.search_mode(query_id, seq, top_k, deadline_ms, None)
+    }
+
+    /// [`search`](Self::search) with a per-request search-mode override
+    /// (`None` uses the server session's configured default).
+    pub fn search_mode(
+        &mut self,
+        query_id: &str,
+        seq: &str,
+        top_k: Option<usize>,
+        deadline_ms: Option<u64>,
+        mode: Option<crate::coordinator::SearchMode>,
+    ) -> anyhow::Result<Json> {
         let mut m = BTreeMap::new();
         m.insert("v".to_string(), Json::Num(protocol::VERSION as f64));
         m.insert("op".to_string(), Json::Str("search".to_string()));
@@ -79,6 +92,9 @@ impl Client {
         }
         if let Some(d) = deadline_ms {
             m.insert("deadline_ms".to_string(), Json::Num(d as f64));
+        }
+        if let Some(mode) = mode {
+            m.insert("mode".to_string(), Json::Str(mode.name().to_string()));
         }
         self.request_line(&Json::Obj(m).to_string())
     }

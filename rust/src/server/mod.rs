@@ -34,7 +34,7 @@ pub mod protocol;
 pub mod queue;
 
 use crate::align::Precision;
-use crate::coordinator::{AlignerFactory, DeviceSet, SearchConfig, SearchSession};
+use crate::coordinator::{AlignerFactory, DeviceSet, SearchConfig, SearchMode, SearchSession};
 use crate::db::chunk::plan_chunks_paired;
 use crate::db::index::Index;
 use crate::matrices::Scoring;
@@ -232,6 +232,11 @@ pub struct ServerMetrics {
     pub cache_hits: AtomicU64,
     pub cache_misses: AtomicU64,
     pub batches: AtomicU64,
+    /// Fast-mode funnel accounting, accumulated across every fast-mode
+    /// query served: subjects screened by the prefilter and subjects
+    /// that survived into the exact rescore.
+    pub prefilter_candidates: AtomicU64,
+    pub prefilter_survivors: AtomicU64,
     batch_size: Mutex<Histogram>,
     latency_us: Mutex<Histogram>,
 }
@@ -245,6 +250,8 @@ impl ServerMetrics {
             cache_hits: AtomicU64::new(0),
             cache_misses: AtomicU64::new(0),
             batches: AtomicU64::new(0),
+            prefilter_candidates: AtomicU64::new(0),
+            prefilter_survivors: AtomicU64::new(0),
             batch_size: Mutex::new(Histogram::exponential(1 << 10)),
             latency_us: Mutex::new(Histogram::exponential(60_000_000)),
         }
@@ -304,6 +311,7 @@ pub fn index_generation(index: &Index) -> u64 {
 fn params_fingerprint(
     scoring: &Scoring,
     precision: Precision,
+    mode: SearchMode,
     top_k: usize,
     factory: &dyn AlignerFactory,
 ) -> u64 {
@@ -312,6 +320,10 @@ fn params_fingerprint(
     h = fnv1a_field(h, &scoring.gap_open.to_le_bytes());
     h = fnv1a_field(h, &scoring.gap_extend.to_le_bytes());
     h = fnv1a_field(h, precision.name().as_bytes());
+    // fast-mode results are heuristic-filtered — they must never alias
+    // an exact result under the same key, so the mode is part of the
+    // params fingerprint (one fp per executable mode, see `Shared`)
+    h = fnv1a_field(h, mode.name().as_bytes());
     h = fnv1a_field(h, factory.kind().name().as_bytes());
     h = fnv1a_field(h, factory.backend_name().as_bytes());
     fnv1a_field(h, &(top_k as u64).to_le_bytes())
@@ -327,12 +339,20 @@ struct Shared {
     metrics: ServerMetrics,
     stop: AtomicBool,
     generation: u64,
-    params_fp: u64,
+    /// Params fingerprints, one per *executable* mode (auto resolves at
+    /// admission): exact and fast results never share a cache key.
+    params_fp_exact: u64,
+    params_fp_fast: u64,
     /// Fleet-shape fingerprint recorded with every cache entry
     /// (groundwork for per-shard partial-score caching; lookups ignore
     /// it).
     fleet_fp: u64,
     session_top_k: usize,
+    /// The session's configured mode, pre-resolved against the index
+    /// size (never `Auto`): what a request without a `mode` field runs.
+    default_mode: SearchMode,
+    /// What a request asking for `"auto"` runs (also pre-resolved).
+    auto_mode: SearchMode,
     /// The simulated coprocessor fleet the coalescer's session schedules
     /// onto — held here so the `stats` op can report per-device
     /// queue-depth/steal counters while the session lives in the
@@ -343,6 +363,24 @@ struct Shared {
 impl Shared {
     fn draining(&self) -> bool {
         self.stop.load(Ordering::SeqCst) || (self.cfg.handle_signals && signalled())
+    }
+
+    /// Resolve a request's `mode` field to what will actually execute
+    /// (never `Auto`; `None` runs the session default).
+    fn resolve_mode(&self, req: Option<SearchMode>) -> SearchMode {
+        match req {
+            None => self.default_mode,
+            Some(SearchMode::Auto) => self.auto_mode,
+            Some(m) => m,
+        }
+    }
+
+    /// The cache params-fingerprint for a resolved mode.
+    fn params_fp(&self, mode: SearchMode) -> u64 {
+        match mode {
+            SearchMode::Fast => self.params_fp_fast,
+            _ => self.params_fp_exact,
+        }
     }
 }
 
@@ -381,7 +419,31 @@ impl Server {
         }
 
         let generation = index_generation(&index);
-        let params_fp = params_fingerprint(&scoring, search.precision, search.top_k, factory.as_ref());
+        let params_fp_exact = params_fingerprint(
+            &scoring,
+            search.precision,
+            SearchMode::Exact,
+            search.top_k,
+            factory.as_ref(),
+        );
+        let params_fp_fast = params_fingerprint(
+            &scoring,
+            search.precision,
+            SearchMode::Fast,
+            search.top_k,
+            factory.as_ref(),
+        );
+        // auto resolves once against the loaded index: the threshold is
+        // a property of the database, not of individual requests
+        let auto_mode = if index.n_seqs() >= search.auto_fast_threshold {
+            SearchMode::Fast
+        } else {
+            SearchMode::Exact
+        };
+        let default_mode = match search.mode {
+            SearchMode::Auto => auto_mode,
+            m => m,
+        };
         let fleet_fp = fleet_fingerprint(search.devices.max(1), &search.rates, search.steal);
         // plan the chunks exactly once: the fleet is built over this
         // plan here (so the stats endpoint can observe it) and the same
@@ -406,9 +468,12 @@ impl Server {
             metrics: ServerMetrics::new(),
             stop: AtomicBool::new(false),
             generation,
-            params_fp,
+            params_fp_exact,
+            params_fp_fast,
             fleet_fp,
             session_top_k: search.top_k,
+            default_mode,
+            auto_mode,
             devices,
             cfg,
         });
@@ -589,10 +654,11 @@ fn handle_search(req: protocol::SearchRequest, shared: &Shared) -> String {
     }
     let codes = crate::alphabet::encode(req.seq.as_bytes());
     let top_k = req.top_k.unwrap_or(shared.session_top_k).min(shared.session_top_k);
+    let mode = shared.resolve_mode(req.mode);
     let key = CacheKey {
         query_digest: fnv1a(&codes),
         index_generation: shared.generation,
-        params_fingerprint: shared.params_fp,
+        params_fingerprint: shared.params_fp(mode),
     };
 
     // bind the lookup so the cache guard drops before JSON serialization
@@ -612,6 +678,7 @@ fn handle_search(req: protocol::SearchRequest, shared: &Shared) -> String {
         query_id: req.query_id.clone(),
         codes,
         top_k,
+        mode,
         cache_key: (shared.cfg.cache_entries > 0).then_some(key),
         deadline: now + Duration::from_millis(deadline_ms),
         enqueued: now,
@@ -663,7 +730,12 @@ fn coalescer_loop(
         let probes = crate::tune::probe_batch(256.min(shared.cfg.max_query_len), 4);
         let warmup = session.config.tune.warmup_batches.max(1);
         for _ in 0..warmup {
-            if session.search_batch(factory, &probes).is_err() {
+            // probes always run *exact*: only exact SW batches feed the
+            // tuner's cells/sec estimator (the funnel's survivor-sized
+            // batches would poison the calibration), so an exact warmup
+            // is what actually charges the rate model — whatever mode
+            // the daemon serves by default
+            if session.search_batch_mode(factory, &probes, SearchMode::Exact).is_err() {
                 break; // a backend that can't run probes will also fail requests
             }
         }
@@ -704,6 +776,28 @@ fn run_batch(
     }
     shared.metrics.record_batch(live.len());
 
+    // fast and exact requests run different pipelines (funnel vs full
+    // SW), so a mixed batch splits into per-mode groups. In practice a
+    // deployment sees one mode; the split is the correctness backstop
+    // for mixed clients — and it keeps the dedupe map mode-pure, so a
+    // fast result can never be replayed to an exact request.
+    let (fast, exact): (Vec<Pending>, Vec<Pending>) =
+        live.into_iter().partition(|p| p.mode == SearchMode::Fast);
+    for (mode, group) in [(SearchMode::Exact, exact), (SearchMode::Fast, fast)] {
+        if !group.is_empty() {
+            run_mode_group(shared, session, factory, mode, group);
+        }
+    }
+}
+
+/// Dedupe, score and answer one same-mode group of live requests.
+fn run_mode_group(
+    shared: &Shared,
+    session: &SearchSession<'_>,
+    factory: &dyn AlignerFactory,
+    mode: SearchMode,
+    live: Vec<Pending>,
+) {
     // coalesce identical in-flight queries into one lane set
     let mut uniq: Vec<(String, Vec<u8>)> = Vec::new();
     let mut index_of: HashMap<&[u8], usize> = HashMap::new();
@@ -716,8 +810,20 @@ fn run_batch(
         slot.push(i);
     }
 
-    match session.search_batch(factory, &uniq) {
+    match session.search_batch_mode(factory, &uniq, mode) {
         Ok(results) => {
+            for r in &results {
+                if let Some(pf) = r.prefilter {
+                    shared
+                        .metrics
+                        .prefilter_candidates
+                        .fetch_add(pf.candidates, Ordering::Relaxed);
+                    shared
+                        .metrics
+                        .prefilter_survivors
+                        .fetch_add(pf.survivors, Ordering::Relaxed);
+                }
+            }
             let payloads: Vec<Vec<HitPayload>> = results
                 .iter()
                 .map(|r| {
@@ -781,6 +887,21 @@ fn stats_json(shared: &Shared) -> Json {
         "cache_entries".to_string(),
         Json::Num(shared.cache.lock().unwrap().len() as f64),
     );
+    // the session default (auto pre-resolved against the index), plus
+    // cumulative funnel accounting across every fast-mode query served
+    s.insert("mode".to_string(), Json::Str(shared.default_mode.name().to_string()));
+    {
+        let cand = m.prefilter_candidates.load(Ordering::Relaxed);
+        let surv = m.prefilter_survivors.load(Ordering::Relaxed);
+        let mut pf = BTreeMap::new();
+        pf.insert("candidates".to_string(), Json::Num(cand as f64));
+        pf.insert("survivors".to_string(), Json::Num(surv as f64));
+        pf.insert(
+            "survivor_fraction".to_string(),
+            Json::Num(if cand > 0 { surv as f64 / cand as f64 } else { 0.0 }),
+        );
+        s.insert("prefilter".to_string(), Json::Obj(pf));
+    }
     s.insert("batch_size".to_string(), summary_json(m.batch_size_summary()));
     s.insert("latency_us".to_string(), summary_json(m.latency_summary()));
     // the device fleet: per-device cumulative counters + live queue
@@ -877,28 +998,19 @@ mod tests {
         use crate::align::EngineKind;
         use crate::coordinator::NativeFactory;
         let sc = Scoring::swaphi_default();
-        let base = params_fingerprint(&sc, Precision::Auto, 10, &NativeFactory(EngineKind::InterSP));
-        assert_eq!(
-            base,
-            params_fingerprint(&sc, Precision::Auto, 10, &NativeFactory(EngineKind::InterSP))
-        );
+        let sp = NativeFactory(EngineKind::InterSP);
+        let base = params_fingerprint(&sc, Precision::Auto, SearchMode::Exact, 10, &sp);
+        assert_eq!(base, params_fingerprint(&sc, Precision::Auto, SearchMode::Exact, 10, &sp));
+        assert_ne!(base, params_fingerprint(&sc, Precision::I32, SearchMode::Exact, 10, &sp));
+        assert_ne!(base, params_fingerprint(&sc, Precision::Auto, SearchMode::Exact, 11, &sp));
         assert_ne!(
             base,
-            params_fingerprint(&sc, Precision::I32, 10, &NativeFactory(EngineKind::InterSP))
+            params_fingerprint(&sc, Precision::Auto, SearchMode::Exact, 10, &NativeFactory(EngineKind::InterQP))
         );
-        assert_ne!(
-            base,
-            params_fingerprint(&sc, Precision::Auto, 11, &NativeFactory(EngineKind::InterSP))
-        );
-        assert_ne!(
-            base,
-            params_fingerprint(&sc, Precision::Auto, 10, &NativeFactory(EngineKind::InterQP))
-        );
+        // heuristic-filtered results must never alias exact ones
+        assert_ne!(base, params_fingerprint(&sc, Precision::Auto, SearchMode::Fast, 10, &sp));
         let pam = Scoring::new("PAM250", 10, 2).unwrap();
-        assert_ne!(
-            base,
-            params_fingerprint(&pam, Precision::Auto, 10, &NativeFactory(EngineKind::InterSP))
-        );
+        assert_ne!(base, params_fingerprint(&pam, Precision::Auto, SearchMode::Exact, 10, &sp));
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! tolerant of unknown fields, so additive protocol evolution does not
 //! break older servers.
 
+use crate::coordinator::SearchMode;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 
@@ -57,6 +58,10 @@ pub struct SearchRequest {
     /// Per-request deadline; expired requests are dropped by the
     /// coalescer with [`E_DEADLINE`] instead of being searched.
     pub deadline_ms: Option<u64>,
+    /// Search-mode override (`"exact"` / `"fast"` / `"auto"`); `None`
+    /// uses the server session's configured default. Fast and exact
+    /// results are cached under distinct keys, so they never alias.
+    pub mode: Option<SearchMode>,
 }
 
 /// Parse one request line. The error carries the code the reply must use.
@@ -103,6 +108,16 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
                         as u64,
                 ),
             };
+            let mode = match j.get("mode") {
+                None => None,
+                Some(m) => Some(
+                    m.as_str()
+                        .and_then(SearchMode::parse)
+                        .ok_or_else(|| {
+                            ProtoError::bad(format!("unknown mode {m} (exact|fast|auto)"))
+                        })?,
+                ),
+            };
             Ok(Request::Search(SearchRequest {
                 id,
                 query_id: j
@@ -113,6 +128,7 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
                 seq: seq.to_string(),
                 top_k,
                 deadline_ms,
+                mode,
             }))
         }
         other => Err(ProtoError::bad(format!(
@@ -240,9 +256,33 @@ mod tests {
                 assert_eq!(s.seq, "MKT");
                 assert_eq!(s.top_k, Some(3));
                 assert_eq!(s.deadline_ms, Some(500));
+                assert_eq!(s.mode, None, "mode defaults to the server session's");
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn parses_mode_field() {
+        for (spelling, expect) in [
+            ("exact", SearchMode::Exact),
+            ("fast", SearchMode::Fast),
+            ("auto", SearchMode::Auto),
+        ] {
+            let r = parse_request(&format!(
+                r#"{{"v":1,"op":"search","query":"MKT","mode":"{spelling}"}}"#
+            ))
+            .unwrap();
+            match r {
+                Request::Search(s) => assert_eq!(s.mode, Some(expect), "{spelling}"),
+                other => panic!("{other:?}"),
+            }
+        }
+        // strict validation names the valid set
+        let err =
+            parse_request(r#"{"v":1,"op":"search","query":"M","mode":"turbo"}"#).unwrap_err();
+        assert_eq!(err.code, E_BAD_REQUEST);
+        assert!(err.message.contains("exact|fast|auto"), "{}", err.message);
     }
 
     #[test]
@@ -270,6 +310,8 @@ mod tests {
             (r#"{"v":1,"op":"search","query":""}"#, E_BAD_REQUEST),
             (r#"{"v":1,"op":"search","query":"M","top_k":0}"#, E_BAD_REQUEST),
             (r#"{"v":1,"op":"search","query":"M","top_k":-2}"#, E_BAD_REQUEST),
+            (r#"{"v":1,"op":"search","query":"M","mode":"nope"}"#, E_BAD_REQUEST),
+            (r#"{"v":1,"op":"search","query":"M","mode":3}"#, E_BAD_REQUEST),
         ] {
             let err = parse_request(line).unwrap_err();
             assert_eq!(err.code, code, "{line}");

@@ -16,6 +16,7 @@
 //! file, but across connections.
 
 use super::cache::CacheKey;
+use crate::coordinator::SearchMode;
 use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::sync::{Condvar, Mutex};
@@ -31,6 +32,10 @@ pub struct Pending {
     pub codes: Vec<u8>,
     /// Effective hits wanted (already clamped to the session top_k).
     pub top_k: usize,
+    /// Resolved search mode (never `Auto` — the admission path resolves
+    /// `auto` against the index size, so the batch runner and the cache
+    /// key agree on what actually executes).
+    pub mode: SearchMode,
     /// Cache slot to fill after scoring (None when the cache is off).
     pub cache_key: Option<CacheKey>,
     /// Drop (with `deadline_exceeded`) if not scheduled by this instant.
@@ -142,6 +147,7 @@ mod tests {
                 query_id: tag.to_string(),
                 codes: vec![1, 2, 3],
                 top_k: 5,
+                mode: SearchMode::Exact,
                 cache_key: None,
                 deadline: now + Duration::from_secs(60),
                 enqueued: now,

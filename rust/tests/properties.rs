@@ -498,6 +498,152 @@ fn prop_calibrated_sim_converges_over_random_true_rates() {
 }
 
 #[test]
+fn prop_fast_mode_recalls_exact_topk_on_planted_families() {
+    // The funnel's sensitivity contract, as a property over random
+    // workloads: plant a homolog family (2..24% per-residue divergence)
+    // for each query into an otherwise random database, and the
+    // fast-mode top-k must recover >= 0.95 of the exact top-k — the
+    // same floor the CI bench gate enforces — for any fleet shape.
+    check("fast-mode recall of exact top-k >= 0.95", 8, |rng| {
+        use swaphi::coordinator::{NativeFactory, SearchConfig, SearchSession};
+        use swaphi::db::chunk::ChunkPlanConfig;
+        use swaphi::db::synth::{plant_homolog, random_codes};
+        const FAMILY: usize = 12;
+        let top_k = 10usize;
+        let n = rng.range(120, 220);
+        let mut db = generate(&SynthSpec::tiny(n, rng.next_u64()));
+        let nq = rng.range(1, 3);
+        let queries: Vec<(String, Vec<u8>)> = (0..nq)
+            .map(|q| {
+                let motif = random_codes(rng, rng.range(48, 96));
+                for j in 0..FAMILY {
+                    let host = &mut db.seqs[q * FAMILY + j].codes;
+                    plant_homolog(rng, host, &motif, 0.02 * (j + 1) as f64);
+                }
+                (format!("q{q}"), motif)
+            })
+            .collect();
+        let idx = Index::build(db);
+        let session = SearchSession::new(
+            &idx,
+            Scoring::swaphi_default(),
+            SearchConfig {
+                top_k,
+                devices: rng.range(1, 4),
+                steal: rng.below(2) == 1,
+                sim: None,
+                chunk: ChunkPlanConfig { target_padded_residues: 2048 },
+                ..Default::default()
+            },
+        );
+        let factory = NativeFactory(EngineKind::InterSP);
+        let exact = session.search_batch_exact(&factory, &queries).unwrap();
+        let fast = session.search_batch_fast(&factory, &queries).unwrap();
+        for (e, f) in exact.iter().zip(&fast) {
+            prop_assert(e.prefilter.is_none(), "exact result carries prefilter stats")?;
+            let pf = f.prefilter.as_ref();
+            prop_assert(pf.is_some(), "fast result missing prefilter stats")?;
+            let pf = pf.unwrap();
+            prop_assert(
+                pf.survivors <= pf.candidates,
+                format!("{} survivors > {} candidates", pf.survivors, pf.candidates),
+            )?;
+            let exact_ids: std::collections::HashSet<&str> =
+                e.hits.iter().map(|h| h.id.as_str()).collect();
+            let recovered =
+                f.hits.iter().filter(|h| exact_ids.contains(h.id.as_str())).count();
+            let recall = recovered as f64 / exact_ids.len() as f64;
+            prop_assert(
+                recall >= 0.95,
+                format!("{}: fast recall {recall} < 0.95 ({recovered}/{})", e.query_id, exact_ids.len()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_exact_mode_bit_identical_to_prefunnel_pipeline() {
+    // `--mode exact` is the pre-funnel pipeline, bit-for-bit, for ANY
+    // fleet shape — even when the session itself is configured to
+    // default to the fast funnel, a per-batch exact override must
+    // reproduce the unsharded exact hit lists exactly (ids, lengths,
+    // scores, order), with no prefilter accounting attached.
+    check("mode=exact == pre-funnel pipeline for any fleet", 10, |rng| {
+        use swaphi::coordinator::{
+            NativeFactory, SearchConfig, SearchMode, SearchSession,
+        };
+        use swaphi::db::chunk::ChunkPlanConfig;
+        let n = rng.range(5, 60);
+        let idx = Index::build(random_db(rng, n, 70));
+        let sc = Scoring::swaphi_default();
+        let nq = rng.range(1, 4);
+        let queries: Vec<(String, Vec<u8>)> =
+            (0..nq).map(|i| (format!("q{i}"), rand_seq(rng, 1, 45))).collect();
+        let factory = NativeFactory(EngineKind::InterSP);
+        let top_k = rng.range(1, 9);
+        let mk = |devices, steal, rates: Vec<f64>, mode| {
+            SearchSession::new(
+                &idx,
+                sc.clone(),
+                SearchConfig {
+                    devices,
+                    steal,
+                    rates,
+                    top_k,
+                    mode,
+                    sim: None,
+                    chunk: ChunkPlanConfig { target_padded_residues: 1024 },
+                    ..Default::default()
+                },
+            )
+        };
+        // the pre-funnel pipeline: unsharded, exact, streaming top-k
+        let base = mk(1, true, Vec::new(), SearchMode::Exact)
+            .search_batch_exact(&factory, &queries)
+            .unwrap();
+        let devices = rng.range(1, 6);
+        let steal = rng.below(2) == 1;
+        let rates: Vec<f64> = if rng.below(2) == 1 {
+            (0..devices).map(|_| 0.2 + 1.8 * rng.f64()).collect()
+        } else {
+            Vec::new()
+        };
+        // a fast-defaulting session: the override, not the default,
+        // must decide what runs
+        let session = mk(devices, steal, rates.clone(), SearchMode::Fast);
+        let exact = session
+            .search_batch_mode(&factory, &queries, SearchMode::Exact)
+            .unwrap();
+        for (a, b) in exact.iter().zip(&base) {
+            prop_assert(a.prefilter.is_none(), "exact override ran the prefilter")?;
+            let ah: Vec<(usize, &str, usize, i32)> =
+                a.hits.iter().map(|h| (h.seq_index, h.id.as_str(), h.len, h.score)).collect();
+            let bh: Vec<(usize, &str, usize, i32)> =
+                b.hits.iter().map(|h| (h.seq_index, h.id.as_str(), h.len, h.score)).collect();
+            prop_eq(
+                ah,
+                bh,
+                &format!("d={devices} steal={steal} rates={rates:?} {}", a.query_id),
+            )?;
+        }
+        // and an exact-configured session's plain search_batch is the
+        // same pipeline (delegation identity)
+        let plain = mk(devices, steal, rates.clone(), SearchMode::Exact)
+            .search_batch(&factory, &queries)
+            .unwrap();
+        for (a, b) in plain.iter().zip(&base) {
+            let ah: Vec<(usize, i32)> =
+                a.hits.iter().map(|h| (h.seq_index, h.score)).collect();
+            let bh: Vec<(usize, i32)> =
+                b.hits.iter().map(|h| (h.seq_index, h.score)).collect();
+            prop_eq(ah, bh, &format!("search_batch d={devices} {}", a.query_id))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_topk_consistency() {
     check("topk is consistent with scores", 20, |rng| {
         use swaphi::coordinator::{Coordinator, NativeFactory, SearchConfig};
