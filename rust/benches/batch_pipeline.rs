@@ -107,7 +107,44 @@ fn main() {
             if ki == 0 { "," } else { "" }
         ));
     }
-    json.push_str("  }\n}\n");
+    json.push_str("  },\n");
+
+    // --- span-recording overhead: same workload, recorder off vs on --
+    // The disabled path is one relaxed atomic load per span site; this
+    // records the measured enabled-vs-disabled delta (ungated — the CI
+    // baseline checker only compares the engine table above) and emits
+    // a Perfetto-loadable trace of the enabled run.
+    let trace_cfg = SearchConfig {
+        sim: None,
+        chunk: ChunkPlanConfig { target_padded_residues: 1 << 16 },
+        ..Default::default()
+    };
+    let factory = NativeFactory(EngineKind::InterSP);
+    let plain = SearchSession::new(&idx, sc.clone(), trace_cfg.clone());
+    let disabled = measure(1, 3, || plain.search_batch(&factory, &queries).unwrap().len());
+    let mut traced = SearchSession::new(&idx, sc.clone(), trace_cfg);
+    let recorder = std::sync::Arc::new(swaphi::trace::TraceRecorder::enabled(1 << 20));
+    traced.set_trace(std::sync::Arc::clone(&recorder));
+    let enabled = measure(1, 3, || traced.search_batch(&factory, &queries).unwrap().len());
+    let overhead_pct = (enabled.median / disabled.median - 1.0) * 100.0;
+    let spans = recorder.spans();
+    println!(
+        "\ntrace overhead: disabled {:.3}s -> enabled {:.3}s ({overhead_pct:+.2}%), {} spans retained",
+        disabled.median,
+        enabled.median,
+        spans.len()
+    );
+    json.push_str(&format!(
+        "  \"trace_overhead\": {{\"disabled_s\": {:.6}, \"enabled_s\": {:.6}, \
+         \"overhead_pct\": {overhead_pct:.3}, \"spans\": {}}}\n",
+        disabled.median,
+        enabled.median,
+        spans.len()
+    ));
+    json.push_str("}\n");
+    if std::fs::write("trace.json", swaphi::trace::chrome_trace_json(&spans)).is_ok() {
+        println!("wrote trace.json ({} spans)", spans.len());
+    }
     table.emit("batch_pipeline");
     if std::fs::write("BENCH_batch.json", &json).is_ok() {
         println!("\nwrote BENCH_batch.json");

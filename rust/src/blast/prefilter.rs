@@ -47,20 +47,29 @@ pub fn score_chunk(
     out: &mut Vec<(usize, i32)>,
 ) {
     let mut bs = BlastStats::default();
+    let mut candidates = 0u64;
     for p in chunk.profile_start..chunk.profile_end {
         let profile = &index.profiles[p];
         for lane in 0..profile.used {
             let seq = profile.members[lane];
             let score = query.score(&index.seqs[seq].codes, sc, &mut bs, scratch);
-            stats.candidates += 1;
+            candidates += 1;
             if score > 0 {
                 out.push((seq, score));
             }
         }
     }
-    stats.word_hits += bs.word_hits;
-    stats.triggers += bs.triggers;
-    stats.cells_visited += bs.cells_visited;
+    // one fold through the shared accounting type — the same
+    // PrefilterStats::add the per-thread shards, the server's metrics
+    // registry (swaphi_prefilter_* counters) and the stats op all merge
+    // through, so the funnel's numbers cannot drift between surfaces
+    stats.add(PrefilterStats {
+        candidates,
+        survivors: 0,
+        word_hits: bs.word_hits,
+        triggers: bs.triggers,
+        cells_visited: bs.cells_visited,
+    });
 }
 
 /// Reduce one query's seeded hits to the final survivor set (ascending

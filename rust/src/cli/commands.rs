@@ -134,6 +134,7 @@ pub fn cmd_search(mut args: Args) -> anyhow::Result<i32> {
     let index_path = args.require("index")?;
     let query_path = args.require("query")?;
     let calibrate = args.take_bool("calibrate");
+    let trace_out = args.take("trace-out");
     let mut cfg = load_config(&mut args)?;
     args.finish()?;
     if calibrate {
@@ -145,7 +146,14 @@ pub fn cmd_search(mut args: Args) -> anyhow::Result<i32> {
     let view = IndexView::open(&index_path)?;
     let index = view.to_index();
     let factory = make_factory(&cfg)?;
-    let session = SearchSession::new(&index, cfg.scoring.clone(), cfg.search_config());
+    let mut session = SearchSession::new(&index, cfg.scoring.clone(), cfg.search_config());
+    // --trace-out: record spans for this one batch and write them as a
+    // Chrome trace-event document (loadable by Perfetto) on the way out
+    let recorder = trace_out.as_ref().map(|_| {
+        let r = std::sync::Arc::new(crate::trace::TraceRecorder::enabled(1 << 16));
+        session.set_trace(std::sync::Arc::clone(&r));
+        r
+    });
 
     // multi-query FASTA batch: all queries share one session (one chunk
     // plan, per-thread aligners/workspaces amortized across the batch)
@@ -253,6 +261,16 @@ pub fn cmd_search(mut args: Args) -> anyhow::Result<i32> {
             session.device_set().reshards(),
         )?;
     }
+    if let (Some(path), Some(recorder)) = (&trace_out, &recorder) {
+        let spans = recorder.spans();
+        std::fs::write(path, crate::trace::chrome_trace_json(&spans))
+            .map_err(|e| anyhow::anyhow!("write {path}: {e}"))?;
+        writeln!(
+            report,
+            "\ntrace: {} spans -> {path} (open at https://ui.perfetto.dev)",
+            spans.len()
+        )?;
+    }
     print!("{report}");
     Ok(0)
 }
@@ -318,12 +336,21 @@ pub fn cmd_serve(mut args: Args) -> anyhow::Result<i32> {
 
     let index_path = args.require("index")?;
     let listen = args.take("listen");
+    let slow_query_ms = match args.take("slow-query-ms") {
+        None => None,
+        Some(v) => Some(
+            v.parse::<u64>().map_err(|e| anyhow::anyhow!("--slow-query-ms {v:?}: {e}"))?,
+        ),
+    };
     let cfg = load_config(&mut args)?;
     args.finish()?;
 
     let mut server_cfg = cfg.server_config();
     if let Some(listen) = listen {
         server_cfg.listen = listen;
+    }
+    if let Some(ms) = slow_query_ms {
+        server_cfg.slow_query_ms = ms;
     }
     server_cfg.handle_signals = true;
 
@@ -363,17 +390,16 @@ pub fn cmd_serve(mut args: Args) -> anyhow::Result<i32> {
 
     handle.wait()?;
     let m = handle.metrics();
-    use std::sync::atomic::Ordering::Relaxed;
     println!(
         "swaphi serve: drained — served {} requests ({} rejected, {} expired), {} batches \
          (max size {}), cache {} hits / {} misses",
-        m.admitted.load(Relaxed),
-        m.rejected.load(Relaxed),
-        m.expired.load(Relaxed),
-        m.batches.load(Relaxed),
+        m.admitted.get(),
+        m.rejected.get(),
+        m.expired.get(),
+        m.batches.get(),
         m.max_batch_size(),
-        m.cache_hits.load(Relaxed),
-        m.cache_misses.load(Relaxed),
+        m.cache_hits.get(),
+        m.cache_misses.get(),
     );
     Ok(0)
 }
@@ -382,6 +408,8 @@ pub fn cmd_query(mut args: Args) -> anyhow::Result<i32> {
     let connect = args.take_or("connect", "127.0.0.1:7878");
     let ping = args.take_bool("ping");
     let stats = args.take_bool("stats");
+    let metrics = args.take_bool("metrics");
+    let trace = args.take_bool("trace");
     let top_k = match args.take("top-k") {
         None => None,
         Some(v) => Some(v.parse::<usize>().map_err(|e| anyhow::anyhow!("--top-k {v:?}: {e}"))?),
@@ -394,7 +422,8 @@ pub fn cmd_query(mut args: Args) -> anyhow::Result<i32> {
                 .ok_or_else(|| anyhow::anyhow!("unknown mode {v:?} (exact|fast|auto)"))?,
         ),
     };
-    let query_path = if ping || stats { args.take("query") } else { Some(args.require("query")?) };
+    let informational = ping || stats || metrics || trace;
+    let query_path = if informational { args.take("query") } else { Some(args.require("query")?) };
     args.finish()?;
 
     let mut client = crate::server::client::Client::connect(&connect)?;
@@ -408,6 +437,18 @@ pub fn cmd_query(mut args: Args) -> anyhow::Result<i32> {
         let resp = client.stats()?;
         anyhow::ensure!(crate::server::client::is_ok(&resp), "stats failed: {resp}");
         println!("{}", resp.get("stats").unwrap_or(&resp));
+        return Ok(0);
+    }
+    if metrics {
+        // raw Prometheus text, suitable for piping into a scraper check
+        print!("{}", client.metrics()?);
+        return Ok(0);
+    }
+    if trace {
+        let resp = client.trace(None)?;
+        anyhow::ensure!(crate::server::client::is_ok(&resp), "trace failed: {resp}");
+        // raw span array, one JSON document — machine-readable on purpose
+        println!("{}", resp.get("spans").unwrap_or(&resp));
         return Ok(0);
     }
 
@@ -624,6 +665,43 @@ mod tests {
     #[test]
     fn devinfo_runs() {
         assert_eq!(run("devinfo").unwrap(), 0);
+    }
+
+    #[test]
+    fn search_trace_out_writes_a_chrome_trace() {
+        let fasta = tmp("db7.fasta");
+        let idx = tmp("db7.idx");
+        let qf = tmp("q7.fasta");
+        let trace = tmp("trace7.json");
+        assert_eq!(
+            run(&format!("synth --preset tiny --n 48 --seed 21 --out {fasta}")).unwrap(),
+            0
+        );
+        assert_eq!(run(&format!("index --in {fasta} --out {idx}")).unwrap(), 0);
+        std::fs::write(&qf, ">q1\nMKTAYIAKQRQISFVKSHFSRQLEERLGLIEVQ\n").unwrap();
+        // fast mode on a skewed 2-device fleet: the trace must hold
+        // device lanes for both devices and distinct funnel legs
+        assert_eq!(
+            run(&format!(
+                "search --index {idx} --query {qf} --mode fast \
+                 --device-rates 1.0,0.25 --trace-out {trace} \
+                 --set sim.enabled=false --set search.chunk_residues=1024"
+            ))
+            .unwrap(),
+            0
+        );
+        let doc =
+            crate::util::json::Json::parse(&std::fs::read_to_string(&trace).unwrap()).unwrap();
+        let events = doc.get("traceEvents").and_then(crate::util::json::Json::as_arr).unwrap();
+        assert!(!events.is_empty());
+        let names: Vec<&str> =
+            events.iter().filter_map(|e| e.get("name").and_then(|n| n.as_str())).collect();
+        assert!(names.contains(&"prefilter_leg"), "{names:?}");
+        assert!(names.contains(&"rescore_leg"), "{names:?}");
+        assert!(names.contains(&"chunk"), "{names:?}");
+        for f in [fasta, idx, qf, trace] {
+            let _ = std::fs::remove_file(f);
+        }
     }
 
     #[test]

@@ -95,6 +95,9 @@ COMMANDS:
               [--calibrate]   time every work item, report the measured
                 per-device rate vector with the results, and re-shard to
                 it at batch barriers (forces [tune] enabled = true)
+              [--trace-out <file>]   record per-request/device/chunk
+                spans for this batch and write a Chrome trace-event JSON
+                document, loadable at https://ui.perfetto.dev
   serve     run the resident search service: load the index once, keep a
             warm session, coalesce concurrent client requests into
             batches, cache repeat queries (line-delimited JSON protocol,
@@ -108,14 +111,22 @@ COMMANDS:
                 warmup probe batches on index load, then drift detection
                 + live re-sharding between coalesced batches (`stats`
                 reports rate_configured/rate_calibrated/resharded_total)
+              [--slow-query-ms <n>]   log one structured JSON line to
+                stderr (trace id, mode, batch size, device timeline) for
+                every request at or over the threshold (0 = off)
+              --set server.trace_ring=<n> sizes the span ring behind the
+                `trace` op (default 4096; 0 disables span recording)
               e.g.  swaphi serve --index db.idx --listen 127.0.0.1:7878
   query     client for a running `serve` daemon; each FASTA record is one
             request on one connection
               --connect <host:port | unix:/path>  --query <fasta>
               [--top-k <n>]  [--timeout-ms <n>]  [--mode exact|fast|auto]
               [--ping]  [--stats]
+              [--metrics]   print the server's Prometheus text exposition
+              [--trace]     print the server's recent spans as JSON
               e.g.  swaphi query --connect 127.0.0.1:7878 --query q.fasta
               e.g.  swaphi query --connect 127.0.0.1:7878 --stats
+              e.g.  swaphi query --connect 127.0.0.1:7878 --metrics
   calibrate measure per-device throughput on synthetic probe batches and
             print a rate vector for --device-rates / [devices] rates —
             the offline form of the daemon's self-tuning loop ([tune]

@@ -308,6 +308,8 @@ pub const KNOWN_KEYS: &[&str] = &[
     "server.default_deadline_ms",
     "server.max_query_len",
     "server.max_connections",
+    "server.slow_query_ms",
+    "server.trace_ring",
 ];
 
 /// Fully-typed SWAPHI configuration.
@@ -356,6 +358,11 @@ pub struct SwaphiConfig {
     pub server_default_deadline_ms: u64,
     pub server_max_query_len: usize,
     pub server_max_connections: usize,
+    /// Slow-query log threshold in milliseconds (0 disables the log).
+    pub server_slow_query_ms: u64,
+    /// Span-ring capacity behind the daemon's `trace` op (0 disables
+    /// span recording; trace ids are still minted and echoed).
+    pub server_trace_ring: usize,
 }
 
 impl SwaphiConfig {
@@ -472,6 +479,8 @@ impl SwaphiConfig {
                 as u64,
             server_max_query_len: raw.int_or("server.max_query_len", 50_000)?.max(1) as usize,
             server_max_connections: raw.int_or("server.max_connections", 512)?.max(1) as usize,
+            server_slow_query_ms: raw.int_or("server.slow_query_ms", 0)?.max(0) as u64,
+            server_trace_ring: raw.int_or("server.trace_ring", 4096)?.max(0) as usize,
         })
     }
 
@@ -491,6 +500,8 @@ impl SwaphiConfig {
             max_query_len: self.server_max_query_len,
             max_connections: self.server_max_connections,
             handle_signals: false,
+            slow_query_ms: self.server_slow_query_ms,
+            trace_ring: self.server_trace_ring,
         }
     }
 
@@ -851,6 +862,8 @@ mod tests {
         raw.set("server.max_batch", "8").unwrap();
         raw.set("server.batch_window_ms", "20").unwrap();
         raw.set("server.cache_entries", "0").unwrap();
+        raw.set("server.slow_query_ms", "250").unwrap();
+        raw.set("server.trace_ring", "0").unwrap();
         let cfg = SwaphiConfig::from_raw(&raw).unwrap();
         let sc = cfg.server_config();
         assert_eq!(sc.listen, "unix:/tmp/s.sock");
@@ -858,12 +871,16 @@ mod tests {
         assert_eq!(sc.max_batch, 8);
         assert_eq!(sc.batch_window_ms, 20);
         assert_eq!(sc.cache_entries, 0);
+        assert_eq!(sc.slow_query_ms, 250);
+        assert_eq!(sc.trace_ring, 0, "trace ring can be disabled");
         assert!(!sc.handle_signals, "signals are the serve command's call");
         // defaults
         let d = SwaphiConfig::default_config().server_config();
         assert_eq!(d.listen, "127.0.0.1:7878");
         assert_eq!(d.cache_entries, 1024);
         assert_eq!(d.max_connections, 512);
+        assert_eq!(d.slow_query_ms, 0, "slow-query log is off by default");
+        assert_eq!(d.trace_ring, 4096, "span ring is on by default");
     }
 
     #[test]

@@ -103,6 +103,56 @@ struct DeviceCounters {
     lost: AtomicU64,
     /// Current queue depth (gauge; 0 between batches).
     depth: AtomicUsize,
+    /// Microseconds spent executing items of this device's own shard.
+    compute_us: AtomicU64,
+    /// Microseconds spent executing items stolen from other shards.
+    steal_us: AtomicU64,
+    /// Microseconds this device sat idle inside batch walls (batch wall
+    /// minus busy time — the straggler tail it waited out).
+    idle_us: AtomicU64,
+}
+
+/// Cumulative per-device wall-time split — the same compute/idle shape
+/// the deterministic simulator reports
+/// ([`crate::phi::sim::SimReport::device_timeline`]), measured on the
+/// real fleet. All values are microseconds inside batch walls.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeviceTimeline {
+    pub device: usize,
+    /// Time executing the device's own shard items.
+    pub compute_us: u64,
+    /// Time executing items stolen from other devices.
+    pub steal_us: u64,
+    /// Time waiting for the batch barrier (straggler tail).
+    pub idle_us: u64,
+}
+
+impl DeviceTimeline {
+    /// Busy time: compute + executing stolen work.
+    pub fn busy_us(&self) -> u64 {
+        self.compute_us + self.steal_us
+    }
+
+    /// Idle-adjusted utilization: busy ÷ (busy + idle), 0.0 before any
+    /// timed batch has run.
+    pub fn utilization(&self) -> f64 {
+        let total = self.busy_us() + self.idle_us;
+        if total == 0 {
+            0.0
+        } else {
+            self.busy_us() as f64 / total as f64
+        }
+    }
+}
+
+/// The fleet's straggler report: the worst device's idle-adjusted
+/// utilization against the fleet mean. A `worst_utilization` far below
+/// `fleet_mean` means one device drags every batch barrier.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StragglerReport {
+    pub device: usize,
+    pub worst_utilization: f64,
+    pub fleet_mean: f64,
 }
 
 /// Point-in-time view of one device (for stats endpoints and reports).
@@ -163,6 +213,10 @@ pub struct DeviceSet {
     items_per_batch: Mutex<Histogram>,
     /// Steals per device per batch.
     steals_per_batch: Mutex<Histogram>,
+    /// Fast-mode per-leg wall time per batch, microseconds:
+    /// `(prefilter, rescore)` — the funnel's speedup claim, observable
+    /// in production instead of only in benches.
+    legs_us: Mutex<(Histogram, Histogram)>,
 }
 
 impl DeviceSet {
@@ -195,6 +249,10 @@ impl DeviceSet {
             batches: AtomicU64::new(0),
             items_per_batch: Mutex::new(Histogram::exponential(1 << 20)),
             steals_per_batch: Mutex::new(Histogram::exponential(1 << 20)),
+            legs_us: Mutex::new((
+                Histogram::exponential(1 << 32),
+                Histogram::exponential(1 << 32),
+            )),
         }
     }
 
@@ -316,6 +374,8 @@ impl DeviceSet {
             depths,
             batch_executed: (0..self.n_devices()).map(|_| AtomicU64::new(0)).collect(),
             batch_steals: (0..self.n_devices()).map(|_| AtomicU64::new(0)).collect(),
+            batch_compute_us: (0..self.n_devices()).map(|_| AtomicU64::new(0)).collect(),
+            batch_steal_us: (0..self.n_devices()).map(|_| AtomicU64::new(0)).collect(),
         }
     }
 
@@ -346,6 +406,57 @@ impl DeviceSet {
     /// Summary of steals per device per batch.
     pub fn steals_summary(&self) -> HistogramSummary {
         self.steals_per_batch.lock().unwrap().summary()
+    }
+
+    /// Cumulative per-device compute/steal/idle wall-time split.
+    pub fn timeline(&self) -> Vec<DeviceTimeline> {
+        self.counters
+            .iter()
+            .enumerate()
+            .map(|(d, c)| DeviceTimeline {
+                device: d,
+                compute_us: c.compute_us.load(Ordering::Relaxed),
+                steal_us: c.steal_us.load(Ordering::Relaxed),
+                idle_us: c.idle_us.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+
+    /// The straggler report: worst idle-adjusted utilization vs the
+    /// fleet mean. `None` until a timed batch has run (or on a 1-device
+    /// fleet, where "straggler" is meaningless).
+    pub fn straggler(&self) -> Option<StragglerReport> {
+        let timeline = self.timeline();
+        if timeline.len() < 2 || timeline.iter().all(|t| t.busy_us() + t.idle_us == 0) {
+            return None;
+        }
+        let mean =
+            timeline.iter().map(DeviceTimeline::utilization).sum::<f64>() / timeline.len() as f64;
+        let worst = timeline
+            .iter()
+            .min_by(|a, b| a.utilization().partial_cmp(&b.utilization()).unwrap())?;
+        Some(StragglerReport {
+            device: worst.device,
+            worst_utilization: worst.utilization(),
+            fleet_mean: mean,
+        })
+    }
+
+    /// Record one fast-mode batch's per-leg wall times (microseconds).
+    pub fn record_legs(&self, prefilter_us: u64, rescore_us: u64) {
+        let mut legs = self.legs_us.lock().unwrap();
+        legs.0.record(prefilter_us);
+        legs.1.record(rescore_us);
+    }
+
+    /// Per-leg wall-time summaries `(prefilter, rescore)`; `None` until
+    /// a fast-mode batch has run.
+    pub fn legs_summary(&self) -> Option<(HistogramSummary, HistogramSummary)> {
+        let legs = self.legs_us.lock().unwrap();
+        if legs.0.is_empty() {
+            return None;
+        }
+        Some((legs.0.summary(), legs.1.summary()))
     }
 }
 
@@ -379,6 +490,12 @@ pub struct WorkQueues<'a> {
     depths: Vec<AtomicUsize>,
     batch_executed: Vec<AtomicU64>,
     batch_steals: Vec<AtomicU64>,
+    /// Per-device busy time this batch, split by item provenance —
+    /// written once per worker at loop end ([`WorkQueues::record_busy`]),
+    /// folded into the set's cumulative timeline by
+    /// [`WorkQueues::finish_timed`].
+    batch_compute_us: Vec<AtomicU64>,
+    batch_steal_us: Vec<AtomicU64>,
 }
 
 impl WorkQueues<'_> {
@@ -390,8 +507,14 @@ impl WorkQueues<'_> {
     /// could (the profitability guard) — either way its own queue is
     /// empty, so no item is ever abandoned.
     pub fn next(&self, dev: usize) -> Option<WorkItem> {
+        self.next_from(dev).map(|(item, _)| item)
+    }
+
+    /// [`WorkQueues::next`], plus which queue the item came from — the
+    /// tracing layer tags chunk spans as stolen when `from != dev`.
+    pub fn next_from(&self, dev: usize) -> Option<(WorkItem, usize)> {
         if let Some(item) = self.pop(dev, dev) {
-            return Some(item);
+            return Some((item, dev));
         }
         if !self.set.steal {
             return None;
@@ -407,7 +530,7 @@ impl WorkQueues<'_> {
                 dev,
             )?;
             if let Some(item) = self.pop(dev, v) {
-                return Some(item);
+                return Some((item, v));
             }
             // raced with another thief draining the victim between the
             // depth read and the lock; depths only shrink, so rescanning
@@ -482,6 +605,31 @@ impl WorkQueues<'_> {
         if let Some(t) = &self.tuner {
             t.observe(dev, padded_cells, seconds);
         }
+    }
+
+    /// Busy-time hook: device `dev` spent `compute_us` on its own shard
+    /// and `steal_us` on stolen items this batch. Like
+    /// [`WorkQueues::observe`], workers call it **once per batch** with
+    /// their per-item sums — no per-item atomics.
+    pub fn record_busy(&self, dev: usize, compute_us: u64, steal_us: u64) {
+        self.batch_compute_us[dev].fetch_add(compute_us, Ordering::Relaxed);
+        self.batch_steal_us[dev].fetch_add(steal_us, Ordering::Relaxed);
+    }
+
+    /// [`WorkQueues::finish`], folding this batch's busy times into the
+    /// set's cumulative timeline first: each device's idle time is the
+    /// batch wall (`wall_us`, measured around the barrier by the caller)
+    /// minus its busy time — the straggler tail it waited out.
+    pub fn finish_timed(self, wall_us: u64) {
+        for d in 0..self.cursors.len() {
+            let compute = self.batch_compute_us[d].load(Ordering::Relaxed);
+            let steal = self.batch_steal_us[d].load(Ordering::Relaxed);
+            let c = &self.set.counters[d];
+            c.compute_us.fetch_add(compute, Ordering::Relaxed);
+            c.steal_us.fetch_add(steal, Ordering::Relaxed);
+            c.idle_us.fetch_add(wall_us.saturating_sub(compute + steal), Ordering::Relaxed);
+        }
+        self.finish();
     }
 
     /// Fold this batch into the set's histograms (call once, after the
@@ -824,5 +972,85 @@ mod tests {
         let set = DeviceSet::new(&chunks, 2, true);
         let queues = set.queues(0);
         assert!(queues.next(0).is_none());
+    }
+
+    #[test]
+    fn next_from_reports_item_provenance() {
+        let chunks = chunks(200, 2048);
+        let set = DeviceSet::new(&chunks, 2, true);
+        let queues = set.queues(1);
+        // device 0 pops its own front
+        let (_, from) = queues.next_from(0).unwrap();
+        assert_eq!(from, 0);
+        // drain device 0's own queue, then it must steal from 1
+        while queues.depth(0) > 0 {
+            let (_, from) = queues.next_from(0).unwrap();
+            assert_eq!(from, 0);
+        }
+        let (_, from) = queues.next_from(0).unwrap();
+        assert_eq!(from, 1, "empty owner queue must steal from device 1");
+        let snap = set.snapshot();
+        assert_eq!(snap[0].stolen, 1);
+        assert_eq!(snap[1].lost, 1);
+    }
+
+    #[test]
+    fn timeline_folds_busy_and_idle_at_the_barrier() {
+        let chunks = chunks(64, 2048);
+        let set = DeviceSet::new(&chunks, 2, false);
+        let queues = set.queues(1);
+        while queues.next(0).is_some() {}
+        while queues.next(1).is_some() {}
+        // device 0: 800µs own work + 100µs stolen; device 1: 200µs own
+        queues.record_busy(0, 800, 100);
+        queues.record_busy(1, 200, 0);
+        queues.finish_timed(1000);
+        let tl = set.timeline();
+        assert_eq!(tl[0], DeviceTimeline { device: 0, compute_us: 800, steal_us: 100, idle_us: 100 });
+        assert_eq!(tl[1], DeviceTimeline { device: 1, compute_us: 200, steal_us: 0, idle_us: 800 });
+        assert!((tl[0].utilization() - 0.9).abs() < 1e-12);
+        assert!((tl[1].utilization() - 0.2).abs() < 1e-12);
+        let s = set.straggler().expect("2 timed devices must report a straggler");
+        assert_eq!(s.device, 1);
+        assert!((s.worst_utilization - 0.2).abs() < 1e-12);
+        assert!((s.fleet_mean - 0.55).abs() < 1e-12);
+        // a busier-than-wall device never underflows idle
+        let q2 = set.queues(1);
+        while q2.next(0).is_some() {}
+        while q2.next(1).is_some() {}
+        q2.record_busy(0, 2000, 0);
+        q2.finish_timed(1000);
+        assert_eq!(set.timeline()[0].idle_us, 100, "saturating idle accounting");
+    }
+
+    #[test]
+    fn straggler_is_none_without_timing_or_fleet() {
+        let chunks = chunks(64, 2048);
+        // untimed fleet: timeline all zero
+        let set = DeviceSet::new(&chunks, 3, true);
+        assert!(set.straggler().is_none());
+        assert!(set.timeline().iter().all(|t| t.busy_us() + t.idle_us == 0));
+        assert_eq!(set.timeline()[0].utilization(), 0.0);
+        // 1-device fleet: no straggler by definition
+        let solo = DeviceSet::new(&chunks, 1, false);
+        let q = solo.queues(1);
+        while q.next(0).is_some() {}
+        q.record_busy(0, 500, 0);
+        q.finish_timed(600);
+        assert!(solo.straggler().is_none());
+    }
+
+    #[test]
+    fn funnel_leg_summaries_appear_after_first_fast_batch() {
+        let chunks = chunks(64, 2048);
+        let set = DeviceSet::new(&chunks, 2, true);
+        assert!(set.legs_summary().is_none());
+        set.record_legs(3000, 1000);
+        set.record_legs(5000, 3000);
+        let (pre, re) = set.legs_summary().unwrap();
+        assert_eq!(pre.count, 2);
+        assert_eq!(re.count, 2);
+        assert!((pre.mean - 4000.0).abs() < 1e-9);
+        assert_eq!(re.max, 3000);
     }
 }

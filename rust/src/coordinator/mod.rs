@@ -60,6 +60,7 @@ use crate::db::index::Index;
 use crate::matrices::Scoring;
 use crate::metrics::{Cells, PrefilterStats, RescoreStats, Timer};
 use crate::phi::sim::{simulate_search, SimConfig, SimReport};
+use crate::trace::{Span, TraceRecorder};
 use crate::tune::{TuneConfig, Tuner};
 pub use devices::{DeviceSet, DeviceSnapshot, WorkItem};
 use results::{DenseSink, Hit, ScoreSink, ThresholdSink, TopKSink};
@@ -287,6 +288,11 @@ pub struct SearchSession<'a> {
     /// queues and counters. `Arc` so observers (the server's stats
     /// endpoint) can watch the fleet the session schedules onto.
     devices: Arc<DeviceSet>,
+    /// Optional span recorder ([`SearchSession::set_trace`]). When
+    /// attached *and* enabled, workers record per-chunk kernel spans
+    /// into per-thread buffers folded at the batch barrier; otherwise
+    /// every span site is one branch.
+    trace: Option<Arc<TraceRecorder>>,
 }
 
 impl<'a> SearchSession<'a> {
@@ -339,7 +345,33 @@ impl<'a> SearchSession<'a> {
                 config.tune.clone(),
             )));
         }
-        SearchSession { index, scoring, config, chunks, devices }
+        SearchSession { index, scoring, config, chunks, devices, trace: None }
+    }
+
+    /// Attach a span recorder: chunk/device/leg spans from every batch
+    /// this session runs are folded into it (only while it is enabled).
+    pub fn set_trace(&mut self, trace: Arc<TraceRecorder>) {
+        self.trace = Some(trace);
+    }
+
+    /// The recorder, iff attached and currently enabled — span sites
+    /// resolve this once per batch.
+    fn active_trace(&self) -> Option<&TraceRecorder> {
+        self.trace.as_deref().filter(|r| r.is_enabled())
+    }
+
+    /// Per-query trace ids for a batch of `n`: the caller's ids when
+    /// provided (the daemon mints them at protocol admission), freshly
+    /// minted ids when tracing is live without them (the offline
+    /// `--trace-out` path), zeros otherwise (never recorded).
+    fn resolve_traces(&self, n: usize, given: &[u64]) -> Vec<u64> {
+        if given.len() == n {
+            return given.to_vec();
+        }
+        match self.active_trace() {
+            Some(r) => (0..n).map(|_| r.next_trace_id()).collect(),
+            None => vec![0; n],
+        }
     }
 
     pub fn n_chunks(&self) -> usize {
@@ -397,9 +429,24 @@ impl<'a> SearchSession<'a> {
         queries: &[(String, Vec<u8>)],
         mode: SearchMode,
     ) -> anyhow::Result<Vec<QueryResult>> {
+        self.search_batch_traced(factory, queries, mode, &[])
+    }
+
+    /// Like [`search_batch_mode`](Self::search_batch_mode), carrying the
+    /// caller's per-query trace ids (one per query) so the kernel-level
+    /// chunk spans attribute to the protocol requests that admitted
+    /// them. An empty slice mints ids locally when tracing is live.
+    pub fn search_batch_traced(
+        &self,
+        factory: &dyn AlignerFactory,
+        queries: &[(String, Vec<u8>)],
+        mode: SearchMode,
+        trace_ids: &[u64],
+    ) -> anyhow::Result<Vec<QueryResult>> {
+        let traces = self.resolve_traces(queries.len(), trace_ids);
         match self.resolve_mode(mode) {
-            SearchMode::Fast => self.search_batch_fast(factory, queries),
-            _ => self.search_batch_exact(factory, queries),
+            SearchMode::Fast => self.search_batch_fast_traced(factory, queries, &traces),
+            _ => self.search_batch_exact_traced(factory, queries, &traces),
         }
     }
 
@@ -411,9 +458,20 @@ impl<'a> SearchSession<'a> {
         factory: &dyn AlignerFactory,
         queries: &[(String, Vec<u8>)],
     ) -> anyhow::Result<Vec<QueryResult>> {
+        let traces = self.resolve_traces(queries.len(), &[]);
+        self.search_batch_exact_traced(factory, queries, &traces)
+    }
+
+    fn search_batch_exact_traced(
+        &self,
+        factory: &dyn AlignerFactory,
+        queries: &[(String, Vec<u8>)],
+        traces: &[u64],
+    ) -> anyhow::Result<Vec<QueryResult>> {
         let ctxs = self.contexts(queries);
         let timer = Timer::start();
-        let merged = self.run_sharded(factory, &ctxs, || TopKSink::new(self.config.top_k))?;
+        let merged =
+            self.run_sharded(factory, &ctxs, traces, || TopKSink::new(self.config.top_k))?;
         let wall = timer.seconds();
         let total_qlen: usize = ctxs.iter().map(|c| c.len()).sum();
         let mut out = Vec::with_capacity(ctxs.len());
@@ -438,9 +496,31 @@ impl<'a> SearchSession<'a> {
         factory: &dyn AlignerFactory,
         queries: &[(String, Vec<u8>)],
     ) -> anyhow::Result<Vec<QueryResult>> {
+        let traces = self.resolve_traces(queries.len(), &[]);
+        self.search_batch_fast_traced(factory, queries, &traces)
+    }
+
+    fn search_batch_fast_traced(
+        &self,
+        factory: &dyn AlignerFactory,
+        queries: &[(String, Vec<u8>)],
+        traces: &[u64],
+    ) -> anyhow::Result<Vec<QueryResult>> {
         let ctxs = self.contexts(queries);
         let timer = Timer::start();
-        let (seeded, mut stats) = self.run_prefilter(&ctxs)?;
+        // leg 1: the seeded prefilter, on the device fleet
+        let leg_start = self.active_trace().map(|r| r.now_us());
+        let (seeded, mut stats) = self.run_prefilter(&ctxs, traces)?;
+        let prefilter_us = (timer.seconds() * 1e6) as u64;
+        if let (Some(r), Some(s0)) = (self.active_trace(), leg_start) {
+            r.record(
+                Span::new(0, "prefilter_leg", s0, r.now_us().saturating_sub(s0))
+                    .mode("fast")
+                    .items(ctxs.len()),
+            );
+        }
+        // leg 2: exact rescore of the survivor sets
+        let rescore_start = self.active_trace().map(|r| r.now_us());
         let floor = prefilter::survivor_floor(self.config.top_k, self.index.n_seqs());
         let mut ranked = Vec::with_capacity(ctxs.len());
         let mut rescores = Vec::with_capacity(ctxs.len());
@@ -460,6 +540,16 @@ impl<'a> SearchSession<'a> {
             ranked.push(pairs);
         }
         let wall = timer.seconds();
+        let rescore_us = ((wall * 1e6) as u64).saturating_sub(prefilter_us);
+        self.devices.record_legs(prefilter_us, rescore_us);
+        if let (Some(r), Some(s0)) = (self.active_trace(), rescore_start) {
+            let survivors_total = rescores.iter().map(|s| s.i32_lanes as usize).sum();
+            r.record(
+                Span::new(0, "rescore_leg", s0, r.now_us().saturating_sub(s0))
+                    .mode("fast")
+                    .items(survivors_total),
+            );
+        }
         let total_qlen: usize = ctxs.iter().map(|c| c.len()).sum();
         let mut out = Vec::with_capacity(ctxs.len());
         for (q, ctx) in ctxs.iter().enumerate() {
@@ -488,6 +578,7 @@ impl<'a> SearchSession<'a> {
     fn run_prefilter(
         &self,
         ctxs: &[QueryContext],
+        traces: &[u64],
     ) -> anyhow::Result<(Vec<Vec<(usize, i32)>>, Vec<PrefilterStats>)> {
         let nq = ctxs.len();
         let nc = self.chunks.len();
@@ -503,6 +594,7 @@ impl<'a> SearchSession<'a> {
             .collect();
         let queues = self.devices.queues(nq);
         let n_devices = self.devices.n_devices();
+        let batch_start = Instant::now();
         let shard_sets: Vec<Vec<(Vec<(usize, i32)>, PrefilterStats)>> =
             std::thread::scope(|scope| {
                 let handles: Vec<_> = (0..n_devices)
@@ -510,12 +602,17 @@ impl<'a> SearchSession<'a> {
                         let queues = &queues;
                         let compiled = &compiled;
                         scope.spawn(move || {
+                            let tr = self.active_trace();
+                            let mut spans: Vec<Span> = Vec::new();
+                            let mut device_start: Option<u64> = None;
+                            let (mut compute_us, mut steal_us) = (0u64, 0u64);
                             let mut shards: Vec<(Vec<(usize, i32)>, PrefilterStats)> =
                                 (0..nq)
                                     .map(|_| (Vec::new(), PrefilterStats::default()))
                                     .collect();
                             let mut scratch = Vec::new();
-                            while let Some(item) = queues.next(dev) {
+                            while let Some((item, from)) = queues.next_from(dev) {
+                                let start = Instant::now();
                                 let (out, st) = &mut shards[item.query];
                                 prefilter::score_chunk(
                                     &compiled[item.query],
@@ -526,6 +623,41 @@ impl<'a> SearchSession<'a> {
                                     &mut scratch,
                                     out,
                                 );
+                                let us = start.elapsed().as_micros() as u64;
+                                if from == dev {
+                                    compute_us += us;
+                                } else {
+                                    steal_us += us;
+                                }
+                                if let Some(r) = tr {
+                                    let s0 = r.us_of(start);
+                                    device_start.get_or_insert(s0);
+                                    spans.push(
+                                        Span::new(
+                                            traces.get(item.query).copied().unwrap_or(0),
+                                            "chunk",
+                                            s0,
+                                            us,
+                                        )
+                                        .device(dev)
+                                        .chunk(item.chunk)
+                                        .mode("fast")
+                                        .stolen(from != dev),
+                                    );
+                                }
+                            }
+                            queues.record_busy(dev, compute_us, steal_us);
+                            if let Some(r) = tr {
+                                if let Some(s0) = device_start {
+                                    let n = spans.len();
+                                    spans.push(
+                                        Span::new(0, "device", s0, r.now_us().saturating_sub(s0))
+                                            .device(dev)
+                                            .mode("fast")
+                                            .items(n),
+                                    );
+                                }
+                                r.record_many(spans);
                             }
                             shards
                         })
@@ -536,7 +668,7 @@ impl<'a> SearchSession<'a> {
                     .map(|h| h.join().unwrap_or_else(|p| std::panic::resume_unwind(p)))
                     .collect()
             });
-        queues.finish();
+        queues.finish_timed(batch_start.elapsed().as_micros() as u64);
         self.devices.end_batch();
         for set in shard_sets {
             for (q, (shard, st)) in set.into_iter().enumerate() {
@@ -598,7 +730,7 @@ impl<'a> SearchSession<'a> {
         let ctxs = self.contexts(queries);
         let timer = Timer::start();
         let n_seqs = self.index.n_seqs();
-        let merged = self.run_sharded(factory, &ctxs, || DenseSink::new(n_seqs))?;
+        let merged = self.run_sharded(factory, &ctxs, &[], || DenseSink::new(n_seqs))?;
         let wall = timer.seconds();
         let total_qlen: usize = ctxs.iter().map(|c| c.len()).sum();
         let mut out = Vec::with_capacity(ctxs.len());
@@ -627,7 +759,7 @@ impl<'a> SearchSession<'a> {
         min_score: i32,
     ) -> anyhow::Result<Vec<Vec<(usize, i32)>>> {
         let ctxs = self.contexts(queries);
-        let merged = self.run_sharded(factory, &ctxs, || ThresholdSink::new(min_score))?;
+        let merged = self.run_sharded(factory, &ctxs, &[], || ThresholdSink::new(min_score))?;
         Ok(merged.into_iter().map(|(sink, _)| sink.finish()).collect())
     }
 
@@ -746,6 +878,7 @@ impl<'a> SearchSession<'a> {
         &self,
         factory: &dyn AlignerFactory,
         ctxs: &[QueryContext],
+        traces: &[u64],
         mk: F,
     ) -> anyhow::Result<Vec<(S, RescoreStats)>>
     where
@@ -761,6 +894,7 @@ impl<'a> SearchSession<'a> {
         }
         let queues = self.devices.queues(nq);
         let n_devices = self.devices.n_devices();
+        let batch_start = Instant::now();
 
         let shard_sets: Vec<anyhow::Result<Vec<(S, RescoreStats)>>> =
             std::thread::scope(|scope| {
@@ -768,7 +902,7 @@ impl<'a> SearchSession<'a> {
                     .map(|dev| {
                         let queues = &queues;
                         let mk = &mk;
-                        scope.spawn(move || self.worker(factory, ctxs, queues, dev, mk))
+                        scope.spawn(move || self.worker(factory, ctxs, traces, queues, dev, mk))
                     })
                     .collect();
                 handles
@@ -776,7 +910,7 @@ impl<'a> SearchSession<'a> {
                     .map(|h| h.join().unwrap_or_else(|p| std::panic::resume_unwind(p)))
                     .collect()
             });
-        queues.finish();
+        queues.finish_timed(batch_start.elapsed().as_micros() as u64);
         // propagate worker failures BEFORE the calibration barrier: a
         // batch the caller is told failed must not advance the tuner's
         // batch counter / drift streak or trigger a re-shard
@@ -817,6 +951,7 @@ impl<'a> SearchSession<'a> {
         &self,
         factory: &dyn AlignerFactory,
         ctxs: &[QueryContext],
+        traces: &[u64],
         queues: &devices::WorkQueues<'_>,
         dev: usize,
         mk: &(impl Fn() -> S + Sync),
@@ -825,17 +960,23 @@ impl<'a> SearchSession<'a> {
         let mut aligner = factory.make()?;
         let mut shards: Vec<(S, RescoreStats)> =
             (0..ctxs.len()).map(|_| (mk(), RescoreStats::default())).collect();
-        // calibration: time each work item when a tuner is attached,
-        // accumulating locally and folding into the tuner ONCE at the
-        // end of the drain (no locks in the hot loop; same granularity
-        // as the deterministic sim's per-batch clocks). `handicap[dev]`
-        // scales the *observed* seconds only — a deterministic skew
-        // injector for tests/CI (results and real wall time untouched).
-        let timed = queues.tuned();
+        // every item is timed once; the one measurement feeds three
+        // consumers at the barrier — the calibration tuner (handicap-
+        // scaled, when attached), the device compute/steal/idle
+        // timeline, and (when tracing is live) the per-chunk kernel
+        // span — so they can never disagree about the schedule.
+        // `handicap[dev]` scales the *observed* seconds only — a
+        // deterministic skew injector for tests/CI (results and real
+        // wall time untouched).
+        let tuned = queues.tuned();
+        let tr = self.active_trace();
         let handicap = self.config.handicap.get(dev).copied().unwrap_or(1.0);
         let (mut obs_cells, mut obs_seconds) = (0.0f64, 0.0f64);
-        while let Some(item) = queues.next(dev) {
-            let start = timed.then(Instant::now);
+        let (mut compute_us, mut steal_us) = (0u64, 0u64);
+        let mut spans: Vec<Span> = Vec::new();
+        let mut device_start: Option<u64> = None;
+        while let Some((item, from)) = queues.next_from(dev) {
+            let start = Instant::now();
             let (sink, stats) = &mut shards[item.query];
             self.process_chunk(
                 aligner.as_mut(),
@@ -844,13 +985,42 @@ impl<'a> SearchSession<'a> {
                 sink,
                 stats,
             );
-            if let Some(start) = start {
+            let elapsed = start.elapsed();
+            let us = elapsed.as_micros() as u64;
+            if from == dev {
+                compute_us += us;
+            } else {
+                steal_us += us;
+            }
+            if tuned {
                 obs_cells += self.chunks[item.chunk].padded_cells(ctxs[item.query].len()) as f64;
-                obs_seconds += start.elapsed().as_secs_f64() * handicap;
+                obs_seconds += elapsed.as_secs_f64() * handicap;
+            }
+            if let Some(r) = tr {
+                let s0 = r.us_of(start);
+                device_start.get_or_insert(s0);
+                spans.push(
+                    Span::new(traces.get(item.query).copied().unwrap_or(0), "chunk", s0, us)
+                        .device(dev)
+                        .chunk(item.chunk)
+                        .stolen(from != dev),
+                );
             }
         }
-        if timed {
+        if tuned {
             queues.observe(dev, obs_cells, obs_seconds);
+        }
+        queues.record_busy(dev, compute_us, steal_us);
+        if let Some(r) = tr {
+            if let Some(s0) = device_start {
+                let n = spans.len();
+                spans.push(
+                    Span::new(0, "device", s0, r.now_us().saturating_sub(s0))
+                        .device(dev)
+                        .items(n),
+                );
+            }
+            r.record_many(spans);
         }
         Ok(shards)
     }

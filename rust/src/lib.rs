@@ -31,5 +31,6 @@ pub mod phi;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod server;
+pub mod trace;
 pub mod tune;
 pub mod util;

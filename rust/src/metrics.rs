@@ -5,6 +5,10 @@
 //! padding work is overhead, not useful cells, exactly as the paper counts
 //! it), divided by elapsed seconds.
 
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Cell-update accounting for one search run.
@@ -205,6 +209,41 @@ impl Histogram {
         self.max
     }
 
+    /// Bucket upper bounds (exclusive), ascending — the Prometheus
+    /// exposition's `le` boundaries.
+    pub fn bounds(&self) -> &[u64] {
+        &self.bounds
+    }
+
+    /// Per-bucket counts; one longer than [`bounds`](Self::bounds)
+    /// (the final overflow bucket).
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Sum of all recorded values.
+    pub fn sum(&self) -> u128 {
+        self.sum
+    }
+
+    /// Fold `other` into `self`: bucket-wise count addition, totals and
+    /// sums added, max of maxes. Both histograms must have been built
+    /// with the same bucket bounds — merging is how per-thread shard
+    /// histograms fold into the fleet's histogram at the batch barrier,
+    /// and shards of one metric always share a layout.
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(
+            self.bounds, other.bounds,
+            "Histogram::merge requires identical bucket bounds"
+        );
+        for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+
     /// One-line summary row (count/mean/max/p50/p99) — what the server's
     /// stats endpoint reports per histogram.
     pub fn summary(&self) -> HistogramSummary {
@@ -254,6 +293,251 @@ pub fn summarize(rows: &[QueryPerf]) -> (f64, f64) {
     let mean = rows.iter().map(|r| r.gcups()).sum::<f64>() / rows.len() as f64;
     let max = rows.iter().map(|r| r.gcups()).fold(0.0, f64::max);
     (mean, max)
+}
+
+/// Monotonic counter handle. Registered once in a [`Registry`], then
+/// updated with one relaxed atomic op in hot paths — the registry is
+/// only consulted again at snapshot/exposition time.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-value gauge (f64, stored as bits). Same discipline as
+/// [`Counter`]: registered once, set with one atomic store.
+#[derive(Debug)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge(AtomicU64::new(0f64.to_bits()))
+    }
+}
+
+/// A registry-owned histogram. Recording takes the mutex, so hot paths
+/// should shard into per-thread [`Histogram`]s and fold them here via
+/// [`Histogram::merge`] at a barrier.
+pub type SharedHistogram = Arc<Mutex<Histogram>>;
+
+enum MetricCell {
+    Counter(Arc<Counter>),
+    /// Counters of one family split by a label, e.g.
+    /// `swaphi_errors_total{code="overloaded"}`. Kept sorted by label
+    /// value for stable exposition output.
+    Labeled { label_key: &'static str, cells: Vec<(String, Arc<Counter>)> },
+    Gauge(Arc<Gauge>),
+    Histogram(SharedHistogram),
+}
+
+struct MetricEntry {
+    name: String,
+    help: String,
+    cell: MetricCell,
+}
+
+impl MetricEntry {
+    fn kind(&self) -> &'static str {
+        match self.cell {
+            MetricCell::Counter(_) | MetricCell::Labeled { .. } => "counter",
+            MetricCell::Gauge(_) => "gauge",
+            MetricCell::Histogram(_) => "histogram",
+        }
+    }
+}
+
+/// Named counter/gauge/histogram registry: the single source of truth
+/// behind both the `stats` op (shape-compatible JSON) and the `metrics`
+/// op (Prometheus text exposition).
+///
+/// Registration is idempotent — registering an existing name returns
+/// the existing handle, so the server, tests and warmup code can all
+/// ask for `swaphi_batches_total` without coordinating. Updates go
+/// through the returned `Arc` handles and never touch the registry
+/// lock.
+#[derive(Default)]
+pub struct Registry {
+    entries: Mutex<Vec<MetricEntry>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    pub fn counter(&self, name: &str, help: &str) -> Arc<Counter> {
+        let mut entries = self.entries.lock().unwrap();
+        if let Some(e) = entries.iter().find(|e| e.name == name) {
+            match &e.cell {
+                MetricCell::Counter(c) => return Arc::clone(c),
+                _ => panic!("metric {name:?} already registered with a different kind"),
+            }
+        }
+        let c = Arc::new(Counter::default());
+        entries.push(MetricEntry {
+            name: name.to_string(),
+            help: help.to_string(),
+            cell: MetricCell::Counter(Arc::clone(&c)),
+        });
+        c
+    }
+
+    /// A counter in a labeled family: `name{label_key="label_value"}`.
+    /// The family shares one HELP/TYPE block; each distinct label value
+    /// gets its own cell.
+    pub fn labeled_counter(
+        &self,
+        name: &str,
+        help: &str,
+        label_key: &'static str,
+        label_value: &str,
+    ) -> Arc<Counter> {
+        let mut entries = self.entries.lock().unwrap();
+        if let Some(e) = entries.iter_mut().find(|e| e.name == name) {
+            match &mut e.cell {
+                MetricCell::Labeled { label_key: lk, cells } => {
+                    assert_eq!(*lk, label_key, "metric {name:?} label key mismatch");
+                    if let Some((_, c)) = cells.iter().find(|(v, _)| v == label_value) {
+                        return Arc::clone(c);
+                    }
+                    let c = Arc::new(Counter::default());
+                    cells.push((label_value.to_string(), Arc::clone(&c)));
+                    cells.sort_by(|a, b| a.0.cmp(&b.0));
+                    return c;
+                }
+                _ => panic!("metric {name:?} already registered with a different kind"),
+            }
+        }
+        let c = Arc::new(Counter::default());
+        entries.push(MetricEntry {
+            name: name.to_string(),
+            help: help.to_string(),
+            cell: MetricCell::Labeled {
+                label_key,
+                cells: vec![(label_value.to_string(), Arc::clone(&c))],
+            },
+        });
+        c
+    }
+
+    pub fn gauge(&self, name: &str, help: &str) -> Arc<Gauge> {
+        let mut entries = self.entries.lock().unwrap();
+        if let Some(e) = entries.iter().find(|e| e.name == name) {
+            match &e.cell {
+                MetricCell::Gauge(g) => return Arc::clone(g),
+                _ => panic!("metric {name:?} already registered with a different kind"),
+            }
+        }
+        let g = Arc::new(Gauge::default());
+        entries.push(MetricEntry {
+            name: name.to_string(),
+            help: help.to_string(),
+            cell: MetricCell::Gauge(Arc::clone(&g)),
+        });
+        g
+    }
+
+    /// Register a histogram with the given initial (empty) layout.
+    pub fn histogram(&self, name: &str, help: &str, layout: Histogram) -> SharedHistogram {
+        let mut entries = self.entries.lock().unwrap();
+        if let Some(e) = entries.iter().find(|e| e.name == name) {
+            match &e.cell {
+                MetricCell::Histogram(h) => return Arc::clone(h),
+                _ => panic!("metric {name:?} already registered with a different kind"),
+            }
+        }
+        let h = Arc::new(Mutex::new(layout));
+        entries.push(MetricEntry {
+            name: name.to_string(),
+            help: help.to_string(),
+            cell: MetricCell::Histogram(Arc::clone(&h)),
+        });
+        h
+    }
+
+    /// Snapshot of every labeled-counter cell in family `name`, as
+    /// `(label_value, count)` pairs sorted by label value.
+    pub fn labeled_snapshot(&self, name: &str) -> Vec<(String, u64)> {
+        let entries = self.entries.lock().unwrap();
+        match entries.iter().find(|e| e.name == name).map(|e| &e.cell) {
+            Some(MetricCell::Labeled { cells, .. }) => {
+                cells.iter().map(|(v, c)| (v.clone(), c.get())).collect()
+            }
+            _ => Vec::new(),
+        }
+    }
+
+    /// Render the whole registry in the Prometheus text exposition
+    /// format (version 0.0.4): `# HELP` / `# TYPE` per family, then one
+    /// sample line per cell; histograms expand to cumulative
+    /// `_bucket{le=...}` samples plus `_sum` and `_count`.
+    pub fn prometheus_text(&self) -> String {
+        let entries = self.entries.lock().unwrap();
+        let mut out = String::new();
+        for e in entries.iter() {
+            let _ = writeln!(out, "# HELP {} {}", e.name, e.help);
+            let _ = writeln!(out, "# TYPE {} {}", e.name, e.kind());
+            match &e.cell {
+                MetricCell::Counter(c) => {
+                    let _ = writeln!(out, "{} {}", e.name, c.get());
+                }
+                MetricCell::Labeled { label_key, cells } => {
+                    for (value, c) in cells {
+                        let _ = writeln!(out, "{}{{{}=\"{}\"}} {}", e.name, label_key, value, c.get());
+                    }
+                }
+                MetricCell::Gauge(g) => {
+                    let _ = writeln!(out, "{} {}", e.name, fmt_f64(g.get()));
+                }
+                MetricCell::Histogram(h) => {
+                    let h = h.lock().unwrap();
+                    let mut cum = 0u64;
+                    for (i, &count) in h.counts().iter().enumerate() {
+                        cum += count;
+                        let le = match h.bounds().get(i) {
+                            Some(b) => b.to_string(),
+                            None => "+Inf".to_string(),
+                        };
+                        let _ = writeln!(out, "{}_bucket{{le=\"{}\"}} {}", e.name, le, cum);
+                    }
+                    let _ = writeln!(out, "{}_sum {}", e.name, h.sum());
+                    let _ = writeln!(out, "{}_count {}", e.name, h.count());
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Prometheus-friendly float rendering: integral values print without
+/// a fraction, everything else with full precision.
+fn fmt_f64(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
 }
 
 #[cfg(test)]
@@ -397,5 +681,147 @@ mod tests {
     #[test]
     fn empty_summary_is_zero() {
         assert_eq!(summarize(&[]), (0.0, 0.0));
+    }
+
+    #[test]
+    fn merge_is_identity_on_empty_rhs() {
+        let mut h = Histogram::new(vec![10, 100]);
+        for v in [1, 50, 500] {
+            h.record(v);
+        }
+        let before = (h.counts().to_vec(), h.count(), h.sum(), h.max());
+        h.merge(&Histogram::new(vec![10, 100]));
+        assert_eq!((h.counts().to_vec(), h.count(), h.sum(), h.max()), before);
+        // and merging *into* an empty histogram reproduces the source
+        let mut empty = Histogram::new(vec![10, 100]);
+        let mut src = Histogram::new(vec![10, 100]);
+        for v in [1, 50, 500] {
+            src.record(v);
+        }
+        empty.merge(&src);
+        assert_eq!(empty.counts(), src.counts());
+        assert_eq!(empty.count(), src.count());
+        assert_eq!(empty.sum(), src.sum());
+        assert_eq!(empty.max(), src.max());
+    }
+
+    #[test]
+    fn merge_commutes_and_equals_single_stream() {
+        // merging per-thread shards must be indistinguishable from one
+        // thread having recorded everything, in either merge order
+        let values_a = [1u64, 7, 64, 900, 3];
+        let values_b = [2u64, 2000, 8, 8, 77];
+        let layout = || Histogram::exponential(1 << 12);
+        let mut a = layout();
+        let mut b = layout();
+        let mut all = layout();
+        for v in values_a {
+            a.record(v);
+            all.record(v);
+        }
+        for v in values_b {
+            b.record(v);
+            all.record(v);
+        }
+        let mut ab = layout();
+        ab.merge(&a);
+        ab.merge(&b);
+        let mut ba = layout();
+        ba.merge(&b);
+        ba.merge(&a);
+        for merged in [&ab, &ba] {
+            assert_eq!(merged.counts(), all.counts());
+            assert_eq!(merged.count(), all.count());
+            assert_eq!(merged.sum(), all.sum());
+            assert_eq!(merged.max(), all.max());
+            assert_eq!(merged.quantile(0.5), all.quantile(0.5));
+        }
+    }
+
+    #[test]
+    fn merge_of_two_empties_stays_empty() {
+        let mut a = Histogram::exponential(16);
+        a.merge(&Histogram::exponential(16));
+        assert!(a.is_empty());
+        assert_eq!(a.summary().count, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "identical bucket bounds")]
+    fn merge_rejects_mismatched_layouts() {
+        let mut a = Histogram::new(vec![10]);
+        a.merge(&Histogram::new(vec![10, 100]));
+    }
+
+    #[test]
+    fn registry_registration_is_idempotent() {
+        let r = Registry::new();
+        let a = r.counter("swaphi_batches_total", "batches");
+        let b = r.counter("swaphi_batches_total", "batches");
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3);
+        let g1 = r.gauge("swaphi_queue_depth", "depth");
+        let g2 = r.gauge("swaphi_queue_depth", "depth");
+        g1.set(4.5);
+        assert_eq!(g2.get(), 4.5);
+        let h1 = r.histogram("swaphi_batch_size", "sizes", Histogram::exponential(64));
+        let h2 = r.histogram("swaphi_batch_size", "sizes", Histogram::exponential(64));
+        h1.lock().unwrap().record(8);
+        assert_eq!(h2.lock().unwrap().count(), 1);
+    }
+
+    #[test]
+    fn labeled_counters_share_a_family() {
+        let r = Registry::new();
+        let over = r.labeled_counter("swaphi_errors_total", "errors by code", "code", "overloaded");
+        let bad = r.labeled_counter("swaphi_errors_total", "errors by code", "code", "bad_request");
+        let over2 = r.labeled_counter("swaphi_errors_total", "errors by code", "code", "overloaded");
+        over.inc();
+        over2.inc();
+        bad.inc();
+        assert_eq!(
+            r.labeled_snapshot("swaphi_errors_total"),
+            vec![("bad_request".to_string(), 1), ("overloaded".to_string(), 2)]
+        );
+        assert!(r.labeled_snapshot("no_such_family").is_empty());
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let r = Registry::new();
+        r.counter("swaphi_admitted_total", "requests admitted").add(5);
+        r.labeled_counter("swaphi_errors_total", "errors by code", "code", "overloaded").inc();
+        r.gauge("swaphi_queue_depth", "admission queue depth").set(3.0);
+        let h = r.histogram("swaphi_batch_size", "batch sizes", Histogram::new(vec![1, 2, 4]));
+        {
+            let mut h = h.lock().unwrap();
+            h.record(1);
+            h.record(3);
+            h.record(9);
+        }
+        let text = r.prometheus_text();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines.contains(&"# TYPE swaphi_admitted_total counter"));
+        assert!(lines.contains(&"swaphi_admitted_total 5"));
+        assert!(lines.contains(&"swaphi_errors_total{code=\"overloaded\"} 1"));
+        assert!(lines.contains(&"# TYPE swaphi_queue_depth gauge"));
+        assert!(lines.contains(&"swaphi_queue_depth 3"));
+        // histogram buckets are cumulative and end at +Inf == _count
+        assert!(lines.contains(&"swaphi_batch_size_bucket{le=\"1\"} 0"));
+        assert!(lines.contains(&"swaphi_batch_size_bucket{le=\"2\"} 1"));
+        assert!(lines.contains(&"swaphi_batch_size_bucket{le=\"4\"} 2"));
+        assert!(lines.contains(&"swaphi_batch_size_bucket{le=\"+Inf\"} 3"));
+        assert!(lines.contains(&"swaphi_batch_size_sum 13"));
+        assert!(lines.contains(&"swaphi_batch_size_count 3"));
+        // every sample line parses as `name[{labels}] value`
+        for line in &lines {
+            if line.starts_with('#') {
+                continue;
+            }
+            let (name, value) = line.rsplit_once(' ').expect("sample line");
+            assert!(!name.is_empty());
+            assert!(value.parse::<f64>().is_ok(), "unparseable value in {line:?}");
+        }
     }
 }

@@ -20,7 +20,7 @@ use super::calibration::{self, PHI_THREADS};
 use super::offload::OffloadModel;
 use super::sched::{simulate_schedule, Policy};
 use crate::align::{EngineKind, Precision};
-use crate::coordinator::devices::pick_steal_victim;
+use crate::coordinator::devices::{pick_steal_victim, DeviceTimeline};
 use crate::db::chunk::Chunk;
 use crate::db::index::Index;
 use crate::db::profile::LANES;
@@ -107,6 +107,39 @@ impl SimReport {
         } else {
             self.offload_time / cap
         }
+    }
+
+    /// Per-device compute/steal/idle timeline in the exact shape the
+    /// real fleet reports ([`DeviceTimeline`], microseconds): busy time
+    /// is `device_compute_s` split by stolen-chunk share, idle is the
+    /// barrier tail `makespan - device_done[d]` plus any non-compute
+    /// wait inside the device's own clock. The sim models the fleet the
+    /// paper scales across; keeping the two report shapes identical is
+    /// what lets the straggler analysis run against either.
+    pub fn device_timeline(&self) -> Vec<DeviceTimeline> {
+        let us = |s: f64| (s.max(0.0) * 1e6) as u64;
+        (0..self.device_done.len())
+            .map(|d| {
+                let busy = self.device_compute_s.get(d).copied().unwrap_or(0.0);
+                let chunks = self.chunks_per_device.get(d).copied().unwrap_or(0);
+                let stolen = self.stolen_chunks.get(d).copied().unwrap_or(0).min(chunks);
+                let steal_share = if chunks == 0 {
+                    0.0
+                } else {
+                    stolen as f64 / chunks as f64
+                };
+                // same definition as WorkQueues::finish_timed: idle is
+                // batch wall (makespan) minus compute-busy time — both
+                // the offload/setup overhead and the barrier tail count
+                // as not-computing
+                DeviceTimeline {
+                    device: d,
+                    compute_us: us(busy * (1.0 - steal_share)),
+                    steal_us: us(busy * steal_share),
+                    idle_us: us(self.makespan - busy),
+                }
+            })
+            .collect()
     }
 }
 
@@ -687,6 +720,31 @@ mod tests {
             &idx, &chunks, EngineKind::InterSP, 500, cfg(1), visited, hits, 0.5,
         );
         assert!(fast.makespan < half.makespan && half.makespan < all.makespan);
+    }
+
+    #[test]
+    fn device_timeline_matches_the_real_fleet_shape() {
+        let (idx, chunks) = workload(600);
+        let r = simulate_search(&idx, &chunks, EngineKind::InterSP, 500, cfg(4));
+        let tl = r.device_timeline();
+        assert_eq!(tl.len(), 4);
+        for t in &tl {
+            // busy split is conservative (compute + steal == device busy)
+            let total_busy = t.busy_us() as f64 / 1e6;
+            let modeled = r.device_compute_s[t.device];
+            assert!(
+                (total_busy - modeled).abs() < 2e-6 + modeled * 1e-6,
+                "device {}: busy {total_busy} vs modeled {modeled}",
+                t.device
+            );
+            // idle + busy never exceeds one makespan by more than
+            // rounding (busy happens inside the batch walls)
+            assert!(t.utilization() <= 1.0);
+            assert!((t.busy_us() + t.idle_us) as f64 / 1e6 <= r.makespan + 2e-6);
+        }
+        // a 4-device fleet with a shared pool keeps everyone >50% busy
+        let mean = tl.iter().map(DeviceTimeline::utilization).sum::<f64>() / tl.len() as f64;
+        assert!(mean > 0.5, "mean utilization {mean}");
     }
 
     #[test]

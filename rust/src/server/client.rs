@@ -106,6 +106,27 @@ impl Client {
     pub fn stats(&mut self) -> anyhow::Result<Json> {
         self.request_line(&format!(r#"{{"v":{},"op":"stats"}}"#, protocol::VERSION))
     }
+
+    /// Fetch the Prometheus text exposition (the `metrics` op), already
+    /// unwrapped from its JSON envelope.
+    pub fn metrics(&mut self) -> anyhow::Result<String> {
+        let resp =
+            self.request_line(&format!(r#"{{"v":{},"op":"metrics"}}"#, protocol::VERSION))?;
+        resp.get("metrics")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| anyhow::anyhow!("metrics response has no text body"))
+    }
+
+    /// Fetch the server's recent spans (the `trace` op); `n` limits the
+    /// window, `None` returns the whole retained ring.
+    pub fn trace(&mut self, n: Option<usize>) -> anyhow::Result<Json> {
+        let line = match n {
+            Some(n) => format!(r#"{{"v":{},"op":"trace","n":{n}}}"#, protocol::VERSION),
+            None => format!(r#"{{"v":{},"op":"trace"}}"#, protocol::VERSION),
+        };
+        self.request_line(&line)
+    }
 }
 
 /// Did the server accept the request?

@@ -38,18 +38,19 @@ use crate::coordinator::{AlignerFactory, DeviceSet, SearchConfig, SearchMode, Se
 use crate::db::chunk::plan_chunks_paired;
 use crate::db::index::Index;
 use crate::matrices::Scoring;
-use crate::metrics::Histogram;
+use crate::metrics::{Counter, Histogram, Registry, SharedHistogram};
+use crate::trace::{span_json, trace_id_hex, Span, TraceRecorder};
 use crate::tune::Tuner;
 use crate::util::json::Json;
 use cache::{fleet_fingerprint, fnv1a, fnv1a_field, CacheKey, ResultCache};
 use protocol::{HitPayload, Request};
 use queue::{AdmissionQueue, Pending, PushError};
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex, Once};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -78,6 +79,14 @@ pub struct ServerConfig {
     /// Install SIGINT/SIGTERM handlers that trigger a graceful drain
     /// (the `serve` command sets this; tests and embedded use don't).
     pub handle_signals: bool,
+    /// Slow-query threshold in milliseconds: any request whose
+    /// end-to-end latency (queue wait included) reaches it emits one
+    /// structured JSON line to stderr and bumps
+    /// `swaphi_slow_queries_total`. 0 disables the log.
+    pub slow_query_ms: u64,
+    /// Capacity of the span ring behind the `trace` op; 0 disables span
+    /// recording entirely (trace *ids* are still minted and echoed).
+    pub trace_ring: usize,
 }
 
 impl Default for ServerConfig {
@@ -92,6 +101,8 @@ impl Default for ServerConfig {
             max_query_len: 50_000,
             max_connections: 512,
             handle_signals: false,
+            slow_query_ms: 0,
+            trace_ring: 4096,
         }
     }
 }
@@ -224,41 +235,113 @@ fn bind(listen: &str) -> anyhow::Result<(Listener, BoundAddr)> {
 // ---------------------------------------------------------------------
 // Metrics.
 
-/// Service counters and histograms, snapshotted by the `stats` op.
+/// Service counters and histograms, snapshotted by the `stats` op and
+/// exported by the `metrics` op.
+///
+/// Every cell lives in one [`Registry`] under its Prometheus name; the
+/// `pub` fields are the pre-resolved `Arc` handles the hot paths update
+/// (one relaxed atomic op each — the registry lock is only taken at
+/// registration and exposition time). The `stats` op renders the same
+/// cells under its historical JSON keys, so its shape is unchanged.
 pub struct ServerMetrics {
-    pub admitted: AtomicU64,
-    pub rejected: AtomicU64,
-    pub expired: AtomicU64,
-    pub cache_hits: AtomicU64,
-    pub cache_misses: AtomicU64,
-    pub batches: AtomicU64,
+    registry: Registry,
+    pub admitted: Arc<Counter>,
+    pub rejected: Arc<Counter>,
+    pub expired: Arc<Counter>,
+    pub cache_hits: Arc<Counter>,
+    pub cache_misses: Arc<Counter>,
+    pub batches: Arc<Counter>,
     /// Fast-mode funnel accounting, accumulated across every fast-mode
     /// query served: subjects screened by the prefilter and subjects
     /// that survived into the exact rescore.
-    pub prefilter_candidates: AtomicU64,
-    pub prefilter_survivors: AtomicU64,
-    batch_size: Mutex<Histogram>,
-    latency_us: Mutex<Histogram>,
+    pub prefilter_candidates: Arc<Counter>,
+    pub prefilter_survivors: Arc<Counter>,
+    /// Requests whose end-to-end latency reached `slow_query_ms`.
+    pub slow_queries: Arc<Counter>,
+    batch_size: SharedHistogram,
+    latency_us: SharedHistogram,
 }
 
 impl ServerMetrics {
     fn new() -> ServerMetrics {
+        let registry = Registry::new();
+        let admitted =
+            registry.counter("swaphi_requests_admitted_total", "Requests admitted into the queue.");
+        let rejected = registry
+            .counter("swaphi_requests_rejected_total", "Requests refused with overloaded.");
+        let expired = registry.counter(
+            "swaphi_requests_expired_total",
+            "Requests dropped because their deadline passed while queued.",
+        );
+        let cache_hits =
+            registry.counter("swaphi_cache_hits_total", "Searches answered from the result cache.");
+        let cache_misses =
+            registry.counter("swaphi_cache_misses_total", "Searches that missed the result cache.");
+        let batches =
+            registry.counter("swaphi_batches_total", "Coalesced batches handed to the session.");
+        let prefilter_candidates = registry.counter(
+            "swaphi_prefilter_candidates_total",
+            "Subjects screened by the fast-mode prefilter.",
+        );
+        let prefilter_survivors = registry.counter(
+            "swaphi_prefilter_survivors_total",
+            "Subjects that survived the prefilter into the exact rescore.",
+        );
+        let slow_queries = registry.counter(
+            "swaphi_slow_queries_total",
+            "Requests at or over the slow-query latency threshold.",
+        );
+        let batch_size = registry.histogram(
+            "swaphi_batch_size",
+            "Coalesced batch sizes (requests per batch).",
+            Histogram::exponential(1 << 10),
+        );
+        let latency_us = registry.histogram(
+            "swaphi_request_latency_microseconds",
+            "End-to-end request latency, admission to reply.",
+            Histogram::exponential(60_000_000),
+        );
         ServerMetrics {
-            admitted: AtomicU64::new(0),
-            rejected: AtomicU64::new(0),
-            expired: AtomicU64::new(0),
-            cache_hits: AtomicU64::new(0),
-            cache_misses: AtomicU64::new(0),
-            batches: AtomicU64::new(0),
-            prefilter_candidates: AtomicU64::new(0),
-            prefilter_survivors: AtomicU64::new(0),
-            batch_size: Mutex::new(Histogram::exponential(1 << 10)),
-            latency_us: Mutex::new(Histogram::exponential(60_000_000)),
+            registry,
+            admitted,
+            rejected,
+            expired,
+            cache_hits,
+            cache_misses,
+            batches,
+            prefilter_candidates,
+            prefilter_survivors,
+            slow_queries,
+            batch_size,
+            latency_us,
         }
     }
 
+    /// The registry behind every cell (the `metrics` op renders it).
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Count one protocol error by its `error.code`. Each distinct code
+    /// becomes one cell of the `swaphi_errors_total{code=...}` family.
+    pub fn error(&self, code: &str) {
+        self.registry
+            .labeled_counter(
+                "swaphi_errors_total",
+                "Error responses by protocol error code.",
+                "code",
+                code,
+            )
+            .inc();
+    }
+
+    /// Snapshot of the error family as `(code, count)` pairs.
+    pub fn errors_snapshot(&self) -> Vec<(String, u64)> {
+        self.registry.labeled_snapshot("swaphi_errors_total")
+    }
+
     fn record_batch(&self, n: usize) {
-        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batches.inc();
         self.batch_size.lock().unwrap().record(n as u64);
     }
 
@@ -358,7 +441,16 @@ struct Shared {
     /// queue-depth/steal counters while the session lives in the
     /// coalescer thread.
     devices: Arc<DeviceSet>,
+    /// Span sink shared with the coalescer's session: the `trace` op
+    /// reads it, request spans from the admission path write to it.
+    recorder: Arc<TraceRecorder>,
+    /// Ring of recent slow-query records (the same JSON lines written
+    /// to stderr), kept so tests and embedders can assert on them.
+    slow_log: Mutex<VecDeque<String>>,
 }
+
+/// How many slow-query records the in-memory ring retains.
+const SLOW_LOG_CAP: usize = 256;
 
 impl Shared {
     fn draining(&self) -> bool {
@@ -462,6 +554,15 @@ impl Server {
         let (listener, addr) = bind(&cfg.listen)?;
         listener.set_nonblocking(true)?;
 
+        // span recording is on whenever the ring has capacity: the
+        // per-span cost is one relaxed branch when off and a bounded
+        // ring when on, so the daemon defaults to observable
+        let recorder = Arc::new(if cfg.trace_ring > 0 {
+            TraceRecorder::enabled(cfg.trace_ring)
+        } else {
+            TraceRecorder::new(0)
+        });
+
         let shared = Arc::new(Shared {
             queue: AdmissionQueue::new(cfg.queue_capacity),
             cache: Mutex::new(ResultCache::new(cfg.cache_entries)),
@@ -475,6 +576,8 @@ impl Server {
             default_mode,
             auto_mode,
             devices,
+            recorder,
+            slow_log: Mutex::new(VecDeque::new()),
             cfg,
         });
 
@@ -512,6 +615,17 @@ impl ServerHandle {
 
     pub fn metrics(&self) -> &ServerMetrics {
         &self.shared.metrics
+    }
+
+    /// The span ring shared by the admission path and the session.
+    pub fn recorder(&self) -> &TraceRecorder {
+        &self.shared.recorder
+    }
+
+    /// Snapshot of the retained slow-query records (oldest first) —
+    /// the same JSON lines the daemon wrote to stderr.
+    pub fn slow_log(&self) -> Vec<String> {
+        self.shared.slow_log.lock().unwrap().iter().cloned().collect()
     }
 
     /// Request a graceful drain (non-blocking).
@@ -631,27 +745,50 @@ fn handle_conn(mut conn: Box<dyn Conn>, shared: &Arc<Shared>) {
 fn handle_line(line: &str, shared: &Shared) -> String {
     let req = match protocol::parse_request(line) {
         Ok(r) => r,
-        Err(e) => return protocol::error_response(None, e.code, &e.message),
+        Err(e) => {
+            shared.metrics.error(e.code);
+            return protocol::error_response(None, e.code, &e.message);
+        }
     };
+    // protocol admission: every well-formed request gets a trace id,
+    // echoed in its response line whether or not spans are recorded
+    let trace = shared.recorder.next_trace_id();
     match req {
-        Request::Ping { id } => protocol::pong_response(id.as_deref()),
-        Request::Stats { id } => protocol::stats_response(id.as_deref(), stats_json(shared)),
-        Request::Search(s) => handle_search(s, shared),
+        Request::Ping { id } => protocol::pong_response(id.as_deref(), trace),
+        Request::Stats { id } => {
+            protocol::stats_response(id.as_deref(), stats_json(shared), trace)
+        }
+        Request::Metrics { id } => {
+            protocol::metrics_response(id.as_deref(), &metrics_text(shared), trace)
+        }
+        Request::Trace { id, n } => {
+            let spans = match n {
+                Some(n) => shared.recorder.recent(n),
+                None => shared.recorder.spans(),
+            };
+            let spans = Json::Arr(spans.iter().map(span_json).collect());
+            protocol::trace_response(id.as_deref(), spans, trace)
+        }
+        Request::Search(s) => handle_search(s, shared, trace),
     }
 }
 
-fn handle_search(req: protocol::SearchRequest, shared: &Shared) -> String {
+fn handle_search(req: protocol::SearchRequest, shared: &Shared, trace: u64) -> String {
     let id = req.id.as_deref();
+    let fail = |code: &'static str, message: &str| {
+        shared.metrics.error(code);
+        protocol::error_response_traced(id, code, message, trace)
+    };
     if shared.draining() {
-        return protocol::error_response(id, protocol::E_SHUTTING_DOWN, "server is draining");
+        return fail(protocol::E_SHUTTING_DOWN, "server is draining");
     }
     if req.seq.len() > shared.cfg.max_query_len {
-        return protocol::error_response(
-            id,
+        return fail(
             protocol::E_BAD_REQUEST,
             &format!("query length {} exceeds limit {}", req.seq.len(), shared.cfg.max_query_len),
         );
     }
+    let arrived = Instant::now();
     let codes = crate::alphabet::encode(req.seq.as_bytes());
     let top_k = req.top_k.unwrap_or(shared.session_top_k).min(shared.session_top_k);
     let mode = shared.resolve_mode(req.mode);
@@ -664,11 +801,19 @@ fn handle_search(req: protocol::SearchRequest, shared: &Shared) -> String {
     // bind the lookup so the cache guard drops before JSON serialization
     let cached = shared.cache.lock().unwrap().get(&key, &codes);
     if let Some(hits) = cached {
-        shared.metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
+        shared.metrics.cache_hits.inc();
+        if shared.recorder.is_enabled() {
+            let start = shared.recorder.us_of(arrived);
+            shared.recorder.record(
+                Span::new(trace, "request", start, shared.recorder.now_us() - start)
+                    .mode(mode.name())
+                    .cache_hit(true),
+            );
+        }
         let n = top_k.min(hits.len());
-        return protocol::search_response(id, &req.query_id, true, &hits[..n]);
+        return protocol::search_response(id, &req.query_id, true, &hits[..n], trace);
     }
-    shared.metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
+    shared.metrics.cache_misses.inc();
 
     let deadline_ms = req.deadline_ms.unwrap_or(shared.cfg.default_deadline_ms).min(3_600_000);
     let now = Instant::now();
@@ -682,27 +827,27 @@ fn handle_search(req: protocol::SearchRequest, shared: &Shared) -> String {
         cache_key: (shared.cfg.cache_entries > 0).then_some(key),
         deadline: now + Duration::from_millis(deadline_ms),
         enqueued: now,
+        trace,
         reply: tx,
     };
     match shared.queue.push(pending) {
         Ok(()) => {
-            shared.metrics.admitted.fetch_add(1, Ordering::Relaxed);
+            shared.metrics.admitted.inc();
         }
         Err(PushError::Full(_)) => {
-            shared.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-            return protocol::error_response(
-                id,
+            shared.metrics.rejected.inc();
+            return fail(
                 protocol::E_OVERLOADED,
                 &format!("admission queue full ({} pending)", shared.cfg.queue_capacity),
             );
         }
         Err(PushError::Closed(_)) => {
-            return protocol::error_response(id, protocol::E_SHUTTING_DOWN, "server is draining");
+            return fail(protocol::E_SHUTTING_DOWN, "server is draining");
         }
     }
     match rx.recv() {
         Ok(line) => line,
-        Err(_) => protocol::error_response(id, protocol::E_INTERNAL, "worker dropped the request"),
+        Err(_) => fail(protocol::E_INTERNAL, "worker dropped the request"),
     }
 }
 
@@ -718,8 +863,11 @@ fn coalescer_loop(
 ) {
     // the chunk plan and the fleet were both built over it in
     // Server::start — planned once, consistent by construction
-    let session =
+    let mut session =
         SearchSession::from_parts(index, scoring, search, chunks, Arc::clone(&shared.devices));
+    // the session shares the daemon's span ring: device/chunk spans it
+    // records at batch barriers land where the `trace` op reads them
+    session.set_trace(Arc::clone(&shared.recorder));
     // warmup-window calibration on index load: before serving traffic,
     // run the tuner's warmup batches on synthetic probe queries so the
     // fleet starts on *measured* rates instead of configured guesses
@@ -764,11 +912,13 @@ fn run_batch(
     let (live, dead): (Vec<Pending>, Vec<Pending>) =
         batch.into_iter().partition(|p| p.deadline > now);
     for p in dead {
-        shared.metrics.expired.fetch_add(1, Ordering::Relaxed);
-        let _ = p.reply.send(protocol::error_response(
+        shared.metrics.expired.inc();
+        shared.metrics.error(protocol::E_DEADLINE);
+        let _ = p.reply.send(protocol::error_response_traced(
             p.req_id.as_deref(),
             protocol::E_DEADLINE,
             "deadline expired before the request was scheduled",
+            p.trace,
         ));
     }
     if live.is_empty() {
@@ -798,30 +948,50 @@ fn run_mode_group(
     mode: SearchMode,
     live: Vec<Pending>,
 ) {
-    // coalesce identical in-flight queries into one lane set
+    // the coalescing wait ends here: one "queued" span per request,
+    // admission to batch start
+    let batch_start = Instant::now();
+    if shared.recorder.is_enabled() {
+        let spans = live
+            .iter()
+            .map(|p| {
+                let start = shared.recorder.us_of(p.enqueued);
+                Span::new(p.trace, "queued", start, shared.recorder.us_of(batch_start) - start)
+                    .mode(mode.name())
+            })
+            .collect();
+        shared.recorder.record_many(spans);
+    }
+
+    // coalesce identical in-flight queries into one lane set; each
+    // unique query is traced under the first request that carried it
     let mut uniq: Vec<(String, Vec<u8>)> = Vec::new();
+    let mut traces: Vec<u64> = Vec::new();
     let mut index_of: HashMap<&[u8], usize> = HashMap::new();
     let mut slot: Vec<usize> = Vec::with_capacity(live.len());
     for p in &live {
         let i = *index_of.entry(p.codes.as_slice()).or_insert_with(|| {
             uniq.push((p.query_id.clone(), p.codes.clone()));
+            traces.push(p.trace);
             uniq.len() - 1
         });
         slot.push(i);
     }
 
-    match session.search_batch_mode(factory, &uniq, mode) {
+    match session.search_batch_traced(factory, &uniq, mode, &traces) {
         Ok(results) => {
+            if shared.recorder.is_enabled() {
+                let start = shared.recorder.us_of(batch_start);
+                shared.recorder.record(
+                    Span::new(0, "batch", start, shared.recorder.now_us() - start)
+                        .mode(mode.name())
+                        .items(live.len()),
+                );
+            }
             for r in &results {
                 if let Some(pf) = r.prefilter {
-                    shared
-                        .metrics
-                        .prefilter_candidates
-                        .fetch_add(pf.candidates, Ordering::Relaxed);
-                    shared
-                        .metrics
-                        .prefilter_survivors
-                        .fetch_add(pf.survivors, Ordering::Relaxed);
+                    shared.metrics.prefilter_candidates.add(pf.candidates);
+                    shared.metrics.prefilter_survivors.add(pf.survivors);
                 }
             }
             let payloads: Vec<Vec<HitPayload>> = results
@@ -849,24 +1019,86 @@ fn run_mode_group(
                     }
                 }
                 let n = p.top_k.min(full.len());
-                let line =
-                    protocol::search_response(p.req_id.as_deref(), &p.query_id, false, &full[..n]);
-                shared
-                    .metrics
-                    .record_latency(p.enqueued.elapsed().as_micros().min(u64::MAX as u128) as u64);
+                let line = protocol::search_response(
+                    p.req_id.as_deref(),
+                    &p.query_id,
+                    false,
+                    &full[..n],
+                    p.trace,
+                );
+                let latency_us =
+                    p.enqueued.elapsed().as_micros().min(u64::MAX as u128) as u64;
+                shared.metrics.record_latency(latency_us);
+                if shared.recorder.is_enabled() {
+                    let start = shared.recorder.us_of(p.enqueued);
+                    shared.recorder.record(
+                        Span::new(p.trace, "request", start, latency_us)
+                            .mode(mode.name())
+                            .cache_hit(false),
+                    );
+                }
+                if shared.cfg.slow_query_ms > 0 && latency_us >= shared.cfg.slow_query_ms * 1000 {
+                    slow_query_record(shared, p, mode, live.len(), latency_us);
+                }
                 let _ = p.reply.send(line);
             }
         }
         Err(e) => {
             for p in &live {
-                let _ = p.reply.send(protocol::error_response(
+                shared.metrics.error(protocol::E_INTERNAL);
+                let _ = p.reply.send(protocol::error_response_traced(
                     p.req_id.as_deref(),
                     protocol::E_INTERNAL,
                     &format!("search failed: {e:#}"),
+                    p.trace,
                 ));
             }
         }
     }
+}
+
+/// Emit one structured slow-query record: a single JSON line with the
+/// trace id, query identity, mode, batch context and a per-device
+/// timeline summary — written to stderr and retained in the in-memory
+/// ring [`ServerHandle::slow_log`] exposes.
+fn slow_query_record(
+    shared: &Shared,
+    p: &Pending,
+    mode: SearchMode,
+    batch_size: usize,
+    latency_us: u64,
+) {
+    shared.metrics.slow_queries.inc();
+    let devices: Vec<Json> = shared
+        .devices
+        .timeline()
+        .iter()
+        .map(|t| {
+            let mut m = BTreeMap::new();
+            m.insert("device".to_string(), Json::Num(t.device as f64));
+            m.insert("compute_us".to_string(), Json::Num(t.compute_us as f64));
+            m.insert("steal_us".to_string(), Json::Num(t.steal_us as f64));
+            m.insert("idle_us".to_string(), Json::Num(t.idle_us as f64));
+            m.insert("utilization".to_string(), Json::Num(t.utilization()));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut rec = BTreeMap::new();
+    rec.insert("slow_query".to_string(), Json::Bool(true));
+    rec.insert("trace".to_string(), Json::Str(trace_id_hex(p.trace)));
+    rec.insert("query_id".to_string(), Json::Str(p.query_id.clone()));
+    rec.insert("mode".to_string(), Json::Str(mode.name().to_string()));
+    rec.insert("batch_size".to_string(), Json::Num(batch_size as f64));
+    rec.insert("latency_ms".to_string(), Json::Num((latency_us / 1000) as f64));
+    rec.insert("threshold_ms".to_string(), Json::Num(shared.cfg.slow_query_ms as f64));
+    rec.insert("devices".to_string(), Json::Arr(devices));
+    let line = Json::Obj(rec).to_string();
+    eprintln!("{line}");
+    let mut ring = shared.slow_log.lock().unwrap();
+    if ring.len() == SLOW_LOG_CAP {
+        ring.pop_front();
+    }
+    ring.push_back(line);
 }
 
 fn stats_json(shared: &Shared) -> Json {
@@ -881,7 +1113,7 @@ fn stats_json(shared: &Shared) -> Json {
         ("cache_misses", &m.cache_misses),
         ("batches", &m.batches),
     ] {
-        s.insert(k.to_string(), Json::Num(v.load(Ordering::Relaxed) as f64));
+        s.insert(k.to_string(), Json::Num(v.get() as f64));
     }
     s.insert(
         "cache_entries".to_string(),
@@ -891,8 +1123,8 @@ fn stats_json(shared: &Shared) -> Json {
     // cumulative funnel accounting across every fast-mode query served
     s.insert("mode".to_string(), Json::Str(shared.default_mode.name().to_string()));
     {
-        let cand = m.prefilter_candidates.load(Ordering::Relaxed);
-        let surv = m.prefilter_survivors.load(Ordering::Relaxed);
+        let cand = m.prefilter_candidates.get();
+        let surv = m.prefilter_survivors.get();
         let mut pf = BTreeMap::new();
         pf.insert("candidates".to_string(), Json::Num(cand as f64));
         pf.insert("survivors".to_string(), Json::Num(surv as f64));
@@ -970,11 +1202,97 @@ fn stats_json(shared: &Shared) -> Json {
         "device_steals_per_batch".to_string(),
         summary_json(shared.devices.steals_summary()),
     );
+    // additive observability keys (PR 7): every key below is new —
+    // nothing above changed shape, which is the stats contract CI's
+    // python asserts pin (see docs/protocol.md)
+    {
+        let mut errs = BTreeMap::new();
+        for (code, n) in m.errors_snapshot() {
+            errs.insert(code, Json::Num(n as f64));
+        }
+        s.insert("errors".to_string(), Json::Obj(errs));
+    }
+    s.insert("slow_queries".to_string(), Json::Num(m.slow_queries.get() as f64));
+    let timeline: Vec<Json> = shared
+        .devices
+        .timeline()
+        .iter()
+        .map(|t| {
+            let mut d = BTreeMap::new();
+            d.insert("device".to_string(), Json::Num(t.device as f64));
+            d.insert("compute_us".to_string(), Json::Num(t.compute_us as f64));
+            d.insert("steal_us".to_string(), Json::Num(t.steal_us as f64));
+            d.insert("idle_us".to_string(), Json::Num(t.idle_us as f64));
+            d.insert("utilization".to_string(), Json::Num(t.utilization()));
+            Json::Obj(d)
+        })
+        .collect();
+    s.insert("device_timeline".to_string(), Json::Arr(timeline));
+    if let Some(st) = shared.devices.straggler() {
+        let mut d = BTreeMap::new();
+        d.insert("device".to_string(), Json::Num(st.device as f64));
+        d.insert("worst_utilization".to_string(), Json::Num(st.worst_utilization));
+        d.insert("fleet_mean".to_string(), Json::Num(st.fleet_mean));
+        s.insert("straggler".to_string(), Json::Obj(d));
+    }
+    if let Some((pre, re)) = shared.devices.legs_summary() {
+        let mut d = BTreeMap::new();
+        d.insert("prefilter_us".to_string(), summary_json(pre));
+        d.insert("rescore_us".to_string(), summary_json(re));
+        s.insert("funnel_legs".to_string(), Json::Obj(d));
+    }
     s.insert(
         "index_generation".to_string(),
         Json::Str(format!("{:016x}", shared.generation)),
     );
     Json::Obj(s)
+}
+
+/// The `metrics` op body: the registry's Prometheus exposition plus the
+/// handful of live gauges (queue depth, cache size, per-device timeline
+/// counters) whose source of truth lives outside the registry.
+fn metrics_text(shared: &Shared) -> String {
+    use std::fmt::Write as _;
+    let mut out = shared.metrics.registry().prometheus_text();
+    let _ = writeln!(out, "# HELP swaphi_queue_depth Requests waiting in the admission queue.");
+    let _ = writeln!(out, "# TYPE swaphi_queue_depth gauge");
+    let _ = writeln!(out, "swaphi_queue_depth {}", shared.queue.depth());
+    let _ = writeln!(out, "# HELP swaphi_cache_entries Entries resident in the result cache.");
+    let _ = writeln!(out, "# TYPE swaphi_cache_entries gauge");
+    let _ = writeln!(out, "swaphi_cache_entries {}", shared.cache.lock().unwrap().len());
+    let _ = writeln!(out, "# HELP swaphi_trace_spans_retained Spans currently in the trace ring.");
+    let _ = writeln!(out, "# TYPE swaphi_trace_spans_retained gauge");
+    let _ = writeln!(out, "swaphi_trace_spans_retained {}", shared.recorder.len());
+    let timeline = shared.devices.timeline();
+    for (name, help, get) in [
+        (
+            "swaphi_device_compute_microseconds_total",
+            "Per-device microseconds spent computing owned work.",
+            0usize,
+        ),
+        (
+            "swaphi_device_steal_microseconds_total",
+            "Per-device microseconds spent computing stolen work.",
+            1,
+        ),
+        (
+            "swaphi_device_idle_microseconds_total",
+            "Per-device microseconds idle at batch barriers.",
+            2,
+        ),
+    ] {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} counter");
+        for t in &timeline {
+            let v = match get {
+                0 => t.compute_us,
+                1 => t.steal_us,
+                _ => t.idle_us,
+            };
+            let _ = writeln!(out, "{name}{{device=\"{}\"}} {v}", t.device);
+        }
+    }
+    out
 }
 
 #[cfg(test)]

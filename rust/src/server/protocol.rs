@@ -8,6 +8,7 @@
 //! break older servers.
 
 use crate::coordinator::SearchMode;
+use crate::trace::trace_id_hex;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 
@@ -42,6 +43,11 @@ pub enum Request {
     Search(SearchRequest),
     Ping { id: Option<String> },
     Stats { id: Option<String> },
+    /// `op = "metrics"`: Prometheus text exposition of the registry.
+    Metrics { id: Option<String> },
+    /// `op = "trace"`: the last `n` spans from the server's trace ring
+    /// (all retained spans when `n` is absent).
+    Trace { id: Option<String>, n: Option<usize> },
 }
 
 /// `op = "search"`.
@@ -84,6 +90,18 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
     match j.str_field("op").map_err(|_| ProtoError::bad("missing string field \"op\""))? {
         "ping" => Ok(Request::Ping { id }),
         "stats" => Ok(Request::Stats { id }),
+        "metrics" => Ok(Request::Metrics { id }),
+        "trace" => {
+            let n = match j.get("n") {
+                None => None,
+                Some(n) => Some(
+                    n.as_usize()
+                        .filter(|&k| k > 0)
+                        .ok_or_else(|| ProtoError::bad("n must be a positive integer"))?,
+                ),
+            };
+            Ok(Request::Trace { id, n })
+        }
         "search" => {
             let seq = j
                 .get("query")
@@ -132,7 +150,7 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
             }))
         }
         other => Err(ProtoError::bad(format!(
-            "unknown op {other:?} (search|ping|stats)"
+            "unknown op {other:?} (search|ping|stats|metrics|trace)"
         ))),
     }
 }
@@ -149,13 +167,21 @@ fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
 }
 
-fn base(id: Option<&str>, ok: bool) -> Vec<(&'static str, Json)> {
+/// Shared response scaffolding. A nonzero `trace` is the request's trace
+/// id, echoed as `"trace": "t…"` so a client can correlate its request
+/// with the server-side spans the `trace` op (and `--trace-out`) export;
+/// zero means the request never reached admission (e.g. a parse error),
+/// and the field is omitted.
+fn base(id: Option<&str>, ok: bool, trace: u64) -> Vec<(&'static str, Json)> {
     let mut pairs = vec![
         ("v", Json::Num(VERSION as f64)),
         ("ok", Json::Bool(ok)),
     ];
     if let Some(id) = id {
         pairs.push(("id", Json::Str(id.to_string())));
+    }
+    if trace != 0 {
+        pairs.push(("trace", Json::Str(trace_id_hex(trace))));
     }
     pairs
 }
@@ -166,8 +192,9 @@ pub fn search_response(
     query_id: &str,
     cached: bool,
     hits: &[HitPayload],
+    trace: u64,
 ) -> String {
-    let mut pairs = base(id, true);
+    let mut pairs = base(id, true, trace);
     pairs.push(("query_id", Json::Str(query_id.to_string())));
     pairs.push(("cached", Json::Bool(cached)));
     pairs.push((
@@ -189,9 +216,14 @@ pub fn search_response(
     obj(pairs).to_string()
 }
 
-/// Failure response line.
+/// Failure response line (no trace context — pre-admission failures).
 pub fn error_response(id: Option<&str>, code: &str, message: &str) -> String {
-    let mut pairs = base(id, false);
+    error_response_traced(id, code, message, 0)
+}
+
+/// Failure response line carrying the request's trace id.
+pub fn error_response_traced(id: Option<&str>, code: &str, message: &str, trace: u64) -> String {
+    let mut pairs = base(id, false, trace);
     pairs.push((
         "error",
         obj(vec![
@@ -203,16 +235,31 @@ pub fn error_response(id: Option<&str>, code: &str, message: &str) -> String {
 }
 
 /// Ping reply.
-pub fn pong_response(id: Option<&str>) -> String {
-    let mut pairs = base(id, true);
+pub fn pong_response(id: Option<&str>, trace: u64) -> String {
+    let mut pairs = base(id, true, trace);
     pairs.push(("op", Json::Str("pong".to_string())));
     obj(pairs).to_string()
 }
 
 /// Stats reply wrapping a prebuilt `stats` object.
-pub fn stats_response(id: Option<&str>, stats: Json) -> String {
-    let mut pairs = base(id, true);
+pub fn stats_response(id: Option<&str>, stats: Json, trace: u64) -> String {
+    let mut pairs = base(id, true, trace);
     pairs.push(("stats", stats));
+    obj(pairs).to_string()
+}
+
+/// Metrics reply: the registry's Prometheus text exposition, shipped as
+/// one JSON string field so the response stays a single protocol line.
+pub fn metrics_response(id: Option<&str>, text: &str, trace: u64) -> String {
+    let mut pairs = base(id, true, trace);
+    pairs.push(("metrics", Json::Str(text.to_string())));
+    obj(pairs).to_string()
+}
+
+/// Trace reply wrapping a prebuilt span array (see `trace::span_json`).
+pub fn trace_response(id: Option<&str>, spans: Json, trace: u64) -> String {
+    let mut pairs = base(id, true, trace);
+    pairs.push(("spans", spans));
     obj(pairs).to_string()
 }
 
@@ -325,14 +372,47 @@ mod tests {
             HitPayload { subject: "s\"2".into(), len: 7, score: -3 },
         ];
         for line in [
-            search_response(Some("r1"), "q", true, &hits),
+            search_response(Some("r1"), "q", true, &hits, 7),
             error_response(None, E_OVERLOADED, "queue full"),
-            pong_response(Some("p")),
-            stats_response(None, Json::Obj(Default::default())),
+            pong_response(Some("p"), 0),
+            stats_response(None, Json::Obj(Default::default()), 3),
+            metrics_response(None, "# TYPE x counter\nx 1\n", 4),
+            trace_response(None, Json::Arr(vec![]), 5),
         ] {
             assert!(!line.contains('\n'), "{line}");
             Json::parse(&line).unwrap();
         }
+    }
+
+    #[test]
+    fn parses_metrics_and_trace_ops() {
+        match parse_request(r#"{"v":1,"op":"metrics","id":"m"}"#).unwrap() {
+            Request::Metrics { id } => assert_eq!(id.as_deref(), Some("m")),
+            other => panic!("{other:?}"),
+        }
+        match parse_request(r#"{"v":1,"op":"trace","n":50}"#).unwrap() {
+            Request::Trace { id, n } => {
+                assert_eq!(id, None);
+                assert_eq!(n, Some(50));
+            }
+            other => panic!("{other:?}"),
+        }
+        match parse_request(r#"{"v":1,"op":"trace"}"#).unwrap() {
+            Request::Trace { n, .. } => assert_eq!(n, None, "n defaults to the full ring"),
+            other => panic!("{other:?}"),
+        }
+        let err = parse_request(r#"{"v":1,"op":"trace","n":0}"#).unwrap_err();
+        assert_eq!(err.code, E_BAD_REQUEST);
+    }
+
+    #[test]
+    fn trace_id_is_echoed_and_omitted_when_absent() {
+        let with = Json::parse(&search_response(None, "q", false, &[], 0xabc)).unwrap();
+        assert_eq!(with.str_field("trace").unwrap(), "t000000000abc");
+        let without = Json::parse(&search_response(None, "q", false, &[], 0)).unwrap();
+        assert_eq!(without.get("trace"), None, "no admission, no trace field");
+        let err = Json::parse(&error_response_traced(None, E_DEADLINE, "late", 9)).unwrap();
+        assert_eq!(err.str_field("trace").unwrap(), "t000000000009");
     }
 
     #[test]
@@ -341,7 +421,7 @@ mod tests {
             HitPayload { subject: "a".into(), len: 10, score: 12 },
             HitPayload { subject: "b".into(), len: 20, score: -4 },
         ];
-        let resp = Json::parse(&search_response(None, "q", false, &hits)).unwrap();
+        let resp = Json::parse(&search_response(None, "q", false, &hits, 0)).unwrap();
         assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
         assert_eq!(hits_of_response(&resp).unwrap(), hits);
         let ranks: Vec<usize> = resp

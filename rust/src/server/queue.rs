@@ -42,6 +42,9 @@ pub struct Pending {
     pub deadline: Instant,
     /// Admission time, for the end-to-end latency histogram.
     pub enqueued: Instant,
+    /// Trace id minted at admission: echoed in the response line and
+    /// stamped on every span this request produces downstream.
+    pub trace: u64,
     /// Where the encoded response line goes.
     pub reply: mpsc::Sender<String>,
 }
@@ -151,6 +154,7 @@ mod tests {
                 cache_key: None,
                 deadline: now + Duration::from_secs(60),
                 enqueued: now,
+                trace: 0,
                 reply: tx,
             },
             rx,

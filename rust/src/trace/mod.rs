@@ -1,0 +1,454 @@
+//! Request tracing: spans, a bounded span ring, and Chrome
+//! trace-event export.
+//!
+//! A trace ID is minted at protocol admission (or per query for the
+//! offline `search --trace-out` path) and flows admission queue →
+//! coalescer → batch → device worker → per-chunk kernel call. Each hop
+//! records a [`Span`] — monotonic start + duration against the
+//! recorder's epoch, plus the device/chunk/mode/cache-hit dimensions —
+//! into a per-thread `Vec<Span>` that is folded into the central ring
+//! once per worker per batch barrier (one lock acquisition per thread
+//! per batch, never per item).
+//!
+//! The disabled path is a single relaxed atomic load per span site:
+//! every instrumentation point is written as
+//! `if recorder.is_enabled() { ... }` (or an `Option` that was resolved
+//! from that same check at batch start), so a daemon with tracing off
+//! pays one predictable branch and nothing else. The enabled-vs-
+//! disabled delta is measured by the `batch_pipeline` bench and
+//! recorded (ungated) in `BENCH_batch.json`.
+//!
+//! Export targets:
+//! * [`chrome_trace_json`] — the Chrome trace-event array format that
+//!   Perfetto / `chrome://tracing` load directly
+//!   (`swaphi search --trace-out trace.json`);
+//! * [`span_json`] — the line-protocol shape returned by the daemon's
+//!   `trace` op (see `docs/protocol.md`).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// One traced interval. `trace == 0` means the span belongs to the
+/// pipeline itself (a batch barrier, a device timeline) rather than to
+/// one request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Span {
+    /// Request trace id (minted by [`TraceRecorder::next_trace_id`]),
+    /// or 0 for batch-scoped spans.
+    pub trace: u64,
+    /// Span kind: `request`, `queued`, `batch`, `device`, `chunk`,
+    /// `prefilter_leg`, `rescore_leg`.
+    pub name: &'static str,
+    /// Start, microseconds since the recorder's epoch (monotonic).
+    pub start_us: u64,
+    /// Duration in microseconds.
+    pub dur_us: u64,
+    /// Device that executed the work, when device-scoped.
+    pub device: Option<usize>,
+    /// Chunk index, for per-chunk kernel spans.
+    pub chunk: Option<usize>,
+    /// Resolved search mode (`"exact"` / `"fast"`), when known.
+    pub mode: Option<&'static str>,
+    /// Item count for aggregate spans (batch size, leg survivors).
+    pub items: Option<usize>,
+    /// The request was answered from the result cache.
+    pub cache_hit: bool,
+    /// The chunk was executed by a thief, not its shard owner.
+    pub stolen: bool,
+}
+
+impl Span {
+    /// A bare span; dimensions are filled in with the builder methods.
+    pub fn new(trace: u64, name: &'static str, start_us: u64, dur_us: u64) -> Self {
+        Span {
+            trace,
+            name,
+            start_us,
+            dur_us,
+            device: None,
+            chunk: None,
+            mode: None,
+            items: None,
+            cache_hit: false,
+            stolen: false,
+        }
+    }
+
+    pub fn device(mut self, dev: usize) -> Self {
+        self.device = Some(dev);
+        self
+    }
+
+    pub fn chunk(mut self, chunk: usize) -> Self {
+        self.chunk = Some(chunk);
+        self
+    }
+
+    pub fn mode(mut self, mode: &'static str) -> Self {
+        self.mode = Some(mode);
+        self
+    }
+
+    pub fn items(mut self, n: usize) -> Self {
+        self.items = Some(n);
+        self
+    }
+
+    pub fn cache_hit(mut self, hit: bool) -> Self {
+        self.cache_hit = hit;
+        self
+    }
+
+    pub fn stolen(mut self, stolen: bool) -> Self {
+        self.stolen = stolen;
+        self
+    }
+
+    /// End of the interval, microseconds since the recorder's epoch.
+    pub fn end_us(&self) -> u64 {
+        self.start_us + self.dur_us
+    }
+
+    /// Trace-event category for this span kind — how Perfetto groups
+    /// the timeline rows.
+    pub fn cat(&self) -> &'static str {
+        match self.name {
+            "request" | "queued" => "server",
+            "prefilter_leg" | "rescore_leg" => "funnel",
+            _ => "fleet",
+        }
+    }
+}
+
+/// The central span sink: an epoch for monotonic timestamps, a trace-id
+/// mint, and a bounded ring of the most recent spans.
+///
+/// Hot paths never lock per span: workers batch spans into a local
+/// `Vec` and fold it with [`TraceRecorder::record_many`] at the batch
+/// barrier. When the ring overflows, the oldest spans are dropped —
+/// the `trace` protocol op is explicitly a window over recent
+/// requests, not an archive.
+pub struct TraceRecorder {
+    enabled: AtomicBool,
+    next_trace: AtomicU64,
+    epoch: Instant,
+    capacity: usize,
+    ring: Mutex<VecDeque<Span>>,
+}
+
+impl TraceRecorder {
+    /// A recorder with room for `capacity` spans, initially disabled
+    /// (span sites see the single-branch fast path). `capacity == 0`
+    /// keeps the recorder permanently inert.
+    pub fn new(capacity: usize) -> Self {
+        TraceRecorder {
+            enabled: AtomicBool::new(false),
+            next_trace: AtomicU64::new(1),
+            epoch: Instant::now(),
+            capacity,
+            ring: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// A recorder that is already recording.
+    pub fn enabled(capacity: usize) -> Self {
+        let r = TraceRecorder::new(capacity);
+        r.set_enabled(true);
+        r
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on && self.capacity > 0, Ordering::Relaxed);
+    }
+
+    /// The one branch every span site pays when tracing is off.
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Mint the next request trace id (monotonic from 1; 0 is reserved
+    /// for batch-scoped spans). Minting is independent of
+    /// [`is_enabled`](Self::is_enabled): responses echo a trace id even
+    /// when span recording is off.
+    pub fn next_trace_id(&self) -> u64 {
+        self.next_trace.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Microseconds since the recorder's epoch, now.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Microseconds since the epoch at `t` (0 if `t` predates it —
+    /// only possible for instants captured before the recorder was
+    /// built, which no span site does).
+    pub fn us_of(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    /// Record one span (no-op when disabled).
+    pub fn record(&self, span: Span) {
+        if !self.is_enabled() {
+            return;
+        }
+        let mut ring = self.ring.lock().unwrap();
+        Self::push_capped(&mut ring, self.capacity, span);
+    }
+
+    /// Fold a per-thread span buffer into the ring under one lock —
+    /// the barrier-time drain path.
+    pub fn record_many(&self, spans: Vec<Span>) {
+        if spans.is_empty() || !self.is_enabled() {
+            return;
+        }
+        let mut ring = self.ring.lock().unwrap();
+        for s in spans {
+            Self::push_capped(&mut ring, self.capacity, s);
+        }
+    }
+
+    fn push_capped(ring: &mut VecDeque<Span>, cap: usize, span: Span) {
+        if ring.len() == cap {
+            ring.pop_front();
+        }
+        ring.push_back(span);
+    }
+
+    /// Snapshot of the ring, oldest first.
+    pub fn spans(&self) -> Vec<Span> {
+        self.ring.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// The most recent `n` spans, oldest first.
+    pub fn recent(&self, n: usize) -> Vec<Span> {
+        let ring = self.ring.lock().unwrap();
+        let skip = ring.len().saturating_sub(n);
+        ring.iter().skip(skip).cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn clear(&self) {
+        self.ring.lock().unwrap().clear();
+    }
+}
+
+/// Hex form of a trace id as echoed in protocol responses (`"t000000000001"`).
+pub fn trace_id_hex(id: u64) -> String {
+    format!("t{id:012x}")
+}
+
+/// The `trace` protocol op's span shape (one JSON object per span).
+pub fn span_json(s: &Span) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("trace".to_string(), Json::Str(trace_id_hex(s.trace)));
+    m.insert("name".to_string(), Json::Str(s.name.to_string()));
+    m.insert("start_us".to_string(), Json::Num(s.start_us as f64));
+    m.insert("dur_us".to_string(), Json::Num(s.dur_us as f64));
+    if let Some(d) = s.device {
+        m.insert("device".to_string(), Json::Num(d as f64));
+    }
+    if let Some(c) = s.chunk {
+        m.insert("chunk".to_string(), Json::Num(c as f64));
+    }
+    if let Some(mode) = s.mode {
+        m.insert("mode".to_string(), Json::Str(mode.to_string()));
+    }
+    if let Some(n) = s.items {
+        m.insert("items".to_string(), Json::Num(n as f64));
+    }
+    if s.cache_hit {
+        m.insert("cache_hit".to_string(), Json::Bool(true));
+    }
+    if s.stolen {
+        m.insert("stolen".to_string(), Json::Bool(true));
+    }
+    Json::Obj(m)
+}
+
+/// Render spans as a Chrome trace-event JSON document — loadable by
+/// Perfetto (<https://ui.perfetto.dev>) and `chrome://tracing`.
+///
+/// Mapping: every span is a complete event (`ph:"X"`) with `ts`/`dur`
+/// in microseconds; `pid` is always 1 (one process); `tid` separates
+/// the timeline rows — device-scoped spans go to `tid = device + 1`,
+/// everything else (request/queued/batch/leg spans) to `tid = 0`. The
+/// span dimensions travel in `args`.
+pub fn chrome_trace_json(spans: &[Span]) -> String {
+    let mut events = Vec::with_capacity(spans.len() + 4);
+    for s in spans {
+        let mut args = BTreeMap::new();
+        args.insert("trace".to_string(), Json::Str(trace_id_hex(s.trace)));
+        if let Some(c) = s.chunk {
+            args.insert("chunk".to_string(), Json::Num(c as f64));
+        }
+        if let Some(mode) = s.mode {
+            args.insert("mode".to_string(), Json::Str(mode.to_string()));
+        }
+        if let Some(n) = s.items {
+            args.insert("items".to_string(), Json::Num(n as f64));
+        }
+        if s.cache_hit {
+            args.insert("cache_hit".to_string(), Json::Bool(true));
+        }
+        if s.stolen {
+            args.insert("stolen".to_string(), Json::Bool(true));
+        }
+        let mut ev = BTreeMap::new();
+        ev.insert("name".to_string(), Json::Str(s.name.to_string()));
+        ev.insert("cat".to_string(), Json::Str(s.cat().to_string()));
+        ev.insert("ph".to_string(), Json::Str("X".to_string()));
+        ev.insert("ts".to_string(), Json::Num(s.start_us as f64));
+        ev.insert("dur".to_string(), Json::Num(s.dur_us as f64));
+        ev.insert("pid".to_string(), Json::Num(1.0));
+        let tid = s.device.map(|d| d + 1).unwrap_or(0);
+        ev.insert("tid".to_string(), Json::Num(tid as f64));
+        ev.insert("args".to_string(), Json::Obj(args));
+        events.push(Json::Obj(ev));
+    }
+    // thread_name metadata rows so Perfetto labels the device lanes
+    let mut tids: Vec<Option<usize>> = spans.iter().map(|s| s.device).collect();
+    tids.sort_unstable();
+    tids.dedup();
+    for dev in tids {
+        let label = match dev {
+            Some(d) => format!("device {d}"),
+            None => "pipeline".to_string(),
+        };
+        let mut args = BTreeMap::new();
+        args.insert("name".to_string(), Json::Str(label));
+        let mut ev = BTreeMap::new();
+        ev.insert("name".to_string(), Json::Str("thread_name".to_string()));
+        ev.insert("ph".to_string(), Json::Str("M".to_string()));
+        ev.insert("pid".to_string(), Json::Num(1.0));
+        ev.insert("tid".to_string(), Json::Num(dev.map(|d| d + 1).unwrap_or(0) as f64));
+        ev.insert("args".to_string(), Json::Obj(args));
+        events.push(Json::Obj(ev));
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("traceEvents".to_string(), Json::Arr(events));
+    doc.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    Json::Obj(doc).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_drops_spans_but_still_mints_ids() {
+        let r = TraceRecorder::new(16);
+        assert!(!r.is_enabled());
+        let a = r.next_trace_id();
+        let b = r.next_trace_id();
+        assert_eq!(b, a + 1);
+        r.record(Span::new(a, "request", 0, 10));
+        r.record_many(vec![Span::new(b, "chunk", 0, 5)]);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn zero_capacity_recorder_cannot_be_enabled() {
+        let r = TraceRecorder::new(0);
+        r.set_enabled(true);
+        assert!(!r.is_enabled());
+        r.record(Span::new(1, "request", 0, 1));
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn ring_caps_at_capacity_keeping_newest() {
+        let r = TraceRecorder::enabled(3);
+        for i in 0..5u64 {
+            r.record(Span::new(i, "chunk", i * 10, 1));
+        }
+        let spans = r.spans();
+        assert_eq!(spans.len(), 3);
+        assert_eq!(spans.iter().map(|s| s.trace).collect::<Vec<_>>(), vec![2, 3, 4]);
+        // recent(n) is the newest-n window, still oldest first
+        let recent = r.recent(2);
+        assert_eq!(recent.iter().map(|s| s.trace).collect::<Vec<_>>(), vec![3, 4]);
+    }
+
+    #[test]
+    fn record_many_folds_a_thread_buffer_in_order() {
+        let r = TraceRecorder::enabled(16);
+        let buf = vec![
+            Span::new(1, "chunk", 0, 4).device(0).chunk(7),
+            Span::new(1, "chunk", 4, 3).device(0).chunk(8).stolen(true),
+        ];
+        r.record_many(buf);
+        let spans = r.spans();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[1].chunk, Some(8));
+        assert!(spans[1].stolen);
+        assert!(!spans[0].stolen);
+    }
+
+    #[test]
+    fn monotonic_clock_never_regresses() {
+        let r = TraceRecorder::new(1);
+        let a = r.now_us();
+        let t = Instant::now();
+        let b = r.us_of(t);
+        assert!(b >= a);
+        // an instant that predates the epoch clamps to zero instead of
+        // panicking (saturating_duration_since)
+        assert_eq!(TraceRecorder::new(1).us_of(t - std::time::Duration::from_secs(5)), 0);
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_with_complete_events() {
+        let spans = vec![
+            Span::new(1, "request", 0, 100).mode("fast"),
+            Span::new(1, "chunk", 10, 20).device(1).chunk(3).stolen(true),
+            Span::new(0, "batch", 0, 100).items(4),
+        ];
+        let doc = Json::parse(&chrome_trace_json(&spans)).expect("chrome trace must parse");
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        // 3 spans + metadata rows for tid 0 and device lane 1
+        assert_eq!(events.len(), 5);
+        let chunk = &events[1];
+        assert_eq!(chunk.str_field("ph").unwrap(), "X");
+        assert_eq!(chunk.get("tid").unwrap().as_usize(), Some(2)); // device 1 -> tid 2
+        assert_eq!(chunk.get("ts").unwrap().as_usize(), Some(10));
+        assert_eq!(chunk.get("dur").unwrap().as_usize(), Some(20));
+        let args = chunk.get("args").unwrap();
+        assert_eq!(args.get("stolen").and_then(Json::as_bool), Some(true));
+        assert_eq!(args.get("chunk").and_then(Json::as_usize), Some(3));
+        assert_eq!(args.str_field("trace").unwrap(), "t000000000001");
+    }
+
+    #[test]
+    fn span_json_includes_only_set_dimensions() {
+        let s = Span::new(2, "device", 5, 50).device(0);
+        let j = span_json(&s);
+        assert_eq!(j.str_field("name").unwrap(), "device");
+        assert_eq!(j.get("device").and_then(Json::as_usize), Some(0));
+        assert!(j.get("chunk").is_none());
+        assert!(j.get("cache_hit").is_none());
+        assert_eq!(j.get("dur_us").and_then(Json::as_usize), Some(50));
+    }
+
+    #[test]
+    fn categories_partition_span_kinds() {
+        assert_eq!(Span::new(1, "request", 0, 1).cat(), "server");
+        assert_eq!(Span::new(1, "queued", 0, 1).cat(), "server");
+        assert_eq!(Span::new(0, "prefilter_leg", 0, 1).cat(), "funnel");
+        assert_eq!(Span::new(0, "rescore_leg", 0, 1).cat(), "funnel");
+        assert_eq!(Span::new(0, "batch", 0, 1).cat(), "fleet");
+        assert_eq!(Span::new(1, "chunk", 0, 1).cat(), "fleet");
+        assert_eq!(Span::new(0, "device", 0, 1).cat(), "fleet");
+    }
+}

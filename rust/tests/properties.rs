@@ -644,6 +644,112 @@ fn prop_exact_mode_bit_identical_to_prefunnel_pipeline() {
 }
 
 #[test]
+fn prop_device_spans_reconcile_with_fleet_accounting() {
+    // The tracing layer's books must balance against the scheduler's,
+    // for ANY fleet shape × steal policy × search mode: the per-device
+    // chunk spans the recorder retains are exactly the work items the
+    // fleet's executed counters claim, the span steal tags equal the
+    // steal counters, and per-device span time equals the cumulative
+    // compute+steal timeline — span recording observes the schedule, it
+    // never invents or drops work.
+    check("spans == executed-item accounting", 10, |rng| {
+        use std::sync::Arc;
+        use swaphi::coordinator::{NativeFactory, SearchConfig, SearchMode, SearchSession};
+        use swaphi::db::chunk::ChunkPlanConfig;
+        use swaphi::trace::TraceRecorder;
+        let n = rng.range(20, 80);
+        let idx = Index::build(random_db(rng, n, 70));
+        let devices = rng.range(1, 5);
+        let steal = rng.below(2) == 1;
+        let mode = if rng.below(2) == 1 { SearchMode::Fast } else { SearchMode::Exact };
+        let rates: Vec<f64> = if rng.below(2) == 1 {
+            (0..devices).map(|_| 0.2 + 1.8 * rng.f64()).collect()
+        } else {
+            Vec::new()
+        };
+        let mut session = SearchSession::new(
+            &idx,
+            Scoring::swaphi_default(),
+            SearchConfig {
+                devices,
+                steal,
+                rates: rates.clone(),
+                sim: None,
+                chunk: ChunkPlanConfig { target_padded_residues: 1024 },
+                ..Default::default()
+            },
+        );
+        let recorder = Arc::new(TraceRecorder::enabled(1 << 16));
+        session.set_trace(Arc::clone(&recorder));
+        let nq = rng.range(1, 4);
+        let queries: Vec<(String, Vec<u8>)> =
+            (0..nq).map(|i| (format!("q{i}"), rand_seq(rng, 1, 45))).collect();
+        session
+            .search_batch_mode(&NativeFactory(EngineKind::InterSP), &queries, mode)
+            .unwrap();
+
+        let spans = recorder.spans();
+        let snaps = session.device_snapshots();
+        let timeline = session.device_set().timeline();
+        let shape =
+            format!("d={devices} steal={steal} rates={rates:?} mode={} nq={nq}", mode.name());
+        for d in 0..devices {
+            let chunks: Vec<&swaphi::trace::Span> = spans
+                .iter()
+                .filter(|s| s.name == "chunk" && s.device == Some(d))
+                .collect();
+            prop_eq(
+                chunks.len() as u64,
+                snaps[d].executed,
+                &format!("chunk spans vs executed, device {d} ({shape})"),
+            )?;
+            prop_eq(
+                chunks.iter().filter(|s| s.stolen).count() as u64,
+                snaps[d].stolen,
+                &format!("stolen tags vs steal counter, device {d} ({shape})"),
+            )?;
+            let span_us: u64 = chunks.iter().map(|s| s.dur_us).sum();
+            prop_eq(
+                span_us,
+                timeline[d].compute_us + timeline[d].steal_us,
+                &format!("span time vs timeline busy, device {d} ({shape})"),
+            )?;
+            // every chunk span sits inside its device span's extent
+            if let Some(dspan) =
+                spans.iter().find(|s| s.name == "device" && s.device == Some(d))
+            {
+                for c in &chunks {
+                    prop_assert(
+                        dspan.start_us <= c.start_us && c.end_us() <= dspan.end_us(),
+                        format!("chunk span escapes device span, device {d} ({shape})"),
+                    )?;
+                }
+            } else {
+                prop_assert(
+                    chunks.is_empty(),
+                    format!("chunk spans without a device span, device {d} ({shape})"),
+                )?;
+            }
+        }
+        // global conservation: the fleet's spans cover the batch's work
+        // exactly once
+        prop_eq(
+            spans.iter().filter(|s| s.name == "chunk").count() as u64,
+            snaps.iter().map(|s| s.executed).sum::<u64>(),
+            &format!("total chunk spans ({shape})"),
+        )?;
+        if mode == SearchMode::Fast {
+            prop_assert(
+                spans.iter().any(|s| s.name == "prefilter_leg")
+                    && spans.iter().any(|s| s.name == "rescore_leg"),
+                format!("fast mode must record both funnel legs ({shape})"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_topk_consistency() {
     check("topk is consistent with scores", 20, |rng| {
         use swaphi::coordinator::{Coordinator, NativeFactory, SearchConfig};

@@ -6,7 +6,6 @@
 //! the coalescer actually forms cross-request batches (size > 1, read
 //! off the batch-size histogram).
 
-use std::sync::atomic::Ordering::Relaxed;
 use std::sync::{Arc, Barrier};
 use std::thread;
 
@@ -346,7 +345,7 @@ fn cache_hit_returns_identical_payload() {
     let second = c2.search("q", &q, None, None).unwrap();
     assert_eq!(second.get("cached"), Some(&Json::Bool(true)));
     assert_eq!(first.get("hits"), second.get("hits"), "cached payload must be identical");
-    assert_eq!(handle.metrics().cache_hits.load(Relaxed), 1);
+    assert_eq!(handle.metrics().cache_hits.get(), 1);
 
     // per-request top_k truncates the same cached entry
     let third = c2.search("q", &q, Some(2), None).unwrap();
@@ -390,6 +389,118 @@ fn expired_deadline_is_refused_not_searched() {
     let resp = c.search("q", &query_letters(20, 1), None, Some(1)).unwrap();
     assert!(!client::is_ok(&resp));
     assert_eq!(client::error_of(&resp).0, "deadline_exceeded");
-    assert_eq!(handle.metrics().expired.load(Relaxed), 1);
+    assert_eq!(handle.metrics().expired.get(), 1);
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn search_response_echoes_trace_id_and_trace_op_returns_spans() {
+    let (handle, _index, _scoring) = start_server(80, 23, tcp_cfg(0));
+    let mut c = Client::connect(&handle.connect_addr()).unwrap();
+    let resp = c.search("q", &query_letters(36, 4), None, None).unwrap();
+    assert!(client::is_ok(&resp), "{resp}");
+    let tid = resp.str_field("trace").unwrap().to_string();
+    assert!(tid.starts_with('t') && tid.len() == 13, "trace id shape: {tid}");
+
+    let tr = c.trace(None).unwrap();
+    assert!(client::is_ok(&tr), "{tr}");
+    let Some(Json::Arr(spans)) = tr.get("spans") else { panic!("spans must be an array: {tr}") };
+    assert!(!spans.is_empty(), "{tr}");
+    // the request lifecycle is visible end to end: queue wait, the batch,
+    // per-device work, per-chunk kernel calls, and the request span
+    let names: Vec<&str> = spans.iter().map(|s| s.str_field("name").unwrap()).collect();
+    for want in ["queued", "batch", "device", "chunk", "request"] {
+        assert!(names.contains(&want), "missing {want} span in {names:?}");
+    }
+    for s in spans {
+        assert!(s.get("start_us").is_some() && s.get("dur_us").is_some(), "{s}");
+        assert!(s.str_field("trace").unwrap().starts_with('t'), "{s}");
+    }
+    // the request span carries the id the search response echoed
+    let request = spans.iter().find(|s| s.str_field("name").unwrap() == "request").unwrap();
+    assert_eq!(request.str_field("trace").unwrap(), tid, "{tr}");
+    // chunk spans nest inside their device span's extent
+    for chunk in spans.iter().filter(|s| s.str_field("name").unwrap() == "chunk") {
+        let dev = chunk.get("device").unwrap().as_f64().unwrap();
+        let cs = chunk.get("start_us").unwrap().as_f64().unwrap();
+        let ce = cs + chunk.get("dur_us").unwrap().as_f64().unwrap();
+        let host = spans
+            .iter()
+            .filter(|s| s.str_field("name").unwrap() == "device")
+            .find(|s| {
+                let ds = s.get("start_us").unwrap().as_f64().unwrap();
+                let de = ds + s.get("dur_us").unwrap().as_f64().unwrap();
+                s.get("device").unwrap().as_f64() == Some(dev) && ds <= cs && ce <= de
+            });
+        assert!(host.is_some(), "chunk span outside any device span: {chunk}");
+    }
+
+    // a bounded window returns exactly the newest n spans
+    let tr2 = c.trace(Some(2)).unwrap();
+    let Some(Json::Arr(win)) = tr2.get("spans") else { panic!("{tr2}") };
+    assert_eq!(win.len(), 2, "{tr2}");
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn metrics_op_serves_prometheus_text() {
+    let (handle, _index, _scoring) = start_server(60, 29, tcp_cfg(0));
+    let mut c = Client::connect(&handle.connect_addr()).unwrap();
+    let resp = c.search("q", &query_letters(30, 8), None, None).unwrap();
+    assert!(client::is_ok(&resp), "{resp}");
+    let text = c.metrics().unwrap();
+    for needle in [
+        "# TYPE swaphi_requests_admitted_total counter",
+        "# TYPE swaphi_batch_size histogram",
+        "swaphi_batch_size_bucket{le=\"+Inf\"}",
+        "swaphi_batch_size_sum",
+        "swaphi_batch_size_count",
+        "# TYPE swaphi_request_latency_microseconds histogram",
+        "# TYPE swaphi_queue_depth gauge",
+        "# TYPE swaphi_trace_spans_retained gauge",
+        "swaphi_device_compute_microseconds_total{device=\"0\"}",
+        "swaphi_device_steal_microseconds_total{device=\"1\"}",
+    ] {
+        assert!(text.contains(needle), "missing {needle:?} in exposition:\n{text}");
+    }
+    assert!(text.contains("swaphi_requests_admitted_total 1"), "{text}");
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn slow_query_log_emits_structured_record() {
+    // the 300 ms coalescing window alone pushes request latency over the
+    // 50 ms threshold deterministically (the handicap knob skews observed
+    // device seconds for the tuner, never wall time)
+    let cfg = ServerConfig { batch_window_ms: 300, slow_query_ms: 50, ..tcp_cfg(0) };
+    let (handle, _index, _scoring) = start_server(50, 33, cfg);
+    let mut c = Client::connect(&handle.connect_addr()).unwrap();
+    let resp = c.search("slowq", &query_letters(32, 6), None, None).unwrap();
+    assert!(client::is_ok(&resp), "{resp}");
+
+    let log = handle.slow_log();
+    assert_eq!(log.len(), 1, "exactly one slow-query record: {log:?}");
+    let rec = Json::parse(&log[0]).unwrap();
+    assert_eq!(rec.get("slow_query"), Some(&Json::Bool(true)), "{rec}");
+    assert_eq!(rec.str_field("query_id").unwrap(), "slowq", "{rec}");
+    assert_eq!(rec.str_field("trace").unwrap(), resp.str_field("trace").unwrap(), "{rec}");
+    assert_eq!(rec.str_field("mode").unwrap(), "exact", "{rec}");
+    assert_eq!(rec.get("batch_size").unwrap().as_f64(), Some(1.0), "{rec}");
+    assert!(rec.get("latency_ms").unwrap().as_f64().unwrap() >= 50.0, "{rec}");
+    assert_eq!(rec.get("threshold_ms").unwrap().as_f64(), Some(50.0), "{rec}");
+    let Some(Json::Arr(devs)) = rec.get("devices") else { panic!("{rec}") };
+    assert_eq!(devs.len(), 2, "one timeline entry per device: {rec}");
+    for d in devs {
+        for key in ["device", "compute_us", "steal_us", "idle_us", "utilization"] {
+            assert!(d.get(key).is_some(), "device summary missing {key}: {rec}");
+        }
+    }
+    // the same event is visible through stats and the registry
+    let stats = c.stats().unwrap();
+    assert_eq!(
+        stats.get("stats").unwrap().get("slow_queries").unwrap().as_f64(),
+        Some(1.0),
+        "{stats}"
+    );
     handle.shutdown().unwrap();
 }
