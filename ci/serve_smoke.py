@@ -1,0 +1,548 @@
+#!/usr/bin/env python3
+"""Parameterized multi-daemon smoke driver for the swaphi service tier.
+
+One harness, two scenarios, shared daemon plumbing — this replaces the
+five copy-pasted serve-smoke shell blocks that used to live inline in
+.github/workflows/ci.yml:
+
+  serve    — the single-process daemon matrix: 1-device baseline,
+             2-device shard, skewed-rates fleet, self-tuning fleet with
+             a handicapped device, and the fast-mode funnel daemon.
+             Every configuration must produce byte-identical responses
+             to the baseline (the scatter-gather determinism claim),
+             and the metrics / trace / stats surfaces are validated.
+
+  cluster  — three partitioned backends behind the scatter-gather
+             `route` tier: query/stats/metrics round-trips, byte-level
+             identity of the routed response to a single whole-database
+             daemon, SIGKILL of one backend mid-stream (the answer must
+             degrade to `partial: true` over the surviving partitions,
+             checked against a Python re-merge of the survivors), and
+             recovery to full answers once the backend restarts.
+
+Usage:
+    python3 ci/serve_smoke.py --bin rust/target/release/swaphi --scenario serve
+    python3 ci/serve_smoke.py --bin rust/target/release/swaphi --scenario cluster
+
+On any failure the driver dumps every daemon's log and its span ring
+(the `trace` op — where slow-query diagnostics live) before exiting
+nonzero, so a flake in CI is debuggable from the job output alone.
+"""
+
+import argparse
+import json
+import os
+import re
+import signal
+import socket
+import subprocess
+import sys
+import tempfile
+
+PROTOCOL_VERSION = 1
+
+# Distinct query sequences per leg so no daemon- or router-side response
+# cache can turn a comparison into a self-comparison.
+QUERY_SEQS = [
+    "MKTAYIAKQRQISFVKSHFSRQLEERLGLIEVQ",
+    "APNLVRMVIDLFSGQMLTRAELEAALHTMVPQ",
+    "GSHMKDLLEVFKAANPQITGALSRWGQDVLSKK",
+    "WQNDLRATGITSMPEHFAKKVGCSLEAVRQWFE",
+]
+
+
+class Proto:
+    """Minimal line-delimited JSON protocol client (docs/protocol.md)."""
+
+    def __init__(self, addr, timeout=60):
+        host, port = addr.rsplit(":", 1)
+        self.sock = socket.create_connection((host, int(port)), timeout=timeout)
+        self.buf = b""
+
+    def request_raw(self, **fields):
+        obj = {"v": PROTOCOL_VERSION, **fields}
+        self.sock.sendall((json.dumps(obj) + "\n").encode())
+        while b"\n" not in self.buf:
+            chunk = self.sock.recv(65536)
+            if not chunk:
+                raise RuntimeError(f"server closed the connection mid-{fields.get('op')}")
+            self.buf += chunk
+        line, self.buf = self.buf.split(b"\n", 1)
+        return line.decode()
+
+    def request(self, **fields):
+        return json.loads(self.request_raw(**fields))
+
+    def search(self, query_id, query, top_k=None, mode=None):
+        fields = {"op": "search", "query_id": query_id, "query": query}
+        if top_k is not None:
+            fields["top_k"] = top_k
+        if mode is not None:
+            fields["mode"] = mode
+        return self.request(**fields)
+
+    def search_raw(self, query_id, query):
+        return self.request_raw(op="search", query_id=query_id, query=query)
+
+    def hello(self):
+        return self.request(op="hello")
+
+    def stats(self):
+        return self.request(op="stats")["stats"]
+
+    def metrics(self):
+        return self.request(op="metrics")["metrics"]
+
+    def trace(self):
+        return self.request(op="trace").get("spans", [])
+
+    def close(self):
+        self.sock.close()
+
+
+class Daemon:
+    """One managed swaphi process (serve or route) with a captured log."""
+
+    def __init__(self, name, argv, addr, log_path):
+        self.name = name
+        self.argv = argv
+        self.addr = addr
+        self.log_path = log_path
+        self.killed = False
+        self.log = open(log_path, "ab")
+        self.proc = subprocess.Popen(argv, stdout=self.log, stderr=subprocess.STDOUT)
+
+    def sigint(self):
+        if self.proc.poll() is None:
+            self.proc.send_signal(signal.SIGINT)
+
+    def sigkill(self):
+        self.killed = True
+        self.proc.kill()
+
+    def alive(self):
+        return self.proc.poll() is None
+
+
+class Driver:
+    def __init__(self, binary, workdir):
+        self.bin = binary
+        self.workdir = workdir
+        self.daemons = []
+
+    # -- process plumbing --------------------------------------------------
+
+    def cli(self, *args, expect=0):
+        """Run a swaphi subcommand to completion; fail (with full daemon
+        dumps) on an unexpected exit code. Returns captured stdout."""
+        p = subprocess.run([self.bin, *args], capture_output=True, text=True)
+        if p.returncode != expect:
+            self.fail(
+                f"`swaphi {' '.join(args)}` exited {p.returncode} (wanted {expect})\n"
+                f"stdout:\n{p.stdout}\nstderr:\n{p.stderr}"
+            )
+        return p.stdout
+
+    def spawn(self, name, addr, *args):
+        d = Daemon(
+            name,
+            [self.bin, *args],
+            addr,
+            os.path.join(self.workdir, f"{name}.log"),
+        )
+        self.daemons.append(d)
+        self.wait_ready(d)
+        return d
+
+    def serve(self, name, port, index, *extra):
+        return self.spawn(
+            name,
+            f"127.0.0.1:{port}",
+            "serve", "--index", index, "--listen", f"127.0.0.1:{port}",
+            "--set", "sim.enabled=false", *extra,
+        )
+
+    def wait_ready(self, daemon):
+        # the typed ping retry (PR 8's `--retries` fix): connect failures
+        # are retried while the daemon binds, protocol failures — a live
+        # process answering garbage — fail fast instead of spinning
+        p = subprocess.run(
+            [self.bin, "query", "--connect", daemon.addr, "--ping",
+             "--retries", "60", "--retry-ms", "250"],
+            capture_output=True, text=True,
+        )
+        if p.returncode != 0:
+            self.fail(f"daemon {daemon.name} at {daemon.addr} never answered ping:\n{p.stderr}")
+
+    def shutdown_all(self):
+        """SIGINT every live daemon and require clean (zero) exits —
+        graceful drain is part of the contract under test."""
+        for d in self.daemons:
+            d.sigint()
+        for d in self.daemons:
+            if d.killed:
+                d.proc.wait(timeout=30)
+                continue
+            code = d.proc.wait(timeout=30)
+            self.check(code == 0, f"daemon {d.name} exited {code} on SIGINT (wanted 0)")
+
+    # -- failure reporting -------------------------------------------------
+
+    def check(self, cond, msg):
+        if not cond:
+            self.fail(msg)
+
+    def fail(self, msg):
+        print(f"::error::{msg}")
+        self.dump_all()
+        for d in self.daemons:
+            if d.alive():
+                d.proc.kill()
+        sys.exit(1)
+
+    def dump_all(self):
+        """Every daemon's log plus its span ring — the trace op retains
+        the recent request spans (incl. what slow-query logging keys on),
+        which is usually enough to reconstruct a wedged fleet."""
+        for d in self.daemons:
+            d.log.flush()
+            print(f"\n===== {d.name} log ({d.log_path}) =====")
+            try:
+                sys.stdout.write(open(d.log_path, errors="replace").read())
+            except OSError as e:
+                print(f"(unreadable: {e})")
+            if not d.alive():
+                print(f"----- {d.name}: process not running (exit {d.proc.poll()}) -----")
+                continue
+            try:
+                p = Proto(d.addr, timeout=5)
+                spans = p.trace()
+                print(f"----- {d.name} span ring ({len(spans)} spans, last 40) -----")
+                for s in spans[-40:]:
+                    print(json.dumps(s))
+                p.close()
+            except Exception as e:  # best-effort: the daemon may be wedged
+                print(f"----- {d.name} span ring unavailable: {e} -----")
+
+
+# -- shared validators -----------------------------------------------------
+
+
+def validate_prometheus(drv, text, families, require_cache_hit=False):
+    """Every sample line well-formed; histograms cumulative, +Inf == _count."""
+    types, samples = {}, {}
+    for line in text.splitlines():
+        if not line.strip() or line.startswith("# HELP "):
+            continue
+        if line.startswith("# TYPE "):
+            name, kind = line[len("# TYPE "):].rsplit(" ", 1)
+            drv.check(kind in ("counter", "gauge", "histogram"), f"bad TYPE line: {line!r}")
+            types[name] = kind
+            continue
+        m = re.fullmatch(r"([a-zA-Z_:][a-zA-Z0-9_:]*)(\{[^{}]*\})? (-?[0-9eE+.]+|\+Inf|NaN)", line)
+        drv.check(m is not None, f"malformed sample line: {line!r}")
+        samples.setdefault(m.group(1), []).append((m.group(2) or "", float(m.group(3))))
+    for fam in families:
+        drv.check(fam in types, f"missing metric family {fam}; have {sorted(types)}")
+    if require_cache_hit:
+        drv.check(
+            samples["swaphi_cache_hits_total"][0][1] >= 1, "cache hit not visible in metrics"
+        )
+    for fam, kind in types.items():
+        if kind == "histogram":
+            buckets = samples.get(fam + "_bucket", [])
+            drv.check(bool(buckets), f"{fam}: no buckets")
+            vals = [v for _, v in buckets]
+            drv.check(vals == sorted(vals), f"{fam}: buckets not cumulative: {vals}")
+            drv.check(buckets[-1][0] == '{le="+Inf"}', f"{fam}: last bucket {buckets[-1]}")
+            drv.check(vals[-1] == samples[fam + "_count"][0][1], f"{fam}: +Inf != _count")
+            drv.check(fam + "_sum" in samples, f"{fam}: missing _sum")
+        else:
+            drv.check(fam in samples, f"{fam}: declared but no samples")
+    print(f"metrics exposition ok: {len(types)} families, "
+          f"{sum(len(v) for v in samples.values())} samples")
+
+
+def hit_tuples(resp):
+    return [(h["seq"], h["subject"], h["len"], h["score"]) for h in resp["hits"]]
+
+
+def merged_survivors(responses, k):
+    """The router's merge, re-derived independently in Python: pool the
+    surviving partitions' hits, order by (score desc, global seq asc),
+    truncate to the session cap."""
+    pool = [t for r in responses for t in hit_tuples(r)]
+    pool.sort(key=lambda t: (-t[3], t[0]))
+    return pool[:k]
+
+
+def strip_trace(resp):
+    r = dict(resp)
+    r.pop("trace", None)
+    return r
+
+
+def hits_bytes(raw_line, drv):
+    m = re.search(r'"hits":\[.*\]', raw_line)
+    drv.check(m is not None, f"response has no hits array: {raw_line}")
+    return m.group(0)
+
+
+def write_fasta(path, records):
+    with open(path, "w") as f:
+        for rid, seq in records:
+            f.write(f">{rid}\n{seq}\n")
+
+
+# -- scenario: serve -------------------------------------------------------
+
+
+def scenario_serve(drv, base_port):
+    db = os.path.join(drv.workdir, "db.fasta")
+    idx = os.path.join(drv.workdir, "db.idx")
+    qf = os.path.join(drv.workdir, "q.fasta")
+    drv.cli("synth", "--preset", "tiny", "--n", "48", "--seed", "7", "--out", db)
+    drv.cli("index", "--in", db, "--out", idx)
+    write_fasta(qf, [("q1", QUERY_SEQS[0])])
+
+    def query(addr, *extra):
+        return drv.cli("query", "--connect", addr, "--query", qf, *extra)
+
+    # 1-device baseline: the byte-level reference for every other fleet
+    s1 = drv.serve("serve-1dev", base_port, idx)
+    baseline = query(s1.addr)
+    drv.check("[cached]" in query(s1.addr), "repeat query must hit the response cache")
+    stats = json.loads(drv.cli("query", "--connect", s1.addr, "--stats"))
+    drv.check("devices" in stats, f"stats missing devices: {stats}")
+
+    # 2 sharded devices: scatter-gather must not change a byte
+    s2 = drv.serve("serve-2dev", base_port + 1, idx, "--devices", "2")
+    drv.check(query(s2.addr) == baseline, "2-device response differs from 1-device response")
+
+    # skewed heterogeneous fleet: weighted shards + rate-aware stealing
+    s3 = drv.serve("serve-skewed", base_port + 2, idx, "--device-rates", "1.0,0.25")
+    drv.check(query(s3.addr) == baseline, "skewed-rates response differs from baseline")
+    skew_stats = json.loads(drv.cli("query", "--connect", s3.addr, "--stats"))
+    rates = [d.get("rate") for d in skew_stats.get("devices", [])]
+    drv.check(0.25 in rates, f"skewed daemon stats must report the 0.25 device rate: {rates}")
+
+    # self-tuning fleet on a miscalibrated (handicapped) device
+    s4 = drv.serve(
+        "serve-tuned", base_port + 3, idx,
+        "--devices", "2", "--set", "tune.enabled=true", "--set", "tune.warmup_batches=2",
+        "--set", "devices.handicap=[1.0,6.0]", "--set", "search.chunk_residues=1024",
+    )
+    drv.check(query(s4.addr) == baseline, "self-tuned response differs from baseline")
+    t = json.loads(drv.cli("query", "--connect", s4.addr, "--stats"))
+    conf = [d["rate_configured"] for d in t["devices"]]
+    cal = [d["rate_calibrated"] for d in t["devices"]]
+    drv.check(conf == [1.0, 1.0], f"configured rates must stay uniform: {conf}")
+    drv.check(cal[0] > 2.0 * cal[1], f"calibration must expose the 6x-handicapped device: {cal}")
+    drv.check(t["resharded_total"] >= 1, f"tuned daemon never resharded: {t}")
+    drv.check(t["tune"]["enabled"] is True, f"tune must report enabled: {t}")
+    print(f"tuned daemon ok: configured {conf}, calibrated {cal}, "
+          f"resharded {t['resharded_total']}x")
+
+    # fast-mode funnel daemon: the per-request exact override must stay
+    # byte-identical to the exact baseline (no funnel contamination)
+    s5 = drv.serve(
+        "serve-fast", base_port + 4, idx,
+        "--mode", "fast", "--device-rates", "1.0,0.25",
+        "--set", "search.chunk_residues=1024",
+    )
+    query(s5.addr)  # fast-mode round trip drives the prefilter counters
+    drv.check(
+        query(s5.addr, "--mode", "exact") == baseline,
+        "--mode exact on the fast daemon differs from the exact baseline",
+    )
+    f = json.loads(drv.cli("query", "--connect", s5.addr, "--stats"))
+    drv.check(f["mode"] == "fast", f"fast daemon mode: {f.get('mode')}")
+    pf = f["prefilter"]
+    drv.check(pf["candidates"] > 0 and pf["survivors"] > 0, f"prefilter counters dead: {pf}")
+    drv.check(0.0 < pf["survivor_fraction"] <= 1.0, f"survivor_fraction out of range: {pf}")
+    print(f"fast daemon ok: mode {f['mode']}, prefilter {pf}")
+
+    # observability: Prometheus exposition on the daemon that served the
+    # cache hit, span model on the funnel daemon after a 3-query batch
+    p1 = Proto(s1.addr)
+    validate_prometheus(
+        drv, p1.metrics(),
+        ("swaphi_requests_admitted_total", "swaphi_cache_hits_total",
+         "swaphi_batches_total", "swaphi_queue_depth", "swaphi_batch_size",
+         "swaphi_request_latency_microseconds",
+         "swaphi_device_compute_microseconds_total"),
+        require_cache_hit=True,
+    )
+    p1.close()
+
+    tf = os.path.join(drv.workdir, "trace-q.fasta")
+    write_fasta(tf, [(f"t{i}", s) for i, s in enumerate(QUERY_SEQS[1:4], 1)])
+    drv.cli("query", "--connect", s5.addr, "--query", tf)
+    p5 = Proto(s5.addr)
+    spans = p5.trace()
+    p5.close()
+    drv.check(bool(spans), "trace op returned no spans")
+    for s in spans:
+        for k in ("trace", "name", "start_us", "dur_us"):
+            drv.check(k in s, f"span missing {k}: {s}")
+        drv.check(re.fullmatch(r"t[0-9a-f]{12}", s["trace"]) is not None,
+                  f"bad trace id: {s}")
+    names = {s["name"] for s in spans}
+    for want in ("request", "queued", "batch", "device", "chunk",
+                 "prefilter_leg", "rescore_leg"):
+        drv.check(want in names, f"missing {want} spans: {sorted(names)}")
+    devs = [s for s in spans if s["name"] == "device"]
+    for c in (s for s in spans if s["name"] == "chunk"):
+        end = c["start_us"] + c["dur_us"]
+        drv.check(
+            any(d["device"] == c["device"] and d["start_us"] <= c["start_us"]
+                and end <= d["start_us"] + d["dur_us"] for d in devs),
+            f"chunk span outside any device span: {c}",
+        )
+    print(f"trace ok: {len(spans)} spans, "
+          f"devices {sorted({s['device'] for s in spans if 'device' in s})}, "
+          f"{sum(1 for s in spans if s.get('stolen'))} stolen")
+
+    drv.shutdown_all()
+    print("serve smoke: all five daemon configurations green")
+
+
+# -- scenario: cluster -----------------------------------------------------
+
+
+def scenario_cluster(drv, base_port):
+    db = os.path.join(drv.workdir, "db.fasta")
+    idx = os.path.join(drv.workdir, "db.idx")
+    qf = os.path.join(drv.workdir, "q.fasta")
+    drv.cli("synth", "--preset", "tiny", "--n", "120", "--seed", "7", "--out", db)
+    drv.cli("index", "--in", db, "--out", idx)
+    drv.cli("index", "--in", db, "--out", idx, "--partitions", "3")
+    for p in range(3):
+        for path in (f"{idx}.p{p}", f"{idx}.p{p}.pmeta"):
+            drv.check(os.path.exists(path), f"index --partitions did not emit {path}")
+    write_fasta(qf, [("q1", QUERY_SEQS[0])])
+
+    single = drv.serve("single", base_port, idx)
+    backends = [
+        drv.serve(f"backend-{p}", base_port + 1 + p, f"{idx}.p{p}") for p in range(3)
+    ]
+    router_addr = f"127.0.0.1:{base_port + 4}"
+    router = drv.spawn(
+        "router", router_addr,
+        "route", "--backends", ",".join(b.addr for b in backends),
+        "--listen", router_addr, "--backend-timeout-ms", "5000", "--retries", "1",
+    )
+
+    # CLI round trip: the routed answer renders exactly like the direct one
+    routed_out = drv.cli("query", "--connect", router.addr, "--query", qf)
+    direct_out = drv.cli("query", "--connect", single.addr, "--query", qf)
+    drv.check(routed_out == direct_out, "routed CLI output differs from the single daemon")
+
+    # fleet identity: one logical daemon over the whole database, with
+    # the same generation fingerprint the unpartitioned daemon reports
+    pr, ps = Proto(router.addr), Proto(single.addr)
+    hr, hs = pr.hello(), ps.hello()
+    drv.check(hr["generation"] == hs["generation"],
+              f"router generation {hr['generation']} != daemon {hs['generation']}")
+    drv.check((hr["partition"], hr["partitions"]) == (0, 1), f"router hello: {hr}")
+    drv.check(hr["n_total"] == hs["n_total"], f"n_total mismatch: {hr} vs {hs}")
+    session_k = hr["top_k"]
+    drv.check(session_k >= 1, f"router hello has no usable top_k: {hr}")
+
+    # byte identity: same fresh query to both, hits arrays compared as
+    # raw bytes (the JSON encoder is deterministic), full responses
+    # compared with only the volatile trace id stripped
+    raw_r = pr.search_raw("ident", QUERY_SEQS[1])
+    raw_s = ps.search_raw("ident", QUERY_SEQS[1])
+    drv.check(hits_bytes(raw_r, drv) == hits_bytes(raw_s, drv),
+              f"routed hits differ from direct hits:\n{raw_r}\n{raw_s}")
+    rr, rs = json.loads(raw_r), json.loads(raw_s)
+    drv.check(rr["ok"] and "partial" not in rr, f"healthy fleet answered partial: {rr}")
+    drv.check(strip_trace(rr) == strip_trace(rs),
+              f"routed response differs beyond the trace id:\n{raw_r}\n{raw_s}")
+
+    st = pr.stats()
+    drv.check(st.get("role") == "router", f"router stats role: {st.get('role')}")
+    drv.check(len(st["backends"]) == 3, f"stats must list 3 backends: {st}")
+    drv.check(all(b["healthy"] for b in st["backends"]), f"unhealthy backend: {st}")
+    drv.check(all(b["requests"] >= 1 for b in st["backends"]), f"idle backend: {st}")
+
+    validate_prometheus(
+        drv, pr.metrics(),
+        ("swaphi_router_requests_total", "swaphi_router_partial_total",
+         "swaphi_backend_requests_total", "swaphi_backend_healthy",
+         "swaphi_router_request_latency_microseconds",
+         "swaphi_backend_latency_microseconds"),
+    )
+
+    # fault injection: SIGKILL one backend mid-stream. The next answer
+    # must degrade to partial over the surviving partitions — equal to
+    # an independent Python re-merge of the survivors' own answers.
+    backends[1].sigkill()
+    resp = pr.search("kill1", QUERY_SEQS[2])
+    drv.check(resp.get("ok"), f"a dark partition must degrade, not error: {resp}")
+    drv.check(resp.get("partial") is True, f"missing partial flag: {resp}")
+    drv.check(resp.get("missing_partitions") == [1], f"missing_partitions: {resp}")
+    survivors = []
+    for b in (backends[0], backends[2]):
+        pb = Proto(b.addr)
+        survivors.append(pb.search("kill1-direct", QUERY_SEQS[2], top_k=session_k))
+        pb.close()
+    drv.check(
+        hit_tuples(resp) == merged_survivors(survivors, session_k),
+        f"partial answer is not the merge of the survivors:\n{resp}\n{survivors}",
+    )
+    st = pr.stats()
+    drv.check([b["healthy"] for b in st["backends"]] == [True, False, True],
+              f"health after kill: {st}")
+    print(f"kill leg ok: partial answer over partitions [0, 2], {len(resp['hits'])} hits")
+
+    # recovery: restart the killed backend on the same port; the router
+    # re-runs the generation handshake and resumes full answers
+    backends[1] = drv.serve("backend-1-restarted", base_port + 2, f"{idx}.p1")
+    raw_r = pr.search_raw("recovered", QUERY_SEQS[3])
+    raw_s = ps.search_raw("recovered", QUERY_SEQS[3])
+    rr = json.loads(raw_r)
+    drv.check(rr["ok"] and "partial" not in rr,
+              f"recovered fleet must answer complete: {rr}")
+    drv.check(hits_bytes(raw_r, drv) == hits_bytes(raw_s, drv),
+              f"recovered hits differ from direct hits:\n{raw_r}\n{raw_s}")
+    st = pr.stats()
+    drv.check(all(b["healthy"] for b in st["backends"]), f"health after restart: {st}")
+    print("restart leg ok: full answers restored after rehandshake")
+
+    # the router's own span ring: a route span plus per-backend children
+    names = {s["name"] for s in pr.trace()}
+    drv.check("route" in names and "backend" in names,
+              f"router span ring missing route/backend spans: {sorted(names)}")
+
+    pr.close()
+    ps.close()
+    drv.shutdown_all()
+    print("cluster smoke: routed identity, fault injection and recovery green")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bin", required=True, help="path to the swaphi binary")
+    ap.add_argument("--scenario", required=True, choices=("serve", "cluster"))
+    ap.add_argument("--base-port", type=int, default=None,
+                    help="first port of the daemon block (default 7979 serve, 7990 cluster)")
+    ap.add_argument("--workdir", default=None,
+                    help="scratch directory (default: a fresh temp dir)")
+    args = ap.parse_args()
+
+    base_port = args.base_port or {"serve": 7979, "cluster": 7990}[args.scenario]
+    workdir = args.workdir or tempfile.mkdtemp(prefix=f"swaphi-{args.scenario}-smoke-")
+    os.makedirs(workdir, exist_ok=True)
+    drv = Driver(args.bin, workdir)
+    try:
+        {"serve": scenario_serve, "cluster": scenario_cluster}[args.scenario](drv, base_port)
+    except SystemExit:
+        raise
+    except Exception as e:  # noqa: BLE001 — anything unexpected gets the full dump
+        drv.fail(f"{args.scenario} smoke crashed: {type(e).__name__}: {e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -231,6 +231,75 @@ class TestFunnelGateKeys(GateHarness):
         self.assertEqual(spec["workload"]["qlen"], 128)
 
 
+class TestClusterGateKeys(GateHarness):
+    """The shipped router gates (ci/bench-baseline.json) enforced over a
+    BENCH_cluster.json-shaped artifact: efficiency >= 1/1.15 (router
+    overhead <= 15% vs the direct daemon) and completeness == 1.0
+    (scatter-gather merges byte-exactly or not at all).
+    """
+
+    CLUSTER_METRICS = {
+        "router.efficiency": {"baseline": None, "min": 0.8696},
+        "router.completeness": {"baseline": None, "min": 1.0},
+        "router.speedup_3": {"baseline": None, "min": None},
+    }
+
+    def cluster_artifact(self, efficiency, completeness, speedup_3=1.5):
+        return {
+            "preset": "tiny",
+            "n_seqs": 600,
+            "qlen": 256,
+            "router": {
+                "efficiency": efficiency,
+                "completeness": completeness,
+                "speedup_3": speedup_3,
+            },
+        }
+
+    def run_cluster(self, efficiency, completeness, **kw):
+        baseline = make_baseline(
+            self.CLUSTER_METRICS,
+            workload={"preset": "tiny", "n_seqs": 600, "qlen": 256},
+        )
+        return self.run_gate(baseline, self.cluster_artifact(efficiency, completeness, **kw))
+
+    def test_router_overhead_beyond_15_percent_fails(self):
+        p = self.run_cluster(0.86, 1.0)
+        self.assertEqual(p.returncode, 1, p.stdout + p.stderr)
+        self.assertIn("router.efficiency", p.stdout)
+        self.assertIn("FAIL(floor)", p.stdout)
+
+    def test_router_overhead_within_15_percent_passes(self):
+        p = self.run_cluster(0.93, 1.0)
+        self.assertEqual(p.returncode, 0, p.stdout + p.stderr)
+        self.assertIn("green", p.stdout)
+
+    def test_any_merge_divergence_fails(self):
+        # 23 of 24 identical answers is not "almost right", it is wrong
+        p = self.run_cluster(1.0, 0.979)
+        self.assertEqual(p.returncode, 1, p.stdout + p.stderr)
+        self.assertIn("router.completeness", p.stdout)
+        self.assertIn("FAIL(floor)", p.stdout)
+
+    def test_speedup_is_recorded_not_gated(self):
+        p = self.run_cluster(1.0, 1.0, speedup_3=0.5)
+        self.assertEqual(p.returncode, 0, p.stdout + p.stderr)
+
+    def test_shipped_baseline_gates_the_cluster(self):
+        # drift selftest: the committed baseline must carry the cluster
+        # gates with the acceptance floors
+        shipped = json.loads(
+            (Path(__file__).resolve().parent / "bench-baseline.json").read_text()
+        )
+        spec = shipped["benches"]["BENCH_cluster.json"]
+        self.assertEqual(spec["metrics"]["router.efficiency"]["min"], 0.8696)
+        self.assertEqual(spec["metrics"]["router.completeness"]["min"], 1.0)
+        self.assertIsNone(spec["metrics"]["router.speedup_3"]["min"])
+        self.assertEqual(spec["workload"]["preset"], "tiny")
+        self.assertEqual(spec["workload"]["n_seqs"], 600)
+        self.assertEqual(spec["workload"]["qlen"], 256)
+
+
 class TestToleranceOverride(GateHarness):
     def test_cli_tolerance_overrides_file(self):
         baseline = make_baseline({"m.gcups": {"baseline": 100.0, "min": None}})

@@ -1,0 +1,248 @@
+//! router_overhead — what the cluster front tier costs (and buys).
+//!
+//! Three ways of answering the same query batch, all over real loopback
+//! sockets, all in-process:
+//!
+//!   * **direct**   — one whole-database `serve` daemon, queried straight
+//!     (the single-process reference).
+//!   * **routed×1** — the same whole database behind a `route` tier with
+//!     one backend. Every microsecond of difference vs direct is pure
+//!     router overhead: the extra hop, the scatter thread, the re-encode.
+//!   * **routed×3** — the database split into three compute-balanced
+//!     partitions (`partition_sequences`, the `index --partitions`
+//!     machinery), each behind its own daemon, scatter–gathered. This is
+//!     the cluster-mode payoff leg: partitions search concurrently.
+//!
+//! Emits `BENCH_cluster.json` (consumed by `ci/check_bench.py`):
+//! `router.efficiency` = direct / routed×1 wall, gated ≥ 1/1.15 — the
+//! acceptance bound that routing costs at most 15% on a single-backend
+//! fleet — and `router.completeness` = the fraction of routed hit arrays
+//! byte-identical to the direct daemon's, gated at 1.0 (scatter–gather
+//! must merge bit-exactly, never approximately). `routed×3` speedup is
+//! recorded for trajectory (it depends on host core count).
+//!
+//! `SWAPHI_BENCH_PRESET` / `SWAPHI_BENCH_N` / `SWAPHI_BENCH_QLEN` shrink
+//! the workload for CI (tiny preset, 600 sequences).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use swaphi::align::{EngineKind, Precision};
+use swaphi::bench::{f2, Table};
+use swaphi::cluster::{Router, RouterConfig, RouterHandle};
+use swaphi::coordinator::{NativeFactory, SearchConfig};
+use swaphi::db::chunk::ChunkPlanConfig;
+use swaphi::db::index::Index;
+use swaphi::db::partition::{partition_sequences, PartitionMeta};
+use swaphi::db::synth::{generate, generate_query, SynthSpec};
+use swaphi::db::Database;
+use swaphi::matrices::Scoring;
+use swaphi::server::client::{self, Client};
+use swaphi::server::{index_generation, Server, ServerConfig, ServerHandle};
+
+const TOP_K: usize = 10;
+const N_QUERIES: usize = 24;
+
+fn search_cfg() -> SearchConfig {
+    SearchConfig {
+        devices: 1,
+        chunk: ChunkPlanConfig { target_padded_residues: 2048 },
+        top_k: TOP_K,
+        precision: Precision::default(),
+        sim: None,
+        ..Default::default()
+    }
+}
+
+fn start_backend(
+    full: &Arc<Index>,
+    scoring: &Scoring,
+    partitions: usize,
+    partition: usize,
+    ids: &[usize],
+) -> ServerHandle {
+    let seqs: Vec<_> = ids.iter().map(|&g| full.seqs[g].clone()).collect();
+    Server {
+        index: Arc::new(Index::build(Database::new(seqs))),
+        scoring: scoring.clone(),
+        search: search_cfg(),
+        server: ServerConfig {
+            listen: "127.0.0.1:0".to_string(),
+            batch_window_ms: 0,
+            ..Default::default()
+        },
+        factory: Arc::new(NativeFactory(EngineKind::InterSP)),
+        partition: Some(PartitionMeta {
+            generation: index_generation(full),
+            partitions,
+            partition,
+            n_total: full.n_seqs(),
+            global: ids.to_vec(),
+        }),
+    }
+    .start()
+    .expect("backend start")
+}
+
+/// Split into `n` compute-balanced partitions and raise the fleet.
+fn start_fleet(index: &Arc<Index>, scoring: &Scoring, n: usize) -> Vec<ServerHandle> {
+    let parts = partition_sequences(
+        index,
+        ChunkPlanConfig { target_padded_residues: 2048 },
+        &vec![1.0; n],
+    );
+    parts
+        .iter()
+        .enumerate()
+        .map(|(p, ids)| start_backend(index, scoring, n, p, ids))
+        .collect()
+}
+
+fn router_over(handles: &[ServerHandle]) -> RouterHandle {
+    Router::start(RouterConfig {
+        listen: "127.0.0.1:0".to_string(),
+        backends: handles.iter().map(|h| h.connect_addr()).collect(),
+        backend_timeout_ms: 30_000,
+        ..Default::default()
+    })
+    .expect("router start")
+}
+
+/// Send every query on one connection; return (wall seconds, hit-array
+/// JSON per query). A distinct warmup query first so connection setup
+/// and the daemon's first-batch session warm-up stay out of the timing,
+/// without priming the response cache for the measured set.
+fn run_batch(addr: &str, queries: &[(String, String)]) -> (f64, Vec<String>) {
+    let mut c = Client::connect(addr).expect("connect");
+    let warm = String::from_utf8(swaphi::alphabet::decode(&generate_query(64, 999))).unwrap();
+    let resp = c.search("warmup", &warm, None, None).expect("warmup");
+    assert!(client::is_ok(&resp), "{resp}");
+    let t = Instant::now();
+    let mut hit_arrays = Vec::with_capacity(queries.len());
+    for (qid, letters) in queries {
+        let resp = c.search(qid, letters, None, None).expect("search");
+        assert!(client::is_ok(&resp), "{resp}");
+        assert!(resp.get("partial").is_none(), "healthy fleet answered partial: {resp}");
+        hit_arrays
+            .push(resp.get("hits").map(|h| h.to_string()).unwrap_or_default());
+    }
+    (t.elapsed().as_secs_f64(), hit_arrays)
+}
+
+fn main() {
+    let preset = std::env::var("SWAPHI_BENCH_PRESET").unwrap_or_else(|_| "tiny".to_string());
+    let n_seqs: usize = std::env::var("SWAPHI_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(600);
+    let qlen: usize = std::env::var("SWAPHI_BENCH_QLEN")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(256);
+    let spec = SynthSpec::by_name(&preset, n_seqs, 2014)
+        .unwrap_or_else(|| panic!("unknown SWAPHI_BENCH_PRESET {preset:?}"));
+    let preset = spec.name;
+    let index = Arc::new(Index::build(generate(&spec)));
+    let scoring = Scoring::swaphi_default();
+    println!(
+        "workload: {preset} x {} sequences ({} residues), {N_QUERIES} queries around length {qlen}",
+        index.n_seqs(),
+        index.total_residues,
+    );
+
+    // unique query contents so the daemons' response caches never fire
+    // inside a measured pass (every path sees the identical cold set)
+    let queries: Vec<(String, String)> = (0..N_QUERIES)
+        .map(|i| {
+            let len = qlen + 8 * (i % 5);
+            let letters =
+                String::from_utf8(swaphi::alphabet::decode(&generate_query(len, i as u64)))
+                    .unwrap();
+            (format!("q{i}"), letters)
+        })
+        .collect();
+
+    // direct: one whole-database daemon, no router in the path
+    let all: Vec<usize> = (0..index.n_seqs()).collect();
+    let direct = start_backend(&index, &scoring, 1, 0, &all);
+    let (direct_wall, direct_hits) = run_batch(&direct.connect_addr(), &queries);
+
+    // routed x1: same whole database, one hop further away
+    let fleet1 = start_fleet(&index, &scoring, 1);
+    let router1 = router_over(&fleet1);
+    let (routed1_wall, routed1_hits) = run_batch(&router1.connect_addr(), &queries);
+    let routed1_partial = router1.partial_answers();
+
+    // routed x3: three balanced partitions searched concurrently
+    let fleet3 = start_fleet(&index, &scoring, 3);
+    let router3 = router_over(&fleet3);
+    let (routed3_wall, routed3_hits) = run_batch(&router3.connect_addr(), &queries);
+    let routed3_partial = router3.partial_answers();
+
+    let matched = |routed: &[String]| {
+        routed.iter().zip(&direct_hits).filter(|(r, d)| r == d).count()
+    };
+    let matched1 = matched(&routed1_hits);
+    let matched3 = matched(&routed3_hits);
+    let completeness = (matched1 + matched3) as f64 / (2 * N_QUERIES) as f64;
+    let efficiency = direct_wall / routed1_wall;
+    let speedup_3 = direct_wall / routed3_wall;
+
+    let mut table = Table::new(
+        "router_overhead: scatter-gather front tier vs direct daemon (InterSP)",
+        &["path", "wall_s", "vs_direct", "identical_hits"],
+    );
+    table.row(&[
+        "direct".to_string(),
+        format!("{direct_wall:.4}"),
+        f2(1.0),
+        format!("{N_QUERIES}/{N_QUERIES}"),
+    ]);
+    table.row(&[
+        "routed x1".to_string(),
+        format!("{routed1_wall:.4}"),
+        f2(routed1_wall / direct_wall),
+        format!("{matched1}/{N_QUERIES}"),
+    ]);
+    table.row(&[
+        "routed x3".to_string(),
+        format!("{routed3_wall:.4}"),
+        f2(routed3_wall / direct_wall),
+        format!("{matched3}/{N_QUERIES}"),
+    ]);
+    table.emit("router_overhead");
+    println!(
+        "router overhead: efficiency {efficiency:.3} (>= {:.3} gates), \
+         completeness {completeness:.3} (== 1.0 gates), 3-backend speedup {speedup_3:.2}x",
+        1.0 / 1.15
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"router_overhead\",\n  \"preset\": \"{preset}\",\n  \
+         \"n_seqs\": {},\n  \"qlen\": {qlen},\n  \"queries\": {N_QUERIES},\n  \
+         \"top_k\": {TOP_K},\n  \"router\": {{\n    \
+         \"direct_wall_s\": {direct_wall:.6},\n    \
+         \"routed1_wall_s\": {routed1_wall:.6},\n    \
+         \"routed3_wall_s\": {routed3_wall:.6},\n    \
+         \"efficiency\": {efficiency:.3},\n    \
+         \"speedup_3\": {speedup_3:.3},\n    \
+         \"completeness\": {completeness:.3},\n    \
+         \"partial_answers\": {}\n  }}\n}}\n",
+        index.n_seqs(),
+        routed1_partial + routed3_partial,
+    );
+    if std::fs::write("BENCH_cluster.json", &json).is_ok() {
+        println!("\nwrote BENCH_cluster.json");
+    }
+
+    router1.shutdown().expect("router1 shutdown");
+    router3.shutdown().expect("router3 shutdown");
+    direct.shutdown().expect("direct shutdown");
+    for h in fleet1.into_iter().chain(fleet3) {
+        h.shutdown().expect("backend shutdown");
+    }
+    assert_eq!(
+        completeness, 1.0,
+        "scatter-gather merged inexactly: x1 {matched1}/{N_QUERIES}, x3 {matched3}/{N_QUERIES}"
+    );
+}

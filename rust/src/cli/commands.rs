@@ -43,18 +43,118 @@ pub fn cmd_synth(mut args: Args) -> anyhow::Result<i32> {
 pub fn cmd_index(mut args: Args) -> anyhow::Result<i32> {
     let input = args.require("in")?;
     let out = args.require("out")?;
+    let partitions = args.take_usize("partitions", 0)?;
+    let partition = match args.take("partition") {
+        None => None,
+        Some(v) => {
+            Some(v.parse::<usize>().map_err(|e| anyhow::anyhow!("--partition {v:?}: {e}"))?)
+        }
+    };
+    let partition_rates = args.take("partition-rates");
     args.finish()?;
 
     let db = Database::from_fasta_path(&input)?;
     anyhow::ensure!(!db.is_empty(), "{input}: no sequences");
     let index = Index::build(db);
-    write_index(&out, &index)?;
+
+    if partitions == 0 {
+        anyhow::ensure!(
+            partition.is_none() && partition_rates.is_none(),
+            "--partition/--partition-rates require --partitions N"
+        );
+        write_index(&out, &index)?;
+        println!(
+            "indexed {} sequences / {} profiles ({} residues, utilization {:.1}%) -> {out}",
+            index.n_seqs(),
+            index.n_profiles(),
+            index.total_residues,
+            index.mean_utilization() * 100.0
+        );
+        return Ok(0);
+    }
+
+    let rates: Vec<f64> = match &partition_rates {
+        None => vec![1.0; partitions],
+        Some(r) => {
+            let rates = r
+                .split(',')
+                .map(|e| {
+                    let e = e.trim();
+                    e.parse::<f64>()
+                        .map_err(|err| anyhow::anyhow!("--partition-rates entry {e:?}: {err}"))
+                })
+                .collect::<anyhow::Result<Vec<f64>>>()?;
+            anyhow::ensure!(
+                rates.len() == partitions,
+                "--partition-rates has {} entries but --partitions is {partitions}",
+                rates.len()
+            );
+            for (i, &r) in rates.iter().enumerate() {
+                anyhow::ensure!(
+                    r.is_finite() && r > 0.0,
+                    "--partition-rates[{}] = {r}: rates must be finite and positive",
+                    i + 1
+                );
+            }
+            rates
+        }
+    };
+    if let Some(p) = partition {
+        anyhow::ensure!(
+            p < partitions,
+            "--partition {p} out of range (--partitions {partitions})"
+        );
+    }
+
+    // The whole-database fingerprint goes into every sidecar: the router
+    // refuses to merge slices cut from different builds.
+    let generation = crate::server::index_generation(&index);
+    // Split on fine-grained chunks: the streaming default (512 Ki
+    // residues) is coarser than small databases, which would starve
+    // whole partitions. ~16 chunks per partition keeps the rate-weighted
+    // split meaningful at any scale.
+    let target = (index.total_residues / (partitions as u128 * 16))
+        .clamp(1024, crate::db::chunk::ChunkPlanConfig::default().target_padded_residues);
+    let parts = crate::db::partition::partition_sequences(
+        &index,
+        crate::db::chunk::ChunkPlanConfig { target_padded_residues: target },
+        &rates,
+    );
+    for (p, ids) in parts.iter().enumerate() {
+        anyhow::ensure!(
+            !ids.is_empty(),
+            "partition {p} is empty: {} sequences cannot fill {partitions} partitions at \
+             these rates",
+            index.n_seqs()
+        );
+    }
+    let targets: Vec<usize> =
+        partition.map_or_else(|| (0..partitions).collect(), |p| vec![p]);
+    for &p in &targets {
+        let ids = &parts[p];
+        let seqs: Vec<crate::db::DbSeq> = ids.iter().map(|&g| index.seqs[g].clone()).collect();
+        let slice = Index::build(Database::new(seqs));
+        let slice_path = format!("{out}.p{p}");
+        write_index(&slice_path, &slice)?;
+        let meta = crate::db::partition::PartitionMeta {
+            generation,
+            partitions,
+            partition: p,
+            n_total: index.n_seqs(),
+            global: ids.clone(),
+        };
+        meta.save(crate::db::partition::PartitionMeta::sidecar_path(&slice_path))?;
+        println!(
+            "partition {p}/{partitions}: {} sequences / {} residues -> {slice_path} (+.pmeta)",
+            slice.n_seqs(),
+            slice.total_residues,
+        );
+    }
     println!(
-        "indexed {} sequences / {} profiles ({} residues, utilization {:.1}%) -> {out}",
+        "partitioned {} sequences into {} of {partitions} slices (generation {:016x})",
         index.n_seqs(),
-        index.n_profiles(),
-        index.total_residues,
-        index.mean_utilization() * 100.0
+        targets.len(),
+        generation
     );
     Ok(0)
 }
@@ -358,12 +458,30 @@ pub fn cmd_serve(mut args: Args) -> anyhow::Result<i32> {
     let index = std::sync::Arc::new(view.to_index());
     let factory: std::sync::Arc<dyn AlignerFactory> = std::sync::Arc::from(make_factory(&cfg)?);
 
+    // A `.pmeta` sidecar next to the index marks it as one slice of a
+    // partitioned database: serve it under the fleet's identity so the
+    // router can handshake and rebase hit ids to global.
+    let sidecar = crate::db::partition::PartitionMeta::sidecar_path(&index_path);
+    let partition = if std::path::Path::new(&sidecar).exists() {
+        let meta = crate::db::partition::PartitionMeta::load(&sidecar)?;
+        println!(
+            "partition sidecar {sidecar}: slice {}/{} of generation {}",
+            meta.partition,
+            meta.partitions,
+            meta.generation_hex()
+        );
+        Some(meta)
+    } else {
+        None
+    };
+
     let mut handle = crate::server::Server {
         index: std::sync::Arc::clone(&index),
         scoring: cfg.scoring.clone(),
         search: cfg.search_config(),
         server: server_cfg.clone(),
         factory,
+        partition,
     }
     .start()?;
 
@@ -404,6 +522,80 @@ pub fn cmd_serve(mut args: Args) -> anyhow::Result<i32> {
     Ok(0)
 }
 
+pub fn cmd_route(mut args: Args) -> anyhow::Result<i32> {
+    use std::io::Write as _;
+
+    let listen = args.take("listen");
+    let backends = args.take("backends");
+    let hedge_ms = match args.take("hedge-ms") {
+        None => None,
+        Some(v) => {
+            Some(v.parse::<u64>().map_err(|e| anyhow::anyhow!("--hedge-ms {v:?}: {e}"))?)
+        }
+    };
+    let retries = match args.take("retries") {
+        None => None,
+        Some(v) => {
+            Some(v.parse::<usize>().map_err(|e| anyhow::anyhow!("--retries {v:?}: {e}"))?)
+        }
+    };
+    let backend_timeout_ms = match args.take("backend-timeout-ms") {
+        None => None,
+        Some(v) => Some(
+            v.parse::<u64>().map_err(|e| anyhow::anyhow!("--backend-timeout-ms {v:?}: {e}"))?,
+        ),
+    };
+    let cfg = load_config(&mut args)?;
+    args.finish()?;
+
+    let mut rc = cfg.router_config();
+    if let Some(listen) = listen {
+        rc.listen = listen;
+    }
+    if let Some(b) = backends {
+        rc.backends = b
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+    }
+    if let Some(ms) = hedge_ms {
+        rc.hedge_ms = Some(ms);
+    }
+    if let Some(r) = retries {
+        rc.retries = r;
+    }
+    if let Some(t) = backend_timeout_ms {
+        rc.backend_timeout_ms = t;
+    }
+    anyhow::ensure!(
+        !rc.backends.is_empty(),
+        "route needs backends: --backends host:port,host:port or a [cluster] backends list"
+    );
+    rc.handle_signals = true;
+
+    let mut handle = crate::cluster::Router::start(rc)?;
+    println!(
+        "swaphi route: listening on {} ({} backends, generation {}, session top_k {}, \
+         hedge {})",
+        handle.addr(),
+        handle.n_backends(),
+        handle.generation(),
+        handle.session_top_k(),
+        hedge_ms.map_or_else(|| "auto".to_string(), |ms| format!("{ms}ms")),
+    );
+    println!("SIGINT/SIGTERM drains in-flight fan-outs and exits");
+    std::io::stdout().flush()?; // routers are usually piped; don't sit in the block buffer
+
+    handle.wait()?;
+    println!(
+        "swaphi route: drained — routed {} requests ({} partial)",
+        handle.requests_routed(),
+        handle.partial_answers(),
+    );
+    Ok(0)
+}
+
 pub fn cmd_query(mut args: Args) -> anyhow::Result<i32> {
     let connect = args.take_or("connect", "127.0.0.1:7878");
     let ping = args.take_bool("ping");
@@ -422,17 +614,44 @@ pub fn cmd_query(mut args: Args) -> anyhow::Result<i32> {
                 .ok_or_else(|| anyhow::anyhow!("unknown mode {v:?} (exact|fast|auto)"))?,
         ),
     };
+    let retries = args.take_usize("retries", 0)?;
+    let retry_ms = args.take_u64("retry-ms", 200)?;
     let informational = ping || stats || metrics || trace;
     let query_path = if informational { args.take("query") } else { Some(args.require("query")?) };
     args.finish()?;
 
-    let mut client = crate::server::client::Client::connect(&connect)?;
     if ping {
-        let resp = client.ping()?;
-        anyhow::ensure!(crate::server::client::is_ok(&resp), "ping failed: {resp}");
-        println!("pong from {connect}");
-        return Ok(0);
+        use crate::server::client::{ping_once, PingFailure};
+        let timeout =
+            std::time::Duration::from_millis(if timeout_ms > 0 { timeout_ms } else { 5_000 });
+        let mut attempt = 0usize;
+        loop {
+            match ping_once(&connect, timeout) {
+                Ok(()) => {
+                    println!("pong from {connect}");
+                    return Ok(0);
+                }
+                Err((kind, msg)) => {
+                    // Only connect failures are worth retrying — the
+                    // daemon may still be binding. A protocol failure
+                    // means something live answered garbage; retrying
+                    // would hide a wrong port or a broken daemon.
+                    if kind == PingFailure::Connect && attempt < retries {
+                        attempt += 1;
+                        std::thread::sleep(std::time::Duration::from_millis(retry_ms));
+                        continue;
+                    }
+                    anyhow::bail!(
+                        "ping {connect} failed after {} attempt(s) ({} failure): {msg}",
+                        attempt + 1,
+                        kind.name()
+                    );
+                }
+            }
+        }
     }
+
+    let mut client = crate::server::client::Client::connect(&connect)?;
     if stats {
         let resp = client.stats()?;
         anyhow::ensure!(crate::server::client::is_ok(&resp), "stats failed: {resp}");
@@ -889,5 +1108,79 @@ mod tests {
     fn bad_preset_errors() {
         let out = tmp("bad.fasta");
         assert!(run(&format!("synth --preset nope --out {out}")).is_err());
+    }
+
+    #[test]
+    fn index_partitions_emit_slices_with_sidecars() {
+        use crate::db::partition::PartitionMeta;
+        let fasta = tmp("db8.fasta");
+        let idx = tmp("db8.idx");
+        assert_eq!(
+            run(&format!("synth --preset tiny --n 120 --seed 13 --out {fasta}")).unwrap(),
+            0
+        );
+        assert_eq!(
+            run(&format!("index --in {fasta} --out {idx} --partitions 3")).unwrap(),
+            0
+        );
+        let mut covered = 0;
+        let mut gens = std::collections::BTreeSet::new();
+        for p in 0..3 {
+            let slice = format!("{idx}.p{p}");
+            let meta = PartitionMeta::load(PartitionMeta::sidecar_path(&slice)).unwrap();
+            assert_eq!(meta.partition, p);
+            assert_eq!(meta.partitions, 3);
+            assert_eq!(meta.n_total, 120);
+            assert!(!meta.global.is_empty(), "no partition may be empty");
+            // the slice itself opens and matches the sidecar's map
+            let view = crate::db::format::IndexView::open(&slice).unwrap();
+            assert_eq!(view.to_index().n_seqs(), meta.global.len());
+            covered += meta.global.len();
+            gens.insert(meta.generation);
+            let _ = std::fs::remove_file(&slice);
+            let _ = std::fs::remove_file(format!("{slice}.pmeta"));
+        }
+        assert_eq!(covered, 120, "slices cover the database exactly once");
+        assert_eq!(gens.len(), 1, "every sidecar carries the same fingerprint");
+        // a targeted re-emit writes one slice only
+        assert_eq!(
+            run(&format!(
+                "index --in {fasta} --out {idx} --partitions 3 --partition 1 \
+                 --partition-rates 1.0,1.0,0.25"
+            ))
+            .unwrap(),
+            0
+        );
+        assert!(std::path::Path::new(&format!("{idx}.p1.pmeta")).exists());
+        assert!(!std::path::Path::new(&format!("{idx}.p0.pmeta")).exists());
+        // validation: partition range, rate arity/range, flag dependency
+        assert!(run(&format!(
+            "index --in {fasta} --out {idx} --partitions 3 --partition 3"
+        ))
+        .is_err());
+        assert!(run(&format!(
+            "index --in {fasta} --out {idx} --partitions 2 --partition-rates 1.0"
+        ))
+        .is_err());
+        assert!(run(&format!(
+            "index --in {fasta} --out {idx} --partitions 2 --partition-rates 1.0,0.0"
+        ))
+        .is_err());
+        assert!(run(&format!("index --in {fasta} --out {idx} --partition 1")).is_err());
+        for f in [fasta, format!("{idx}.p1"), format!("{idx}.p1.pmeta")] {
+            let _ = std::fs::remove_file(f);
+        }
+    }
+
+    #[test]
+    fn route_requires_backends_and_refuses_a_dark_fleet() {
+        let err = run("route").unwrap_err().to_string();
+        assert!(err.contains("backends"), "{err}");
+        // a named backend that is not there: the handshake refuses to
+        // start the router at all, naming the address
+        let err = run("route --backends 127.0.0.1:9 --listen 127.0.0.1:0")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("127.0.0.1:9"), "{err}");
     }
 }

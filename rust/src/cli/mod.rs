@@ -8,6 +8,7 @@
 //! swaphi search  --index db.idx --query q.fasta [--config swaphi.toml]
 //!                [--set search.engine=interqp]... [--backend pjrt]
 //! swaphi serve   --index db.idx [--listen 127.0.0.1:7878 | unix:/path]
+//! swaphi route   --backends 127.0.0.1:7901,127.0.0.1:7902 [--listen ...]
 //! swaphi query   --connect 127.0.0.1:7878 --query q.fasta
 //! swaphi selftest [--backend pjrt] [--artifacts artifacts]
 //! swaphi devinfo
@@ -20,8 +21,8 @@ pub use args::Args;
 
 /// Every valid subcommand, as listed by the unknown-command error.
 pub const COMMANDS: &[&str] = &[
-    "synth", "index", "info", "search", "serve", "query", "calibrate", "selftest", "devinfo",
-    "help",
+    "synth", "index", "info", "search", "serve", "route", "query", "calibrate", "selftest",
+    "devinfo", "help",
 ];
 
 /// Entry point used by `main.rs`.
@@ -40,6 +41,7 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<i32> {
         "info" => commands::cmd_info(args),
         "search" => commands::cmd_search(args),
         "serve" => commands::cmd_serve(args),
+        "route" => commands::cmd_route(args),
         "query" => commands::cmd_query(args),
         "calibrate" => commands::cmd_calibrate(args),
         "selftest" => commands::cmd_selftest(args),
@@ -70,6 +72,13 @@ COMMANDS:
               --n <seqs>  --seed <u64>  --out <fasta>
   index     build the length-sorted binary index
               --in <fasta>  --out <idx>
+              [--partitions <n>]   cluster mode: emit n compute-balanced
+                slices <out>.p0..p{n-1}, each with a .pmeta sidecar
+                (whole-database generation fingerprint + global id map)
+                for `serve` + `route` (docs/cluster.md)
+              [--partition <i>]    emit only slice i (distributed builds)
+              [--partition-rates <r1,...,rn>]   weight slices by relative
+                backend speed (compute-balanced, not count-balanced)
   info      print index statistics
               --index <idx>
   search    search queries against an index (the Fig 2 workflow); all
@@ -116,12 +125,34 @@ COMMANDS:
                 every request at or over the threshold (0 = off)
               --set server.trace_ring=<n> sizes the span ring behind the
                 `trace` op (default 4096; 0 disables span recording)
+              a `.pmeta` sidecar next to the index makes the daemon serve
+                that partition slice under the fleet identity (cluster
+                mode backend; see `index --partitions` and `route`)
               e.g.  swaphi serve --index db.idx --listen 127.0.0.1:7878
-  query     client for a running `serve` daemon; each FASTA record is one
-            request on one connection
+  route     scatter-gather front tier over partitioned `serve` backends:
+            speaks the same v1 protocol to clients, fans each query out
+            to every partition, merges top-k bit-identically to the
+            single-process ranking; verifies the fleet's generation and
+            partition set at startup, retries/hedges slow backends, and
+            degrades to `partial: true` answers when a partition is dark
+            (docs/cluster.md)
+              --backends <host:port,host:port,...>   one per partition
+              [--listen 127.0.0.1:7900 | unix:/path]
+              [--hedge-ms <n>]   fixed hedge delay (default: auto, 3x the
+                observed backend p99)
+              [--retries <n>]  [--backend-timeout-ms <n>]
+              [--config <toml>]   [cluster] section: listen, backends
+                (quoted strings), hedge_ms, retries, backend_timeout_ms
+              e.g.  swaphi route --backends 127.0.0.1:7901,127.0.0.1:7902
+  query     client for a running `serve` daemon or `route` front tier;
+            each FASTA record is one request on one connection
               --connect <host:port | unix:/path>  --query <fasta>
               [--top-k <n>]  [--timeout-ms <n>]  [--mode exact|fast|auto]
               [--ping]  [--stats]
+              [--retries <n> --retry-ms <ms>]   with --ping: retry while
+                the daemon is still binding (connect failures only —
+                protocol failures fail fast: something live answered
+                garbage)
               [--metrics]   print the server's Prometheus text exposition
               [--trace]     print the server's recent spans as JSON
               e.g.  swaphi query --connect 127.0.0.1:7878 --query q.fasta

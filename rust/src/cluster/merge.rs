@@ -1,0 +1,90 @@
+//! Deterministic merge of per-partition hit lists.
+//!
+//! The whole correctness story of the scatter–gather router reduces to
+//! one invariant: concatenating every partition's top-k (already
+//! carrying **global** `seq` ids, rebased by the backends through their
+//! `.pmeta` maps) and sorting with *exactly* the single-process
+//! tie-break — score descending, then global sequence index ascending,
+//! the order [`TopKSink::finish`](crate::coordinator::results::TopKSink)
+//! produces — yields the same top-k the one-process exact search would.
+//! That holds because a subject's global top-k membership is decided by
+//! that total order alone, and each subject appears in exactly one
+//! partition's list (or in none, only if it also misses the global
+//! top-k: a partition returns at least `min(k, partition size)` hits,
+//! so anything it omits is beaten by k subjects within its own
+//! partition alone).
+
+use crate::server::protocol::HitPayload;
+
+/// Merge per-partition hit lists into the global top-k, preserving the
+/// single-process ranking order (score desc, global seq asc).
+pub fn merge_hits(parts: Vec<Vec<HitPayload>>, top_k: usize) -> Vec<HitPayload> {
+    let mut all: Vec<HitPayload> = parts.into_iter().flatten().collect();
+    all.sort_by(|a, b| b.score.cmp(&a.score).then(a.seq.cmp(&b.seq)));
+    all.truncate(top_k);
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn hit(seq: usize, score: i32) -> HitPayload {
+        HitPayload { subject: format!("s{seq}"), len: seq + 30, score, seq }
+    }
+
+    /// The single-process oracle: full list, same total order, truncate.
+    fn oracle(all: &[HitPayload], k: usize) -> Vec<HitPayload> {
+        let mut v = all.to_vec();
+        v.sort_by(|a, b| b.score.cmp(&a.score).then(a.seq.cmp(&b.seq)));
+        v.truncate(k);
+        v
+    }
+
+    #[test]
+    fn merge_matches_oracle_for_any_split() {
+        let mut rng = Rng::new(42);
+        for trial in 0..50 {
+            let n = 1 + rng.below(80) as usize;
+            let k = 1 + rng.below(12) as usize;
+            let parts_n = 1 + rng.below(5) as usize;
+            // scores drawn from a narrow range to force heavy ties — the
+            // tie-break is where merge bugs hide
+            let all: Vec<HitPayload> =
+                (0..n).map(|s| hit(s, rng.below(6) as i32)).collect();
+            // random assignment of sequences to partitions
+            let mut parts: Vec<Vec<HitPayload>> = vec![Vec::new(); parts_n];
+            for h in &all {
+                parts[rng.below(parts_n as u64) as usize].push(h.clone());
+            }
+            // each partition contributes its own top-k (what a backend
+            // with session top_k = k would return)
+            let contributions: Vec<Vec<HitPayload>> =
+                parts.iter().map(|p| oracle(p, k)).collect();
+            assert_eq!(
+                merge_hits(contributions, k),
+                oracle(&all, k),
+                "trial {trial}: n={n} k={k} parts={parts_n}"
+            );
+        }
+    }
+
+    #[test]
+    fn ties_break_by_ascending_global_seq() {
+        let merged = merge_hits(
+            vec![vec![hit(9, 50), hit(2, 50)], vec![hit(4, 50), hit(0, 70)]],
+            3,
+        );
+        let order: Vec<usize> = merged.iter().map(|h| h.seq).collect();
+        assert_eq!(order, vec![0, 2, 4], "score desc, then seq asc");
+    }
+
+    #[test]
+    fn truncates_and_handles_empty_partitions() {
+        let merged = merge_hits(vec![vec![], vec![hit(1, 10), hit(2, 9)], vec![]], 1);
+        assert_eq!(merged.len(), 1);
+        assert_eq!(merged[0].seq, 1);
+        assert!(merge_hits(vec![], 5).is_empty());
+    }
+}

@@ -1,0 +1,1066 @@
+//! Cluster mode: a scatter–gather front tier over partitioned daemons.
+//!
+//! `swaphi route` speaks the same v1 line-delimited protocol to clients
+//! that `swaphi serve` does — a client cannot tell a router from a
+//! single daemon by a healthy response — and fans each search out to N
+//! backend daemons, each serving one slice of the database emitted by
+//! `swaphi index --partitions N` (see [`crate::db::partition`]).
+//!
+//! Correctness rests on two facts:
+//!
+//! * backends rebase hit indices through their `.pmeta` sidecars, so the
+//!   `seq` field on every wire hit is a **global** id, and
+//! * [`merge::merge_hits`] applies exactly the single-process tie-break
+//!   (score desc, global seq asc), so the merged top-k is bit-identical
+//!   to what one process over the whole database would return.
+//!
+//! The handshake makes the fleet safe to merge at all: at startup (and
+//! again before trusting a backend that was marked unhealthy) the router
+//! issues `hello` and requires a complete, non-overlapping partition set
+//! 0..N where every member reports the *same database generation* — the
+//! full-database fingerprint carried by every `.pmeta`. A stale slice is
+//! refused with a structured `generation_mismatch` error instead of
+//! being silently merged into wrong answers.
+//!
+//! Tail-latency and fault handling, per partition and per query:
+//!
+//! * **retries** — a failed attempt (connect error, read error, transient
+//!   backend error) is retried against the same backend while the
+//!   attempt budget (`1 + retries`) lasts;
+//! * **hedging** — if the first attempt is still silent after the hedge
+//!   delay (configured `hedge_ms`, or 3× the observed backend p99
+//!   clamped to [25 ms, timeout/2]), a duplicate attempt is launched and
+//!   whichever answers first wins. The hedge spends one unit of the same
+//!   attempt budget, so a query never issues more than `1 + retries`
+//!   attempts per partition;
+//! * **graceful degradation** — a partition still dark at its deadline
+//!   is dropped from the merge: the query succeeds with `"partial": true`
+//!   and a `missing_partitions` report rather than failing outright.
+//!   Routed answers over the surviving partitions remain exact for
+//!   those partitions.
+//!
+//! Observed per-attempt latencies feed the same [`RateEstimator`] the
+//! PR 5 tuner uses, so `stats` reports measured per-backend throughput
+//! and a suggested partition rate vector for the next `swaphi index
+//! --partition-rates` run — rate calibration closes the loop across
+//! processes exactly as it does across simulated devices.
+
+pub mod merge;
+
+use crate::metrics::{Counter, Histogram, Registry, SharedHistogram};
+use crate::server::client::{self, Client};
+use crate::server::protocol::{self, HitPayload, Request};
+use crate::server::{bind, BoundAddr, Conn, Listener};
+use crate::trace::{span_json, Span, TraceRecorder};
+use crate::tune::RateEstimator;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::{self, Read, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Router tuning knobs (the `[cluster]` config section).
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// `host:port` for TCP, or `unix:<path>`; port 0 binds ephemeral.
+    pub listen: String,
+    /// Backend daemon addresses, one per partition (any order — the
+    /// handshake assigns each to the partition it reports).
+    pub backends: Vec<String>,
+    /// Fixed hedge delay override; `None` derives it from the observed
+    /// backend latency p99 (see [`auto_hedge_delay`]).
+    pub hedge_ms: Option<u64>,
+    /// Extra attempts after the first, shared between retries and the
+    /// hedge: at most `1 + retries` attempts reach a partition per query.
+    pub retries: usize,
+    /// Per-partition deadline: a backend silent this long is declared
+    /// dark and its partition reported missing.
+    pub backend_timeout_ms: u64,
+    /// Concurrent client connections (each is one OS thread).
+    pub max_connections: usize,
+    /// Install SIGINT/SIGTERM graceful-drain handlers (the `route`
+    /// command sets this; tests don't).
+    pub handle_signals: bool,
+    /// Span-ring capacity behind the router's `trace` op; 0 disables.
+    pub trace_ring: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> RouterConfig {
+        RouterConfig {
+            listen: "127.0.0.1:7900".to_string(),
+            backends: Vec::new(),
+            hedge_ms: None,
+            retries: 2,
+            backend_timeout_ms: 10_000,
+            max_connections: 256,
+            handle_signals: false,
+            trace_ring: 4096,
+        }
+    }
+}
+
+/// What the hedge waits for before duplicating a silent attempt: 3× the
+/// observed backend p99, clamped to [25 ms, backend timeout / 2] — and a
+/// flat 200 ms until enough samples (32) exist for the p99 to mean
+/// anything. Exposed as a pure function so the policy is testable
+/// without a live fleet.
+fn auto_hedge_delay(samples: u64, p99_us: u64, backend_timeout_ms: u64) -> Duration {
+    if samples < 32 {
+        return Duration::from_millis(200);
+    }
+    let lo = 25_000u64;
+    let hi = (backend_timeout_ms.saturating_mul(1000) / 2).max(lo);
+    Duration::from_micros(p99_us.saturating_mul(3).clamp(lo, hi))
+}
+
+// ---------------------------------------------------------------------
+// Handshake.
+
+/// A backend's `hello` reply, parsed.
+#[derive(Clone, Debug)]
+struct HelloInfo {
+    generation: String,
+    partition: usize,
+    partitions: usize,
+    n_seqs: usize,
+    n_total: usize,
+    top_k: usize,
+}
+
+fn hello_of(resp: &Json) -> anyhow::Result<HelloInfo> {
+    Ok(HelloInfo {
+        generation: resp.str_field("generation")?.to_string(),
+        partition: resp.usize_field("partition")?,
+        partitions: resp.usize_field("partitions")?,
+        n_seqs: resp.usize_field("n_seqs")?,
+        n_total: resp.usize_field("n_total")?,
+        top_k: resp.usize_field("top_k")?,
+    })
+}
+
+/// One partition's daemon, as the handshake established it.
+struct BackendInfo {
+    addr: String,
+    partition: usize,
+    n_seqs: usize,
+}
+
+/// Live routing state for one backend: health, counters, latency.
+struct Backend {
+    info: BackendInfo,
+    /// `false` after a terminal failure; the next attempt re-runs the
+    /// `hello` handshake before trusting results again, so a process
+    /// restarted on this address with the wrong slice is caught.
+    healthy: AtomicBool,
+    requests: Arc<Counter>,
+    failures: Arc<Counter>,
+    retries: Arc<Counter>,
+    hedges: Arc<Counter>,
+    timeouts: Arc<Counter>,
+    latency: Mutex<Histogram>,
+}
+
+// ---------------------------------------------------------------------
+// Shared router state.
+
+struct RouterShared {
+    cfg: RouterConfig,
+    stop: AtomicBool,
+    /// Indexed by partition id — `backends[p]` serves partition `p`.
+    backends: Vec<Backend>,
+    /// The fleet's database generation (hex), the merge precondition.
+    generation: String,
+    n_total: usize,
+    /// The fleet-wide top-k cap: the minimum of the backends' session
+    /// caps. A backend cannot return more than its own cap, so merging
+    /// above the minimum would silently under-fill from capped
+    /// partitions; clamping keeps routed answers exact.
+    session_top_k: usize,
+    registry: Registry,
+    requests_total: Arc<Counter>,
+    partial_total: Arc<Counter>,
+    gen_mismatch: Arc<Counter>,
+    /// End-to-end routed-search latency.
+    latency: SharedHistogram,
+    /// Aggregate per-attempt backend latency — the hedge's p99 source.
+    backend_latency: SharedHistogram,
+    recorder: Arc<TraceRecorder>,
+    estimator: Mutex<RateEstimator>,
+}
+
+impl RouterShared {
+    fn draining(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+            || (self.cfg.handle_signals && crate::server::signalled())
+    }
+
+    fn error(&self, code: &str) {
+        self.registry
+            .labeled_counter(
+                "swaphi_errors_total",
+                "Error responses by protocol error code.",
+                "code",
+                code,
+            )
+            .inc();
+    }
+
+    fn hedge_delay(&self) -> Duration {
+        if let Some(ms) = self.cfg.hedge_ms {
+            return Duration::from_millis(ms.max(1));
+        }
+        let s = self.backend_latency.lock().unwrap().summary();
+        auto_hedge_delay(s.count, s.p99, self.cfg.backend_timeout_ms)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Startup.
+
+/// The scatter–gather front tier; [`Router::start`] consumes a
+/// [`RouterConfig`] the way [`crate::server::Server::start`] consumes a
+/// server.
+pub struct Router;
+
+impl Router {
+    /// Handshake with every backend, verify the partition set, bind, and
+    /// spawn the accept loop. Fails fast — before accepting any client —
+    /// if the fleet is incomplete, overlapping, or spans generations.
+    pub fn start(cfg: RouterConfig) -> anyhow::Result<RouterHandle> {
+        anyhow::ensure!(
+            !cfg.backends.is_empty(),
+            "cluster: at least one backend address is required"
+        );
+        let n = cfg.backends.len();
+        // one slot per partition: the handshake places each backend at
+        // the partition it reports, whatever order the addresses came in
+        let mut slots: Vec<Option<(String, HelloInfo)>> = (0..n).map(|_| None).collect();
+        let mut reference: Option<(String, HelloInfo)> = None;
+        for addr in &cfg.backends {
+            let mut c = Client::connect(addr)
+                .map_err(|e| anyhow::anyhow!("cluster handshake: {e:#}"))?;
+            let _ = c.set_read_timeout(Some(Duration::from_secs(5)));
+            let resp =
+                c.hello().map_err(|e| anyhow::anyhow!("cluster handshake: {addr}: {e:#}"))?;
+            if !client::is_ok(&resp) {
+                let (code, message) = client::error_of(&resp);
+                anyhow::bail!("cluster handshake: {addr}: {code}: {message}");
+            }
+            let h = hello_of(&resp)
+                .map_err(|e| anyhow::anyhow!("cluster handshake: {addr}: {e:#}"))?;
+            anyhow::ensure!(
+                h.partitions == n,
+                "cluster handshake: {addr} belongs to a {}-partition set but {n} backend(s) \
+                 were configured",
+                h.partitions
+            );
+            anyhow::ensure!(
+                h.partition < n,
+                "cluster handshake: {addr} reports partition {} of {}",
+                h.partition,
+                h.partitions
+            );
+            if let Some((ref_addr, r)) = &reference {
+                // the structured stale-slice refusal: never merge across
+                // database generations
+                anyhow::ensure!(
+                    h.generation == r.generation,
+                    "generation_mismatch: backend {addr} serves database generation {} but \
+                     {ref_addr} serves {} — re-run `swaphi index --partitions` so every \
+                     slice comes from the same build",
+                    h.generation,
+                    r.generation
+                );
+                anyhow::ensure!(
+                    h.n_total == r.n_total,
+                    "cluster handshake: {addr} reports {} total sequences but {ref_addr} \
+                     reports {}",
+                    h.n_total,
+                    r.n_total
+                );
+            } else {
+                reference = Some((addr.clone(), h.clone()));
+            }
+            if let Some((prev, _)) = &slots[h.partition] {
+                anyhow::bail!(
+                    "cluster handshake: partition {} claimed by both {prev} and {addr}",
+                    h.partition
+                );
+            }
+            slots[h.partition] = Some((addr.clone(), h));
+        }
+        let (_, reference) = reference.expect("non-empty backend list");
+        let mut infos = Vec::with_capacity(n);
+        let mut session_top_k = usize::MAX;
+        for (p, slot) in slots.into_iter().enumerate() {
+            let (addr, h) = slot.ok_or_else(|| {
+                anyhow::anyhow!("cluster handshake: no configured backend serves partition {p}")
+            })?;
+            session_top_k = session_top_k.min(h.top_k);
+            infos.push(BackendInfo { addr, partition: p, n_seqs: h.n_seqs });
+        }
+        let covered: usize = infos.iter().map(|b| b.n_seqs).sum();
+        anyhow::ensure!(
+            covered == reference.n_total,
+            "cluster handshake: partitions cover {covered} sequences but the database holds {}",
+            reference.n_total
+        );
+
+        if cfg.handle_signals {
+            crate::server::install_signal_handlers();
+        }
+        let registry = Registry::new();
+        let requests_total = registry
+            .counter("swaphi_router_requests_total", "Searches routed by the front tier.");
+        let partial_total = registry.counter(
+            "swaphi_router_partial_total",
+            "Routed searches answered partial (at least one partition dark).",
+        );
+        let gen_mismatch = registry.counter(
+            "swaphi_router_generation_mismatch_total",
+            "Backend results refused because of a stale database generation.",
+        );
+        let latency = registry.histogram(
+            "swaphi_router_request_latency_microseconds",
+            "End-to-end routed search latency.",
+            Histogram::exponential(60_000_000),
+        );
+        let backend_latency = registry.histogram(
+            "swaphi_backend_latency_microseconds",
+            "Per-attempt backend search latency, all backends.",
+            Histogram::exponential(60_000_000),
+        );
+        let backends: Vec<Backend> = infos
+            .into_iter()
+            .map(|info| {
+                let b = info.partition.to_string();
+                let fam = |name: &str, help: &str| {
+                    registry.labeled_counter(name, help, "backend", &b)
+                };
+                Backend {
+                    requests: fam(
+                        "swaphi_backend_requests_total",
+                        "Search attempts sent to each backend.",
+                    ),
+                    failures: fam(
+                        "swaphi_backend_failures_total",
+                        "Queries a backend terminally failed to answer.",
+                    ),
+                    retries: fam(
+                        "swaphi_backend_retries_total",
+                        "Attempts re-sent after a failed attempt.",
+                    ),
+                    hedges: fam(
+                        "swaphi_backend_hedges_total",
+                        "Duplicate attempts launched against silent backends.",
+                    ),
+                    timeouts: fam(
+                        "swaphi_backend_timeouts_total",
+                        "Queries a backend failed by staying dark past its deadline.",
+                    ),
+                    healthy: AtomicBool::new(true),
+                    latency: Mutex::new(Histogram::exponential(60_000_000)),
+                    info,
+                }
+            })
+            .collect();
+
+        let (listener, addr) = bind(&cfg.listen)?;
+        listener.set_nonblocking(true)?;
+        let recorder = Arc::new(if cfg.trace_ring > 0 {
+            TraceRecorder::enabled(cfg.trace_ring)
+        } else {
+            TraceRecorder::new(0)
+        });
+        let estimator = Mutex::new(RateEstimator::new(n, 0.3));
+        let shared = Arc::new(RouterShared {
+            stop: AtomicBool::new(false),
+            backends,
+            generation: reference.generation,
+            n_total: reference.n_total,
+            session_top_k,
+            registry,
+            requests_total,
+            partial_total,
+            gen_mismatch,
+            latency,
+            backend_latency,
+            recorder,
+            estimator,
+            cfg,
+        });
+        let accept = {
+            let shared = Arc::clone(&shared);
+            let addr = addr.clone();
+            std::thread::Builder::new()
+                .name("swaphi-route".into())
+                .spawn(move || accept_loop(listener, addr, &shared))?
+        };
+        Ok(RouterHandle { addr, shared, accept: Some(accept) })
+    }
+}
+
+/// A running router: bound address, fleet introspection, shutdown.
+pub struct RouterHandle {
+    addr: BoundAddr,
+    shared: Arc<RouterShared>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl RouterHandle {
+    pub fn addr(&self) -> &BoundAddr {
+        &self.addr
+    }
+
+    /// Address string accepted by [`Client::connect`].
+    pub fn connect_addr(&self) -> String {
+        self.addr.to_string()
+    }
+
+    /// The fleet's database generation (hex), as verified at handshake.
+    pub fn generation(&self) -> &str {
+        &self.shared.generation
+    }
+
+    /// Per-partition backend health, indexed by partition id.
+    pub fn backends_healthy(&self) -> Vec<bool> {
+        self.shared.backends.iter().map(|b| b.healthy.load(Ordering::SeqCst)).collect()
+    }
+
+    /// Backends in the fleet (== partitions).
+    pub fn n_backends(&self) -> usize {
+        self.shared.backends.len()
+    }
+
+    /// The fleet-wide top-k cap (minimum over backends).
+    pub fn session_top_k(&self) -> usize {
+        self.shared.session_top_k
+    }
+
+    /// Search requests routed so far.
+    pub fn requests_routed(&self) -> u64 {
+        self.shared.requests_total.get()
+    }
+
+    /// Routed answers that went out degraded (`partial: true`).
+    pub fn partial_answers(&self) -> u64 {
+        self.shared.partial_total.get()
+    }
+
+    /// The router's span ring (route + per-backend spans).
+    pub fn recorder(&self) -> &TraceRecorder {
+        &self.shared.recorder
+    }
+
+    /// Request a graceful drain (non-blocking).
+    pub fn stop(&self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Block until the accept loop has drained. Idempotent.
+    pub fn wait(&mut self) -> anyhow::Result<()> {
+        if let Some(h) = self.accept.take() {
+            h.join().map_err(|_| anyhow::anyhow!("router thread panicked"))?;
+        }
+        Ok(())
+    }
+
+    /// [`stop`](Self::stop) + [`wait`](Self::wait).
+    pub fn shutdown(mut self) -> anyhow::Result<()> {
+        self.stop();
+        self.wait()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Accept / connection plumbing (mirrors the server's).
+
+/// Bound on one request line. The router doesn't know the backends'
+/// query-length caps, so it only guards against unframed garbage; real
+/// over-length queries are rejected by the backends' own admission.
+const MAX_LINE: usize = 1 << 20;
+
+fn accept_loop(listener: Listener, addr: BoundAddr, shared: &Arc<RouterShared>) {
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    while !shared.draining() {
+        match listener.accept() {
+            Ok(mut conn) => {
+                conns.retain(|h| !h.is_finished());
+                if conns.len() >= shared.cfg.max_connections {
+                    let line = protocol::error_response(
+                        None,
+                        protocol::E_OVERLOADED,
+                        &format!("connection limit reached ({})", shared.cfg.max_connections),
+                    );
+                    let _ = conn.write_all(line.as_bytes());
+                    let _ = conn.write_all(b"\n");
+                    continue;
+                }
+                let shared = Arc::clone(shared);
+                if let Ok(h) = std::thread::Builder::new()
+                    .name("swaphi-route-conn".into())
+                    .spawn(move || handle_conn(conn, &shared))
+                {
+                    conns.push(h);
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+    drop(listener);
+    if let BoundAddr::Unix(path) = &addr {
+        let _ = std::fs::remove_file(path);
+    }
+    for h in conns {
+        let _ = h.join();
+    }
+}
+
+fn handle_conn(mut conn: Box<dyn Conn>, shared: &Arc<RouterShared>) {
+    let _ = conn.set_read_timeout(Some(Duration::from_millis(200)));
+    let mut acc: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    loop {
+        while let Some(pos) = acc.iter().position(|&b| b == b'\n') {
+            let line: Vec<u8> = acc.drain(..=pos).collect();
+            let line = String::from_utf8_lossy(&line);
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let reply = handle_line(line, shared);
+            if conn.write_all(reply.as_bytes()).is_err() || conn.write_all(b"\n").is_err() {
+                return;
+            }
+            let _ = conn.flush();
+        }
+        if acc.len() > MAX_LINE {
+            let line = protocol::error_response(
+                None,
+                protocol::E_BAD_REQUEST,
+                &format!("request line exceeds {MAX_LINE} bytes"),
+            );
+            let _ = conn.write_all(line.as_bytes());
+            let _ = conn.write_all(b"\n");
+            return;
+        }
+        if shared.draining() {
+            return;
+        }
+        match conn.read(&mut chunk) {
+            Ok(0) => return,
+            Ok(n) => acc.extend_from_slice(&chunk[..n]),
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {}
+            Err(_) => return,
+        }
+    }
+}
+
+fn handle_line(line: &str, shared: &Arc<RouterShared>) -> String {
+    let req = match protocol::parse_request(line) {
+        Ok(r) => r,
+        Err(e) => {
+            shared.error(e.code);
+            return protocol::error_response(None, e.code, &e.message);
+        }
+    };
+    let trace = shared.recorder.next_trace_id();
+    match req {
+        Request::Ping { id } => protocol::pong_response(id.as_deref(), trace),
+        // the router answers `hello` as the whole database: partition 0
+        // of 1, full sequence count — clients see one logical daemon
+        Request::Hello { id } => protocol::hello_response(
+            id.as_deref(),
+            &shared.generation,
+            0,
+            1,
+            shared.n_total,
+            shared.n_total,
+            shared.session_top_k,
+            trace,
+        ),
+        Request::Stats { id } => {
+            protocol::stats_response(id.as_deref(), stats_json(shared), trace)
+        }
+        Request::Metrics { id } => {
+            protocol::metrics_response(id.as_deref(), &metrics_text(shared), trace)
+        }
+        Request::Trace { id, n } => {
+            let spans = match n {
+                Some(n) => shared.recorder.recent(n),
+                None => shared.recorder.spans(),
+            };
+            let spans = Json::Arr(spans.iter().map(span_json).collect());
+            protocol::trace_response(id.as_deref(), spans, trace)
+        }
+        Request::Search(s) => route_search(s, shared, trace),
+    }
+}
+
+// ---------------------------------------------------------------------
+// The scatter–gather path.
+
+/// One partition's verdict for one routed query.
+enum PartReply {
+    /// The backend answered; `hits` carry global seq ids.
+    Hits { hits: Vec<HitPayload>, cached: bool },
+    /// The backend is alive and *rejected* the request (bad_request
+    /// etc.) — deterministic across the fleet, so the rejection is the
+    /// query's answer, not a backend failure.
+    Rejected { code: String, message: String },
+    /// The partition is dark for this query (timeout / exhausted
+    /// retries / stale generation).
+    Failed(String),
+}
+
+/// Why one attempt against one backend failed.
+enum AttemptError {
+    /// Connect/read/transient-server error: retryable, marks unhealthy
+    /// if the budget runs out.
+    Transport(String),
+    /// A protocol-level rejection from a live backend: not retryable,
+    /// not a health event.
+    Rejected { code: String, message: String },
+    /// The re-admission handshake found a stale partition slice.
+    Generation(String),
+}
+
+fn route_search(req: protocol::SearchRequest, shared: &Arc<RouterShared>, trace: u64) -> String {
+    let id = req.id.as_deref();
+    if shared.draining() {
+        shared.error(protocol::E_SHUTTING_DOWN);
+        return protocol::error_response_traced(
+            id,
+            protocol::E_SHUTTING_DOWN,
+            "router is draining",
+            trace,
+        );
+    }
+    shared.requests_total.inc();
+    let started = Instant::now();
+    // the merge truncation bound: never above the fleet's weakest
+    // session cap (see RouterShared::session_top_k)
+    let limit = req.top_k.map_or(shared.session_top_k, |k| k.min(shared.session_top_k));
+    let total_ms =
+        req.deadline_ms.unwrap_or(shared.cfg.backend_timeout_ms).min(shared.cfg.backend_timeout_ms);
+    let deadline = started + Duration::from_millis(total_ms.max(1));
+
+    // one request line shared by every partition: explicit top_k (each
+    // partition must contribute its own full top-`limit` for the merge
+    // proof to hold) and the clamped deadline
+    let line = {
+        let mut m = BTreeMap::new();
+        m.insert("v".to_string(), Json::Num(protocol::VERSION as f64));
+        m.insert("op".to_string(), Json::Str("search".to_string()));
+        m.insert("query".to_string(), Json::Str(req.seq.clone()));
+        m.insert("query_id".to_string(), Json::Str(req.query_id.clone()));
+        m.insert("top_k".to_string(), Json::Num(limit as f64));
+        m.insert("deadline_ms".to_string(), Json::Num(total_ms as f64));
+        if let Some(mode) = req.mode {
+            m.insert("mode".to_string(), Json::Str(mode.name().to_string()));
+        }
+        Arc::new(Json::Obj(m).to_string())
+    };
+
+    let n = shared.backends.len();
+    let (tx, rx) = mpsc::channel();
+    for pidx in 0..n {
+        let shared = Arc::clone(shared);
+        let line = Arc::clone(&line);
+        let tx = tx.clone();
+        let qlen = req.seq.len();
+        let _ = std::thread::Builder::new()
+            .name(format!("swaphi-part-{pidx}"))
+            .spawn(move || partition_worker(&shared, pidx, &line, qlen, deadline, trace, &tx));
+    }
+    drop(tx);
+
+    // gather until every partition reports or the deadline (plus a small
+    // grace for workers finishing their own timeout bookkeeping) passes
+    let hard = deadline + Duration::from_millis(500);
+    let mut parts: Vec<Option<(Vec<HitPayload>, bool)>> = (0..n).map(|_| None).collect();
+    let mut rejection: Option<(usize, String, String)> = None;
+    let mut received = 0;
+    while received < n {
+        let wait = hard.saturating_duration_since(Instant::now());
+        match rx.recv_timeout(wait) {
+            Ok((pidx, PartReply::Hits { hits, cached })) => {
+                parts[pidx] = Some((hits, cached));
+                received += 1;
+            }
+            Ok((pidx, PartReply::Rejected { code, message })) => {
+                if rejection.as_ref().map_or(true, |(p, _, _)| pidx < *p) {
+                    rejection = Some((pidx, code, message));
+                }
+                received += 1;
+            }
+            Ok((_, PartReply::Failed(_))) => received += 1,
+            Err(_) => break, // gather deadline, or every worker gone
+        }
+    }
+    if let Some((_, code, message)) = rejection {
+        shared.error(&code);
+        return protocol::error_response_traced(id, &code, &message, trace);
+    }
+    let missing: Vec<usize> =
+        parts.iter().enumerate().filter(|(_, p)| p.is_none()).map(|(i, _)| i).collect();
+    if missing.len() == n {
+        shared.error(protocol::E_INTERNAL);
+        return protocol::error_response_traced(
+            id,
+            protocol::E_INTERNAL,
+            "no backend answered: every partition is dark",
+            trace,
+        );
+    }
+    // a routed answer is "cached" only if every contributing backend
+    // answered from its cache
+    let cached = parts.iter().flatten().all(|(_, c)| *c);
+    let hit_parts: Vec<Vec<HitPayload>> = parts.into_iter().flatten().map(|(h, _)| h).collect();
+    let hits = merge::merge_hits(hit_parts, limit);
+    if !missing.is_empty() {
+        shared.partial_total.inc();
+    }
+    let latency_us = started.elapsed().as_micros().min(u64::MAX as u128) as u64;
+    shared.latency.lock().unwrap().record(latency_us);
+    if shared.recorder.is_enabled() {
+        let start = shared.recorder.us_of(started);
+        shared.recorder.record(
+            Span::new(trace, "route", start, latency_us).items(hits.len()).cache_hit(cached),
+        );
+    }
+    protocol::search_response_partial(id, &req.query_id, cached, &hits, trace, &missing)
+}
+
+/// Drive one partition to a verdict: first attempt, hedge after the
+/// hedge delay, retries on failure — all within the attempt budget and
+/// the partition deadline.
+fn partition_worker(
+    shared: &Arc<RouterShared>,
+    pidx: usize,
+    line: &Arc<String>,
+    qlen: usize,
+    deadline: Instant,
+    trace: u64,
+    out: &mpsc::Sender<(usize, PartReply)>,
+) {
+    let backend = &shared.backends[pidx];
+    let budget = 1 + shared.cfg.retries;
+    let hedge_delay = shared.hedge_delay();
+    let (tx, rx) = mpsc::channel::<Result<(Json, Duration), AttemptError>>();
+    spawn_attempt(shared, pidx, line, deadline, &tx);
+    let mut launched = 1usize;
+    let mut outstanding = 1usize;
+    let mut hedged = false;
+    let mut last_err = String::from("no attempt completed");
+    let reply = loop {
+        let now = Instant::now();
+        if now >= deadline {
+            backend.healthy.store(false, Ordering::SeqCst);
+            backend.timeouts.inc();
+            backend.failures.inc();
+            break PartReply::Failed(format!(
+                "partition {pidx} ({}) dark past its {}ms deadline; last error: {last_err}",
+                backend.info.addr,
+                shared.cfg.backend_timeout_ms
+            ));
+        }
+        let remaining = deadline.saturating_duration_since(now);
+        // until the hedge fires, wake at the hedge delay; after, only a
+        // result or the deadline matters
+        let wait = if !hedged && launched < budget { hedge_delay.min(remaining) } else { remaining };
+        match rx.recv_timeout(wait) {
+            Ok(Ok((resp, dur))) => match protocol::hits_of_response(&resp) {
+                Ok(hits) => {
+                    backend.healthy.store(true, Ordering::SeqCst);
+                    let us = dur.as_micros().min(u64::MAX as u128) as u64;
+                    backend.latency.lock().unwrap().record(us);
+                    shared.backend_latency.lock().unwrap().record(us);
+                    if qlen > 0 {
+                        // same cells/sec model the device tuner uses:
+                        // partition residues × query length per second
+                        shared.estimator.lock().unwrap().observe(
+                            pidx,
+                            backend.info.n_seqs as f64 * qlen as f64,
+                            dur.as_secs_f64(),
+                        );
+                    }
+                    if shared.recorder.is_enabled() {
+                        let end = shared.recorder.now_us();
+                        shared.recorder.record(
+                            Span::new(trace, "backend", end.saturating_sub(us), us)
+                                .device(pidx)
+                                .items(hits.len()),
+                        );
+                    }
+                    let cached =
+                        resp.get("cached").and_then(Json::as_bool).unwrap_or(false);
+                    break PartReply::Hits { hits, cached };
+                }
+                Err(e) => {
+                    backend.healthy.store(false, Ordering::SeqCst);
+                    backend.failures.inc();
+                    break PartReply::Failed(format!(
+                        "partition {pidx} ({}): malformed hits: {e:#}",
+                        backend.info.addr
+                    ));
+                }
+            },
+            Ok(Err(AttemptError::Rejected { code, message })) => {
+                break PartReply::Rejected { code, message };
+            }
+            Ok(Err(AttemptError::Generation(msg))) => {
+                // the backend stays unhealthy: every later query re-runs
+                // this handshake until a correct slice appears there
+                shared.gen_mismatch.inc();
+                backend.failures.inc();
+                break PartReply::Failed(msg);
+            }
+            Ok(Err(AttemptError::Transport(msg))) => {
+                outstanding -= 1;
+                last_err = msg;
+                if launched < budget {
+                    backend.retries.inc();
+                    spawn_attempt(shared, pidx, line, deadline, &tx);
+                    launched += 1;
+                    outstanding += 1;
+                } else if outstanding == 0 {
+                    backend.healthy.store(false, Ordering::SeqCst);
+                    backend.failures.inc();
+                    break PartReply::Failed(format!(
+                        "partition {pidx} ({}): {last_err}",
+                        backend.info.addr
+                    ));
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if !hedged && launched < budget && Instant::now() < deadline {
+                    hedged = true;
+                    backend.hedges.inc();
+                    spawn_attempt(shared, pidx, line, deadline, &tx);
+                    launched += 1;
+                    outstanding += 1;
+                }
+                // deadline case handled at the top of the loop
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                backend.healthy.store(false, Ordering::SeqCst);
+                backend.failures.inc();
+                break PartReply::Failed(format!(
+                    "partition {pidx} ({}): attempt threads died: {last_err}",
+                    backend.info.addr
+                ));
+            }
+        }
+    };
+    let _ = out.send((pidx, reply));
+}
+
+fn spawn_attempt(
+    shared: &Arc<RouterShared>,
+    pidx: usize,
+    line: &Arc<String>,
+    deadline: Instant,
+    tx: &mpsc::Sender<Result<(Json, Duration), AttemptError>>,
+) {
+    shared.backends[pidx].requests.inc();
+    let shared = Arc::clone(shared);
+    let line = Arc::clone(line);
+    let tx = tx.clone();
+    let _ = std::thread::Builder::new().name("swaphi-attempt".into()).spawn(move || {
+        let started = Instant::now();
+        let res = attempt_once(&shared, pidx, &line, deadline).map(|j| (j, started.elapsed()));
+        let _ = tx.send(res);
+    });
+}
+
+/// One attempt: connect, re-handshake if the backend was unhealthy,
+/// send the search, classify the outcome.
+fn attempt_once(
+    shared: &RouterShared,
+    pidx: usize,
+    line: &str,
+    deadline: Instant,
+) -> Result<Json, AttemptError> {
+    let backend = &shared.backends[pidx];
+    let addr = &backend.info.addr;
+    let remaining = deadline.saturating_duration_since(Instant::now());
+    if remaining.is_zero() {
+        return Err(AttemptError::Transport(format!(
+            "{addr}: deadline exhausted before connect"
+        )));
+    }
+    let mut c =
+        Client::connect(addr).map_err(|e| AttemptError::Transport(format!("{e:#}")))?;
+    let _ = c.set_read_timeout(Some(remaining));
+    if !backend.healthy.load(Ordering::SeqCst) {
+        // a process that (re)appeared on this address could be serving
+        // anything — re-verify identity before trusting its results
+        let hello =
+            c.hello().map_err(|e| AttemptError::Transport(format!("{addr}: hello: {e:#}")))?;
+        let gen = hello.get("generation").and_then(Json::as_str).unwrap_or("?").to_string();
+        let part = hello.get("partition").and_then(Json::as_usize);
+        if gen != shared.generation || part != Some(backend.info.partition) {
+            return Err(AttemptError::Generation(format!(
+                "generation_mismatch: backend {addr} serves generation {gen} (partition \
+                 {part:?}) but the fleet runs generation {} (partition {})",
+                shared.generation, backend.info.partition
+            )));
+        }
+    }
+    let resp =
+        c.request_line(line).map_err(|e| AttemptError::Transport(format!("{addr}: {e:#}")))?;
+    if client::is_ok(&resp) {
+        Ok(resp)
+    } else {
+        let (code, message) = client::error_of(&resp);
+        match code.as_str() {
+            // transient server states: worth another attempt
+            protocol::E_OVERLOADED
+            | protocol::E_SHUTTING_DOWN
+            | protocol::E_DEADLINE
+            | protocol::E_INTERNAL => {
+                Err(AttemptError::Transport(format!("{addr}: {code}: {message}")))
+            }
+            // deterministic rejections (bad_request, ...): the answer
+            _ => Err(AttemptError::Rejected { code, message }),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Introspection ops.
+
+fn summary_json(s: crate::metrics::HistogramSummary) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("count".to_string(), Json::Num(s.count as f64));
+    m.insert("mean".to_string(), Json::Num(s.mean));
+    m.insert("max".to_string(), Json::Num(s.max as f64));
+    m.insert("p50".to_string(), Json::Num(s.p50 as f64));
+    m.insert("p99".to_string(), Json::Num(s.p99 as f64));
+    Json::Obj(m)
+}
+
+fn stats_json(shared: &RouterShared) -> Json {
+    let mut s = BTreeMap::new();
+    s.insert("role".to_string(), Json::Str("router".to_string()));
+    s.insert("generation".to_string(), Json::Str(shared.generation.clone()));
+    s.insert("n_total".to_string(), Json::Num(shared.n_total as f64));
+    s.insert("session_top_k".to_string(), Json::Num(shared.session_top_k as f64));
+    s.insert("requests".to_string(), Json::Num(shared.requests_total.get() as f64));
+    s.insert("partial".to_string(), Json::Num(shared.partial_total.get() as f64));
+    s.insert(
+        "generation_mismatch".to_string(),
+        Json::Num(shared.gen_mismatch.get() as f64),
+    );
+    s.insert(
+        "hedge_delay_ms".to_string(),
+        Json::Num(shared.hedge_delay().as_millis() as f64),
+    );
+    s.insert(
+        "latency_us".to_string(),
+        summary_json(shared.latency.lock().unwrap().summary()),
+    );
+    let est = shared.estimator.lock().unwrap();
+    let n = shared.backends.len();
+    let backends: Vec<Json> = shared
+        .backends
+        .iter()
+        .map(|b| {
+            let mut m = BTreeMap::new();
+            m.insert("partition".to_string(), Json::Num(b.info.partition as f64));
+            m.insert("addr".to_string(), Json::Str(b.info.addr.clone()));
+            m.insert("n_seqs".to_string(), Json::Num(b.info.n_seqs as f64));
+            m.insert(
+                "healthy".to_string(),
+                Json::Bool(b.healthy.load(Ordering::SeqCst)),
+            );
+            m.insert("requests".to_string(), Json::Num(b.requests.get() as f64));
+            m.insert("failures".to_string(), Json::Num(b.failures.get() as f64));
+            m.insert("retries".to_string(), Json::Num(b.retries.get() as f64));
+            m.insert("hedges".to_string(), Json::Num(b.hedges.get() as f64));
+            m.insert("timeouts".to_string(), Json::Num(b.timeouts.get() as f64));
+            m.insert(
+                "latency_us".to_string(),
+                summary_json(b.latency.lock().unwrap().summary()),
+            );
+            if let Some(t) = est.throughput(b.info.partition) {
+                m.insert("throughput_cells_per_sec".to_string(), Json::Num(t));
+            }
+            Json::Obj(m)
+        })
+        .collect();
+    s.insert("backends".to_string(), Json::Arr(backends));
+    // the measured partition rate vector, normalized the way the device
+    // tuner normalizes — copy into `swaphi index --partition-rates` to
+    // re-balance slice sizes against observed backend speeds
+    if let Some(rates) = est.calibrated_with_prior(&vec![1.0; n], n as f64) {
+        s.insert(
+            "suggested_rates".to_string(),
+            Json::Arr(rates.into_iter().map(Json::Num).collect()),
+        );
+    }
+    Json::Obj(s)
+}
+
+fn metrics_text(shared: &RouterShared) -> String {
+    use std::fmt::Write as _;
+    let mut out = shared.registry.prometheus_text();
+    let _ = writeln!(out, "# HELP swaphi_backend_healthy Backend health by partition (1 = healthy).");
+    let _ = writeln!(out, "# TYPE swaphi_backend_healthy gauge");
+    for b in &shared.backends {
+        let _ = writeln!(
+            out,
+            "swaphi_backend_healthy{{backend=\"{}\"}} {}",
+            b.info.partition,
+            u8::from(b.healthy.load(Ordering::SeqCst))
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hedge_delay_is_flat_until_sampled_then_tracks_p99() {
+        // too few samples: flat 200ms regardless of p99
+        assert_eq!(auto_hedge_delay(0, 1, 10_000), Duration::from_millis(200));
+        assert_eq!(auto_hedge_delay(31, 9_999_999, 10_000), Duration::from_millis(200));
+        // sampled: 3×p99, clamped below by 25ms...
+        assert_eq!(auto_hedge_delay(32, 1_000, 10_000), Duration::from_millis(25));
+        assert_eq!(auto_hedge_delay(32, 20_000, 10_000), Duration::from_micros(60_000));
+        // ...and above by half the backend timeout
+        assert_eq!(auto_hedge_delay(32, 60_000_000, 10_000), Duration::from_secs(5));
+        // a tiny timeout can't push the ceiling below the floor
+        assert_eq!(auto_hedge_delay(32, 1, 1), Duration::from_millis(25));
+    }
+
+    #[test]
+    fn hello_info_parses_a_hello_response() {
+        let line = protocol::hello_response(None, "00000000000000ab", 2, 3, 40, 120, 10, 0);
+        let h = hello_of(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(h.generation, "00000000000000ab");
+        assert_eq!(h.partition, 2);
+        assert_eq!(h.partitions, 3);
+        assert_eq!(h.n_seqs, 40);
+        assert_eq!(h.n_total, 120);
+        assert_eq!(h.top_k, 10);
+        // a pre-partition daemon's reply (no top_k) is rejected, not
+        // silently defaulted — the router must know the real cap
+        assert!(hello_of(&Json::parse(r#"{"v":1,"ok":true,"op":"hello"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn router_refuses_an_empty_fleet() {
+        let err = Router::start(RouterConfig::default()).unwrap_err();
+        assert!(format!("{err:#}").contains("at least one backend"), "{err:#}");
+    }
+}

@@ -188,6 +188,26 @@ impl RawConfig {
         }
     }
 
+    /// A list of strings. Elements must be quoted in config files when
+    /// they contain characters outside the bare-identifier set — socket
+    /// addresses always do (`"127.0.0.1:7901"`).
+    pub fn str_list_or(&self, key: &str, default: &[&str]) -> anyhow::Result<Vec<String>> {
+        match self.entries.get(key) {
+            None => Ok(default.iter().map(|s| s.to_string()).collect()),
+            Some(Value::List(xs)) => xs
+                .iter()
+                .map(|v| match v {
+                    Value::Str(s) => Ok(s.clone()),
+                    v => anyhow::bail!(
+                        "{key}: expected string in list, got {}",
+                        v.type_name()
+                    ),
+                })
+                .collect(),
+            Some(v) => anyhow::bail!("{key}: expected list, got {}", v.type_name()),
+        }
+    }
+
     /// Reject unknown keys (typo protection) given the known key set.
     pub fn validate_keys(&self, known: &[&str]) -> anyhow::Result<()> {
         for key in self.entries.keys() {
@@ -310,6 +330,13 @@ pub const KNOWN_KEYS: &[&str] = &[
     "server.max_connections",
     "server.slow_query_ms",
     "server.trace_ring",
+    "cluster.listen",
+    "cluster.backends",
+    "cluster.hedge_ms",
+    "cluster.retries",
+    "cluster.backend_timeout_ms",
+    "cluster.max_connections",
+    "cluster.trace_ring",
 ];
 
 /// Fully-typed SWAPHI configuration.
@@ -363,6 +390,17 @@ pub struct SwaphiConfig {
     /// Span-ring capacity behind the daemon's `trace` op (0 disables
     /// span recording; trace ids are still minted and echoed).
     pub server_trace_ring: usize,
+    /// Scatter–gather router (`[cluster]` section; `swaphi route`).
+    pub cluster_listen: String,
+    /// Backend daemon addresses, one per partition (quoted strings in
+    /// config files — addresses contain `:`).
+    pub cluster_backends: Vec<String>,
+    /// Fixed hedge delay in ms; 0 means auto (track the backend p99).
+    pub cluster_hedge_ms: u64,
+    pub cluster_retries: usize,
+    pub cluster_backend_timeout_ms: u64,
+    pub cluster_max_connections: usize,
+    pub cluster_trace_ring: usize,
 }
 
 impl SwaphiConfig {
@@ -481,6 +519,16 @@ impl SwaphiConfig {
             server_max_connections: raw.int_or("server.max_connections", 512)?.max(1) as usize,
             server_slow_query_ms: raw.int_or("server.slow_query_ms", 0)?.max(0) as u64,
             server_trace_ring: raw.int_or("server.trace_ring", 4096)?.max(0) as usize,
+            cluster_listen: raw.str_or("cluster.listen", "127.0.0.1:7900")?,
+            cluster_backends: raw.str_list_or("cluster.backends", &[])?,
+            cluster_hedge_ms: raw.int_or("cluster.hedge_ms", 0)?.max(0) as u64,
+            cluster_retries: raw.int_or("cluster.retries", 2)?.max(0) as usize,
+            cluster_backend_timeout_ms: raw
+                .int_or("cluster.backend_timeout_ms", 10_000)?
+                .max(1) as u64,
+            cluster_max_connections: raw.int_or("cluster.max_connections", 256)?.max(1)
+                as usize,
+            cluster_trace_ring: raw.int_or("cluster.trace_ring", 4096)?.max(0) as usize,
         })
     }
 
@@ -525,6 +573,20 @@ impl SwaphiConfig {
             }),
             tune: self.tune_config(),
             handicap: self.handicap.clone(),
+        }
+    }
+
+    /// Materialize the router's [`RouterConfig`](crate::cluster::RouterConfig).
+    pub fn router_config(&self) -> crate::cluster::RouterConfig {
+        crate::cluster::RouterConfig {
+            listen: self.cluster_listen.clone(),
+            backends: self.cluster_backends.clone(),
+            hedge_ms: (self.cluster_hedge_ms > 0).then_some(self.cluster_hedge_ms),
+            retries: self.cluster_retries,
+            backend_timeout_ms: self.cluster_backend_timeout_ms,
+            max_connections: self.cluster_max_connections,
+            handle_signals: false,
+            trace_ring: self.cluster_trace_ring,
         }
     }
 
@@ -895,5 +957,46 @@ mod tests {
     fn bare_identifier_values_are_strings() {
         let raw = RawConfig::parse("[search]\nengine = intersp\n").unwrap();
         assert_eq!(raw.get("search.engine"), Some(&Value::Str("intersp".into())));
+    }
+
+    #[test]
+    fn cluster_section_materializes_router_config() {
+        // defaults: no backends, auto hedging
+        let d = SwaphiConfig::default_config();
+        assert!(d.cluster_backends.is_empty());
+        let rc = d.router_config();
+        assert_eq!(rc.listen, "127.0.0.1:7900");
+        assert_eq!(rc.hedge_ms, None, "hedge delay is auto by default");
+        assert_eq!(rc.retries, 2);
+        assert_eq!(rc.backend_timeout_ms, 10_000);
+        assert!(!rc.handle_signals, "signals are the route command's call");
+
+        // addresses contain ':' so they must be quoted strings
+        let raw = RawConfig::parse(
+            "[cluster]\nlisten = \"127.0.0.1:7900\"\n\
+             backends = [\"127.0.0.1:7901\", \"127.0.0.1:7902\"]\n\
+             hedge_ms = 40\nretries = 1\nbackend_timeout_ms = 2000\n",
+        )
+        .unwrap();
+        let cfg = SwaphiConfig::from_raw(&raw).unwrap();
+        let rc = cfg.router_config();
+        assert_eq!(rc.backends, vec!["127.0.0.1:7901", "127.0.0.1:7902"]);
+        assert_eq!(rc.hedge_ms, Some(40));
+        assert_eq!(rc.retries, 1);
+        assert_eq!(rc.backend_timeout_ms, 2000);
+    }
+
+    #[test]
+    fn str_list_rejects_non_string_elements_and_bare_addresses() {
+        let raw = RawConfig::parse("[cluster]\nbackends = [7901, 7902]\n").unwrap();
+        let err = raw.str_list_or("cluster.backends", &[]).unwrap_err().to_string();
+        assert!(err.contains("expected string in list"), "{err}");
+        // an unquoted socket address is a parse error, not a silent string
+        assert!(RawConfig::parse("[cluster]\nbackends = [127.0.0.1:7901]\n").is_err());
+        // default pass-through
+        assert_eq!(
+            RawConfig::default().str_list_or("cluster.backends", &["a", "b"]).unwrap(),
+            vec!["a".to_string(), "b".to_string()]
+        );
     }
 }

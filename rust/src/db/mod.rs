@@ -11,6 +11,7 @@
 pub mod chunk;
 pub mod format;
 pub mod index;
+pub mod partition;
 pub mod profile;
 pub mod synth;
 

@@ -1,0 +1,311 @@
+//! Database partitioning for cluster mode — the index/db half of the
+//! scatter–gather story (the MPI+OpenMP hybrid exemplar's rank-level
+//! split, one level above [`DeviceSet`](crate::coordinator::DeviceSet)).
+//!
+//! `swaphi index --partitions N` splits one database into N per-backend
+//! slices. The split reuses the exact machinery the in-process fleet
+//! uses: the pair-aligned chunk plan ([`plan_chunks_paired`]) and the
+//! rate-weighted partitioner ([`partition_chunks_weighted`]), so a
+//! heterogeneous backend fleet (`--partition-rates 1.0,1.0,0.25`) gets
+//! compute-balanced slices, not sequence-count-balanced ones.
+//!
+//! Every slice ships with a **`.pmeta` sidecar** holding three things the
+//! router's correctness depends on:
+//!
+//! * the **generation fingerprint of the whole database** (not the
+//!   slice), so the router can refuse to merge backends serving slices
+//!   of different database builds (`generation_mismatch`);
+//! * the slice's **partition id / partition count**, so the router can
+//!   verify it holds a complete, non-overlapping partition set;
+//! * the **global sequence-index map**: `global[j]` is the full-index
+//!   position of the slice's `j`-th (length-sorted) sequence. Backends
+//!   rebase their hit indices through it, so the `seq` field on the wire
+//!   is always a *global* id and the router's merge tie-break (score
+//!   descending, global index ascending) reproduces the single-process
+//!   ranking bit for bit.
+//!
+//! The rebase map stays exact because [`Index::build`] sorts stably by
+//! length: a partition built from an ascending-global-index subset of
+//! the sorted order is already sorted, so slice order == subset order
+//! and `global` is just the subset, ascending.
+
+use super::chunk::{partition_chunks_weighted, plan_chunks_paired, ChunkPlanConfig};
+use super::index::Index;
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Sidecar metadata of one database partition (the `.pmeta` file).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PartitionMeta {
+    /// Generation fingerprint of the **full** database this slice was
+    /// cut from (see [`crate::server::index_generation`]).
+    pub generation: u64,
+    /// Total partitions in the set.
+    pub partitions: usize,
+    /// This slice's id, in `0..partitions`.
+    pub partition: usize,
+    /// Sequences in the full database.
+    pub n_total: usize,
+    /// `global[j]` = full-index position of this slice's `j`-th
+    /// length-sorted sequence. Strictly ascending.
+    pub global: Vec<usize>,
+}
+
+impl PartitionMeta {
+    /// Structural validity: ids in range, rebase map strictly ascending
+    /// and within the full database.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.partitions >= 1, "partitions must be >= 1");
+        anyhow::ensure!(
+            self.partition < self.partitions,
+            "partition {} out of range (partitions = {})",
+            self.partition,
+            self.partitions
+        );
+        anyhow::ensure!(
+            self.global.len() <= self.n_total,
+            "partition holds {} sequences but the full database has {}",
+            self.global.len(),
+            self.n_total
+        );
+        for w in self.global.windows(2) {
+            anyhow::ensure!(
+                w[0] < w[1],
+                "global index map must be strictly ascending (saw {} then {})",
+                w[0],
+                w[1]
+            );
+        }
+        if let Some(&last) = self.global.last() {
+            anyhow::ensure!(
+                last < self.n_total,
+                "global index {last} out of range (n_total = {})",
+                self.n_total
+            );
+        }
+        Ok(())
+    }
+
+    /// Render as the sidecar's JSON line (generation as 16 hex digits,
+    /// the same spelling `stats` reports).
+    pub fn to_json(&self) -> String {
+        let global: Vec<String> = self.global.iter().map(|g| g.to_string()).collect();
+        format!(
+            "{{\"v\":1,\"generation\":\"{:016x}\",\"global\":[{}],\
+             \"n_total\":{},\"partition\":{},\"partitions\":{}}}\n",
+            self.generation,
+            global.join(","),
+            self.n_total,
+            self.partition,
+            self.partitions
+        )
+    }
+
+    /// Parse a sidecar produced by [`to_json`](Self::to_json).
+    pub fn parse(text: &str) -> anyhow::Result<PartitionMeta> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("pmeta: {e}"))?;
+        let v = j.usize_field("v")?;
+        anyhow::ensure!(v == 1, "pmeta: unsupported version {v}");
+        let gen_hex = j.str_field("generation")?;
+        let generation = u64::from_str_radix(&gen_hex, 16)
+            .map_err(|e| anyhow::anyhow!("pmeta: bad generation {gen_hex:?}: {e}"))?;
+        let global = j
+            .get("global")
+            .and_then(|g| g.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("pmeta: missing global index map"))?
+            .iter()
+            .map(|e| {
+                e.as_usize().ok_or_else(|| anyhow::anyhow!("pmeta: non-integer global index"))
+            })
+            .collect::<anyhow::Result<Vec<usize>>>()?;
+        let meta = PartitionMeta {
+            generation,
+            partitions: j.usize_field("partitions")?,
+            partition: j.usize_field("partition")?,
+            n_total: j.usize_field("n_total")?,
+            global,
+        };
+        meta.validate()?;
+        Ok(meta)
+    }
+
+    /// Load and validate a `.pmeta` sidecar.
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<PartitionMeta> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    /// Write the sidecar next to its slice.
+    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        std::fs::write(path.as_ref(), self.to_json())
+            .map_err(|e| anyhow::anyhow!("write {}: {e}", path.as_ref().display()))
+    }
+
+    /// The sidecar path for a partition slice at `slice_path`.
+    pub fn sidecar_path(slice_path: &str) -> String {
+        format!("{slice_path}.pmeta")
+    }
+
+    /// Generation as the 16-hex spelling used on the wire.
+    pub fn generation_hex(&self) -> String {
+        format!("{:016x}", self.generation)
+    }
+}
+
+/// Split a full index into `rates.len()` compute-balanced partitions,
+/// returning each partition's **ascending global sequence indices**.
+/// The split goes through the pair-aligned chunk plan and the
+/// rate-weighted chunk partitioner — the same plan/balance machinery
+/// the in-process `DeviceSet` shards with — then expands chunks to
+/// their member sequences. Every sequence lands in exactly one
+/// partition (chunks cover profiles once, profiles cover sequences
+/// once).
+pub fn partition_sequences(
+    index: &Index,
+    cfg: ChunkPlanConfig,
+    rates: &[f64],
+) -> Vec<Vec<usize>> {
+    let chunks = plan_chunks_paired(index, cfg);
+    let shards = partition_chunks_weighted(&chunks, rates);
+    shards
+        .iter()
+        .map(|shard| {
+            let mut seqs: Vec<usize> = shard
+                .iter()
+                .flat_map(|&c| {
+                    index.profiles[chunks[c].profile_start..chunks[c].profile_end]
+                        .iter()
+                        .flat_map(|p| p.members[..p.used].iter().copied())
+                })
+                .collect();
+            seqs.sort_unstable();
+            seqs
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::synth::{generate, SynthSpec};
+    use crate::db::Database;
+
+    fn index(n: usize, seed: u64) -> Index {
+        Index::build(generate(&SynthSpec::tiny(n, seed)))
+    }
+
+    #[test]
+    fn partitions_cover_every_sequence_once() {
+        let idx = index(300, 11);
+        let cfg = ChunkPlanConfig { target_padded_residues: 2048 };
+        for rates in [vec![1.0; 3], vec![1.0, 1.0, 0.25], vec![1.0], vec![1.0; 5]] {
+            let parts = partition_sequences(&idx, cfg, &rates);
+            assert_eq!(parts.len(), rates.len());
+            let mut seen: Vec<usize> = parts.iter().flatten().copied().collect();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..idx.n_seqs()).collect::<Vec<_>>(), "{rates:?}");
+            for p in &parts {
+                assert!(p.windows(2).all(|w| w[0] < w[1]), "ascending global ids");
+            }
+        }
+    }
+
+    #[test]
+    fn skewed_rates_give_the_slow_backend_less_work() {
+        let idx = index(400, 3);
+        let cfg = ChunkPlanConfig { target_padded_residues: 2048 };
+        let parts = partition_sequences(&idx, cfg, &[1.0, 1.0, 0.25]);
+        let residues = |p: &[usize]| -> u128 {
+            p.iter().map(|&s| idx.seqs[s].len() as u128).sum()
+        };
+        let slow = residues(&parts[2]);
+        assert!(
+            slow < residues(&parts[0]) && slow < residues(&parts[1]),
+            "quarter-rate backend must own the smallest slice: {:?}",
+            parts.iter().map(|p| residues(p)).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn subset_in_global_order_is_already_length_sorted() {
+        // the rebase-map invariant: building an Index from a partition's
+        // ascending-global-index subset must not reorder it, so
+        // slice-local index j maps to global[j]
+        let idx = index(250, 7);
+        let cfg = ChunkPlanConfig { target_padded_residues: 2048 };
+        for part in partition_sequences(&idx, cfg, &[1.0, 1.0, 1.0]) {
+            let subset: Vec<_> = part.iter().map(|&g| idx.seqs[g].clone()).collect();
+            let rebuilt = Index::build(Database::new(subset.clone()));
+            for (j, s) in rebuilt.seqs.iter().enumerate() {
+                assert_eq!(s, &subset[j], "stable re-sort must be the identity");
+                assert_eq!(s, &idx.seqs[part[j]], "global[j] rebase must hold");
+            }
+        }
+    }
+
+    #[test]
+    fn pmeta_roundtrips_and_validates() {
+        let meta = PartitionMeta {
+            generation: 0xdead_beef_0042_0007,
+            partitions: 3,
+            partition: 1,
+            n_total: 480,
+            global: vec![0, 2, 5, 479],
+        };
+        meta.validate().unwrap();
+        let parsed = PartitionMeta::parse(&meta.to_json()).unwrap();
+        assert_eq!(parsed, meta);
+        assert_eq!(parsed.generation_hex(), "deadbeef00420007");
+        assert_eq!(PartitionMeta::sidecar_path("/tmp/db.idx.p1"), "/tmp/db.idx.p1.pmeta");
+    }
+
+    #[test]
+    fn pmeta_rejects_structural_corruption() {
+        let good = PartitionMeta {
+            generation: 1,
+            partitions: 2,
+            partition: 0,
+            n_total: 10,
+            global: vec![0, 3, 4],
+        };
+        let mut bad = good.clone();
+        bad.partition = 2;
+        assert!(bad.validate().unwrap_err().to_string().contains("out of range"));
+        let mut bad = good.clone();
+        bad.global = vec![0, 4, 3];
+        assert!(bad.validate().unwrap_err().to_string().contains("ascending"));
+        let mut bad = good.clone();
+        bad.global = vec![0, 3, 10];
+        assert!(bad.validate().unwrap_err().to_string().contains("out of range"));
+        let mut bad = good;
+        bad.partitions = 0;
+        assert!(bad.validate().is_err());
+        // parse-level: bad version, bad generation hex
+        assert!(PartitionMeta::parse("{\"v\":2}").is_err());
+        assert!(PartitionMeta::parse(
+            "{\"v\":1,\"generation\":\"zz\",\"global\":[],\"n_total\":0,\
+             \"partition\":0,\"partitions\":1}"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn save_and_load_roundtrip() {
+        let meta = PartitionMeta {
+            generation: 42,
+            partitions: 1,
+            partition: 0,
+            n_total: 3,
+            global: vec![0, 1, 2],
+        };
+        let path = std::env::temp_dir().join(format!(
+            "swaphi-pmeta-test-{}.pmeta",
+            std::process::id()
+        ));
+        meta.save(&path).unwrap();
+        let loaded = PartitionMeta::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(loaded, meta);
+    }
+}

@@ -21,6 +21,7 @@ pub mod alphabet;
 pub mod bench;
 pub mod blast;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod db;

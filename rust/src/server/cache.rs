@@ -161,7 +161,7 @@ mod tests {
 
     fn hits(n: usize) -> Vec<HitPayload> {
         (0..n)
-            .map(|i| HitPayload { subject: format!("s{i}"), len: 10 * i, score: 100 - i as i32 })
+            .map(|i| HitPayload { subject: format!("s{i}"), len: 10 * i, score: 100 - i as i32, seq: i })
             .collect()
     }
 

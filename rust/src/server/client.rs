@@ -36,6 +36,13 @@ impl Client {
         Ok(Client { conn, acc: Vec::new() })
     }
 
+    /// Tighten (or clear) the read timeout — the router's hedging logic
+    /// needs per-attempt bounds far below the default 120 s cap.
+    pub fn set_read_timeout(&mut self, dur: Option<Duration>) -> anyhow::Result<()> {
+        self.conn.set_read_timeout(dur)?;
+        Ok(())
+    }
+
     /// Send one raw request line and read one response line, parsed.
     pub fn request_line(&mut self, line: &str) -> anyhow::Result<Json> {
         self.conn.write_all(line.as_bytes())?;
@@ -103,6 +110,12 @@ impl Client {
         self.request_line(&format!(r#"{{"v":{},"op":"ping"}}"#, protocol::VERSION))
     }
 
+    /// Identity/partition handshake: which database generation the
+    /// daemon serves and which slice of it (see `docs/cluster.md`).
+    pub fn hello(&mut self) -> anyhow::Result<Json> {
+        self.request_line(&format!(r#"{{"v":{},"op":"hello"}}"#, protocol::VERSION))
+    }
+
     pub fn stats(&mut self) -> anyhow::Result<Json> {
         self.request_line(&format!(r#"{{"v":{},"op":"stats"}}"#, protocol::VERSION))
     }
@@ -146,4 +159,43 @@ pub fn error_of(resp: &Json) -> (String, String) {
 /// Hits of a success response.
 pub fn hits_of(resp: &Json) -> anyhow::Result<Vec<HitPayload>> {
     protocol::hits_of_response(resp)
+}
+
+/// Why a ping probe failed. The smoke harnesses retry on `Connect`
+/// (nothing listening yet — the daemon may still be starting) but fail
+/// fast on `Protocol` (something *is* listening and answered garbage;
+/// waiting will not heal it). Conflating the two — the pre-PR-8 bug —
+/// made every smoke failure look like a dead daemon.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PingFailure {
+    /// TCP/unix connect was refused or errored: no live daemon.
+    Connect,
+    /// Connected, but the reply was missing, unparseable, or not a
+    /// well-formed pong: a live process speaking the wrong protocol.
+    Protocol,
+}
+
+impl PingFailure {
+    pub fn name(self) -> &'static str {
+        match self {
+            PingFailure::Connect => "connect",
+            PingFailure::Protocol => "protocol",
+        }
+    }
+}
+
+/// One ping probe with a typed failure: connect, send `ping`, require a
+/// well-formed `pong` within `timeout`.
+pub fn ping_once(addr: &str, timeout: Duration) -> Result<(), (PingFailure, String)> {
+    let mut c = Client::connect(addr).map_err(|e| (PingFailure::Connect, format!("{e:#}")))?;
+    let _ = c.set_read_timeout(Some(timeout));
+    match c.ping() {
+        Ok(resp)
+            if is_ok(&resp) && resp.get("op").and_then(Json::as_str) == Some("pong") =>
+        {
+            Ok(())
+        }
+        Ok(resp) => Err((PingFailure::Protocol, format!("unexpected reply: {resp}"))),
+        Err(e) => Err((PingFailure::Protocol, format!("{e:#}"))),
+    }
 }

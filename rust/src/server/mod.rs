@@ -37,6 +37,7 @@ use crate::align::Precision;
 use crate::coordinator::{AlignerFactory, DeviceSet, SearchConfig, SearchMode, SearchSession};
 use crate::db::chunk::plan_chunks_paired;
 use crate::db::index::Index;
+use crate::db::partition::PartitionMeta;
 use crate::matrices::Scoring;
 use crate::metrics::{Counter, Histogram, Registry, SharedHistogram};
 use crate::trace::{span_json, trace_id_hex, Span, TraceRecorder};
@@ -158,13 +159,13 @@ impl Conn for UnixStream {
     }
 }
 
-enum Listener {
+pub(crate) enum Listener {
     Tcp(TcpListener),
     Unix(UnixListener),
 }
 
 impl Listener {
-    fn accept(&self) -> io::Result<Box<dyn Conn>> {
+    pub(crate) fn accept(&self) -> io::Result<Box<dyn Conn>> {
         // a write timeout on every accepted stream bounds how long a
         // connection thread can be wedged by a peer that stops reading —
         // without it, one such peer makes graceful shutdown hang forever
@@ -184,7 +185,7 @@ impl Listener {
         Ok(conn)
     }
 
-    fn set_nonblocking(&self, nb: bool) -> io::Result<()> {
+    pub(crate) fn set_nonblocking(&self, nb: bool) -> io::Result<()> {
         match self {
             Listener::Tcp(l) => l.set_nonblocking(nb),
             Listener::Unix(l) => l.set_nonblocking(nb),
@@ -208,7 +209,7 @@ impl std::fmt::Display for BoundAddr {
     }
 }
 
-fn bind(listen: &str) -> anyhow::Result<(Listener, BoundAddr)> {
+pub(crate) fn bind(listen: &str) -> anyhow::Result<(Listener, BoundAddr)> {
     if let Some(path) = listen.strip_prefix("unix:") {
         anyhow::ensure!(!path.is_empty(), "unix: listen address needs a path");
         // a stale socket file from a crashed daemon would fail the bind —
@@ -447,6 +448,9 @@ struct Shared {
     /// Ring of recent slow-query records (the same JSON lines written
     /// to stderr), kept so tests and embedders can assert on them.
     slow_log: Mutex<VecDeque<String>>,
+    /// Partition identity when serving one slice of a larger database.
+    partition: Option<PartitionMeta>,
+    n_seqs: usize,
 }
 
 /// How many slow-query records the in-memory ring retains.
@@ -474,6 +478,34 @@ impl Shared {
             _ => self.params_fp_exact,
         }
     }
+
+    /// The generation spelled on the wire (`hello`, `stats.backend`):
+    /// the *full* database's fingerprint when serving a partition slice,
+    /// the index's own otherwise — so every member of one partition set
+    /// reports the same generation and the router can verify it.
+    fn wire_generation(&self) -> String {
+        match &self.partition {
+            Some(m) => m.generation_hex(),
+            None => format!("{:016x}", self.generation),
+        }
+    }
+
+    /// `(partition, partitions, n_total)` — an unpartitioned daemon is
+    /// slice 0 of 1 covering everything it has.
+    fn partition_identity(&self) -> (usize, usize, usize) {
+        match &self.partition {
+            Some(m) => (m.partition, m.partitions, m.n_total),
+            None => (0, 1, self.n_seqs),
+        }
+    }
+
+    /// Rebase a slice-local sequence index to its global id.
+    fn global_seq(&self, local: usize) -> usize {
+        match &self.partition {
+            Some(m) => m.global[local],
+            None => local,
+        }
+    }
 }
 
 /// Everything a resident service needs; consumed by [`Server::start`].
@@ -483,6 +515,12 @@ pub struct Server {
     pub search: SearchConfig,
     pub server: ServerConfig,
     pub factory: Arc<dyn AlignerFactory>,
+    /// When serving one slice of a partitioned database: the `.pmeta`
+    /// sidecar. Hit indices are rebased through `partition.global` so
+    /// the `seq` field on the wire is a *global* id, and the `hello`
+    /// handshake reports the full database's generation. `None` serves
+    /// the index as partition 0 of 1.
+    pub partition: Option<PartitionMeta>,
 }
 
 /// A running server: its bound address, metrics, and shutdown control.
@@ -497,7 +535,16 @@ impl Server {
     /// Bind, warm the session state, and spawn the accept + coalescer
     /// threads. Returns once the socket is listening.
     pub fn start(self) -> anyhow::Result<ServerHandle> {
-        let Server { index, scoring, mut search, server: cfg, factory } = self;
+        let Server { index, scoring, mut search, server: cfg, factory, partition } = self;
+        if let Some(meta) = &partition {
+            meta.validate()?;
+            anyhow::ensure!(
+                meta.global.len() == index.n_seqs(),
+                "partition metadata covers {} sequences but the index holds {}",
+                meta.global.len(),
+                index.n_seqs()
+            );
+        }
         // the daemon reports real hits/latency; per-request device
         // simulation is offline-analysis machinery, not serving work
         search.sim = None;
@@ -578,6 +625,8 @@ impl Server {
             devices,
             recorder,
             slow_log: Mutex::new(VecDeque::new()),
+            partition,
+            n_seqs: index.n_seqs(),
             cfg,
         });
 
@@ -768,6 +817,19 @@ fn handle_line(line: &str, shared: &Shared) -> String {
             };
             let spans = Json::Arr(spans.iter().map(span_json).collect());
             protocol::trace_response(id.as_deref(), spans, trace)
+        }
+        Request::Hello { id } => {
+            let (partition, partitions, n_total) = shared.partition_identity();
+            protocol::hello_response(
+                id.as_deref(),
+                &shared.wire_generation(),
+                partition,
+                partitions,
+                shared.n_seqs,
+                n_total,
+                shared.session_top_k,
+                trace,
+            )
         }
         Request::Search(s) => handle_search(s, shared, trace),
     }
@@ -999,7 +1061,14 @@ fn run_mode_group(
                 .map(|r| {
                     r.hits
                         .iter()
-                        .map(|h| HitPayload { subject: h.id.clone(), len: h.len, score: h.score })
+                        .map(|h| HitPayload {
+                            subject: h.id.clone(),
+                            len: h.len,
+                            score: h.score,
+                            // rebased before the hit is cached or crosses
+                            // the wire: `seq` is always a global id
+                            seq: shared.global_seq(h.seq_index),
+                        })
                         .collect()
                 })
                 .collect();
@@ -1245,6 +1314,19 @@ fn stats_json(shared: &Shared) -> Json {
         "index_generation".to_string(),
         Json::Str(format!("{:016x}", shared.generation)),
     );
+    // backend identity (additive, PR 8): which slice of which database
+    // generation this daemon serves — the same facts `hello` reports,
+    // so cluster operators can audit a fleet from stats alone
+    {
+        let (partition, partitions, n_total) = shared.partition_identity();
+        let mut b = BTreeMap::new();
+        b.insert("generation".to_string(), Json::Str(shared.wire_generation()));
+        b.insert("partition".to_string(), Json::Num(partition as f64));
+        b.insert("partitions".to_string(), Json::Num(partitions as f64));
+        b.insert("n_seqs".to_string(), Json::Num(shared.n_seqs as f64));
+        b.insert("n_total".to_string(), Json::Num(n_total as f64));
+        s.insert("backend".to_string(), Json::Obj(b));
+    }
     Json::Obj(s)
 }
 

@@ -23,6 +23,9 @@ pub const E_OVERLOADED: &str = "overloaded";
 pub const E_DEADLINE: &str = "deadline_exceeded";
 pub const E_SHUTTING_DOWN: &str = "shutting_down";
 pub const E_INTERNAL: &str = "internal";
+/// A cluster backend's database generation does not match the fleet's
+/// (stale partition slice); the router refuses to merge its results.
+pub const E_GENERATION_MISMATCH: &str = "generation_mismatch";
 
 /// A structured protocol-level failure, rendered by [`error_response`].
 #[derive(Debug)]
@@ -48,6 +51,11 @@ pub enum Request {
     /// `op = "trace"`: the last `n` spans from the server's trace ring
     /// (all retained spans when `n` is absent).
     Trace { id: Option<String>, n: Option<usize> },
+    /// `op = "hello"`: identity/partition handshake — which database
+    /// generation this daemon serves, and which slice of it. The cluster
+    /// router uses it to verify a complete, same-generation partition
+    /// set before merging anything.
+    Hello { id: Option<String> },
 }
 
 /// `op = "search"`.
@@ -91,6 +99,7 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
         "ping" => Ok(Request::Ping { id }),
         "stats" => Ok(Request::Stats { id }),
         "metrics" => Ok(Request::Metrics { id }),
+        "hello" => Ok(Request::Hello { id }),
         "trace" => {
             let n = match j.get("n") {
                 None => None,
@@ -150,7 +159,7 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
             }))
         }
         other => Err(ProtoError::bad(format!(
-            "unknown op {other:?} (search|ping|stats|metrics|trace)"
+            "unknown op {other:?} (search|ping|stats|metrics|trace|hello)"
         ))),
     }
 }
@@ -161,6 +170,12 @@ pub struct HitPayload {
     pub subject: String,
     pub len: usize,
     pub score: i32,
+    /// **Global** sequence index in the full (length-sorted) database.
+    /// Partition daemons rebase their slice-local indices through the
+    /// `.pmeta` map before the hit crosses the wire, so the router's
+    /// merge tie-break (score desc, `seq` asc) reproduces the
+    /// single-process ranking byte for byte.
+    pub seq: usize,
 }
 
 fn obj(pairs: Vec<(&str, Json)>) -> Json {
@@ -194,9 +209,33 @@ pub fn search_response(
     hits: &[HitPayload],
     trace: u64,
 ) -> String {
+    search_response_partial(id, query_id, cached, hits, trace, &[])
+}
+
+/// Search response that may be degraded: when `missing_partitions` is
+/// non-empty the response carries `"partial": true` plus the list of
+/// partitions whose backends stayed dark past their deadline. With an
+/// empty list the output is byte-identical to [`search_response`] —
+/// healthy routed responses and single-daemon responses are
+/// indistinguishable on the wire.
+pub fn search_response_partial(
+    id: Option<&str>,
+    query_id: &str,
+    cached: bool,
+    hits: &[HitPayload],
+    trace: u64,
+    missing_partitions: &[usize],
+) -> String {
     let mut pairs = base(id, true, trace);
     pairs.push(("query_id", Json::Str(query_id.to_string())));
     pairs.push(("cached", Json::Bool(cached)));
+    if !missing_partitions.is_empty() {
+        pairs.push(("partial", Json::Bool(true)));
+        pairs.push((
+            "missing_partitions",
+            Json::Arr(missing_partitions.iter().map(|&p| Json::Num(p as f64)).collect()),
+        ));
+    }
     pairs.push((
         "hits",
         Json::Arr(
@@ -208,11 +247,38 @@ pub fn search_response(
                         ("subject", Json::Str(h.subject.clone())),
                         ("len", Json::Num(h.len as f64)),
                         ("score", Json::Num(h.score as f64)),
+                        ("seq", Json::Num(h.seq as f64)),
                     ])
                 })
                 .collect(),
         ),
     ));
+    obj(pairs).to_string()
+}
+
+/// Hello (handshake) reply: which database generation this daemon
+/// serves, which slice of it, and the session `top_k` cap (the router's
+/// merge truncation bound). An unpartitioned daemon is partition 0 of 1
+/// with `n_seqs == n_total`.
+#[allow(clippy::too_many_arguments)]
+pub fn hello_response(
+    id: Option<&str>,
+    generation: &str,
+    partition: usize,
+    partitions: usize,
+    n_seqs: usize,
+    n_total: usize,
+    top_k: usize,
+    trace: u64,
+) -> String {
+    let mut pairs = base(id, true, trace);
+    pairs.push(("op", Json::Str("hello".to_string())));
+    pairs.push(("generation", Json::Str(generation.to_string())));
+    pairs.push(("partition", Json::Num(partition as f64)));
+    pairs.push(("partitions", Json::Num(partitions as f64)));
+    pairs.push(("n_seqs", Json::Num(n_seqs as f64)));
+    pairs.push(("n_total", Json::Num(n_total as f64)));
+    pairs.push(("top_k", Json::Num(top_k as f64)));
     obj(pairs).to_string()
 }
 
@@ -281,9 +347,19 @@ pub fn hits_of_response(resp: &Json) -> anyhow::Result<Vec<HitPayload>> {
                     .and_then(Json::as_f64)
                     .map(|f| f as i32)
                     .ok_or_else(|| anyhow::anyhow!("missing number field \"score\""))?,
+                seq: h.usize_field("seq")?,
             })
         })
         .collect()
+}
+
+/// The partitions a degraded (partial) response is missing; empty for a
+/// complete response (the `partial` field is absent then).
+pub fn missing_partitions_of_response(resp: &Json) -> Vec<usize> {
+    resp.get("missing_partitions")
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(Json::as_usize).collect())
+        .unwrap_or_default()
 }
 
 #[cfg(test)]
@@ -368,20 +444,60 @@ mod tests {
     #[test]
     fn responses_are_single_json_lines() {
         let hits = vec![
-            HitPayload { subject: "s1".into(), len: 40, score: 55 },
-            HitPayload { subject: "s\"2".into(), len: 7, score: -3 },
+            HitPayload { subject: "s1".into(), len: 40, score: 55, seq: 3 },
+            HitPayload { subject: "s\"2".into(), len: 7, score: -3, seq: 0 },
         ];
         for line in [
             search_response(Some("r1"), "q", true, &hits, 7),
+            search_response_partial(Some("r1"), "q", false, &hits, 7, &[1, 2]),
             error_response(None, E_OVERLOADED, "queue full"),
             pong_response(Some("p"), 0),
             stats_response(None, Json::Obj(Default::default()), 3),
             metrics_response(None, "# TYPE x counter\nx 1\n", 4),
             trace_response(None, Json::Arr(vec![]), 5),
+            hello_response(None, "00000000000000ff", 1, 3, 160, 480, 10, 6),
         ] {
             assert!(!line.contains('\n'), "{line}");
             Json::parse(&line).unwrap();
         }
+    }
+
+    #[test]
+    fn parses_hello_op() {
+        match parse_request(r#"{"v":1,"op":"hello","id":"h1"}"#).unwrap() {
+            Request::Hello { id } => assert_eq!(id.as_deref(), Some("h1")),
+            other => panic!("{other:?}"),
+        }
+        let resp =
+            Json::parse(&hello_response(Some("h1"), "0000000000000042", 2, 3, 160, 480, 10, 0))
+                .unwrap();
+        assert_eq!(resp.str_field("generation").unwrap(), "0000000000000042");
+        assert_eq!(resp.usize_field("partition").unwrap(), 2);
+        assert_eq!(resp.usize_field("partitions").unwrap(), 3);
+        assert_eq!(resp.usize_field("n_seqs").unwrap(), 160);
+        assert_eq!(resp.usize_field("n_total").unwrap(), 480);
+        assert_eq!(resp.usize_field("top_k").unwrap(), 10);
+        assert_eq!(resp.str_field("op").unwrap(), "hello");
+    }
+
+    #[test]
+    fn partial_fields_appear_only_when_degraded() {
+        let hits = vec![HitPayload { subject: "a".into(), len: 10, score: 12, seq: 5 }];
+        let complete = search_response_partial(None, "q", false, &hits, 0, &[]);
+        assert_eq!(
+            complete,
+            search_response(None, "q", false, &hits, 0),
+            "empty missing set must be byte-identical to the plain response"
+        );
+        let parsed = Json::parse(&complete).unwrap();
+        assert_eq!(parsed.get("partial"), None);
+        assert!(missing_partitions_of_response(&parsed).is_empty());
+
+        let degraded =
+            Json::parse(&search_response_partial(None, "q", false, &hits, 0, &[2])).unwrap();
+        assert_eq!(degraded.get("partial"), Some(&Json::Bool(true)));
+        assert_eq!(missing_partitions_of_response(&degraded), vec![2]);
+        assert_eq!(degraded.get("ok"), Some(&Json::Bool(true)), "degraded is still ok");
     }
 
     #[test]
@@ -418,8 +534,8 @@ mod tests {
     #[test]
     fn hits_round_trip_through_response() {
         let hits = vec![
-            HitPayload { subject: "a".into(), len: 10, score: 12 },
-            HitPayload { subject: "b".into(), len: 20, score: -4 },
+            HitPayload { subject: "a".into(), len: 10, score: 12, seq: 31 },
+            HitPayload { subject: "b".into(), len: 20, score: -4, seq: 7 },
         ];
         let resp = Json::parse(&search_response(None, "q", false, &hits, 0)).unwrap();
         assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));

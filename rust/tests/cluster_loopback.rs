@@ -1,0 +1,441 @@
+//! Loopback integration tests for cluster mode: partitioned `serve`
+//! backends behind the scatter–gather router, over real sockets,
+//! in-process.
+//!
+//! The load-bearing assertions, matching the PR's acceptance property:
+//! over any partition count × backend rate vector, routed results are
+//! bit-identical to the single-process exact search while the fleet is
+//! healthy; with one backend killed they equal the exact search
+//! restricted to the surviving partitions, flagged `partial`; and a
+//! backend serving a stale database generation is refused with a
+//! structured `generation_mismatch` error, never silently merged.
+
+use std::sync::Arc;
+
+use swaphi::align::{EngineKind, Precision};
+use swaphi::cluster::{Router, RouterConfig, RouterHandle};
+use swaphi::coordinator::{NativeFactory, SearchConfig, SearchSession};
+use swaphi::db::chunk::ChunkPlanConfig;
+use swaphi::db::index::Index;
+use swaphi::db::partition::{partition_sequences, PartitionMeta};
+use swaphi::db::synth::{generate, generate_query, SynthSpec};
+use swaphi::db::Database;
+use swaphi::matrices::Scoring;
+use swaphi::server::client::{self, Client};
+use swaphi::server::{index_generation, protocol, Server, ServerConfig, ServerHandle};
+use swaphi::util::json::Json;
+
+const TOP_K: usize = 5;
+
+fn search_cfg() -> SearchConfig {
+    SearchConfig {
+        devices: 1,
+        steal: true,
+        rates: Vec::new(),
+        chunk: ChunkPlanConfig { target_padded_residues: 2048 },
+        top_k: TOP_K,
+        precision: Precision::default(),
+        sim: None,
+        ..Default::default()
+    }
+}
+
+fn split(index: &Index, rates: &[f64]) -> Vec<Vec<usize>> {
+    // fine-grained chunks so even tiny test databases fill every slice
+    partition_sequences(index, ChunkPlanConfig { target_padded_residues: 1024 }, rates)
+}
+
+/// Start one backend daemon serving a slice of `full` under the fleet
+/// identity (`generation`, partition `partition` of `partitions`).
+fn start_backend(
+    full: &Arc<Index>,
+    scoring: &Scoring,
+    generation: u64,
+    partitions: usize,
+    partition: usize,
+    ids: &[usize],
+    listen: &str,
+) -> ServerHandle {
+    let seqs: Vec<_> = ids.iter().map(|&g| full.seqs[g].clone()).collect();
+    Server {
+        index: Arc::new(Index::build(Database::new(seqs))),
+        scoring: scoring.clone(),
+        search: search_cfg(),
+        server: ServerConfig {
+            listen: listen.to_string(),
+            batch_window_ms: 0,
+            ..Default::default()
+        },
+        factory: Arc::new(NativeFactory(EngineKind::InterSP)),
+        partition: Some(PartitionMeta {
+            generation,
+            partitions,
+            partition,
+            n_total: full.n_seqs(),
+            global: ids.to_vec(),
+        }),
+    }
+    .start()
+    .unwrap()
+}
+
+/// Split `index` by `rates` and start the whole backend fleet.
+fn start_fleet(
+    index: &Arc<Index>,
+    scoring: &Scoring,
+    rates: &[f64],
+) -> (Vec<ServerHandle>, Vec<Vec<usize>>) {
+    let generation = index_generation(index);
+    let parts = split(index, rates);
+    let handles = parts
+        .iter()
+        .enumerate()
+        .map(|(p, ids)| {
+            start_backend(index, scoring, generation, rates.len(), p, ids, "127.0.0.1:0")
+        })
+        .collect();
+    (handles, parts)
+}
+
+fn router_over(backends: Vec<String>) -> RouterHandle {
+    Router::start(RouterConfig {
+        listen: "127.0.0.1:0".to_string(),
+        backends,
+        backend_timeout_ms: 5_000,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+fn query_letters(len: usize, seed: u64) -> String {
+    String::from_utf8(swaphi::alphabet::decode(&generate_query(len, seed))).unwrap()
+}
+
+/// The single-process oracle, optionally restricted to a sequence
+/// subset (ascending global ids — what the surviving partitions hold).
+fn oracle_hits(
+    full: &Arc<Index>,
+    scoring: &Scoring,
+    ids: Option<&[usize]>,
+    qid: &str,
+    letters: &str,
+) -> Vec<(String, usize, i32)> {
+    let index = match ids {
+        None => Arc::clone(full),
+        Some(ids) => Arc::new(Index::build(Database::new(
+            ids.iter().map(|&g| full.seqs[g].clone()).collect(),
+        ))),
+    };
+    let codes = swaphi::alphabet::encode(letters.as_bytes());
+    let session = SearchSession::new(&index, scoring.clone(), search_cfg());
+    let res = session
+        .search_batch(&NativeFactory(EngineKind::InterSP), &[(qid.to_string(), codes)])
+        .unwrap();
+    res[0].hits.iter().map(|h| (h.id.clone(), h.len, h.score)).collect()
+}
+
+fn tuples(hits: &[protocol::HitPayload]) -> Vec<(String, usize, i32)> {
+    hits.iter().map(|h| (h.subject.clone(), h.len, h.score)).collect()
+}
+
+#[test]
+fn routed_search_is_bit_identical_to_single_process_for_any_fleet() {
+    let index = Arc::new(Index::build(generate(&SynthSpec::tiny(260, 17))));
+    let scoring = Scoring::swaphi_default();
+    // one whole-database daemon: the byte-level reference for hits
+    let single = start_backend(
+        &index,
+        &scoring,
+        index_generation(&index),
+        1,
+        0,
+        &(0..index.n_seqs()).collect::<Vec<_>>(),
+        "127.0.0.1:0",
+    );
+    let mut single_client = Client::connect(&single.connect_addr()).unwrap();
+
+    for rates in
+        [vec![1.0], vec![1.0, 1.0], vec![1.0, 1.0, 0.25], vec![0.5, 1.0, 1.0, 0.25]]
+    {
+        let (handles, _) = start_fleet(&index, &scoring, &rates);
+        let router =
+            router_over(handles.iter().map(|h| h.connect_addr()).collect());
+        assert_eq!(
+            router.generation(),
+            format!("{:016x}", index_generation(&index)),
+            "fleet identity is the whole database's fingerprint"
+        );
+        let mut c = Client::connect(&router.connect_addr()).unwrap();
+        for seed in [7u64, 23, 41] {
+            let qid = format!("q{seed}");
+            let q = query_letters(40 + seed as usize, seed);
+            let resp = c.search(&qid, &q, None, None).unwrap();
+            assert!(client::is_ok(&resp), "{resp}");
+            assert_eq!(resp.get("partial"), None, "healthy fleet answers complete: {resp}");
+            let hits = client::hits_of(&resp).unwrap();
+            // the wire carries *global* ids, rebased through .pmeta maps
+            for h in &hits {
+                assert_eq!(index.seqs[h.seq].id, h.subject, "{resp}");
+            }
+            assert_eq!(
+                tuples(&hits),
+                oracle_hits(&index, &scoring, None, &qid, &q),
+                "rates {rates:?} seed {seed}"
+            );
+            // byte-level: the routed hits array equals the one-daemon
+            // hits array (the JSON encoder is deterministic)
+            let direct = single_client.search(&qid, &q, None, None).unwrap();
+            assert_eq!(
+                resp.get("hits").map(|h| h.to_string()),
+                direct.get("hits").map(|h| h.to_string()),
+                "rates {rates:?} seed {seed}"
+            );
+        }
+        router.shutdown().unwrap();
+        for h in handles {
+            h.shutdown().unwrap();
+        }
+    }
+    single.shutdown().unwrap();
+}
+
+#[test]
+fn killed_backend_degrades_to_partial_answers_over_surviving_partitions() {
+    let index = Arc::new(Index::build(generate(&SynthSpec::tiny(220, 5))));
+    let scoring = Scoring::swaphi_default();
+    let (mut handles, parts) = start_fleet(&index, &scoring, &[1.0, 1.0, 1.0]);
+    let router = Router::start(RouterConfig {
+        listen: "127.0.0.1:0".to_string(),
+        backends: handles.iter().map(|h| h.connect_addr()).collect(),
+        backend_timeout_ms: 1_500,
+        retries: 1,
+        ..Default::default()
+    })
+    .unwrap();
+    let mut c = Client::connect(&router.connect_addr()).unwrap();
+
+    let q = query_letters(46, 9);
+    let resp = c.search("q1", &q, None, None).unwrap();
+    assert!(client::is_ok(&resp), "{resp}");
+    assert!(resp.get("partial").is_none(), "{resp}");
+
+    // kill partition 1: connects are refused, so degradation is quick
+    handles.remove(1).shutdown().unwrap();
+    let q2 = query_letters(52, 33);
+    let resp = c.search("q2", &q2, None, None).unwrap();
+    assert!(client::is_ok(&resp), "a dark partition degrades, not errors: {resp}");
+    assert_eq!(resp.get("partial"), Some(&Json::Bool(true)), "{resp}");
+    assert_eq!(protocol::missing_partitions_of_response(&resp), vec![1], "{resp}");
+    let mut survivors: Vec<usize> =
+        parts[0].iter().chain(parts[2].iter()).copied().collect();
+    survivors.sort_unstable();
+    assert_eq!(
+        tuples(&client::hits_of(&resp).unwrap()),
+        oracle_hits(&index, &scoring, Some(&survivors), "q2", &q2),
+        "partial answer == exact search over surviving partitions"
+    );
+    assert_eq!(router.backends_healthy(), vec![true, false, true]);
+
+    router.shutdown().unwrap();
+    for h in handles {
+        h.shutdown().unwrap();
+    }
+}
+
+#[test]
+fn restarted_backend_recovers_full_answers_after_rehandshake() {
+    let index = Arc::new(Index::build(generate(&SynthSpec::tiny(200, 29))));
+    let scoring = Scoring::swaphi_default();
+    let generation = index_generation(&index);
+    let parts = split(&index, &[1.0, 1.0]);
+    let b0 = start_backend(&index, &scoring, generation, 2, 0, &parts[0], "127.0.0.1:0");
+    let b1 = start_backend(&index, &scoring, generation, 2, 1, &parts[1], "127.0.0.1:0");
+    let b1_addr = b1.connect_addr();
+    let router = Router::start(RouterConfig {
+        listen: "127.0.0.1:0".to_string(),
+        backends: vec![b0.connect_addr(), b1_addr.clone()],
+        backend_timeout_ms: 1_500,
+        ..Default::default()
+    })
+    .unwrap();
+    let mut c = Client::connect(&router.connect_addr()).unwrap();
+    let q = query_letters(44, 3);
+    let full = oracle_hits(&index, &scoring, None, "q", &q);
+
+    b1.shutdown().unwrap();
+    let resp = c.search("dark", &q, None, None).unwrap();
+    assert_eq!(resp.get("partial"), Some(&Json::Bool(true)), "{resp}");
+    assert_eq!(router.backends_healthy(), vec![true, false]);
+
+    // same port, same slice: the next attempt re-runs `hello` and
+    // re-admits the newcomer
+    let b1 = start_backend(&index, &scoring, generation, 2, 1, &parts[1], &b1_addr);
+    let resp = c.search("back", &q, None, None).unwrap();
+    assert!(client::is_ok(&resp), "{resp}");
+    assert!(resp.get("partial").is_none(), "recovered fleet answers complete: {resp}");
+    assert_eq!(tuples(&client::hits_of(&resp).unwrap()), full);
+    assert_eq!(router.backends_healthy(), vec![true, true]);
+
+    router.shutdown().unwrap();
+    b0.shutdown().unwrap();
+    b1.shutdown().unwrap();
+}
+
+#[test]
+fn handshake_refuses_mixed_generations_with_structured_error() {
+    // two *different* databases, partitioned identically: slice 0 of A
+    // plus slice 1 of B must never form a fleet
+    let a = Arc::new(Index::build(generate(&SynthSpec::tiny(150, 1))));
+    let b = Arc::new(Index::build(generate(&SynthSpec::tiny(150, 2))));
+    let scoring = Scoring::swaphi_default();
+    let pa = split(&a, &[1.0, 1.0]);
+    let pb = split(&b, &[1.0, 1.0]);
+    let b0 = start_backend(&a, &scoring, index_generation(&a), 2, 0, &pa[0], "127.0.0.1:0");
+    let b1 = start_backend(&b, &scoring, index_generation(&b), 2, 1, &pb[1], "127.0.0.1:0");
+    let err = Router::start(RouterConfig {
+        listen: "127.0.0.1:0".to_string(),
+        backends: vec![b0.connect_addr(), b1.connect_addr()],
+        ..Default::default()
+    })
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("generation_mismatch"), "{err}");
+    assert!(err.contains("swaphi index --partitions"), "remediation hint: {err}");
+    b0.shutdown().unwrap();
+    b1.shutdown().unwrap();
+}
+
+#[test]
+fn stale_generation_restart_is_never_merged() {
+    // the mid-stream variant: a healthy fleet, then partition 1's
+    // process is replaced by one serving a slice of a *different* build.
+    // The re-admission handshake must refuse it — the answer degrades to
+    // partial instead of silently merging stale results.
+    let a = Arc::new(Index::build(generate(&SynthSpec::tiny(180, 11))));
+    let b = Arc::new(Index::build(generate(&SynthSpec::tiny(180, 12))));
+    let scoring = Scoring::swaphi_default();
+    let pa = split(&a, &[1.0, 1.0]);
+    let pb = split(&b, &[1.0, 1.0]);
+    let b0 = start_backend(&a, &scoring, index_generation(&a), 2, 0, &pa[0], "127.0.0.1:0");
+    let b1 = start_backend(&a, &scoring, index_generation(&a), 2, 1, &pa[1], "127.0.0.1:0");
+    let b1_addr = b1.connect_addr();
+    let router = Router::start(RouterConfig {
+        listen: "127.0.0.1:0".to_string(),
+        backends: vec![b0.connect_addr(), b1_addr.clone()],
+        backend_timeout_ms: 1_500,
+        retries: 0,
+        ..Default::default()
+    })
+    .unwrap();
+    let mut c = Client::connect(&router.connect_addr()).unwrap();
+
+    b1.shutdown().unwrap();
+    let q = query_letters(48, 21);
+    let resp = c.search("dark", &q, None, None).unwrap();
+    assert_eq!(resp.get("partial"), Some(&Json::Bool(true)), "{resp}");
+
+    // an impostor appears on the same address, serving build B
+    let imp = start_backend(&b, &scoring, index_generation(&b), 2, 1, &pb[1], &b1_addr);
+    let resp = c.search("stale", &q, None, None).unwrap();
+    assert!(client::is_ok(&resp), "{resp}");
+    assert_eq!(resp.get("partial"), Some(&Json::Bool(true)), "stale slice refused: {resp}");
+    assert_eq!(protocol::missing_partitions_of_response(&resp), vec![1], "{resp}");
+    assert_eq!(
+        tuples(&client::hits_of(&resp).unwrap()),
+        oracle_hits(&a, &scoring, Some(&pa[0]), "stale", &q),
+        "only build-A partitions may contribute"
+    );
+    let stats = c.stats().unwrap();
+    let mismatches = stats
+        .get("stats")
+        .and_then(|s| s.get("generation_mismatch"))
+        .and_then(Json::as_f64)
+        .unwrap();
+    assert!(mismatches >= 1.0, "the refusal is counted: {stats}");
+
+    router.shutdown().unwrap();
+    b0.shutdown().unwrap();
+    imp.shutdown().unwrap();
+}
+
+#[test]
+fn router_serves_fleet_identity_and_observability_ops() {
+    let index = Arc::new(Index::build(generate(&SynthSpec::tiny(140, 7))));
+    let scoring = Scoring::swaphi_default();
+    let (handles, _) = start_fleet(&index, &scoring, &[1.0, 1.0]);
+    let router = router_over(handles.iter().map(|h| h.connect_addr()).collect());
+    let mut c = Client::connect(&router.connect_addr()).unwrap();
+
+    let pong = c.ping().unwrap();
+    assert!(client::is_ok(&pong), "{pong}");
+
+    // the router is one logical daemon: partition 0 of 1, full count
+    let hello = c.hello().unwrap();
+    assert_eq!(hello.str_field("generation").unwrap(), router.generation());
+    assert_eq!(hello.usize_field("partition").unwrap(), 0);
+    assert_eq!(hello.usize_field("partitions").unwrap(), 1);
+    assert_eq!(hello.usize_field("n_total").unwrap(), index.n_seqs());
+    assert_eq!(hello.usize_field("top_k").unwrap(), TOP_K);
+
+    let q = query_letters(42, 13);
+    let resp = c.search("q1", &q, None, None).unwrap();
+    assert!(client::is_ok(&resp), "{resp}");
+
+    let stats = c.stats().unwrap();
+    let s = stats.get("stats").unwrap();
+    assert_eq!(s.get("role").and_then(Json::as_str), Some("router"));
+    assert_eq!(s.get("requests").and_then(Json::as_f64), Some(1.0));
+    let backends = s.get("backends").and_then(Json::as_arr).unwrap();
+    assert_eq!(backends.len(), 2, "{stats}");
+    for b in backends {
+        assert_eq!(b.get("healthy"), Some(&Json::Bool(true)), "{stats}");
+        assert!(b.get("requests").and_then(Json::as_f64).unwrap() >= 1.0, "{stats}");
+    }
+
+    let text = c.metrics().unwrap();
+    for family in [
+        "swaphi_router_requests_total",
+        "swaphi_backend_requests_total",
+        "swaphi_backend_healthy",
+        "swaphi_router_request_latency_microseconds",
+    ] {
+        assert!(text.contains(family), "missing {family} in:\n{text}");
+    }
+    assert!(text.contains("backend=\"0\""), "{text}");
+    assert!(text.contains("backend=\"1\""), "{text}");
+
+    // per-request spans: one route span plus per-backend child spans
+    let tr = c.trace(None).unwrap();
+    let spans = tr.get("spans").and_then(Json::as_arr).unwrap();
+    let names: Vec<&str> =
+        spans.iter().filter_map(|s| s.get("name").and_then(Json::as_str)).collect();
+    assert!(names.contains(&"route"), "{names:?}");
+    assert!(names.contains(&"backend"), "{names:?}");
+
+    router.shutdown().unwrap();
+    for h in handles {
+        h.shutdown().unwrap();
+    }
+}
+
+#[test]
+fn explicit_top_k_is_clamped_to_the_fleet_minimum() {
+    let index = Arc::new(Index::build(generate(&SynthSpec::tiny(160, 19))));
+    let scoring = Scoring::swaphi_default();
+    let (handles, _) = start_fleet(&index, &scoring, &[1.0, 1.0]);
+    let router = router_over(handles.iter().map(|h| h.connect_addr()).collect());
+    let mut c = Client::connect(&router.connect_addr()).unwrap();
+    let q = query_letters(40, 2);
+    // ask for more than the backends' session cap: the merge must clamp
+    // (returning session_top_k hits), never under-fill
+    let resp = c.search("big", &q, Some(50), None).unwrap();
+    assert!(client::is_ok(&resp), "{resp}");
+    assert_eq!(client::hits_of(&resp).unwrap().len(), TOP_K, "{resp}");
+    // and a smaller ask is honored exactly
+    let resp = c.search("small", &q, Some(2), None).unwrap();
+    assert_eq!(client::hits_of(&resp).unwrap().len(), 2, "{resp}");
+    router.shutdown().unwrap();
+    for h in handles {
+        h.shutdown().unwrap();
+    }
+}

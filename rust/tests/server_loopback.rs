@@ -53,6 +53,7 @@ fn start_server(
         search: search_cfg(),
         server: server_cfg,
         factory: Arc::new(NativeFactory(EngineKind::InterSP)),
+        partition: None,
     }
     .start()
     .unwrap();
@@ -116,6 +117,7 @@ fn heterogeneous_fleet_server_matches_offline_and_reports_rates() {
         },
         server: tcp_cfg(0),
         factory: Arc::new(NativeFactory(EngineKind::InterSP)),
+        partition: None,
     }
     .start()
     .unwrap();
@@ -168,6 +170,7 @@ fn tuned_server_calibrates_reports_gauges_and_stays_bit_identical() {
         },
         server: tcp_cfg(0),
         factory: Arc::new(NativeFactory(EngineKind::InterSP)),
+        partition: None,
     }
     .start()
     .unwrap();
