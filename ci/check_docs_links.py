@@ -1,0 +1,119 @@
+#!/usr/bin/env python3
+"""Intra-repo link checker for the documentation set.
+
+Scans README.md and every markdown file under docs/ for references that
+point inside the repository and fails (exit 1) when a target does not
+exist. Two reference shapes are checked:
+
+  * markdown links: `[text](docs/protocol.md)`, `[text](../README.md)`,
+    `[text](alignment.md#e-values)` — resolved relative to the file the
+    link appears in; a `#fragment` suffix is stripped before the
+    existence check (heading anchors are not validated). External links
+    (http/https/mailto) are skipped.
+
+  * backtick path references: `` `docs/alignment.md` ``, `` `ci/serve_smoke.py` ``,
+    `` `rust/src/align/traceback.rs` `` — any backtick span that looks
+    like a repo-relative path to a file with a known source/doc
+    extension and contains a `/`. Resolved from the repo root. This is
+    what keeps prose like "see `docs/protocol.md`" honest when files
+    move. Spans with spaces, globs, `<placeholders>` or shell flags are
+    ignored, as are runtime artifacts (target/, BENCH_*.json, *.idx).
+
+Usage:
+    python3 ci/check_docs_links.py            # check README.md + docs/
+    python3 ci/check_docs_links.py --root DIR # check another checkout
+"""
+
+import argparse
+import os
+import re
+import sys
+
+# backtick spans are only treated as path claims when they end in an
+# extension we ship sources/docs for — `cargo test -q` or `top_k` must
+# not be mistaken for files
+PATH_EXTS = (".md", ".rs", ".py", ".toml", ".yml", ".yaml", ".json", ".sh")
+
+# generated at run time, legitimately referenced by name in the docs
+RUNTIME_ARTIFACTS = re.compile(
+    r"(^|/)(target/|BENCH_[A-Za-z_]+\.json$|trace\.json$|bench_results/)"
+)
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+BACKTICK = re.compile(r"`([^`\n]+)`")
+
+
+def md_files(root):
+    files = [os.path.join(root, "README.md")]
+    docs = os.path.join(root, "docs")
+    if os.path.isdir(docs):
+        for name in sorted(os.listdir(docs)):
+            if name.endswith(".md"):
+                files.append(os.path.join(docs, name))
+    return [f for f in files if os.path.isfile(f)]
+
+
+def looks_like_repo_path(span):
+    if "/" not in span or " " in span or "\n" in span:
+        return False
+    if span.startswith(("-", "--", "http://", "https://")):
+        return False
+    if any(c in span for c in "*<>{}$|\"'"):
+        return False
+    base = span.split("#", 1)[0]
+    return base.endswith(PATH_EXTS)
+
+
+def check_file(path, root):
+    """Returns a list of (line_no, reference, resolved) broken links."""
+    broken = []
+    text = open(path, encoding="utf-8").read()
+    for line_no, line in enumerate(text.splitlines(), 1):
+        refs = []
+        for m in MD_LINK.finditer(line):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            # markdown links resolve relative to the containing file
+            refs.append((target, os.path.dirname(path)))
+        for m in BACKTICK.finditer(line):
+            span = m.group(1)
+            if looks_like_repo_path(span) and not RUNTIME_ARTIFACTS.search(span):
+                # backtick path claims resolve from the repo root
+                refs.append((span, root))
+        for ref, base in refs:
+            rel = ref.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = os.path.normpath(os.path.join(base, rel))
+            if not os.path.exists(resolved):
+                broken.append((line_no, ref, os.path.relpath(resolved, root)))
+    return broken
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--root", default=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    help="repo root (default: the parent of this script's directory)")
+    args = ap.parse_args()
+
+    total_refs = 0
+    failures = []
+    for path in md_files(args.root):
+        rel = os.path.relpath(path, args.root)
+        broken = check_file(path, args.root)
+        total_refs += 1
+        for line_no, ref, resolved in broken:
+            failures.append(f"{rel}:{line_no}: broken reference `{ref}` -> {resolved}")
+
+    if failures:
+        for f in failures:
+            print(f"::error::{f}")
+        print(f"\ndocs link check: {len(failures)} broken reference(s)")
+        return 1
+    print(f"docs link check: {len(md_files(args.root))} files clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -31,6 +31,7 @@ nonzero, so a flake in CI is debuggable from the job output alone.
 
 import argparse
 import json
+import math
 import os
 import re
 import signal
@@ -73,13 +74,15 @@ class Proto:
     def request(self, **fields):
         return json.loads(self.request_raw(**fields))
 
-    def search(self, query_id, query, top_k=None, mode=None):
-        fields = {"op": "search", "query_id": query_id, "query": query}
+    def search(self, query_id, query, top_k=None, mode=None, fields=None):
+        req = {"op": "search", "query_id": query_id, "query": query}
         if top_k is not None:
-            fields["top_k"] = top_k
+            req["top_k"] = top_k
         if mode is not None:
-            fields["mode"] = mode
-        return self.request(**fields)
+            req["mode"] = mode
+        if fields is not None:
+            req["fields"] = fields
+        return self.request(**req)
 
     def search_raw(self, query_id, query):
         return self.request_raw(op="search", query_id=query_id, query=query)
@@ -263,6 +266,48 @@ def validate_prometheus(drv, text, families, require_cache_hit=False):
           f"{sum(len(v) for v in samples.values())} samples")
 
 
+def validate_full_report(drv, resp):
+    """The docs/alignment.md output contract, re-checked in Python: every
+    hit of a full report carries an align object whose CIGAR consumes
+    exactly the reported spans (M both sides, I query-only, D
+    subject-only), identity/coverage sit in [0,1], and the
+    Karlin-Altschul stats are finite."""
+    drv.check(resp.get("ok"), f"full report failed: {resp}")
+    drv.check(bool(resp.get("hits")), f"full report returned no hits: {resp}")
+    for h in resp["hits"]:
+        a = h.get("align")
+        drv.check(a is not None, f"full-report hit missing align object: {h}")
+        for k in ("q_start", "q_end", "s_start", "s_end",
+                  "q_cov", "s_cov", "bitscore", "evalue"):
+            drv.check(k in a, f"align missing {k}: {h}")
+        drv.check(0 <= a["q_start"] <= a["q_end"], f"bad query span: {h}")
+        drv.check(0 <= a["s_start"] <= a["s_end"] <= h["len"], f"bad subject span: {h}")
+        for cov in ("q_cov", "s_cov"):
+            drv.check(0.0 <= a[cov] <= 1.0, f"{cov} out of [0,1]: {h}")
+        drv.check(math.isfinite(a["evalue"]) and a["evalue"] >= 0.0, f"bad evalue: {h}")
+        drv.check(math.isfinite(a["bitscore"]), f"bad bitscore: {h}")
+        if a.get("capped"):
+            drv.check("cigar" not in a and "identity" not in a,
+                      f"capped pair must degrade to coordinates-only: {h}")
+            continue
+        drv.check("identity" in a and 0.0 <= a["identity"] <= 1.0,
+                  f"identity out of [0,1]: {h}")
+        cigar = a.get("cigar")
+        drv.check(cigar is not None, f"uncapped full-report hit missing CIGAR: {h}")
+        runs = re.findall(r"(\d+)([MID])", cigar)
+        drv.check("".join(n + op for n, op in runs) == cigar,
+                  f"malformed CIGAR {cigar!r}: {h}")
+        q_used = sum(int(n) for n, op in runs if op in "MI")
+        s_used = sum(int(n) for n, op in runs if op in "MD")
+        drv.check(q_used == a["q_end"] - a["q_start"],
+                  f"CIGAR consumes {q_used} query residues, span says "
+                  f"{a['q_end'] - a['q_start']}: {h}")
+        drv.check(s_used == a["s_end"] - a["s_start"],
+                  f"CIGAR consumes {s_used} subject residues, span says "
+                  f"{a['s_end'] - a['s_start']}: {h}")
+    print(f"full report ok: {len(resp['hits'])} hits with validated align objects")
+
+
 def hit_tuples(resp):
     return [(h["seq"], h["subject"], h["len"], h["score"]) for h in resp["hits"]]
 
@@ -314,6 +359,33 @@ def scenario_serve(drv, base_port):
     drv.check("[cached]" in query(s1.addr), "repeat query must hit the response cache")
     stats = json.loads(drv.cli("query", "--connect", s1.addr, "--stats"))
     drv.check("devices" in stats, f"stats missing devices: {stats}")
+
+    # alignment reporting tier (docs/alignment.md): a full report via
+    # the raw protocol, its hit schema validated in Python; plus the
+    # levels-never-alias cache property and the `report` op alias
+    prep = Proto(s1.addr)
+    full = prep.search("rep1", QUERY_SEQS[1], fields="full")
+    drv.check(full.get("cached") is False, f"first full report must miss the cache: {full}")
+    validate_full_report(drv, full)
+    score = prep.search("rep1", QUERY_SEQS[1], fields="score")
+    drv.check(score.get("cached") is False,
+              f"score request must not be served from the full-level cache entry: {score}")
+    drv.check(all("align" not in h for h in score["hits"]),
+              f"score-level hits must not carry align objects: {score}")
+    drv.check(hit_tuples(score) == hit_tuples(full),
+              f"report level changed the ranking:\n{score}\n{full}")
+    rep = prep.request(op="report", query_id="rep1", query=QUERY_SEQS[1])
+    drv.check(rep.get("cached") is True,
+              f"op=report (fields=full) must hit the full-level entry: {rep}")
+    drv.check(rep["hits"] == full["hits"],
+              f"cached report op differs from the full report:\n{rep}\n{full}")
+    tb = prep.stats().get("traceback")
+    drv.check(tb is not None and tb["pairs"] >= len(full["hits"]),
+              f"stats must account traceback pairs: {tb}")
+    prep.close()
+    rep_out = query(s1.addr, "--report", "full")
+    drv.check("cigar" in rep_out and "bits" in rep_out,
+              f"--report full CLI output missing alignment detail:\n{rep_out}")
 
     # 2 sharded devices: scatter-gather must not change a byte
     s2 = drv.serve("serve-2dev", base_port + 1, idx, "--devices", "2")
@@ -370,7 +442,8 @@ def scenario_serve(drv, base_port):
         ("swaphi_requests_admitted_total", "swaphi_cache_hits_total",
          "swaphi_batches_total", "swaphi_queue_depth", "swaphi_batch_size",
          "swaphi_request_latency_microseconds",
-         "swaphi_device_compute_microseconds_total"),
+         "swaphi_device_compute_microseconds_total",
+         "swaphi_traceback_total", "swaphi_traceback_cells_total"),
         require_cache_hit=True,
     )
     p1.close()

@@ -300,6 +300,66 @@ class TestClusterGateKeys(GateHarness):
         self.assertEqual(spec["workload"]["qlen"], 256)
 
 
+class TestReportGateKeys(GateHarness):
+    """The shipped report gate (ci/bench-baseline.json) enforced over a
+    BENCH_report.json-shaped artifact: efficiency >= 1/1.10 (a full
+    alignment report costs at most 10% vs score-only at top_k=10).
+    """
+
+    REPORT_METRICS = {
+        "report.efficiency": {"baseline": None, "min": 0.9091},
+    }
+    REPORT_WORKLOAD = {"preset": "tiny", "n_seqs": 12000, "qlen": 160}
+
+    def report_artifact(self, efficiency, **workload):
+        art = {
+            **self.REPORT_WORKLOAD,
+            "report": {"efficiency": efficiency, "overhead_pct": (1 / efficiency - 1) * 100},
+        }
+        art.update(workload)
+        return art
+
+    def run_report(self, efficiency, **workload):
+        baseline = make_baseline(self.REPORT_METRICS, workload=dict(self.REPORT_WORKLOAD))
+        return self.run_gate(baseline, self.report_artifact(efficiency, **workload))
+
+    def test_report_overhead_beyond_10_percent_fails(self):
+        p = self.run_report(0.90)
+        self.assertEqual(p.returncode, 1, p.stdout + p.stderr)
+        self.assertIn("report.efficiency", p.stdout)
+        self.assertIn("FAIL(floor)", p.stdout)
+
+    def test_report_overhead_within_10_percent_passes(self):
+        p = self.run_report(0.95)
+        self.assertEqual(p.returncode, 0, p.stdout + p.stderr)
+        self.assertIn("green", p.stdout)
+
+    def test_floor_holds_even_with_null_baseline(self):
+        # the gate bites before the baseline is ever seeded
+        p = self.run_report(0.5)
+        self.assertEqual(p.returncode, 1, p.stdout + p.stderr)
+        self.assertIn("FAIL(floor)", p.stdout)
+
+    def test_reshaped_workload_is_refused_not_compared(self):
+        # another bench's SWAPHI_BENCH_* shrinking this workload must
+        # surface as the exit-2 pin mismatch, never a silent comparison
+        p = self.run_report(1.0, n_seqs=600)
+        self.assertEqual(p.returncode, 2, p.stdout + p.stderr)
+        self.assertIn("workload mismatch", p.stdout)
+
+    def test_shipped_baseline_gates_the_report(self):
+        # drift selftest: the committed baseline must carry the report
+        # gate with the acceptance floor and the bench's own workload pins
+        shipped = json.loads(
+            (Path(__file__).resolve().parent / "bench-baseline.json").read_text()
+        )
+        spec = shipped["benches"]["BENCH_report.json"]
+        self.assertEqual(spec["metrics"]["report.efficiency"]["min"], 0.9091)
+        self.assertEqual(spec["workload"]["preset"], "tiny")
+        self.assertEqual(spec["workload"]["n_seqs"], 12000)
+        self.assertEqual(spec["workload"]["qlen"], 160)
+
+
 class TestToleranceOverride(GateHarness):
     def test_cli_tolerance_overrides_file(self):
         baseline = make_baseline({"m.gcups": {"baseline": 100.0, "min": None}})

@@ -1,0 +1,138 @@
+//! report_overhead — what the alignment reporting tier costs.
+//!
+//! The report stage re-aligns only the top-k hit pairs per query with
+//! the bounded-memory traceback (`align/traceback.rs`), so its cost
+//! must stay a small slice of the search itself: the database-wide
+//! scoring pass visits `qlen × total_residues` cells, the report stage
+//! only `Σ qlen × hit_len` over k hits. Two identical batched sessions
+//! answer the same cold query set:
+//!
+//!   * **score** — `--report score`, the pre-reporting pipeline.
+//!   * **full**  — `--report full`: coordinates, CIGAR, identity,
+//!     coverage, bitscore and e-value on every top-k hit.
+//!
+//! Emits `BENCH_report.json` (consumed by `ci/check_bench.py`):
+//! `report.efficiency` = score wall / full wall, gated ≥ 1/1.10 — the
+//! acceptance bound that a full report costs at most 10% at top_k=10.
+//!
+//! `SWAPHI_BENCH_REPORT_N` / `SWAPHI_BENCH_REPORT_QLEN` shrink the
+//! workload for CI (own knobs, so the other benches' `SWAPHI_BENCH_*`
+//! variables never reshape this bench's pinned workload).
+
+use std::time::Instant;
+
+use swaphi::align::{EngineKind, Precision};
+use swaphi::bench::{f2, Table};
+use swaphi::coordinator::{NativeFactory, ReportLevel, SearchConfig, SearchSession};
+use swaphi::db::chunk::ChunkPlanConfig;
+use swaphi::db::index::Index;
+use swaphi::db::synth::{generate, generate_query, SynthSpec};
+use swaphi::matrices::Scoring;
+
+const TOP_K: usize = 10;
+const N_QUERIES: usize = 16;
+
+fn main() {
+    let preset = "tiny";
+    let n_seqs: usize = std::env::var("SWAPHI_BENCH_REPORT_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(12_000);
+    let qlen: usize = std::env::var("SWAPHI_BENCH_REPORT_QLEN")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(160);
+    let spec = SynthSpec::by_name(preset, n_seqs, 2014).expect("tiny preset");
+    let preset = spec.name;
+    let index = Index::build(generate(&spec));
+    let scoring = Scoring::swaphi_default();
+    println!(
+        "workload: {preset} x {} sequences ({} residues), {N_QUERIES} queries around length {qlen}",
+        index.n_seqs(),
+        index.total_residues,
+    );
+
+    let queries: Vec<(String, Vec<u8>)> = (0..N_QUERIES)
+        .map(|i| (format!("q{i}"), generate_query(qlen + 8 * (i % 5), i as u64)))
+        .collect();
+    let factory = NativeFactory(EngineKind::InterSP);
+    let session = |report| {
+        SearchSession::new(
+            &index,
+            scoring.clone(),
+            SearchConfig {
+                top_k: TOP_K,
+                report,
+                precision: Precision::default(),
+                sim: None,
+                chunk: ChunkPlanConfig { target_padded_residues: 4096 },
+                ..Default::default()
+            },
+        )
+    };
+
+    let score_session = session(ReportLevel::Score);
+    let full_session = session(ReportLevel::Full);
+    // one warmup batch per session keeps first-use setup out of the wall
+    score_session.search_batch(&factory, &queries[..1]).expect("warmup");
+    full_session.search_batch(&factory, &queries[..1]).expect("warmup");
+
+    let t = Instant::now();
+    let score_results = score_session.search_batch(&factory, &queries).expect("score pass");
+    let score_wall = t.elapsed().as_secs_f64();
+
+    let t = Instant::now();
+    let full_results = full_session.search_batch(&factory, &queries).expect("full pass");
+    let full_wall = t.elapsed().as_secs_f64();
+
+    // the report level must never change the ranking, and every full-
+    // report hit must actually carry its alignment
+    let mut pairs = 0u64;
+    let mut cells = 0u64;
+    let mut capped = 0u64;
+    for (s, f) in score_results.iter().zip(&full_results) {
+        let sh: Vec<(usize, i32)> = s.hits.iter().map(|h| (h.seq_index, h.score)).collect();
+        let fh: Vec<(usize, i32)> = f.hits.iter().map(|h| (h.seq_index, h.score)).collect();
+        assert_eq!(sh, fh, "{}: report level changed the ranking", s.query_id);
+        assert!(s.alignments.is_none(), "score level attached alignments");
+        let aligns = f.alignments.as_ref().expect("full level missing alignments");
+        assert_eq!(aligns.len(), f.hits.len(), "{}", f.query_id);
+        let tb = f.traceback.as_ref().expect("full level missing traceback stats");
+        pairs += tb.pairs;
+        cells += tb.cells;
+        capped += tb.capped;
+    }
+
+    let efficiency = score_wall / full_wall;
+    let overhead_pct = (full_wall / score_wall - 1.0) * 100.0;
+
+    let mut table = Table::new(
+        "report_overhead: score-only vs full alignment report (InterSP)",
+        &["level", "wall_s", "vs_score"],
+    );
+    table.row(&["score".to_string(), format!("{score_wall:.4}"), f2(1.0)]);
+    table.row(&["full".to_string(), format!("{full_wall:.4}"), f2(full_wall / score_wall)]);
+    table.emit("report_overhead");
+    println!(
+        "report overhead: efficiency {efficiency:.3} (>= {:.3} gates), \
+         +{overhead_pct:.1}% wall for {pairs} traced pairs / {cells} DP cells ({capped} capped)",
+        1.0 / 1.10
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"report_overhead\",\n  \"preset\": \"{preset}\",\n  \
+         \"n_seqs\": {},\n  \"qlen\": {qlen},\n  \"queries\": {N_QUERIES},\n  \
+         \"top_k\": {TOP_K},\n  \"report\": {{\n    \
+         \"score_wall_s\": {score_wall:.6},\n    \
+         \"full_wall_s\": {full_wall:.6},\n    \
+         \"efficiency\": {efficiency:.3},\n    \
+         \"overhead_pct\": {overhead_pct:.2},\n    \
+         \"traceback_pairs\": {pairs},\n    \
+         \"traceback_cells\": {cells},\n    \
+         \"traceback_capped\": {capped}\n  }}\n}}\n",
+        index.n_seqs(),
+    );
+    if std::fs::write("BENCH_report.json", &json).is_ok() {
+        println!("\nwrote BENCH_report.json");
+    }
+}

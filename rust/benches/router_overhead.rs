@@ -78,6 +78,7 @@ fn start_backend(
             partition,
             n_total: full.n_seqs(),
             global: ids.to_vec(),
+            residues_total: full.total_residues,
         }),
     }
     .start()

@@ -16,6 +16,7 @@
 pub mod inter;
 pub mod scalar;
 pub mod striped;
+pub mod traceback;
 
 use crate::db::index::Index;
 use crate::db::profile::{

@@ -1,0 +1,517 @@
+//! Bounded-memory affine-gap traceback — the alignment reporting kernel.
+//!
+//! The search pipeline is score-only: every engine streams `H` row by row
+//! and keeps nothing but the running best (that is what makes TrEMBL-scale
+//! search fit in cache). Traceback needs the opposite — the full decision
+//! matrix — so it runs as a separate pass over **only the ≤ top-k hit
+//! pairs**, after sink merge, re-deriving the paper's recurrence
+//! (`align::scalar`) with a packed per-cell direction byte:
+//!
+//! * bits 0–1 — `H` source: 0 = stop (local zero), 1 = diagonal,
+//!   2 = `E` (gap in subject, consumes query), 3 = `F` (gap in query);
+//! * bit 2 — `E` extends `E[i-1,j]` (vs opening from `H[i-1,j]`);
+//! * bit 3 — `F` extends `F[i,j-1]` (vs opening from `H[i,j-1]`).
+//!
+//! Memory is `O(m·n)` bytes per pair, bounded by a caller-supplied
+//! **cell cap**. Over the cap the kernel degrades in two stages
+//! (documented in `docs/alignment.md`):
+//!
+//! 1. linear-space forward + reverse passes (`O(min)` memory) recover the
+//!    score and the start/end coordinates;
+//! 2. if the coordinate-bounded window fits the cap, the direction DP is
+//!    re-run on the window alone, recovering the full CIGAR; otherwise
+//!    the result is **coordinates-only** (`cigar: None`, `capped: true`).
+//!
+//! Tie-breaking is deterministic everywhere: endpoints take the first
+//! strictly-greater cell in (query-row, subject-col) scan order, and the
+//! walk prefers stop > diagonal > E > F, with gap chains preferring
+//! extension. The reported `score` is the DP optimum and is
+//! property-tested equal to the score-only pipeline's sink score.
+
+use crate::align::scalar::NEG;
+use crate::matrices::Scoring;
+
+/// One traced alignment. Coordinates are 0-based half-open (`[start,
+/// end)`) residue offsets into the query / subject.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Alignment {
+    /// Optimal local score — always exact, even when capped.
+    pub score: i32,
+    pub q_start: usize,
+    pub q_end: usize,
+    pub s_start: usize,
+    pub s_end: usize,
+    /// Run-length CIGAR over `M` (aligned pair), `I` (consumes query
+    /// only), `D` (consumes subject only); `None` when the cell cap
+    /// degraded the result to coordinates-only.
+    pub cigar: Option<String>,
+    /// Identical aligned pairs (`M` columns with equal residue codes).
+    pub matches: usize,
+    /// Total alignment columns (M + I + D); 0 when coordinates-only.
+    pub aligned_cols: usize,
+    /// True when the cell cap forced coordinates-only degradation.
+    pub capped: bool,
+    /// DP cells computed across all passes (observability accounting).
+    pub cells: u64,
+}
+
+impl Alignment {
+    /// Sequence identity: identical pairs over alignment columns.
+    /// `None` when no CIGAR was recovered (capped) or the alignment is
+    /// empty.
+    pub fn identity(&self) -> Option<f64> {
+        if self.cigar.is_none() || self.aligned_cols == 0 {
+            return None;
+        }
+        Some(self.matches as f64 / self.aligned_cols as f64)
+    }
+
+    /// Fraction of the query covered by the aligned span.
+    pub fn query_cov(&self, qlen: usize) -> f64 {
+        if qlen == 0 {
+            return 0.0;
+        }
+        (self.q_end - self.q_start) as f64 / qlen as f64
+    }
+
+    /// Fraction of the subject covered by the aligned span.
+    pub fn subject_cov(&self, slen: usize) -> f64 {
+        if slen == 0 {
+            return 0.0;
+        }
+        (self.s_end - self.s_start) as f64 / slen as f64
+    }
+
+    fn empty(cells: u64) -> Alignment {
+        Alignment {
+            score: 0,
+            q_start: 0,
+            q_end: 0,
+            s_start: 0,
+            s_end: 0,
+            cigar: Some(String::new()),
+            matches: 0,
+            aligned_cols: 0,
+            capped: false,
+            cells,
+        }
+    }
+}
+
+/// Trace the optimal local alignment of `query` vs `subject` under a DP
+/// cell budget of `cell_cap` (`(n+1)·(m+1)` counted against it; pass
+/// `0` to force the coordinates-only path, e.g. for `--report coord`).
+pub fn traceback(query: &[u8], subject: &[u8], sc: &Scoring, cell_cap: usize) -> Alignment {
+    let n = query.len();
+    let m = subject.len();
+    if n == 0 || m == 0 {
+        return Alignment::empty(0);
+    }
+    if (n as u64 + 1) * (m as u64 + 1) <= cell_cap as u64 {
+        return full_trace(query, subject, sc);
+    }
+    // Stage 1: linear forward pass — exact score + end coordinates.
+    let (score, q_end, s_end, fwd_cells) = linear_best(query, subject, sc);
+    if score == 0 {
+        return Alignment::empty(fwd_cells);
+    }
+    // Stage 2: the same pass over the reversed prefixes yields the start
+    // coordinates (the SSW-library technique): the best alignment of the
+    // reversed prefixes has the same score, and its endpoint maps to a
+    // start `(q_end - ri, s_end - rj)` of a score-optimal alignment.
+    let rq: Vec<u8> = query[..q_end].iter().rev().copied().collect();
+    let rs: Vec<u8> = subject[..s_end].iter().rev().copied().collect();
+    let (rscore, rq_end, rs_end, rev_cells) = linear_best(&rq, &rs, sc);
+    debug_assert_eq!(rscore, score, "reverse pass must reproduce the score");
+    let q_start = q_end - rq_end;
+    let s_start = s_end - rs_end;
+    let mut cells = fwd_cells + rev_cells;
+    // Stage 3: windowed re-run — every score-optimal alignment the
+    // reverse pass can select lies inside this rectangle, so its DP
+    // optimum equals the global score and the full CIGAR is recovered.
+    let wq = q_end - q_start;
+    let ws = s_end - s_start;
+    if (wq as u64 + 1) * (ws as u64 + 1) <= cell_cap as u64 {
+        let mut a = full_trace(&query[q_start..q_end], &subject[s_start..s_end], sc);
+        if a.score == score {
+            a.q_start += q_start;
+            a.q_end += q_start;
+            a.s_start += s_start;
+            a.s_end += s_start;
+            a.cells += cells;
+            return a;
+        }
+        cells += a.cells; // defensive: fall through to coordinates-only
+    }
+    Alignment {
+        score,
+        q_start,
+        q_end,
+        s_start,
+        s_end,
+        cigar: None,
+        matches: 0,
+        aligned_cols: 0,
+        capped: true,
+        cells,
+    }
+}
+
+/// Full direction-matrix DP + walk (uncapped path and window re-runs).
+fn full_trace(query: &[u8], subject: &[u8], sc: &Scoring) -> Alignment {
+    let n = query.len();
+    let m = subject.len();
+    let alpha = sc.gap_extend;
+    let beta = sc.beta();
+    let mut dirs = vec![0u8; n * m];
+    let mut hprev = vec![0i32; m + 1]; // H[i-1][*]
+    let mut eprev = vec![NEG; m + 1]; // E[i-1][*]
+    let mut best = 0i32;
+    let (mut bi, mut bj) = (0usize, 0usize);
+    for i in 1..=n {
+        let row = sc.row(query[i - 1]);
+        let mut diag = hprev[0]; // H[i-1][j-1]
+        let mut h_left = 0i32; // H[i][j-1]
+        let mut f_left = NEG; // F[i][j-1]
+        for j in 1..=m {
+            let e_open = hprev[j] - beta;
+            let e_ext = eprev[j] - alpha;
+            let (e, ebit) = if e_ext >= e_open { (e_ext, 4u8) } else { (e_open, 0) };
+            let f_open = h_left - beta;
+            let f_ext = f_left - alpha;
+            let (f, fbit) = if f_ext >= f_open { (f_ext, 8u8) } else { (f_open, 0) };
+            let sub = diag + row[subject[j - 1] as usize];
+            let h = 0.max(sub).max(e).max(f);
+            let src = if h == 0 {
+                0
+            } else if h == sub {
+                1
+            } else if h == e {
+                2
+            } else {
+                3
+            };
+            dirs[(i - 1) * m + (j - 1)] = src | ebit | fbit;
+            diag = hprev[j];
+            hprev[j] = h;
+            eprev[j] = e;
+            h_left = h;
+            f_left = f;
+            if h > best {
+                best = h;
+                bi = i;
+                bj = j;
+            }
+        }
+    }
+    let cells = (n as u64) * (m as u64);
+    if best == 0 {
+        return Alignment::empty(cells);
+    }
+    // Walk back from the endpoint; ops come out reversed.
+    let (mut i, mut j) = (bi, bj);
+    let mut ops: Vec<u8> = Vec::new();
+    let mut matches = 0usize;
+    while i > 0 && j > 0 {
+        let cell = dirs[(i - 1) * m + (j - 1)];
+        match cell & 3 {
+            0 => break,
+            1 => {
+                ops.push(b'M');
+                if query[i - 1] == subject[j - 1] {
+                    matches += 1;
+                }
+                i -= 1;
+                j -= 1;
+            }
+            2 => loop {
+                let c = dirs[(i - 1) * m + (j - 1)];
+                ops.push(b'I');
+                i -= 1;
+                if c & 4 == 0 || i == 0 {
+                    break;
+                }
+            },
+            _ => loop {
+                let c = dirs[(i - 1) * m + (j - 1)];
+                ops.push(b'D');
+                j -= 1;
+                if c & 8 == 0 || j == 0 {
+                    break;
+                }
+            },
+        }
+    }
+    let aligned_cols = ops.len();
+    Alignment {
+        score: best,
+        q_start: i,
+        q_end: bi,
+        s_start: j,
+        s_end: bj,
+        cigar: Some(rle(&ops)),
+        matches,
+        aligned_cols,
+        capped: false,
+        cells,
+    }
+}
+
+/// Linear-space score pass with deterministic endpoint tracking: the
+/// first strictly-greater cell in (query-row, subject-col) scan order —
+/// the same order `full_trace` scans, so both paths agree on endpoints.
+fn linear_best(query: &[u8], subject: &[u8], sc: &Scoring) -> (i32, usize, usize, u64) {
+    let n = query.len();
+    let m = subject.len();
+    let alpha = sc.gap_extend;
+    let beta = sc.beta();
+    let mut hprev = vec![0i32; m + 1];
+    let mut eprev = vec![NEG; m + 1];
+    let mut best = 0i32;
+    let (mut bi, mut bj) = (0usize, 0usize);
+    for i in 1..=n {
+        let row = sc.row(query[i - 1]);
+        let mut diag = hprev[0];
+        let mut h_left = 0i32;
+        let mut f_left = NEG;
+        for j in 1..=m {
+            let e = (eprev[j] - alpha).max(hprev[j] - beta);
+            let f = (f_left - alpha).max(h_left - beta);
+            let h = 0.max(diag + row[subject[j - 1] as usize]).max(e).max(f);
+            diag = hprev[j];
+            hprev[j] = h;
+            eprev[j] = e;
+            h_left = h;
+            f_left = f;
+            if h > best {
+                best = h;
+                bi = i;
+                bj = j;
+            }
+        }
+    }
+    (best, bi, bj, (n as u64) * (m as u64))
+}
+
+/// Run-length encode a reversed op buffer into CIGAR text (`"12M3I9M"`).
+fn rle(rev_ops: &[u8]) -> String {
+    let mut out = String::new();
+    let mut run = 0usize;
+    let mut cur = 0u8;
+    for &op in rev_ops.iter().rev() {
+        if op == cur {
+            run += 1;
+        } else {
+            if run > 0 {
+                out.push_str(&run.to_string());
+                out.push(cur as char);
+            }
+            cur = op;
+            run = 1;
+        }
+    }
+    if run > 0 {
+        out.push_str(&run.to_string());
+        out.push(cur as char);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::align::scalar::sw_score;
+    use crate::alphabet::encode;
+    use crate::db::synth::rand_seq;
+    use crate::util::check::{check, prop_assert, prop_eq};
+
+    fn sc() -> Scoring {
+        Scoring::swaphi_default()
+    }
+
+    /// Parse an RLE CIGAR into (op, run) pairs.
+    fn cigar_runs(cigar: &str) -> Vec<(u8, usize)> {
+        let mut runs = Vec::new();
+        let mut num = 0usize;
+        for b in cigar.bytes() {
+            if b.is_ascii_digit() {
+                num = num * 10 + (b - b'0') as usize;
+            } else {
+                assert!(num > 0, "run length missing in {cigar}");
+                runs.push((b, num));
+                num = 0;
+            }
+        }
+        assert_eq!(num, 0, "trailing digits in {cigar}");
+        runs
+    }
+
+    /// Re-score the CIGAR path with affine gaps; must equal the DP score.
+    fn path_score(a: &Alignment, q: &[u8], s: &[u8], sco: &Scoring) -> i32 {
+        let mut total = 0i32;
+        let (mut qi, mut sj) = (a.q_start, a.s_start);
+        for (op, run) in cigar_runs(a.cigar.as_ref().unwrap()) {
+            match op {
+                b'M' => {
+                    for _ in 0..run {
+                        total += sco.score(q[qi], s[sj]);
+                        qi += 1;
+                        sj += 1;
+                    }
+                }
+                b'I' => {
+                    total -= sco.beta() + (run as i32 - 1) * sco.gap_extend;
+                    qi += run;
+                }
+                b'D' => {
+                    total -= sco.beta() + (run as i32 - 1) * sco.gap_extend;
+                    sj += run;
+                }
+                other => panic!("bad op {other}"),
+            }
+        }
+        assert_eq!(qi, a.q_end, "CIGAR must consume exactly the query span");
+        assert_eq!(sj, a.s_end, "CIGAR must consume exactly the subject span");
+        total
+    }
+
+    #[test]
+    fn identical_sequences_full_match() {
+        let q = encode(b"ARNDCQEGHILKMFPSTWYV");
+        let s = sc();
+        let a = traceback(&q, &q, &s, usize::MAX);
+        let expect: i32 = q.iter().map(|&c| s.score(c, c)).sum();
+        assert_eq!(a.score, expect);
+        assert_eq!(a.cigar.as_deref(), Some("20M"));
+        assert_eq!(a.identity(), Some(1.0));
+        assert_eq!((a.q_start, a.q_end), (0, 20));
+        assert_eq!((a.s_start, a.s_end), (0, 20));
+        assert_eq!(a.query_cov(q.len()), 1.0);
+        assert_eq!(a.subject_cov(q.len()), 1.0);
+        assert!(!a.capped);
+    }
+
+    #[test]
+    fn local_alignment_trims_flanks() {
+        let s = sc();
+        let q = encode(b"WWWW");
+        let d = encode(b"CCCCCCWWWWCCCCC");
+        let a = traceback(&q, &d, &s, usize::MAX);
+        assert_eq!(a.score, 44);
+        assert_eq!((a.q_start, a.q_end), (0, 4));
+        assert_eq!((a.s_start, a.s_end), (6, 10));
+        assert_eq!(a.cigar.as_deref(), Some("4M"));
+    }
+
+    #[test]
+    fn gap_appears_in_cigar() {
+        let s = sc();
+        // AAWW vs AACWW: D through the subject's C beats the mismatch
+        let q = encode(b"AAWW");
+        let d = encode(b"AACWW");
+        let a = traceback(&q, &d, &s, usize::MAX);
+        assert_eq!(a.score, sw_score(&q, &d, &s));
+        assert_eq!(a.cigar.as_deref(), Some("2M1D2M"));
+        assert_eq!(path_score(&a, &q, &d, &s), a.score);
+    }
+
+    #[test]
+    fn empty_and_zero_score_inputs() {
+        let s = sc();
+        let a = traceback(&[], &encode(b"ARN"), &s, usize::MAX);
+        assert_eq!(a.score, 0);
+        assert_eq!(a.cigar.as_deref(), Some(""));
+        assert_eq!(a.identity(), None);
+        // A vs W scores 0 (best local alignment is empty)
+        let z = traceback(&encode(b"A"), &encode(b"W"), &s, usize::MAX);
+        assert_eq!(z.score, 0);
+        assert_eq!((z.q_start, z.q_end, z.s_start, z.s_end), (0, 0, 0, 0));
+    }
+
+    #[test]
+    fn score_matches_oracle_and_cigar_consumes_spans() {
+        check("traceback == oracle", 200, |rng| {
+            let q = rand_seq(rng, 1, 64);
+            let d = rand_seq(rng, 1, 96);
+            let s = sc();
+            let a = traceback(&q, &d, &s, usize::MAX);
+            prop_eq(a.score, sw_score(&q, &d, &s), "score vs oracle")?;
+            if a.score > 0 {
+                prop_eq(path_score(&a, &q, &d, &s), a.score, "path re-score")?;
+                prop_assert(a.matches <= a.aligned_cols, "matches bound")?;
+                let id = a.identity().unwrap_or(0.0);
+                prop_assert((0.0..=1.0).contains(&id), "identity in [0,1]")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn capped_window_recovers_identical_alignment() {
+        check("windowed == full", 100, |rng| {
+            let q = rand_seq(rng, 8, 48);
+            let d = rand_seq(rng, 8, 200);
+            let s = sc();
+            let full = traceback(&q, &d, &s, usize::MAX);
+            // cap below the full matrix but (usually) above the window
+            let cap = (q.len() + 1) * (d.len() + 1) - 1;
+            let capped = traceback(&q, &d, &s, cap);
+            prop_eq(capped.score, full.score, "score under cap")?;
+            if !capped.capped && capped.score > 0 {
+                prop_eq(path_score(&capped, &q, &d, &s), capped.score, "windowed path")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cap_zero_degrades_to_exact_coordinates() {
+        check("coords-only degradation", 100, |rng| {
+            let q = rand_seq(rng, 4, 48);
+            let d = rand_seq(rng, 4, 96);
+            let s = sc();
+            let full = traceback(&q, &d, &s, usize::MAX);
+            let coords = traceback(&q, &d, &s, 0);
+            prop_eq(coords.score, full.score, "score")?;
+            prop_assert(coords.cigar.is_none() || coords.score == 0, "no cigar at cap 0")?;
+            if coords.score > 0 {
+                prop_assert(coords.capped, "capped flag")?;
+                prop_eq(coords.q_end, full.q_end, "q_end agrees with full scan")?;
+                prop_eq(coords.s_end, full.s_end, "s_end agrees with full scan")?;
+                prop_assert(coords.q_start <= coords.q_end, "q span ordered")?;
+                prop_assert(coords.s_start <= coords.s_end, "s span ordered")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn coverage_fractions_bounded() {
+        check("coverage bounds", 100, |rng| {
+            let q = rand_seq(rng, 1, 40);
+            let d = rand_seq(rng, 1, 60);
+            let s = sc();
+            let a = traceback(&q, &d, &s, usize::MAX);
+            let qc = a.query_cov(q.len());
+            let sc_ = a.subject_cov(d.len());
+            prop_assert((0.0..=1.0).contains(&qc), "query coverage")?;
+            prop_assert((0.0..=1.0).contains(&sc_), "subject coverage")?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn works_with_all_matrices() {
+        let mut rng = crate::util::rng::Rng::new(42);
+        let q = crate::db::synth::random_codes(&mut rng, 30);
+        let d = crate::db::synth::random_codes(&mut rng, 50);
+        for name in crate::matrices::MATRIX_NAMES {
+            let s = Scoring::new(name, 10, 2).unwrap();
+            let a = traceback(&q, &d, &s, usize::MAX);
+            assert_eq!(a.score, sw_score(&q, &d, &s), "{name}");
+            if a.score > 0 {
+                assert_eq!(path_score(&a, &q, &d, &s), a.score, "{name}");
+            }
+        }
+    }
+}

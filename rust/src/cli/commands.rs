@@ -142,6 +142,7 @@ pub fn cmd_index(mut args: Args) -> anyhow::Result<i32> {
             partition: p,
             n_total: index.n_seqs(),
             global: ids.clone(),
+            residues_total: index.total_residues,
         };
         meta.save(crate::db::partition::PartitionMeta::sidecar_path(&slice_path))?;
         println!(
@@ -195,6 +196,9 @@ fn load_config(args: &mut Args) -> anyhow::Result<SwaphiConfig> {
     }
     if let Some(m) = args.take("mode") {
         raw.set("search.mode", &m)?;
+    }
+    if let Some(r) = args.take("report") {
+        raw.set("search.report", &r)?;
     }
     if let Some(d) = args.take("devices") {
         raw.set("devices.count", &d)?;
@@ -322,6 +326,34 @@ pub fn cmd_search(mut args: Args) -> anyhow::Result<i32> {
             )?;
         }
         report.push_str(&crate::coordinator::results::format_hits(&result.hits));
+        if let Some(aligns) = &result.alignments {
+            for (h, a) in result.hits.iter().zip(aligns) {
+                writeln!(
+                    report,
+                    "    {}: q[{}..{}) s[{}..{}) cov {:.0}%/{:.0}% bits {:.1} E {:.2e}{}{}{}",
+                    h.id,
+                    a.q_start,
+                    a.q_end,
+                    a.s_start,
+                    a.s_end,
+                    a.q_cov * 100.0,
+                    a.s_cov * 100.0,
+                    a.bitscore,
+                    a.evalue,
+                    a.identity
+                        .map_or(String::new(), |i| format!(" identity {:.1}%", i * 100.0)),
+                    a.cigar.as_deref().map_or(String::new(), |c| format!(" cigar {c}")),
+                    if a.capped { " [capped]" } else { "" },
+                )?;
+            }
+            if let Some(tb) = result.traceback {
+                writeln!(
+                    report,
+                    "  traceback: {} pair(s), {} capped, {} cells",
+                    tb.pairs, tb.capped, tb.cells
+                )?;
+            }
+        }
         batch.add(result.rescore);
         batch_cells.add(result.cells);
         batch_wall += result.wall_seconds;
@@ -614,6 +646,13 @@ pub fn cmd_query(mut args: Args) -> anyhow::Result<i32> {
                 .ok_or_else(|| anyhow::anyhow!("unknown mode {v:?} (exact|fast|auto)"))?,
         ),
     };
+    let report = match args.take("report") {
+        None => None,
+        Some(v) => Some(
+            crate::coordinator::ReportLevel::parse(&v)
+                .ok_or_else(|| anyhow::anyhow!("unknown report {v:?} (score|coord|full)"))?,
+        ),
+    };
     let retries = args.take_usize("retries", 0)?;
     let retry_ms = args.take_u64("retry-ms", 200)?;
     let informational = ping || stats || metrics || trace;
@@ -679,12 +718,13 @@ pub fn cmd_query(mut args: Args) -> anyhow::Result<i32> {
         anyhow::ensure!(!rec.seq.is_empty(), "query {} is empty", rec.id);
         n += 1;
         let seq = String::from_utf8_lossy(&rec.seq).to_string();
-        let resp = client.search_mode(
+        let resp = client.search_fields(
             &rec.id,
             &seq,
             top_k,
             (timeout_ms > 0).then_some(timeout_ms),
             mode,
+            report,
         )?;
         if crate::server::client::is_ok(&resp) {
             let hits = crate::server::client::hits_of(&resp)?;
@@ -700,15 +740,35 @@ pub fn cmd_query(mut args: Args) -> anyhow::Result<i32> {
                 if cached { " [cached]" } else { "" }
             );
             let rows: Vec<crate::coordinator::results::Hit> = hits
-                .into_iter()
+                .iter()
                 .map(|h| crate::coordinator::results::Hit {
                     seq_index: 0,
-                    id: h.subject,
+                    id: h.subject.clone(),
                     len: h.len,
                     score: h.score,
                 })
                 .collect();
             print!("{}", crate::coordinator::results::format_hits(&rows));
+            for h in &hits {
+                if let Some(a) = &h.align {
+                    println!(
+                        "    {}: q[{}..{}) s[{}..{}) cov {:.0}%/{:.0}% bits {:.1} E {:.2e}{}{}{}",
+                        h.subject,
+                        a.q_start,
+                        a.q_end,
+                        a.s_start,
+                        a.s_end,
+                        a.q_cov * 100.0,
+                        a.s_cov * 100.0,
+                        a.bitscore,
+                        a.evalue,
+                        a.identity
+                            .map_or(String::new(), |i| format!(" identity {:.1}%", i * 100.0)),
+                        a.cigar.as_deref().map_or(String::new(), |c| format!(" cigar {c}")),
+                        if a.capped { " [capped]" } else { "" },
+                    );
+                }
+            }
         } else {
             let (code, message) = crate::server::client::error_of(&resp);
             eprintln!("query {}: {code}: {message}", rec.id);
@@ -956,6 +1016,44 @@ mod tests {
         );
         // strict validation names the valid set
         assert!(run(&format!("search --index {idx} --query {qf} --mode nope")).is_err());
+        for f in [fasta, idx, qf] {
+            let _ = std::fs::remove_file(f);
+        }
+    }
+
+    #[test]
+    fn search_report_flag_selects_level_and_rejects_unknown() {
+        let fasta = tmp("db9.fasta");
+        let idx = tmp("db9.idx");
+        let qf = tmp("q9.fasta");
+        assert_eq!(
+            run(&format!("synth --preset tiny --n 48 --seed 17 --out {fasta}")).unwrap(),
+            0
+        );
+        assert_eq!(run(&format!("index --in {fasta} --out {idx}")).unwrap(), 0);
+        std::fs::write(&qf, ">q1\nMKTAYIAKQRQISFVKSHFSRQLEERLGLIEVQ\n").unwrap();
+        for report in ["score", "coord", "full"] {
+            assert_eq!(
+                run(&format!(
+                    "search --index {idx} --query {qf} --report {report} \
+                     --set sim.enabled=false"
+                ))
+                .unwrap(),
+                0,
+                "{report}"
+            );
+        }
+        // full reports compose with the fast-mode funnel too
+        assert_eq!(
+            run(&format!(
+                "search --index {idx} --query {qf} --mode fast --report full \
+                 --set sim.enabled=false"
+            ))
+            .unwrap(),
+            0
+        );
+        // strict validation names the valid set
+        assert!(run(&format!("search --index {idx} --query {qf} --report nope")).is_err());
         for f in [fasta, idx, qf] {
             let _ = std::fs::remove_file(f);
         }

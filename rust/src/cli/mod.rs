@@ -101,6 +101,10 @@ COMMANDS:
                 the whole database; fast: seeded prefilter → exact SW
                 rescore of the survivor set, reporting prefilter stats;
                 auto: fast above search.auto_fast_threshold sequences)
+              [--report score|coord|full]   per-hit alignment detail
+                (score: ranked scores only; coord: endpoints, coverage,
+                bitscore, e-value via bounded-memory traceback; full:
+                adds CIGAR and percent identity — docs/alignment.md)
               [--calibrate]   time every work item, report the measured
                 per-device rate vector with the results, and re-shard to
                 it at batch barriers (forces [tune] enabled = true)
@@ -115,6 +119,9 @@ COMMANDS:
               [--devices <n>]  [--device-rates <r1,r2,...>]
               [--mode exact|fast|auto]   default search mode; clients can
                 override per request with the protocol's "mode" field
+              [--report score|coord|full]   default report level; clients
+                override per request with the "fields" key (levels never
+                share cache entries)
               [--config <toml>]  [--set server.max_batch=32]...
               --set tune.enabled=true turns on online rate calibration:
                 warmup probe batches on index load, then drift detection
@@ -148,6 +155,9 @@ COMMANDS:
             each FASTA record is one request on one connection
               --connect <host:port | unix:/path>  --query <fasta>
               [--top-k <n>]  [--timeout-ms <n>]  [--mode exact|fast|auto]
+              [--report score|coord|full]   ask for alignment detail (the
+                protocol's "fields" key; full prints coordinates, CIGAR,
+                identity and e-values per hit)
               [--ping]  [--stats]
               [--retries <n> --retry-ms <ms>]   with --ping: retry while
                 the daemon is still binding (connect failures only —

@@ -17,7 +17,11 @@
 use crate::server::protocol::HitPayload;
 
 /// Merge per-partition hit lists into the global top-k, preserving the
-/// single-process ranking order (score desc, global seq asc).
+/// single-process ranking order (score desc, global seq asc). Alignment
+/// payloads (the `align` field) ride along untouched: their coordinates
+/// are subject-local and their e-values were computed against the
+/// *whole-database* residue count (each backend's `.pmeta` carries it),
+/// so merged reports are byte-identical to a single daemon's.
 pub fn merge_hits(parts: Vec<Vec<HitPayload>>, top_k: usize) -> Vec<HitPayload> {
     let mut all: Vec<HitPayload> = parts.into_iter().flatten().collect();
     all.sort_by(|a, b| b.score.cmp(&a.score).then(a.seq.cmp(&b.seq)));
@@ -31,7 +35,7 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn hit(seq: usize, score: i32) -> HitPayload {
-        HitPayload { subject: format!("s{seq}"), len: seq + 30, score, seq }
+        HitPayload { subject: format!("s{seq}"), len: seq + 30, score, seq, align: None }
     }
 
     /// The single-process oracle: full list, same total order, truncate.

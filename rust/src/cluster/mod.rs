@@ -665,6 +665,13 @@ fn route_search(req: protocol::SearchRequest, shared: &Arc<RouterShared>, trace:
         if let Some(mode) = req.mode {
             m.insert("mode".to_string(), Json::Str(mode.name().to_string()));
         }
+        // report level passes through verbatim: backends run their own
+        // traceback over local subjects (hit `seq` ids are already
+        // global, and alignment coordinates are subject-local, so the
+        // merge needs no rebasing of the align payloads)
+        if let Some(fields) = req.fields {
+            m.insert("fields".to_string(), Json::Str(fields.name().to_string()));
+        }
         Arc::new(Json::Obj(m).to_string())
     };
 

@@ -17,6 +17,8 @@
 //! precision = "auto"      # auto | i16 | i32 (score-lane tier)
 //! mode = "exact"          # exact | fast | auto (two-stage funnel)
 //! auto_fast_threshold = 50000  # db size at which auto flips to fast
+//! report = "score"        # score | coord | full (per-hit alignment detail)
+//! report_cell_cap = 16000000   # traceback DP cell budget per hit pair
 //! devices = 4             # legacy spelling of devices.count
 //! policy = "guided"       # static | dynamic | guided | auto
 //! top_k = 10
@@ -50,7 +52,7 @@
 //! ```
 
 use crate::align::{EngineKind, Precision};
-use crate::coordinator::{SearchConfig, SearchMode};
+use crate::coordinator::{ReportLevel, SearchConfig, SearchMode};
 use crate::db::chunk::ChunkPlanConfig;
 use crate::matrices::Scoring;
 use crate::phi::sched::Policy;
@@ -305,6 +307,8 @@ pub const KNOWN_KEYS: &[&str] = &[
     "search.precision",
     "search.mode",
     "search.auto_fast_threshold",
+    "search.report",
+    "search.report_cell_cap",
     "devices.count",
     "devices.steal",
     "devices.rates",
@@ -370,6 +374,13 @@ pub struct SwaphiConfig {
     pub mode: SearchMode,
     /// Database size (sequences) above which `auto` resolves to `fast`.
     pub auto_fast_threshold: usize,
+    /// Default report level (`search.report`): `score` returns ranked
+    /// scores only, `coord` adds alignment endpoints/coverage/e-values,
+    /// `full` adds CIGAR and identity (see `docs/alignment.md`).
+    pub report: ReportLevel,
+    /// Per-pair DP cell budget for the full-report traceback; pairs over
+    /// it degrade to coordinates-only (`capped: true`).
+    pub report_cell_cap: usize,
     pub chunk_residues: u128,
     pub sim_enabled: bool,
     pub sim_threads: usize,
@@ -414,6 +425,7 @@ impl SwaphiConfig {
         let policy_s = raw.str_or("search.policy", "guided")?;
         let precision_s = raw.str_or("search.precision", "auto")?;
         let mode_s = raw.str_or("search.mode", "exact")?;
+        let report_s = raw.str_or("search.report", "score")?;
         let rates = {
             let rates = raw.f64_list_or("devices.rates", &[])?;
             // name the offending entry AND its 1-based position — rate
@@ -501,6 +513,9 @@ impl SwaphiConfig {
             mode: SearchMode::parse(&mode_s)
                 .ok_or_else(|| anyhow::anyhow!("unknown mode {mode_s:?} (exact|fast|auto)"))?,
             auto_fast_threshold: raw.int_or("search.auto_fast_threshold", 50_000)?.max(1) as usize,
+            report: ReportLevel::parse(&report_s)
+                .ok_or_else(|| anyhow::anyhow!("unknown report {report_s:?} (score|coord|full)"))?,
+            report_cell_cap: raw.int_or("search.report_cell_cap", 16_000_000)?.max(0) as usize,
             chunk_residues: raw.int_or("search.chunk_residues", 1 << 19)?.max(1024) as u128,
             sim_enabled: raw.bool_or("sim.enabled", true)?,
             sim_threads: raw.int_or("sim.threads_per_device", 240)?.max(1) as usize,
@@ -564,6 +579,11 @@ impl SwaphiConfig {
             precision: self.precision,
             mode: self.mode,
             auto_fast_threshold: self.auto_fast_threshold,
+            report: self.report,
+            report_cell_cap: self.report_cell_cap,
+            // 0 = "this index is the whole database"; cluster backends
+            // overwrite it from their `.pmeta` sidecar at daemon startup
+            db_residues: 0,
             sim: self.sim_enabled.then(|| SimConfig {
                 devices: self.devices,
                 threads_per_device: self.sim_threads,
@@ -668,6 +688,29 @@ mod tests {
         let err = SwaphiConfig::from_raw(&raw).unwrap_err().to_string();
         assert!(err.contains("mode"), "{err}");
         assert!(err.contains("exact|fast|auto"), "{err}");
+    }
+
+    #[test]
+    fn report_key_parses_and_rejects() {
+        let cfg = SwaphiConfig::default_config();
+        assert_eq!(cfg.report, ReportLevel::Score, "score-only is the default");
+        assert_eq!(cfg.report_cell_cap, 16_000_000);
+        let mut raw = RawConfig::default();
+        raw.set("search.report", "full").unwrap();
+        raw.set("search.report_cell_cap", "1000").unwrap();
+        let cfg = SwaphiConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.report, ReportLevel::Full);
+        let sc = cfg.search_config();
+        assert_eq!(sc.report, ReportLevel::Full);
+        assert_eq!(sc.report_cell_cap, 1000);
+        assert_eq!(sc.db_residues, 0, "config never claims a partition");
+        raw.set("search.report", "coord").unwrap();
+        assert_eq!(SwaphiConfig::from_raw(&raw).unwrap().report, ReportLevel::Coord);
+        // strict validation: the error names the key and the valid set
+        raw.set("search.report", "nope").unwrap();
+        let err = SwaphiConfig::from_raw(&raw).unwrap_err().to_string();
+        assert!(err.contains("report"), "{err}");
+        assert!(err.contains("score|coord|full"), "{err}");
     }
 
     #[test]

@@ -52,14 +52,15 @@ pub mod devices;
 pub mod results;
 
 use crate::align::{
-    scalar, EngineKind, NativeAligner, Precision, ProfileAligner, QueryContext,
+    scalar, traceback, EngineKind, NativeAligner, Precision, ProfileAligner, QueryContext,
 };
 use crate::blast::{prefilter, BlastParams, BlastQuery};
 use crate::db::chunk::{plan_chunks_paired, Chunk, ChunkPlanConfig};
 use crate::db::index::Index;
 use crate::matrices::Scoring;
-use crate::metrics::{Cells, PrefilterStats, RescoreStats, Timer};
+use crate::metrics::{Cells, PrefilterStats, RescoreStats, Timer, TracebackStats};
 use crate::phi::sim::{simulate_search, SimConfig, SimReport};
+use crate::stats::KarlinParams;
 use crate::trace::{Span, TraceRecorder};
 use crate::tune::{TuneConfig, Tuner};
 pub use devices::{DeviceSet, DeviceSnapshot, WorkItem};
@@ -157,6 +158,41 @@ impl SearchMode {
     }
 }
 
+/// How much alignment detail the report stage computes per top-k hit
+/// (`search.report` / `--report` / the protocol's `fields` key). The
+/// output contract lives in `docs/alignment.md`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum ReportLevel {
+    /// Ranked scores only — the pre-reporting pipeline, untouched.
+    #[default]
+    Score,
+    /// Start/end coordinates, coverage, bitscore and e-value per hit
+    /// (linear-space passes only; no CIGAR or identity).
+    Coord,
+    /// Everything: coordinates, coverage, CIGAR, identity, bitscore,
+    /// e-value — full traceback under the session's cell cap.
+    Full,
+}
+
+impl ReportLevel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReportLevel::Score => "score",
+            ReportLevel::Coord => "coord",
+            ReportLevel::Full => "full",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ReportLevel> {
+        match s.to_ascii_lowercase().as_str() {
+            "score" | "scores" => Some(ReportLevel::Score),
+            "coord" | "coords" | "coordinates" => Some(ReportLevel::Coord),
+            "full" | "align" | "alignment" => Some(ReportLevel::Full),
+            _ => None,
+        }
+    }
+}
+
 /// Search configuration.
 #[derive(Clone, Debug)]
 pub struct SearchConfig {
@@ -202,6 +238,20 @@ pub struct SearchConfig {
     /// [`SearchMode::Auto`] resolves to `Fast` when the database holds
     /// at least this many sequences (`search.auto_fast_threshold`).
     pub auto_fast_threshold: usize,
+    /// Alignment detail computed for the top-k hits (`search.report` /
+    /// `--report`). `Score` by default — the report stage costs nothing
+    /// unless asked for.
+    pub report: ReportLevel,
+    /// Traceback DP cell budget per hit pair (`search.report_cell_cap`):
+    /// a pair whose full direction matrix would exceed it degrades to a
+    /// windowed re-run, then to coordinates-only (`docs/alignment.md`).
+    pub report_cell_cap: usize,
+    /// Karlin-Altschul search-space term `N` — the **whole** database's
+    /// residue count. `0` (default) means "this index is the whole
+    /// database" (use `index.total_residues`); cluster backends set it
+    /// from the `.pmeta` sidecar so partition e-values match a
+    /// whole-database daemon's exactly.
+    pub db_residues: u128,
 }
 
 impl SearchConfig {
@@ -235,8 +285,39 @@ impl Default for SearchConfig {
             handicap: Vec::new(),
             mode: SearchMode::default(),
             auto_fast_threshold: 50_000,
+            report: ReportLevel::default(),
+            report_cell_cap: 16_000_000,
+            db_residues: 0,
         }
     }
+}
+
+/// Per-hit alignment detail from the report stage (`--report
+/// coord|full`). Coordinates are 0-based half-open residue offsets;
+/// definitions and the worked example live in `docs/alignment.md`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HitAlignment {
+    pub q_start: usize,
+    pub q_end: usize,
+    pub s_start: usize,
+    pub s_end: usize,
+    /// Aligned query span / query length.
+    pub q_cov: f64,
+    /// Aligned subject span / subject length.
+    pub s_cov: f64,
+    /// Identical pairs / alignment columns; `None` below `Full` level or
+    /// when the cell cap degraded the pair to coordinates-only.
+    pub identity: Option<f64>,
+    /// Run-length M/I/D CIGAR; `None` below `Full` level or when capped.
+    pub cigar: Option<String>,
+    /// Karlin-Altschul normalized score, bits.
+    pub bitscore: f64,
+    /// Karlin-Altschul expect value against the whole database's residue
+    /// count.
+    pub evalue: f64,
+    /// True when the traceback cell cap forced coordinates-only output
+    /// at `Full` level.
+    pub capped: bool,
 }
 
 /// Per-query search outcome.
@@ -260,6 +341,12 @@ pub struct QueryResult {
     /// Funnel accounting (survivor fraction, seed hits, visited cells)
     /// when the search ran in fast mode; `None` on the exact path.
     pub prefilter: Option<PrefilterStats>,
+    /// Per-hit alignment detail, parallel to `hits`, when the search ran
+    /// at `Coord` or `Full` report level; `None` at `Score` level.
+    pub alignments: Option<Vec<HitAlignment>>,
+    /// Traceback accounting (pairs traced, cap degradations, DP cells)
+    /// when the report stage ran; `None` at `Score` level.
+    pub traceback: Option<TracebackStats>,
     /// Calibrated device simulation (when configured).
     pub sim: Option<SimReport>,
 }
@@ -443,10 +530,24 @@ impl<'a> SearchSession<'a> {
         mode: SearchMode,
         trace_ids: &[u64],
     ) -> anyhow::Result<Vec<QueryResult>> {
+        self.search_batch_report_traced(factory, queries, mode, self.config.report, trace_ids)
+    }
+
+    /// Like [`search_batch_traced`](Self::search_batch_traced) with a
+    /// per-batch report-level override (the daemon routes per-request
+    /// `fields` / `report`-op levels through this).
+    pub fn search_batch_report_traced(
+        &self,
+        factory: &dyn AlignerFactory,
+        queries: &[(String, Vec<u8>)],
+        mode: SearchMode,
+        report: ReportLevel,
+        trace_ids: &[u64],
+    ) -> anyhow::Result<Vec<QueryResult>> {
         let traces = self.resolve_traces(queries.len(), trace_ids);
         match self.resolve_mode(mode) {
-            SearchMode::Fast => self.search_batch_fast_traced(factory, queries, &traces),
-            _ => self.search_batch_exact_traced(factory, queries, &traces),
+            SearchMode::Fast => self.search_batch_fast_traced(factory, queries, report, &traces),
+            _ => self.search_batch_exact_traced(factory, queries, report, &traces),
         }
     }
 
@@ -459,13 +560,14 @@ impl<'a> SearchSession<'a> {
         queries: &[(String, Vec<u8>)],
     ) -> anyhow::Result<Vec<QueryResult>> {
         let traces = self.resolve_traces(queries.len(), &[]);
-        self.search_batch_exact_traced(factory, queries, &traces)
+        self.search_batch_exact_traced(factory, queries, self.config.report, &traces)
     }
 
     fn search_batch_exact_traced(
         &self,
         factory: &dyn AlignerFactory,
         queries: &[(String, Vec<u8>)],
+        report: ReportLevel,
         traces: &[u64],
     ) -> anyhow::Result<Vec<QueryResult>> {
         let ctxs = self.contexts(queries);
@@ -474,12 +576,33 @@ impl<'a> SearchSession<'a> {
             self.run_sharded(factory, &ctxs, traces, || TopKSink::new(self.config.top_k))?;
         let wall = timer.seconds();
         let total_qlen: usize = ctxs.iter().map(|c| c.len()).sum();
+        let leg_start = self.active_trace().map(|r| r.now_us());
         let mut out = Vec::with_capacity(ctxs.len());
-        for (ctx, (sink, stats)) in ctxs.iter().zip(merged) {
+        for (q, (ctx, (sink, stats))) in ctxs.iter().zip(merged).enumerate() {
             let hits = self.hits_from_pairs(&sink.finish());
-            out.push(self.assemble(factory, ctx, hits, Vec::new(), stats, None, wall, total_qlen));
+            let (alignments, traceback) =
+                self.report_stage(ctx, &hits, report, traces.get(q).copied().unwrap_or(0));
+            let mut r =
+                self.assemble(factory, ctx, hits, Vec::new(), stats, None, wall, total_qlen);
+            r.alignments = alignments;
+            r.traceback = traceback;
+            out.push(r);
         }
+        self.record_traceback_leg(report, leg_start, ctxs.len());
         Ok(out)
+    }
+
+    /// Record the batch-scoped `traceback_leg` span around the report
+    /// stage (no-op when tracing is off or the level is score-only).
+    fn record_traceback_leg(&self, report: ReportLevel, leg_start: Option<u64>, nq: usize) {
+        if report == ReportLevel::Score {
+            return;
+        }
+        if let (Some(r), Some(s0)) = (self.active_trace(), leg_start) {
+            r.record(
+                Span::new(0, "traceback_leg", s0, r.now_us().saturating_sub(s0)).items(nq),
+            );
+        }
     }
 
     /// The two-stage funnel: (1) the seeded prefilter screens every
@@ -497,13 +620,14 @@ impl<'a> SearchSession<'a> {
         queries: &[(String, Vec<u8>)],
     ) -> anyhow::Result<Vec<QueryResult>> {
         let traces = self.resolve_traces(queries.len(), &[]);
-        self.search_batch_fast_traced(factory, queries, &traces)
+        self.search_batch_fast_traced(factory, queries, self.config.report, &traces)
     }
 
     fn search_batch_fast_traced(
         &self,
         factory: &dyn AlignerFactory,
         queries: &[(String, Vec<u8>)],
+        report: ReportLevel,
         traces: &[u64],
     ) -> anyhow::Result<Vec<QueryResult>> {
         let ctxs = self.contexts(queries);
@@ -551,10 +675,13 @@ impl<'a> SearchSession<'a> {
             );
         }
         let total_qlen: usize = ctxs.iter().map(|c| c.len()).sum();
+        let leg_start = self.active_trace().map(|r| r.now_us());
         let mut out = Vec::with_capacity(ctxs.len());
         for (q, ctx) in ctxs.iter().enumerate() {
             let hits = self.hits_from_pairs(&ranked[q]);
-            out.push(self.assemble(
+            let (alignments, traceback) =
+                self.report_stage(ctx, &hits, report, traces.get(q).copied().unwrap_or(0));
+            let mut r = self.assemble(
                 factory,
                 ctx,
                 hits,
@@ -563,8 +690,12 @@ impl<'a> SearchSession<'a> {
                 Some(stats[q]),
                 wall,
                 total_qlen,
-            ));
+            );
+            r.alignments = alignments;
+            r.traceback = traceback;
+            out.push(r);
         }
+        self.record_traceback_leg(report, leg_start, ctxs.len());
         Ok(out)
     }
 
@@ -865,8 +996,83 @@ impl<'a> SearchSession<'a> {
             wall_seconds,
             rescore,
             prefilter,
+            alignments: None,
+            traceback: None,
             sim,
         }
+    }
+
+    /// The report stage: for every surviving top-k hit, re-align the
+    /// `(query, subject)` pair with the bounded-memory traceback kernel
+    /// and attach coordinates, coverage, identity, CIGAR and
+    /// Karlin-Altschul statistics. Runs strictly after sink merge, on
+    /// at most `top_k` pairs per query, so its cost is independent of
+    /// database size. `ReportLevel::Coord` runs the kernel with a zero
+    /// cell cap (linear-memory coordinate passes only, never a DP
+    /// matrix); `ReportLevel::Full` caps DP allocation at
+    /// `report_cell_cap` cells and degrades that pair to
+    /// coordinates-only (`capped: true`) when exceeded.
+    fn report_stage(
+        &self,
+        ctx: &QueryContext,
+        hits: &[Hit],
+        report: ReportLevel,
+        trace_id: u64,
+    ) -> (Option<Vec<HitAlignment>>, Option<TracebackStats>) {
+        if report == ReportLevel::Score {
+            return (None, None);
+        }
+        let cap = match report {
+            ReportLevel::Coord => 0,
+            _ => self.config.report_cell_cap,
+        };
+        let ka = KarlinParams::for_scoring(&self.scoring);
+        // e-values are computed against the *whole* database the
+        // operator searches, not whatever slice this process holds, so
+        // partitioned daemons report the same statistics as one big one
+        let n_residues = if self.config.db_residues > 0 {
+            self.config.db_residues
+        } else {
+            self.index.total_residues as u128
+        };
+        let mut stats = TracebackStats::default();
+        let mut out = Vec::with_capacity(hits.len());
+        for h in hits {
+            let t0 = self.active_trace().map(|r| r.now_us());
+            let subject = &self.index.seqs[h.seq_index].codes;
+            let a = traceback::traceback(&ctx.codes, subject, &self.scoring, cap);
+            debug_assert_eq!(
+                a.score, h.score,
+                "traceback score diverged from sink score for {} vs {}",
+                ctx.id, h.id
+            );
+            stats.pairs += 1;
+            stats.cells += a.cells;
+            if a.capped {
+                stats.capped += 1;
+            }
+            if let (Some(r), Some(s0)) = (self.active_trace(), t0) {
+                r.record(
+                    Span::new(trace_id, "alignment", s0, r.now_us().saturating_sub(s0))
+                        .items(a.cells as usize),
+                );
+            }
+            let coord_only = report == ReportLevel::Coord;
+            out.push(HitAlignment {
+                q_start: a.q_start,
+                q_end: a.q_end,
+                s_start: a.s_start,
+                s_end: a.s_end,
+                q_cov: a.query_cov(ctx.len()),
+                s_cov: a.subject_cov(h.len),
+                identity: if coord_only { None } else { a.identity() },
+                cigar: if coord_only { None } else { a.cigar },
+                bitscore: ka.bitscore(a.score),
+                evalue: ka.evalue(a.score, ctx.len(), n_residues),
+                capped: !coord_only && a.capped,
+            });
+        }
+        (Some(out), Some(stats))
     }
 
     /// Stage (ii)+(iii): scatter — each device host thread drains its own
@@ -1556,6 +1762,117 @@ mod tests {
         assert_eq!(SearchMode::parse("nope"), None);
         assert_eq!(SearchMode::parse(""), None);
         assert_eq!(SearchMode::default(), SearchMode::Exact);
+    }
+
+    #[test]
+    fn report_level_names_parse() {
+        for (s, r) in [
+            ("score", ReportLevel::Score),
+            ("coord", ReportLevel::Coord),
+            ("full", ReportLevel::Full),
+        ] {
+            assert_eq!(ReportLevel::parse(s), Some(r));
+            assert_eq!(r.name(), s);
+        }
+        assert_eq!(ReportLevel::parse("COORDS"), Some(ReportLevel::Coord));
+        assert_eq!(ReportLevel::parse("alignment"), Some(ReportLevel::Full));
+        assert_eq!(ReportLevel::parse("scores"), Some(ReportLevel::Score));
+        assert_eq!(ReportLevel::parse("nope"), None);
+        assert_eq!(ReportLevel::parse(""), None);
+        assert_eq!(ReportLevel::default(), ReportLevel::Score);
+    }
+
+    #[test]
+    fn report_levels_populate_alignments_consistently() {
+        let (idx, sc) = setup(120);
+        let mk = |report| {
+            SearchSession::new(
+                &idx,
+                sc.clone(),
+                SearchConfig {
+                    report,
+                    top_k: 5,
+                    sim: None,
+                    chunk: ChunkPlanConfig { target_padded_residues: 2048 },
+                    ..Default::default()
+                },
+            )
+        };
+        let factory = NativeFactory(EngineKind::InterSP);
+        // a planted self-hit so the top alignment is fully determined
+        let target = idx.n_seqs() / 2;
+        let queries = vec![("q".to_string(), idx.seqs[target].codes.clone())];
+
+        let score = &mk(ReportLevel::Score).search_batch(&factory, &queries).unwrap()[0];
+        assert!(score.alignments.is_none() && score.traceback.is_none());
+
+        let full = &mk(ReportLevel::Full).search_batch(&factory, &queries).unwrap()[0];
+        let aligns = full.alignments.as_ref().expect("full report attaches alignments");
+        assert_eq!(aligns.len(), full.hits.len());
+        let tb = full.traceback.expect("full report accounts traceback");
+        assert_eq!(tb.pairs, full.hits.len() as u64);
+        assert_eq!(tb.capped, 0);
+        assert!(tb.cells > 0);
+        // the self-hit aligns end to end with identity 1
+        let top = &aligns[0];
+        assert_eq!(full.hits[0].seq_index, target);
+        assert_eq!((top.q_start, top.q_end), (0, full.query_len));
+        assert_eq!(top.identity, Some(1.0));
+        assert_eq!((top.q_cov, top.s_cov), (1.0, 1.0));
+        assert!(top.bitscore > 0.0 && top.evalue.is_finite());
+        assert!(!top.capped);
+        for a in aligns {
+            assert!(a.cigar.is_some(), "full level carries CIGAR");
+        }
+
+        // coord level: same coordinates and statistics, no CIGAR/identity
+        let coord = &mk(ReportLevel::Coord).search_batch(&factory, &queries).unwrap()[0];
+        let coords = coord.alignments.as_ref().expect("coord report attaches alignments");
+        assert_eq!(coords.len(), aligns.len());
+        for (c, f) in coords.iter().zip(aligns) {
+            assert_eq!(
+                (c.q_start, c.q_end, c.s_start, c.s_end),
+                (f.q_start, f.q_end, f.s_start, f.s_end),
+                "coord level must agree with full level on endpoints"
+            );
+            assert!(c.cigar.is_none() && c.identity.is_none());
+            assert!(!c.capped, "coord level is never reported as capped");
+            assert_eq!(c.bitscore, f.bitscore);
+            assert_eq!(c.evalue, f.evalue);
+        }
+    }
+
+    #[test]
+    fn report_evalues_use_configured_database_residues() {
+        // a partition holding 1/Nth of the database must report the same
+        // e-value a whole-database daemon would, once db_residues is set
+        let (idx, sc) = setup(80);
+        let target = 7;
+        let queries = vec![("q".to_string(), idx.seqs[target].codes.clone())];
+        let factory = NativeFactory(EngineKind::InterSP);
+        let mk = |db_residues| {
+            SearchSession::new(
+                &idx,
+                sc.clone(),
+                SearchConfig {
+                    report: ReportLevel::Full,
+                    db_residues,
+                    top_k: 3,
+                    sim: None,
+                    ..Default::default()
+                },
+            )
+        };
+        let local = &mk(0).search_batch(&factory, &queries).unwrap()[0];
+        let scaled =
+            &mk(10 * idx.total_residues as u128).search_batch(&factory, &queries).unwrap()[0];
+        let (a, b) = (&local.alignments.as_ref().unwrap()[0], &scaled.alignments.as_ref().unwrap()[0]);
+        assert_eq!(a.bitscore, b.bitscore, "bitscore is independent of search space");
+        let ratio = b.evalue / a.evalue;
+        assert!((ratio - 10.0).abs() < 1e-6, "e-value scales with N: {ratio}");
+        // e-values are monotone non-increasing down the ranked hit list
+        let evs: Vec<f64> = local.alignments.as_ref().unwrap().iter().map(|h| h.evalue).collect();
+        assert!(evs.windows(2).all(|w| w[0] <= w[1]), "{evs:?}");
     }
 
     #[test]

@@ -49,6 +49,12 @@ pub struct PartitionMeta {
     /// `global[j]` = full-index position of this slice's `j`-th
     /// length-sorted sequence. Strictly ascending.
     pub global: Vec<usize>,
+    /// Total residue count of the **full** database — the Karlin-
+    /// Altschul search-space term `N`, so a partition backend computes
+    /// the same e-values as a whole-database daemon. `0` = unknown
+    /// (sidecar written before this field existed); backends then fall
+    /// back to their local residue count.
+    pub residues_total: u128,
 }
 
 impl PartitionMeta {
@@ -87,17 +93,20 @@ impl PartitionMeta {
     }
 
     /// Render as the sidecar's JSON line (generation as 16 hex digits,
-    /// the same spelling `stats` reports).
+    /// the same spelling `stats` reports; `residues_total` as a decimal
+    /// string — it is a u128, beyond the JSON number parser's f64 range).
     pub fn to_json(&self) -> String {
         let global: Vec<String> = self.global.iter().map(|g| g.to_string()).collect();
         format!(
             "{{\"v\":1,\"generation\":\"{:016x}\",\"global\":[{}],\
-             \"n_total\":{},\"partition\":{},\"partitions\":{}}}\n",
+             \"n_total\":{},\"partition\":{},\"partitions\":{},\
+             \"residues_total\":\"{}\"}}\n",
             self.generation,
             global.join(","),
             self.n_total,
             self.partition,
-            self.partitions
+            self.partitions,
+            self.residues_total
         )
     }
 
@@ -118,12 +127,24 @@ impl PartitionMeta {
                 e.as_usize().ok_or_else(|| anyhow::anyhow!("pmeta: non-integer global index"))
             })
             .collect::<anyhow::Result<Vec<usize>>>()?;
+        // optional (older sidecars lack it); a string to dodge f64 loss
+        let residues_total = match j.get("residues_total") {
+            None => 0,
+            Some(r) => {
+                let s = r
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("pmeta: residues_total must be a string"))?;
+                s.parse::<u128>()
+                    .map_err(|e| anyhow::anyhow!("pmeta: bad residues_total {s:?}: {e}"))?
+            }
+        };
         let meta = PartitionMeta {
             generation,
             partitions: j.usize_field("partitions")?,
             partition: j.usize_field("partition")?,
             n_total: j.usize_field("n_total")?,
             global,
+            residues_total,
         };
         meta.validate()?;
         Ok(meta)
@@ -252,12 +273,30 @@ mod tests {
             partition: 1,
             n_total: 480,
             global: vec![0, 2, 5, 479],
+            residues_total: 123_456_789_012_345_678_901_234_567u128,
         };
         meta.validate().unwrap();
         let parsed = PartitionMeta::parse(&meta.to_json()).unwrap();
         assert_eq!(parsed, meta);
         assert_eq!(parsed.generation_hex(), "deadbeef00420007");
         assert_eq!(PartitionMeta::sidecar_path("/tmp/db.idx.p1"), "/tmp/db.idx.p1.pmeta");
+    }
+
+    #[test]
+    fn pmeta_without_residues_total_parses_as_unknown() {
+        // sidecars written before the alignment-reporting tier
+        let parsed = PartitionMeta::parse(
+            "{\"v\":1,\"generation\":\"00000000000000ff\",\"global\":[0,1],\
+             \"n_total\":2,\"partition\":0,\"partitions\":1}",
+        )
+        .unwrap();
+        assert_eq!(parsed.residues_total, 0, "absent field means unknown");
+        assert!(PartitionMeta::parse(
+            "{\"v\":1,\"generation\":\"00000000000000ff\",\"global\":[],\
+             \"n_total\":0,\"partition\":0,\"partitions\":1,\
+             \"residues_total\":\"not-a-number\"}"
+        )
+        .is_err());
     }
 
     #[test]
@@ -268,6 +307,7 @@ mod tests {
             partition: 0,
             n_total: 10,
             global: vec![0, 3, 4],
+            residues_total: 500,
         };
         let mut bad = good.clone();
         bad.partition = 2;
@@ -298,6 +338,7 @@ mod tests {
             partition: 0,
             n_total: 3,
             global: vec![0, 1, 2],
+            residues_total: 99,
         };
         let path = std::env::temp_dir().join(format!(
             "swaphi-pmeta-test-{}.pmeta",

@@ -32,6 +32,7 @@ pub mod phi;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod server;
+pub mod stats;
 pub mod trace;
 pub mod tune;
 pub mod util;

@@ -114,6 +114,28 @@ impl PrefilterStats {
     }
 }
 
+/// Report-stage accounting for one query (or a batch): how many hit
+/// pairs went through the bounded-memory traceback, how many exceeded
+/// the cell cap and degraded to coordinates-only, and the DP cells the
+/// stage visited (full-matrix or linear passes alike).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TracebackStats {
+    /// Hit pairs re-aligned by the report stage.
+    pub pairs: u64,
+    /// Pairs whose DP matrix exceeded the cell cap (coordinates-only).
+    pub capped: u64,
+    /// DP cells visited by the stage.
+    pub cells: u64,
+}
+
+impl TracebackStats {
+    pub fn add(&mut self, other: TracebackStats) {
+        self.pairs += other.pairs;
+        self.capped += other.capped;
+        self.cells += other.cells;
+    }
+}
+
 /// Wall-clock timer.
 pub struct Timer {
     start: Instant,
@@ -579,6 +601,14 @@ mod tests {
         assert_eq!(p.survivors, 80);
         assert!((p.survivor_fraction() - 0.2).abs() < 1e-12);
         assert_eq!(PrefilterStats::default().survivor_fraction(), 0.0);
+    }
+
+    #[test]
+    fn traceback_stats_accumulate() {
+        let mut t = TracebackStats { pairs: 10, capped: 1, cells: 5_000 };
+        t.add(TracebackStats { pairs: 5, capped: 0, cells: 2_500 });
+        assert_eq!(t, TracebackStats { pairs: 15, capped: 1, cells: 7_500 });
+        assert_eq!(TracebackStats::default().pairs, 0);
     }
 
     #[test]

@@ -47,7 +47,9 @@ pub fn fnv1a_field(h: u64, bytes: &[u8]) -> u64 {
 /// Cache identity of one search. `query_digest` hashes the encoded query
 /// codes; `index_generation` fingerprints the loaded index;
 /// `params_fingerprint` covers scoring matrix/gaps, precision, engine,
-/// backend and the session top-k.
+/// backend, the session top-k, the resolved search mode and the report
+/// level — so score-only, coordinate and full-alignment results occupy
+/// disjoint cache universes and can never alias.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct CacheKey {
     pub query_digest: u64,
@@ -161,7 +163,13 @@ mod tests {
 
     fn hits(n: usize) -> Vec<HitPayload> {
         (0..n)
-            .map(|i| HitPayload { subject: format!("s{i}"), len: 10 * i, score: 100 - i as i32, seq: i })
+            .map(|i| HitPayload {
+                subject: format!("s{i}"),
+                len: 10 * i,
+                score: 100 - i as i32,
+                seq: i,
+                align: None,
+            })
             .collect()
     }
 
@@ -216,6 +224,28 @@ mod tests {
         c.insert(key(1), Q.to_vec(), hits(2), 7);
         assert_eq!(c.len(), 1);
         assert_eq!(c.get(&key(1), Q).unwrap(), hits(2));
+    }
+
+    #[test]
+    fn entries_carry_alignment_payloads_intact() {
+        use super::super::protocol::AlignPayload;
+        let mut c = ResultCache::new(4);
+        let mut hs = hits(2);
+        hs[0].align = Some(AlignPayload {
+            q_start: 0,
+            q_end: 40,
+            s_start: 3,
+            s_end: 43,
+            q_cov: 1.0,
+            s_cov: 0.8,
+            identity: Some(0.95),
+            cigar: Some("40M".to_string()),
+            bitscore: 42.5,
+            evalue: 1e-9,
+            capped: false,
+        });
+        c.insert(key(1), Q.to_vec(), hs.clone(), 7);
+        assert_eq!(c.get(&key(1), Q).unwrap(), hs);
     }
 
     #[test]

@@ -89,6 +89,22 @@ impl Client {
         deadline_ms: Option<u64>,
         mode: Option<crate::coordinator::SearchMode>,
     ) -> anyhow::Result<Json> {
+        self.search_fields(query_id, seq, top_k, deadline_ms, mode, None)
+    }
+
+    /// [`search_mode`](Self::search_mode) with a per-request report-level
+    /// override (the `fields` key: `None` uses the server's default,
+    /// `Some(Full)` asks for coordinates, CIGAR, identity, coverage and
+    /// e-values on every hit).
+    pub fn search_fields(
+        &mut self,
+        query_id: &str,
+        seq: &str,
+        top_k: Option<usize>,
+        deadline_ms: Option<u64>,
+        mode: Option<crate::coordinator::SearchMode>,
+        fields: Option<crate::coordinator::ReportLevel>,
+    ) -> anyhow::Result<Json> {
         let mut m = BTreeMap::new();
         m.insert("v".to_string(), Json::Num(protocol::VERSION as f64));
         m.insert("op".to_string(), Json::Str("search".to_string()));
@@ -102,6 +118,9 @@ impl Client {
         }
         if let Some(mode) = mode {
             m.insert("mode".to_string(), Json::Str(mode.name().to_string()));
+        }
+        if let Some(fields) = fields {
+            m.insert("fields".to_string(), Json::Str(fields.name().to_string()));
         }
         self.request_line(&Json::Obj(m).to_string())
     }

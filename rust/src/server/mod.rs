@@ -34,7 +34,9 @@ pub mod protocol;
 pub mod queue;
 
 use crate::align::Precision;
-use crate::coordinator::{AlignerFactory, DeviceSet, SearchConfig, SearchMode, SearchSession};
+use crate::coordinator::{
+    AlignerFactory, DeviceSet, HitAlignment, ReportLevel, SearchConfig, SearchMode, SearchSession,
+};
 use crate::db::chunk::plan_chunks_paired;
 use crate::db::index::Index;
 use crate::db::partition::PartitionMeta;
@@ -259,6 +261,12 @@ pub struct ServerMetrics {
     pub prefilter_survivors: Arc<Counter>,
     /// Requests whose end-to-end latency reached `slow_query_ms`.
     pub slow_queries: Arc<Counter>,
+    /// Report-stage accounting, accumulated across every query served
+    /// at `coord` or `full` report level: hit pairs traced back, pairs
+    /// that exceeded the cell cap, and DP cells the stage visited.
+    pub traceback_pairs: Arc<Counter>,
+    pub traceback_capped: Arc<Counter>,
+    pub traceback_cells: Arc<Counter>,
     batch_size: SharedHistogram,
     latency_us: SharedHistogram,
 }
@@ -292,6 +300,18 @@ impl ServerMetrics {
             "swaphi_slow_queries_total",
             "Requests at or over the slow-query latency threshold.",
         );
+        let traceback_pairs = registry.counter(
+            "swaphi_traceback_total",
+            "Hit pairs re-aligned by the report stage.",
+        );
+        let traceback_capped = registry.counter(
+            "swaphi_traceback_capped_total",
+            "Traceback pairs degraded to coordinates by the cell cap.",
+        );
+        let traceback_cells = registry.counter(
+            "swaphi_traceback_cells_total",
+            "DP cells visited by the report stage.",
+        );
         let batch_size = registry.histogram(
             "swaphi_batch_size",
             "Coalesced batch sizes (requests per batch).",
@@ -313,6 +333,9 @@ impl ServerMetrics {
             prefilter_candidates,
             prefilter_survivors,
             slow_queries,
+            traceback_pairs,
+            traceback_capped,
+            traceback_cells,
             batch_size,
             latency_us,
         }
@@ -396,6 +419,7 @@ fn params_fingerprint(
     scoring: &Scoring,
     precision: Precision,
     mode: SearchMode,
+    report: ReportLevel,
     top_k: usize,
     factory: &dyn AlignerFactory,
 ) -> u64 {
@@ -408,9 +432,31 @@ fn params_fingerprint(
     // an exact result under the same key, so the mode is part of the
     // params fingerprint (one fp per executable mode, see `Shared`)
     h = fnv1a_field(h, mode.name().as_bytes());
+    // likewise a score-only entry must never answer a request that asked
+    // for alignments (and vice versa): report levels never alias
+    h = fnv1a_field(h, report.name().as_bytes());
     h = fnv1a_field(h, factory.kind().name().as_bytes());
     h = fnv1a_field(h, factory.backend_name().as_bytes());
     fnv1a_field(h, &(top_k as u64).to_le_bytes())
+}
+
+/// The executable modes (auto resolves at admission) × report levels the
+/// cache distinguishes — one params fingerprint per cell.
+const FP_MODES: [SearchMode; 2] = [SearchMode::Exact, SearchMode::Fast];
+const FP_REPORTS: [ReportLevel; 3] =
+    [ReportLevel::Score, ReportLevel::Coord, ReportLevel::Full];
+
+fn fp_index(mode: SearchMode, report: ReportLevel) -> usize {
+    let m = match mode {
+        SearchMode::Fast => 1,
+        _ => 0,
+    };
+    let r = match report {
+        ReportLevel::Score => 0,
+        ReportLevel::Coord => 1,
+        ReportLevel::Full => 2,
+    };
+    m * FP_REPORTS.len() + r
 }
 
 // ---------------------------------------------------------------------
@@ -423,10 +469,11 @@ struct Shared {
     metrics: ServerMetrics,
     stop: AtomicBool,
     generation: u64,
-    /// Params fingerprints, one per *executable* mode (auto resolves at
-    /// admission): exact and fast results never share a cache key.
-    params_fp_exact: u64,
-    params_fp_fast: u64,
+    /// Params fingerprints, one per *executable* mode × report level
+    /// (auto resolves at admission): exact and fast results never share
+    /// a cache key, and neither do different report levels. Indexed by
+    /// [`fp_index`].
+    params_fps: [u64; FP_MODES.len() * FP_REPORTS.len()],
     /// Fleet-shape fingerprint recorded with every cache entry
     /// (groundwork for per-shard partial-score caching; lookups ignore
     /// it).
@@ -437,6 +484,9 @@ struct Shared {
     default_mode: SearchMode,
     /// What a request asking for `"auto"` runs (also pre-resolved).
     auto_mode: SearchMode,
+    /// The session's configured report level: what a request without a
+    /// `fields` key gets.
+    default_report: ReportLevel,
     /// The simulated coprocessor fleet the coalescer's session schedules
     /// onto — held here so the `stats` op can report per-device
     /// queue-depth/steal counters while the session lives in the
@@ -471,12 +521,15 @@ impl Shared {
         }
     }
 
-    /// The cache params-fingerprint for a resolved mode.
-    fn params_fp(&self, mode: SearchMode) -> u64 {
-        match mode {
-            SearchMode::Fast => self.params_fp_fast,
-            _ => self.params_fp_exact,
-        }
+    /// Resolve a request's `fields` key to the report level that will
+    /// execute (`None` runs the session default).
+    fn resolve_report(&self, req: Option<ReportLevel>) -> ReportLevel {
+        req.unwrap_or(self.default_report)
+    }
+
+    /// The cache params-fingerprint for a resolved (mode, report) cell.
+    fn params_fp(&self, mode: SearchMode, report: ReportLevel) -> u64 {
+        self.params_fps[fp_index(mode, report)]
     }
 
     /// The generation spelled on the wire (`hello`, `stats.backend`):
@@ -544,6 +597,12 @@ impl Server {
                 meta.global.len(),
                 index.n_seqs()
             );
+            // report-stage e-values must use the whole database's
+            // residue count, not this slice's, so a routed fleet's
+            // statistics match a single whole-database daemon exactly
+            if meta.residues_total > 0 {
+                search.db_residues = meta.residues_total;
+            }
         }
         // the daemon reports real hits/latency; per-request device
         // simulation is offline-analysis machinery, not serving work
@@ -558,20 +617,19 @@ impl Server {
         }
 
         let generation = index_generation(&index);
-        let params_fp_exact = params_fingerprint(
-            &scoring,
-            search.precision,
-            SearchMode::Exact,
-            search.top_k,
-            factory.as_ref(),
-        );
-        let params_fp_fast = params_fingerprint(
-            &scoring,
-            search.precision,
-            SearchMode::Fast,
-            search.top_k,
-            factory.as_ref(),
-        );
+        let mut params_fps = [0u64; FP_MODES.len() * FP_REPORTS.len()];
+        for mode in FP_MODES {
+            for report in FP_REPORTS {
+                params_fps[fp_index(mode, report)] = params_fingerprint(
+                    &scoring,
+                    search.precision,
+                    mode,
+                    report,
+                    search.top_k,
+                    factory.as_ref(),
+                );
+            }
+        }
         // auto resolves once against the loaded index: the threshold is
         // a property of the database, not of individual requests
         let auto_mode = if index.n_seqs() >= search.auto_fast_threshold {
@@ -616,12 +674,12 @@ impl Server {
             metrics: ServerMetrics::new(),
             stop: AtomicBool::new(false),
             generation,
-            params_fp_exact,
-            params_fp_fast,
+            params_fps,
             fleet_fp,
             session_top_k: search.top_k,
             default_mode,
             auto_mode,
+            default_report: search.report,
             devices,
             recorder,
             slow_log: Mutex::new(VecDeque::new()),
@@ -854,10 +912,11 @@ fn handle_search(req: protocol::SearchRequest, shared: &Shared, trace: u64) -> S
     let codes = crate::alphabet::encode(req.seq.as_bytes());
     let top_k = req.top_k.unwrap_or(shared.session_top_k).min(shared.session_top_k);
     let mode = shared.resolve_mode(req.mode);
+    let report = shared.resolve_report(req.fields);
     let key = CacheKey {
         query_digest: fnv1a(&codes),
         index_generation: shared.generation,
-        params_fingerprint: shared.params_fp(mode),
+        params_fingerprint: shared.params_fp(mode, report),
     };
 
     // bind the lookup so the cache guard drops before JSON serialization
@@ -886,6 +945,7 @@ fn handle_search(req: protocol::SearchRequest, shared: &Shared, trace: u64) -> S
         codes,
         top_k,
         mode,
+        report,
         cache_key: (shared.cfg.cache_entries > 0).then_some(key),
         deadline: now + Duration::from_millis(deadline_ms),
         enqueued: now,
@@ -989,25 +1049,33 @@ fn run_batch(
     shared.metrics.record_batch(live.len());
 
     // fast and exact requests run different pipelines (funnel vs full
-    // SW), so a mixed batch splits into per-mode groups. In practice a
-    // deployment sees one mode; the split is the correctness backstop
-    // for mixed clients — and it keeps the dedupe map mode-pure, so a
-    // fast result can never be replayed to an exact request.
-    let (fast, exact): (Vec<Pending>, Vec<Pending>) =
-        live.into_iter().partition(|p| p.mode == SearchMode::Fast);
-    for (mode, group) in [(SearchMode::Exact, exact), (SearchMode::Fast, fast)] {
-        if !group.is_empty() {
-            run_mode_group(shared, session, factory, mode, group);
+    // SW) and report levels attach different payloads, so a mixed batch
+    // splits into per-(mode, report) groups. In practice a deployment
+    // sees one cell; the split is the correctness backstop for mixed
+    // clients — and it keeps the dedupe map group-pure, so a fast or
+    // score-only result can never be replayed to a request that asked
+    // for something stronger.
+    let mut groups: Vec<((SearchMode, ReportLevel), Vec<Pending>)> = Vec::new();
+    for p in live {
+        let key = (p.mode, p.report);
+        match groups.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, g)) => g.push(p),
+            None => groups.push((key, vec![p])),
         }
+    }
+    for ((mode, report), group) in groups {
+        run_mode_group(shared, session, factory, mode, report, group);
     }
 }
 
-/// Dedupe, score and answer one same-mode group of live requests.
+/// Dedupe, score and answer one same-(mode, report) group of live
+/// requests.
 fn run_mode_group(
     shared: &Shared,
     session: &SearchSession<'_>,
     factory: &dyn AlignerFactory,
     mode: SearchMode,
+    report: ReportLevel,
     live: Vec<Pending>,
 ) {
     // the coalescing wait ends here: one "queued" span per request,
@@ -1040,7 +1108,7 @@ fn run_mode_group(
         slot.push(i);
     }
 
-    match session.search_batch_traced(factory, &uniq, mode, &traces) {
+    match session.search_batch_report_traced(factory, &uniq, mode, report, &traces) {
         Ok(results) => {
             if shared.recorder.is_enabled() {
                 let start = shared.recorder.us_of(batch_start);
@@ -1055,19 +1123,29 @@ fn run_mode_group(
                     shared.metrics.prefilter_candidates.add(pf.candidates);
                     shared.metrics.prefilter_survivors.add(pf.survivors);
                 }
+                if let Some(tb) = r.traceback {
+                    shared.metrics.traceback_pairs.add(tb.pairs);
+                    shared.metrics.traceback_capped.add(tb.capped);
+                    shared.metrics.traceback_cells.add(tb.cells);
+                }
             }
             let payloads: Vec<Vec<HitPayload>> = results
                 .iter()
                 .map(|r| {
                     r.hits
                         .iter()
-                        .map(|h| HitPayload {
+                        .enumerate()
+                        .map(|(i, h)| HitPayload {
                             subject: h.id.clone(),
                             len: h.len,
                             score: h.score,
                             // rebased before the hit is cached or crosses
                             // the wire: `seq` is always a global id
                             seq: shared.global_seq(h.seq_index),
+                            align: r
+                                .alignments
+                                .as_ref()
+                                .map(|aligns| align_payload(&aligns[i])),
                         })
                         .collect()
                 })
@@ -1123,6 +1201,25 @@ fn run_mode_group(
                 ));
             }
         }
+    }
+}
+
+/// One coordinator alignment, recast as the wire shape. Field-for-field:
+/// the protocol payload carries exactly what the report stage computed,
+/// so cached and freshly-computed responses serialize identically.
+fn align_payload(a: &HitAlignment) -> protocol::AlignPayload {
+    protocol::AlignPayload {
+        q_start: a.q_start,
+        q_end: a.q_end,
+        s_start: a.s_start,
+        s_end: a.s_end,
+        q_cov: a.q_cov,
+        s_cov: a.s_cov,
+        identity: a.identity,
+        cigar: a.cigar.clone(),
+        bitscore: a.bitscore,
+        evalue: a.evalue,
+        capped: a.capped,
     }
 }
 
@@ -1310,6 +1407,15 @@ fn stats_json(shared: &Shared) -> Json {
         d.insert("rescore_us".to_string(), summary_json(re));
         s.insert("funnel_legs".to_string(), Json::Obj(d));
     }
+    // report-stage accounting (additive, PR 9): cumulative traceback
+    // work across every coord/full-level query served
+    {
+        let mut tb = BTreeMap::new();
+        tb.insert("pairs".to_string(), Json::Num(m.traceback_pairs.get() as f64));
+        tb.insert("capped".to_string(), Json::Num(m.traceback_capped.get() as f64));
+        tb.insert("cells".to_string(), Json::Num(m.traceback_cells.get() as f64));
+        s.insert("traceback".to_string(), Json::Obj(tb));
+    }
     s.insert(
         "index_generation".to_string(),
         Json::Str(format!("{:016x}", shared.generation)),
@@ -1399,18 +1505,41 @@ mod tests {
         use crate::coordinator::NativeFactory;
         let sc = Scoring::swaphi_default();
         let sp = NativeFactory(EngineKind::InterSP);
-        let base = params_fingerprint(&sc, Precision::Auto, SearchMode::Exact, 10, &sp);
-        assert_eq!(base, params_fingerprint(&sc, Precision::Auto, SearchMode::Exact, 10, &sp));
-        assert_ne!(base, params_fingerprint(&sc, Precision::I32, SearchMode::Exact, 10, &sp));
-        assert_ne!(base, params_fingerprint(&sc, Precision::Auto, SearchMode::Exact, 11, &sp));
+        let fp = |sc: &Scoring, pr, mode, report, k, f: &NativeFactory| {
+            params_fingerprint(sc, pr, mode, report, k, f)
+        };
+        let base = fp(&sc, Precision::Auto, SearchMode::Exact, ReportLevel::Score, 10, &sp);
+        assert_eq!(base, fp(&sc, Precision::Auto, SearchMode::Exact, ReportLevel::Score, 10, &sp));
+        assert_ne!(base, fp(&sc, Precision::I32, SearchMode::Exact, ReportLevel::Score, 10, &sp));
+        assert_ne!(base, fp(&sc, Precision::Auto, SearchMode::Exact, ReportLevel::Score, 11, &sp));
         assert_ne!(
             base,
-            params_fingerprint(&sc, Precision::Auto, SearchMode::Exact, 10, &NativeFactory(EngineKind::InterQP))
+            fp(
+                &sc,
+                Precision::Auto,
+                SearchMode::Exact,
+                ReportLevel::Score,
+                10,
+                &NativeFactory(EngineKind::InterQP)
+            )
         );
         // heuristic-filtered results must never alias exact ones
-        assert_ne!(base, params_fingerprint(&sc, Precision::Auto, SearchMode::Fast, 10, &sp));
+        assert_ne!(base, fp(&sc, Precision::Auto, SearchMode::Fast, ReportLevel::Score, 10, &sp));
         let pam = Scoring::new("PAM250", 10, 2).unwrap();
-        assert_ne!(base, params_fingerprint(&pam, Precision::Auto, SearchMode::Exact, 10, &sp));
+        assert_ne!(base, fp(&pam, Precision::Auto, SearchMode::Exact, ReportLevel::Score, 10, &sp));
+        // report levels never alias: every (mode, report) matrix cell is
+        // a distinct cache universe
+        let mut cells = Vec::new();
+        for mode in FP_MODES {
+            for report in FP_REPORTS {
+                cells.push(fp(&sc, Precision::Auto, mode, report, 10, &sp));
+            }
+        }
+        for i in 0..cells.len() {
+            for j in (i + 1)..cells.len() {
+                assert_ne!(cells[i], cells[j], "fingerprint cells {i} and {j} alias");
+            }
+        }
     }
 
     #[test]

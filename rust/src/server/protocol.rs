@@ -7,7 +7,7 @@
 //! tolerant of unknown fields, so additive protocol evolution does not
 //! break older servers.
 
-use crate::coordinator::SearchMode;
+use crate::coordinator::{ReportLevel, SearchMode};
 use crate::trace::trace_id_hex;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -76,6 +76,12 @@ pub struct SearchRequest {
     /// uses the server session's configured default. Fast and exact
     /// results are cached under distinct keys, so they never alias.
     pub mode: Option<SearchMode>,
+    /// Report-level override (`"score"` / `"coord"` / `"full"`); `None`
+    /// uses the server session's configured default. Like `mode`, each
+    /// level caches under its own key, so levels never alias. The
+    /// `op = "report"` convenience parses to a search whose `fields`
+    /// defaults to `"full"`.
+    pub fields: Option<ReportLevel>,
 }
 
 /// Parse one request line. The error carries the code the reply must use.
@@ -111,7 +117,7 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
             };
             Ok(Request::Trace { id, n })
         }
-        "search" => {
+        op @ ("search" | "report") => {
             let seq = j
                 .get("query")
                 .and_then(Json::as_str)
@@ -145,6 +151,20 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
                         })?,
                 ),
             };
+            let mut fields = match j.get("fields") {
+                None => None,
+                Some(f) => Some(
+                    f.as_str()
+                        .and_then(ReportLevel::parse)
+                        .ok_or_else(|| {
+                            ProtoError::bad(format!("unknown fields {f} (score|coord|full)"))
+                        })?,
+                ),
+            };
+            // `report` is `search` with `fields` defaulting to "full"
+            if op == "report" && fields.is_none() {
+                fields = Some(ReportLevel::Full);
+            }
             Ok(Request::Search(SearchRequest {
                 id,
                 query_id: j
@@ -156,16 +176,17 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
                 top_k,
                 deadline_ms,
                 mode,
+                fields,
             }))
         }
         other => Err(ProtoError::bad(format!(
-            "unknown op {other:?} (search|ping|stats|metrics|trace|hello)"
+            "unknown op {other:?} (search|report|ping|stats|metrics|trace|hello)"
         ))),
     }
 }
 
 /// One ranked hit as it crosses the wire (and as the cache stores it).
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct HitPayload {
     pub subject: String,
     pub len: usize,
@@ -176,6 +197,33 @@ pub struct HitPayload {
     /// merge tie-break (score desc, `seq` asc) reproduces the
     /// single-process ranking byte for byte.
     pub seq: usize,
+    /// Alignment detail attached by the report stage (`fields` at
+    /// `coord` or `full`); absent on score-only responses. Coordinates
+    /// are query/subject-local — partition daemons' subject coordinates
+    /// need no rebasing (each subject's residues are its own), so the
+    /// payload crosses the router untouched.
+    pub align: Option<AlignPayload>,
+}
+
+/// The `align` object of one wire hit — see `docs/alignment.md` for the
+/// field semantics and `docs/protocol.md` for the wire contract.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AlignPayload {
+    pub q_start: usize,
+    pub q_end: usize,
+    pub s_start: usize,
+    pub s_end: usize,
+    pub q_cov: f64,
+    pub s_cov: f64,
+    /// Present at `full` level only (needs the traced path).
+    pub identity: Option<f64>,
+    /// Present at `full` level only.
+    pub cigar: Option<String>,
+    pub bitscore: f64,
+    pub evalue: f64,
+    /// Serialized only when `true` — the pair exceeded the traceback
+    /// cell cap and degraded to coordinates-only.
+    pub capped: bool,
 }
 
 fn obj(pairs: Vec<(&str, Json)>) -> Json {
@@ -238,22 +286,48 @@ pub fn search_response_partial(
     }
     pairs.push((
         "hits",
-        Json::Arr(
-            hits.iter()
-                .enumerate()
-                .map(|(rank, h)| {
-                    obj(vec![
-                        ("rank", Json::Num((rank + 1) as f64)),
-                        ("subject", Json::Str(h.subject.clone())),
-                        ("len", Json::Num(h.len as f64)),
-                        ("score", Json::Num(h.score as f64)),
-                        ("seq", Json::Num(h.seq as f64)),
-                    ])
-                })
-                .collect(),
-        ),
+        Json::Arr(hits.iter().enumerate().map(|(rank, h)| hit_json(rank, h)).collect()),
     ));
     obj(pairs).to_string()
+}
+
+/// The one hit serializer every response path shares — single-daemon
+/// and router-merged responses must stay byte-identical.
+fn hit_json(rank: usize, h: &HitPayload) -> Json {
+    let mut pairs = vec![
+        ("rank", Json::Num((rank + 1) as f64)),
+        ("subject", Json::Str(h.subject.clone())),
+        ("len", Json::Num(h.len as f64)),
+        ("score", Json::Num(h.score as f64)),
+        ("seq", Json::Num(h.seq as f64)),
+    ];
+    if let Some(a) = &h.align {
+        pairs.push(("align", align_json(a)));
+    }
+    obj(pairs)
+}
+
+fn align_json(a: &AlignPayload) -> Json {
+    let mut pairs = vec![
+        ("q_start", Json::Num(a.q_start as f64)),
+        ("q_end", Json::Num(a.q_end as f64)),
+        ("s_start", Json::Num(a.s_start as f64)),
+        ("s_end", Json::Num(a.s_end as f64)),
+        ("q_cov", Json::Num(a.q_cov)),
+        ("s_cov", Json::Num(a.s_cov)),
+        ("bitscore", Json::Num(a.bitscore)),
+        ("evalue", Json::Num(a.evalue)),
+    ];
+    if let Some(i) = a.identity {
+        pairs.push(("identity", Json::Num(i)));
+    }
+    if let Some(c) = &a.cigar {
+        pairs.push(("cigar", Json::Str(c.clone())));
+    }
+    if a.capped {
+        pairs.push(("capped", Json::Bool(true)));
+    }
+    obj(pairs)
 }
 
 /// Hello (handshake) reply: which database generation this daemon
@@ -348,9 +422,31 @@ pub fn hits_of_response(resp: &Json) -> anyhow::Result<Vec<HitPayload>> {
                     .map(|f| f as i32)
                     .ok_or_else(|| anyhow::anyhow!("missing number field \"score\""))?,
                 seq: h.usize_field("seq")?,
+                align: h.get("align").map(align_of_json).transpose()?,
             })
         })
         .collect()
+}
+
+fn align_of_json(a: &Json) -> anyhow::Result<AlignPayload> {
+    let f64_field = |key: &str| {
+        a.get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("missing number field {key:?} in align"))
+    };
+    Ok(AlignPayload {
+        q_start: a.usize_field("q_start")?,
+        q_end: a.usize_field("q_end")?,
+        s_start: a.usize_field("s_start")?,
+        s_end: a.usize_field("s_end")?,
+        q_cov: f64_field("q_cov")?,
+        s_cov: f64_field("s_cov")?,
+        identity: a.get("identity").and_then(Json::as_f64),
+        cigar: a.get("cigar").and_then(Json::as_str).map(str::to_string),
+        bitscore: f64_field("bitscore")?,
+        evalue: f64_field("evalue")?,
+        capped: a.get("capped").and_then(Json::as_bool).unwrap_or(false),
+    })
 }
 
 /// The partitions a degraded (partial) response is missing; empty for a
@@ -409,6 +505,107 @@ mod tests {
     }
 
     #[test]
+    fn parses_fields_field_and_report_op() {
+        for (spelling, expect) in [
+            ("score", ReportLevel::Score),
+            ("coord", ReportLevel::Coord),
+            ("full", ReportLevel::Full),
+        ] {
+            let r = parse_request(&format!(
+                r#"{{"v":1,"op":"search","query":"MKT","fields":"{spelling}"}}"#
+            ))
+            .unwrap();
+            match r {
+                Request::Search(s) => assert_eq!(s.fields, Some(expect), "{spelling}"),
+                other => panic!("{other:?}"),
+            }
+        }
+        // absent fields defers to the server session's default
+        match parse_request(r#"{"v":1,"op":"search","query":"MKT"}"#).unwrap() {
+            Request::Search(s) => assert_eq!(s.fields, None),
+            other => panic!("{other:?}"),
+        }
+        // op=report is a search whose fields default to full
+        match parse_request(r#"{"v":1,"op":"report","query":"MKT","top_k":4}"#).unwrap() {
+            Request::Search(s) => {
+                assert_eq!(s.fields, Some(ReportLevel::Full));
+                assert_eq!(s.top_k, Some(4));
+            }
+            other => panic!("{other:?}"),
+        }
+        // an explicit fields key on a report op is honored
+        match parse_request(r#"{"v":1,"op":"report","query":"MKT","fields":"coord"}"#).unwrap() {
+            Request::Search(s) => assert_eq!(s.fields, Some(ReportLevel::Coord)),
+            other => panic!("{other:?}"),
+        }
+        // strict validation names the valid set
+        let err =
+            parse_request(r#"{"v":1,"op":"search","query":"M","fields":"verbose"}"#).unwrap_err();
+        assert_eq!(err.code, E_BAD_REQUEST);
+        assert!(err.message.contains("score|coord|full"), "{}", err.message);
+        let err =
+            parse_request(r#"{"v":1,"op":"report","query":"M","fields":7}"#).unwrap_err();
+        assert_eq!(err.code, E_BAD_REQUEST);
+    }
+
+    fn sample_align(full: bool) -> AlignPayload {
+        AlignPayload {
+            q_start: 2,
+            q_end: 40,
+            s_start: 5,
+            s_end: 44,
+            q_cov: 0.95,
+            s_cov: 0.78,
+            identity: if full { Some(0.8421052631578947) } else { None },
+            cigar: if full { Some("30M1I7M1D1M".to_string()) } else { None },
+            bitscore: 34.60546875,
+            evalue: 1.25e-4,
+            capped: false,
+        }
+    }
+
+    #[test]
+    fn align_payloads_round_trip_through_response() {
+        let hits = vec![
+            HitPayload {
+                subject: "s1".into(),
+                len: 50,
+                score: 80,
+                seq: 3,
+                align: Some(sample_align(true)),
+            },
+            HitPayload {
+                subject: "s2".into(),
+                len: 44,
+                score: 61,
+                seq: 9,
+                align: Some(sample_align(false)),
+            },
+            HitPayload {
+                subject: "s3".into(),
+                len: 10,
+                score: 12,
+                seq: 12,
+                align: Some(AlignPayload { capped: true, ..sample_align(false) }),
+            },
+        ];
+        let line = search_response(None, "q", false, &hits, 0);
+        let resp = Json::parse(&line).unwrap();
+        assert_eq!(hits_of_response(&resp).unwrap(), hits);
+        let arr = resp.get("hits").and_then(Json::as_arr).unwrap();
+        let full = arr[0].get("align").unwrap();
+        assert!(full.get("identity").is_some() && full.get("cigar").is_some());
+        assert!(full.get("capped").is_none(), "capped serialized only when true");
+        let coord = arr[1].get("align").unwrap();
+        assert!(coord.get("identity").is_none() && coord.get("cigar").is_none());
+        assert_eq!(arr[2].get("align").unwrap().get("capped"), Some(&Json::Bool(true)));
+        // re-serializing the parsed payloads is byte-stable — the router
+        // relies on this for single-process-identical merged responses
+        let again = search_response(None, "q", false, &hits_of_response(&resp).unwrap(), 0);
+        assert_eq!(line, again);
+    }
+
+    #[test]
     fn defaults_and_unknown_fields_tolerated() {
         let r = parse_request(r#"{"v":1,"op":"search","query":"MW","future_field":42}"#).unwrap();
         match r {
@@ -444,8 +641,8 @@ mod tests {
     #[test]
     fn responses_are_single_json_lines() {
         let hits = vec![
-            HitPayload { subject: "s1".into(), len: 40, score: 55, seq: 3 },
-            HitPayload { subject: "s\"2".into(), len: 7, score: -3, seq: 0 },
+            HitPayload { subject: "s1".into(), len: 40, score: 55, seq: 3, align: None },
+            HitPayload { subject: "s\"2".into(), len: 7, score: -3, seq: 0, align: None },
         ];
         for line in [
             search_response(Some("r1"), "q", true, &hits, 7),
@@ -482,7 +679,7 @@ mod tests {
 
     #[test]
     fn partial_fields_appear_only_when_degraded() {
-        let hits = vec![HitPayload { subject: "a".into(), len: 10, score: 12, seq: 5 }];
+        let hits = vec![HitPayload { subject: "a".into(), len: 10, score: 12, seq: 5, align: None }];
         let complete = search_response_partial(None, "q", false, &hits, 0, &[]);
         assert_eq!(
             complete,
@@ -534,8 +731,8 @@ mod tests {
     #[test]
     fn hits_round_trip_through_response() {
         let hits = vec![
-            HitPayload { subject: "a".into(), len: 10, score: 12, seq: 31 },
-            HitPayload { subject: "b".into(), len: 20, score: -4, seq: 7 },
+            HitPayload { subject: "a".into(), len: 10, score: 12, seq: 31, align: None },
+            HitPayload { subject: "b".into(), len: 20, score: -4, seq: 7, align: None },
         ];
         let resp = Json::parse(&search_response(None, "q", false, &hits, 0)).unwrap();
         assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));

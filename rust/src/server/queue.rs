@@ -16,7 +16,7 @@
 //! file, but across connections.
 
 use super::cache::CacheKey;
-use crate::coordinator::SearchMode;
+use crate::coordinator::{ReportLevel, SearchMode};
 use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::sync::{Condvar, Mutex};
@@ -36,6 +36,10 @@ pub struct Pending {
     /// `auto` against the index size, so the batch runner and the cache
     /// key agree on what actually executes).
     pub mode: SearchMode,
+    /// Resolved report level: how much per-hit alignment detail this
+    /// request wants back (folded into the cache key so levels never
+    /// alias).
+    pub report: ReportLevel,
     /// Cache slot to fill after scoring (None when the cache is off).
     pub cache_key: Option<CacheKey>,
     /// Drop (with `deadline_exceeded`) if not scheduled by this instant.
@@ -151,6 +155,7 @@ mod tests {
                 codes: vec![1, 2, 3],
                 top_k: 5,
                 mode: SearchMode::Exact,
+                report: ReportLevel::Score,
                 cache_key: None,
                 deadline: now + Duration::from_secs(60),
                 enqueued: now,

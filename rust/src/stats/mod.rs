@@ -1,0 +1,222 @@
+//! Alignment statistics: Karlin-Altschul e-values and bit scores.
+//!
+//! Raw Smith-Waterman scores are matrix- and gap-penalty-specific; the
+//! reporting tier normalizes them the way BLAST does, with the
+//! Karlin-Altschul parameters λ and K:
+//!
+//! ```text
+//! bitscore S' = (λ·S − ln K) / ln 2
+//! E-value  E  = K · m · N · e^(−λ·S)
+//! ```
+//!
+//! where `S` is the raw score, `m` the query length in residues and `N`
+//! the **total residue count of the database** (no edge-effect /
+//! finite-size correction — the term is documented in
+//! `docs/alignment.md` so clients can reproduce it exactly). In cluster
+//! mode every partition backend uses the *whole* database's residue
+//! count (carried by the `.pmeta` sidecar), so routed reports are
+//! byte-identical to a single whole-database daemon.
+//!
+//! λ/K cannot be derived analytically for gapped alignment; like the
+//! NCBI toolkit (`blast_stat.c`) we ship a table of published values
+//! per (matrix, gap-open, gap-extend) plus the analytic ungapped
+//! limits, and fall back to the **nearest** gap parameterization of the
+//! same matrix (by `|Δ(open+extend)|`, ties resolved toward the smaller
+//! — more conservative — λ) when the exact pair is not tabulated. The
+//! lookup is cheap and deterministic; callers resolve it once per
+//! (matrix × gap-params) and reuse the result for every hit.
+
+use crate::matrices::Scoring;
+
+/// Karlin-Altschul parameters for one scoring scheme.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KarlinParams {
+    /// Scale parameter λ (nats per score unit).
+    pub lambda: f64,
+    /// Search-space constant K.
+    pub k: f64,
+    /// Whether the (matrix, open, extend) triple was tabulated exactly
+    /// (false: nearest-neighbour fallback, documented in docs/alignment.md).
+    pub exact: bool,
+}
+
+/// Published gapped (λ, K) values, NCBI `blast_stat.c` style:
+/// `(matrix, gap_open, gap_extend, lambda, k)`. Gap of length g costs
+/// `open + g·extend`, matching [`Scoring`]'s convention.
+const GAPPED: &[(&str, i32, i32, f64, f64)] = &[
+    ("BLOSUM62", 11, 2, 0.297, 0.082),
+    ("BLOSUM62", 10, 2, 0.291, 0.075),
+    ("BLOSUM62", 9, 2, 0.279, 0.058),
+    ("BLOSUM62", 8, 2, 0.264, 0.045),
+    ("BLOSUM62", 7, 2, 0.239, 0.027),
+    ("BLOSUM62", 12, 1, 0.283, 0.059),
+    ("BLOSUM62", 11, 1, 0.267, 0.041),
+    ("BLOSUM62", 10, 1, 0.243, 0.024),
+    ("BLOSUM45", 13, 3, 0.207, 0.049),
+    ("BLOSUM45", 12, 3, 0.199, 0.039),
+    ("BLOSUM45", 11, 3, 0.190, 0.031),
+    ("BLOSUM45", 16, 2, 0.210, 0.051),
+    ("BLOSUM45", 15, 2, 0.203, 0.041),
+    ("BLOSUM45", 14, 2, 0.195, 0.032),
+    ("BLOSUM45", 19, 1, 0.205, 0.040),
+    ("BLOSUM45", 18, 1, 0.198, 0.032),
+    ("BLOSUM50", 13, 3, 0.212, 0.063),
+    ("BLOSUM50", 12, 3, 0.206, 0.055),
+    ("BLOSUM50", 16, 2, 0.215, 0.066),
+    ("BLOSUM50", 15, 2, 0.210, 0.058),
+    ("BLOSUM50", 14, 2, 0.202, 0.045),
+    ("BLOSUM50", 19, 1, 0.212, 0.057),
+    ("BLOSUM50", 18, 1, 0.207, 0.050),
+    ("BLOSUM80", 25, 2, 0.342, 0.170),
+    ("BLOSUM80", 13, 2, 0.336, 0.150),
+    ("BLOSUM80", 9, 2, 0.319, 0.110),
+    ("BLOSUM80", 8, 2, 0.308, 0.090),
+    ("BLOSUM80", 11, 1, 0.314, 0.095),
+    ("BLOSUM80", 10, 1, 0.299, 0.071),
+    ("PAM250", 15, 3, 0.205, 0.049),
+    ("PAM250", 14, 3, 0.200, 0.043),
+    ("PAM250", 17, 2, 0.204, 0.047),
+    ("PAM250", 16, 2, 0.198, 0.038),
+    ("PAM250", 21, 1, 0.205, 0.045),
+    ("PAM250", 20, 1, 0.199, 0.037),
+];
+
+/// Analytic ungapped limits per matrix: `(matrix, lambda, k)`. The
+/// terminal fallback when a matrix has no tabulated gapped entry.
+const UNGAPPED: &[(&str, f64, f64)] = &[
+    ("BLOSUM45", 0.2291, 0.0924),
+    ("BLOSUM50", 0.2318, 0.112),
+    ("BLOSUM62", 0.3176, 0.134),
+    ("BLOSUM80", 0.3430, 0.177),
+    ("PAM250", 0.2252, 0.0868),
+];
+
+impl KarlinParams {
+    /// Resolve (λ, K) for a scoring scheme: exact tabulated gapped
+    /// entry, else the nearest gapped parameterization of the same
+    /// matrix, else the matrix's ungapped limit, else (unknown matrix —
+    /// unreachable for built-ins) the BLOSUM62 ungapped limit.
+    pub fn for_scoring(sc: &Scoring) -> KarlinParams {
+        Self::lookup(sc.name, sc.gap_open, sc.gap_extend)
+    }
+
+    pub fn lookup(matrix: &str, gap_open: i32, gap_extend: i32) -> KarlinParams {
+        if let Some(&(_, _, _, lambda, k)) = GAPPED
+            .iter()
+            .find(|&&(m, o, e, _, _)| m == matrix && o == gap_open && e == gap_extend)
+        {
+            return KarlinParams { lambda, k, exact: true };
+        }
+        // nearest same-matrix gapped entry by total per-gap cost delta;
+        // ties break toward the smaller (more conservative) lambda
+        let want = gap_open + gap_extend;
+        let mut best: Option<(i32, f64, f64)> = None;
+        for &(m, o, e, lambda, k) in GAPPED {
+            if m != matrix {
+                continue;
+            }
+            let d = (o + e - want).abs();
+            let better = match best {
+                None => true,
+                Some((bd, bl, _)) => d < bd || (d == bd && lambda < bl),
+            };
+            if better {
+                best = Some((d, lambda, k));
+            }
+        }
+        if let Some((_, lambda, k)) = best {
+            return KarlinParams { lambda, k, exact: false };
+        }
+        let (lambda, k) = UNGAPPED
+            .iter()
+            .find(|&&(m, _, _)| m == matrix)
+            .or_else(|| UNGAPPED.iter().find(|&&(m, _, _)| m == "BLOSUM62"))
+            .map(|&(_, l, k)| (l, k))
+            .expect("BLOSUM62 ungapped entry exists");
+        KarlinParams { lambda, k, exact: false }
+    }
+
+    /// Normalized bit score: `(λ·S − ln K) / ln 2`.
+    pub fn bitscore(&self, score: i32) -> f64 {
+        (self.lambda * score as f64 - self.k.ln()) / std::f64::consts::LN_2
+    }
+
+    /// Karlin-Altschul expect value: `K · m · N · e^(−λ·S)` with `m` the
+    /// query length and `n_residues` the database's total residue count
+    /// (no edge correction). Monotone decreasing in `score`.
+    pub fn evalue(&self, score: i32, qlen: usize, n_residues: u128) -> f64 {
+        self.k * qlen as f64 * n_residues as f64 * (-self.lambda * score as f64).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn swaphi_default_is_tabulated_exactly() {
+        let p = KarlinParams::for_scoring(&Scoring::swaphi_default());
+        assert!(p.exact);
+        assert_eq!(p.lambda, 0.291);
+        assert_eq!(p.k, 0.075);
+        let b = KarlinParams::for_scoring(&Scoring::blast_default());
+        assert!(b.exact);
+        assert_eq!(b.lambda, 0.267);
+    }
+
+    #[test]
+    fn every_builtin_matrix_resolves() {
+        for name in crate::matrices::MATRIX_NAMES {
+            let p = KarlinParams::lookup(name, 10, 2);
+            assert!(p.lambda > 0.0 && p.k > 0.0, "{name}");
+        }
+    }
+
+    #[test]
+    fn fallback_picks_nearest_gap_cost() {
+        // BLOSUM62 13+2k is untabulated; nearest by open+extend is 11+2k
+        // (|15-13|=2) over 12+1k (|15-13|=2 too) — tie resolves to the
+        // smaller lambda, 12+1k's 0.283
+        let p = KarlinParams::lookup("BLOSUM62", 13, 2);
+        assert!(!p.exact);
+        assert_eq!(p.lambda, 0.283);
+        // far off the table still lands on a same-matrix entry
+        let q = KarlinParams::lookup("BLOSUM45", 100, 50);
+        assert!(!q.exact);
+        assert!(q.lambda > 0.0);
+    }
+
+    #[test]
+    fn unknown_matrix_falls_back_to_blosum62_ungapped() {
+        let p = KarlinParams::lookup("NOSUCH99", 10, 2);
+        assert!(!p.exact);
+        assert_eq!(p.lambda, 0.3176);
+        assert_eq!(p.k, 0.134);
+    }
+
+    #[test]
+    fn bitscore_and_evalue_monotone_in_score() {
+        let p = KarlinParams::for_scoring(&Scoring::swaphi_default());
+        let mut last_bits = f64::NEG_INFINITY;
+        let mut last_e = f64::INFINITY;
+        for s in [0, 10, 50, 100, 500, 2000] {
+            let bits = p.bitscore(s);
+            let e = p.evalue(s, 200, 1_000_000);
+            assert!(bits > last_bits, "bitscore must increase with score");
+            assert!(e < last_e, "e-value must decrease with score");
+            assert!(e.is_finite() && e >= 0.0);
+            last_bits = bits;
+            last_e = e;
+        }
+    }
+
+    #[test]
+    fn evalue_scales_linearly_with_search_space() {
+        let p = KarlinParams::for_scoring(&Scoring::swaphi_default());
+        let e1 = p.evalue(100, 150, 1_000_000);
+        let e2 = p.evalue(100, 150, 2_000_000);
+        let eq = p.evalue(100, 300, 1_000_000);
+        assert!((e2 / e1 - 2.0).abs() < 1e-9);
+        assert!((eq / e1 - 2.0).abs() < 1e-9);
+    }
+}

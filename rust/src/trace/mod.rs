@@ -41,7 +41,7 @@ pub struct Span {
     /// or 0 for batch-scoped spans.
     pub trace: u64,
     /// Span kind: `request`, `queued`, `batch`, `device`, `chunk`,
-    /// `prefilter_leg`, `rescore_leg`.
+    /// `prefilter_leg`, `rescore_leg`, `traceback_leg`, `alignment`.
     pub name: &'static str,
     /// Start, microseconds since the recorder's epoch (monotonic).
     pub start_us: u64,
@@ -119,6 +119,7 @@ impl Span {
         match self.name {
             "request" | "queued" => "server",
             "prefilter_leg" | "rescore_leg" => "funnel",
+            "traceback_leg" | "alignment" => "report",
             _ => "fleet",
         }
     }
@@ -447,6 +448,8 @@ mod tests {
         assert_eq!(Span::new(1, "queued", 0, 1).cat(), "server");
         assert_eq!(Span::new(0, "prefilter_leg", 0, 1).cat(), "funnel");
         assert_eq!(Span::new(0, "rescore_leg", 0, 1).cat(), "funnel");
+        assert_eq!(Span::new(0, "traceback_leg", 0, 1).cat(), "report");
+        assert_eq!(Span::new(1, "alignment", 0, 1).cat(), "report");
         assert_eq!(Span::new(0, "batch", 0, 1).cat(), "fleet");
         assert_eq!(Span::new(1, "chunk", 0, 1).cat(), "fleet");
         assert_eq!(Span::new(0, "device", 0, 1).cat(), "fleet");

@@ -73,6 +73,9 @@ fn start_backend(
             partition,
             n_total: full.n_seqs(),
             global: ids.to_vec(),
+            // whole-database N, so partition e-values match a
+            // single-process daemon's exactly
+            residues_total: full.total_residues,
         }),
     }
     .start()
@@ -195,6 +198,65 @@ fn routed_search_is_bit_identical_to_single_process_for_any_fleet() {
         for h in handles {
             h.shutdown().unwrap();
         }
+    }
+    single.shutdown().unwrap();
+}
+
+#[test]
+fn routed_full_reports_are_byte_identical_to_single_process() {
+    // The report tier across the cluster seam: alignment coordinates
+    // are subject-local and e-values are computed against the whole
+    // database's residue count (carried by every .pmeta), so a routed
+    // coord/full report must serialize byte-identically to the one a
+    // single whole-database daemon produces.
+    use swaphi::coordinator::ReportLevel;
+    let index = Arc::new(Index::build(generate(&SynthSpec::tiny(240, 37))));
+    let scoring = Scoring::swaphi_default();
+    let single = start_backend(
+        &index,
+        &scoring,
+        index_generation(&index),
+        1,
+        0,
+        &(0..index.n_seqs()).collect::<Vec<_>>(),
+        "127.0.0.1:0",
+    );
+    let mut single_client = Client::connect(&single.connect_addr()).unwrap();
+    let (handles, _) = start_fleet(&index, &scoring, &[1.0, 1.0, 0.5]);
+    let router = router_over(handles.iter().map(|h| h.connect_addr()).collect());
+    let mut c = Client::connect(&router.connect_addr()).unwrap();
+    for (seed, level) in
+        [(3u64, ReportLevel::Coord), (19, ReportLevel::Full), (29, ReportLevel::Full)]
+    {
+        let qid = format!("q{seed}");
+        let q = query_letters(42 + seed as usize, seed);
+        let routed = c.search_fields(&qid, &q, None, None, None, Some(level)).unwrap();
+        assert!(client::is_ok(&routed), "{routed}");
+        assert_eq!(routed.get("partial"), None, "{routed}");
+        let direct =
+            single_client.search_fields(&qid, &q, None, None, None, Some(level)).unwrap();
+        assert!(client::is_ok(&direct), "{direct}");
+        assert_eq!(
+            routed.get("hits").map(|h| h.to_string()),
+            direct.get("hits").map(|h| h.to_string()),
+            "level {} seed {seed}: routed report must be byte-identical",
+            level.name()
+        );
+        let hits = client::hits_of(&routed).unwrap();
+        assert!(!hits.is_empty(), "{routed}");
+        for h in &hits {
+            let a = h.align.as_ref().expect("routed hit missing align payload");
+            assert!(a.evalue.is_finite() && a.bitscore.is_finite(), "{routed}");
+            if level == ReportLevel::Full {
+                assert!(a.identity.is_some() && a.cigar.is_some(), "{routed}");
+            } else {
+                assert!(a.identity.is_none() && a.cigar.is_none(), "{routed}");
+            }
+        }
+    }
+    router.shutdown().unwrap();
+    for h in handles {
+        h.shutdown().unwrap();
     }
     single.shutdown().unwrap();
 }

@@ -750,6 +750,110 @@ fn prop_device_spans_reconcile_with_fleet_accounting() {
 }
 
 #[test]
+fn prop_full_report_traceback_equals_sink_score() {
+    // The report stage's contract over random workloads × fleet shapes:
+    // the bounded-memory traceback independently re-derives exactly the
+    // score the streaming sink ranked each hit by, coverage and identity
+    // stay in [0,1], endpoints stay inside the sequences, the CIGAR
+    // consumes exactly the reported spans (M both sides, I query-only,
+    // D subject-only), and e-values are monotone non-increasing in
+    // score — so non-decreasing down the ranked hit list.
+    check("full report: traceback == sink score", 10, |rng| {
+        use swaphi::align::traceback::traceback;
+        use swaphi::coordinator::{NativeFactory, ReportLevel, SearchConfig, SearchSession};
+        use swaphi::db::chunk::ChunkPlanConfig;
+        let n = rng.range(5, 60);
+        let idx = Index::build(random_db(rng, n, 70));
+        let sc = Scoring::swaphi_default();
+        let session = SearchSession::new(
+            &idx,
+            sc.clone(),
+            SearchConfig {
+                top_k: rng.range(1, 9),
+                devices: rng.range(1, 5),
+                steal: rng.below(2) == 1,
+                report: ReportLevel::Full,
+                sim: None,
+                chunk: ChunkPlanConfig { target_padded_residues: 1024 },
+                ..Default::default()
+            },
+        );
+        let nq = rng.range(1, 4);
+        let queries: Vec<(String, Vec<u8>)> =
+            (0..nq).map(|i| (format!("q{i}"), rand_seq(rng, 1, 45))).collect();
+        let factory = NativeFactory(EngineKind::InterSP);
+        let results = session.search_batch(&factory, &queries).unwrap();
+        for (r, (_, q)) in results.iter().zip(&queries) {
+            prop_assert(r.alignments.is_some(), "full report missing alignments")?;
+            let aligns = r.alignments.as_ref().unwrap();
+            prop_eq(aligns.len(), r.hits.len(), &format!("{}: one alignment per hit", r.query_id))?;
+            let tb = r.traceback.as_ref().expect("full report missing traceback stats");
+            prop_assert(tb.pairs >= r.hits.len() as u64, "traceback pair accounting")?;
+            for (h, a) in r.hits.iter().zip(aligns) {
+                let subject = &idx.seqs[h.seq_index].codes;
+                let label = format!("{} vs {}", r.query_id, h.id);
+                // independent re-derivation: an uncapped traceback over
+                // the (query, subject) pair lands on the sink's score
+                let redo = traceback(q, subject, &sc, 16_000_000);
+                prop_eq(redo.score, h.score, &format!("traceback score ({label})"))?;
+                // endpoints inside the sequences, spans well-formed
+                prop_assert(a.q_start <= a.q_end && a.q_end <= q.len(), format!("query span ({label})"))?;
+                prop_assert(a.s_start <= a.s_end && a.s_end <= subject.len(), format!("subject span ({label})"))?;
+                for (v, what) in [(a.q_cov, "q_cov"), (a.s_cov, "s_cov")] {
+                    prop_assert((0.0..=1.0).contains(&v), format!("{what} {v} out of [0,1] ({label})"))?;
+                }
+                if let Some(id) = a.identity {
+                    prop_assert((0.0..=1.0).contains(&id), format!("identity {id} ({label})"))?;
+                }
+                prop_assert(a.bitscore.is_finite(), format!("bitscore not finite ({label})"))?;
+                prop_assert(
+                    a.evalue.is_finite() && a.evalue >= 0.0,
+                    format!("evalue {} not finite/non-negative ({label})", a.evalue),
+                )?;
+                // the CIGAR consumes exactly the reported spans
+                if let Some(cigar) = &a.cigar {
+                    let (mut qused, mut sused, mut run) = (0usize, 0usize, 0usize);
+                    for ch in cigar.bytes() {
+                        match ch {
+                            b'0'..=b'9' => run = run * 10 + (ch - b'0') as usize,
+                            b'M' => {
+                                qused += run;
+                                sused += run;
+                                run = 0;
+                            }
+                            b'I' => {
+                                qused += run;
+                                run = 0;
+                            }
+                            b'D' => {
+                                sused += run;
+                                run = 0;
+                            }
+                            other => {
+                                prop_assert(false, format!("bad CIGAR byte {other} ({label})"))?
+                            }
+                        }
+                    }
+                    prop_eq(qused, a.q_end - a.q_start, &format!("CIGAR query span ({label})"))?;
+                    prop_eq(sused, a.s_end - a.s_start, &format!("CIGAR subject span ({label})"))?;
+                }
+            }
+            // hits are ranked score-descending; e-value is strictly
+            // decreasing in score for a fixed query, so it must not
+            // decrease down the list (ties give identical e-values)
+            for (w, aw) in r.hits.windows(2).zip(aligns.windows(2)) {
+                prop_assert(w[0].score >= w[1].score, "hit list unsorted")?;
+                prop_assert(
+                    aw[0].evalue <= aw[1].evalue,
+                    format!("{}: e-values not monotone: {} then {}", r.query_id, aw[0].evalue, aw[1].evalue),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_topk_consistency() {
     check("topk is consistent with scores", 20, |rng| {
         use swaphi::coordinator::{Coordinator, NativeFactory, SearchConfig};

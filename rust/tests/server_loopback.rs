@@ -361,6 +361,80 @@ fn cache_hit_returns_identical_payload() {
 }
 
 #[test]
+fn report_levels_cache_separately_and_never_alias() {
+    use swaphi::coordinator::ReportLevel;
+    let (handle, index, scoring) = start_server(120, 41, tcp_cfg(0));
+    let q = query_letters(40, 51);
+    let offline = offline_hits(&index, &scoring, "q", &q);
+    let mut c = Client::connect(&handle.connect_addr()).unwrap();
+
+    // 1. score-only fills the Score-level cache universe
+    let score = c.search_fields("q", &q, None, None, None, Some(ReportLevel::Score)).unwrap();
+    assert!(client::is_ok(&score), "{score}");
+    assert_eq!(score.get("cached"), Some(&Json::Bool(false)));
+    let score_hits = client::hits_of(&score).unwrap();
+    assert!(score_hits.iter().all(|h| h.align.is_none()), "score level must not attach align");
+
+    // 2. a full-report request for the same query must MISS — levels
+    // occupy disjoint cache universes and can never alias
+    let full = c.search_fields("q", &q, None, None, None, Some(ReportLevel::Full)).unwrap();
+    assert!(client::is_ok(&full), "{full}");
+    assert_eq!(
+        full.get("cached"),
+        Some(&Json::Bool(false)),
+        "full report served a score-only cache entry: {full}"
+    );
+    let full_hits = client::hits_of(&full).unwrap();
+    assert_eq!(payload_tuples(&full_hits), offline, "ranking must not change with the level");
+    for h in &full_hits {
+        let a = h.align.as_ref().expect("full level must attach align");
+        assert!(a.q_end >= a.q_start && a.s_end >= a.s_start, "{full}");
+        assert!((0.0..=1.0).contains(&a.q_cov) && (0.0..=1.0).contains(&a.s_cov), "{full}");
+        assert!(a.identity.is_some() && a.cigar.is_some(), "full level carries identity+CIGAR");
+        assert!(a.evalue.is_finite() && a.bitscore.is_finite(), "{full}");
+    }
+
+    // 3. repeat full request round-trips the cached entry intact
+    let full2 = c.search_fields("q", &q, None, None, None, Some(ReportLevel::Full)).unwrap();
+    assert_eq!(full2.get("cached"), Some(&Json::Bool(true)));
+    assert_eq!(full.get("hits"), full2.get("hits"), "cached full report must be identical");
+
+    // 4. coord is its own universe too: another miss, align without
+    // identity/CIGAR
+    let coord = c.search_fields("q", &q, None, None, None, Some(ReportLevel::Coord)).unwrap();
+    assert_eq!(coord.get("cached"), Some(&Json::Bool(false)), "{coord}");
+    let coord_hits = client::hits_of(&coord).unwrap();
+    assert_eq!(payload_tuples(&coord_hits), offline);
+    for (ch, fh) in coord_hits.iter().zip(&full_hits) {
+        let a = ch.align.as_ref().expect("coord level must attach align");
+        assert!(a.identity.is_none() && a.cigar.is_none(), "coord must omit identity+CIGAR");
+        let f = fh.align.as_ref().unwrap();
+        assert_eq!((a.q_start, a.q_end, a.s_start, a.s_end), (f.q_start, f.q_end, f.s_start, f.s_end));
+        assert_eq!((a.bitscore, a.evalue), (f.bitscore, f.evalue));
+    }
+
+    // 5. the `report` convenience op is a search with fields=full — it
+    // must land on the Full cache entry, byte-identical hits
+    let rep = c
+        .request_line(&format!(r#"{{"v":1,"op":"report","query_id":"q","query":"{q}"}}"#))
+        .unwrap();
+    assert!(client::is_ok(&rep), "{rep}");
+    assert_eq!(rep.get("cached"), Some(&Json::Bool(true)), "{rep}");
+    assert_eq!(rep.get("hits"), full.get("hits"), "report op must alias ONLY with fields=full");
+
+    // traceback accounting surfaced through stats: the full + coord
+    // misses each traced top-k pairs
+    let stats = c.stats().unwrap();
+    let tb = stats.get("stats").unwrap().get("traceback").unwrap();
+    assert!(
+        tb.get("pairs").unwrap().as_f64().unwrap() >= (2 * full_hits.len()) as f64,
+        "{stats}"
+    );
+    assert!(tb.get("cells").unwrap().as_f64().unwrap() > 0.0, "{stats}");
+    handle.shutdown().unwrap();
+}
+
+#[test]
 fn unix_socket_roundtrip_and_cleanup() {
     let path = std::env::temp_dir().join(format!("swaphi-loopback-{}.sock", std::process::id()));
     let cfg = ServerConfig {
