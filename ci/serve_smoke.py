@@ -99,6 +99,18 @@ class Proto:
     def trace(self):
         return self.request(op="trace").get("spans", [])
 
+    def trace_filtered(self, tid):
+        return self.request(op="trace", trace=tid).get("spans", [])
+
+    def trace_cluster(self, tid=None):
+        req = {"op": "trace", "scope": "cluster"}
+        if tid is not None:
+            req["trace"] = tid
+        return self.request(**req).get("procs", [])
+
+    def health(self):
+        return self.request(op="health")
+
     def close(self):
         self.sock.close()
 
@@ -443,7 +455,9 @@ def scenario_serve(drv, base_port):
          "swaphi_batches_total", "swaphi_queue_depth", "swaphi_batch_size",
          "swaphi_request_latency_microseconds",
          "swaphi_device_compute_microseconds_total",
-         "swaphi_traceback_total", "swaphi_traceback_cells_total"),
+         "swaphi_traceback_total", "swaphi_traceback_cells_total",
+         "swaphi_slo_availability_target", "swaphi_slo_health",
+         "swaphi_burn_rate"),
         require_cache_hit=True,
     )
     p1.close()
@@ -500,10 +514,12 @@ def scenario_cluster(drv, base_port):
         drv.serve(f"backend-{p}", base_port + 1 + p, f"{idx}.p{p}") for p in range(3)
     ]
     router_addr = f"127.0.0.1:{base_port + 4}"
+    flight_dir = os.path.join(drv.workdir, "flight")
     router = drv.spawn(
         "router", router_addr,
         "route", "--backends", ",".join(b.addr for b in backends),
         "--listen", router_addr, "--backend-timeout-ms", "5000", "--retries", "1",
+        "--flight-dir", flight_dir,
     )
 
     # CLI round trip: the routed answer renders exactly like the direct one
@@ -534,6 +550,59 @@ def scenario_cluster(drv, base_port):
     drv.check(strip_trace(rr) == strip_trace(rs),
               f"routed response differs beyond the trace id:\n{raw_r}\n{raw_s}")
 
+    # distributed tracing: the routed response's trace id names spans in
+    # every process of the fleet, and span ids stitch them into one tree
+    # (route -> per-partition attempt -> backend request)
+    tid = rr["trace"]
+    rspans = pr.trace_filtered(tid)
+    route = [s for s in rspans if s["name"] == "route"]
+    attempts = [s for s in rspans if s["name"] == "backend"]
+    drv.check(len(route) == 1 and len(attempts) == 3,
+              f"router ring for {tid}: want 1 route + 3 attempts, got {rspans}")
+    drv.check(all(s.get("parent") == route[0].get("id") for s in attempts),
+              f"attempt spans must parent the route span: {rspans}")
+    attempt_ids = {s.get("id") for s in attempts}
+    for b in backends:
+        pb = Proto(b.addr)
+        bspans = pb.trace_filtered(tid)
+        pb.close()
+        reqs = [s for s in bspans if s["name"] == "request"]
+        drv.check(len(reqs) == 1,
+                  f"{b.name} must adopt the propagated id {tid}: {bspans}")
+        drv.check(reqs[0].get("parent") in attempt_ids,
+                  f"{b.name} request span must parent a router attempt: {reqs}")
+    procs = pr.trace_cluster(tid)
+    drv.check([p["name"] for p in procs]
+              == ["router", "backend 0", "backend 1", "backend 2"],
+              f"cluster assembly rows: {[p.get('name') for p in procs]}")
+    drv.check(all(s["trace"] == tid for p in procs for s in p["spans"]),
+              f"cluster assembly leaked foreign spans: {procs}")
+    stitched_total = sum(len(p["spans"]) for p in procs)
+    drv.check(stitched_total >= 7,
+              f"stitched trace too small ({stitched_total} spans): {procs}")
+
+    # the `swaphi trace` export: one Perfetto document, one named row
+    # per process, every complete event under the one trace id
+    trace_out = os.path.join(drv.workdir, "cluster-trace.json")
+    drv.cli("trace", "--server", router.addr, "--id", tid, "--out", trace_out)
+    doc = json.load(open(trace_out))
+    proc_rows = {e["args"]["name"] for e in doc if e.get("name") == "process_name"}
+    drv.check({"router", "backend 0", "backend 1", "backend 2"} <= proc_rows,
+              f"trace export missing process rows: {proc_rows}")
+    xs = [e for e in doc if e.get("ph") == "X"]
+    drv.check(len(xs) == stitched_total and
+              all(e["args"].get("trace") == tid for e in xs),
+              f"trace export events disagree with the assembly: {len(xs)} events")
+    print(f"trace leg ok: {tid} stitched across 4 processes, "
+          f"{stitched_total} spans exported")
+
+    # SLO health plane: green fleet answers ok, with per-SLO detail
+    h = pr.health()
+    drv.check(h.get("ok") and h.get("health") == "ok", f"healthy fleet health: {h}")
+    slos = {s["slo"] for s in h.get("slos", [])}
+    drv.check({"availability", "p99_latency"} <= slos, f"slo detail: {h}")
+    drv.cli("query", "--connect", router.addr, "--health")  # exit 0 == ok
+
     st = pr.stats()
     drv.check(st.get("role") == "router", f"router stats role: {st.get('role')}")
     drv.check(len(st["backends"]) == 3, f"stats must list 3 backends: {st}")
@@ -545,7 +614,9 @@ def scenario_cluster(drv, base_port):
         ("swaphi_router_requests_total", "swaphi_router_partial_total",
          "swaphi_backend_requests_total", "swaphi_backend_healthy",
          "swaphi_router_request_latency_microseconds",
-         "swaphi_backend_latency_microseconds"),
+         "swaphi_backend_latency_microseconds",
+         "swaphi_slo_availability_target", "swaphi_slo_health",
+         "swaphi_burn_rate"),
     )
 
     # fault injection: SIGKILL one backend mid-stream. The next answer
@@ -568,7 +639,31 @@ def scenario_cluster(drv, base_port):
     st = pr.stats()
     drv.check([b["healthy"] for b in st["backends"]] == [True, False, True],
               f"health after kill: {st}")
-    print(f"kill leg ok: partial answer over partitions [0, 2], {len(resp['hits'])} hits")
+
+    # the health plane flips: a dark partition is at least `warn`, and
+    # the CLI probe now exits nonzero
+    h = pr.health()
+    drv.check(h.get("health") in ("warn", "critical"),
+              f"dead partition must degrade the verdict: {h}")
+    drv.cli("query", "--connect", router.addr, "--health", expect=1)
+
+    # the flight recorder tripped exactly once (per-partition latch +
+    # cooldown), with a bundle that names the dead partition
+    bundles = sorted(
+        n for n in (os.listdir(flight_dir) if os.path.isdir(flight_dir) else [])
+        if n.startswith("flight-") and n.endswith(".json")
+    )
+    drv.check(len(bundles) == 1,
+              f"exactly one flight bundle after one incident: {bundles}")
+    bundle = json.load(open(os.path.join(flight_dir, bundles[0])))
+    drv.check(bundle.get("reason") == "backend_dead", f"bundle reason: {bundle}")
+    drv.check("partition 1" in bundle.get("detail", ""),
+              f"bundle must name the dead partition: {bundle.get('detail')}")
+    drv.check("stats" in bundle.get("body", {}) and "health" in bundle.get("body", {}),
+              f"bundle body must snapshot stats + SLO detail: {sorted(bundle)}")
+    print(f"kill leg ok: partial answer over partitions [0, 2], "
+          f"{len(resp['hits'])} hits, health {h.get('health')}, "
+          f"flight bundle {bundles[0]}")
 
     # recovery: restart the killed backend on the same port; the router
     # re-runs the generation handshake and resumes full answers

@@ -242,9 +242,13 @@ class TestClusterGateKeys(GateHarness):
         "router.efficiency": {"baseline": None, "min": 0.8696},
         "router.completeness": {"baseline": None, "min": 1.0},
         "router.speedup_3": {"baseline": None, "min": None},
+        "router.traced": {"baseline": None, "min": 1.0},
+        "router.trace_procs": {"baseline": None, "min": 4.0},
+        "router.health_ops_per_s": {"baseline": None, "min": None},
     }
 
-    def cluster_artifact(self, efficiency, completeness, speedup_3=1.5):
+    def cluster_artifact(self, efficiency, completeness, speedup_3=1.5,
+                         traced=1.0, trace_procs=4, health_ops_per_s=500.0):
         return {
             "preset": "tiny",
             "n_seqs": 600,
@@ -253,6 +257,9 @@ class TestClusterGateKeys(GateHarness):
                 "efficiency": efficiency,
                 "completeness": completeness,
                 "speedup_3": speedup_3,
+                "traced": traced,
+                "trace_procs": trace_procs,
+                "health_ops_per_s": health_ops_per_s,
             },
         }
 
@@ -285,6 +292,25 @@ class TestClusterGateKeys(GateHarness):
         p = self.run_cluster(1.0, 1.0, speedup_3=0.5)
         self.assertEqual(p.returncode, 0, p.stdout + p.stderr)
 
+    def test_dropped_trace_propagation_fails(self):
+        # 47 of 48 routed answers naming their trace is a propagation bug
+        p = self.run_cluster(1.0, 1.0, traced=0.979)
+        self.assertEqual(p.returncode, 1, p.stdout + p.stderr)
+        self.assertIn("router.traced", p.stdout)
+        self.assertIn("FAIL(floor)", p.stdout)
+
+    def test_missing_trace_process_row_fails(self):
+        # a backend that never adopted the propagated id leaves a 3-row
+        # assembly on the 3-backend fleet (router + only 2 backends)
+        p = self.run_cluster(1.0, 1.0, trace_procs=3)
+        self.assertEqual(p.returncode, 1, p.stdout + p.stderr)
+        self.assertIn("router.trace_procs", p.stdout)
+        self.assertIn("FAIL(floor)", p.stdout)
+
+    def test_health_throughput_is_recorded_not_gated(self):
+        p = self.run_cluster(1.0, 1.0, health_ops_per_s=1.0)
+        self.assertEqual(p.returncode, 0, p.stdout + p.stderr)
+
     def test_shipped_baseline_gates_the_cluster(self):
         # drift selftest: the committed baseline must carry the cluster
         # gates with the acceptance floors
@@ -295,6 +321,9 @@ class TestClusterGateKeys(GateHarness):
         self.assertEqual(spec["metrics"]["router.efficiency"]["min"], 0.8696)
         self.assertEqual(spec["metrics"]["router.completeness"]["min"], 1.0)
         self.assertIsNone(spec["metrics"]["router.speedup_3"]["min"])
+        self.assertEqual(spec["metrics"]["router.traced"]["min"], 1.0)
+        self.assertEqual(spec["metrics"]["router.trace_procs"]["min"], 4.0)
+        self.assertIsNone(spec["metrics"]["router.health_ops_per_s"]["min"])
         self.assertEqual(spec["workload"]["preset"], "tiny")
         self.assertEqual(spec["workload"]["n_seqs"], 600)
         self.assertEqual(spec["workload"]["qlen"], 256)

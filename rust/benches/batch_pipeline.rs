@@ -7,6 +7,11 @@
 //! aggregate native GCUPS, the narrow-tier rescore rate, and the i16/i32
 //! speedup. Acceptance target: i16 ≥ 1.3× i32 on this workload. Emits
 //! `BENCH_batch.json` next to the usual `bench_results/*.tsv`.
+//!
+//! Two observability riders share the artifact: the span-recording
+//! enabled-vs-disabled delta (`trace_overhead`) and the SLO health
+//! plane's rolling-window evaluation throughput (`health_overhead`) —
+//! both recorded for trajectory, neither gated.
 
 use swaphi::align::{EngineKind, Precision};
 use swaphi::bench::workloads::Workload;
@@ -15,6 +20,7 @@ use swaphi::coordinator::{NativeFactory, SearchConfig, SearchSession};
 use swaphi::db::chunk::ChunkPlanConfig;
 use swaphi::db::index::Index;
 use swaphi::db::synth::{generate, SynthSpec};
+use swaphi::health::{HealthPlane, HealthSample, SloConfig, Verdict};
 use swaphi::matrices::Scoring;
 use swaphi::metrics::RescoreStats;
 
@@ -111,9 +117,9 @@ fn main() {
 
     // --- span-recording overhead: same workload, recorder off vs on --
     // The disabled path is one relaxed atomic load per span site; this
-    // records the measured enabled-vs-disabled delta (ungated — the CI
-    // baseline checker only compares the engine table above) and emits
-    // a Perfetto-loadable trace of the enabled run.
+    // records the measured enabled-vs-disabled delta (ungated — no
+    // baseline floor compares it) and emits a Perfetto-loadable trace
+    // of the enabled run.
     let trace_cfg = SearchConfig {
         sim: None,
         chunk: ChunkPlanConfig { target_padded_residues: 1 << 16 },
@@ -136,10 +142,52 @@ fn main() {
     );
     json.push_str(&format!(
         "  \"trace_overhead\": {{\"disabled_s\": {:.6}, \"enabled_s\": {:.6}, \
-         \"overhead_pct\": {overhead_pct:.3}, \"spans\": {}}}\n",
+         \"overhead_pct\": {overhead_pct:.3}, \"spans\": {}}},\n",
         disabled.median,
         enabled.median,
         spans.len()
+    ));
+
+    // --- health-plane accounting: what an SLO evaluation costs -------
+    // The serving path only bumps counters the daemon already keeps;
+    // the rolling-window burn-rate math runs on `health`/`metrics`
+    // reads. Measure report() throughput with the snapshot ring at its
+    // steady-state depth (~30 minutes of 1 Hz samples, the longest
+    // window) — recorded for trajectory, not gated.
+    let plane = HealthPlane::new(SloConfig::default());
+    let bounds: Vec<u64> = vec![1_000, 10_000, 100_000, 1_000_000];
+    let reports = 4_000usize;
+    let mut verdict = Verdict::Ok;
+    let t = std::time::Instant::now();
+    for i in 0..reports {
+        let total = (i as u64 + 1) * 7;
+        let mut counts = vec![0u64; bounds.len() + 1];
+        counts[0] = total;
+        verdict = plane
+            .report(HealthSample {
+                t_us: (i as u64 + 1) * 1_000_000,
+                total,
+                errors: 0,
+                lat_bounds: bounds.clone(),
+                lat_counts: counts,
+                lat_max: 900,
+            })
+            .verdict;
+    }
+    let health_wall = t.elapsed().as_secs_f64();
+    let reports_per_s = reports as f64 / health_wall;
+    assert_eq!(verdict.as_str(), "ok", "clean counters must evaluate ok");
+    println!(
+        "health overhead: {reports} SLO evaluations in {health_wall:.3}s \
+         ({reports_per_s:.0}/s, {:.1}us each, verdict {})",
+        health_wall / reports as f64 * 1e6,
+        verdict.as_str()
+    );
+    json.push_str(&format!(
+        "  \"health_overhead\": {{\"reports\": {reports}, \"wall_s\": {health_wall:.6}, \
+         \"report_us\": {:.3}, \"reports_per_s\": {reports_per_s:.1}, \"verdict\": \"{}\"}}\n",
+        health_wall / reports as f64 * 1e6,
+        verdict.as_str()
     ));
     json.push_str("}\n");
     if std::fs::write("trace.json", swaphi::trace::chrome_trace_json(&spans)).is_ok() {

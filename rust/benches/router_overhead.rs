@@ -21,6 +21,16 @@
 //! must merge bit-exactly, never approximately). `routed×3` speedup is
 //! recorded for trajectory (it depends on host core count).
 //!
+//! The routed walls include everything the observability plane adds to
+//! the serving path — trace-context propagation on every scatter line,
+//! per-request SLO accounting on router and daemons — so the 15% bound
+//! gates that overhead too. On top of that the bench records the
+//! propagation itself: `router.traced` = fraction of routed answers
+//! carrying the router-minted trace id (floor 1.0), `router.trace_procs`
+//! = process rows when that id is assembled cluster-scope (router + 3
+//! backends = 4, floor 4), and `router.health_ops_per_s` = `health` op
+//! round-trip throughput against the front tier (trajectory only).
+//!
 //! `SWAPHI_BENCH_PRESET` / `SWAPHI_BENCH_N` / `SWAPHI_BENCH_QLEN` shrink
 //! the workload for CI (tiny preset, 600 sequences).
 
@@ -39,6 +49,7 @@ use swaphi::db::Database;
 use swaphi::matrices::Scoring;
 use swaphi::server::client::{self, Client};
 use swaphi::server::{index_generation, Server, ServerConfig, ServerHandle};
+use swaphi::util::json::Json;
 
 const TOP_K: usize = 10;
 const N_QUERIES: usize = 24;
@@ -110,24 +121,29 @@ fn router_over(handles: &[ServerHandle]) -> RouterHandle {
 }
 
 /// Send every query on one connection; return (wall seconds, hit-array
-/// JSON per query). A distinct warmup query first so connection setup
-/// and the daemon's first-batch session warm-up stay out of the timing,
-/// without priming the response cache for the measured set.
-fn run_batch(addr: &str, queries: &[(String, String)]) -> (f64, Vec<String>) {
+/// JSON per query, answers carrying a trace id). A distinct warmup query
+/// first so connection setup and the daemon's first-batch session
+/// warm-up stay out of the timing, without priming the response cache
+/// for the measured set.
+fn run_batch(addr: &str, queries: &[(String, String)]) -> (f64, Vec<String>, usize) {
     let mut c = Client::connect(addr).expect("connect");
     let warm = String::from_utf8(swaphi::alphabet::decode(&generate_query(64, 999))).unwrap();
     let resp = c.search("warmup", &warm, None, None).expect("warmup");
     assert!(client::is_ok(&resp), "{resp}");
     let t = Instant::now();
     let mut hit_arrays = Vec::with_capacity(queries.len());
+    let mut traced = 0usize;
     for (qid, letters) in queries {
         let resp = c.search(qid, letters, None, None).expect("search");
         assert!(client::is_ok(&resp), "{resp}");
         assert!(resp.get("partial").is_none(), "healthy fleet answered partial: {resp}");
+        if resp.get("trace").and_then(Json::as_str).is_some() {
+            traced += 1;
+        }
         hit_arrays
             .push(resp.get("hits").map(|h| h.to_string()).unwrap_or_default());
     }
-    (t.elapsed().as_secs_f64(), hit_arrays)
+    (t.elapsed().as_secs_f64(), hit_arrays, traced)
 }
 
 fn main() {
@@ -166,19 +182,54 @@ fn main() {
     // direct: one whole-database daemon, no router in the path
     let all: Vec<usize> = (0..index.n_seqs()).collect();
     let direct = start_backend(&index, &scoring, 1, 0, &all);
-    let (direct_wall, direct_hits) = run_batch(&direct.connect_addr(), &queries);
+    let (direct_wall, direct_hits, direct_traced) = run_batch(&direct.connect_addr(), &queries);
 
     // routed x1: same whole database, one hop further away
     let fleet1 = start_fleet(&index, &scoring, 1);
     let router1 = router_over(&fleet1);
-    let (routed1_wall, routed1_hits) = run_batch(&router1.connect_addr(), &queries);
+    let (routed1_wall, routed1_hits, routed1_traced) = run_batch(&router1.connect_addr(), &queries);
     let routed1_partial = router1.partial_answers();
 
     // routed x3: three balanced partitions searched concurrently
     let fleet3 = start_fleet(&index, &scoring, 3);
     let router3 = router_over(&fleet3);
-    let (routed3_wall, routed3_hits) = run_batch(&router3.connect_addr(), &queries);
+    let (routed3_wall, routed3_hits, routed3_traced) = run_batch(&router3.connect_addr(), &queries);
     let routed3_partial = router3.partial_answers();
+
+    // propagation check: one more routed query, then assemble its trace
+    // id cluster-scope — the id the router minted must come back with
+    // one process row per participant (router + 3 backends)
+    let mut probe = Client::connect(&router3.connect_addr()).expect("probe connect");
+    let probe_q =
+        String::from_utf8(swaphi::alphabet::decode(&generate_query(qlen, 4242))).unwrap();
+    let resp = probe.search("probe", &probe_q, None, None).expect("probe search");
+    assert!(client::is_ok(&resp), "{resp}");
+    let tid = resp
+        .get("trace")
+        .and_then(Json::as_str)
+        .expect("routed answer names its trace")
+        .to_string();
+    let assembled = probe.trace_cluster(None, Some(&tid)).expect("cluster trace");
+    let procs = assembled.get("procs").and_then(Json::as_arr).expect("procs rows");
+    let trace_procs = procs.len();
+    let trace_spans: usize = procs
+        .iter()
+        .filter_map(|p| p.get("spans").and_then(Json::as_arr))
+        .map(|s| s.len())
+        .sum();
+
+    // health-plane read cost: `health` op round trips against the front
+    // tier (SLO evaluation + fleet-liveness fold on every read)
+    const HEALTH_OPS: usize = 200;
+    let t = Instant::now();
+    let mut verdict = String::new();
+    for _ in 0..HEALTH_OPS {
+        let h = probe.health().expect("health");
+        assert!(client::is_ok(&h), "{h}");
+        verdict = h.get("health").and_then(Json::as_str).unwrap_or("?").to_string();
+    }
+    let health_ops_per_s = HEALTH_OPS as f64 / t.elapsed().as_secs_f64();
+    assert_eq!(verdict, "ok", "healthy 3-backend fleet must report ok");
 
     let matched = |routed: &[String]| {
         routed.iter().zip(&direct_hits).filter(|(r, d)| r == d).count()
@@ -188,6 +239,7 @@ fn main() {
     let completeness = (matched1 + matched3) as f64 / (2 * N_QUERIES) as f64;
     let efficiency = direct_wall / routed1_wall;
     let speedup_3 = direct_wall / routed3_wall;
+    let traced = (routed1_traced + routed3_traced) as f64 / (2 * N_QUERIES) as f64;
 
     let mut table = Table::new(
         "router_overhead: scatter-gather front tier vs direct daemon (InterSP)",
@@ -217,6 +269,10 @@ fn main() {
          completeness {completeness:.3} (== 1.0 gates), 3-backend speedup {speedup_3:.2}x",
         1.0 / 1.15
     );
+    println!(
+        "observability: traced {traced:.3} (== 1.0 gates), cluster trace {trace_procs} \
+         process rows / {trace_spans} spans for {tid}, health {health_ops_per_s:.0} ops/s ({verdict})"
+    );
 
     let json = format!(
         "{{\n  \"bench\": \"router_overhead\",\n  \"preset\": \"{preset}\",\n  \
@@ -228,6 +284,10 @@ fn main() {
          \"efficiency\": {efficiency:.3},\n    \
          \"speedup_3\": {speedup_3:.3},\n    \
          \"completeness\": {completeness:.3},\n    \
+         \"traced\": {traced:.3},\n    \
+         \"trace_procs\": {trace_procs},\n    \
+         \"trace_spans\": {trace_spans},\n    \
+         \"health_ops_per_s\": {health_ops_per_s:.1},\n    \
          \"partial_answers\": {}\n  }}\n}}\n",
         index.n_seqs(),
         routed1_partial + routed3_partial,
@@ -246,4 +306,10 @@ fn main() {
         completeness, 1.0,
         "scatter-gather merged inexactly: x1 {matched1}/{N_QUERIES}, x3 {matched3}/{N_QUERIES}"
     );
+    assert_eq!(
+        (direct_traced, routed1_traced, routed3_traced),
+        (N_QUERIES, N_QUERIES, N_QUERIES),
+        "every answer must carry a trace id"
+    );
+    assert_eq!(trace_procs, 4, "cluster trace must assemble router + 3 backend rows");
 }

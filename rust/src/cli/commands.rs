@@ -474,6 +474,13 @@ pub fn cmd_serve(mut args: Args) -> anyhow::Result<i32> {
             v.parse::<u64>().map_err(|e| anyhow::anyhow!("--slow-query-ms {v:?}: {e}"))?,
         ),
     };
+    let flight_dir = args.take("flight-dir");
+    let flight_bundles = match args.take("flight-bundles") {
+        None => None,
+        Some(v) => Some(
+            v.parse::<usize>().map_err(|e| anyhow::anyhow!("--flight-bundles {v:?}: {e}"))?,
+        ),
+    };
     let cfg = load_config(&mut args)?;
     args.finish()?;
 
@@ -483,6 +490,12 @@ pub fn cmd_serve(mut args: Args) -> anyhow::Result<i32> {
     }
     if let Some(ms) = slow_query_ms {
         server_cfg.slow_query_ms = ms;
+    }
+    if let Some(dir) = flight_dir {
+        server_cfg.flight_dir = Some(dir.into());
+    }
+    if let Some(k) = flight_bundles {
+        server_cfg.flight_bundles = k.max(1);
     }
     server_cfg.handle_signals = true;
 
@@ -577,12 +590,25 @@ pub fn cmd_route(mut args: Args) -> anyhow::Result<i32> {
             v.parse::<u64>().map_err(|e| anyhow::anyhow!("--backend-timeout-ms {v:?}: {e}"))?,
         ),
     };
+    let flight_dir = args.take("flight-dir");
+    let flight_bundles = match args.take("flight-bundles") {
+        None => None,
+        Some(v) => Some(
+            v.parse::<usize>().map_err(|e| anyhow::anyhow!("--flight-bundles {v:?}: {e}"))?,
+        ),
+    };
     let cfg = load_config(&mut args)?;
     args.finish()?;
 
     let mut rc = cfg.router_config();
     if let Some(listen) = listen {
         rc.listen = listen;
+    }
+    if let Some(dir) = flight_dir {
+        rc.flight_dir = Some(dir.into());
+    }
+    if let Some(k) = flight_bundles {
+        rc.flight_bundles = k.max(1);
     }
     if let Some(b) = backends {
         rc.backends = b
@@ -634,6 +660,8 @@ pub fn cmd_query(mut args: Args) -> anyhow::Result<i32> {
     let stats = args.take_bool("stats");
     let metrics = args.take_bool("metrics");
     let trace = args.take_bool("trace");
+    let trace_id = args.take("trace-id");
+    let health = args.take_bool("health");
     let top_k = match args.take("top-k") {
         None => None,
         Some(v) => Some(v.parse::<usize>().map_err(|e| anyhow::anyhow!("--top-k {v:?}: {e}"))?),
@@ -655,7 +683,7 @@ pub fn cmd_query(mut args: Args) -> anyhow::Result<i32> {
     };
     let retries = args.take_usize("retries", 0)?;
     let retry_ms = args.take_u64("retry-ms", 200)?;
-    let informational = ping || stats || metrics || trace;
+    let informational = ping || stats || metrics || trace || trace_id.is_some() || health;
     let query_path = if informational { args.take("query") } else { Some(args.require("query")?) };
     args.finish()?;
 
@@ -702,8 +730,24 @@ pub fn cmd_query(mut args: Args) -> anyhow::Result<i32> {
         print!("{}", client.metrics()?);
         return Ok(0);
     }
-    if trace {
-        let resp = client.trace(None)?;
+    if health {
+        let resp = client.health()?;
+        anyhow::ensure!(crate::server::client::is_ok(&resp), "health failed: {resp}");
+        let verdict = resp
+            .get("health")
+            .and_then(crate::util::json::Json::as_str)
+            .unwrap_or("?")
+            .to_string();
+        println!("{verdict}");
+        // per-SLO burn-rate detail, one JSON document
+        println!("{}", resp.get("slos").unwrap_or(&resp));
+        // probe-friendly exit code: degraded health is a failure
+        return Ok(if verdict == "ok" { 0 } else { 1 });
+    }
+    if trace || trace_id.is_some() {
+        // --trace-id narrows the ring to one propagated trace (wire form
+        // tXXXXXXXXXXXX) and implies --trace
+        let resp = client.trace_filtered(None, trace_id.as_deref())?;
         anyhow::ensure!(crate::server::client::is_ok(&resp), "trace failed: {resp}");
         // raw span array, one JSON document — machine-readable on purpose
         println!("{}", resp.get("spans").unwrap_or(&resp));
@@ -777,6 +821,58 @@ pub fn cmd_query(mut args: Args) -> anyhow::Result<i32> {
     }
     anyhow::ensure!(n > 0, "{query_path}: no queries");
     Ok(if failures == 0 { 0 } else { 1 })
+}
+
+/// `swaphi trace`: fetch the cluster-wide trace (the `scope=cluster`
+/// variant of the `trace` op) and write one Perfetto/Chrome trace-event
+/// document with a named row per process. Against a router that is the
+/// whole fleet — router spans plus every backend's, clock-aligned via
+/// the handshake's ping-RTT offsets; against a plain daemon, one row.
+pub fn cmd_trace(mut args: Args) -> anyhow::Result<i32> {
+    use crate::util::json::Json;
+
+    let server = args.take_or("server", "127.0.0.1:7900");
+    let id = args.take("id");
+    let n = match args.take("n") {
+        None => None,
+        Some(v) => {
+            Some(v.parse::<usize>().map_err(|e| anyhow::anyhow!("--n {v:?}: {e}"))?)
+        }
+    };
+    let out = args.require("out")?;
+    args.finish()?;
+
+    let mut client = crate::server::client::Client::connect(&server)?;
+    let resp = client.trace_cluster(n, id.as_deref())?;
+    if !crate::server::client::is_ok(&resp) {
+        let (code, message) = crate::server::client::error_of(&resp);
+        anyhow::bail!("trace {server}: {code}: {message}");
+    }
+    let procs = resp
+        .get("procs")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("trace response has no procs array: {resp}"))?;
+    let rows: Vec<(String, Vec<crate::trace::Span>)> = procs
+        .iter()
+        .map(|p| {
+            let name =
+                p.get("name").and_then(Json::as_str).unwrap_or("process").to_string();
+            let spans = p
+                .get("spans")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(crate::trace::span_from_json).collect())
+                .unwrap_or_default();
+            (name, spans)
+        })
+        .collect();
+    let total: usize = rows.iter().map(|(_, s)| s.len()).sum();
+    std::fs::write(&out, crate::trace::chrome_trace_json_procs(&rows))
+        .map_err(|e| anyhow::anyhow!("write {out}: {e}"))?;
+    println!(
+        "wrote {total} spans across {} process rows to {out} (open at https://ui.perfetto.dev)",
+        rows.len()
+    );
+    Ok(0)
 }
 
 pub fn cmd_selftest(mut args: Args) -> anyhow::Result<i32> {

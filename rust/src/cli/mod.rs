@@ -10,6 +10,7 @@
 //! swaphi serve   --index db.idx [--listen 127.0.0.1:7878 | unix:/path]
 //! swaphi route   --backends 127.0.0.1:7901,127.0.0.1:7902 [--listen ...]
 //! swaphi query   --connect 127.0.0.1:7878 --query q.fasta
+//! swaphi trace   --server 127.0.0.1:7900 --out trace.json [--id tXXXX]
 //! swaphi selftest [--backend pjrt] [--artifacts artifacts]
 //! swaphi devinfo
 //! ```
@@ -21,8 +22,8 @@ pub use args::Args;
 
 /// Every valid subcommand, as listed by the unknown-command error.
 pub const COMMANDS: &[&str] = &[
-    "synth", "index", "info", "search", "serve", "route", "query", "calibrate", "selftest",
-    "devinfo", "help",
+    "synth", "index", "info", "search", "serve", "route", "query", "trace", "calibrate",
+    "selftest", "devinfo", "help",
 ];
 
 /// Entry point used by `main.rs`.
@@ -43,6 +44,7 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<i32> {
         "serve" => commands::cmd_serve(args),
         "route" => commands::cmd_route(args),
         "query" => commands::cmd_query(args),
+        "trace" => commands::cmd_trace(args),
         "calibrate" => commands::cmd_calibrate(args),
         "selftest" => commands::cmd_selftest(args),
         "devinfo" => commands::cmd_devinfo(args),
@@ -132,6 +134,12 @@ COMMANDS:
                 every request at or over the threshold (0 = off)
               --set server.trace_ring=<n> sizes the span ring behind the
                 `trace` op (default 4096; 0 disables span recording)
+              [--flight-dir <dir>]   anomaly flight recorder: on backend
+                death, deadline bursts or partial-answer streaks, dump
+                one JSON bundle (spans + metrics + slow queries) there,
+                keeping the newest --flight-bundles (default 8)
+              --set server.slo_availability / server.slo_p99_ms tune the
+                `health` op's SLO targets (defaults 0.999 / 2000 ms)
               a `.pmeta` sidecar next to the index makes the daemon serve
                 that partition slice under the fleet identity (cluster
                 mode backend; see `index --partitions` and `route`)
@@ -148,8 +156,11 @@ COMMANDS:
               [--hedge-ms <n>]   fixed hedge delay (default: auto, 3x the
                 observed backend p99)
               [--retries <n>]  [--backend-timeout-ms <n>]
+              [--flight-dir <dir>]  [--flight-bundles <n>]   anomaly
+                flight recorder (same bundle scheme as serve)
               [--config <toml>]   [cluster] section: listen, backends
-                (quoted strings), hedge_ms, retries, backend_timeout_ms
+                (quoted strings), hedge_ms, retries, backend_timeout_ms,
+                slo_availability, slo_p99_ms, flight_dir, flight_bundles
               e.g.  swaphi route --backends 127.0.0.1:7901,127.0.0.1:7902
   query     client for a running `serve` daemon or `route` front tier;
             each FASTA record is one request on one connection
@@ -165,9 +176,23 @@ COMMANDS:
                 garbage)
               [--metrics]   print the server's Prometheus text exposition
               [--trace]     print the server's recent spans as JSON
+              [--trace-id <tXXXXXXXXXXXX>]   only spans of one trace —
+                the id every response echoes (implies --trace)
+              [--health]    print the SLO verdict (ok|warn|critical) and
+                per-SLO burn-rate detail; exit 1 unless ok
               e.g.  swaphi query --connect 127.0.0.1:7878 --query q.fasta
               e.g.  swaphi query --connect 127.0.0.1:7878 --stats
               e.g.  swaphi query --connect 127.0.0.1:7878 --metrics
+  trace     export the cluster-wide distributed trace as one Perfetto /
+            Chrome trace-event document with a named row per process;
+            against a router this stitches its spans with every
+            backend's, clock-aligned via the handshake's ping-RTT
+            offsets — one trace id names the whole routed request
+              --server <host:port | unix:/path>  --out <trace.json>
+              [--id <tXXXXXXXXXXXX>]   only one trace (the id a routed
+                response echoed)
+              [--n <spans>]   per-process ring window (default: all)
+              e.g.  swaphi trace --server 127.0.0.1:7900 --out trace.json
   calibrate measure per-device throughput on synthetic probe batches and
             print a rate vector for --device-rates / [devices] rates —
             the offline form of the daemon's self-tuning loop ([tune]

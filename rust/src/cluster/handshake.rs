@@ -1,0 +1,205 @@
+//! Fleet establishment: the router's startup handshake.
+//!
+//! Before accepting any client, the router contacts every configured
+//! backend and requires a complete, non-overlapping partition set
+//! `0..N` where every member reports the *same database generation* —
+//! the merge precondition (see the module docs in [`super`]). A stale
+//! or misplaced slice fails the whole startup with a structured
+//! message instead of ever being merged into wrong answers.
+//!
+//! The handshake also estimates each backend's **clock offset**: every
+//! `pong` carries the responder's monotonic recorder clock (`now_us`),
+//! so three pings give three `(rtt, offset)` samples where the offset
+//! assumes the reply was observed at the RTT midpoint:
+//!
+//! ```text
+//! offset = (t_send + rtt/2) - backend_now_us      // router_us = backend_us + offset
+//! ```
+//!
+//! The minimum-RTT sample wins (least queueing noise). Cluster-scope
+//! trace assembly shifts every remote span's `start_us` by its
+//! backend's offset, which is why the router's [`TraceRecorder`] must
+//! exist *before* the handshake runs — offsets are expressed against
+//! the same epoch the router's own spans use.
+
+use crate::server::client::{self, Client};
+use crate::trace::TraceRecorder;
+use crate::util::json::Json;
+use std::time::Duration;
+
+/// A backend's `hello` reply, parsed.
+#[derive(Clone, Debug)]
+pub(crate) struct HelloInfo {
+    pub generation: String,
+    pub partition: usize,
+    pub partitions: usize,
+    pub n_seqs: usize,
+    pub n_total: usize,
+    pub top_k: usize,
+}
+
+pub(crate) fn hello_of(resp: &Json) -> anyhow::Result<HelloInfo> {
+    Ok(HelloInfo {
+        generation: resp.str_field("generation")?.to_string(),
+        partition: resp.usize_field("partition")?,
+        partitions: resp.usize_field("partitions")?,
+        n_seqs: resp.usize_field("n_seqs")?,
+        n_total: resp.usize_field("n_total")?,
+        top_k: resp.usize_field("top_k")?,
+    })
+}
+
+/// One partition's daemon, as the handshake established it.
+pub(crate) struct BackendInfo {
+    pub addr: String,
+    pub partition: usize,
+    pub n_seqs: usize,
+    /// Estimated offset from this backend's recorder clock to the
+    /// router's, microseconds: `router_us = backend_us + offset`.
+    /// Zero when the backend predates `now_us` pongs — alignment
+    /// degrades gracefully, stitching still works.
+    pub clock_offset_us: i64,
+}
+
+/// The verified fleet: per-partition backends (indexed by partition),
+/// plus the facts the router answers `hello` with.
+pub(crate) struct Fleet {
+    pub infos: Vec<BackendInfo>,
+    pub generation: String,
+    pub n_total: usize,
+    /// The fleet-wide top-k cap: the minimum of the backends' session
+    /// caps (merging above it would silently under-fill).
+    pub session_top_k: usize,
+}
+
+/// Estimate one backend's clock offset: best (minimum-RTT) of
+/// [`OFFSET_PINGS`] ping round trips, each timestamped against the
+/// router recorder's epoch. Returns 0 when no pong carried `now_us`.
+pub(crate) fn estimate_clock_offset(c: &mut Client, recorder: &TraceRecorder) -> i64 {
+    let mut best: Option<(u64, i64)> = None; // (rtt, offset)
+    for _ in 0..OFFSET_PINGS {
+        let t0 = recorder.now_us();
+        let Ok(resp) = c.ping() else { continue };
+        let t1 = recorder.now_us();
+        let Some(remote) = resp.get("now_us").and_then(Json::as_f64) else { continue };
+        let rtt = t1.saturating_sub(t0);
+        let offset = (t0 + rtt / 2) as i64 - remote as i64;
+        if best.map_or(true, |(r, _)| rtt < r) {
+            best = Some((rtt, offset));
+        }
+    }
+    best.map_or(0, |(_, o)| o)
+}
+
+/// Round trips per backend for the offset estimate.
+const OFFSET_PINGS: usize = 3;
+
+/// Handshake with every backend and verify the partition set. Fails
+/// fast if the fleet is incomplete, overlapping, or spans generations.
+pub(crate) fn establish(
+    backends: &[String],
+    recorder: &TraceRecorder,
+) -> anyhow::Result<Fleet> {
+    let n = backends.len();
+    // one slot per partition: the handshake places each backend at the
+    // partition it reports, whatever order the addresses came in
+    let mut slots: Vec<Option<(String, HelloInfo, i64)>> = (0..n).map(|_| None).collect();
+    let mut reference: Option<(String, HelloInfo)> = None;
+    for addr in backends {
+        let mut c = Client::connect(addr)
+            .map_err(|e| anyhow::anyhow!("cluster handshake: {e:#}"))?;
+        let _ = c.set_read_timeout(Some(Duration::from_secs(5)));
+        let resp =
+            c.hello().map_err(|e| anyhow::anyhow!("cluster handshake: {addr}: {e:#}"))?;
+        if !client::is_ok(&resp) {
+            let (code, message) = client::error_of(&resp);
+            anyhow::bail!("cluster handshake: {addr}: {code}: {message}");
+        }
+        let h = hello_of(&resp)
+            .map_err(|e| anyhow::anyhow!("cluster handshake: {addr}: {e:#}"))?;
+        anyhow::ensure!(
+            h.partitions == n,
+            "cluster handshake: {addr} belongs to a {}-partition set but {n} backend(s) \
+             were configured",
+            h.partitions
+        );
+        anyhow::ensure!(
+            h.partition < n,
+            "cluster handshake: {addr} reports partition {} of {}",
+            h.partition,
+            h.partitions
+        );
+        if let Some((ref_addr, r)) = &reference {
+            // the structured stale-slice refusal: never merge across
+            // database generations
+            anyhow::ensure!(
+                h.generation == r.generation,
+                "generation_mismatch: backend {addr} serves database generation {} but \
+                 {ref_addr} serves {} — re-run `swaphi index --partitions` so every \
+                 slice comes from the same build",
+                h.generation,
+                r.generation
+            );
+            anyhow::ensure!(
+                h.n_total == r.n_total,
+                "cluster handshake: {addr} reports {} total sequences but {ref_addr} \
+                 reports {}",
+                h.n_total,
+                r.n_total
+            );
+        } else {
+            reference = Some((addr.clone(), h.clone()));
+        }
+        if let Some((prev, _, _)) = &slots[h.partition] {
+            anyhow::bail!(
+                "cluster handshake: partition {} claimed by both {prev} and {addr}",
+                h.partition
+            );
+        }
+        let offset = estimate_clock_offset(&mut c, recorder);
+        slots[h.partition] = Some((addr.clone(), h, offset));
+    }
+    let (_, reference) = reference.expect("non-empty backend list");
+    let mut infos = Vec::with_capacity(n);
+    let mut session_top_k = usize::MAX;
+    for (p, slot) in slots.into_iter().enumerate() {
+        let (addr, h, clock_offset_us) = slot.ok_or_else(|| {
+            anyhow::anyhow!("cluster handshake: no configured backend serves partition {p}")
+        })?;
+        session_top_k = session_top_k.min(h.top_k);
+        infos.push(BackendInfo { addr, partition: p, n_seqs: h.n_seqs, clock_offset_us });
+    }
+    let covered: usize = infos.iter().map(|b| b.n_seqs).sum();
+    anyhow::ensure!(
+        covered == reference.n_total,
+        "cluster handshake: partitions cover {covered} sequences but the database holds {}",
+        reference.n_total
+    );
+    Ok(Fleet {
+        infos,
+        generation: reference.generation,
+        n_total: reference.n_total,
+        session_top_k,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::protocol;
+
+    #[test]
+    fn hello_info_parses_a_hello_response() {
+        let line = protocol::hello_response(None, "00000000000000ab", 2, 3, 40, 120, 10, 0);
+        let h = hello_of(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(h.generation, "00000000000000ab");
+        assert_eq!(h.partition, 2);
+        assert_eq!(h.partitions, 3);
+        assert_eq!(h.n_seqs, 40);
+        assert_eq!(h.n_total, 120);
+        assert_eq!(h.top_k, 10);
+        // a pre-partition daemon's reply (no top_k) is rejected, not
+        // silently defaulted — the router must know the real cap
+        assert!(hello_of(&Json::parse(r#"{"v":1,"ok":true,"op":"hello"}"#).unwrap()).is_err());
+    }
+}

@@ -45,17 +45,21 @@
 //! --partition-rates` run — rate calibration closes the loop across
 //! processes exactly as it does across simulated devices.
 
+pub(crate) mod handshake;
 pub mod merge;
 
+use crate::health::{FlightRecorder, HealthPlane, HealthSample, SloConfig, Verdict};
 use crate::metrics::{Counter, Histogram, Registry, SharedHistogram};
 use crate::server::client::{self, Client};
 use crate::server::protocol::{self, HitPayload, Request};
 use crate::server::{bind, BoundAddr, Conn, Listener};
-use crate::trace::{span_json, Span, TraceRecorder};
+use crate::trace::{span_from_json, span_id_hex, span_json, trace_id_hex, Span, TraceRecorder};
 use crate::tune::RateEstimator;
 use crate::util::json::Json;
+use handshake::BackendInfo;
 use std::collections::BTreeMap;
 use std::io::{self, Read, Write};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
@@ -85,6 +89,15 @@ pub struct RouterConfig {
     pub handle_signals: bool,
     /// Span-ring capacity behind the router's `trace` op; 0 disables.
     pub trace_ring: usize,
+    /// Availability SLO target for routed searches (fraction of
+    /// requests answered without a protocol error).
+    pub slo_availability: f64,
+    /// Latency SLO target: routed-search p99, milliseconds.
+    pub slo_p99_ms: u64,
+    /// Where the flight recorder dumps anomaly bundles; `None` disables.
+    pub flight_dir: Option<PathBuf>,
+    /// Bundles kept on disk before the oldest is pruned.
+    pub flight_bundles: usize,
 }
 
 impl Default for RouterConfig {
@@ -98,6 +111,10 @@ impl Default for RouterConfig {
             max_connections: 256,
             handle_signals: false,
             trace_ring: 4096,
+            slo_availability: 0.999,
+            slo_p99_ms: 2_000,
+            flight_dir: None,
+            flight_bundles: 8,
         }
     }
 }
@@ -116,39 +133,9 @@ fn auto_hedge_delay(samples: u64, p99_us: u64, backend_timeout_ms: u64) -> Durat
     Duration::from_micros(p99_us.saturating_mul(3).clamp(lo, hi))
 }
 
-// ---------------------------------------------------------------------
-// Handshake.
-
-/// A backend's `hello` reply, parsed.
-#[derive(Clone, Debug)]
-struct HelloInfo {
-    generation: String,
-    partition: usize,
-    partitions: usize,
-    n_seqs: usize,
-    n_total: usize,
-    top_k: usize,
-}
-
-fn hello_of(resp: &Json) -> anyhow::Result<HelloInfo> {
-    Ok(HelloInfo {
-        generation: resp.str_field("generation")?.to_string(),
-        partition: resp.usize_field("partition")?,
-        partitions: resp.usize_field("partitions")?,
-        n_seqs: resp.usize_field("n_seqs")?,
-        n_total: resp.usize_field("n_total")?,
-        top_k: resp.usize_field("top_k")?,
-    })
-}
-
-/// One partition's daemon, as the handshake established it.
-struct BackendInfo {
-    addr: String,
-    partition: usize,
-    n_seqs: usize,
-}
-
 /// Live routing state for one backend: health, counters, latency.
+/// Identity and clock offset come from the startup handshake (see
+/// [`handshake::establish`]).
 struct Backend {
     info: BackendInfo,
     /// `false` after a terminal failure; the next attempt re-runs the
@@ -189,6 +176,11 @@ struct RouterShared {
     backend_latency: SharedHistogram,
     recorder: Arc<TraceRecorder>,
     estimator: Mutex<RateEstimator>,
+    /// Rolling SLO evaluation over routed traffic (the `health` op).
+    health: HealthPlane,
+    /// Anomaly flight recorder: dumps a diagnostic bundle when a
+    /// backend dies, deadlines burst, or partial answers streak.
+    flight: FlightRecorder,
 }
 
 impl RouterShared {
@@ -235,79 +227,15 @@ impl Router {
             "cluster: at least one backend address is required"
         );
         let n = cfg.backends.len();
-        // one slot per partition: the handshake places each backend at
-        // the partition it reports, whatever order the addresses came in
-        let mut slots: Vec<Option<(String, HelloInfo)>> = (0..n).map(|_| None).collect();
-        let mut reference: Option<(String, HelloInfo)> = None;
-        for addr in &cfg.backends {
-            let mut c = Client::connect(addr)
-                .map_err(|e| anyhow::anyhow!("cluster handshake: {e:#}"))?;
-            let _ = c.set_read_timeout(Some(Duration::from_secs(5)));
-            let resp =
-                c.hello().map_err(|e| anyhow::anyhow!("cluster handshake: {addr}: {e:#}"))?;
-            if !client::is_ok(&resp) {
-                let (code, message) = client::error_of(&resp);
-                anyhow::bail!("cluster handshake: {addr}: {code}: {message}");
-            }
-            let h = hello_of(&resp)
-                .map_err(|e| anyhow::anyhow!("cluster handshake: {addr}: {e:#}"))?;
-            anyhow::ensure!(
-                h.partitions == n,
-                "cluster handshake: {addr} belongs to a {}-partition set but {n} backend(s) \
-                 were configured",
-                h.partitions
-            );
-            anyhow::ensure!(
-                h.partition < n,
-                "cluster handshake: {addr} reports partition {} of {}",
-                h.partition,
-                h.partitions
-            );
-            if let Some((ref_addr, r)) = &reference {
-                // the structured stale-slice refusal: never merge across
-                // database generations
-                anyhow::ensure!(
-                    h.generation == r.generation,
-                    "generation_mismatch: backend {addr} serves database generation {} but \
-                     {ref_addr} serves {} — re-run `swaphi index --partitions` so every \
-                     slice comes from the same build",
-                    h.generation,
-                    r.generation
-                );
-                anyhow::ensure!(
-                    h.n_total == r.n_total,
-                    "cluster handshake: {addr} reports {} total sequences but {ref_addr} \
-                     reports {}",
-                    h.n_total,
-                    r.n_total
-                );
-            } else {
-                reference = Some((addr.clone(), h.clone()));
-            }
-            if let Some((prev, _)) = &slots[h.partition] {
-                anyhow::bail!(
-                    "cluster handshake: partition {} claimed by both {prev} and {addr}",
-                    h.partition
-                );
-            }
-            slots[h.partition] = Some((addr.clone(), h));
-        }
-        let (_, reference) = reference.expect("non-empty backend list");
-        let mut infos = Vec::with_capacity(n);
-        let mut session_top_k = usize::MAX;
-        for (p, slot) in slots.into_iter().enumerate() {
-            let (addr, h) = slot.ok_or_else(|| {
-                anyhow::anyhow!("cluster handshake: no configured backend serves partition {p}")
-            })?;
-            session_top_k = session_top_k.min(h.top_k);
-            infos.push(BackendInfo { addr, partition: p, n_seqs: h.n_seqs });
-        }
-        let covered: usize = infos.iter().map(|b| b.n_seqs).sum();
-        anyhow::ensure!(
-            covered == reference.n_total,
-            "cluster handshake: partitions cover {covered} sequences but the database holds {}",
-            reference.n_total
-        );
+        // the recorder exists before the handshake: clock-offset
+        // estimation timestamps its pings against the same epoch the
+        // span ring uses, so offsets apply to span start_us directly
+        let recorder = Arc::new(if cfg.trace_ring > 0 {
+            TraceRecorder::enabled(cfg.trace_ring)
+        } else {
+            TraceRecorder::new(0)
+        });
+        let fleet = handshake::establish(&cfg.backends, &recorder)?;
 
         if cfg.handle_signals {
             crate::server::install_signal_handlers();
@@ -333,7 +261,8 @@ impl Router {
             "Per-attempt backend search latency, all backends.",
             Histogram::exponential(60_000_000),
         );
-        let backends: Vec<Backend> = infos
+        let backends: Vec<Backend> = fleet
+            .infos
             .into_iter()
             .map(|info| {
                 let b = info.partition.to_string();
@@ -370,18 +299,18 @@ impl Router {
 
         let (listener, addr) = bind(&cfg.listen)?;
         listener.set_nonblocking(true)?;
-        let recorder = Arc::new(if cfg.trace_ring > 0 {
-            TraceRecorder::enabled(cfg.trace_ring)
-        } else {
-            TraceRecorder::new(0)
-        });
         let estimator = Mutex::new(RateEstimator::new(n, 0.3));
+        let health = HealthPlane::new(SloConfig {
+            availability: cfg.slo_availability,
+            p99_us: cfg.slo_p99_ms.saturating_mul(1_000),
+        });
+        let flight = FlightRecorder::new(cfg.flight_dir.clone(), cfg.flight_bundles);
         let shared = Arc::new(RouterShared {
             stop: AtomicBool::new(false),
             backends,
-            generation: reference.generation,
-            n_total: reference.n_total,
-            session_top_k,
+            generation: fleet.generation,
+            n_total: fleet.n_total,
+            session_top_k: fleet.session_top_k,
             registry,
             requests_total,
             partial_total,
@@ -390,6 +319,8 @@ impl Router {
             backend_latency,
             recorder,
             estimator,
+            health,
+            flight,
             cfg,
         });
         let accept = {
@@ -572,7 +503,11 @@ fn handle_line(line: &str, shared: &Arc<RouterShared>) -> String {
     };
     let trace = shared.recorder.next_trace_id();
     match req {
-        Request::Ping { id } => protocol::pong_response(id.as_deref(), trace),
+        // the pong carries this router's recorder clock so an upstream
+        // tier could clock-align it exactly as it aligns its backends
+        Request::Ping { id } => {
+            protocol::pong_response(id.as_deref(), trace, shared.recorder.now_us())
+        }
         // the router answers `hello` as the whole database: partition 0
         // of 1, full sequence count — clients see one logical daemon
         Request::Hello { id } => protocol::hello_response(
@@ -591,16 +526,135 @@ fn handle_line(line: &str, shared: &Arc<RouterShared>) -> String {
         Request::Metrics { id } => {
             protocol::metrics_response(id.as_deref(), &metrics_text(shared), trace)
         }
-        Request::Trace { id, n } => {
-            let spans = match n {
+        Request::Trace { id, n, cluster, filter } => {
+            let mut spans = match n {
                 Some(n) => shared.recorder.recent(n),
                 None => shared.recorder.spans(),
             };
-            let spans = Json::Arr(spans.iter().map(span_json).collect());
-            protocol::trace_response(id.as_deref(), spans, trace)
+            if let Some(t) = filter {
+                spans.retain(|s| s.trace == t);
+            }
+            if cluster {
+                protocol::trace_cluster_response(
+                    id.as_deref(),
+                    cluster_procs(shared, &spans, n, filter),
+                    trace,
+                )
+            } else {
+                let spans = Json::Arr(spans.iter().map(span_json).collect());
+                protocol::trace_response(id.as_deref(), spans, trace)
+            }
+        }
+        Request::Health { id } => {
+            let report = shared.health.report(health_sample(shared));
+            // fold fleet liveness into the SLO verdict: a dead backend
+            // degrades health immediately, before enough traffic has
+            // accumulated for its burn rate to show
+            let dead =
+                shared.backends.iter().filter(|b| !b.healthy.load(Ordering::SeqCst)).count();
+            let fleet_verdict = if dead == 0 {
+                Verdict::Ok
+            } else if dead == shared.backends.len() {
+                Verdict::Critical
+            } else {
+                Verdict::Warn
+            };
+            let verdict = report.verdict.max(fleet_verdict);
+            protocol::health_response(id.as_deref(), verdict.as_str(), report.detail_json(), trace)
         }
         Request::Search(s) => route_search(s, shared, trace),
     }
+}
+
+/// Assemble the cluster-wide trace: the router's own (already filtered)
+/// spans first, then every backend's ring fetched over the wire and
+/// rebased onto the router's clock. One row per process, named so the
+/// Perfetto export labels them.
+fn cluster_procs(
+    shared: &RouterShared,
+    router_spans: &[Span],
+    n: Option<usize>,
+    filter: Option<u64>,
+) -> Json {
+    let mut procs = Vec::with_capacity(1 + shared.backends.len());
+    let mut row = BTreeMap::new();
+    row.insert("name".to_string(), Json::Str("router".to_string()));
+    row.insert("spans".to_string(), Json::Arr(router_spans.iter().map(span_json).collect()));
+    procs.push(Json::Obj(row));
+    for b in &shared.backends {
+        let spans = fetch_backend_spans(b, n, filter);
+        let mut row = BTreeMap::new();
+        row.insert("name".to_string(), Json::Str(format!("backend {}", b.info.partition)));
+        row.insert("spans".to_string(), Json::Arr(spans.iter().map(span_json).collect()));
+        procs.push(Json::Obj(row));
+    }
+    Json::Arr(procs)
+}
+
+/// Fetch one backend's span ring and rebase each span's `start_us` by
+/// the clock offset the handshake estimated (`router_us = backend_us +
+/// offset`). A dead or slow backend contributes an empty row rather
+/// than failing the whole assembly.
+fn fetch_backend_spans(b: &Backend, n: Option<usize>, filter: Option<u64>) -> Vec<Span> {
+    let Ok(mut c) = Client::connect(&b.info.addr) else { return Vec::new() };
+    let _ = c.set_read_timeout(Some(Duration::from_secs(5)));
+    let mut m = BTreeMap::new();
+    m.insert("v".to_string(), Json::Num(protocol::VERSION as f64));
+    m.insert("op".to_string(), Json::Str("trace".to_string()));
+    if let Some(n) = n {
+        m.insert("n".to_string(), Json::Num(n as f64));
+    }
+    if let Some(t) = filter {
+        m.insert("trace".to_string(), Json::Str(trace_id_hex(t)));
+    }
+    let Ok(resp) = c.request_line(&Json::Obj(m).to_string()) else { return Vec::new() };
+    let Some(arr) = resp.get("spans").and_then(Json::as_arr) else { return Vec::new() };
+    let off = b.info.clock_offset_us;
+    arr.iter()
+        .filter_map(span_from_json)
+        .map(|mut s| {
+            s.start_us = s.start_us.saturating_add_signed(off);
+            s
+        })
+        .collect()
+}
+
+/// The router's cumulative traffic sample for the SLO plane: totals
+/// from the routed-search latency histogram, errors from the per-code
+/// error counters.
+fn health_sample(shared: &RouterShared) -> HealthSample {
+    let errors: u64 = shared
+        .registry
+        .labeled_snapshot("swaphi_errors_total")
+        .iter()
+        .map(|(_, v)| *v)
+        .sum();
+    let (lat_bounds, lat_counts, lat_max, routed) = {
+        let h = shared.latency.lock().unwrap();
+        (h.bounds().to_vec(), h.counts().to_vec(), h.max(), h.count())
+    };
+    HealthSample {
+        t_us: shared.recorder.now_us(),
+        total: routed + errors,
+        errors,
+        lat_bounds,
+        lat_counts,
+        lat_max,
+    }
+}
+
+/// What a flight bundle captures at the router: stats (fleet health,
+/// per-backend counters, suggested rates), the span ring, and the
+/// current SLO detail.
+fn flight_body(shared: &RouterShared) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("stats".to_string(), stats_json(shared));
+    m.insert(
+        "spans".to_string(),
+        Json::Arr(shared.recorder.spans().iter().map(span_json).collect()),
+    );
+    m.insert("health".to_string(), shared.health.report(health_sample(shared)).detail_json());
+    Json::Obj(m)
 }
 
 // ---------------------------------------------------------------------
@@ -651,10 +705,14 @@ fn route_search(req: protocol::SearchRequest, shared: &Arc<RouterShared>, trace:
         req.deadline_ms.unwrap_or(shared.cfg.backend_timeout_ms).min(shared.cfg.backend_timeout_ms);
     let deadline = started + Duration::from_millis(total_ms.max(1));
 
-    // one request line shared by every partition: explicit top_k (each
+    // one request map shared by every partition: explicit top_k (each
     // partition must contribute its own full top-`limit` for the merge
-    // proof to hold) and the clamped deadline
-    let line = {
+    // proof to hold), the clamped deadline, and the propagated trace
+    // context — the routed request's one identity. Backends adopt the
+    // `trace` id instead of minting, so every span the fan-out produces
+    // anywhere in the fleet carries this id.
+    let route_span = shared.recorder.next_trace_id();
+    let base = {
         let mut m = BTreeMap::new();
         m.insert("v".to_string(), Json::Num(protocol::VERSION as f64));
         m.insert("op".to_string(), Json::Str("search".to_string()));
@@ -672,19 +730,29 @@ fn route_search(req: protocol::SearchRequest, shared: &Arc<RouterShared>, trace:
         if let Some(fields) = req.fields {
             m.insert("fields".to_string(), Json::Str(fields.name().to_string()));
         }
-        Arc::new(Json::Obj(m).to_string())
+        m.insert("trace".to_string(), Json::Str(trace_id_hex(trace)));
+        m
     };
 
     let n = shared.backends.len();
     let (tx, rx) = mpsc::channel();
     for pidx in 0..n {
+        // each partition's attempts (first, retries, hedge) share one
+        // `backend` span id, propagated as `parent` so the backend's
+        // own `request` span nests under this routing attempt
+        let span = shared.recorder.next_trace_id();
+        let line = {
+            let mut m = base.clone();
+            m.insert("parent".to_string(), Json::Str(span_id_hex(span)));
+            Arc::new(Json::Obj(m).to_string())
+        };
+        let ids = TraceCtx { trace, span, route: route_span };
         let shared = Arc::clone(shared);
-        let line = Arc::clone(&line);
         let tx = tx.clone();
         let qlen = req.seq.len();
         let _ = std::thread::Builder::new()
             .name(format!("swaphi-part-{pidx}"))
-            .spawn(move || partition_worker(&shared, pidx, &line, qlen, deadline, trace, &tx));
+            .spawn(move || partition_worker(&shared, pidx, &line, qlen, deadline, ids, &tx));
     }
     drop(tx);
 
@@ -739,10 +807,30 @@ fn route_search(req: protocol::SearchRequest, shared: &Arc<RouterShared>, trace:
     if shared.recorder.is_enabled() {
         let start = shared.recorder.us_of(started);
         shared.recorder.record(
-            Span::new(trace, "route", start, latency_us).items(hits.len()).cache_hit(cached),
+            Span::new(trace, "route", start, latency_us)
+                .items(hits.len())
+                .cache_hit(cached)
+                .span_id(route_span),
         );
     }
+    // a streak of partial answers (complete ones reset it) trips the
+    // flight recorder — the degradation is real even though every
+    // response individually "succeeded"
+    shared.flight.partial_response(shared.recorder.now_us(), !missing.is_empty(), &|| {
+        flight_body(shared)
+    });
     protocol::search_response_partial(id, &req.query_id, cached, &hits, trace, &missing)
+}
+
+/// The trace identity one partition worker stamps on its spans: the
+/// routed request's trace id, this partition's `backend` span id (also
+/// on the wire as the propagated `parent`), and the parent `route`
+/// span id.
+#[derive(Clone, Copy)]
+struct TraceCtx {
+    trace: u64,
+    span: u64,
+    route: u64,
 }
 
 /// Drive one partition to a verdict: first attempt, hedge after the
@@ -754,7 +842,7 @@ fn partition_worker(
     line: &Arc<String>,
     qlen: usize,
     deadline: Instant,
-    trace: u64,
+    ids: TraceCtx,
     out: &mpsc::Sender<(usize, PartReply)>,
 ) {
     let backend = &shared.backends[pidx];
@@ -770,6 +858,7 @@ fn partition_worker(
         let now = Instant::now();
         if now >= deadline {
             backend.healthy.store(false, Ordering::SeqCst);
+            shared.flight.backend_dead(shared.recorder.now_us(), pidx, &|| flight_body(shared));
             backend.timeouts.inc();
             backend.failures.inc();
             break PartReply::Failed(format!(
@@ -785,7 +874,11 @@ fn partition_worker(
         match rx.recv_timeout(wait) {
             Ok(Ok((resp, dur))) => match protocol::hits_of_response(&resp) {
                 Ok(hits) => {
-                    backend.healthy.store(true, Ordering::SeqCst);
+                    if !backend.healthy.swap(true, Ordering::SeqCst) {
+                        // a dead partition answered again: re-arm its
+                        // flight-recorder trigger
+                        shared.flight.backend_recovered(pidx);
+                    }
                     let us = dur.as_micros().min(u64::MAX as u128) as u64;
                     backend.latency.lock().unwrap().record(us);
                     shared.backend_latency.lock().unwrap().record(us);
@@ -801,9 +894,11 @@ fn partition_worker(
                     if shared.recorder.is_enabled() {
                         let end = shared.recorder.now_us();
                         shared.recorder.record(
-                            Span::new(trace, "backend", end.saturating_sub(us), us)
+                            Span::new(ids.trace, "backend", end.saturating_sub(us), us)
                                 .device(pidx)
-                                .items(hits.len()),
+                                .items(hits.len())
+                                .span_id(ids.span)
+                                .parent(ids.route),
                         );
                     }
                     let cached =
@@ -812,6 +907,9 @@ fn partition_worker(
                 }
                 Err(e) => {
                     backend.healthy.store(false, Ordering::SeqCst);
+                    shared.flight.backend_dead(shared.recorder.now_us(), pidx, &|| {
+                        flight_body(shared)
+                    });
                     backend.failures.inc();
                     break PartReply::Failed(format!(
                         "partition {pidx} ({}): malformed hits: {e:#}",
@@ -839,6 +937,9 @@ fn partition_worker(
                     outstanding += 1;
                 } else if outstanding == 0 {
                     backend.healthy.store(false, Ordering::SeqCst);
+                    shared.flight.backend_dead(shared.recorder.now_us(), pidx, &|| {
+                        flight_body(shared)
+                    });
                     backend.failures.inc();
                     break PartReply::Failed(format!(
                         "partition {pidx} ({}): {last_err}",
@@ -858,6 +959,9 @@ fn partition_worker(
             }
             Err(mpsc::RecvTimeoutError::Disconnected) => {
                 backend.healthy.store(false, Ordering::SeqCst);
+                shared.flight.backend_dead(shared.recorder.now_us(), pidx, &|| {
+                    flight_body(shared)
+                });
                 backend.failures.inc();
                 break PartReply::Failed(format!(
                     "partition {pidx} ({}): attempt threads died: {last_err}",
@@ -1029,6 +1133,8 @@ fn metrics_text(shared: &RouterShared) -> String {
             u8::from(b.healthy.load(Ordering::SeqCst))
         );
     }
+    let report = shared.health.report(health_sample(shared));
+    shared.health.prometheus_append(&mut out, &report);
     out
 }
 
@@ -1048,21 +1154,6 @@ mod tests {
         assert_eq!(auto_hedge_delay(32, 60_000_000, 10_000), Duration::from_secs(5));
         // a tiny timeout can't push the ceiling below the floor
         assert_eq!(auto_hedge_delay(32, 1, 1), Duration::from_millis(25));
-    }
-
-    #[test]
-    fn hello_info_parses_a_hello_response() {
-        let line = protocol::hello_response(None, "00000000000000ab", 2, 3, 40, 120, 10, 0);
-        let h = hello_of(&Json::parse(&line).unwrap()).unwrap();
-        assert_eq!(h.generation, "00000000000000ab");
-        assert_eq!(h.partition, 2);
-        assert_eq!(h.partitions, 3);
-        assert_eq!(h.n_seqs, 40);
-        assert_eq!(h.n_total, 120);
-        assert_eq!(h.top_k, 10);
-        // a pre-partition daemon's reply (no top_k) is rejected, not
-        // silently defaulted — the router must know the real cap
-        assert!(hello_of(&Json::parse(r#"{"v":1,"ok":true,"op":"hello"}"#).unwrap()).is_err());
     }
 
     #[test]

@@ -334,6 +334,10 @@ pub const KNOWN_KEYS: &[&str] = &[
     "server.max_connections",
     "server.slow_query_ms",
     "server.trace_ring",
+    "server.slo_availability",
+    "server.slo_p99_ms",
+    "server.flight_dir",
+    "server.flight_bundles",
     "cluster.listen",
     "cluster.backends",
     "cluster.hedge_ms",
@@ -341,6 +345,10 @@ pub const KNOWN_KEYS: &[&str] = &[
     "cluster.backend_timeout_ms",
     "cluster.max_connections",
     "cluster.trace_ring",
+    "cluster.slo_availability",
+    "cluster.slo_p99_ms",
+    "cluster.flight_dir",
+    "cluster.flight_bundles",
 ];
 
 /// Fully-typed SWAPHI configuration.
@@ -401,6 +409,14 @@ pub struct SwaphiConfig {
     /// Span-ring capacity behind the daemon's `trace` op (0 disables
     /// span recording; trace ids are still minted and echoed).
     pub server_trace_ring: usize,
+    /// Availability SLO target for the daemon's `health` op.
+    pub server_slo_availability: f64,
+    /// Latency SLO target (request p99, milliseconds).
+    pub server_slo_p99_ms: u64,
+    /// Flight-recorder bundle directory; empty disables the recorder.
+    pub server_flight_dir: String,
+    /// Flight bundles kept on disk before the oldest is pruned.
+    pub server_flight_bundles: usize,
     /// Scatter–gather router (`[cluster]` section; `swaphi route`).
     pub cluster_listen: String,
     /// Backend daemon addresses, one per partition (quoted strings in
@@ -412,6 +428,13 @@ pub struct SwaphiConfig {
     pub cluster_backend_timeout_ms: u64,
     pub cluster_max_connections: usize,
     pub cluster_trace_ring: usize,
+    /// Availability SLO target for the router's `health` op.
+    pub cluster_slo_availability: f64,
+    /// Latency SLO target (routed-search p99, milliseconds).
+    pub cluster_slo_p99_ms: u64,
+    /// Router flight-recorder bundle directory; empty disables it.
+    pub cluster_flight_dir: String,
+    pub cluster_flight_bundles: usize,
 }
 
 impl SwaphiConfig {
@@ -488,6 +511,19 @@ impl SwaphiConfig {
             tune_dead_band.is_finite() && tune_dead_band > 0.0,
             "tune.dead_band must be a positive number, got {tune_dead_band}"
         );
+        // SLO availability targets are fractions of requests answered
+        // without error — 1.0 would make the burn rate's error budget
+        // zero, so the open interval is the valid set
+        let slo_target = |key: &str| -> anyhow::Result<f64> {
+            let v = raw.f64_or(key, 0.999)?;
+            anyhow::ensure!(
+                v.is_finite() && v > 0.0 && v < 1.0,
+                "{key} must be in (0, 1) exclusive, got {v}"
+            );
+            Ok(v)
+        };
+        let server_slo_availability = slo_target("server.slo_availability")?;
+        let cluster_slo_availability = slo_target("cluster.slo_availability")?;
         Ok(SwaphiConfig {
             scoring: Scoring::new(&matrix, gap_open, gap_extend)?,
             engine: EngineKind::parse(&engine_s)
@@ -534,6 +570,10 @@ impl SwaphiConfig {
             server_max_connections: raw.int_or("server.max_connections", 512)?.max(1) as usize,
             server_slow_query_ms: raw.int_or("server.slow_query_ms", 0)?.max(0) as u64,
             server_trace_ring: raw.int_or("server.trace_ring", 4096)?.max(0) as usize,
+            server_slo_availability,
+            server_slo_p99_ms: raw.int_or("server.slo_p99_ms", 2_000)?.max(1) as u64,
+            server_flight_dir: raw.str_or("server.flight_dir", "")?,
+            server_flight_bundles: raw.int_or("server.flight_bundles", 8)?.max(1) as usize,
             cluster_listen: raw.str_or("cluster.listen", "127.0.0.1:7900")?,
             cluster_backends: raw.str_list_or("cluster.backends", &[])?,
             cluster_hedge_ms: raw.int_or("cluster.hedge_ms", 0)?.max(0) as u64,
@@ -544,6 +584,10 @@ impl SwaphiConfig {
             cluster_max_connections: raw.int_or("cluster.max_connections", 256)?.max(1)
                 as usize,
             cluster_trace_ring: raw.int_or("cluster.trace_ring", 4096)?.max(0) as usize,
+            cluster_slo_availability,
+            cluster_slo_p99_ms: raw.int_or("cluster.slo_p99_ms", 2_000)?.max(1) as u64,
+            cluster_flight_dir: raw.str_or("cluster.flight_dir", "")?,
+            cluster_flight_bundles: raw.int_or("cluster.flight_bundles", 8)?.max(1) as usize,
         })
     }
 
@@ -565,6 +609,11 @@ impl SwaphiConfig {
             handle_signals: false,
             slow_query_ms: self.server_slow_query_ms,
             trace_ring: self.server_trace_ring,
+            slo_availability: self.server_slo_availability,
+            slo_p99_ms: self.server_slo_p99_ms,
+            flight_dir: (!self.server_flight_dir.is_empty())
+                .then(|| self.server_flight_dir.clone().into()),
+            flight_bundles: self.server_flight_bundles,
         }
     }
 
@@ -607,6 +656,11 @@ impl SwaphiConfig {
             max_connections: self.cluster_max_connections,
             handle_signals: false,
             trace_ring: self.cluster_trace_ring,
+            slo_availability: self.cluster_slo_availability,
+            slo_p99_ms: self.cluster_slo_p99_ms,
+            flight_dir: (!self.cluster_flight_dir.is_empty())
+                .then(|| self.cluster_flight_dir.clone().into()),
+            flight_bundles: self.cluster_flight_bundles,
         }
     }
 
@@ -986,6 +1040,44 @@ mod tests {
         assert_eq!(d.max_connections, 512);
         assert_eq!(d.slow_query_ms, 0, "slow-query log is off by default");
         assert_eq!(d.trace_ring, 4096, "span ring is on by default");
+    }
+
+    #[test]
+    fn slo_and_flight_keys_materialize_and_validate() {
+        // defaults: three nines, 2 s p99, recorder off
+        let d = SwaphiConfig::default_config();
+        let sc = d.server_config();
+        assert!((sc.slo_availability - 0.999).abs() < 1e-12);
+        assert_eq!(sc.slo_p99_ms, 2_000);
+        assert_eq!(sc.flight_dir, None, "flight recorder is opt-in");
+        assert_eq!(sc.flight_bundles, 8);
+        let rc = d.router_config();
+        assert!((rc.slo_availability - 0.999).abs() < 1e-12);
+        assert_eq!(rc.flight_dir, None);
+
+        let raw = RawConfig::parse(
+            "[server]\nslo_availability = 0.99\nslo_p99_ms = 500\n\
+             flight_dir = \"/tmp/flight\"\nflight_bundles = 3\n\
+             [cluster]\nslo_availability = 0.9999\nflight_dir = \"/tmp/rf\"\n",
+        )
+        .unwrap();
+        let cfg = SwaphiConfig::from_raw(&raw).unwrap();
+        let sc = cfg.server_config();
+        assert!((sc.slo_availability - 0.99).abs() < 1e-12);
+        assert_eq!(sc.slo_p99_ms, 500);
+        assert_eq!(sc.flight_dir.as_deref(), Some(std::path::Path::new("/tmp/flight")));
+        assert_eq!(sc.flight_bundles, 3);
+        let rc = cfg.router_config();
+        assert!((rc.slo_availability - 0.9999).abs() < 1e-12);
+        assert_eq!(rc.flight_dir.as_deref(), Some(std::path::Path::new("/tmp/rf")));
+
+        // a 100% availability target has no error budget to burn
+        for bad in ["1.0", "0.0", "-0.5", "nan"] {
+            let mut raw = RawConfig::default();
+            raw.set("server.slo_availability", bad).unwrap();
+            let err = SwaphiConfig::from_raw(&raw).unwrap_err().to_string();
+            assert!(err.contains("slo_availability"), "{bad}: {err}");
+        }
     }
 
     #[test]

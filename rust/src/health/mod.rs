@@ -1,0 +1,824 @@
+//! SLO health plane and anomaly flight recorder.
+//!
+//! Two cooperating pieces, both shared by the daemon and the router:
+//!
+//! * [`HealthPlane`] — rolling-window availability and p99-latency SLOs
+//!   with multi-window burn rates, computed lazily from cumulative
+//!   counter/histogram snapshots (the caller feeds one
+//!   [`HealthSample`] per read, the plane diffs against the ring).
+//!   Surfaced by the `health` protocol op and the `swaphi_slo_*` /
+//!   `swaphi_burn_rate` Prometheus families.
+//! * [`FlightRecorder`] — trips on configured anomalies (backend marked
+//!   dead, deadline-exceeded burst, partial-response streak) and
+//!   atomically dumps one self-contained JSON bundle (span ring +
+//!   metrics snapshot + slow-query ring + fleet/tune state) to
+//!   `--flight-dir`, ring-limited to K bundles on disk.
+//!
+//! The plane is deliberately decoupled from `metrics::Registry`: it
+//! consumes plain snapshots, so the router (whose error accounting
+//! differs from the daemon's) feeds it the same way the daemon does.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::fmt::Write as _;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+/// SLO targets. Availability is a success-fraction target in (0, 1);
+/// the latency SLO is a p99 bound in microseconds.
+#[derive(Clone, Copy, Debug)]
+pub struct SloConfig {
+    /// Availability target, e.g. 0.999 ("three nines").
+    pub availability: f64,
+    /// p99 latency target in microseconds.
+    pub p99_us: u64,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        SloConfig { availability: 0.999, p99_us: 2_000_000 }
+    }
+}
+
+/// The burn-rate windows, shortest first. Short by server standards —
+/// this is a request-scale service whose CI run lasts seconds, so the
+/// windows are seconds-to-minutes rather than hours; the multi-window
+/// *structure* (fast window catches bursts, slow window catches slow
+/// bleeds) is the standard SRE shape.
+pub const WINDOWS: &[(&str, u64)] = &[("30s", 30), ("5m", 300), ("30m", 1800)];
+
+/// Burn rate at which a warn becomes critical (error budget consumed
+/// eight times faster than sustainable).
+const CRITICAL_BURN: f64 = 8.0;
+/// p99/target ratio past which latency is critical.
+const CRITICAL_LATENCY_RATIO: f64 = 2.0;
+
+/// One cumulative snapshot of the request counters feeding the SLOs.
+/// `total`/`errors` are monotone counters; `lat_bounds`/`lat_counts`
+/// are the latency histogram's bucket layout and per-bucket counts
+/// (also monotone), so windowed distributions fall out of a diff.
+#[derive(Clone, Debug)]
+pub struct HealthSample {
+    /// Monotonic timestamp, microseconds (the trace recorder's clock).
+    pub t_us: u64,
+    /// Requests answered, success or failure.
+    pub total: u64,
+    /// Error responses (the availability SLO's numerator).
+    pub errors: u64,
+    /// Latency histogram bucket upper bounds (exclusive), ascending.
+    pub lat_bounds: Vec<u64>,
+    /// Per-bucket counts, one longer than `lat_bounds` (overflow last).
+    pub lat_counts: Vec<u64>,
+    /// Observed latency maximum, the +Inf-bucket quantile fallback.
+    pub lat_max: u64,
+}
+
+/// SLO verdict, ordered by severity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Verdict {
+    Ok,
+    Warn,
+    Critical,
+}
+
+impl Verdict {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Verdict::Ok => "ok",
+            Verdict::Warn => "warn",
+            Verdict::Critical => "critical",
+        }
+    }
+
+    /// Numeric form for the `swaphi_slo_health` gauge (0/1/2).
+    pub fn as_level(self) -> u64 {
+        match self {
+            Verdict::Ok => 0,
+            Verdict::Warn => 1,
+            Verdict::Critical => 2,
+        }
+    }
+}
+
+/// One window's worth of one SLO's status.
+#[derive(Clone, Debug)]
+pub struct WindowStatus {
+    pub window: &'static str,
+    /// Requests observed in the window.
+    pub total: u64,
+    /// The SLO's measured value in the window: error fraction for
+    /// availability, p99 microseconds for latency.
+    pub value: f64,
+    /// Budget burn rate: 1.0 = consuming exactly the allowed budget.
+    pub burn: f64,
+}
+
+/// One SLO's full status across all windows.
+#[derive(Clone, Debug)]
+pub struct SloStatus {
+    pub slo: &'static str,
+    pub target: f64,
+    pub verdict: Verdict,
+    pub windows: Vec<WindowStatus>,
+}
+
+/// The whole health plane's answer.
+#[derive(Clone, Debug)]
+pub struct HealthReport {
+    pub verdict: Verdict,
+    pub slos: Vec<SloStatus>,
+}
+
+impl HealthReport {
+    /// The `slos` array of the `health` op's response.
+    pub fn detail_json(&self) -> Json {
+        Json::Arr(
+            self.slos
+                .iter()
+                .map(|s| {
+                    let mut m = BTreeMap::new();
+                    m.insert("slo".to_string(), Json::Str(s.slo.to_string()));
+                    m.insert("target".to_string(), Json::Num(s.target));
+                    m.insert("verdict".to_string(), Json::Str(s.verdict.as_str().to_string()));
+                    m.insert(
+                        "windows".to_string(),
+                        Json::Arr(
+                            s.windows
+                                .iter()
+                                .map(|w| {
+                                    let mut wm = BTreeMap::new();
+                                    wm.insert(
+                                        "window".to_string(),
+                                        Json::Str(w.window.to_string()),
+                                    );
+                                    wm.insert("total".to_string(), Json::Num(w.total as f64));
+                                    wm.insert("value".to_string(), Json::Num(w.value));
+                                    wm.insert("burn".to_string(), Json::Num(w.burn));
+                                    Json::Obj(wm)
+                                })
+                                .collect(),
+                        ),
+                    );
+                    Json::Obj(m)
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Rolling-window SLO evaluation over a ring of cumulative snapshots.
+///
+/// Reads are where the work happens: [`HealthPlane::report`] pushes the
+/// fresh sample, prunes the ring past the longest window, and diffs the
+/// newest sample against the oldest sample inside each window. Between
+/// reads the plane costs nothing — no background thread, no per-request
+/// work beyond the counters the server already keeps.
+pub struct HealthPlane {
+    cfg: SloConfig,
+    ring: Mutex<VecDeque<HealthSample>>,
+}
+
+impl HealthPlane {
+    pub fn new(cfg: SloConfig) -> Self {
+        HealthPlane { cfg, ring: Mutex::new(VecDeque::new()) }
+    }
+
+    pub fn config(&self) -> SloConfig {
+        self.cfg
+    }
+
+    /// Evaluate the SLOs given the freshest cumulative sample.
+    pub fn report(&self, sample: HealthSample) -> HealthReport {
+        let now = sample.t_us;
+        let longest = WINDOWS.iter().map(|&(_, s)| s).max().unwrap_or(0) * 1_000_000;
+        let mut ring = self.ring.lock().unwrap();
+        ring.push_back(sample);
+        // keep one sample older than the longest window as its baseline
+        while ring.len() > 2
+            && ring[1].t_us + longest < now
+        {
+            ring.pop_front();
+        }
+        let newest = ring.back().expect("just pushed").clone();
+
+        let mut availability_windows = Vec::with_capacity(WINDOWS.len());
+        let mut latency_windows = Vec::with_capacity(WINDOWS.len());
+        for &(name, secs) in WINDOWS {
+            let horizon = now.saturating_sub(secs * 1_000_000);
+            // the youngest sample at or before the horizon baselines the
+            // window; absent one (young process), the window starts empty
+            let base = ring
+                .iter()
+                .rev()
+                .find(|s| s.t_us <= horizon)
+                .cloned()
+                .unwrap_or_else(|| ring.front().expect("nonempty").clone());
+            let total = newest.total.saturating_sub(base.total);
+            let errors = newest.errors.saturating_sub(base.errors);
+            let error_frac = if total == 0 { 0.0 } else { errors as f64 / total as f64 };
+            let burn = error_frac / (1.0 - self.cfg.availability).max(1e-9);
+            availability_windows.push(WindowStatus {
+                window: name,
+                total,
+                value: error_frac,
+                burn,
+            });
+            let p99 = windowed_p99(&base, &newest);
+            let lat_burn = if p99 == 0 { 0.0 } else { p99 as f64 / self.cfg.p99_us as f64 };
+            latency_windows.push(WindowStatus {
+                window: name,
+                total,
+                value: p99 as f64,
+                burn: lat_burn,
+            });
+        }
+        drop(ring);
+
+        let availability_verdict = availability_windows
+            .iter()
+            .filter(|w| w.total > 0)
+            .map(|w| {
+                if w.burn >= CRITICAL_BURN {
+                    Verdict::Critical
+                } else if w.burn >= 1.0 {
+                    Verdict::Warn
+                } else {
+                    Verdict::Ok
+                }
+            })
+            .max()
+            .unwrap_or(Verdict::Ok);
+        let latency_verdict = latency_windows
+            .iter()
+            .filter(|w| w.total > 0)
+            .map(|w| {
+                if w.burn >= CRITICAL_LATENCY_RATIO {
+                    Verdict::Critical
+                } else if w.burn > 1.0 {
+                    Verdict::Warn
+                } else {
+                    Verdict::Ok
+                }
+            })
+            .max()
+            .unwrap_or(Verdict::Ok);
+
+        let slos = vec![
+            SloStatus {
+                slo: "availability",
+                target: self.cfg.availability,
+                verdict: availability_verdict,
+                windows: availability_windows,
+            },
+            SloStatus {
+                slo: "p99_latency",
+                target: self.cfg.p99_us as f64,
+                verdict: latency_verdict,
+                windows: latency_windows,
+            },
+        ];
+        let verdict = slos.iter().map(|s| s.verdict).max().unwrap_or(Verdict::Ok);
+        HealthReport { verdict, slos }
+    }
+
+    /// Append the `swaphi_slo_*` / `swaphi_burn_rate` families to a
+    /// Prometheus text exposition, given a just-computed report.
+    pub fn prometheus_append(&self, out: &mut String, report: &HealthReport) {
+        let _ = writeln!(out, "# HELP swaphi_slo_availability_target availability SLO target (success fraction)");
+        let _ = writeln!(out, "# TYPE swaphi_slo_availability_target gauge");
+        let _ = writeln!(out, "swaphi_slo_availability_target {}", fmt_f64(self.cfg.availability));
+        let _ = writeln!(out, "# HELP swaphi_slo_p99_target_microseconds p99 latency SLO target");
+        let _ = writeln!(out, "# TYPE swaphi_slo_p99_target_microseconds gauge");
+        let _ = writeln!(out, "swaphi_slo_p99_target_microseconds {}", self.cfg.p99_us);
+        let _ = writeln!(out, "# HELP swaphi_slo_health SLO verdict (0 ok, 1 warn, 2 critical)");
+        let _ = writeln!(out, "# TYPE swaphi_slo_health gauge");
+        let _ = writeln!(out, "swaphi_slo_health {}", report.verdict.as_level());
+        let _ = writeln!(out, "# HELP swaphi_burn_rate error-budget burn rate per SLO and window (1.0 = at budget)");
+        let _ = writeln!(out, "# TYPE swaphi_burn_rate gauge");
+        for s in &report.slos {
+            for w in &s.windows {
+                let _ = writeln!(
+                    out,
+                    "swaphi_burn_rate{{slo=\"{}\",window=\"{}\"}} {}",
+                    s.slo,
+                    w.window,
+                    fmt_f64(w.burn)
+                );
+            }
+        }
+    }
+}
+
+/// p99 of the latency distribution accumulated between two cumulative
+/// samples (bucket-wise count diff, then the histogram quantile walk).
+fn windowed_p99(base: &HealthSample, newest: &HealthSample) -> u64 {
+    if base.lat_bounds != newest.lat_bounds {
+        // layout changed under us (never happens in-process); fall back
+        // to the newest cumulative distribution
+        return quantile_of(&newest.lat_bounds, &newest.lat_counts, newest.lat_max, 0.99);
+    }
+    let diff: Vec<u64> = newest
+        .lat_counts
+        .iter()
+        .zip(base.lat_counts.iter().chain(std::iter::repeat(&0)))
+        .map(|(n, b)| n.saturating_sub(*b))
+        .collect();
+    quantile_of(&newest.lat_bounds, &diff, newest.lat_max, 0.99)
+}
+
+fn quantile_of(bounds: &[u64], counts: &[u64], max: u64, q: f64) -> u64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0;
+    }
+    let target = ((q * total as f64).ceil() as u64).max(1);
+    let mut acc = 0;
+    for (i, &c) in counts.iter().enumerate() {
+        acc += c;
+        if acc >= target {
+            return if i < bounds.len() { bounds[i] } else { max };
+        }
+    }
+    max
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Flight-recorder triggers — which anomaly tripped a bundle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Anomaly {
+    /// A cluster backend was marked dead (router only).
+    BackendDead,
+    /// A burst of deadline-exceeded responses.
+    DeadlineBurst,
+    /// A streak of partial (degraded) routed responses.
+    PartialStreak,
+}
+
+impl Anomaly {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Anomaly::BackendDead => "backend_dead",
+            Anomaly::DeadlineBurst => "deadline_burst",
+            Anomaly::PartialStreak => "partial_streak",
+        }
+    }
+}
+
+/// Deadline-burst threshold: this many `deadline_exceeded` responses
+/// inside [`BURST_WINDOW_US`] trips a bundle.
+const BURST_THRESHOLD: usize = 5;
+const BURST_WINDOW_US: u64 = 10_000_000;
+/// Partial-response streak that trips a bundle.
+const STREAK_THRESHOLD: u64 = 3;
+/// Global bundle cooldown: anomalies landing inside this window after a
+/// bundle was written are recorded in the trigger state but do not dump
+/// again — one incident, one bundle.
+const COOLDOWN_US: u64 = 60_000_000;
+
+/// Anomaly-triggered crash-dump ring. Disabled (all methods no-ops)
+/// without a directory. Bundles are written atomically (`.tmp` +
+/// rename) and pruned oldest-first past `max_bundles`.
+pub struct FlightRecorder {
+    dir: Option<PathBuf>,
+    max_bundles: usize,
+    state: Mutex<RecorderState>,
+}
+
+#[derive(Default)]
+struct RecorderState {
+    seq: u64,
+    written: u64,
+    last_bundle_us: Option<u64>,
+    /// Partitions whose death already produced a bundle; re-armed on
+    /// recovery.
+    dead_partitions: BTreeSet<usize>,
+    deadline_hits: VecDeque<u64>,
+    partial_streak: u64,
+    /// The current partial streak already produced a bundle.
+    streak_tripped: bool,
+}
+
+impl FlightRecorder {
+    pub fn new(dir: Option<PathBuf>, max_bundles: usize) -> Self {
+        FlightRecorder {
+            dir,
+            max_bundles: max_bundles.max(1),
+            state: Mutex::new(RecorderState::default()),
+        }
+    }
+
+    /// A recorder that never writes (the default when `--flight-dir` is
+    /// not given).
+    pub fn disabled() -> Self {
+        FlightRecorder::new(None, 1)
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.dir.is_some()
+    }
+
+    /// Bundles written over this process's lifetime.
+    pub fn bundles_written(&self) -> u64 {
+        self.state.lock().unwrap().written
+    }
+
+    /// A backend was marked dead. Trips once per partition until
+    /// [`backend_recovered`](Self::backend_recovered) re-arms it.
+    /// `body` builds the bundle payload only when a dump happens.
+    pub fn backend_dead(&self, now_us: u64, partition: usize, body: &dyn Fn() -> Json) {
+        if !self.is_enabled() {
+            return;
+        }
+        let armed = {
+            let mut st = self.state.lock().unwrap();
+            st.dead_partitions.insert(partition)
+        };
+        if armed {
+            self.trip(now_us, Anomaly::BackendDead, &format!("partition {partition} marked dead"), body);
+        }
+    }
+
+    /// A dead backend answered again; its death trigger re-arms.
+    pub fn backend_recovered(&self, partition: usize) {
+        if !self.is_enabled() {
+            return;
+        }
+        self.state.lock().unwrap().dead_partitions.remove(&partition);
+    }
+
+    /// One deadline-exceeded response; trips on a burst.
+    pub fn deadline_exceeded(&self, now_us: u64, body: &dyn Fn() -> Json) {
+        if !self.is_enabled() {
+            return;
+        }
+        let burst = {
+            let mut st = self.state.lock().unwrap();
+            st.deadline_hits.push_back(now_us);
+            while st
+                .deadline_hits
+                .front()
+                .is_some_and(|&t| t + BURST_WINDOW_US < now_us)
+            {
+                st.deadline_hits.pop_front();
+            }
+            if st.deadline_hits.len() >= BURST_THRESHOLD {
+                st.deadline_hits.clear();
+                true
+            } else {
+                false
+            }
+        };
+        if burst {
+            self.trip(
+                now_us,
+                Anomaly::DeadlineBurst,
+                &format!("{BURST_THRESHOLD}+ deadline_exceeded within {}s", BURST_WINDOW_US / 1_000_000),
+                body,
+            );
+        }
+    }
+
+    /// One routed response's degradation state. A streak of
+    /// [`STREAK_THRESHOLD`] consecutive partial responses trips once;
+    /// a complete response resets the streak.
+    pub fn partial_response(&self, now_us: u64, partial: bool, body: &dyn Fn() -> Json) {
+        if !self.is_enabled() {
+            return;
+        }
+        let tripped = {
+            let mut st = self.state.lock().unwrap();
+            if !partial {
+                st.partial_streak = 0;
+                st.streak_tripped = false;
+                false
+            } else {
+                st.partial_streak += 1;
+                if st.partial_streak >= STREAK_THRESHOLD && !st.streak_tripped {
+                    st.streak_tripped = true;
+                    true
+                } else {
+                    false
+                }
+            }
+        };
+        if tripped {
+            self.trip(
+                now_us,
+                Anomaly::PartialStreak,
+                &format!("{STREAK_THRESHOLD} consecutive partial responses"),
+                body,
+            );
+        }
+    }
+
+    /// Write one bundle unless inside the cooldown window.
+    fn trip(&self, now_us: u64, anomaly: Anomaly, detail: &str, body: &dyn Fn() -> Json) {
+        let Some(dir) = &self.dir else { return };
+        let seq = {
+            let mut st = self.state.lock().unwrap();
+            if st
+                .last_bundle_us
+                .is_some_and(|t| now_us.saturating_sub(t) < COOLDOWN_US)
+            {
+                return;
+            }
+            st.last_bundle_us = Some(now_us);
+            st.seq += 1;
+            st.written += 1;
+            st.seq
+        };
+        let captured_at = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        let mut m = BTreeMap::new();
+        m.insert("reason".to_string(), Json::Str(anomaly.as_str().to_string()));
+        m.insert("detail".to_string(), Json::Str(detail.to_string()));
+        m.insert("captured_at_unix".to_string(), Json::Num(captured_at as f64));
+        m.insert("captured_at_us".to_string(), Json::Num(now_us as f64));
+        m.insert("body".to_string(), body());
+        let doc = Json::Obj(m).to_string();
+
+        let name = format!("flight-{seq:06}-{}.json", anomaly.as_str());
+        let path = dir.join(&name);
+        let tmp = dir.join(format!(".{name}.tmp"));
+        let write = std::fs::create_dir_all(dir)
+            .and_then(|_| std::fs::write(&tmp, doc.as_bytes()))
+            .and_then(|_| std::fs::rename(&tmp, &path));
+        if let Err(e) = write {
+            eprintln!("flight recorder: cannot write {}: {e}", path.display());
+            let _ = std::fs::remove_file(&tmp);
+            return;
+        }
+        self.prune(dir);
+    }
+
+    /// Drop the oldest bundles past the ring limit (lexicographic order
+    /// == write order: the sequence number is zero-padded).
+    fn prune(&self, dir: &PathBuf) {
+        let Ok(entries) = std::fs::read_dir(dir) else { return };
+        let mut bundles: Vec<PathBuf> = entries
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with("flight-") && n.ends_with(".json"))
+            })
+            .collect();
+        bundles.sort();
+        while bundles.len() > self.max_bundles {
+            let _ = std::fs::remove_file(bundles.remove(0));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(t_us: u64, total: u64, errors: u64, lat: &[u64]) -> HealthSample {
+        // cumulative exponential histogram over the supplied values
+        let bounds: Vec<u64> = (0..20).map(|k| 1u64 << k).collect();
+        let mut counts = vec![0u64; bounds.len() + 1];
+        let mut max = 0;
+        for &v in lat {
+            let idx = bounds.partition_point(|&b| b <= v);
+            counts[idx] += 1;
+            max = max.max(v);
+        }
+        HealthSample { t_us, total, errors, lat_bounds: bounds, lat_counts: counts, lat_max: max }
+    }
+
+    #[test]
+    fn healthy_traffic_is_ok() {
+        let plane = HealthPlane::new(SloConfig { availability: 0.999, p99_us: 1_000_000 });
+        let r = plane.report(sample(1_000_000, 100, 0, &[500, 700, 900]));
+        assert_eq!(r.verdict, Verdict::Ok);
+        assert_eq!(r.slos.len(), 2);
+        assert!(r.slos.iter().all(|s| s.verdict == Verdict::Ok));
+    }
+
+    #[test]
+    fn empty_windows_are_ok_not_nan() {
+        let plane = HealthPlane::new(SloConfig::default());
+        let r = plane.report(sample(0, 0, 0, &[]));
+        assert_eq!(r.verdict, Verdict::Ok);
+        for s in &r.slos {
+            for w in &s.windows {
+                assert!(w.burn.is_finite());
+                assert_eq!(w.total, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn error_burst_burns_the_budget() {
+        let plane = HealthPlane::new(SloConfig { availability: 0.999, p99_us: 1_000_000 });
+        plane.report(sample(1_000_000, 100, 0, &[]));
+        // 10% errors in the 30s window = burn 100 >> critical
+        let r = plane.report(sample(2_000_000, 200, 10, &[]));
+        assert_eq!(r.verdict, Verdict::Critical);
+        let avail = &r.slos[0];
+        assert_eq!(avail.slo, "availability");
+        assert_eq!(avail.verdict, Verdict::Critical);
+        assert!(avail.windows[0].burn > CRITICAL_BURN, "{:?}", avail.windows[0]);
+    }
+
+    #[test]
+    fn latency_slo_uses_windowed_p99() {
+        let plane = HealthPlane::new(SloConfig { availability: 0.5, p99_us: 1_000 });
+        // old traffic was fast...
+        plane.report(sample(1_000_000, 10, 0, &[100; 10]));
+        // ...new traffic is slow; windowed p99 must see only the diff
+        let mut lat: Vec<u64> = vec![100; 10];
+        lat.extend([900_000u64; 10]);
+        let r = plane.report(sample(2_000_000, 20, 0, &lat));
+        let latency = &r.slos[1];
+        assert_eq!(latency.slo, "p99_latency");
+        assert_eq!(latency.verdict, Verdict::Critical, "{latency:?}");
+        assert!(latency.windows[0].value >= 900_000.0, "{:?}", latency.windows[0]);
+    }
+
+    #[test]
+    fn burn_recovers_as_the_window_slides() {
+        let plane = HealthPlane::new(SloConfig { availability: 0.9, p99_us: 1_000_000 });
+        plane.report(sample(1_000_000, 100, 0, &[]));
+        let r = plane.report(sample(2_000_000, 200, 50, &[]));
+        assert_ne!(r.verdict, Verdict::Ok);
+        // 40 minutes later, all windows have slid past the errors and
+        // fresh traffic is clean
+        let r = plane.report(sample(2_400_000_000, 1200, 50, &[]));
+        let r2 = plane.report(sample(2_401_000_000, 1300, 50, &[]));
+        assert_eq!(r.verdict, Verdict::Ok, "{:?}", r.slos[0]);
+        assert_eq!(r2.verdict, Verdict::Ok);
+    }
+
+    #[test]
+    fn detail_json_shape() {
+        let plane = HealthPlane::new(SloConfig::default());
+        let r = plane.report(sample(1_000_000, 10, 0, &[100]));
+        let j = r.detail_json();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].str_field("slo").unwrap(), "availability");
+        assert_eq!(arr[0].str_field("verdict").unwrap(), "ok");
+        let windows = arr[0].get("windows").and_then(Json::as_arr).unwrap();
+        assert_eq!(windows.len(), WINDOWS.len());
+        assert_eq!(windows[0].str_field("window").unwrap(), "30s");
+        assert!(windows[0].get("burn").and_then(Json::as_f64).is_some());
+    }
+
+    #[test]
+    fn prometheus_families_render() {
+        let plane = HealthPlane::new(SloConfig { availability: 0.999, p99_us: 2_000_000 });
+        let r = plane.report(sample(1_000_000, 10, 0, &[100]));
+        let mut out = String::new();
+        plane.prometheus_append(&mut out, &r);
+        let lines: Vec<&str> = out.lines().collect();
+        assert!(lines.contains(&"# TYPE swaphi_slo_availability_target gauge"));
+        assert!(lines.contains(&"swaphi_slo_availability_target 0.999"));
+        assert!(lines.contains(&"swaphi_slo_p99_target_microseconds 2000000"));
+        assert!(lines.contains(&"swaphi_slo_health 0"));
+        assert!(lines.contains(&"# TYPE swaphi_burn_rate gauge"));
+        assert!(out.contains("swaphi_burn_rate{slo=\"availability\",window=\"30s\"}"));
+        assert!(out.contains("swaphi_burn_rate{slo=\"p99_latency\",window=\"30m\"}"));
+        // every sample line parses as `name[{labels}] value`
+        for line in lines.iter().filter(|l| !l.starts_with('#')) {
+            let (_, value) = line.rsplit_once(' ').unwrap();
+            assert!(value.parse::<f64>().is_ok(), "{line}");
+        }
+    }
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join("swaphi-health-tests")
+            .join(format!("{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn bundles_in(dir: &PathBuf) -> Vec<String> {
+        let mut names: Vec<String> = std::fs::read_dir(dir)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .filter_map(|e| e.file_name().into_string().ok())
+                    .filter(|n| n.starts_with("flight-"))
+                    .collect()
+            })
+            .unwrap_or_default();
+        names.sort();
+        names
+    }
+
+    #[test]
+    fn disabled_recorder_never_writes() {
+        let r = FlightRecorder::disabled();
+        assert!(!r.is_enabled());
+        r.backend_dead(0, 1, &|| Json::Null);
+        r.deadline_exceeded(0, &|| Json::Null);
+        r.partial_response(0, true, &|| Json::Null);
+        assert_eq!(r.bundles_written(), 0);
+    }
+
+    #[test]
+    fn backend_death_trips_once_until_recovery() {
+        let dir = tmp_dir("dead-once");
+        let r = FlightRecorder::new(Some(dir.clone()), 8);
+        let body = || Json::Str("state".to_string());
+        r.backend_dead(1_000, 2, &body);
+        r.backend_dead(2_000, 2, &body);
+        assert_eq!(r.bundles_written(), 1, "second death of the same partition is silent");
+        let names = bundles_in(&dir);
+        assert_eq!(names.len(), 1);
+        assert!(names[0].contains("backend_dead"), "{names:?}");
+        let doc = Json::parse(&std::fs::read_to_string(dir.join(&names[0])).unwrap()).unwrap();
+        assert_eq!(doc.str_field("reason").unwrap(), "backend_dead");
+        assert!(doc.str_field("detail").unwrap().contains("partition 2"));
+        assert_eq!(doc.str_field("body").unwrap(), "state");
+        // recovery re-arms; a fresh death (past cooldown) dumps again
+        r.backend_recovered(2);
+        r.backend_dead(1_000 + COOLDOWN_US, 2, &body);
+        assert_eq!(r.bundles_written(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cooldown_suppresses_cascading_bundles() {
+        let dir = tmp_dir("cooldown");
+        let r = FlightRecorder::new(Some(dir.clone()), 8);
+        let body = || Json::Null;
+        r.backend_dead(1_000, 0, &body);
+        // the dead backend makes every routed answer partial; the streak
+        // trigger fires inside the cooldown and must not double-dump
+        for i in 0..5 {
+            r.partial_response(2_000 + i, true, &body);
+        }
+        assert_eq!(r.bundles_written(), 1, "one incident, one bundle");
+        assert_eq!(bundles_in(&dir).len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn deadline_burst_trips_and_ring_prunes() {
+        let dir = tmp_dir("burst");
+        let r = FlightRecorder::new(Some(dir.clone()), 2);
+        let body = || Json::Null;
+        // below threshold: silent
+        for i in 0..BURST_THRESHOLD - 1 {
+            r.deadline_exceeded(i as u64 * 1_000, &body);
+        }
+        assert_eq!(r.bundles_written(), 0);
+        r.deadline_exceeded(5_000, &body);
+        assert_eq!(r.bundles_written(), 1);
+        // two more bursts, each past the cooldown: the 2-bundle ring
+        // keeps only the newest two on disk
+        for burst in 1..3u64 {
+            let t0 = burst * (COOLDOWN_US + 1_000_000);
+            for i in 0..BURST_THRESHOLD {
+                r.deadline_exceeded(t0 + i as u64, &body);
+            }
+        }
+        assert_eq!(r.bundles_written(), 3);
+        let names = bundles_in(&dir);
+        assert_eq!(names.len(), 2, "{names:?}");
+        assert!(names.iter().all(|n| n.contains("deadline_burst")));
+        assert!(names[0].contains("flight-000002"), "oldest pruned: {names:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn partial_streak_resets_on_complete_response() {
+        let dir = tmp_dir("streak");
+        let r = FlightRecorder::new(Some(dir.clone()), 8);
+        let body = || Json::Null;
+        r.partial_response(1, true, &body);
+        r.partial_response(2, true, &body);
+        r.partial_response(3, false, &body); // streak broken
+        r.partial_response(4, true, &body);
+        r.partial_response(5, true, &body);
+        assert_eq!(r.bundles_written(), 0);
+        r.partial_response(6, true, &body);
+        assert_eq!(r.bundles_written(), 1);
+        // the still-running streak does not dump again
+        r.partial_response(7 + COOLDOWN_US, true, &body);
+        assert_eq!(r.bundles_written(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn verdict_ordering_and_levels() {
+        assert!(Verdict::Ok < Verdict::Warn);
+        assert!(Verdict::Warn < Verdict::Critical);
+        assert_eq!(Verdict::Ok.as_level(), 0);
+        assert_eq!(Verdict::Warn.as_str(), "warn");
+        assert_eq!(Verdict::Critical.as_level(), 2);
+    }
+}

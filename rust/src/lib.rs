@@ -26,6 +26,7 @@ pub mod config;
 pub mod coordinator;
 pub mod db;
 pub mod fasta;
+pub mod health;
 pub mod matrices;
 pub mod metrics;
 pub mod phi;

@@ -153,12 +153,49 @@ impl Client {
     /// Fetch the server's recent spans (the `trace` op); `n` limits the
     /// window, `None` returns the whole retained ring.
     pub fn trace(&mut self, n: Option<usize>) -> anyhow::Result<Json> {
-        let line = match n {
-            Some(n) => format!(r#"{{"v":{},"op":"trace","n":{n}}}"#, protocol::VERSION),
-            None => format!(r#"{{"v":{},"op":"trace"}}"#, protocol::VERSION),
-        };
-        self.request_line(&line)
+        self.trace_filtered(n, None)
     }
+
+    /// [`trace`](Self::trace) restricted to one trace id (the wire-form
+    /// `tXXXXXXXXXXXX` filter a router propagates across the fleet).
+    pub fn trace_filtered(&mut self, n: Option<usize>, filter: Option<&str>) -> anyhow::Result<Json> {
+        let mut m = trace_request(n, filter);
+        m.remove("scope");
+        self.request_line(&Json::Obj(m).to_string())
+    }
+
+    /// The cluster-scope `trace` op: the responder answers with clock-
+    /// aligned spans grouped per process (`procs`) — a router fans out
+    /// to its whole fleet, a plain daemon answers with one row.
+    pub fn trace_cluster(
+        &mut self,
+        n: Option<usize>,
+        filter: Option<&str>,
+    ) -> anyhow::Result<Json> {
+        self.request_line(&Json::Obj(trace_request(n, filter)).to_string())
+    }
+
+    /// The `health` op: SLO verdict (`ok|warn|critical`) plus per-SLO
+    /// burn-rate detail.
+    pub fn health(&mut self) -> anyhow::Result<Json> {
+        self.request_line(&format!(r#"{{"v":{},"op":"health"}}"#, protocol::VERSION))
+    }
+}
+
+/// Build a cluster-scope `trace` request map; callers drop the `scope`
+/// key for a local fetch.
+fn trace_request(n: Option<usize>, filter: Option<&str>) -> BTreeMap<String, Json> {
+    let mut m = BTreeMap::new();
+    m.insert("v".to_string(), Json::Num(protocol::VERSION as f64));
+    m.insert("op".to_string(), Json::Str("trace".to_string()));
+    m.insert("scope".to_string(), Json::Str("cluster".to_string()));
+    if let Some(n) = n {
+        m.insert("n".to_string(), Json::Num(n as f64));
+    }
+    if let Some(t) = filter {
+        m.insert("trace".to_string(), Json::Str(t.to_string()));
+    }
+    m
 }
 
 /// Did the server accept the request?

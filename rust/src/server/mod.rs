@@ -40,6 +40,7 @@ use crate::coordinator::{
 use crate::db::chunk::plan_chunks_paired;
 use crate::db::index::Index;
 use crate::db::partition::PartitionMeta;
+use crate::health::{FlightRecorder, HealthPlane, HealthSample, SloConfig};
 use crate::matrices::Scoring;
 use crate::metrics::{Counter, Histogram, Registry, SharedHistogram};
 use crate::trace::{span_json, trace_id_hex, Span, TraceRecorder};
@@ -90,6 +91,16 @@ pub struct ServerConfig {
     /// Capacity of the span ring behind the `trace` op; 0 disables span
     /// recording entirely (trace *ids* are still minted and echoed).
     pub trace_ring: usize,
+    /// Availability SLO target (success fraction) the `health` op and
+    /// the `swaphi_slo_*` families evaluate against.
+    pub slo_availability: f64,
+    /// p99 end-to-end latency SLO target, milliseconds.
+    pub slo_p99_ms: u64,
+    /// Flight-recorder bundle directory; `None` disables the recorder.
+    pub flight_dir: Option<PathBuf>,
+    /// Flight-recorder ring: bundles retained on disk before the oldest
+    /// is pruned.
+    pub flight_bundles: usize,
 }
 
 impl Default for ServerConfig {
@@ -106,6 +117,10 @@ impl Default for ServerConfig {
             handle_signals: false,
             slow_query_ms: 0,
             trace_ring: 4096,
+            slo_availability: 0.999,
+            slo_p99_ms: 2_000,
+            flight_dir: None,
+            flight_bundles: 8,
         }
     }
 }
@@ -385,6 +400,14 @@ impl ServerMetrics {
     pub fn latency_summary(&self) -> crate::metrics::HistogramSummary {
         self.latency_us.lock().unwrap().summary()
     }
+
+    /// The latency histogram's raw cells — bucket bounds, per-bucket
+    /// counts (overflow last), observed max, total count — the shape
+    /// the health plane diffs for windowed p99.
+    pub fn latency_cells(&self) -> (Vec<u64>, Vec<u64>, u64, u64) {
+        let h = self.latency_us.lock().unwrap();
+        (h.bounds().to_vec(), h.counts().to_vec(), h.max(), h.count())
+    }
 }
 
 fn summary_json(s: crate::metrics::HistogramSummary) -> Json {
@@ -501,6 +524,11 @@ struct Shared {
     /// Partition identity when serving one slice of a larger database.
     partition: Option<PartitionMeta>,
     n_seqs: usize,
+    /// Rolling-window SLO evaluation behind the `health` op and the
+    /// `swaphi_slo_*` Prometheus families.
+    health: HealthPlane,
+    /// Anomaly-triggered crash dumps (no-op without `--flight-dir`).
+    flight: FlightRecorder,
 }
 
 /// How many slow-query records the in-memory ring retains.
@@ -668,6 +696,12 @@ impl Server {
             TraceRecorder::new(0)
         });
 
+        let health = HealthPlane::new(SloConfig {
+            availability: cfg.slo_availability,
+            p99_us: cfg.slo_p99_ms.saturating_mul(1_000),
+        });
+        let flight = FlightRecorder::new(cfg.flight_dir.clone(), cfg.flight_bundles);
+
         let shared = Arc::new(Shared {
             queue: AdmissionQueue::new(cfg.queue_capacity),
             cache: Mutex::new(ResultCache::new(cfg.cache_entries)),
@@ -685,6 +719,8 @@ impl Server {
             slow_log: Mutex::new(VecDeque::new()),
             partition,
             n_seqs: index.n_seqs(),
+            health,
+            flight,
             cfg,
         });
 
@@ -858,23 +894,61 @@ fn handle_line(line: &str, shared: &Shared) -> String {
         }
     };
     // protocol admission: every well-formed request gets a trace id,
-    // echoed in its response line whether or not spans are recorded
-    let trace = shared.recorder.next_trace_id();
+    // echoed in its response line whether or not spans are recorded. A
+    // search carrying propagated context *adopts* the caller's id
+    // instead of minting — that is what stitches a routed request's
+    // backend span tree into the router's single cross-process trace.
+    let trace = match &req {
+        Request::Search(s) => s.trace.unwrap_or_else(|| shared.recorder.next_trace_id()),
+        _ => shared.recorder.next_trace_id(),
+    };
     match req {
-        Request::Ping { id } => protocol::pong_response(id.as_deref(), trace),
+        Request::Ping { id } => {
+            // the responder's monotonic clock rides every pong: the
+            // router's handshake estimates per-backend clock offsets
+            // from it (RTT-midpoint), which cluster-scope trace
+            // assembly uses to align remote span timestamps
+            protocol::pong_response(id.as_deref(), trace, shared.recorder.now_us())
+        }
         Request::Stats { id } => {
             protocol::stats_response(id.as_deref(), stats_json(shared), trace)
         }
         Request::Metrics { id } => {
             protocol::metrics_response(id.as_deref(), &metrics_text(shared), trace)
         }
-        Request::Trace { id, n } => {
-            let spans = match n {
+        Request::Trace { id, n, cluster, filter } => {
+            let mut spans = match n {
                 Some(n) => shared.recorder.recent(n),
                 None => shared.recorder.spans(),
             };
+            if let Some(t) = filter {
+                spans.retain(|s| s.trace == t);
+            }
             let spans = Json::Arr(spans.iter().map(span_json).collect());
-            protocol::trace_response(id.as_deref(), spans, trace)
+            if cluster {
+                // a daemon is a one-process cluster: answer the
+                // cluster shape with a single proc row so clients
+                // need not care what kind of server they asked
+                let mut p = BTreeMap::new();
+                p.insert("name".to_string(), Json::Str(proc_name(shared)));
+                p.insert("spans".to_string(), spans);
+                protocol::trace_cluster_response(
+                    id.as_deref(),
+                    Json::Arr(vec![Json::Obj(p)]),
+                    trace,
+                )
+            } else {
+                protocol::trace_response(id.as_deref(), spans, trace)
+            }
+        }
+        Request::Health { id } => {
+            let report = shared.health.report(health_sample(shared));
+            protocol::health_response(
+                id.as_deref(),
+                report.verdict.as_str(),
+                report.detail_json(),
+                trace,
+            )
         }
         Request::Hello { id } => {
             let (partition, partitions, n_total) = shared.partition_identity();
@@ -925,11 +999,13 @@ fn handle_search(req: protocol::SearchRequest, shared: &Shared, trace: u64) -> S
         shared.metrics.cache_hits.inc();
         if shared.recorder.is_enabled() {
             let start = shared.recorder.us_of(arrived);
-            shared.recorder.record(
-                Span::new(trace, "request", start, shared.recorder.now_us() - start)
-                    .mode(mode.name())
-                    .cache_hit(true),
-            );
+            let mut span = Span::new(trace, "request", start, shared.recorder.now_us() - start)
+                .mode(mode.name())
+                .cache_hit(true);
+            if let Some(p) = req.parent {
+                span = span.parent(p);
+            }
+            shared.recorder.record(span);
         }
         let n = top_k.min(hits.len());
         return protocol::search_response(id, &req.query_id, true, &hits[..n], trace);
@@ -950,6 +1026,7 @@ fn handle_search(req: protocol::SearchRequest, shared: &Shared, trace: u64) -> S
         deadline: now + Duration::from_millis(deadline_ms),
         enqueued: now,
         trace,
+        parent: req.parent,
         reply: tx,
     };
     match shared.queue.push(pending) {
@@ -1036,6 +1113,11 @@ fn run_batch(
     for p in dead {
         shared.metrics.expired.inc();
         shared.metrics.error(protocol::E_DEADLINE);
+        // a deadline burst is exactly the anomaly a postmortem wants
+        // frozen state for: feed the flight recorder's burst trigger
+        shared
+            .flight
+            .deadline_exceeded(shared.recorder.now_us(), &|| flight_body(shared));
         let _ = p.reply.send(protocol::error_response_traced(
             p.req_id.as_deref(),
             protocol::E_DEADLINE,
@@ -1178,11 +1260,13 @@ fn run_mode_group(
                 shared.metrics.record_latency(latency_us);
                 if shared.recorder.is_enabled() {
                     let start = shared.recorder.us_of(p.enqueued);
-                    shared.recorder.record(
-                        Span::new(p.trace, "request", start, latency_us)
-                            .mode(mode.name())
-                            .cache_hit(false),
-                    );
+                    let mut span = Span::new(p.trace, "request", start, latency_us)
+                        .mode(mode.name())
+                        .cache_hit(false);
+                    if let Some(par) = p.parent {
+                        span = span.parent(par);
+                    }
+                    shared.recorder.record(span);
                 }
                 if shared.cfg.slow_query_ms > 0 && latency_us >= shared.cfg.slow_query_ms * 1000 {
                     slow_query_record(shared, p, mode, live.len(), latency_us);
@@ -1265,6 +1349,59 @@ fn slow_query_record(
         ring.pop_front();
     }
     ring.push_back(line);
+}
+
+/// How this process names its row in a cluster-scope trace export.
+fn proc_name(shared: &Shared) -> String {
+    let (partition, partitions, _) = shared.partition_identity();
+    if partitions > 1 {
+        format!("backend {partition}")
+    } else {
+        "daemon".to_string()
+    }
+}
+
+/// One cumulative snapshot of the counters feeding the SLOs: requests
+/// answered (cache hits + scored requests + error responses), error
+/// responses, and the end-to-end latency histogram's cells.
+fn health_sample(shared: &Shared) -> HealthSample {
+    let m = &shared.metrics;
+    let errors: u64 = m.errors_snapshot().iter().map(|(_, n)| *n).sum();
+    let (lat_bounds, lat_counts, lat_max, scored) = m.latency_cells();
+    HealthSample {
+        t_us: shared.recorder.now_us(),
+        total: m.cache_hits.get() + scored + errors,
+        errors,
+        lat_bounds,
+        lat_counts,
+        lat_max,
+    }
+}
+
+/// The flight-recorder bundle payload: a self-contained postmortem —
+/// the full stats snapshot (counters, fleet, tune state), the span
+/// ring, and the slow-query ring. Built only when a bundle actually
+/// dumps.
+fn flight_body(shared: &Shared) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("stats".to_string(), stats_json(shared));
+    m.insert(
+        "spans".to_string(),
+        Json::Arr(shared.recorder.spans().iter().map(span_json).collect()),
+    );
+    m.insert(
+        "slow_queries".to_string(),
+        Json::Arr(
+            shared
+                .slow_log
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|l| Json::parse(l).unwrap_or_else(|_| Json::Str(l.clone())))
+                .collect(),
+        ),
+    );
+    Json::Obj(m)
 }
 
 fn stats_json(shared: &Shared) -> Json {
@@ -1480,6 +1617,10 @@ fn metrics_text(shared: &Shared) -> String {
             let _ = writeln!(out, "{name}{{device=\"{}\"}} {v}", t.device);
         }
     }
+    // the SLO families render from a fresh health evaluation so a
+    // Prometheus scrape and the `health` op always agree
+    let report = shared.health.report(health_sample(shared));
+    shared.health.prometheus_append(&mut out, &report);
     out
 }
 

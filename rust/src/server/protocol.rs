@@ -8,7 +8,7 @@
 //! break older servers.
 
 use crate::coordinator::{ReportLevel, SearchMode};
-use crate::trace::trace_id_hex;
+use crate::trace::{parse_span_id, parse_trace_id, trace_id_hex};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 
@@ -49,8 +49,15 @@ pub enum Request {
     /// `op = "metrics"`: Prometheus text exposition of the registry.
     Metrics { id: Option<String> },
     /// `op = "trace"`: the last `n` spans from the server's trace ring
-    /// (all retained spans when `n` is absent).
-    Trace { id: Option<String>, n: Option<usize> },
+    /// (all retained spans when `n` is absent). `scope = "cluster"`
+    /// asks a router to stitch all live backends' rings into one
+    /// clock-aligned, per-process reply (a daemon answers it with its
+    /// own ring as the only process). `trace` filters to one request's
+    /// spans (`"t…"` wire form).
+    Trace { id: Option<String>, n: Option<usize>, cluster: bool, filter: Option<u64> },
+    /// `op = "health"`: SLO verdict (`ok|warn|critical`) with per-SLO
+    /// burn-rate detail — the health plane of `rust/src/health/`.
+    Health { id: Option<String> },
     /// `op = "hello"`: identity/partition handshake — which database
     /// generation this daemon serves, and which slice of it. The cluster
     /// router uses it to verify a complete, same-generation partition
@@ -82,6 +89,15 @@ pub struct SearchRequest {
     /// `op = "report"` convenience parses to a search whose `fields`
     /// defaults to `"full"`.
     pub fields: Option<ReportLevel>,
+    /// Propagated trace context (`"t…"` wire form): a router forwards
+    /// its minted trace id so the backend adopts it for the whole
+    /// span tree instead of minting a fresh one. Absent for direct
+    /// clients — the daemon mints as before.
+    pub trace: Option<u64>,
+    /// Parent span id (`"s…"` wire form): the router's `backend`
+    /// attempt span, recorded as the parent of this request's
+    /// `request` span so stitched traces nest across processes.
+    pub parent: Option<u64>,
 }
 
 /// Parse one request line. The error carries the code the reply must use.
@@ -106,6 +122,7 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
         "stats" => Ok(Request::Stats { id }),
         "metrics" => Ok(Request::Metrics { id }),
         "hello" => Ok(Request::Hello { id }),
+        "health" => Ok(Request::Health { id }),
         "trace" => {
             let n = match j.get("n") {
                 None => None,
@@ -115,7 +132,23 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
                         .ok_or_else(|| ProtoError::bad("n must be a positive integer"))?,
                 ),
             };
-            Ok(Request::Trace { id, n })
+            let cluster = match j.get("scope") {
+                None => false,
+                Some(s) => match s.as_str() {
+                    Some("local") => false,
+                    Some("cluster") => true,
+                    _ => return Err(ProtoError::bad(format!("unknown scope {s} (local|cluster)"))),
+                },
+            };
+            let filter = match j.get("trace") {
+                None => None,
+                Some(t) => Some(
+                    t.as_str()
+                        .and_then(parse_trace_id)
+                        .ok_or_else(|| ProtoError::bad("trace must be a \"t…\" hex trace id"))?,
+                ),
+            };
+            Ok(Request::Trace { id, n, cluster, filter })
         }
         op @ ("search" | "report") => {
             let seq = j
@@ -165,6 +198,25 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
             if op == "report" && fields.is_none() {
                 fields = Some(ReportLevel::Full);
             }
+            let trace = match j.get("trace") {
+                None => None,
+                Some(t) => Some(
+                    t.as_str()
+                        .and_then(parse_trace_id)
+                        .filter(|&t| t != 0)
+                        .ok_or_else(|| {
+                            ProtoError::bad("trace must be a nonzero \"t…\" hex trace id")
+                        })?,
+                ),
+            };
+            let parent = match j.get("parent") {
+                None => None,
+                Some(p) => Some(
+                    p.as_str()
+                        .and_then(parse_span_id)
+                        .ok_or_else(|| ProtoError::bad("parent must be an \"s…\" hex span id"))?,
+                ),
+            };
             Ok(Request::Search(SearchRequest {
                 id,
                 query_id: j
@@ -177,10 +229,12 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
                 deadline_ms,
                 mode,
                 fields,
+                trace,
+                parent,
             }))
         }
         other => Err(ProtoError::bad(format!(
-            "unknown op {other:?} (search|report|ping|stats|metrics|trace|hello)"
+            "unknown op {other:?} (search|report|ping|stats|metrics|trace|health|hello)"
         ))),
     }
 }
@@ -374,10 +428,23 @@ pub fn error_response_traced(id: Option<&str>, code: &str, message: &str, trace:
     obj(pairs).to_string()
 }
 
-/// Ping reply.
-pub fn pong_response(id: Option<&str>, trace: u64) -> String {
+/// Ping reply. `now_us` is the responder's trace-clock reading
+/// (microseconds since its recorder epoch) — the raw material of the
+/// router's ping-RTT-midpoint clock alignment (`cluster/handshake.rs`).
+pub fn pong_response(id: Option<&str>, trace: u64, now_us: u64) -> String {
     let mut pairs = base(id, true, trace);
     pairs.push(("op", Json::Str("pong".to_string())));
+    pairs.push(("now_us", Json::Num(now_us as f64)));
+    obj(pairs).to_string()
+}
+
+/// Health reply: the SLO verdict plus a prebuilt per-SLO detail object
+/// (see `rust/src/health/`).
+pub fn health_response(id: Option<&str>, verdict: &str, detail: Json, trace: u64) -> String {
+    let mut pairs = base(id, true, trace);
+    pairs.push(("op", Json::Str("health".to_string())));
+    pairs.push(("health", Json::Str(verdict.to_string())));
+    pairs.push(("slos", detail));
     obj(pairs).to_string()
 }
 
@@ -400,6 +467,16 @@ pub fn metrics_response(id: Option<&str>, text: &str, trace: u64) -> String {
 pub fn trace_response(id: Option<&str>, spans: Json, trace: u64) -> String {
     let mut pairs = base(id, true, trace);
     pairs.push(("spans", spans));
+    obj(pairs).to_string()
+}
+
+/// Cluster-scope trace reply: clock-aligned spans grouped per process,
+/// `procs` being a prebuilt `[{"name": …, "spans": [...]}, …]` array
+/// (router first, then each reachable backend). A plain daemon answers
+/// the same shape with itself as the only process.
+pub fn trace_cluster_response(id: Option<&str>, procs: Json, trace: u64) -> String {
+    let mut pairs = base(id, true, trace);
+    pairs.push(("procs", procs));
     obj(pairs).to_string()
 }
 
@@ -648,10 +725,12 @@ mod tests {
             search_response(Some("r1"), "q", true, &hits, 7),
             search_response_partial(Some("r1"), "q", false, &hits, 7, &[1, 2]),
             error_response(None, E_OVERLOADED, "queue full"),
-            pong_response(Some("p"), 0),
+            pong_response(Some("p"), 0, 123456),
             stats_response(None, Json::Obj(Default::default()), 3),
             metrics_response(None, "# TYPE x counter\nx 1\n", 4),
             trace_response(None, Json::Arr(vec![]), 5),
+            trace_cluster_response(None, Json::Arr(vec![]), 5),
+            health_response(Some("h"), "ok", Json::Arr(vec![]), 2),
             hello_response(None, "00000000000000ff", 1, 3, 160, 480, 10, 6),
         ] {
             assert!(!line.contains('\n'), "{line}");
@@ -704,9 +783,11 @@ mod tests {
             other => panic!("{other:?}"),
         }
         match parse_request(r#"{"v":1,"op":"trace","n":50}"#).unwrap() {
-            Request::Trace { id, n } => {
+            Request::Trace { id, n, cluster, filter } => {
                 assert_eq!(id, None);
                 assert_eq!(n, Some(50));
+                assert!(!cluster, "scope defaults to local");
+                assert_eq!(filter, None);
             }
             other => panic!("{other:?}"),
         }
@@ -716,6 +797,83 @@ mod tests {
         }
         let err = parse_request(r#"{"v":1,"op":"trace","n":0}"#).unwrap_err();
         assert_eq!(err.code, E_BAD_REQUEST);
+    }
+
+    #[test]
+    fn parses_trace_scope_and_filter() {
+        match parse_request(r#"{"v":1,"op":"trace","scope":"cluster","trace":"t00000000002a"}"#)
+            .unwrap()
+        {
+            Request::Trace { cluster, filter, .. } => {
+                assert!(cluster);
+                assert_eq!(filter, Some(0x2a));
+            }
+            other => panic!("{other:?}"),
+        }
+        match parse_request(r#"{"v":1,"op":"trace","scope":"local"}"#).unwrap() {
+            Request::Trace { cluster, .. } => assert!(!cluster),
+            other => panic!("{other:?}"),
+        }
+        // strict validation names the valid set / wire form
+        let err = parse_request(r#"{"v":1,"op":"trace","scope":"galaxy"}"#).unwrap_err();
+        assert_eq!(err.code, E_BAD_REQUEST);
+        assert!(err.message.contains("local|cluster"), "{}", err.message);
+        let err = parse_request(r#"{"v":1,"op":"trace","trace":"2a"}"#).unwrap_err();
+        assert_eq!(err.code, E_BAD_REQUEST);
+    }
+
+    #[test]
+    fn parses_health_op_and_response() {
+        match parse_request(r#"{"v":1,"op":"health","id":"h1"}"#).unwrap() {
+            Request::Health { id } => assert_eq!(id.as_deref(), Some("h1")),
+            other => panic!("{other:?}"),
+        }
+        let resp =
+            Json::parse(&health_response(Some("h1"), "warn", Json::Arr(vec![]), 0)).unwrap();
+        assert_eq!(resp.str_field("op").unwrap(), "health");
+        assert_eq!(resp.str_field("health").unwrap(), "warn");
+        assert!(resp.get("slos").is_some());
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn parses_propagated_trace_context() {
+        let r = parse_request(
+            r#"{"v":1,"op":"search","query":"MKT","trace":"t00000000002a","parent":"s000000000007"}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Search(s) => {
+                assert_eq!(s.trace, Some(0x2a));
+                assert_eq!(s.parent, Some(0x7));
+            }
+            other => panic!("{other:?}"),
+        }
+        // absent context: the daemon mints, as before
+        match parse_request(r#"{"v":1,"op":"search","query":"MKT"}"#).unwrap() {
+            Request::Search(s) => {
+                assert_eq!(s.trace, None);
+                assert_eq!(s.parent, None);
+            }
+            other => panic!("{other:?}"),
+        }
+        // malformed context is a hard error, not a silent re-mint
+        for line in [
+            r#"{"v":1,"op":"search","query":"M","trace":"2a"}"#,
+            r#"{"v":1,"op":"search","query":"M","trace":"t000000000000"}"#,
+            r#"{"v":1,"op":"search","query":"M","trace":7}"#,
+            r#"{"v":1,"op":"search","query":"M","parent":"t000000000007"}"#,
+        ] {
+            let err = parse_request(line).unwrap_err();
+            assert_eq!(err.code, E_BAD_REQUEST, "{line}");
+        }
+    }
+
+    #[test]
+    fn pong_carries_the_responders_clock() {
+        let resp = Json::parse(&pong_response(None, 0, 987_654)).unwrap();
+        assert_eq!(resp.usize_field("now_us").unwrap(), 987_654);
+        assert_eq!(resp.str_field("op").unwrap(), "pong");
     }
 
     #[test]

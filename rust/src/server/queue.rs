@@ -46,9 +46,15 @@ pub struct Pending {
     pub deadline: Instant,
     /// Admission time, for the end-to-end latency histogram.
     pub enqueued: Instant,
-    /// Trace id minted at admission: echoed in the response line and
-    /// stamped on every span this request produces downstream.
+    /// Trace id minted at admission — or adopted from the request's
+    /// propagated `trace` field when a router originated it: echoed in
+    /// the response line and stamped on every span this request
+    /// produces downstream.
     pub trace: u64,
+    /// Propagated parent span id (the router's `backend` attempt span):
+    /// stamped on this request's `request` span so a stitched trace
+    /// nests the backend tree under the routing attempt that caused it.
+    pub parent: Option<u64>,
     /// Where the encoded response line goes.
     pub reply: mpsc::Sender<String>,
 }
@@ -160,6 +166,7 @@ mod tests {
                 deadline: now + Duration::from_secs(60),
                 enqueued: now,
                 trace: 0,
+                parent: None,
                 reply: tx,
             },
             rx,

@@ -59,6 +59,14 @@ pub struct Span {
     pub cache_hit: bool,
     /// The chunk was executed by a thief, not its shard owner.
     pub stolen: bool,
+    /// Span id, minted only for spans another process will reference —
+    /// the router's `backend` attempt spans carry one so backend-side
+    /// `request` spans can name them as `parent`.
+    pub id: Option<u64>,
+    /// Parent span id — cross-process causality. A backend daemon sets
+    /// it on its `request` span to the router `backend` span that
+    /// carried the propagated trace context.
+    pub parent: Option<u64>,
 }
 
 impl Span {
@@ -75,6 +83,8 @@ impl Span {
             items: None,
             cache_hit: false,
             stolen: false,
+            id: None,
+            parent: None,
         }
     }
 
@@ -105,6 +115,16 @@ impl Span {
 
     pub fn stolen(mut self, stolen: bool) -> Self {
         self.stolen = stolen;
+        self
+    }
+
+    pub fn span_id(mut self, id: u64) -> Self {
+        self.id = Some(id);
+        self
+    }
+
+    pub fn parent(mut self, parent: u64) -> Self {
+        self.parent = Some(parent);
         self
     }
 
@@ -250,6 +270,40 @@ pub fn trace_id_hex(id: u64) -> String {
     format!("t{id:012x}")
 }
 
+/// Hex form of a span id as it crosses the wire (`"s000000000001"`).
+pub fn span_id_hex(id: u64) -> String {
+    format!("s{id:012x}")
+}
+
+/// Parse the wire form of a trace id (`"t…"` hex) back to the number.
+pub fn parse_trace_id(s: &str) -> Option<u64> {
+    u64::from_str_radix(s.strip_prefix('t')?, 16).ok()
+}
+
+/// Parse the wire form of a span id (`"s…"` hex) back to the number.
+pub fn parse_span_id(s: &str) -> Option<u64> {
+    u64::from_str_radix(s.strip_prefix('s')?, 16).ok()
+}
+
+/// Map a wire span name back to the static span vocabulary; names from
+/// a newer peer fall into the `"other"` bucket instead of being dropped.
+fn static_name(name: &str) -> &'static str {
+    match name {
+        "request" => "request",
+        "queued" => "queued",
+        "batch" => "batch",
+        "device" => "device",
+        "chunk" => "chunk",
+        "prefilter_leg" => "prefilter_leg",
+        "rescore_leg" => "rescore_leg",
+        "traceback_leg" => "traceback_leg",
+        "alignment" => "alignment",
+        "route" => "route",
+        "backend" => "backend",
+        _ => "other",
+    }
+}
+
 /// The `trace` protocol op's span shape (one JSON object per span).
 pub fn span_json(s: &Span) -> Json {
     let mut m = BTreeMap::new();
@@ -275,7 +329,37 @@ pub fn span_json(s: &Span) -> Json {
     if s.stolen {
         m.insert("stolen".to_string(), Json::Bool(true));
     }
+    if let Some(id) = s.id {
+        m.insert("id".to_string(), Json::Str(span_id_hex(id)));
+    }
+    if let Some(p) = s.parent {
+        m.insert("parent".to_string(), Json::Str(span_id_hex(p)));
+    }
     Json::Obj(m)
+}
+
+/// Rebuild a [`Span`] from the `trace` op's wire shape — the inverse of
+/// [`span_json`], used by the CLI to re-export remote rings as a Chrome
+/// trace. Returns `None` when the required fields are missing/mistyped.
+pub fn span_from_json(j: &Json) -> Option<Span> {
+    let trace = parse_trace_id(j.get("trace")?.as_str()?)?;
+    let name = static_name(j.get("name")?.as_str()?);
+    let start_us = j.get("start_us")?.as_f64()? as u64;
+    let dur_us = j.get("dur_us")?.as_f64()? as u64;
+    let mut s = Span::new(trace, name, start_us, dur_us);
+    s.device = j.get("device").and_then(Json::as_usize);
+    s.chunk = j.get("chunk").and_then(Json::as_usize);
+    s.mode = match j.get("mode").and_then(Json::as_str) {
+        Some("exact") => Some("exact"),
+        Some("fast") => Some("fast"),
+        _ => None,
+    };
+    s.items = j.get("items").and_then(Json::as_usize);
+    s.cache_hit = j.get("cache_hit").and_then(Json::as_bool).unwrap_or(false);
+    s.stolen = j.get("stolen").and_then(Json::as_bool).unwrap_or(false);
+    s.id = j.get("id").and_then(Json::as_str).and_then(parse_span_id);
+    s.parent = j.get("parent").and_then(Json::as_str).and_then(parse_span_id);
+    Some(s)
 }
 
 /// Render spans as a Chrome trace-event JSON document — loadable by
@@ -288,6 +372,35 @@ pub fn span_json(s: &Span) -> Json {
 /// span dimensions travel in `args`.
 pub fn chrome_trace_json(spans: &[Span]) -> String {
     let mut events = Vec::with_capacity(spans.len() + 4);
+    emit_proc_events(&mut events, spans, 1);
+    wrap_trace_events(events)
+}
+
+/// Multi-process variant: one `(process name, spans)` entry per process
+/// (router + each backend of a stitched cluster trace). Each process
+/// gets its own `pid` (1-based, in input order) with a `process_name`
+/// metadata row, so Perfetto renders per-process row groups. Span
+/// timestamps are assumed already clock-aligned by the caller.
+pub fn chrome_trace_json_procs(procs: &[(String, Vec<Span>)]) -> String {
+    let total: usize = procs.iter().map(|(_, s)| s.len() + 4).sum();
+    let mut events = Vec::with_capacity(total);
+    for (i, (name, spans)) in procs.iter().enumerate() {
+        let pid = i + 1;
+        let mut args = BTreeMap::new();
+        args.insert("name".to_string(), Json::Str(name.clone()));
+        let mut ev = BTreeMap::new();
+        ev.insert("name".to_string(), Json::Str("process_name".to_string()));
+        ev.insert("ph".to_string(), Json::Str("M".to_string()));
+        ev.insert("pid".to_string(), Json::Num(pid as f64));
+        ev.insert("tid".to_string(), Json::Num(0.0));
+        ev.insert("args".to_string(), Json::Obj(args));
+        events.push(Json::Obj(ev));
+        emit_proc_events(&mut events, spans, pid);
+    }
+    wrap_trace_events(events)
+}
+
+fn emit_proc_events(events: &mut Vec<Json>, spans: &[Span], pid: usize) {
     for s in spans {
         let mut args = BTreeMap::new();
         args.insert("trace".to_string(), Json::Str(trace_id_hex(s.trace)));
@@ -306,13 +419,19 @@ pub fn chrome_trace_json(spans: &[Span]) -> String {
         if s.stolen {
             args.insert("stolen".to_string(), Json::Bool(true));
         }
+        if let Some(id) = s.id {
+            args.insert("id".to_string(), Json::Str(span_id_hex(id)));
+        }
+        if let Some(p) = s.parent {
+            args.insert("parent".to_string(), Json::Str(span_id_hex(p)));
+        }
         let mut ev = BTreeMap::new();
         ev.insert("name".to_string(), Json::Str(s.name.to_string()));
         ev.insert("cat".to_string(), Json::Str(s.cat().to_string()));
         ev.insert("ph".to_string(), Json::Str("X".to_string()));
         ev.insert("ts".to_string(), Json::Num(s.start_us as f64));
         ev.insert("dur".to_string(), Json::Num(s.dur_us as f64));
-        ev.insert("pid".to_string(), Json::Num(1.0));
+        ev.insert("pid".to_string(), Json::Num(pid as f64));
         let tid = s.device.map(|d| d + 1).unwrap_or(0);
         ev.insert("tid".to_string(), Json::Num(tid as f64));
         ev.insert("args".to_string(), Json::Obj(args));
@@ -332,11 +451,14 @@ pub fn chrome_trace_json(spans: &[Span]) -> String {
         let mut ev = BTreeMap::new();
         ev.insert("name".to_string(), Json::Str("thread_name".to_string()));
         ev.insert("ph".to_string(), Json::Str("M".to_string()));
-        ev.insert("pid".to_string(), Json::Num(1.0));
+        ev.insert("pid".to_string(), Json::Num(pid as f64));
         ev.insert("tid".to_string(), Json::Num(dev.map(|d| d + 1).unwrap_or(0) as f64));
         ev.insert("args".to_string(), Json::Obj(args));
         events.push(Json::Obj(ev));
     }
+}
+
+fn wrap_trace_events(events: Vec<Json>) -> String {
     let mut doc = BTreeMap::new();
     doc.insert("traceEvents".to_string(), Json::Arr(events));
     doc.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
@@ -440,6 +562,75 @@ mod tests {
         assert!(j.get("chunk").is_none());
         assert!(j.get("cache_hit").is_none());
         assert_eq!(j.get("dur_us").and_then(Json::as_usize), Some(50));
+    }
+
+    #[test]
+    fn span_json_round_trips_ids_and_parents() {
+        let s = Span::new(0x2a, "backend", 17, 400)
+            .device(2)
+            .items(5)
+            .span_id(0x99)
+            .parent(0x42);
+        let j = span_json(&s);
+        assert_eq!(j.str_field("id").unwrap(), "s000000000099");
+        assert_eq!(j.str_field("parent").unwrap(), "s000000000042");
+        let back = span_from_json(&j).expect("wire span parses");
+        assert_eq!(back, s);
+        // ids are omitted (and parse back to None) when unset
+        let bare = Span::new(1, "request", 0, 9).mode("fast").cache_hit(true);
+        let j = span_json(&bare);
+        assert!(j.get("id").is_none() && j.get("parent").is_none());
+        assert_eq!(span_from_json(&j).unwrap(), bare);
+        // a newer peer's unknown span name degrades, never drops
+        let mut m = BTreeMap::new();
+        m.insert("trace".into(), Json::Str("t000000000001".into()));
+        m.insert("name".into(), Json::Str("hyperspace".into()));
+        m.insert("start_us".into(), Json::Num(1.0));
+        m.insert("dur_us".into(), Json::Num(2.0));
+        assert_eq!(span_from_json(&Json::Obj(m)).unwrap().name, "other");
+    }
+
+    #[test]
+    fn wire_id_forms_parse_strictly() {
+        assert_eq!(parse_trace_id("t00000000002a"), Some(0x2a));
+        assert_eq!(parse_trace_id("s00000000002a"), None, "wrong prefix");
+        assert_eq!(parse_trace_id("txyz"), None);
+        assert_eq!(parse_span_id(&span_id_hex(7)), Some(7));
+        assert_eq!(parse_span_id("t000000000007"), None);
+    }
+
+    #[test]
+    fn multi_proc_chrome_export_names_processes() {
+        let procs = vec![
+            ("router".to_string(), vec![Span::new(1, "route", 0, 100).span_id(9)]),
+            ("backend 0".to_string(), vec![
+                Span::new(1, "request", 10, 50).parent(9),
+                Span::new(1, "chunk", 20, 10).device(0),
+            ]),
+        ];
+        let doc = Json::parse(&chrome_trace_json_procs(&procs)).unwrap();
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let proc_names: Vec<(usize, String)> = events
+            .iter()
+            .filter(|e| e.str_field("name").ok() == Some("process_name"))
+            .map(|e| {
+                (
+                    e.get("pid").unwrap().as_usize().unwrap(),
+                    e.get("args").unwrap().str_field("name").unwrap().to_string(),
+                )
+            })
+            .collect();
+        assert_eq!(proc_names, vec![(1, "router".to_string()), (2, "backend 0".to_string())]);
+        // spans land on their process's pid, and parents survive in args
+        let req = events
+            .iter()
+            .find(|e| e.str_field("name").ok() == Some("request"))
+            .unwrap();
+        assert_eq!(req.get("pid").unwrap().as_usize(), Some(2));
+        assert_eq!(req.get("args").unwrap().str_field("parent").unwrap(), "s000000000009");
+        let route = events.iter().find(|e| e.str_field("name").ok() == Some("route")).unwrap();
+        assert_eq!(route.get("pid").unwrap().as_usize(), Some(1));
+        assert_eq!(route.get("args").unwrap().str_field("id").unwrap(), "s000000000009");
     }
 
     #[test]

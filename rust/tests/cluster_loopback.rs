@@ -481,6 +481,185 @@ fn router_serves_fleet_identity_and_observability_ops() {
 }
 
 #[test]
+fn routed_trace_propagates_one_id_across_the_fleet() {
+    // The tentpole property: one trace id — minted by the router,
+    // propagated on every scatter line, adopted by every backend —
+    // names the whole routed request, and span ids stitch the tree
+    // across process boundaries.
+    let index = Arc::new(Index::build(generate(&SynthSpec::tiny(180, 43))));
+    let scoring = Scoring::swaphi_default();
+    let (handles, _) = start_fleet(&index, &scoring, &[1.0, 1.0, 1.0]);
+    let router = router_over(handles.iter().map(|h| h.connect_addr()).collect());
+    let mut c = Client::connect(&router.connect_addr()).unwrap();
+
+    let q = query_letters(44, 31);
+    let resp = c.search("traced", &q, None, None).unwrap();
+    assert!(client::is_ok(&resp), "{resp}");
+    let tid = resp
+        .str_field("trace")
+        .expect("routed responses echo their trace id")
+        .to_string();
+
+    // the router's own ring: a `route` span plus one `backend` attempt
+    // span per partition, all under the echoed id, nested by span ids
+    let tr = c.trace_filtered(None, Some(&tid)).unwrap();
+    let spans = tr.get("spans").and_then(Json::as_arr).unwrap();
+    let route_sid = spans
+        .iter()
+        .find(|s| s.get("name").and_then(Json::as_str) == Some("route"))
+        .and_then(|s| s.get("id"))
+        .and_then(Json::as_str)
+        .expect("route span carries its span id")
+        .to_string();
+    let attempts: Vec<&Json> = spans
+        .iter()
+        .filter(|s| s.get("name").and_then(Json::as_str) == Some("backend"))
+        .collect();
+    assert_eq!(attempts.len(), 3, "{tr}");
+    let mut attempt_sids = Vec::new();
+    for a in &attempts {
+        assert_eq!(a.get("trace").and_then(Json::as_str), Some(tid.as_str()), "{tr}");
+        assert_eq!(
+            a.get("parent").and_then(Json::as_str),
+            Some(route_sid.as_str()),
+            "attempt spans nest under the route span: {tr}"
+        );
+        attempt_sids.push(a.get("id").and_then(Json::as_str).unwrap().to_string());
+    }
+
+    // every backend adopted the propagated id: its `request` span
+    // carries the routed trace id and parents the router's attempt span
+    // whose id traveled on the wire
+    for h in &handles {
+        let mut bc = Client::connect(&h.connect_addr()).unwrap();
+        let bt = bc.trace_filtered(None, Some(&tid)).unwrap();
+        let bspans = bt.get("spans").and_then(Json::as_arr).unwrap();
+        let request = bspans
+            .iter()
+            .find(|s| s.get("name").and_then(Json::as_str) == Some("request"))
+            .unwrap_or_else(|| panic!("backend must adopt the routed trace id: {bt}"));
+        let parent = request
+            .get("parent")
+            .and_then(Json::as_str)
+            .expect("backend request span parents the router attempt span");
+        assert!(
+            attempt_sids.iter().any(|sid| sid == parent),
+            "parent {parent} must be one of the router's attempt span ids {attempt_sids:?}"
+        );
+    }
+
+    // cluster-scope assembly stitches the same picture in one reply:
+    // a named row per process, every span filtered to the one id
+    let stitched = c.trace_cluster(None, Some(&tid)).unwrap();
+    assert!(client::is_ok(&stitched), "{stitched}");
+    let procs = stitched.get("procs").and_then(Json::as_arr).unwrap();
+    let names: Vec<&str> =
+        procs.iter().filter_map(|p| p.get("name").and_then(Json::as_str)).collect();
+    assert_eq!(names, vec!["router", "backend 0", "backend 1", "backend 2"], "{stitched}");
+    let mut total = 0usize;
+    for p in procs {
+        for s in p.get("spans").and_then(Json::as_arr).unwrap() {
+            assert_eq!(s.get("trace").and_then(Json::as_str), Some(tid.as_str()), "{stitched}");
+            total += 1;
+        }
+    }
+    assert!(total >= 7, "route + 3 attempts + 3 backend requests, got {total}: {stitched}");
+
+    router.shutdown().unwrap();
+    for h in handles {
+        h.shutdown().unwrap();
+    }
+}
+
+#[test]
+fn health_flips_and_flight_recorder_dumps_when_a_backend_dies() {
+    let index = Arc::new(Index::build(generate(&SynthSpec::tiny(200, 53))));
+    let scoring = Scoring::swaphi_default();
+    let (mut handles, _) = start_fleet(&index, &scoring, &[1.0, 1.0, 1.0]);
+    let flight_dir =
+        std::env::temp_dir().join(format!("swaphi-flight-loopback-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&flight_dir);
+    let router = Router::start(RouterConfig {
+        listen: "127.0.0.1:0".to_string(),
+        backends: handles.iter().map(|h| h.connect_addr()).collect(),
+        backend_timeout_ms: 1_500,
+        retries: 1,
+        flight_dir: Some(flight_dir.clone()),
+        ..Default::default()
+    })
+    .unwrap();
+    let mut c = Client::connect(&router.connect_addr()).unwrap();
+
+    let resp = c.search("h1", &query_letters(42, 61), None, None).unwrap();
+    assert!(client::is_ok(&resp), "{resp}");
+    let h = c.health().unwrap();
+    assert!(client::is_ok(&h), "{h}");
+    assert_eq!(h.str_field("health").unwrap(), "ok", "healthy fleet: {h}");
+    let slos = h.get("slos").and_then(Json::as_arr).expect("per-SLO detail");
+    assert!(
+        slos.iter().any(|s| s.get("slo").and_then(Json::as_str) == Some("availability")),
+        "{h}"
+    );
+
+    // kill partition 1: the answer degrades to partial, the verdict to
+    // warn-or-worse, and the flight recorder trips exactly once (the
+    // per-partition latch plus the cooldown suppress a cascade)
+    handles.remove(1).shutdown().unwrap();
+    let resp = c.search("h2", &query_letters(44, 62), None, None).unwrap();
+    assert!(client::is_ok(&resp), "{resp}");
+    assert_eq!(resp.get("partial"), Some(&Json::Bool(true)), "{resp}");
+
+    // even with a dark partition the trace stays coherent: the route
+    // span and both surviving attempts share the response's id
+    let tid = resp.str_field("trace").unwrap().to_string();
+    let tr = c.trace_filtered(None, Some(&tid)).unwrap();
+    let spans = tr.get("spans").and_then(Json::as_arr).unwrap();
+    assert!(
+        spans.iter().any(|s| s.get("name").and_then(Json::as_str) == Some("route")),
+        "{tr}"
+    );
+    let survivors = spans
+        .iter()
+        .filter(|s| s.get("name").and_then(Json::as_str) == Some("backend"))
+        .count();
+    assert_eq!(survivors, 2, "only live partitions record attempt spans: {tr}");
+
+    let h = c.health().unwrap();
+    let verdict = h.str_field("health").unwrap();
+    assert!(
+        verdict == "warn" || verdict == "critical",
+        "a dead partition must degrade the verdict: {h}"
+    );
+
+    let mut bundles: Vec<_> = std::fs::read_dir(&flight_dir)
+        .expect("flight dir exists after the dump")
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("flight-") && n.ends_with(".json"))
+        })
+        .collect();
+    bundles.sort();
+    assert_eq!(bundles.len(), 1, "exactly one bundle: {bundles:?}");
+    let doc = Json::parse(&std::fs::read_to_string(&bundles[0]).unwrap()).unwrap();
+    assert_eq!(doc.str_field("reason").unwrap(), "backend_dead");
+    assert!(
+        doc.str_field("detail").unwrap().contains("partition 1"),
+        "the bundle names the dead partition: {doc}"
+    );
+    let body = doc.get("body").expect("bundle carries a state snapshot");
+    assert!(body.get("stats").is_some() && body.get("health").is_some(), "{doc}");
+
+    router.shutdown().unwrap();
+    for h in handles {
+        h.shutdown().unwrap();
+    }
+    let _ = std::fs::remove_dir_all(&flight_dir);
+}
+
+#[test]
 fn explicit_top_k_is_clamped_to_the_fleet_minimum() {
     let index = Arc::new(Index::build(generate(&SynthSpec::tiny(160, 19))));
     let scoring = Scoring::swaphi_default();

@@ -854,6 +854,136 @@ fn prop_full_report_traceback_equals_sink_score() {
 }
 
 #[test]
+fn prop_routed_trace_tree_is_coherent_for_any_partition_count() {
+    // The distributed-tracing invariant as a property over fleet
+    // shapes: for ANY partition count, every span a routed search
+    // leaves anywhere in the fleet carries the trace id the response
+    // echoed; the router's per-partition attempt spans parent the
+    // route span; and each backend daemon's request span parents the
+    // attempt span whose id traveled on the wire as `parent`.
+    check("routed trace tree is coherent", 4, |rng| {
+        use std::sync::Arc;
+        use swaphi::cluster::{Router, RouterConfig};
+        use swaphi::coordinator::{NativeFactory, SearchConfig};
+        use swaphi::db::chunk::ChunkPlanConfig;
+        use swaphi::db::partition::{partition_sequences, PartitionMeta};
+        use swaphi::db::synth::generate_query;
+        use swaphi::server::client::{self, Client};
+        use swaphi::server::{index_generation, Server, ServerConfig};
+        use swaphi::util::json::Json;
+
+        let idx = Arc::new(Index::build(generate(&SynthSpec::tiny(
+            rng.range(160, 240),
+            rng.next_u64(),
+        ))));
+        let scoring = Scoring::swaphi_default();
+        let generation = index_generation(&idx);
+        let partitions = rng.range(1, 4);
+        let parts = partition_sequences(
+            &idx,
+            ChunkPlanConfig { target_padded_residues: 1024 },
+            &vec![1.0; partitions],
+        );
+        let handles: Vec<_> = parts
+            .iter()
+            .enumerate()
+            .map(|(p, ids)| {
+                let seqs: Vec<_> = ids.iter().map(|&g| idx.seqs[g].clone()).collect();
+                Server {
+                    index: Arc::new(Index::build(Database::new(seqs))),
+                    scoring: scoring.clone(),
+                    search: SearchConfig { devices: 1, sim: None, ..Default::default() },
+                    server: ServerConfig {
+                        listen: "127.0.0.1:0".to_string(),
+                        batch_window_ms: 0,
+                        ..Default::default()
+                    },
+                    factory: Arc::new(NativeFactory(EngineKind::InterSP)),
+                    partition: Some(PartitionMeta {
+                        generation,
+                        partitions,
+                        partition: p,
+                        n_total: idx.n_seqs(),
+                        global: ids.to_vec(),
+                        residues_total: idx.total_residues,
+                    }),
+                }
+                .start()
+                .unwrap()
+            })
+            .collect();
+        let router = Router::start(RouterConfig {
+            listen: "127.0.0.1:0".to_string(),
+            backends: handles.iter().map(|h| h.connect_addr()).collect(),
+            backend_timeout_ms: 5_000,
+            ..Default::default()
+        })
+        .unwrap();
+        let mut c = Client::connect(&router.connect_addr()).unwrap();
+        let q = String::from_utf8(swaphi::alphabet::decode(&generate_query(
+            rng.range(30, 60),
+            rng.next_u64(),
+        )))
+        .unwrap();
+        let resp = c.search("p", &q, None, None).unwrap();
+        prop_assert(client::is_ok(&resp), format!("{resp}"))?;
+        let tid = resp
+            .str_field("trace")
+            .map_err(|e| format!("response must echo a trace id: {e} in {resp}"))?
+            .to_string();
+
+        let tr = c.trace_filtered(None, Some(&tid)).unwrap();
+        let spans = tr.get("spans").and_then(Json::as_arr).unwrap();
+        let route_sid = spans
+            .iter()
+            .find(|s| s.get("name").and_then(Json::as_str) == Some("route"))
+            .and_then(|s| s.get("id"))
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("no route span id for {tid}: {tr}"))?
+            .to_string();
+        let mut attempt_sids = Vec::new();
+        for s in spans.iter().filter(|s| s.get("name").and_then(Json::as_str) == Some("backend"))
+        {
+            prop_eq(
+                s.get("parent").and_then(Json::as_str),
+                Some(route_sid.as_str()),
+                &format!("attempt parents the route span ({tr})"),
+            )?;
+            attempt_sids
+                .push(s.get("id").and_then(Json::as_str).unwrap_or_default().to_string());
+        }
+        prop_eq(attempt_sids.len(), partitions, "one attempt span per partition")?;
+
+        for h in &handles {
+            let mut bc = Client::connect(&h.connect_addr()).unwrap();
+            let bt = bc.trace_filtered(None, Some(&tid)).unwrap();
+            let bspans = bt.get("spans").and_then(Json::as_arr).unwrap();
+            let request = bspans
+                .iter()
+                .find(|s| s.get("name").and_then(Json::as_str) == Some("request"))
+                .ok_or_else(|| format!("backend did not adopt {tid}: {bt}"))?;
+            for s in bspans {
+                prop_eq(
+                    s.get("trace").and_then(Json::as_str),
+                    Some(tid.as_str()),
+                    &format!("backend span trace id ({bt})"),
+                )?;
+            }
+            let parent = request.get("parent").and_then(Json::as_str).unwrap_or_default();
+            prop_assert(
+                attempt_sids.iter().any(|sid| sid == parent),
+                format!("request parent {parent} not an attempt span id {attempt_sids:?}"),
+            )?;
+        }
+        router.shutdown().unwrap();
+        for h in handles {
+            h.shutdown().unwrap();
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_topk_consistency() {
     check("topk is consistent with scores", 20, |rng| {
         use swaphi::coordinator::{Coordinator, NativeFactory, SearchConfig};
